@@ -1,0 +1,97 @@
+//! The inexact-computing study (paper section IV.C / V.B.2).
+//!
+//! Runs the full Fig. 3 analysis on the trained TinyNet: per-layer
+//! arithmetic-mode selection on the validation set, then reports the
+//! paper's two headline findings on this testbed:
+//!
+//!   1. classification accuracy under imprecise arithmetic is identical
+//!      to exact arithmetic (so every layer goes inexact), and
+//!   2. the imprecise program is up to ~8x faster than the same
+//!      parallel program under exact arithmetic (predicted per device).
+//!
+//! Also performs a leave-one-layer sensitivity sweep the paper's
+//! per-layer analysis implies.
+//!
+//! Run (needs `make artifacts`):
+//! `cargo run --release --example mode_analysis`
+
+use cappuccino::config::modelfile::ModelFile;
+use cappuccino::data::Dataset;
+use cappuccino::engine::{ArithMode, EngineParams, ModeAssignment};
+use cappuccino::inexact::{analyze, evaluate_accuracy, AnalysisConfig};
+use cappuccino::model::zoo;
+use cappuccino::soc;
+use cappuccino::synth::{finalize, predict_latency_ms, PrimarySynthesizer};
+
+fn main() -> cappuccino::Result<()> {
+    let dir = cappuccino::artifacts_dir();
+    let net = zoo::tinynet();
+    let mf = ModelFile::read_from(dir.join("tinynet.capp"))?;
+    let params = EngineParams::compile(&net, &mf, 4)?;
+    let dataset = Dataset::read_from(dir.join("dataset.bin"))?;
+    let cfg = AnalysisConfig { max_accuracy_drop: 0.01, max_images: 256, threads: 1 };
+
+    // --- Layer-by-layer greedy analysis (Fig. 3 middle stage) ---------
+    println!("== per-layer mode analysis (budget: 1 point top-1) ==");
+    let report = analyze(&net, &params, &dataset, &cfg)?;
+    println!("baseline accuracy: {:.4}", report.baseline_accuracy);
+    for d in &report.decisions {
+        println!("  {:<8} -> {:<9} (acc {:.4})", d.layer, d.chosen.as_str(), d.accuracy);
+    }
+    println!(
+        "final: {:.4} accuracy, {}/{} layers inexact, {} evaluations",
+        report.final_accuracy,
+        report.inexact_layers(),
+        report.decisions.len(),
+        report.evaluations
+    );
+
+    // --- Finding 1: imprecise == exact classification accuracy --------
+    let acc_precise = evaluate_accuracy(
+        &net, &params, &dataset,
+        &ModeAssignment::uniform(ArithMode::Precise), &cfg,
+    )?;
+    let acc_imprecise = evaluate_accuracy(
+        &net, &params, &dataset,
+        &ModeAssignment::uniform(ArithMode::Imprecise), &cfg,
+    )?;
+    println!(
+        "\n== finding 1 (paper V.B.2) ==\nprecise {:.4} vs imprecise {:.4} -> {}",
+        acc_precise,
+        acc_imprecise,
+        if acc_imprecise >= acc_precise - 1e-9 { "identical (as in the paper)" } else { "degraded" }
+    );
+
+    // --- Leave-one-layer sensitivity ----------------------------------
+    println!("\n== leave-one-layer-imprecise sensitivity ==");
+    for layer in net.param_layer_names() {
+        let modes = ModeAssignment::uniform(ArithMode::Precise)
+            .with(layer.clone(), ArithMode::Imprecise);
+        let acc = evaluate_accuracy(&net, &params, &dataset, &modes, &cfg)?;
+        println!("  only {:<8} imprecise: acc {:.4}", layer, acc);
+    }
+
+    // --- Finding 2: imprecise-vs-exact execution-time ratio -----------
+    println!("\n== finding 2: predicted imprecise speedup over exact parallel ==");
+    let primary = PrimarySynthesizer::new(4, 4).synthesize(&net)?;
+    let final_plan = finalize(&primary, &report.assignment);
+    for d in soc::catalog() {
+        for paper_net in [zoo::alexnet(), zoo::squeezenet(), zoo::googlenet()] {
+            let p = PrimarySynthesizer::new(4, d.cores).synthesize(&paper_net)?;
+            let imp = finalize(&p, &ModeAssignment::uniform(ArithMode::Imprecise));
+            let t_par = predict_latency_ms(&p, &paper_net, &d);
+            let t_imp = predict_latency_ms(&imp, &paper_net, &d);
+            println!(
+                "  {:<10} {:<11} exact {:>8.1} ms  imprecise {:>7.1} ms  ({:.2}x, paper: up to 8x)",
+                d.name,
+                paper_net.name,
+                t_par,
+                t_imp,
+                t_par / t_imp
+            );
+        }
+    }
+    let _ = final_plan;
+    println!("\nmode_analysis OK");
+    Ok(())
+}

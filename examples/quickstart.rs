@@ -1,0 +1,87 @@
+//! Quickstart: the whole Cappuccino flow on a small custom network.
+//!
+//! 1. Describe a CNN in the `.cappnet` text format (paper Fig. 3 input #1).
+//! 2. Synthesize the primary parallel program (OLP + map-major, sec IV).
+//! 3. Compile weights (compile-time parameter reordering, sec III).
+//! 4. Execute on the native engine in precise and imprecise modes.
+//! 5. Predict latency on the simulated device catalog.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cappuccino::config::parse_cappnet;
+use cappuccino::engine::{ArithMode, EngineParams, ModeAssignment};
+use cappuccino::soc;
+use cappuccino::synth::{execute_plan, finalize, predict_latency_ms, PrimarySynthesizer};
+use cappuccino::util::rng::Rng;
+
+const NETWORK: &str = "
+# A small SqueezeNet-flavoured classifier.
+net demo
+input 3 32 32
+classes 16
+
+conv conv1 m=16 k=3 s=2 p=1
+fire fire2 s1=8 e1=16 e3=16
+fire fire3 s1=8 e1=16 e3=16
+maxpool k=2 s=2
+conv conv4 m=16 k=1 s=1 p=0
+gap
+";
+
+fn main() -> cappuccino::Result<()> {
+    // 1. Network description -> IR (validated by shape inference).
+    let net = parse_cappnet(NETWORK)?;
+    let info = cappuccino::model::shapes::infer(&net)?;
+    println!(
+        "network {:?}: {} param layers, {:.1} MFLOPs/inference",
+        net.name,
+        net.param_layer_names().len(),
+        info.total_flops() / 1e6
+    );
+
+    // 2. Primary program synthesis: OLP thread allocation, u=4 vectors.
+    let primary = PrimarySynthesizer::new(4, 2).synthesize(&net)?;
+    println!(
+        "primary plan: {} layers, all {}, alpha(conv1) = {}",
+        primary.layers.len(),
+        primary.layers[0].mode,
+        primary.layers[0].alpha
+    );
+
+    // 3. "Model file": random weights here; EngineParams::compile reorders
+    //    conventional weights into map-major at compile time.
+    let params = EngineParams::random(&net, 42, 4)?;
+
+    // 4. Final software: adopt imprecise arithmetic everywhere (the
+    //    paper's measured outcome) and execute both variants.
+    let plan_precise = primary.clone();
+    let plan_imprecise = finalize(&primary, &ModeAssignment::uniform(ArithMode::Imprecise));
+
+    let mut rng = Rng::new(7);
+    let image = rng.normal_vec(net.input.elements());
+    let logits_p = execute_plan(&plan_precise, &net, &params, &image)?;
+    let logits_i = execute_plan(&plan_imprecise, &net, &params, &image)?;
+    let argmax = |v: &[f32]| {
+        v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap()
+    };
+    println!("precise   logits[0..4] = {:?} -> class {}", &logits_p[..4], argmax(&logits_p));
+    println!("imprecise logits[0..4] = {:?} -> class {}", &logits_i[..4], argmax(&logits_i));
+    assert_eq!(argmax(&logits_p), argmax(&logits_i), "modes must agree on the class");
+
+    // 5. Predicted latency on the paper's three phones.
+    println!("\npredicted latency (simulated devices):");
+    for d in soc::catalog() {
+        println!(
+            "  {:<10} precise {:>8.3} ms   imprecise {:>8.3} ms",
+            d.name,
+            predict_latency_ms(&plan_precise, &net, &d),
+            predict_latency_ms(&plan_imprecise, &net, &d),
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

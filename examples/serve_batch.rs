@@ -1,0 +1,89 @@
+//! End-to-end serving validation (DESIGN.md "End-to-end validation").
+//!
+//! Loads the **trained** TinyNet through the full AOT stack — Pallas
+//! kernels lowered by JAX to HLO text, compiled by PJRT, weights from
+//! `tinynet_mm.capp` — and serves batched classification requests from
+//! the real validation set through the L3 router + dynamic batcher.
+//!
+//! Reports: end-to-end accuracy (the model must actually classify),
+//! latency percentiles, throughput, and mean batch size under three
+//! client arrival patterns. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run (needs `make artifacts`):
+//! `cargo run --release --example serve_batch`
+
+use std::time::{Duration, Instant};
+
+use cappuccino::data::Dataset;
+use cappuccino::engine::ops::softmax;
+use cappuccino::serve::{pjrt_factory, BatchPolicy, Server};
+
+fn main() -> cappuccino::Result<()> {
+    let dir = cappuccino::artifacts_dir();
+    let dataset = Dataset::read_from(dir.join("dataset.bin"))?;
+    let (val_images, val_labels) = dataset.validation();
+    println!(
+        "validation set: {} images ({} classes)",
+        val_images.len(),
+        dataset.classes
+    );
+
+    for (scenario, mode, n_requests, inter_arrival) in [
+        ("closed-loop burst", "imprecise", 256usize, Duration::ZERO),
+        ("open-loop 500 rps", "imprecise", 128, Duration::from_millis(2)),
+        ("precise burst", "precise", 128, Duration::ZERO),
+    ] {
+        let factory = pjrt_factory(dir.clone(), "tinynet".into(), mode.into(), None);
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            queue_depth: 512,
+        };
+        let server = Server::start(vec![("tinynet".into(), factory, policy)])?;
+
+        let t0 = Instant::now();
+        let mut receivers = Vec::with_capacity(n_requests);
+        for i in 0..n_requests {
+            let img = val_images[i % val_images.len()].clone();
+            receivers.push((i, server.router().submit("tinynet", img)?));
+            if !inter_arrival.is_zero() {
+                std::thread::sleep(inter_arrival);
+            }
+        }
+        let mut correct = 0usize;
+        for (i, rx) in receivers {
+            let resp = rx
+                .recv()
+                .map_err(|_| cappuccino::Error::Serve("lost response".into()))?;
+            let probs = softmax(&resp.logits);
+            let pred = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(c, _)| c)
+                .unwrap();
+            if pred == val_labels[i % val_labels.len()] as usize {
+                correct += 1;
+            }
+        }
+        let wall = t0.elapsed();
+        let m = server.metrics();
+        let accuracy = correct as f64 / n_requests as f64;
+        println!("\n=== {scenario} (mode={mode}, n={n_requests}) ===");
+        println!(
+            "accuracy {:.4}  wall {:.2?}  throughput {:.1} img/s  mean batch {:.2}",
+            accuracy,
+            wall,
+            n_requests as f64 / wall.as_secs_f64(),
+            m.counters.mean_batch_size()
+        );
+        println!("latency: {}", m.latency.summary());
+        assert!(
+            accuracy > 0.9,
+            "{scenario}: served accuracy {accuracy} — model or pipeline broken"
+        );
+        server.shutdown();
+    }
+    println!("\nserve_batch OK");
+    Ok(())
+}

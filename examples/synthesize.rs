@@ -1,0 +1,66 @@
+//! Software synthesis for every paper network: `.cappnet` descriptions
+//! in, synthesis plans out — the batch counterpart of the `cappuccino
+//! synthesize` CLI.
+//!
+//! Demonstrates the file-format round trip the paper's toolflow implies:
+//! the zoo networks are serialised to `.cappnet`, re-parsed, synthesized
+//! (OLP + map-major + per-layer modes), and the resulting plans written
+//! as JSON next to a per-network latency prediction across the device
+//! catalog.
+//!
+//! Run: `cargo run --release --example synthesize`
+
+use cappuccino::config::{parse_cappnet, write_cappnet};
+use cappuccino::engine::{ArithMode, ModeAssignment};
+use cappuccino::model::zoo;
+use cappuccino::soc;
+use cappuccino::synth::{finalize, predict_latency_ms, PrimarySynthesizer, SynthesisPlan};
+use cappuccino::util::json::Json;
+
+fn main() -> cappuccino::Result<()> {
+    let out_dir = std::env::temp_dir().join("cappuccino_synthesize");
+    std::fs::create_dir_all(&out_dir)?;
+
+    for net in zoo::all() {
+        // Round-trip through the network description format.
+        let text = write_cappnet(&net);
+        let cappnet_path = out_dir.join(format!("{}.cappnet", net.name));
+        std::fs::write(&cappnet_path, &text)?;
+        let reparsed = parse_cappnet(&text)?;
+        assert_eq!(
+            reparsed.param_layer_names(),
+            net.param_layer_names(),
+            "{}: .cappnet round trip lost layers",
+            net.name
+        );
+
+        // Synthesize: primary program, then the paper's outcome (all
+        // layers imprecise — section V.B.2) as the final software.
+        let primary = PrimarySynthesizer::new(4, 4).synthesize(&reparsed)?;
+        let plan = finalize(&primary, &ModeAssignment::uniform(ArithMode::Imprecise));
+        let plan_path = out_dir.join(format!("{}.plan.json", net.name));
+        std::fs::write(&plan_path, plan.to_json().to_string())?;
+
+        // Re-load the plan to prove the JSON is self-contained.
+        let loaded =
+            SynthesisPlan::from_json(&Json::parse(&std::fs::read_to_string(&plan_path)?)?)?;
+        assert_eq!(loaded, plan);
+
+        println!(
+            "{:<11} -> {} ({} layers, {} inexact)",
+            net.name,
+            plan_path.display(),
+            plan.layers.len(),
+            plan.inexact_layers()
+        );
+        for d in soc::catalog() {
+            println!(
+                "    {:<10} predicted {:>9.2} ms",
+                d.name,
+                predict_latency_ms(&plan, &reparsed, &d)
+            );
+        }
+    }
+    println!("\nsynthesize OK (outputs in {})", out_dir.display());
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Table I reproduction, side by side with the paper's measurements.
+//!
+//! Regenerates the paper's main result table (execution time for
+//! AlexNet / SqueezeNet / GoogLeNet on three phones under baseline /
+//! parallel / imprecise, plus overall speedup) on the SoC simulator,
+//! using the paper's 100-sample trimmed-mean protocol, and prints the
+//! paper's numbers next to ours with the deviation ratio.
+//!
+//! Run: `cargo run --release --example table1_repro`
+
+use cappuccino::bench::Table;
+use cappuccino::model::zoo;
+use cappuccino::soc::{self, ProcessingMode};
+
+/// Paper Table I (ms): (net, device, baseline, parallel, imprecise).
+pub const PAPER_TABLE1: &[(&str, &str, f64, f64, f64)] = &[
+    ("alexnet", "Nexus 5", 33848.40, 947.15, 836.32),
+    ("alexnet", "Nexus 6P", 8626.0, 512.72, 61.80),
+    ("alexnet", "Galaxy S7", 8698.43, 442.97, 127.78),
+    ("squeezenet", "Nexus 5", 43932.73, 1302.10, 161.50),
+    ("squeezenet", "Nexus 6P", 17299.55, 671.46, 141.30),
+    ("squeezenet", "Galaxy S7", 12331.82, 888.91, 150.24),
+    ("googlenet", "Nexus 5", 84404.40, 2651.12, 2478.09),
+    ("googlenet", "Nexus 6P", 25570.48, 1575.45, 602.28),
+    ("googlenet", "Galaxy S7", 21917.67, 1699.42, 686.08),
+];
+
+fn main() {
+    let mut table = Table::new(&[
+        "net", "device", "base(paper)", "base(ours)", "par(paper)", "par(ours)",
+        "imp(paper)", "imp(ours)", "speedup(paper)", "speedup(ours)",
+    ]);
+    let mut min_speedup = f64::INFINITY;
+    let mut max_speedup: f64 = 0.0;
+    for &(net_name, device_name, p_base, p_par, p_imp) in PAPER_TABLE1 {
+        let net = zoo::by_name(net_name).unwrap();
+        let device = soc::by_name(device_name).unwrap();
+        // The paper's protocol: 100 repetitions, min/max dropped.
+        let base = soc::measure_trimmed(&net, &device, ProcessingMode::JavaBaseline, 100, 0.01, 1);
+        let par = soc::measure_trimmed(&net, &device, ProcessingMode::Parallel, 100, 0.01, 2);
+        let imp = soc::measure_trimmed(&net, &device, ProcessingMode::Imprecise, 100, 0.01, 3);
+        let ours_speedup = base / imp;
+        min_speedup = min_speedup.min(ours_speedup);
+        max_speedup = max_speedup.max(ours_speedup);
+        table.row(&[
+            net_name.into(),
+            device_name.into(),
+            format!("{p_base:.0}"),
+            format!("{base:.0}"),
+            format!("{p_par:.0}"),
+            format!("{par:.0}"),
+            format!("{p_imp:.0}"),
+            format!("{imp:.0}"),
+            format!("{:.2}x", p_base / p_imp),
+            format!("{ours_speedup:.2}x"),
+        ]);
+    }
+    println!("Table I reproduction (simulated devices; paper numbers inline):\n");
+    table.print();
+    println!(
+        "\nspeedup band: ours {:.1}x..{:.1}x   paper 31.95x..272.03x",
+        min_speedup, max_speedup
+    );
+    println!("(absolute ms are approximate by design — the simulator is an\n\
+              analytic roofline calibrated only on the baseline column;\n\
+              see DESIGN.md 'Calibration notes' and EXPERIMENTS.md.)");
+}

@@ -1,0 +1,248 @@
+"""AOT compile path: lower every serving artifact to HLO *text* and emit
+the artifact manifest, the trained TinyNet model file, the synthetic
+validation dataset, and golden outputs for the Rust runtime tests.
+
+This is the only place python touches the system; ``make artifacts`` runs
+it once and the Rust binary is self-contained afterwards.
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact naming: ``{net}_{mode}_b{batch}.hlo.txt``; every artifact's
+function signature is ``fn(x_mm, w0, b0, w1, b1, ...) -> (logits,)`` with
+parameters in ``model.param_order`` order, map-major layout, ``u = 4``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset as D
+from . import model as M
+from . import modelfile as MF
+from . import train_tiny as T
+from .kernels import ref
+
+U = 4
+
+# (net, mode, batch) triples lowered to artifacts. GoogLeNet imprecise is
+# skipped by default to bound `make artifacts` time; pass --full to add it.
+DEFAULT_ARTIFACTS = [
+    ("tinynet", "precise", 1), ("tinynet", "precise", 4),
+    ("tinynet", "precise", 8),
+    ("tinynet", "imprecise", 1), ("tinynet", "imprecise", 4),
+    ("tinynet", "imprecise", 8),
+    ("squeezenet", "precise", 1), ("squeezenet", "imprecise", 1),
+    ("alexnet", "precise", 1), ("alexnet", "imprecise", 1),
+    ("googlenet", "precise", 1),
+]
+FULL_EXTRA = [("googlenet", "imprecise", 1)]
+
+DATASET_N = 2560
+DATASET_TRAIN = 2048
+DATASET_SEED = 7
+TRAIN_STEPS = 400
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def mm_input_shape(input_shape, batch, u=U):
+    c, h, w = input_shape
+    cb = -(-c // u)
+    return (batch, cb, h, w, u)
+
+
+def mm_param_shapes(spec, input_shape, u=U):
+    """Map-major (w, b) shapes per layer name, in param order."""
+    _, by_name = infer = M.infer_shapes(spec, input_shape)
+    first_fc = M._first_dense_after_flatten(spec)
+    flat = M._shape_before_flatten(spec, input_shape)
+    shapes = []
+    lookup = _layer_lookup(spec)
+    for name in M.param_order(spec):
+        lay = lookup[name]
+        if lay["op"] == "conv":
+            c = by_name[name][0]
+            mb, cb = -(-lay["m"] // u), -(-c // u)
+            shapes.append((name, (mb, u, cb, lay["k"], lay["k"], u), (mb, u)))
+        else:
+            i = by_name[name][0]
+            if name == first_fc:
+                c, h, w = flat
+                i = -(-c // u) * u * h * w
+            shapes.append((name, (lay["o"], i), (lay["o"],)))
+    return shapes
+
+
+def _layer_lookup(spec):
+    out = {}
+
+    def walk(lays):
+        for lay in lays:
+            if lay["op"] in ("conv", "dense"):
+                out[lay["name"]] = lay
+            elif lay["op"] == "fork":
+                for br in lay["branches"]:
+                    walk(br)
+
+    walk(M.expand(spec))
+    return out
+
+
+def lower_artifact(net: str, mode: str, batch: int, out_dir: str, log=print):
+    """Lower one (net, mode, batch) artifact; returns its manifest entry."""
+    spec_fn, input_shape, n_classes = M.NETS[net]
+    spec = spec_fn()
+    apply = M.build_apply(spec, input_shape, U)
+    pshapes = mm_param_shapes(spec, input_shape)
+    order = [n for n, _, _ in pshapes]
+
+    def fn(x, *flat):
+        params = {name: (flat[2 * i], flat[2 * i + 1])
+                  for i, name in enumerate(order)}
+        return (apply(params, x, mode),)
+
+    x_spec = jax.ShapeDtypeStruct(mm_input_shape(input_shape, batch),
+                                  jnp.float32)
+    arg_specs = [x_spec]
+    for _, ws, bs in pshapes:
+        arg_specs.append(jax.ShapeDtypeStruct(ws, jnp.float32))
+        arg_specs.append(jax.ShapeDtypeStruct(bs, jnp.float32))
+
+    name = f"{net}_{mode}_b{batch}"
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    log(f"  {name}: {len(text) / 1e6:.1f} MB HLO text "
+        f"({time.time() - t0:.1f}s)")
+    return {
+        "name": name, "net": net, "mode": mode, "batch": batch,
+        "hlo": f"{name}.hlo.txt",
+        "input_shape": list(mm_input_shape(input_shape, batch)),
+        "output_shape": [batch, n_classes],
+        "params": [{"name": n, "w": list(ws), "b": list(bs)}
+                   for n, ws, bs in pshapes],
+    }
+
+
+def export_spec(spec):
+    """Primitive-expanded spec as JSON-friendly layer list for Rust."""
+    def conv_json(lay):
+        return {k: lay[k] for k in ("op", "name", "m", "k", "s", "p", "relu")}
+
+    out = []
+    for lay in M.expand(spec):
+        op = lay["op"]
+        if op == "conv":
+            out.append(conv_json(lay))
+        elif op == "fork":
+            out.append({"op": "fork", "name": lay["name"], "branches": [
+                [conv_json(l) if l["op"] == "conv" else dict(l)
+                 for l in br] for br in lay["branches"]]})
+        else:
+            out.append(dict(lay))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--full", action="store_true",
+                    help="also lower the optional (slow) artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma list of net names to lower (debugging)")
+    args = ap.parse_args(argv)
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    # 1. Dataset ----------------------------------------------------------
+    print("[aot] generating synthetic dataset ...")
+    images, labels = D.generate(DATASET_N, seed=DATASET_SEED)
+    D.write_dataset(os.path.join(out, "dataset.bin"), images, labels,
+                    DATASET_TRAIN)
+
+    # 2. TinyNet training --------------------------------------------------
+    print("[aot] training TinyNet ...")
+    params = T.train(images[:DATASET_TRAIN], labels[:DATASET_TRAIN],
+                     steps=TRAIN_STEPS)
+    val_acc = T.accuracy(params, images[DATASET_TRAIN:],
+                         labels[DATASET_TRAIN:])
+    print(f"[aot] TinyNet val accuracy: {val_acc:.4f}")
+    MF.write_modelfile(os.path.join(out, "tinynet.capp"),
+                       MF.params_to_tensors(params))
+    # Map-major reordered copy: lets Rust cross-check its own reorder.
+    spec = M.tinynet_spec()
+    pmm = M.reorder_params(spec, (D.C, D.H, D.W), params, U)
+    MF.write_modelfile(os.path.join(out, "tinynet_mm.capp"),
+                       MF.params_to_tensors(pmm))
+
+    # 3. Golden outputs for the Rust runtime tests -------------------------
+    apply = M.build_apply(spec, (D.C, D.H, D.W), U)
+    val = images[DATASET_TRAIN: DATASET_TRAIN + 8]
+    x_mm = jnp.stack([ref.nchw_to_mapmajor(jnp.asarray(v), U) for v in val])
+    golden = {
+        "x_mm": np.asarray(x_mm),
+        "x_nchw": val,
+        "labels": np.asarray(labels[DATASET_TRAIN: DATASET_TRAIN + 8],
+                             np.float32).reshape(-1),
+        "logits_precise": np.asarray(apply(pmm, x_mm, "precise")),
+        "logits_relaxed": np.asarray(apply(pmm, x_mm, "relaxed")),
+        "logits_imprecise": np.asarray(apply(pmm, x_mm, "imprecise")),
+    }
+    MF.write_modelfile(os.path.join(out, "golden_tinynet.capp"), golden)
+
+    # 4. HLO artifacts ------------------------------------------------------
+    triples = list(DEFAULT_ARTIFACTS) + (FULL_EXTRA if args.full else [])
+    if args.only:
+        keep = set(args.only.split(","))
+        triples = [t for t in triples if t[0] in keep]
+    print(f"[aot] lowering {len(triples)} artifacts ...")
+    entries = [lower_artifact(net, mode, batch, out)
+               for net, mode, batch in triples]
+
+    # 5. Manifest ------------------------------------------------------------
+    manifest = {
+        "u": U,
+        "dataset": {"file": "dataset.bin", "n": DATASET_N,
+                    "n_train": DATASET_TRAIN,
+                    "input_shape": [D.C, D.H, D.W],
+                    "classes": D.NUM_CLASSES},
+        "tinynet_val_accuracy": val_acc,
+        "artifacts": entries,
+        "nets": {
+            net: {
+                "input_shape": list(ishape),
+                "classes": ncls,
+                "layers": export_spec(spec_fn()),
+            }
+            for net, (spec_fn, ishape, ncls) in M.NETS.items()
+        },
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(entries)} artifacts to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Synthetic validation dataset — Cappuccino's third input (Fig. 3).
+
+The paper uses 5000 random images from the ILSVRC-2012 validation set to
+drive the inexact-computing analysis. That dataset is not available here,
+so we substitute a procedurally generated 8-class image set (DESIGN.md,
+substitution table): classes are distinct spatial patterns (stripes of
+several orientations, checkerboards, blobs, rings, gradients) with
+per-image random phase / frequency / colour tint and additive noise, so
+a small CNN learns real (non-trivial) decision boundaries — which is
+what the accuracy-delta analysis actually needs.
+
+The file format (``dataset.bin``) is shared with
+``rust/src/data/dataset.rs``::
+
+  magic    8 bytes  b"CAPPDATA"
+  version  u32      1
+  n        u32      total images
+  n_train  u32      leading images reserved for training
+  c,h,w    u32 * 3
+  classes  u32
+  images   f32 * n*c*h*w   (NCHW, little-endian)
+  labels   u16 * n
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"CAPPDATA"
+VERSION = 1
+NUM_CLASSES = 8
+C, H, W = 3, 16, 16
+
+
+def _pattern(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """Greyscale base pattern in [0,1] for one class, randomly jittered."""
+    yy, xx = np.mgrid[0:H, 0:W].astype(np.float32)
+    freq = rng.uniform(0.8, 1.6)
+    phase = rng.uniform(0, 2 * np.pi)
+    if cls == 0:    # horizontal stripes
+        img = np.sin(yy * freq + phase)
+    elif cls == 1:  # vertical stripes
+        img = np.sin(xx * freq + phase)
+    elif cls == 2:  # diagonal stripes
+        img = np.sin((xx + yy) * freq * 0.7 + phase)
+    elif cls == 3:  # checkerboard
+        img = np.sin(xx * freq + phase) * np.sin(yy * freq + phase)
+    elif cls == 4:  # centred blob
+        cy, cx = rng.uniform(5, 11, size=2)
+        img = np.exp(-((yy - cy) ** 2 + (xx - cx) ** 2) / rng.uniform(8, 20))
+    elif cls == 5:  # corner gradient
+        sy, sx = rng.choice([-1.0, 1.0], size=2)
+        img = (sy * yy / H + sx * xx / W) * 0.5
+    elif cls == 6:  # rings
+        cy, cx = rng.uniform(6, 10, size=2)
+        r = np.sqrt((yy - cy) ** 2 + (xx - cx) ** 2)
+        img = np.sin(r * freq * 1.5 + phase)
+    elif cls == 7:  # blocky noise (low-frequency random field)
+        coarse = rng.standard_normal((4, 4)).astype(np.float32)
+        img = np.kron(coarse, np.ones((4, 4), np.float32))
+    else:
+        raise ValueError(cls)
+    img = (img - img.min()) / (img.max() - img.min() + 1e-8)
+    return img.astype(np.float32)
+
+
+def make_image(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """One (C,H,W) float32 image: tinted pattern + noise, zero-mean-ish."""
+    base = _pattern(cls, rng)
+    tint = rng.uniform(0.4, 1.0, size=(C, 1, 1)).astype(np.float32)
+    img = base[None] * tint
+    img = img + rng.normal(0, 0.15, size=img.shape).astype(np.float32)
+    return (img - 0.5).astype(np.float32)
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Balanced dataset: ``(n, C, H, W)`` images + ``(n,)`` u16 labels."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n) % NUM_CLASSES
+    rng.shuffle(labels)
+    images = np.stack([make_image(int(c), rng) for c in labels])
+    return images.astype(np.float32), labels.astype(np.uint16)
+
+
+def write_dataset(path: str, images: np.ndarray, labels: np.ndarray,
+                  n_train: int) -> None:
+    n, c, h, w = images.shape
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<IIIIIII", VERSION, n, n_train, c, h, w,
+                            NUM_CLASSES))
+        f.write(np.ascontiguousarray(images, "<f4").tobytes())
+        f.write(np.ascontiguousarray(labels, "<u2").tobytes())
+
+
+def read_dataset(path: str):
+    """Returns ``(images, labels, n_train)``."""
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:8] != MAGIC:
+        raise ValueError(f"{path}: bad magic")
+    version, n, n_train, c, h, w, ncls = struct.unpack_from("<IIIIIII", data, 8)
+    if version != VERSION or ncls != NUM_CLASSES:
+        raise ValueError(f"{path}: version/class mismatch")
+    off = 8 + 7 * 4
+    images = np.frombuffer(data, "<f4", count=n * c * h * w,
+                           offset=off).reshape(n, c, h, w).copy()
+    off += 4 * n * c * h * w
+    labels = np.frombuffer(data, "<u2", count=n, offset=off).copy()
+    return images, labels, n_train

@@ -1,0 +1,147 @@
+"""Layer-1 Pallas kernel: map-major vectorised direct convolution.
+
+This is the paper's compute hot-spot (Fig. 6) re-thought for TPU-style
+hardware (DESIGN.md section "Hardware-Adaptation"):
+
+* The paper's ``u``-way SIMD superword loads become the trailing *lane*
+  dimension of the map-major layout ``(Cb, H, W, u)``. One ``pl.load`` of
+  a ``(..., u)`` block is the paper's single wide memory access.
+* The paper's per-thread OLP workload (one thread = one output pixel,
+  eqs. 3-5) becomes the Pallas grid: one program instance computes the
+  output stack ``(mb, :, :, u)`` for one image — a stack of ``u`` OFMs,
+  written directly in map-major order, i.e. the "zero-overhead dynamic
+  reordering of OFMs" of section IV.B.1 holds by construction.
+* The intra-thread vectorised MAC of Fig. 6 (load ``u`` IFM words +
+  ``u`` kernel words, multiply-accumulate elementwise) is the einsum over
+  the lane axis ``v`` in the inner loop below.
+
+The kernel is lowered with ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so the interpret path is the
+correctness (and artifact) path, and real-TPU performance is estimated
+analytically in DESIGN.md from the BlockSpec VMEM footprint.
+
+Arithmetic modes (section IV.C) are compile-time variants of the same
+kernel: ``precise`` (IEEE f32), ``relaxed`` (f32, denormals flushed),
+``imprecise`` (bf16 multiplicands, f32 accumulate, denormals flushed).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _mode_cast(x: jnp.ndarray, mode: str) -> jnp.ndarray:
+    """In-kernel operand transform for the arithmetic mode."""
+    if mode == "precise":
+        return x
+    flushed = jnp.where(jnp.abs(x) < ref.F32_MIN_NORMAL, 0.0, x) + 0.0
+    if mode == "relaxed":
+        return flushed
+    if mode == "imprecise":
+        return flushed.astype(jnp.bfloat16)
+    raise ValueError(f"unknown arithmetic mode: {mode!r}")
+
+
+def _conv_kernel(ifm_ref, w_ref, b_ref, o_ref, *, k: int, stride: int,
+                 hout: int, wout: int, mode: str):
+    """One grid step: image ``b``, output stack ``mb``.
+
+    Block shapes (leading block dims of size 1 squeezed by indexing):
+
+    * ``ifm_ref`` — ``(1, Cb, H, W, u)``   the whole padded input image
+    * ``w_ref``   — ``(1, u, Cb, K, K, u)`` weights of the ``u`` OFMs in
+                      this stack (dim 1 = output lane ``o``)
+    * ``b_ref``   — ``(1, u)``              biases of the stack
+    * ``o_ref``   — ``(1, 1, Hout, Wout, u)`` the output stack, map-major
+    """
+    ifm = _mode_cast(ifm_ref[0], mode)          # (Cb, H, W, u)
+    w = _mode_cast(w_ref[0], mode)              # (u, Cb, K, K, u)
+    bias = b_ref[0]                             # (u,)
+
+    acc = jnp.zeros((hout, wout, w.shape[0]), dtype=jnp.float32)
+    # Static K x K loop: each iteration is one vectorised MAC sweep of
+    # Fig. 6 — a strided (h, w) window of every input stack against one
+    # kernel tap, contracted over (input stack c, lane v).
+    for kh in range(k):
+        for kw in range(k):
+            patch = ifm[:, kh: kh + (hout - 1) * stride + 1: stride,
+                        kw: kw + (wout - 1) * stride + 1: stride, :]
+            tap = w[:, :, kh, kw, :]            # (u_out, Cb, u_in)
+            acc = acc + jnp.einsum(
+                "chwv,ocv->hwo", patch, tap,
+                preferred_element_type=jnp.float32)
+    o_ref[0, 0] = acc + bias[None, None, :]
+
+
+def conv2d_mapmajor(ifm: jnp.ndarray, w_mm: jnp.ndarray, b_mm: jnp.ndarray,
+                    *, stride: int = 1, pad: int = 0,
+                    mode: str = "precise") -> jnp.ndarray:
+    """Map-major convolution via ``pl.pallas_call``.
+
+    Args:
+      ifm:  ``(B, Cb, H, W, u)`` map-major input feature maps.
+      w_mm: ``(Mb, u, Cb, K, K, u)`` map-major reordered weights.
+      b_mm: ``(Mb, u)`` biases.
+      stride, pad: convolution stride and symmetric spatial zero-padding.
+      mode: arithmetic mode — ``precise`` / ``relaxed`` / ``imprecise``.
+
+    Returns:
+      ``(B, Mb, Hout, Wout, u)`` map-major OFMs (f32).
+    """
+    if ifm.ndim != 5:
+        raise ValueError(f"ifm must be (B, Cb, H, W, u), got {ifm.shape}")
+    bsz, cb, h, wdim, u = ifm.shape
+    mb, u_out, cb_w, k, k2, u_in = w_mm.shape
+    if (cb_w, u_in) != (cb, u) or k != k2 or u_out != u:
+        raise ValueError(f"weight shape {w_mm.shape} does not match ifm {ifm.shape}")
+    if pad:
+        ifm = jnp.pad(ifm, ((0, 0), (0, 0), (pad, pad), (pad, pad), (0, 0)))
+        h, wdim = h + 2 * pad, wdim + 2 * pad
+    hout = (h - k) // stride + 1
+    wout = (wdim - k) // stride + 1
+    if hout <= 0 or wout <= 0:
+        raise ValueError(f"window k={k} stride={stride} too large for "
+                         f"padded input {h}x{wdim}")
+
+    kern = functools.partial(_conv_kernel, k=k, stride=stride,
+                             hout=hout, wout=wout, mode=mode)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz, mb),
+        in_specs=[
+            pl.BlockSpec((1, cb, h, wdim, u), lambda b, m: (b, 0, 0, 0, 0)),
+            pl.BlockSpec((1, u, cb, k, k, u), lambda b, m: (m, 0, 0, 0, 0, 0)),
+            pl.BlockSpec((1, u), lambda b, m: (m, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hout, wout, u),
+                               lambda b, m: (b, m, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, mb, hout, wout, u), jnp.float32),
+        interpret=True,
+    )(ifm, w_mm, b_mm)
+
+
+def conv2d_mapmajor_single(ifm: jnp.ndarray, w_mm: jnp.ndarray,
+                           b_mm: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Unbatched convenience wrapper: ``(Cb,H,W,u) -> (Mb,Hout,Wout,u)``."""
+    return conv2d_mapmajor(ifm[None], w_mm, b_mm, **kw)[0]
+
+
+def vmem_footprint_bytes(ifm_shape, w_shape, out_shape) -> int:
+    """Estimated VMEM bytes one grid step holds resident (DESIGN.md perf).
+
+    interpret=True gives no hardware numbers; this is the analytic
+    footprint of the BlockSpecs above: one input image + one weight stack
+    + one output stack, all f32.
+    """
+    per = 4  # f32
+    n_in = math.prod(ifm_shape[1:])
+    n_w = math.prod(w_shape[1:])
+    n_out = math.prod(out_shape[1:])
+    return per * (n_in + n_w + n_out)

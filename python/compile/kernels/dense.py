@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: fully-connected (dense) layer on the map-major
+flattened activation vector.
+
+AlexNet spends a large fraction of its parameters in FC layers; Cappuccino
+reorders FC weights at compile time so that the incoming activation can be
+consumed directly in map-major flatten order — the FC counterpart of the
+zero-overhead OFM reordering (section IV.B.1). The row permutation lives
+in :func:`fc_weights_for_mapmajor`.
+
+The kernel tiles the output dimension across the grid; each program
+computes ``TILE_O`` outputs as a (TILE_O, I) x (I,) contraction — the
+lane-vectorised MAC of Fig. 6 with the whole input vector as the lane
+axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .conv import _mode_cast
+
+TILE_O = 128
+
+
+def fc_weights_for_mapmajor(w: jnp.ndarray, c: int, h: int, wdim: int,
+                            u: int) -> jnp.ndarray:
+    """Reorder FC weight columns for a map-major flattened input.
+
+    ``w`` is ``(O, I)`` with ``I = c*h*wdim`` laid out for a *row-major*
+    (NCHW-flatten) input. The returned matrix is ``(O, Ib)`` with
+    ``Ib = ceil(c/u)*u*h*wdim`` whose columns match ``(Cb, H, W, u)``
+    C-order flattening — zero columns inserted for channel padding. This
+    is compile-time parameter reordering: zero runtime cost.
+    """
+    o, i = w.shape
+    if i != c * h * wdim:
+        raise ValueError(f"FC input dim {i} != {c}*{h}*{wdim}")
+    cb = -(-c // u)
+    # (O, C, H, W) -> pad C -> (O, Cb, u, H, W) -> (O, Cb, H, W, u) -> flat
+    w4 = w.reshape(o, c, h, wdim)
+    w4 = jnp.pad(w4, ((0, 0), (0, cb * u - c), (0, 0), (0, 0)))
+    w4 = w4.reshape(o, cb, u, h, wdim).transpose(0, 1, 3, 4, 2)
+    return w4.reshape(o, cb * h * wdim * u)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, mode: str):
+    """One grid step: ``TILE_O`` outputs for one batch element."""
+    x = _mode_cast(x_ref[0], mode)            # (I,)
+    w = _mode_cast(w_ref[...], mode)          # (TILE_O, I)
+    o_ref[0] = jnp.einsum("oi,i->o", w, x,
+                          preferred_element_type=jnp.float32) + b_ref[...]
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+          mode: str = "precise") -> jnp.ndarray:
+    """Dense layer ``(B, I) x (O, I) -> (B, O)`` via Pallas.
+
+    ``O`` is padded to a multiple of ``TILE_O`` at trace time; padding is
+    sliced off before returning.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"x must be (B, I), got {x.shape}")
+    bsz, i = x.shape
+    o, i_w = w.shape
+    if i_w != i:
+        raise ValueError(f"weight input dim {i_w} != activation dim {i}")
+    ob = -(-o // TILE_O)
+    w_p = jnp.pad(w, ((0, ob * TILE_O - o), (0, 0)))
+    b_p = jnp.pad(b, (0, ob * TILE_O - o))
+
+    kern = functools.partial(_dense_kernel, mode=mode)
+    out = pl.pallas_call(
+        kern,
+        grid=(bsz, ob),
+        in_specs=[
+            pl.BlockSpec((1, i), lambda bi, oi: (bi, 0)),
+            pl.BlockSpec((TILE_O, i), lambda bi, oi: (oi, 0)),
+            pl.BlockSpec((TILE_O,), lambda bi, oi: (oi,)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_O), lambda bi, oi: (bi, oi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, ob * TILE_O), jnp.float32),
+        interpret=True,
+    )(x, w_p, b_p)
+    return out[:, :o]

@@ -1,0 +1,189 @@
+"""Pure-jnp reference oracle for the Cappuccino kernels, plus the layout
+transforms the paper builds on (section IV.B).
+
+Everything here is deliberately written in the most obvious way possible
+(``lax.conv_general_dilated`` in NCHW, plain transposes for the map-major
+reorder) so the Pallas kernels in ``conv.py`` / ``dense.py`` have an
+independent ground truth.
+
+Layout vocabulary used throughout the repo:
+
+* ``nchw``      — conventional row-major feature maps, shape ``(C, H, W)``
+                  (batched: ``(B, C, H, W)``).
+* ``map-major`` — the paper's vector-friendly layout (Fig. 5): channels
+                  are grouped into stacks of ``u``; within a stack, the
+                  ``u`` channel values of one spatial position are
+                  contiguous. Shape ``(Cb, H, W, u)`` with
+                  ``Cb = ceil(C / u)`` (batched: ``(B, Cb, H, W, u)``).
+
+Weights:
+
+* conventional — ``(M, C, K, K)``
+* map-major    — ``(Mb, u, Cb, K, K, u)``: output-channel stacks of ``u``
+                  (dim 1 = output lane), input-channel stacks of ``u``
+                  (last dim = input lane). This is the compile-time
+                  parameter reordering of section III / IV.B.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Smallest positive normal float32; used by the relaxed/imprecise modes to
+# emulate RenderScript's non-IEEE handling of denormals (flush-to-zero).
+F32_MIN_NORMAL = np.float32(2.0 ** -126)
+
+MODES = ("precise", "relaxed", "imprecise")
+
+
+# ---------------------------------------------------------------------------
+# Layout transforms (paper section IV.B, Fig. 5 / Fig. 7)
+# ---------------------------------------------------------------------------
+
+def pad_channels(x_nchw: jnp.ndarray, u: int) -> jnp.ndarray:
+    """Zero-pad the channel dim of a ``(C, H, W)`` tensor to a multiple of u."""
+    c = x_nchw.shape[0]
+    cb = math.ceil(c / u)
+    pad = cb * u - c
+    if pad == 0:
+        return x_nchw
+    return jnp.pad(x_nchw, ((0, pad), (0, 0), (0, 0)))
+
+
+def nchw_to_mapmajor(x_nchw: jnp.ndarray, u: int) -> jnp.ndarray:
+    """``(C, H, W)`` -> ``(Cb, H, W, u)`` map-major reorder (Fig. 5).
+
+    Channel ``c`` lands in stack ``c // u``, lane ``c % u``. Channels are
+    zero-padded up to a multiple of ``u`` first (the paper pads the input
+    image from 3 to ``u`` maps implicitly through the weight reorder).
+    """
+    x = pad_channels(x_nchw, u)
+    cb = x.shape[0] // u
+    # (Cb, u, H, W) -> (Cb, H, W, u)
+    return x.reshape(cb, u, *x.shape[1:]).transpose(0, 2, 3, 1)
+
+
+def mapmajor_to_nchw(x_mm: jnp.ndarray, c: int | None = None) -> jnp.ndarray:
+    """``(Cb, H, W, u)`` -> ``(C, H, W)``; drops channel padding if ``c`` given."""
+    cb, h, w, u = x_mm.shape
+    x = x_mm.transpose(0, 3, 1, 2).reshape(cb * u, h, w)
+    if c is not None:
+        x = x[:c]
+    return x
+
+
+def weights_to_mapmajor(w: jnp.ndarray, u: int) -> jnp.ndarray:
+    """``(M, C, K, K)`` -> ``(Mb, u, Cb, K, K, u)`` compile-time reorder."""
+    m, c, kh, kw = w.shape
+    mb = math.ceil(m / u)
+    cb = math.ceil(c / u)
+    w = jnp.pad(w, ((0, mb * u - m), (0, cb * u - c), (0, 0), (0, 0)))
+    # (Mb, u, Cb, u, K, K) -> (Mb, u, Cb, K, K, u)
+    w = w.reshape(mb, u, cb, u, kh, kw)
+    return w.transpose(0, 1, 2, 4, 5, 3)
+
+
+def bias_to_mapmajor(b: jnp.ndarray, u: int) -> jnp.ndarray:
+    """``(M,)`` -> ``(Mb, u)``."""
+    m = b.shape[0]
+    mb = math.ceil(m / u)
+    return jnp.pad(b, (0, mb * u - m)).reshape(mb, u)
+
+
+# ---------------------------------------------------------------------------
+# Thread-id -> (w, h, m) mapping — equations (3), (4), (5)
+# ---------------------------------------------------------------------------
+
+def thread_index_to_whm(x: int, u: int, wout: int, hout: int) -> tuple[int, int, int]:
+    """The paper's zero-overhead OFM reordering index math.
+
+    Thread ``x`` produces output element ``(m, h, w)`` and stores it at
+    offset ``x`` of the output buffer, which by construction is the
+    map-major position of ``(m, h, w)``.
+    """
+    w = (x // u) % wout                         # eq. (3)
+    h = (x // (u * wout)) % hout                # eq. (4)
+    m = (x % u) + (x // (u * wout * hout)) * u  # eq. (5)
+    return w, h, m
+
+
+def whm_to_thread_index(w: int, h: int, m: int, u: int, wout: int, hout: int) -> int:
+    """Inverse of eqs. (3)-(5): map-major linear offset of element (m, h, w)."""
+    stack, lane = divmod(m, u)
+    return lane + u * (w + wout * (h + hout * stack))
+
+
+# ---------------------------------------------------------------------------
+# Inexact arithmetic emulation (section IV.C)
+# ---------------------------------------------------------------------------
+
+def flush_denormals(x: jnp.ndarray) -> jnp.ndarray:
+    """Flush-to-zero for float32 denormals; also canonicalises -0.0 -> +0.0.
+
+    This emulates the RenderScript relaxed / imprecise floating-point
+    contract ("operations resulting in -0.0 can return +0.0; denormalized
+    numbers are not handled per IEEE 754").
+    """
+    flushed = jnp.where(jnp.abs(x) < F32_MIN_NORMAL, 0.0, x)
+    return flushed + 0.0  # +0.0 canonicalises any remaining -0.0
+
+
+def apply_mode_inputs(x: jnp.ndarray, mode: str) -> jnp.ndarray:
+    """Transform operands according to the arithmetic mode.
+
+    * ``precise``   — IEEE 754 float32, untouched.
+    * ``relaxed``   — float32 with denormals flushed to zero.
+    * ``imprecise`` — denormals flushed, then rounded to bfloat16 (the
+      TPU-flavoured analogue of RenderScript's fast vectorised mode; see
+      DESIGN.md Hardware-Adaptation).
+    """
+    if mode == "precise":
+        return x
+    if mode == "relaxed":
+        return flush_denormals(x)
+    if mode == "imprecise":
+        return flush_denormals(x).astype(jnp.bfloat16)
+    raise ValueError(f"unknown arithmetic mode: {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Reference convolution / dense in conventional layout
+# ---------------------------------------------------------------------------
+
+def conv2d_nchw(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                stride: int = 1, pad: int = 0,
+                mode: str = "precise") -> jnp.ndarray:
+    """Reference conv: ``(C,H,W) x (M,C,K,K) -> (M,Hout,Wout)``.
+
+    Accumulation is float32 in every mode; ``imprecise`` rounds the
+    multiplication operands to bfloat16 first, mirroring the Pallas
+    kernel's contract.
+    """
+    x = apply_mode_inputs(x, mode)
+    w = apply_mode_inputs(w, mode)
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        precision=jax.lax.Precision.HIGHEST,
+    )[0]
+    return out + b[:, None, None]
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              mode: str = "precise") -> jnp.ndarray:
+    """Reference fully-connected layer: ``(I,) x (O,I) -> (O,)``."""
+    x = apply_mode_inputs(x, mode)
+    w = apply_mode_inputs(w, mode)
+    return jnp.dot(w.astype(jnp.float32), x.astype(jnp.float32),
+                   precision=jax.lax.Precision.HIGHEST) + b
+
+
+def conv_out_size(size: int, k: int, stride: int, pad: int) -> int:
+    """Output spatial size of a convolution/pool window."""
+    return (size + 2 * pad - k) // stride + 1

@@ -1,0 +1,147 @@
+"""Layer-2 building blocks: CNN layers operating on the map-major layout.
+
+Feature maps flow between layers as ``(B, Cb, H, W, u)`` map-major tensors
+(section IV.B): convolutions *produce* map-major output directly (the
+zero-overhead reordering of section IV.B.1), so no transpose ever sits
+between two layers on the inference path. The only exception is LRN,
+which normalises across the channel dimension and therefore views the
+stacks as one contiguous channel axis internally (a pair of free
+reshapes/transposes; noted in DESIGN.md — the paper does not discuss LRN
+layout).
+
+All layers take an explicit arithmetic ``mode`` so the inexact-computing
+analysis (section IV.C) can flip individual layers between precise /
+relaxed / imprecise.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import dense as kdense
+from .kernels import ref
+
+
+def conv(x_mm: jnp.ndarray, w_mm: jnp.ndarray, b_mm: jnp.ndarray, *,
+         stride: int = 1, pad: int = 0, mode: str = "precise",
+         relu: bool = True) -> jnp.ndarray:
+    """Convolution + optional fused ReLU, map-major in and out."""
+    y = kconv.conv2d_mapmajor(x_mm, w_mm, b_mm, stride=stride, pad=pad,
+                              mode=mode)
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def _pool_patches(x_mm: jnp.ndarray, k: int, stride: int, pad: int,
+                  pad_value: float):
+    """Yield the k*k strided window slices of a padded map-major tensor."""
+    if pad:
+        x_mm = jnp.pad(x_mm, ((0, 0), (0, 0), (pad, pad), (pad, pad), (0, 0)),
+                       constant_values=pad_value)
+    h, w = x_mm.shape[2], x_mm.shape[3]
+    hout = (h - k) // stride + 1
+    wout = (w - k) // stride + 1
+    for kh in range(k):
+        for kw in range(k):
+            yield x_mm[:, :, kh: kh + (hout - 1) * stride + 1: stride,
+                       kw: kw + (wout - 1) * stride + 1: stride, :]
+
+
+def maxpool(x_mm: jnp.ndarray, k: int, stride: int, pad: int = 0) -> jnp.ndarray:
+    """Max pooling over spatial dims; layout-preserving (map-major)."""
+    out = None
+    for patch in _pool_patches(x_mm, k, stride, pad, -jnp.inf):
+        out = patch if out is None else jnp.maximum(out, patch)
+    return out
+
+
+def avgpool(x_mm: jnp.ndarray, k: int, stride: int, pad: int = 0) -> jnp.ndarray:
+    """Average pooling over spatial dims; layout-preserving."""
+    out = None
+    for patch in _pool_patches(x_mm, k, stride, pad, 0.0):
+        out = patch if out is None else out + patch
+    return out / float(k * k)
+
+
+def global_avgpool(x_mm: jnp.ndarray) -> jnp.ndarray:
+    """``(B, Cb, H, W, u) -> (B, Cb*u)`` global average pool + flatten."""
+    pooled = x_mm.mean(axis=(2, 3))           # (B, Cb, u)
+    b, cb, u = pooled.shape
+    return pooled.reshape(b, cb * u)
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0.0)
+
+
+def lrn(x_mm: jnp.ndarray, *, size: int = 5, alpha: float = 1e-4,
+        beta: float = 0.75, bias: float = 1.0) -> jnp.ndarray:
+    """Local response normalisation across channels (AlexNet/GoogLeNet).
+
+    Views the map-major stacks as one channel axis, normalises, and
+    restores the layout.
+    """
+    b, cb, h, w, u = x_mm.shape
+    # (B, C, H, W) with C = Cb*u in true channel order
+    x = x_mm.transpose(0, 1, 4, 2, 3).reshape(b, cb * u, h, w)
+    sq = x * x
+    # Sum of squares over a window of `size` channels centred on each c.
+    half = size // 2
+    padded = jnp.pad(sq, ((0, 0), (half, half), (0, 0), (0, 0)))
+    ssum = jnp.zeros_like(x)
+    for o in range(size):
+        ssum = ssum + padded[:, o: o + cb * u]
+    y = x / (bias + alpha / size * ssum) ** beta
+    return y.reshape(b, cb, u, h, w).transpose(0, 1, 3, 4, 2)
+
+
+def concat_channels(tensors: list[jnp.ndarray]) -> jnp.ndarray:
+    """Channel concat of map-major tensors (inception modules).
+
+    Valid without reshuffling because every branch width in the supported
+    nets is a multiple of ``u`` — stack boundaries align with branch
+    boundaries (checked by the synthesizer on the Rust side too).
+    """
+    return jnp.concatenate(tensors, axis=1)
+
+
+def flatten(x_mm: jnp.ndarray) -> jnp.ndarray:
+    """``(B, Cb, H, W, u) -> (B, Cb*H*W*u)`` map-major flatten.
+
+    FC weights must be reordered with
+    :func:`..kernels.dense.fc_weights_for_mapmajor` to consume this order.
+    """
+    b = x_mm.shape[0]
+    return x_mm.reshape(b, -1)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+          mode: str = "precise", relu: bool = False) -> jnp.ndarray:
+    """Fully-connected layer via the Pallas dense kernel."""
+    y = kdense.dense(x, w, b, mode=mode)
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def softmax(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.softmax(x, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation (He-normal for convs/FC, zero bias)
+# ---------------------------------------------------------------------------
+
+def init_conv(key, m: int, c: int, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """He-normal ``(M,C,K,K)`` weights + zero ``(M,)`` bias (NCHW order)."""
+    std = math.sqrt(2.0 / (c * k * k))
+    w = jax.random.normal(key, (m, c, k, k), jnp.float32) * std
+    return w, jnp.zeros((m,), jnp.float32)
+
+
+def init_dense(key, o: int, i: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """He-normal ``(O,I)`` weights + zero ``(O,)`` bias."""
+    std = math.sqrt(2.0 / i)
+    w = jax.random.normal(key, (o, i), jnp.float32) * std
+    return w, jnp.zeros((o,), jnp.float32)

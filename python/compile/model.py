@@ -1,0 +1,455 @@
+"""Layer-2 model zoo: the three CNNs of the paper's evaluation (AlexNet,
+SqueezeNet v1.0, GoogLeNet) plus TinyNet, the small net trained at build
+time for the inexact-computing study.
+
+Each network is a declarative *spec* — a list of layer dicts — which is
+the single source of truth shared with the Rust side: ``aot.py`` embeds
+the spec in the artifact manifest, and ``rust/src/model`` mirrors the
+same builders (cross-checked by integration tests). From a spec we
+derive:
+
+* shape inference (:func:`infer_shapes`),
+* conventional-layout parameter initialisation (:func:`init_params`),
+* compile-time map-major parameter reordering (:func:`reorder_params`),
+* the jittable map-major forward function (:func:`build_apply`) whose
+  conv / dense layers run the Layer-1 Pallas kernels.
+
+Supported layer ops::
+
+  {"op": "conv", "name", "m", "k", "s", "p", "relu"}
+  {"op": "maxpool" | "avgpool", "k", "s", "p"}
+  {"op": "lrn", "size", "alpha", "beta"}
+  {"op": "fire", "name", "s1", "e1", "e3"}            # SqueezeNet
+  {"op": "inception", "name", "b1", "b3r", "b3", "b5r", "b5", "pp"}
+  {"op": "flatten"} | {"op": "gap"}
+  {"op": "dense", "name", "o", "relu"}
+  {"op": "softmax"}
+
+``fire`` and ``inception`` are composites that expand into convs with
+derived names (e.g. ``fire2/s1``, ``inc3a/b3``); mode assignments address
+the expanded names.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .kernels import dense as kdense
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Network specs
+# ---------------------------------------------------------------------------
+
+def conv_l(name, m, k, s=1, p=0, relu=True):
+    return {"op": "conv", "name": name, "m": m, "k": k, "s": s, "p": p,
+            "relu": relu}
+
+
+def tinynet_spec():
+    """Small CNN for the synthetic 8-class dataset; all widths divide 16."""
+    return [
+        conv_l("conv1", 16, 3, 1, 1),
+        {"op": "maxpool", "k": 2, "s": 2, "p": 0},
+        conv_l("conv2", 32, 3, 1, 1),
+        {"op": "maxpool", "k": 2, "s": 2, "p": 0},
+        conv_l("conv3", 32, 3, 1, 1),
+        {"op": "flatten"},
+        {"op": "dense", "name": "fc4", "o": 64, "relu": True},
+        {"op": "dense", "name": "fc5", "o": 8, "relu": False},
+    ]
+
+
+def alexnet_spec():
+    """AlexNet (CaffeNet single-tower variant, group=1 — see DESIGN.md)."""
+    return [
+        conv_l("conv1", 96, 11, 4, 0),
+        {"op": "lrn", "size": 5, "alpha": 1e-4, "beta": 0.75},
+        {"op": "maxpool", "k": 3, "s": 2, "p": 0},
+        conv_l("conv2", 256, 5, 1, 2),
+        {"op": "lrn", "size": 5, "alpha": 1e-4, "beta": 0.75},
+        {"op": "maxpool", "k": 3, "s": 2, "p": 0},
+        conv_l("conv3", 384, 3, 1, 1),
+        conv_l("conv4", 384, 3, 1, 1),
+        conv_l("conv5", 256, 3, 1, 1),
+        {"op": "maxpool", "k": 3, "s": 2, "p": 0},
+        {"op": "flatten"},
+        {"op": "dense", "name": "fc6", "o": 4096, "relu": True},
+        {"op": "dense", "name": "fc7", "o": 4096, "relu": True},
+        {"op": "dense", "name": "fc8", "o": 1000, "relu": False},
+    ]
+
+
+def squeezenet_spec():
+    """SqueezeNet v1.0 (Iandola et al. 2016), as evaluated in the paper."""
+    def fire(name, s1, e1, e3):
+        return {"op": "fire", "name": name, "s1": s1, "e1": e1, "e3": e3}
+    return [
+        conv_l("conv1", 96, 7, 2, 0),
+        {"op": "maxpool", "k": 3, "s": 2, "p": 0},
+        fire("fire2", 16, 64, 64),
+        fire("fire3", 16, 64, 64),
+        fire("fire4", 32, 128, 128),
+        {"op": "maxpool", "k": 3, "s": 2, "p": 0},
+        fire("fire5", 32, 128, 128),
+        fire("fire6", 48, 192, 192),
+        fire("fire7", 48, 192, 192),
+        fire("fire8", 64, 256, 256),
+        {"op": "maxpool", "k": 3, "s": 2, "p": 0},
+        fire("fire9", 64, 256, 256),
+        conv_l("conv10", 1000, 1, 1, 0),
+        {"op": "gap"},
+    ]
+
+
+def googlenet_spec():
+    """GoogLeNet / Inception-v1 (Szegedy et al. 2015), main branch only.
+
+    Caffe's ceil-mode pools are emulated with pad=1 floor pools so the
+    spatial sizes match the reference (56/28/14/7); the auxiliary
+    classifier heads are train-time only and omitted for inference.
+    """
+    def inc(name, b1, b3r, b3, b5r, b5, pp):
+        return {"op": "inception", "name": name, "b1": b1, "b3r": b3r,
+                "b3": b3, "b5r": b5r, "b5": b5, "pp": pp}
+    return [
+        conv_l("conv1", 64, 7, 2, 3),
+        {"op": "maxpool", "k": 3, "s": 2, "p": 1},
+        {"op": "lrn", "size": 5, "alpha": 1e-4, "beta": 0.75},
+        conv_l("conv2r", 64, 1, 1, 0),
+        conv_l("conv2", 192, 3, 1, 1),
+        {"op": "lrn", "size": 5, "alpha": 1e-4, "beta": 0.75},
+        {"op": "maxpool", "k": 3, "s": 2, "p": 1},
+        inc("inc3a", 64, 96, 128, 16, 32, 32),
+        inc("inc3b", 128, 128, 192, 32, 96, 64),
+        {"op": "maxpool", "k": 3, "s": 2, "p": 1},
+        inc("inc4a", 192, 96, 208, 16, 48, 64),
+        inc("inc4b", 160, 112, 224, 24, 64, 64),
+        inc("inc4c", 128, 128, 256, 24, 64, 64),
+        inc("inc4d", 112, 144, 288, 32, 64, 64),
+        inc("inc4e", 256, 160, 320, 32, 128, 128),
+        {"op": "maxpool", "k": 3, "s": 2, "p": 1},
+        inc("inc5a", 256, 160, 320, 32, 128, 128),
+        inc("inc5b", 384, 192, 384, 48, 128, 128),
+        {"op": "gap"},
+        {"op": "dense", "name": "fc", "o": 1000, "relu": False},
+    ]
+
+
+NETS = {
+    "tinynet": (tinynet_spec, (3, 16, 16), 8),
+    "alexnet": (alexnet_spec, (3, 227, 227), 1000),
+    "squeezenet": (squeezenet_spec, (3, 227, 227), 1000),
+    "googlenet": (googlenet_spec, (3, 224, 224), 1000),
+}
+
+
+# ---------------------------------------------------------------------------
+# Composite expansion: every spec reduces to primitive layers
+# ---------------------------------------------------------------------------
+
+def expand(spec):
+    """Expand fire/inception composites into primitive layers.
+
+    The result is a linear list whose only structural op is ``fork``:
+    ``{"op":"fork", "name", "branches": [[primitive...], ...]}`` — the
+    branch outputs are channel-concatenated. Both the JAX apply and the
+    Rust IR interpret this identically.
+    """
+    out = []
+    for lay in spec:
+        op = lay["op"]
+        if op == "fire":
+            n = lay["name"]
+            out.append(conv_l(f"{n}/s1", lay["s1"], 1))
+            out.append({"op": "fork", "name": n, "branches": [
+                [conv_l(f"{n}/e1", lay["e1"], 1)],
+                [conv_l(f"{n}/e3", lay["e3"], 3, 1, 1)],
+            ]})
+        elif op == "inception":
+            n = lay["name"]
+            out.append({"op": "fork", "name": n, "branches": [
+                [conv_l(f"{n}/b1", lay["b1"], 1)],
+                [conv_l(f"{n}/b3r", lay["b3r"], 1),
+                 conv_l(f"{n}/b3", lay["b3"], 3, 1, 1)],
+                [conv_l(f"{n}/b5r", lay["b5r"], 1),
+                 conv_l(f"{n}/b5", lay["b5"], 5, 1, 2)],
+                [{"op": "maxpool", "k": 3, "s": 1, "p": 1},
+                 conv_l(f"{n}/pp", lay["pp"], 1)],
+            ]})
+        else:
+            out.append(dict(lay))
+    return out
+
+
+def conv_dense_names(spec):
+    """Names of every mode-assignable (conv or dense) layer, in order."""
+    names = []
+    for lay in expand(spec):
+        if lay["op"] in ("conv", "dense"):
+            names.append(lay["name"])
+        elif lay["op"] == "fork":
+            for br in lay["branches"]:
+                names.extend(l["name"] for l in br if l["op"] == "conv")
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Shape inference over a spec (conventional C,H,W bookkeeping)
+# ---------------------------------------------------------------------------
+
+def _infer_seq(lays, shape):
+    """Run shape inference over a primitive-layer list; returns out shape."""
+    for lay in lays:
+        op = lay["op"]
+        if op == "conv":
+            c, h, w = shape
+            ho = ref.conv_out_size(h, lay["k"], lay["s"], lay["p"])
+            wo = ref.conv_out_size(w, lay["k"], lay["s"], lay["p"])
+            shape = (lay["m"], ho, wo)
+        elif op in ("maxpool", "avgpool"):
+            c, h, w = shape
+            ho = ref.conv_out_size(h, lay["k"], lay["s"], lay["p"])
+            wo = ref.conv_out_size(w, lay["k"], lay["s"], lay["p"])
+            shape = (c, ho, wo)
+        elif op == "lrn":
+            pass
+        elif op == "fork":
+            outs = [_infer_seq(br, shape) for br in lay["branches"]]
+            h, w = outs[0][1], outs[0][2]
+            assert all(o[1:] == (h, w) for o in outs), \
+                f"fork {lay['name']}: branch spatial mismatch {outs}"
+            shape = (sum(o[0] for o in outs), h, w)
+        elif op == "flatten":
+            c, h, w = shape
+            shape = (c * h * w,)
+        elif op == "gap":
+            shape = (shape[0],)
+        elif op == "dense":
+            shape = (lay["o"],)
+        elif op == "softmax":
+            pass
+        else:
+            raise ValueError(f"unknown op {op}")
+    return shape
+
+
+def infer_shapes(spec, input_shape):
+    """Per-layer *input* shapes keyed by conv/dense name.
+
+    Returns ``(out_shape, by_name)`` where ``by_name[name]`` is the input
+    shape ``(C, H, W)`` (or ``(I,)`` for dense) of that layer — what the
+    parameter reorder needs.
+    """
+    by_name = {}
+
+    def walk(lays, shape):
+        for lay in lays:
+            op = lay["op"]
+            if op in ("conv", "dense"):
+                by_name[lay["name"]] = shape
+            if op == "fork":
+                outs = [walk(br, shape) for br in lay["branches"]]
+                shape = (sum(o[0] for o in outs), outs[0][1], outs[0][2])
+            else:
+                shape = _infer_seq([lay], shape)
+        return shape
+
+    out = walk(expand(spec), input_shape)
+    return out, by_name
+
+
+# ---------------------------------------------------------------------------
+# Parameters: init (conventional), reorder (map-major)
+# ---------------------------------------------------------------------------
+
+def init_params(spec, input_shape, key):
+    """He-normal conventional-layout params: ``{name: (w, b)}``."""
+    _, by_name = infer_shapes(spec, input_shape)
+    params = {}
+
+    def walk(lays):
+        nonlocal key
+        for lay in lays:
+            if lay["op"] == "conv":
+                key, sub = jax.random.split(key)
+                c = by_name[lay["name"]][0]
+                params[lay["name"]] = L.init_conv(sub, lay["m"], c, lay["k"])
+            elif lay["op"] == "dense":
+                key, sub = jax.random.split(key)
+                i = by_name[lay["name"]][0]
+                params[lay["name"]] = L.init_dense(sub, lay["o"], i)
+            elif lay["op"] == "fork":
+                for br in lay["branches"]:
+                    walk(br)
+
+    walk(expand(spec))
+    return params
+
+
+def _first_dense_after_flatten(spec):
+    seen_flatten = False
+    for lay in expand(spec):
+        if lay["op"] == "flatten":
+            seen_flatten = True
+        elif lay["op"] == "dense" and seen_flatten:
+            return lay["name"]
+    return None
+
+
+def _shape_before_flatten(spec, input_shape):
+    shape = input_shape
+    for lay in expand(spec):
+        if lay["op"] == "flatten":
+            return shape
+        shape = _infer_seq([lay], shape)
+    return None
+
+
+def reorder_params(spec, input_shape, params, u):
+    """Compile-time parameter reordering (section III): conventional ->
+    map-major. Conv weights become ``(Mb,u,Cb,K,K,u)``; the *first* dense
+    after a flatten gets its columns permuted to consume the map-major
+    flatten order; later dense layers are 1-D in / 1-D out and unchanged.
+    """
+    out = {}
+    first_fc = _first_dense_after_flatten(spec)
+    flat_shape = _shape_before_flatten(spec, input_shape)
+    for name, (w, b) in params.items():
+        if w.ndim == 4:
+            out[name] = (ref.weights_to_mapmajor(w, u),
+                         ref.bias_to_mapmajor(b, u))
+        else:
+            if name == first_fc:
+                c, h, wd = flat_shape
+                w = kdense.fc_weights_for_mapmajor(w, c, h, wd, u)
+            out[name] = (w, b)
+    return out
+
+
+def param_order(spec):
+    """Deterministic parameter flattening order for AOT argument lists."""
+    return conv_dense_names(spec)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (map-major, Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def build_apply(spec, input_shape, u):
+    """Build the jittable map-major forward function.
+
+    Returns ``apply(params_mm, x_mm, modes)`` where ``x_mm`` is
+    ``(B, Cb, H, W, u)`` and ``modes`` is a ``{layer_name: mode}`` dict
+    (missing names default to precise) or a single mode string for all
+    layers. The returned logits are ``(B, num_classes)`` float32.
+    """
+    prim = expand(spec)
+
+    def mode_of(modes, name):
+        if isinstance(modes, str):
+            return modes
+        return (modes or {}).get(name, "precise")
+
+    def run(lays, params, x, modes):
+        for lay in lays:
+            op = lay["op"]
+            if op == "conv":
+                w, b = params[lay["name"]]
+                x = L.conv(x, w, b, stride=lay["s"], pad=lay["p"],
+                           mode=mode_of(modes, lay["name"]),
+                           relu=lay["relu"])
+            elif op == "maxpool":
+                x = L.maxpool(x, lay["k"], lay["s"], lay["p"])
+            elif op == "avgpool":
+                x = L.avgpool(x, lay["k"], lay["s"], lay["p"])
+            elif op == "lrn":
+                x = L.lrn(x, size=lay["size"], alpha=lay["alpha"],
+                          beta=lay["beta"])
+            elif op == "fork":
+                outs = [run(br, params, x, modes) for br in lay["branches"]]
+                x = L.concat_channels(outs)
+            elif op == "flatten":
+                x = L.flatten(x)
+            elif op == "gap":
+                x = L.global_avgpool(x)
+            elif op == "dense":
+                w, b = params[lay["name"]]
+                x = L.dense(x, w, b, mode=mode_of(modes, lay["name"]),
+                            relu=lay["relu"])
+            elif op == "softmax":
+                x = L.softmax(x)
+        return x
+
+    def apply(params_mm, x_mm, modes=None):
+        return run(prim, params_mm, x_mm, modes)
+
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# Conventional-layout reference forward pass (oracle for tests)
+# ---------------------------------------------------------------------------
+
+def forward_nchw_ref(spec, params, x_nchw, mode="precise"):
+    """Pure-jnp NCHW forward pass; must agree with the map-major Pallas
+    path to float tolerance for every net."""
+    prim = expand(spec)
+
+    def run(lays, x):
+        for lay in lays:
+            op = lay["op"]
+            if op == "conv":
+                w, b = params[lay["name"]]
+                x = jnp.stack([ref.conv2d_nchw(xi, w, b, stride=lay["s"],
+                                               pad=lay["p"], mode=mode)
+                               for xi in x])
+                if lay["relu"]:
+                    x = jnp.maximum(x, 0.0)
+            elif op in ("maxpool", "avgpool"):
+                k, s, p = lay["k"], lay["s"], lay["p"]
+                pv = -jnp.inf if op == "maxpool" else 0.0
+                xp = jnp.pad(x, ((0, 0), (0, 0), (p, p), (p, p)),
+                             constant_values=pv) if p else x
+                h, w_ = xp.shape[2], xp.shape[3]
+                ho, wo = (h - k) // s + 1, (w_ - k) // s + 1
+                acc = None
+                for kh in range(k):
+                    for kw in range(k):
+                        sl = xp[:, :, kh: kh + (ho - 1) * s + 1: s,
+                                kw: kw + (wo - 1) * s + 1: s]
+                        if op == "maxpool":
+                            acc = sl if acc is None else jnp.maximum(acc, sl)
+                        else:
+                            acc = sl if acc is None else acc + sl
+                x = acc if op == "maxpool" else acc / float(k * k)
+            elif op == "lrn":
+                size, alpha, beta = lay["size"], lay["alpha"], lay["beta"]
+                sq = x * x
+                half = size // 2
+                pad = jnp.pad(sq, ((0, 0), (half, half), (0, 0), (0, 0)))
+                ssum = jnp.zeros_like(x)
+                for o in range(size):
+                    ssum = ssum + pad[:, o: o + x.shape[1]]
+                x = x / (1.0 + alpha / size * ssum) ** beta
+            elif op == "fork":
+                outs = [run(br, x) for br in lay["branches"]]
+                x = jnp.concatenate(outs, axis=1)
+            elif op == "flatten":
+                x = x.reshape(x.shape[0], -1)
+            elif op == "gap":
+                x = x.mean(axis=(2, 3))
+            elif op == "dense":
+                w, b = params[lay["name"]]
+                x = jnp.stack([ref.dense_ref(xi, w, b, mode=mode)
+                               for xi in x])
+                if lay["relu"]:
+                    x = jnp.maximum(x, 0.0)
+            elif op == "softmax":
+                x = jax.nn.softmax(x, axis=-1)
+        return x
+
+    return run(prim, x_nchw)

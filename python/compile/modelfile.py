@@ -1,0 +1,90 @@
+"""The ``.capp`` model-file format — Cappuccino's second input (Fig. 3).
+
+A trivially parseable little-endian binary container for named float32
+tensors, written at build time by python and read at run time by
+``rust/src/config/modelfile.rs`` (the two implementations are
+cross-checked by an integration test).
+
+Layout::
+
+  magic   8 bytes  b"CAPPMODL"
+  version u32      1
+  count   u32      number of tensors
+  tensor* :
+    name_len u16, name bytes (utf-8)
+    ndim     u8,  dims u32 * ndim
+    dtype    u8   (0 = f32)
+    data     f32 * prod(dims), little-endian
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"CAPPMODL"
+VERSION = 1
+DTYPE_F32 = 0
+
+
+def write_modelfile(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write named f32 tensors; iteration order is preserved."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr, dtype="<f4")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(struct.pack("<B", DTYPE_F32))
+            f.write(arr.tobytes())
+
+
+def read_modelfile(path: str) -> dict[str, np.ndarray]:
+    """Read a ``.capp`` file back into ``{name: f32 array}``."""
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:8] != MAGIC:
+        raise ValueError(f"{path}: bad magic {data[:8]!r}")
+    version, count = struct.unpack_from("<II", data, 8)
+    if version != VERSION:
+        raise ValueError(f"{path}: unsupported version {version}")
+    off = 16
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off); off += 2
+        name = data[off: off + nlen].decode("utf-8"); off += nlen
+        (ndim,) = struct.unpack_from("<B", data, off); off += 1
+        dims = struct.unpack_from(f"<{ndim}I", data, off); off += 4 * ndim
+        (dtype,) = struct.unpack_from("<B", data, off); off += 1
+        if dtype != DTYPE_F32:
+            raise ValueError(f"{path}: tensor {name}: unsupported dtype {dtype}")
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, "<f4", count=n, offset=off).reshape(dims)
+        off += 4 * n
+        out[name] = arr.copy()
+    return out
+
+
+def params_to_tensors(params) -> dict[str, np.ndarray]:
+    """Flatten ``{layer: (w, b)}`` params into capp tensor naming
+    (``layer/w``, ``layer/b``)."""
+    out = {}
+    for name, (w, b) in params.items():
+        out[f"{name}/w"] = np.asarray(w)
+        out[f"{name}/b"] = np.asarray(b)
+    return out
+
+
+def tensors_to_params(tensors: dict[str, np.ndarray]):
+    """Inverse of :func:`params_to_tensors`."""
+    params = {}
+    for key, arr in tensors.items():
+        name, kind = key.rsplit("/", 1)
+        params.setdefault(name, [None, None])
+        params[name][0 if kind == "w" else 1] = arr
+    return {k: (v[0], v[1]) for k, v in params.items()}

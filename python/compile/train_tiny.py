@@ -1,0 +1,107 @@
+"""Build-time training of TinyNet on the synthetic dataset.
+
+The inexact-computing analysis (section IV.C) needs a model with *real*
+decision boundaries — random weights would make every arithmetic mode
+trivially "equal accuracy". This trains TinyNet with a fast batched NCHW
+forward (plain ``lax.conv``; the Pallas map-major path is inference-only)
+and hand-rolled Adam, then hands conventional-layout weights to
+``aot.py`` for reordering + lowering and to ``tinynet.capp`` for the
+Rust side.
+
+Training happens ONCE, inside ``make artifacts``; nothing here ever runs
+on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset as D
+from . import model as M
+
+
+def _forward_batched(spec_prim, params, x):
+    """Fast batched NCHW forward for training (conv/pool/dense only —
+    TinyNet has no LRN/fork)."""
+    for lay in spec_prim:
+        op = lay["op"]
+        if op == "conv":
+            w, b = params[lay["name"]]
+            x = jax.lax.conv_general_dilated(
+                x, w, (lay["s"], lay["s"]),
+                ((lay["p"], lay["p"]), (lay["p"], lay["p"])),
+                dimension_numbers=("NCHW", "OIHW", "NCHW"))
+            x = x + b[None, :, None, None]
+            if lay["relu"]:
+                x = jnp.maximum(x, 0.0)
+        elif op == "maxpool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, 1, lay["k"], lay["k"]), (1, 1, lay["s"], lay["s"]),
+                "VALID")
+        elif op == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif op == "dense":
+            w, b = params[lay["name"]]
+            x = x @ w.T + b
+            if lay["relu"]:
+                x = jnp.maximum(x, 0.0)
+        else:
+            raise ValueError(f"train forward: unsupported op {op}")
+    return x
+
+
+def train(images: np.ndarray, labels: np.ndarray, *, steps: int = 400,
+          batch: int = 64, lr: float = 1e-3, seed: int = 0, log=print):
+    """Train TinyNet; returns conventional-layout params dict."""
+    spec = M.tinynet_spec()
+    prim = M.expand(spec)
+    params = M.init_params(spec, (D.C, D.H, D.W), jax.random.PRNGKey(seed))
+    names = sorted(params)
+    flat = [params[n] for n in names]
+
+    def loss_fn(flat, xb, yb):
+        p = dict(zip(names, flat))
+        logits = _forward_batched(prim, p, xb)
+        logp = jax.nn.log_softmax(logits)
+        return -logp[jnp.arange(xb.shape[0]), yb].mean()
+
+    # Hand-rolled Adam (no optax dependency in the image).
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(jnp.zeros_like, flat)
+    v = jax.tree.map(jnp.zeros_like, flat)
+
+    @jax.jit
+    def step(flat, m, v, t, xb, yb):
+        loss, g = jax.value_and_grad(loss_fn)(flat, xb, yb)
+        m = jax.tree.map(lambda mi, gi: b1 * mi + (1 - b1) * gi, m, g)
+        v = jax.tree.map(lambda vi, gi: b2 * vi + (1 - b2) * gi * gi, v, g)
+        mh = jax.tree.map(lambda mi: mi / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda vi: vi / (1 - b2 ** t), v)
+        flat = jax.tree.map(
+            lambda pi, mi, vi: pi - lr * mi / (jnp.sqrt(vi) + eps),
+            flat, mh, vh)
+        return flat, m, v, loss
+
+    rng = np.random.default_rng(seed)
+    x_all = jnp.asarray(images)
+    y_all = jnp.asarray(labels.astype(np.int32))
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, images.shape[0], size=batch)
+        flat, m, v, loss = step(flat, m, v, float(t),
+                                x_all[idx], y_all[idx])
+        if t % 100 == 0 or t == 1:
+            log(f"  train step {t:4d}  loss {float(loss):.4f}")
+    return dict(zip(names, flat))
+
+
+def accuracy(params, images: np.ndarray, labels: np.ndarray) -> float:
+    """Top-1 accuracy of the conventional-layout forward pass."""
+    prim = M.expand(M.tinynet_spec())
+    logits = _forward_batched(prim, params, jnp.asarray(images))
+    pred = np.asarray(jnp.argmax(logits, axis=-1))
+    return float((pred == labels.astype(np.int64)).mean())

@@ -1,0 +1,170 @@
+"""Build-path plumbing: model file format, dataset format, manifest
+shapes, and HLO-text emission."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, dataset as D, model as M, modelfile as MF
+from compile import train_tiny as T
+from compile.kernels import ref
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestModelFile:
+    def test_roundtrip(self, tmp_path):
+        rng = np.random.default_rng(0)
+        tensors = {
+            "conv1/w": rng.standard_normal((4, 4, 1, 3, 3, 4)).astype("f4"),
+            "conv1/b": rng.standard_normal((4, 4)).astype("f4"),
+            "scalarish": rng.standard_normal((7,)).astype("f4"),
+        }
+        p = str(tmp_path / "m.capp")
+        MF.write_modelfile(p, tensors)
+        back = MF.read_modelfile(p)
+        assert list(back) == list(tensors)
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+
+    def test_params_tensor_roundtrip(self):
+        params = {"a": (np.ones((2, 3)), np.zeros(2)),
+                  "b/c": (np.ones((4,)), np.full(4, 2.0))}
+        back = MF.tensors_to_params(MF.params_to_tensors(params))
+        assert set(back) == {"a", "b/c"}
+        np.testing.assert_array_equal(back["a"][0], params["a"][0])
+        np.testing.assert_array_equal(back["b/c"][1], params["b/c"][1])
+
+    def test_bad_magic_rejected(self, tmp_path):
+        p = str(tmp_path / "bad.capp")
+        with open(p, "wb") as f:
+            f.write(b"NOTMAGIC" + b"\x00" * 16)
+        with pytest.raises(ValueError, match="magic"):
+            MF.read_modelfile(p)
+
+
+class TestDataset:
+    def test_roundtrip(self, tmp_path):
+        imgs, labels = D.generate(64, seed=1)
+        p = str(tmp_path / "d.bin")
+        D.write_dataset(p, imgs, labels, 48)
+        i2, l2, nt = D.read_dataset(p)
+        assert nt == 48
+        np.testing.assert_array_equal(i2, imgs)
+        np.testing.assert_array_equal(l2, labels)
+
+    def test_balanced_classes(self):
+        _, labels = D.generate(80, seed=2)
+        counts = np.bincount(labels, minlength=D.NUM_CLASSES)
+        assert counts.min() == counts.max() == 10
+
+    def test_deterministic(self):
+        a, la = D.generate(16, seed=3)
+        b, lb = D.generate(16, seed=3)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(la, lb)
+
+    def test_classes_learnable(self):
+        # A tiny training run must beat chance by a wide margin — the
+        # dataset substitution is only valid if decision boundaries are
+        # real (DESIGN.md substitution table).
+        imgs, labels = D.generate(512, seed=4)
+        params = T.train(imgs[:384], labels[:384], steps=120,
+                         log=lambda *_: None)
+        acc = T.accuracy(params, imgs[384:], labels[384:])
+        assert acc > 0.7, f"synthetic dataset not learnable: acc={acc}"
+
+
+class TestAotHelpers:
+    def test_mm_param_shapes_tinynet(self):
+        shapes = aot.mm_param_shapes(M.tinynet_spec(), (3, 16, 16))
+        d = {n: (w, b) for n, w, b in shapes}
+        assert d["conv1"] == ((4, 4, 1, 3, 3, 4), (4, 4))
+        assert d["conv3"] == ((8, 4, 8, 3, 3, 4), (8, 4))
+        assert d["fc4"] == ((64, 512), (64,))
+        assert d["fc5"] == ((8, 64), (8,))
+
+    def test_mm_input_shape_pads_channels(self):
+        assert aot.mm_input_shape((3, 16, 16), 2) == (2, 1, 16, 16, 4)
+        assert aot.mm_input_shape((96, 55, 55), 1) == (1, 24, 55, 55, 4)
+
+    def test_hlo_text_emission(self):
+        def fn(x):
+            return (x * 2.0 + 1.0,)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((4,), jnp.float32))
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "f32[4]" in text
+
+    def test_export_spec_json_serializable(self):
+        for net, (spec_fn, _, _) in M.NETS.items():
+            exported = aot.export_spec(spec_fn())
+            json.dumps(exported)  # must not raise
+            ops = {l["op"] for l in exported}
+            assert "fire" not in ops and "inception" not in ops
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first")
+
+
+@needs_artifacts
+class TestEmittedArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_lists_existing_hlo_files(self, manifest):
+        assert len(manifest["artifacts"]) >= 11
+        for entry in manifest["artifacts"]:
+            path = os.path.join(ARTIFACTS, entry["hlo"])
+            assert os.path.exists(path), entry["name"]
+            with open(path) as f:
+                assert f.read(16).startswith("HloModule")
+
+    def test_golden_logits_match_trained_model(self, manifest):
+        """The golden file must reproduce from tinynet.capp + the spec —
+        guards against artifact drift."""
+        params = MF.tensors_to_params(
+            MF.read_modelfile(os.path.join(ARTIFACTS, "tinynet.capp")))
+        golden = MF.read_modelfile(
+            os.path.join(ARTIFACTS, "golden_tinynet.capp"))
+        spec = M.tinynet_spec()
+        pmm = M.reorder_params(spec, (D.C, D.H, D.W),
+                               {k: (jnp.asarray(w), jnp.asarray(b))
+                                for k, (w, b) in params.items()}, aot.U)
+        apply = M.build_apply(spec, (D.C, D.H, D.W), aot.U)
+        got = apply(pmm, jnp.asarray(golden["x_mm"]), "precise")
+        np.testing.assert_allclose(np.asarray(got),
+                                   golden["logits_precise"],
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_golden_classifies_correctly(self, manifest):
+        golden = MF.read_modelfile(
+            os.path.join(ARTIFACTS, "golden_tinynet.capp"))
+        pred = golden["logits_precise"].argmax(axis=1)
+        labels = golden["labels"].astype(np.int64)
+        assert (pred == labels).mean() >= 0.75
+
+    def test_imprecise_same_argmax_as_precise(self, manifest):
+        # The paper's headline inexact-computing result: classification
+        # accuracy under imprecise arithmetic is identical.
+        golden = MF.read_modelfile(
+            os.path.join(ARTIFACTS, "golden_tinynet.capp"))
+        np.testing.assert_array_equal(
+            golden["logits_precise"].argmax(axis=1),
+            golden["logits_imprecise"].argmax(axis=1))
+
+    def test_mm_modelfile_matches_reorder(self, manifest):
+        conv = MF.read_modelfile(os.path.join(ARTIFACTS, "tinynet.capp"))
+        mm = MF.read_modelfile(os.path.join(ARTIFACTS, "tinynet_mm.capp"))
+        w_mm = ref.weights_to_mapmajor(jnp.asarray(conv["conv2/w"]), aot.U)
+        np.testing.assert_allclose(np.asarray(w_mm), mm["conv2/w"],
+                                   rtol=0, atol=0)

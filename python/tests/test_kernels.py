@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas map-major conv / dense vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, strides, padding, vector widths and arithmetic
+modes — the core correctness signal of the compile path.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import conv as kconv
+from compile.kernels import dense as kdense
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def run_conv_both(rng, c, h, w, m, k, s, p, u, mode="precise"):
+    x = rand(rng, (c, h, w))
+    wt = rand(rng, (m, c, k, k))
+    b = rand(rng, (m,))
+    got_mm = kconv.conv2d_mapmajor_single(
+        ref.nchw_to_mapmajor(x, u), ref.weights_to_mapmajor(wt, u),
+        ref.bias_to_mapmajor(b, u), stride=s, pad=p, mode=mode)
+    got = ref.mapmajor_to_nchw(got_mm, m)
+    want = ref.conv2d_nchw(x, wt, b, stride=s, pad=p, mode=mode)
+    return got, want
+
+
+class TestConvKernel:
+    @hypothesis.given(
+        c=st.integers(1, 9), m=st.integers(1, 12),
+        hw=st.tuples(st.integers(5, 14), st.integers(5, 14)),
+        k=st.sampled_from([1, 3, 5]), s=st.integers(1, 3),
+        p=st.integers(0, 2), u=st.sampled_from([2, 4, 8]),
+    )
+    @hypothesis.settings(**SETTINGS)
+    def test_matches_reference(self, c, m, hw, k, s, p, u):
+        h, w = hw
+        hypothesis.assume(h + 2 * p >= k and w + 2 * p >= k)
+        rng = np.random.default_rng(hash((c, m, h, w, k, s, p, u)) % 2**32)
+        got, want = run_conv_both(rng, c, h, w, m, k, s, p, u)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("mode", ["relaxed", "imprecise"])
+    def test_inexact_modes_match_reference(self, mode):
+        rng = np.random.default_rng(3)
+        got, want = run_conv_both(rng, 6, 10, 10, 8, 3, 1, 1, 4, mode=mode)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_imprecise_close_to_precise(self):
+        # bf16 operand rounding: ~1e-2 relative error, never catastrophic.
+        rng = np.random.default_rng(4)
+        got_p, _ = run_conv_both(rng, 6, 10, 10, 8, 3, 1, 1, 4, "precise")
+        rng = np.random.default_rng(4)
+        got_i, _ = run_conv_both(rng, 6, 10, 10, 8, 3, 1, 1, 4, "imprecise")
+        np.testing.assert_allclose(got_i, got_p, rtol=0.08, atol=0.08)
+
+    def test_stride_4_large_kernel(self):
+        # AlexNet conv1 shape class: 11x11 stride 4.
+        rng = np.random.default_rng(5)
+        got, want = run_conv_both(rng, 3, 35, 35, 8, 11, 4, 0, 4)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_batched_matches_loop(self):
+        rng = np.random.default_rng(6)
+        u = 4
+        xs = [rand(rng, (5, 9, 9)) for _ in range(3)]
+        wt, b = rand(rng, (8, 5, 3, 3)), rand(rng, (8,))
+        wmm, bmm = ref.weights_to_mapmajor(wt, u), ref.bias_to_mapmajor(b, u)
+        batched = kconv.conv2d_mapmajor(
+            jnp.stack([ref.nchw_to_mapmajor(x, u) for x in xs]),
+            wmm, bmm, stride=1, pad=1)
+        for i, x in enumerate(xs):
+            single = kconv.conv2d_mapmajor_single(
+                ref.nchw_to_mapmajor(x, u), wmm, bmm, stride=1, pad=1)
+            np.testing.assert_allclose(batched[i], single, rtol=1e-5,
+                                       atol=1e-5)
+
+    def test_rejects_bad_shapes(self):
+        rng = np.random.default_rng(7)
+        x = ref.nchw_to_mapmajor(rand(rng, (4, 8, 8)), 4)
+        w = ref.weights_to_mapmajor(rand(rng, (8, 8, 3, 3)), 4)  # C mismatch
+        b = ref.bias_to_mapmajor(rand(rng, (8,)), 4)
+        with pytest.raises(ValueError):
+            kconv.conv2d_mapmajor_single(x, w, b)
+
+    def test_window_too_large_raises(self):
+        rng = np.random.default_rng(8)
+        x = ref.nchw_to_mapmajor(rand(rng, (4, 4, 4)), 4)
+        w = ref.weights_to_mapmajor(rand(rng, (4, 4, 5, 5)), 4)
+        b = ref.bias_to_mapmajor(rand(rng, (4,)), 4)
+        with pytest.raises(ValueError):
+            kconv.conv2d_mapmajor_single(x, w, b)
+
+    def test_vmem_footprint_positive(self):
+        n = kconv.vmem_footprint_bytes((1, 2, 16, 16, 4), (8, 4, 2, 3, 3, 4),
+                                       (1, 1, 14, 14, 4))
+        assert n == 4 * (2 * 16 * 16 * 4 + 4 * 2 * 3 * 3 * 4 + 14 * 14 * 4)
+
+
+class TestDenseKernel:
+    @hypothesis.given(i=st.integers(1, 300), o=st.integers(1, 260),
+                      bsz=st.integers(1, 3))
+    @hypothesis.settings(**SETTINGS)
+    def test_matches_reference(self, i, o, bsz):
+        rng = np.random.default_rng(hash((i, o, bsz)) % 2**32)
+        x, w, b = rand(rng, (bsz, i)), rand(rng, (o, i)), rand(rng, (o,))
+        got = kdense.dense(x, w, b)
+        want = jnp.stack([ref.dense_ref(x[j], w, b) for j in range(bsz)])
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_imprecise_mode(self):
+        rng = np.random.default_rng(9)
+        x, w, b = rand(rng, (2, 64)), rand(rng, (32, 64)), rand(rng, (32,))
+        got = kdense.dense(x, w, b, mode="imprecise")
+        want = jnp.stack([ref.dense_ref(x[j], w, b, mode="imprecise")
+                          for j in range(2)])
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_fc_weight_reorder_consumes_mm_flatten(self):
+        rng = np.random.default_rng(10)
+        c, h, w, u, o = 6, 4, 5, 4, 17
+        x = rand(rng, (c, h, w))
+        wt = rand(rng, (o, c * h * w))
+        b = rand(rng, (o,))
+        x_mm_flat = ref.nchw_to_mapmajor(x, u).reshape(1, -1)
+        w_mm = kdense.fc_weights_for_mapmajor(wt, c, h, w, u)
+        got = kdense.dense(x_mm_flat, w_mm, b)[0]
+        want = ref.dense_ref(x.reshape(-1), wt, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_bad_input_dim_raises(self):
+        with pytest.raises(ValueError):
+            kdense.dense(jnp.zeros((2, 10)), jnp.zeros((5, 11)),
+                         jnp.zeros((5,)))
+
+
+class TestInexactSemantics:
+    def test_flush_denormals(self):
+        x = jnp.asarray([1e-40, -1e-40, 1e-3, -0.0, 0.0, 1e38], jnp.float32)
+        y = ref.flush_denormals(x)
+        np.testing.assert_array_equal(
+            np.asarray(y), np.asarray([0.0, 0.0, 1e-3, 0.0, 0.0, 1e38],
+                                      np.float32))
+        # -0.0 canonicalised to +0.0 (RenderScript imprecise contract)
+        assert not np.signbit(np.asarray(y))[3]
+
+    def test_precise_preserves_denormals(self):
+        x = jnp.asarray([1e-40], jnp.float32)
+        assert float(ref.apply_mode_inputs(x, "precise")[0]) != 0.0
+
+    def test_unknown_mode_raises(self):
+        with pytest.raises(ValueError):
+            ref.apply_mode_inputs(jnp.zeros(1), "fast")

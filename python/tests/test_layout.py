@@ -1,0 +1,102 @@
+"""Layout transforms and the paper's index equations (3)-(5)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+
+class TestMapMajor:
+    @hypothesis.given(c=st.integers(1, 20), h=st.integers(1, 10),
+                      w=st.integers(1, 10), u=st.sampled_from([1, 2, 4, 8]))
+    @hypothesis.settings(**SETTINGS)
+    def test_roundtrip(self, c, h, w, u):
+        rng = np.random.default_rng(hash((c, h, w, u)) % 2**32)
+        x = jnp.asarray(rng.standard_normal((c, h, w)), jnp.float32)
+        back = ref.mapmajor_to_nchw(ref.nchw_to_mapmajor(x, u), c)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+    def test_matches_paper_order_u4(self):
+        # Eq. (2) of the paper: (0,0,0),(1,0,0),(2,0,0),(3,0,0),(0,0,1)...
+        c, h, w, u = 8, 2, 3, 4
+        x = jnp.arange(c * h * w, dtype=jnp.float32).reshape(c, h, w)
+        mm = np.asarray(ref.nchw_to_mapmajor(x, u)).reshape(-1)
+
+        def elem(layer, row, col):
+            return float(x[layer, row, col])
+
+        # First vector: channels 0..3 at (0,0); second: channels 0..3 at (0,1)
+        assert list(mm[:4]) == [elem(0, 0, 0), elem(1, 0, 0),
+                                elem(2, 0, 0), elem(3, 0, 0)]
+        assert list(mm[4:8]) == [elem(0, 0, 1), elem(1, 0, 1),
+                                 elem(2, 0, 1), elem(3, 0, 1)]
+        # Second stack (channels 4..7) starts after the full first stack.
+        assert mm[h * w * u] == elem(4, 0, 0)
+
+    def test_channel_padding_zeroes(self):
+        x = jnp.ones((3, 2, 2), jnp.float32)
+        mm = np.asarray(ref.nchw_to_mapmajor(x, 4))
+        assert mm.shape == (1, 2, 2, 4)
+        np.testing.assert_array_equal(mm[..., 3], 0.0)
+        np.testing.assert_array_equal(mm[..., :3], 1.0)
+
+    @hypothesis.given(m=st.integers(1, 12), c=st.integers(1, 9),
+                      k=st.sampled_from([1, 3, 5]),
+                      u=st.sampled_from([2, 4]))
+    @hypothesis.settings(**SETTINGS)
+    def test_weight_reorder_roundtrip(self, m, c, k, u):
+        rng = np.random.default_rng(hash((m, c, k, u)) % 2**32)
+        w = jnp.asarray(rng.standard_normal((m, c, k, k)), jnp.float32)
+        w_mm = np.asarray(ref.weights_to_mapmajor(w, u))
+        mb = -(-m // u)
+        cb = -(-c // u)
+        assert w_mm.shape == (mb, u, cb, k, k, u)
+        for mi in range(m):
+            for ci in range(c):
+                np.testing.assert_array_equal(
+                    w_mm[mi // u, mi % u, ci // u, :, :, ci % u],
+                    np.asarray(w[mi, ci]))
+
+    def test_bias_reorder(self):
+        b = jnp.arange(6, dtype=jnp.float32)
+        bm = np.asarray(ref.bias_to_mapmajor(b, 4))
+        assert bm.shape == (2, 4)
+        np.testing.assert_array_equal(bm.reshape(-1)[:6], np.arange(6))
+        np.testing.assert_array_equal(bm.reshape(-1)[6:], 0.0)
+
+
+class TestIndexEquations:
+    @hypothesis.given(u=st.sampled_from([1, 2, 4, 8]),
+                      wout=st.integers(1, 9), hout=st.integers(1, 9),
+                      stacks=st.integers(1, 4))
+    @hypothesis.settings(**SETTINGS)
+    def test_bijection(self, u, wout, hout, stacks):
+        """Eqs. (3)-(5) are a bijection thread-id <-> (w, h, m)."""
+        total = u * wout * hout * stacks
+        seen = set()
+        for x in range(total):
+            w, h, m = ref.thread_index_to_whm(x, u, wout, hout)
+            assert 0 <= w < wout and 0 <= h < hout and 0 <= m < stacks * u
+            assert ref.whm_to_thread_index(w, h, m, u, wout, hout) == x
+            seen.add((w, h, m))
+        assert len(seen) == total
+
+    def test_paper_example_second_thread(self):
+        # Section IV.B.1: "the second element of the output memory must
+        # contain (m=1, h=0, w=0)" after reordering.
+        w, h, m = ref.thread_index_to_whm(1, 4, 5, 5)
+        assert (m, h, w) == (1, 0, 0)
+
+    def test_mapmajor_linear_offset_agrees_with_layout(self):
+        """Eq. (3)-(5) indexing == actual memory order of the mm tensor."""
+        m_total, hout, wout, u = 8, 3, 4, 4
+        x = np.arange(m_total * hout * wout, dtype=np.float32).reshape(
+            m_total, hout, wout)
+        mm = np.asarray(ref.nchw_to_mapmajor(jnp.asarray(x), u)).reshape(-1)
+        for t in range(mm.size):
+            w, h, m = ref.thread_index_to_whm(t, u, wout, hout)
+            assert mm[t] == x[m, h, w]

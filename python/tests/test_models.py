@@ -1,0 +1,178 @@
+"""L2 correctness: map-major Pallas forward vs the NCHW oracle, shape
+inference for the paper's three CNNs, and per-layer mode assignment."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+U = 4
+
+
+def mm_batch(x_nchw, u=U):
+    return jnp.stack([ref.nchw_to_mapmajor(xi, u) for xi in x_nchw])
+
+
+class TestShapeInference:
+    @pytest.mark.parametrize("net,want_out,want_layers", [
+        ("tinynet", (8,), 5),
+        ("alexnet", (1000,), 8),
+        ("squeezenet", (1000,), 26),
+        ("googlenet", (1000,), 58),
+    ])
+    def test_output_shapes(self, net, want_out, want_layers):
+        spec_fn, ishape, ncls = M.NETS[net]
+        out, _ = M.infer_shapes(spec_fn(), ishape)
+        assert out == want_out
+        assert len(M.conv_dense_names(spec_fn())) == want_layers
+
+    def test_alexnet_intermediate_shapes(self):
+        # conv1 must see 3x227x227 -> 96x55x55; fc6 must see 9216 inputs.
+        _, by = M.infer_shapes(M.alexnet_spec(), (3, 227, 227))
+        assert by["conv1"] == (3, 227, 227)
+        assert by["conv2"] == (96, 27, 27)
+        assert by["fc6"] == (9216,)
+
+    def test_squeezenet_fire_widths(self):
+        _, by = M.infer_shapes(M.squeezenet_spec(), (3, 227, 227))
+        assert by["fire2/s1"][0] == 96
+        assert by["fire2/e1"][0] == 16      # squeeze output feeds expand
+        assert by["fire3/s1"][0] == 128     # concat(64, 64)
+        assert by["conv10"] == (512, 13, 13)
+
+    def test_googlenet_inception_widths(self):
+        _, by = M.infer_shapes(M.googlenet_spec(), (3, 224, 224))
+        assert by["inc3a/b1"] == (192, 28, 28)
+        assert by["inc3b/b1"][0] == 256     # concat(64,128,32,32)
+        assert by["inc4a/b1"] == (480, 14, 14)
+        assert by["inc5a/b1"] == (832, 7, 7)
+        assert by["fc"] == (1024,)
+
+    def test_all_widths_divisible_by_u(self):
+        """The synthesizer's alignment precondition (DESIGN.md): every
+        conv width in the supported nets divides u=4, so fork concat
+        boundaries align with map-major stacks."""
+        for net, (spec_fn, ishape, _) in M.NETS.items():
+            _, by = M.infer_shapes(spec_fn(), ishape)
+            lookup = M._layer_lookup(spec_fn()) if hasattr(M, "_layer_lookup") \
+                else None
+            for lay in M.expand(spec_fn()):
+                if lay["op"] == "conv":
+                    assert lay["m"] % U == 0, (net, lay["name"])
+                elif lay["op"] == "fork":
+                    for br in lay["branches"]:
+                        for l in br:
+                            if l["op"] == "conv":
+                                assert l["m"] % U == 0, (net, l["name"])
+
+
+class TestForwardAgreement:
+    def _agree(self, spec, ishape, batch=2, mode="precise", seed=0,
+               rtol=2e-4, atol=2e-4):
+        params = M.init_params(spec, ishape, jax.random.PRNGKey(seed))
+        pmm = M.reorder_params(spec, ishape, params, U)
+        apply = M.build_apply(spec, ishape, U)
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((batch, *ishape)), jnp.float32)
+        got = apply(pmm, mm_batch(x), mode)
+        want = M.forward_nchw_ref(spec, params, x, mode)
+        if np.asarray(got).ndim == 5:  # spec ends mid-network: still mm
+            got = jnp.stack([ref.mapmajor_to_nchw(g, want.shape[1])
+                             for g in got])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=rtol, atol=atol)
+
+    def test_tinynet(self):
+        self._agree(M.tinynet_spec(), (3, 16, 16))
+
+    def test_tinynet_imprecise(self):
+        self._agree(M.tinynet_spec(), (3, 16, 16), mode="imprecise",
+                    rtol=1e-3, atol=1e-3)
+
+    def test_fire_module(self):
+        # SqueezeNet building block at reduced spatial size.
+        spec = [M.conv_l("c1", 8, 3, 1, 1),
+                {"op": "fire", "name": "fire2", "s1": 4, "e1": 8, "e3": 8}]
+        self._agree(spec, (3, 12, 12))
+
+    def test_inception_module(self):
+        spec = [{"op": "inception", "name": "inc", "b1": 8, "b3r": 4,
+                 "b3": 8, "b5r": 4, "b5": 8, "pp": 4}]
+        self._agree(spec, (8, 10, 10))
+
+    def test_lrn_layer(self):
+        spec = [M.conv_l("c1", 8, 3, 1, 1),
+                {"op": "lrn", "size": 5, "alpha": 1e-4, "beta": 0.75}]
+        self._agree(spec, (3, 10, 10))
+
+    def test_avgpool_gap(self):
+        spec = [M.conv_l("c1", 8, 3, 1, 1),
+                {"op": "avgpool", "k": 2, "s": 2, "p": 0},
+                {"op": "gap"}]
+        self._agree(spec, (3, 12, 12))
+
+    def test_softmax_head(self):
+        spec = M.tinynet_spec() + [{"op": "softmax"}]
+        self._agree(spec, (3, 16, 16))
+
+    @pytest.mark.slow
+    def test_squeezenet_small_input(self):
+        # Full fire stack at 63x63 input (keeps runtime manageable).
+        self._agree(M.squeezenet_spec(), (3, 63, 63), batch=1, atol=5e-4,
+                    rtol=5e-4)
+
+
+class TestPerLayerModes:
+    def test_mode_dict_applies_per_layer(self):
+        spec = M.tinynet_spec()
+        ishape = (3, 16, 16)
+        params = M.init_params(spec, ishape, jax.random.PRNGKey(1))
+        pmm = M.reorder_params(spec, ishape, params, U)
+        apply = M.build_apply(spec, ishape, U)
+        rng = np.random.default_rng(1)
+        x = mm_batch(jnp.asarray(rng.standard_normal((1, *ishape)),
+                                 jnp.float32))
+        all_precise = apply(pmm, x)
+        all_imprecise = apply(pmm, x, "imprecise")
+        only_conv1 = apply(pmm, x, {"conv1": "imprecise"})
+        # conv1-imprecise differs from precise but less than all-imprecise.
+        d1 = float(jnp.abs(only_conv1 - all_precise).max())
+        da = float(jnp.abs(all_imprecise - all_precise).max())
+        assert d1 > 0.0
+        assert da >= d1
+
+    def test_unknown_layer_names_ignored(self):
+        spec = M.tinynet_spec()
+        ishape = (3, 16, 16)
+        params = M.init_params(spec, ishape, jax.random.PRNGKey(2))
+        pmm = M.reorder_params(spec, ishape, params, U)
+        apply = M.build_apply(spec, ishape, U)
+        x = mm_batch(jnp.zeros((1, *ishape), jnp.float32))
+        a = apply(pmm, x)
+        b = apply(pmm, x, {"nonexistent": "imprecise"})
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestParamReorder:
+    def test_dense_after_flatten_reordered_once(self):
+        spec = M.tinynet_spec()
+        params = M.init_params(spec, (3, 16, 16), jax.random.PRNGKey(3))
+        pmm = M.reorder_params(spec, (3, 16, 16), params, U)
+        # fc4 consumes the flatten; its input dim stays 512 (32 ch already
+        # a multiple of u, no padding columns added).
+        assert pmm["fc4"][0].shape == (64, 512)
+        # fc5 is dense-after-dense: untouched.
+        np.testing.assert_array_equal(np.asarray(pmm["fc5"][0]),
+                                      np.asarray(params["fc5"][0]))
+
+    def test_conv_weights_mm_shape(self):
+        spec = M.tinynet_spec()
+        params = M.init_params(spec, (3, 16, 16), jax.random.PRNGKey(4))
+        pmm = M.reorder_params(spec, (3, 16, 16), params, U)
+        assert pmm["conv1"][0].shape == (4, 4, 1, 3, 3, 4)
+        assert pmm["conv2"][0].shape == (8, 4, 4, 3, 3, 4)

@@ -1,0 +1,100 @@
+//! Bench: the engine's hot path (map-major vectorised convolution) plus
+//! the PJRT artifact path, across representative layer geometries and
+//! full networks. This is the profile target of the performance pass
+//! (EXPERIMENTS.md section "Perf").
+
+use cappuccino::bench::{bench, ms, BenchConfig, Table};
+use cappuccino::engine::{conv_mm, ArithMode, EngineParams, ExecConfig, MapTensor, ModeAssignment};
+use cappuccino::layout;
+use cappuccino::model::zoo;
+use cappuccino::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut rng = Rng::new(0x401);
+
+    // -- Kernel-level: conv_mm across geometry classes -------------------
+    let mut table = Table::new(&["kernel", "geometry", "time(ms)", "GFLOP/s"]);
+    let cases: &[(&str, usize, usize, usize, usize, usize, usize)] = &[
+        // (name, c, h, m, k, s, p)
+        ("1x1 channel-heavy", 128, 28, 128, 1, 1, 0),
+        ("3x3 mid", 64, 28, 64, 3, 1, 1),
+        ("5x5 wide", 48, 27, 64, 5, 1, 2),
+        ("11x11 stride-4", 8, 55, 32, 11, 4, 0),
+        ("3x3 deep", 256, 13, 256, 3, 1, 1),
+    ];
+    for &(name, c, h, m, k, s, p) in cases {
+        let w = h;
+        let input = rng.normal_vec(c * h * w);
+        let weights = rng.normal_vec(m * c * k * k);
+        let bias = rng.normal_vec(m);
+        let u = 4;
+        let mm_in = MapTensor::from_nchw(&input, c, h, w, u);
+        let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+        let b_mm = layout::bias_to_mapmajor(&bias, u);
+        let ho = (h + 2 * p - k) / s + 1;
+        let flops = 2.0 * (m * c * k * k * ho * ho) as f64;
+        let meas = bench(name, cfg, || {
+            std::hint::black_box(conv_mm(
+                &mm_in, &w_mm, &b_mm, m, k, s, p, true, ArithMode::Imprecise, 1,
+            ));
+        });
+        table.row(&[
+            "conv_mm".into(),
+            name.into(),
+            ms(meas.mean_ms),
+            format!("{:.2}", flops / (meas.mean_ms / 1e3) / 1e9),
+        ]);
+    }
+    println!("# Engine hot path — conv_mm kernel\n");
+    table.print();
+
+    // -- Network-level: native engine end-to-end -------------------------
+    let mut net_table = Table::new(&["network", "path", "time(ms)"]);
+    for net in [zoo::tinynet(), zoo::squeezenet()] {
+        let params = EngineParams::random(&net, 3, 4).unwrap();
+        let input = rng.normal_vec(net.input.elements());
+        let meas = bench(net.name.clone(), cfg, || {
+            std::hint::black_box(
+                cappuccino::engine::run_mapmajor(
+                    &net,
+                    &params,
+                    &input,
+                    &ModeAssignment::uniform(ArithMode::Imprecise),
+                    ExecConfig { threads: 1 },
+                )
+                .unwrap(),
+            );
+        });
+        net_table.row(&[net.name.clone(), "engine-mm".into(), ms(meas.mean_ms)]);
+    }
+
+    // -- PJRT path (needs artifacts) --------------------------------------
+    let dir = cappuccino::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let manifest = cappuccino::runtime::Manifest::load(&dir).unwrap();
+        let rt = cappuccino::runtime::Runtime::new().unwrap();
+        for (net, mode, batch) in
+            [("tinynet", "precise", 8usize), ("tinynet", "imprecise", 8), ("squeezenet", "imprecise", 1)]
+        {
+            let spec = manifest.find(net, mode, batch).unwrap();
+            let model = rt
+                .load(&manifest, spec, &cappuccino::runtime::ParamSource::Random(1))
+                .unwrap();
+            let x = rng.normal_vec(spec.input_len());
+            let meas = bench(format!("pjrt-{net}-{mode}"), cfg, || {
+                std::hint::black_box(model.infer(&x).unwrap());
+            });
+            net_table.row(&[
+                format!("{net} (b{batch})"),
+                format!("pjrt-{mode}"),
+                ms(meas.mean_ms),
+            ]);
+        }
+    } else {
+        eprintln!("(artifacts not built: skipping PJRT rows)");
+    }
+    println!("\n# End-to-end inference\n");
+    net_table.print();
+    println!("\nengine_hotpath bench OK");
+}

@@ -1,0 +1,88 @@
+//! Bench: dynamic-batching policy sweep under different arrival
+//! processes — the serving-layer ablation (batching policy is the L3
+//! knob the perf section tunes).
+//!
+//! Sweeps `max_batch` x `max_delay` under burst / Poisson / bursty
+//! arrivals on the native-engine backend (deterministic, no artifacts
+//! required) and reports throughput, mean batch size and latency.
+
+use std::time::Duration;
+
+use cappuccino::bench::Table;
+use cappuccino::engine::{ArithMode, EngineParams, ModeAssignment};
+use cappuccino::model::zoo;
+use cappuccino::serve::{ArrivalProcess, BatchPolicy, EngineBackend, Server};
+use cappuccino::util::rng::Rng;
+
+fn run_scenario(
+    arrivals: ArrivalProcess,
+    max_batch: usize,
+    max_delay: Duration,
+    n: usize,
+) -> (f64, f64, f64) {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 7, 4).unwrap();
+    let backend = EngineBackend::new(
+        net,
+        params,
+        ModeAssignment::uniform(ArithMode::Imprecise),
+        1,
+        max_batch,
+    );
+    let policy = BatchPolicy { max_batch, max_delay, queue_depth: 4096 };
+    let server = Server::start(vec![("m".into(), backend.factory(), policy)]).unwrap();
+
+    let mut rng = Rng::new(11);
+    let images: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(768)).collect();
+    let delays = arrivals.delays(n, 5);
+
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for (img, delay) in images.into_iter().zip(delays) {
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        rxs.push(server.router().submit("m", img).unwrap());
+    }
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    let p50 = m.latency.quantile(0.5).as_secs_f64() * 1e3;
+    let out = (n as f64 / wall, m.counters.mean_batch_size(), p50);
+    server.shutdown();
+    out
+}
+
+fn main() {
+    let fast = std::env::var("CAPPUCCINO_BENCH_FAST").as_deref() == Ok("1");
+    let n = if fast { 64 } else { 256 };
+    let mut table = Table::new(&[
+        "arrivals", "max_batch", "max_delay", "throughput(img/s)", "mean batch", "p50(ms)",
+    ]);
+
+    let arrival_kinds = [
+        ArrivalProcess::Burst,
+        ArrivalProcess::Poisson { rate_per_s: 2000.0 },
+        ArrivalProcess::Bursty { size: 8, gap: Duration::from_millis(4) },
+    ];
+    for arrivals in arrival_kinds {
+        for (max_batch, delay_ms) in [(1usize, 0u64), (4, 1), (8, 2), (8, 0)] {
+            let (rps, mean_batch, p50) =
+                run_scenario(arrivals, max_batch, Duration::from_millis(delay_ms), n);
+            table.row(&[
+                arrivals.label(),
+                max_batch.to_string(),
+                format!("{delay_ms}ms"),
+                format!("{rps:.0}"),
+                format!("{mean_batch:.2}"),
+                format!("{p50:.2}"),
+            ]);
+        }
+    }
+
+    println!("# Serving — batching policy sweep (native engine, 1 worker)\n");
+    table.print();
+    println!("\nserving bench OK");
+}

@@ -1,0 +1,56 @@
+//! Bench: regenerate paper Table I (execution time + speedup for three
+//! CNNs on three simulated devices under three processing modes).
+//!
+//! Protocol matches section V.A: 100 repetitions per cell, min and max
+//! omitted, mean of the remaining 98 reported. Asserts the shape
+//! invariants the paper claims (baseline >> parallel >= imprecise,
+//! speedups within the coarse band) so regressions fail the bench.
+
+use cappuccino::bench::Table;
+use cappuccino::model::zoo;
+use cappuccino::soc::{self, ProcessingMode};
+
+fn main() {
+    let nets = ["alexnet", "squeezenet", "googlenet"];
+    let mut table = Table::new(&[
+        "net", "device", "baseline(ms)", "parallel(ms)", "imprecise(ms)", "speedup",
+    ]);
+    let mut all_ok = true;
+    let (mut min_speedup, mut max_speedup) = (f64::INFINITY, 0.0f64);
+
+    for net_name in nets {
+        let net = zoo::by_name(net_name).unwrap();
+        for device in soc::catalog() {
+            let base =
+                soc::measure_trimmed(&net, &device, ProcessingMode::JavaBaseline, 100, 0.01, 1);
+            let par = soc::measure_trimmed(&net, &device, ProcessingMode::Parallel, 100, 0.01, 2);
+            let imp = soc::measure_trimmed(&net, &device, ProcessingMode::Imprecise, 100, 0.01, 3);
+            let speedup = base / imp;
+            min_speedup = min_speedup.min(speedup);
+            max_speedup = max_speedup.max(speedup);
+            // Paper shape invariants.
+            if !(base > par && par > imp) {
+                eprintln!("ORDER VIOLATION: {net_name}/{}", device.name);
+                all_ok = false;
+            }
+            table.row(&[
+                net_name.into(),
+                device.name.into(),
+                format!("{base:.2}"),
+                format!("{par:.2}"),
+                format!("{imp:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+        }
+    }
+
+    println!("# Table I — execution time on simulated devices (trimmed mean of 100)\n");
+    table.print();
+    println!("\nspeedup band: {min_speedup:.1}x .. {max_speedup:.1}x (paper: 31.95x .. 272.03x)");
+    assert!(all_ok, "mode ordering violated");
+    assert!(
+        min_speedup > 10.0 && max_speedup < 500.0,
+        "speedup band out of range"
+    );
+    println!("table1 bench OK");
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate paper Table II (energy consumption, SqueezeNet on
+//! the Nexus 5 — baseline vs Cappuccino, 2 x 1000 runs each).
+//!
+//! The paper reports 26.39 J (baseline) vs 3.38 J (Cappuccino) = 7.81x.
+//! The bench prints the same row structure (first 1000 / second 1000 /
+//! average / ratio) and asserts the coarse band.
+
+use cappuccino::bench::Table;
+use cappuccino::model::zoo;
+use cappuccino::soc::{self, energy_table2};
+
+fn main() {
+    let net = zoo::squeezenet();
+    let device = soc::devices::nexus5();
+    let t = energy_table2(&net, &device, 11);
+
+    let mut table = Table::new(&[
+        "program", "first-1000 (J)", "second-1000 (J)", "average (J)",
+    ]);
+    table.row(&[
+        "baseline (1-thread)".into(),
+        format!("{:.2}", t.baseline_first),
+        format!("{:.2}", t.baseline_second),
+        format!("{:.2}", t.baseline_avg()),
+    ]);
+    table.row(&[
+        "cappuccino (parallel)".into(),
+        format!("{:.2}", t.cappuccino_first),
+        format!("{:.2}", t.cappuccino_second),
+        format!("{:.2}", t.cappuccino_avg()),
+    ]);
+
+    println!("# Table II — energy, SqueezeNet on Nexus 5 (2 x 1000 runs)\n");
+    table.print();
+    println!(
+        "\nratio: {:.2}x   (paper: baseline 26.39 J, cappuccino 3.38 J, ratio 7.81x)",
+        t.ratio()
+    );
+
+    // Repeatability (the reason the paper measures twice).
+    let rep_base = (t.baseline_first / t.baseline_second - 1.0).abs();
+    let rep_capp = (t.cappuccino_first / t.cappuccino_second - 1.0).abs();
+    println!("repeatability: baseline {:.3}%, cappuccino {:.3}%", rep_base * 100.0, rep_capp * 100.0);
+
+    assert!((3.0..20.0).contains(&t.ratio()), "energy ratio {:.2} out of band", t.ratio());
+    assert!(rep_base < 0.01 && rep_capp < 0.01, "blocks not repeatable");
+    println!("table2 bench OK");
+}

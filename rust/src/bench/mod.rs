@@ -1,0 +1,176 @@
+//! In-repo micro-benchmark harness (criterion is not in the vendored
+//! crate set). Used by every `rust/benches/*.rs` target.
+//!
+//! Protocol per benchmark: warm-up iterations, then `n` timed samples,
+//! reported with the paper's trimmed-mean protocol (drop min/max —
+//! section V.A) plus median and spread. Results can be printed as an
+//! aligned table, which the Table I–III benches use to emit the same
+//! rows the paper reports.
+
+use std::time::Instant;
+
+use crate::metrics::trimmed_mean;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Trimmed mean, milliseconds.
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub samples: usize,
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 3, samples: 10 }
+    }
+}
+
+impl BenchConfig {
+    /// Honour `CAPPUCCINO_BENCH_FAST=1` for CI-speed runs.
+    pub fn from_env() -> Self {
+        if std::env::var("CAPPUCCINO_BENCH_FAST").as_deref() == Ok("1") {
+            BenchConfig { warmup: 1, samples: 3 }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Time `f` under the protocol; `f` must perform one full operation.
+pub fn bench(name: impl Into<String>, cfg: BenchConfig, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut samples_ms = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mut sorted = samples_ms.clone();
+    sorted.sort_by(f64::total_cmp);
+    Measurement {
+        name: name.into(),
+        mean_ms: trimmed_mean(&samples_ms),
+        median_ms: sorted[sorted.len() / 2],
+        min_ms: sorted[0],
+        max_ms: *sorted.last().unwrap(),
+        samples: samples_ms.len(),
+    }
+}
+
+/// Simple aligned-table printer for bench reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// Format helper: `12.34` / `1234` style millisecond cells.
+pub fn ms(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{v:.0}")
+    } else if v >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Format helper: `12.3x` speedup cells.
+pub fn speedup(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_samples() {
+        let m = bench("noop", BenchConfig { warmup: 1, samples: 5 }, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.samples, 5);
+        assert!(m.min_ms <= m.median_ms && m.median_ms <= m.max_ms);
+    }
+
+    #[test]
+    fn bench_measures_sleep() {
+        let m = bench("sleep", BenchConfig { warmup: 0, samples: 3 }, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(m.mean_ms >= 1.8, "mean {}", m.mean_ms);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["name", "ms"]);
+        t.row(&["alexnet".into(), "947.15".into()]);
+        t.row(&["x".into(), "1.0".into()]);
+        let s = t.to_string();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(ms(1234.6), "1235");
+        assert_eq!(ms(12.345), "12.35");
+        assert_eq!(ms(0.5), "0.5000");
+        assert_eq!(speedup(40.47), "40.47x");
+    }
+}

@@ -1,0 +1,456 @@
+//! `.cappnet` — the network description file format (paper Fig. 3,
+//! input #1).
+//!
+//! A line-oriented text format, one layer per line, `#` comments. The
+//! composites `fire` and `inception` expand exactly as in the Python
+//! spec, so a `.cappnet` file round-trips through the same IR the AOT
+//! manifest describes.
+//!
+//! ```text
+//! net tinynet
+//! input 3 16 16
+//! classes 8
+//!
+//! conv conv1 m=16 k=3 s=1 p=1
+//! maxpool k=2 s=2
+//! conv conv2 m=32 k=3 s=1 p=1
+//! maxpool k=2 s=2
+//! conv conv3 m=32 k=3 s=1 p=1
+//! flatten
+//! dense fc4 o=64 relu=1
+//! dense fc5 o=8 relu=0
+//! ```
+//!
+//! Composites:
+//!
+//! ```text
+//! fire fire2 s1=16 e1=64 e3=64
+//! inception inc3a b1=64 b3r=96 b3=128 b5r=16 b5=32 pp=32
+//! lrn size=5 alpha=0.0001 beta=0.75
+//! ```
+
+use std::collections::HashMap;
+
+use crate::model::{Layer, LayerOp, Network, TensorShape};
+use crate::util::error::{Error, Result};
+
+/// Parse a `.cappnet` document into a [`Network`].
+pub fn parse_cappnet(text: &str) -> Result<Network> {
+    let mut name = None;
+    let mut input = None;
+    let mut classes = None;
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut auto_idx = 0usize;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let head = toks.next().unwrap();
+        let err = |msg: String| Error::parse("cappnet", format!("line {}: {msg}", lineno + 1));
+
+        match head {
+            "net" => {
+                name = Some(
+                    toks.next()
+                        .ok_or_else(|| err("net needs a name".into()))?
+                        .to_string(),
+                );
+            }
+            "input" => {
+                let dims: Vec<usize> = toks
+                    .map(|t| t.parse().map_err(|_| err(format!("bad input dim {t:?}"))))
+                    .collect::<Result<_>>()?;
+                if dims.len() != 3 {
+                    return Err(err(format!("input needs 3 dims, got {}", dims.len())));
+                }
+                input = Some(TensorShape::maps(dims[0], dims[1], dims[2]));
+            }
+            "classes" => {
+                let c = toks
+                    .next()
+                    .ok_or_else(|| err("classes needs a count".into()))?;
+                classes = Some(c.parse().map_err(|_| err(format!("bad classes {c:?}")))?);
+            }
+            _ => {
+                let parsed = parse_layer_line(head, toks, lineno + 1, &mut auto_idx)?;
+                layers.extend(parsed);
+            }
+        }
+    }
+
+    let net = Network {
+        name: name.ok_or_else(|| Error::parse("cappnet", "missing `net` line"))?,
+        input: input.ok_or_else(|| Error::parse("cappnet", "missing `input` line"))?,
+        classes: classes.ok_or_else(|| Error::parse("cappnet", "missing `classes` line"))?,
+        layers,
+    };
+    // Validate by running shape inference once.
+    let info = crate::model::shapes::infer(&net)?;
+    if info.output != (TensorShape::Flat { len: net.classes }) {
+        return Err(Error::parse(
+            "cappnet",
+            format!(
+                "network output {:?} does not match classes {}",
+                info.output, net.classes
+            ),
+        ));
+    }
+    Ok(net)
+}
+
+fn parse_layer_line<'a>(
+    head: &str,
+    toks: impl Iterator<Item = &'a str>,
+    lineno: usize,
+    auto_idx: &mut usize,
+) -> Result<Vec<Layer>> {
+    let err = |msg: String| Error::parse("cappnet", format!("line {lineno}: {msg}"));
+    let mut name: Option<String> = None;
+    let mut kv: HashMap<&str, &str> = HashMap::new();
+    for tok in toks {
+        match tok.split_once('=') {
+            Some((k, v)) => {
+                kv.insert(k, v);
+            }
+            None if name.is_none() => name = Some(tok.to_string()),
+            None => return Err(err(format!("unexpected token {tok:?}"))),
+        }
+    }
+    let get_usize = |kv: &HashMap<&str, &str>, k: &str, default: Option<usize>| -> Result<usize> {
+        match kv.get(k) {
+            Some(v) => v.parse().map_err(|_| err(format!("bad {k}={v}"))),
+            None => default.ok_or_else(|| err(format!("missing {k}="))),
+        }
+    };
+    let get_f32 = |kv: &HashMap<&str, &str>, k: &str, default: f32| -> Result<f32> {
+        match kv.get(k) {
+            Some(v) => v.parse().map_err(|_| err(format!("bad {k}={v}"))),
+            None => Ok(default),
+        }
+    };
+    *auto_idx += 1;
+    let auto = |prefix: &str, idx: usize| format!("{prefix}{idx}");
+
+    let layers = match head {
+        "conv" => {
+            let n = name.ok_or_else(|| err("conv needs a name".into()))?;
+            vec![Layer::new(
+                n,
+                LayerOp::Conv {
+                    m: get_usize(&kv, "m", None)?,
+                    k: get_usize(&kv, "k", None)?,
+                    s: get_usize(&kv, "s", Some(1))?,
+                    p: get_usize(&kv, "p", Some(0))?,
+                    relu: get_usize(&kv, "relu", Some(1))? != 0,
+                },
+            )]
+        }
+        "maxpool" | "avgpool" => {
+            let k = get_usize(&kv, "k", None)?;
+            let s = get_usize(&kv, "s", Some(1))?;
+            let p = get_usize(&kv, "p", Some(0))?;
+            let n = name.unwrap_or_else(|| auto(head, *auto_idx));
+            let op = if head == "maxpool" {
+                LayerOp::MaxPool { k, s, p }
+            } else {
+                LayerOp::AvgPool { k, s, p }
+            };
+            vec![Layer::new(n, op)]
+        }
+        "lrn" => vec![Layer::new(
+            name.unwrap_or_else(|| auto("lrn", *auto_idx)),
+            LayerOp::Lrn {
+                size: get_usize(&kv, "size", Some(5))?,
+                alpha: get_f32(&kv, "alpha", 1e-4)?,
+                beta: get_f32(&kv, "beta", 0.75)?,
+            },
+        )],
+        "fire" => {
+            let n = name.ok_or_else(|| err("fire needs a name".into()))?;
+            let s1 = get_usize(&kv, "s1", None)?;
+            let e1 = get_usize(&kv, "e1", None)?;
+            let e3 = get_usize(&kv, "e3", None)?;
+            vec![
+                Layer::new(
+                    format!("{n}/s1"),
+                    LayerOp::Conv { m: s1, k: 1, s: 1, p: 0, relu: true },
+                ),
+                Layer::new(
+                    n.clone(),
+                    LayerOp::Fork {
+                        branches: vec![
+                            vec![Layer::new(
+                                format!("{n}/e1"),
+                                LayerOp::Conv { m: e1, k: 1, s: 1, p: 0, relu: true },
+                            )],
+                            vec![Layer::new(
+                                format!("{n}/e3"),
+                                LayerOp::Conv { m: e3, k: 3, s: 1, p: 1, relu: true },
+                            )],
+                        ],
+                    },
+                ),
+            ]
+        }
+        "inception" => {
+            let n = name.ok_or_else(|| err("inception needs a name".into()))?;
+            let g = |k: &str| get_usize(&kv, k, None);
+            let (b1, b3r, b3, b5r, b5, pp) =
+                (g("b1")?, g("b3r")?, g("b3")?, g("b5r")?, g("b5")?, g("pp")?);
+            let c = |nm: String, m: usize, k: usize, p: usize| {
+                Layer::new(nm, LayerOp::Conv { m, k, s: 1, p, relu: true })
+            };
+            vec![Layer::new(
+                n.clone(),
+                LayerOp::Fork {
+                    branches: vec![
+                        vec![c(format!("{n}/b1"), b1, 1, 0)],
+                        vec![c(format!("{n}/b3r"), b3r, 1, 0), c(format!("{n}/b3"), b3, 3, 1)],
+                        vec![c(format!("{n}/b5r"), b5r, 1, 0), c(format!("{n}/b5"), b5, 5, 2)],
+                        vec![
+                            Layer::new(format!("{n}/pool"), LayerOp::MaxPool { k: 3, s: 1, p: 1 }),
+                            c(format!("{n}/pp"), pp, 1, 0),
+                        ],
+                    ],
+                },
+            )]
+        }
+        "flatten" => vec![Layer::new(
+            name.unwrap_or_else(|| auto("flatten", *auto_idx)),
+            LayerOp::Flatten,
+        )],
+        "gap" => vec![Layer::new(
+            name.unwrap_or_else(|| auto("gap", *auto_idx)),
+            LayerOp::Gap,
+        )],
+        "dense" => {
+            let n = name.ok_or_else(|| err("dense needs a name".into()))?;
+            vec![Layer::new(
+                n,
+                LayerOp::Dense {
+                    o: get_usize(&kv, "o", None)?,
+                    relu: get_usize(&kv, "relu", Some(0))? != 0,
+                },
+            )]
+        }
+        "softmax" => vec![Layer::new(
+            name.unwrap_or_else(|| auto("softmax", *auto_idx)),
+            LayerOp::Softmax,
+        )],
+        other => return Err(err(format!("unknown layer kind {other:?}"))),
+    };
+    Ok(layers)
+}
+
+/// Serialise a network back to `.cappnet` text (fire/inception stay
+/// expanded as fork blocks are not representable — networks built from
+/// the zoo re-serialise composites naturally since expansion is 1:1;
+/// this writer emits primitive lines plus explicit fork syntax is not
+/// needed because all supported forks match the fire/inception shapes).
+pub fn write_cappnet(net: &Network) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("net {}\n", net.name));
+    if let TensorShape::Maps { c, h, w } = net.input {
+        out.push_str(&format!("input {c} {h} {w}\n"));
+    }
+    out.push_str(&format!("classes {}\n\n", net.classes));
+    write_layers(&net.layers, &mut out);
+    out
+}
+
+fn write_layers(layers: &[Layer], out: &mut String) {
+    let conv_m = |l: &Layer| match l.op {
+        LayerOp::Conv { m, .. } => Some(m),
+        _ => None,
+    };
+    let mut i = 0;
+    while i < layers.len() {
+        let layer = &layers[i];
+        // fire: `conv X/s1` immediately followed by a 2-branch fork `X`.
+        if let (LayerOp::Conv { m: s1, .. }, Some(next)) = (&layer.op, layers.get(i + 1)) {
+            if let LayerOp::Fork { branches } = &next.op {
+                if branches.len() == 2 && layer.name == format!("{}/s1", next.name) {
+                    if let (Some(e1), Some(e3)) = (
+                        branches[0].first().and_then(conv_m),
+                        branches[1].first().and_then(conv_m),
+                    ) {
+                        out.push_str(&format!(
+                            "fire {} s1={s1} e1={e1} e3={e3}\n",
+                            next.name
+                        ));
+                        i += 2;
+                        continue;
+                    }
+                }
+            }
+        }
+        match &layer.op {
+            LayerOp::Conv { m, k, s, p, relu } => {
+                out.push_str(&format!(
+                    "conv {} m={m} k={k} s={s} p={p} relu={}\n",
+                    layer.name, *relu as u8
+                ));
+            }
+            LayerOp::MaxPool { k, s, p } => {
+                out.push_str(&format!("maxpool k={k} s={s} p={p}\n"));
+            }
+            LayerOp::AvgPool { k, s, p } => {
+                out.push_str(&format!("avgpool k={k} s={s} p={p}\n"));
+            }
+            LayerOp::Lrn { size, alpha, beta } => {
+                out.push_str(&format!("lrn size={size} alpha={alpha} beta={beta}\n"));
+            }
+            LayerOp::Fork { branches } if branches.len() == 4 => {
+                let vals = (
+                    branches[0].first().and_then(conv_m),
+                    branches[1].first().and_then(conv_m),
+                    branches[1].get(1).and_then(conv_m),
+                    branches[2].first().and_then(conv_m),
+                    branches[2].get(1).and_then(conv_m),
+                    branches[3].get(1).and_then(conv_m),
+                );
+                if let (Some(b1), Some(b3r), Some(b3), Some(b5r), Some(b5), Some(pp)) = vals {
+                    out.push_str(&format!(
+                        "inception {} b1={b1} b3r={b3r} b3={b3} b5r={b5r} b5={b5} pp={pp}\n",
+                        layer.name
+                    ));
+                } else {
+                    out.push_str(&format!("# unrepresentable fork {}\n", layer.name));
+                }
+            }
+            LayerOp::Fork { .. } => {
+                out.push_str(&format!("# unrepresentable fork {}\n", layer.name));
+            }
+            LayerOp::Flatten => out.push_str("flatten\n"),
+            LayerOp::Gap => out.push_str("gap\n"),
+            LayerOp::Dense { o, relu } => {
+                out.push_str(&format!("dense {} o={o} relu={}\n", layer.name, *relu as u8));
+            }
+            LayerOp::Softmax => out.push_str("softmax\n"),
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    const TINY: &str = "
+# TinyNet description
+net tinynet
+input 3 16 16
+classes 8
+
+conv conv1 m=16 k=3 s=1 p=1
+maxpool k=2 s=2
+conv conv2 m=32 k=3 s=1 p=1
+maxpool k=2 s=2
+conv conv3 m=32 k=3 s=1 p=1
+flatten
+dense fc4 o=64 relu=1
+dense fc5 o=8 relu=0
+";
+
+    #[test]
+    fn parses_tinynet_equal_to_zoo() {
+        let net = parse_cappnet(TINY).unwrap();
+        let zoo_net = zoo::tinynet();
+        assert_eq!(net.input, zoo_net.input);
+        assert_eq!(net.classes, zoo_net.classes);
+        assert_eq!(net.param_layer_names(), zoo_net.param_layer_names());
+    }
+
+    #[test]
+    fn fire_expansion_matches_zoo() {
+        let text = "
+net mini
+input 3 15 15
+classes 8
+conv conv1 m=8 k=3 s=2 p=0
+fire fire2 s1=4 e1=4 e3=4
+gap
+";
+        let net = parse_cappnet(text).unwrap();
+        assert_eq!(
+            net.param_layer_names(),
+            vec!["conv1", "fire2/s1", "fire2/e1", "fire2/e3"]
+        );
+    }
+
+    #[test]
+    fn inception_expansion() {
+        let text = "
+net mini
+input 8 12 12
+classes 16
+inception inc b1=4 b3r=4 b3=4 b5r=4 b5=4 pp=4
+gap
+";
+        let net = parse_cappnet(text).unwrap();
+        assert_eq!(net.param_layer_names().len(), 6);
+        let info = crate::model::shapes::infer(&net).unwrap();
+        assert_eq!(info.output, TensorShape::Flat { len: 16 });
+    }
+
+    #[test]
+    fn missing_header_rejected() {
+        assert!(parse_cappnet("conv c m=4 k=3").is_err());
+        assert!(parse_cappnet("net x\ninput 3 8 8\n").is_err()); // no classes
+    }
+
+    #[test]
+    fn wrong_class_count_rejected() {
+        let text = "
+net bad
+input 3 16 16
+classes 10
+conv conv1 m=8 k=3 s=1 p=1
+gap
+";
+        // gap yields 8 outputs, classes says 10.
+        assert!(parse_cappnet(text).is_err());
+    }
+
+    #[test]
+    fn unknown_layer_rejected() {
+        let text = "net x\ninput 3 8 8\nclasses 3\nwaffle w1 k=3\n";
+        let e = parse_cappnet(text).unwrap_err().to_string();
+        assert!(e.contains("waffle"), "{e}");
+    }
+
+    #[test]
+    fn bad_param_value_rejected() {
+        let text = "net x\ninput 3 8 8\nclasses 3\nconv c m=abc k=3\n";
+        assert!(parse_cappnet(text).is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let net = parse_cappnet(TINY).unwrap();
+        assert_eq!(net.name, "tinynet");
+    }
+
+    #[test]
+    fn writer_roundtrip_linear_net() {
+        let net = zoo::tinynet();
+        let text = write_cappnet(&net);
+        let back = parse_cappnet(&text).unwrap();
+        assert_eq!(back.param_layer_names(), net.param_layer_names());
+        assert_eq!(back.input, net.input);
+    }
+
+    #[test]
+    fn writer_roundtrip_squeezenet_and_googlenet() {
+        for net in [zoo::squeezenet(), zoo::googlenet()] {
+            let text = write_cappnet(&net);
+            assert!(!text.contains("unrepresentable"), "{text}");
+            let back = parse_cappnet(&text).unwrap();
+            assert_eq!(back.param_layer_names(), net.param_layer_names(), "{}", net.name);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Cappuccino's two file-format inputs (paper Fig. 3):
+//!
+//! * [`cappnet`] — the *network description file*: a line-oriented text
+//!   format describing layer structure (`.cappnet`).
+//! * [`modelfile`] — the *model file*: named f32 tensors holding weight
+//!   and bias values (`.capp`), format shared with
+//!   `python/compile/modelfile.py`.
+//!
+//! The third input, the validation dataset, lives in [`crate::data`].
+
+pub mod cappnet;
+pub mod modelfile;
+
+pub use cappnet::{parse_cappnet, write_cappnet};
+pub use modelfile::ModelFile;

@@ -1,0 +1,254 @@
+//! `.capp` model files — named f32 tensors (paper Fig. 3, input #2).
+//!
+//! Binary format shared with `python/compile/modelfile.py`::
+//!
+//!   magic   8 bytes  b"CAPPMODL"
+//!   version u32      1
+//!   count   u32
+//!   tensor*:
+//!     name_len u16, name utf-8
+//!     ndim     u8,  dims u32 * ndim
+//!     dtype    u8   (0 = f32)
+//!     data     f32 * prod(dims), little-endian
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"CAPPMODL";
+const VERSION: u32 = 1;
+const DTYPE_F32: u8 = 0;
+
+/// A named tensor: shape + row-major f32 data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NamedTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        NamedTensor { dims, data }
+    }
+}
+
+/// An in-memory `.capp` file: insertion-ordered named tensors.
+#[derive(Debug, Default, Clone)]
+pub struct ModelFile {
+    order: Vec<String>,
+    tensors: HashMap<String, NamedTensor>,
+}
+
+impl ModelFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, tensor: NamedTensor) {
+        let name = name.into();
+        if !self.tensors.contains_key(&name) {
+            self.order.push(name.clone());
+        }
+        self.tensors.insert(name, tensor);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&NamedTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::Invalid(format!("model file has no tensor {name:?}")))
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Weight/bias pair for a layer (`name/w`, `name/b`).
+    pub fn layer_params(&self, layer: &str) -> Result<(&NamedTensor, &NamedTensor)> {
+        Ok((
+            self.get(&format!("{layer}/w"))?,
+            self.get(&format!("{layer}/b"))?,
+        ))
+    }
+
+    // -- serialisation -----------------------------------------------------
+
+    pub fn read_from(path: impl AsRef<Path>) -> Result<ModelFile> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())?.read_to_end(&mut buf)?;
+        Self::parse(&buf).map_err(|e| match e {
+            Error::Parse { what: _, detail } => Error::Parse {
+                what: path.as_ref().display().to_string(),
+                detail,
+            },
+            other => other,
+        })
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<ModelFile> {
+        let mut c = Cursor { buf, pos: 0 };
+        if c.take(8)? != MAGIC {
+            return Err(Error::parse("capp", "bad magic"));
+        }
+        let version = c.u32()?;
+        if version != VERSION {
+            return Err(Error::parse("capp", format!("unsupported version {version}")));
+        }
+        let count = c.u32()? as usize;
+        let mut out = ModelFile::new();
+        for _ in 0..count {
+            let name_len = c.u16()? as usize;
+            let name = String::from_utf8(c.take(name_len)?.to_vec())
+                .map_err(|_| Error::parse("capp", "non-utf8 tensor name"))?;
+            let ndim = c.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(c.u32()? as usize);
+            }
+            let dtype = c.u8()?;
+            if dtype != DTYPE_F32 {
+                return Err(Error::parse("capp", format!("tensor {name}: dtype {dtype}")));
+            }
+            let n: usize = dims.iter().product();
+            let raw = c.take(4 * n)?;
+            let mut data = Vec::with_capacity(n);
+            for chunk in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            out.insert(name, NamedTensor { dims, data });
+        }
+        Ok(out)
+    }
+
+    pub fn write_to(&self, path: impl AsRef<Path>) -> Result<()> {
+        let bytes = self.serialize();
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.order.len() as u32).to_le_bytes());
+        for name in &self.order {
+            let t = &self.tensors[name];
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(t.dims.len() as u8);
+            for &d in &t.dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            out.push(DTYPE_F32);
+            for &v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::parse("capp", format!("truncated at byte {}", self.pos)));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ModelFile {
+        let mut mf = ModelFile::new();
+        mf.insert(
+            "conv1/w",
+            NamedTensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, -4.0, 0.5, 1e-8]),
+        );
+        mf.insert("conv1/b", NamedTensor::new(vec![2], vec![0.0, -1.0]));
+        mf
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mf = sample();
+        let back = ModelFile::parse(&mf.serialize()).unwrap();
+        assert_eq!(back.names(), mf.names());
+        assert_eq!(back.get("conv1/w").unwrap(), mf.get("conv1/w").unwrap());
+        assert_eq!(back.get("conv1/b").unwrap(), mf.get("conv1/b").unwrap());
+    }
+
+    #[test]
+    fn layer_params_accessor() {
+        let mf = sample();
+        let (w, b) = mf.layer_params("conv1").unwrap();
+        assert_eq!(w.dims, vec![2, 3]);
+        assert_eq!(b.dims, vec![2]);
+        assert!(mf.layer_params("conv9").is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().serialize();
+        bytes[0] = b'X';
+        assert!(ModelFile::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = sample().serialize();
+        assert!(ModelFile::parse(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn insert_overwrites_without_duplication() {
+        let mut mf = sample();
+        mf.insert("conv1/b", NamedTensor::new(vec![1], vec![9.0]));
+        assert_eq!(mf.len(), 2);
+        assert_eq!(mf.get("conv1/b").unwrap().data, vec![9.0]);
+    }
+
+    #[test]
+    fn file_io_roundtrip() {
+        let mf = sample();
+        let dir = std::env::temp_dir().join("capp_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.capp");
+        mf.write_to(&path).unwrap();
+        let back = ModelFile::read_from(&path).unwrap();
+        assert_eq!(back.get("conv1/w").unwrap(), mf.get("conv1/w").unwrap());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,253 @@
+//! Validation dataset — Cappuccino's third input (paper Fig. 3).
+//!
+//! Reads the `dataset.bin` emitted by `python/compile/dataset.py` (the
+//! ILSVRC-validation substitute; see DESIGN.md) and provides a native
+//! generator producing *structurally identical* synthetic data for
+//! standalone tests and workload generation (the two generators share
+//! class semantics, not bit-exact pixels — the file is the ground truth
+//! the accuracy analysis runs on).
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 8] = b"CAPPDATA";
+const VERSION: u32 = 1;
+
+/// Number of pattern classes in the synthetic dataset.
+pub const NUM_CLASSES: usize = 8;
+
+/// An image classification dataset: NCHW f32 images + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub classes: usize,
+    /// Leading `n_train` images were used for build-time training; the
+    /// remainder is the validation split the mode analysis must use.
+    pub n_train: usize,
+    pub images: Vec<Vec<f32>>,
+    pub labels: Vec<u16>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Validation split (images, labels) — what the paper feeds the
+    /// inexact-computing analysis.
+    pub fn validation(&self) -> (&[Vec<f32>], &[u16]) {
+        (&self.images[self.n_train..], &self.labels[self.n_train..])
+    }
+
+    /// Image element count.
+    pub fn image_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Load `dataset.bin`.
+    pub fn read_from(path: impl AsRef<Path>) -> Result<Dataset> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())?.read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Dataset> {
+        if buf.len() < 36 || &buf[..8] != MAGIC {
+            return Err(Error::parse("dataset", "bad magic or truncated header"));
+        }
+        let u32_at = |off: usize| -> u32 {
+            u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+        };
+        let version = u32_at(8);
+        if version != VERSION {
+            return Err(Error::parse("dataset", format!("version {version}")));
+        }
+        let n = u32_at(12) as usize;
+        let n_train = u32_at(16) as usize;
+        let (c, h, w) = (u32_at(20) as usize, u32_at(24) as usize, u32_at(28) as usize);
+        let classes = u32_at(32) as usize;
+        let img_len = c * h * w;
+        let pixels_off = 36;
+        let labels_off = pixels_off + 4 * n * img_len;
+        if buf.len() < labels_off + 2 * n {
+            return Err(Error::parse("dataset", "truncated payload"));
+        }
+        let mut images = Vec::with_capacity(n);
+        for i in 0..n {
+            let base = pixels_off + 4 * i * img_len;
+            let img: Vec<f32> = buf[base..base + 4 * img_len]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            images.push(img);
+        }
+        let labels: Vec<u16> = buf[labels_off..labels_off + 2 * n]
+            .chunks_exact(2)
+            .map(|b| u16::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        if labels.iter().any(|&l| (l as usize) >= classes) {
+            return Err(Error::parse("dataset", "label out of range"));
+        }
+        Ok(Dataset { c, h, w, classes, n_train, images, labels })
+    }
+
+    /// Native synthetic generator (mirrors the Python pattern classes).
+    pub fn generate(n: usize, seed: u64) -> Dataset {
+        let (c, h, w) = (3, 16, 16);
+        let mut rng = Rng::new(seed);
+        let mut labels: Vec<u16> = (0..n).map(|i| (i % NUM_CLASSES) as u16).collect();
+        rng.shuffle(&mut labels);
+        let images = labels
+            .iter()
+            .map(|&cls| generate_image(cls as usize, c, h, w, &mut rng))
+            .collect();
+        Dataset { c, h, w, classes: NUM_CLASSES, n_train: 0, images, labels }
+    }
+}
+
+/// One synthetic image: class pattern + colour tint + noise (mirrors
+/// `python/compile/dataset.py`'s class semantics).
+fn generate_image(cls: usize, c: usize, h: usize, w: usize, rng: &mut Rng) -> Vec<f32> {
+    let freq = rng.range_f32(0.8, 1.6);
+    let phase = rng.range_f32(0.0, 2.0 * std::f32::consts::PI);
+    let mut base = vec![0.0f32; h * w];
+    match cls {
+        0 => fill(&mut base, h, w, |y, _| (y as f32 * freq + phase).sin()),
+        1 => fill(&mut base, h, w, |_, x| (x as f32 * freq + phase).sin()),
+        2 => fill(&mut base, h, w, |y, x| ((x + y) as f32 * freq * 0.7 + phase).sin()),
+        3 => fill(&mut base, h, w, |y, x| {
+            (x as f32 * freq + phase).sin() * (y as f32 * freq + phase).sin()
+        }),
+        4 => {
+            let cy = rng.range_f32(5.0, 11.0);
+            let cx = rng.range_f32(5.0, 11.0);
+            let spread = rng.range_f32(8.0, 20.0);
+            fill(&mut base, h, w, |y, x| {
+                let dy = y as f32 - cy;
+                let dx = x as f32 - cx;
+                (-(dy * dy + dx * dx) / spread).exp()
+            })
+        }
+        5 => {
+            let sy = if rng.f32() < 0.5 { -1.0 } else { 1.0 };
+            let sx = if rng.f32() < 0.5 { -1.0 } else { 1.0 };
+            fill(&mut base, h, w, |y, x| {
+                (sy * y as f32 / h as f32 + sx * x as f32 / w as f32) * 0.5
+            })
+        }
+        6 => {
+            let cy = rng.range_f32(6.0, 10.0);
+            let cx = rng.range_f32(6.0, 10.0);
+            fill(&mut base, h, w, |y, x| {
+                let dy = y as f32 - cy;
+                let dx = x as f32 - cx;
+                ((dy * dy + dx * dx).sqrt() * freq * 1.5 + phase).sin()
+            })
+        }
+        7 => {
+            // 4x4 blocky random field
+            let coarse: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+            fill(&mut base, h, w, |y, x| coarse[(y / 4) * 4 + (x / 4)])
+        }
+        _ => panic!("class {cls} out of range"),
+    }
+    // Normalise to [0,1].
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in &base {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let range = (hi - lo).max(1e-8);
+    for v in &mut base {
+        *v = (*v - lo) / range;
+    }
+    // Colour tint + noise, zero-centred.
+    let mut img = Vec::with_capacity(c * h * w);
+    for _ in 0..c {
+        let tint = rng.range_f32(0.4, 1.0);
+        for &v in &base {
+            img.push(v * tint + rng.normal() * 0.15 - 0.5);
+        }
+    }
+    img
+}
+
+fn fill(buf: &mut [f32], h: usize, w: usize, f: impl Fn(usize, usize) -> f32) {
+    for y in 0..h {
+        for x in 0..w {
+            buf[y * w + x] = f(y, x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic_and_balanced() {
+        let a = Dataset::generate(64, 3);
+        let b = Dataset::generate(64, 3);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images[0], b.images[0]);
+        let mut counts = [0usize; NUM_CLASSES];
+        for &l in &a.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 64 / NUM_CLASSES));
+    }
+
+    #[test]
+    fn image_values_reasonable() {
+        let d = Dataset::generate(16, 5);
+        for img in &d.images {
+            assert_eq!(img.len(), d.image_len());
+            assert!(img.iter().all(|v| v.is_finite()));
+            let mean: f32 = img.iter().sum::<f32>() / img.len() as f32;
+            assert!(mean.abs() < 1.0, "mean {mean}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Dataset::parse(b"NOPE").is_err());
+        let mut ok_header = Vec::new();
+        ok_header.extend_from_slice(MAGIC);
+        ok_header.extend_from_slice(&2u32.to_le_bytes()); // bad version
+        ok_header.extend_from_slice(&[0u8; 24]);
+        assert!(Dataset::parse(&ok_header).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_python_format() {
+        // Serialise a native dataset in the python format and parse it.
+        let d = Dataset::generate(8, 1);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        for v in [1u32, 8, 6, d.c as u32, d.h as u32, d.w as u32, d.classes as u32] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for img in &d.images {
+            for &p in img {
+                buf.extend_from_slice(&p.to_le_bytes());
+            }
+        }
+        for &l in &d.labels {
+            buf.extend_from_slice(&l.to_le_bytes());
+        }
+        let back = Dataset::parse(&buf).unwrap();
+        assert_eq!(back.len(), 8);
+        assert_eq!(back.n_train, 6);
+        assert_eq!(back.validation().0.len(), 2);
+        assert_eq!(back.images[3], d.images[3]);
+    }
+}

@@ -1,0 +1,624 @@
+//! Convolution implementations — the engine's hot path.
+//!
+//! Four implementations, spanning the paper's design space:
+//!
+//! * [`conv_nchw_scalar`] — single-threaded, row-major, scalar: the
+//!   "single-threaded Java" baseline of Table I.
+//! * [`conv_mm`] — Cappuccino's optimised kernel: OLP across threads,
+//!   map-major layout, `u`-wide vectorised MAC inside each thread
+//!   (Fig. 6), OFMs written directly in map-major order (eqs. 3–5 hold
+//!   by construction).
+//! * [`conv_nchw_flp`] / [`conv_nchw_klp`] — the rejected allocation
+//!   policies of section IV.A, implemented with the per-thread partial
+//!   buffers + reduction they require, for the ablation benchmark.
+//!
+//! Arithmetic modes transform operands *wholesale* before the MAC loop
+//! (exactly like the Pallas kernel casts its refs on load), so Precise
+//! and Imprecise share one inner loop and numerics match the L1 kernel.
+
+use crate::engine::mode::{mode_cast, ArithMode};
+use crate::engine::parallel::parallel_reduce;
+use crate::engine::tensor::MapTensor;
+use crate::util::ceil_div;
+
+/// Output spatial size (caller must have validated k <= padded input).
+#[inline]
+fn out_size(size: usize, k: usize, s: usize, p: usize) -> usize {
+    (size + 2 * p - k) / s + 1
+}
+
+fn cast_buf(src: &[f32], mode: ArithMode) -> Vec<f32> {
+    src.iter().map(|&x| mode_cast(x, mode)).collect()
+}
+
+/// Baseline: single-threaded scalar convolution over row-major NCHW.
+///
+/// `input` is `(C, H, W)`, `weights` `(M, C, K, K)`, `bias` `(M,)`.
+/// Returns `(output (M, Ho, Wo), ho, wo)`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_nchw_scalar(
+    input: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    weights: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    relu: bool,
+    mode: ArithMode,
+) -> (Vec<f32>, usize, usize) {
+    let ho = out_size(h, k, s, p);
+    let wo = out_size(w, k, s, p);
+    let (input_c, weights_c);
+    let (input, weights): (&[f32], &[f32]) = if mode == ArithMode::Precise {
+        (input, weights)
+    } else {
+        input_c = cast_buf(input, mode);
+        weights_c = cast_buf(weights, mode);
+        (&input_c, &weights_c)
+    };
+    let mut out = vec![0.0f32; m * ho * wo];
+    for mi in 0..m {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let mut acc = bias[mi];
+                for ci in 0..c {
+                    for kh in 0..k {
+                        let ih = oh * s + kh;
+                        if ih < p || ih >= h + p {
+                            continue;
+                        }
+                        let ih = ih - p;
+                        for kw in 0..k {
+                            let iw = ow * s + kw;
+                            if iw < p || iw >= w + p {
+                                continue;
+                            }
+                            let iw = iw - p;
+                            acc += input[(ci * h + ih) * w + iw]
+                                * weights[((mi * c + ci) * k + kh) * k + kw];
+                        }
+                    }
+                }
+                if relu && acc < 0.0 {
+                    acc = 0.0;
+                }
+                out[(mi * ho + oh) * wo + ow] = acc;
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+/// Cappuccino's optimised convolution: map-major in, map-major out.
+///
+/// * OLP across `threads`: work items are output rows of output stacks
+///   (`Mb * Ho` items); each thread computes whole output pixels.
+/// * Within a thread, the Fig. 6 vectorised MAC: a `u`-wide load of
+///   channel-adjacent input elements against the matching `u`-wide
+///   weight row, accumulated per output lane.
+/// * `w_mm` is `(Mb, u, Cb, K, K, u)` (compile-time reordered), `b_mm`
+///   `(Mb, u)`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_mm(
+    input: &MapTensor,
+    w_mm: &[f32],
+    b_mm: &[f32],
+    m: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    relu: bool,
+    mode: ArithMode,
+    threads: usize,
+) -> MapTensor {
+    let u = input.u;
+    let cb = input.stacks();
+    let mb = ceil_div(m, u);
+    assert_eq!(w_mm.len(), mb * u * cb * k * k * u, "conv_mm: weight len");
+    assert_eq!(b_mm.len(), mb * u, "conv_mm: bias len");
+
+    let padded = input.pad_spatial(p);
+    let (hp, wp) = (padded.h, padded.w);
+    let ho = (hp - k) / s + 1;
+    let wo = (wp - k) / s + 1;
+
+    let (x_c, w_c);
+    let (x, wgt): (&[f32], &[f32]) = if mode == ArithMode::Precise {
+        (&padded.data, w_mm)
+    } else {
+        x_c = cast_buf(&padded.data, mode);
+        w_c = cast_buf(w_mm, mode);
+        (&x_c, &w_c)
+    };
+
+    let mut out = MapTensor::zeros(m, ho, wo, u);
+    let out_row_len = wo * u;
+    let items = mb * ho;
+
+    // OLP work items are (output stack, output row) pairs; chunk ranges
+    // are contiguous, so each thread owns a disjoint contiguous slice of
+    // the output buffer and writes with zero synchronisation — the
+    // zero-overhead map-major store of section IV.B.1.
+    let ranges = crate::engine::parallel::chunk_ranges(items, threads.max(1));
+    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+    let mut rest = out.data.as_mut_slice();
+    for r in &ranges {
+        let (head, tail) = rest.split_at_mut(r.len() * out_row_len);
+        slices.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|scope| {
+        for (range, slice) in ranges.iter().zip(slices) {
+            let range = range.clone();
+            scope.spawn(move || {
+                for (j, item) in range.enumerate() {
+                    let ms = item / ho; // output stack
+                    let oh = item % ho; // output row
+                    let row = &mut slice[j * out_row_len..(j + 1) * out_row_len];
+                    conv_mm_row(x, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Compute one output row (stack `ms`, row `oh`): the per-thread OLP
+/// workload with the vectorised inner MAC.
+///
+/// Perf (EXPERIMENTS.md §Perf, iteration 1): loop order is
+/// `(cs, kh, kw)` outermost with the `u x u` weight tap block gathered
+/// **once** per tap and reused across the whole output row — the
+/// row-level analogue of the paper's "load each kernel once, use it
+/// `Wout x Hout` times" OLP-reuse argument. A `u = 4` specialisation
+/// uses fixed-size arrays so LLVM keeps the accumulator block and the
+/// tap block in SIMD registers.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn conv_mm_row(
+    x: &[f32],
+    wgt: &[f32],
+    b_mm: &[f32],
+    row: &mut [f32],
+    ms: usize,
+    oh: usize,
+    cb: usize,
+    hp: usize,
+    wp: usize,
+    u: usize,
+    k: usize,
+    s: usize,
+    wo: usize,
+    relu: bool,
+) {
+    debug_assert_eq!(row.len(), wo * u);
+    if u == 4 {
+        conv_mm_row_u4(x, wgt, b_mm, row, ms, oh, cb, hp, wp, k, s, wo, relu);
+        return;
+    }
+    // Generic-u path: same tap-block hoisting, dynamic width.
+    let bias = &b_mm[ms * u..(ms + 1) * u];
+    for ow in 0..wo {
+        row[ow * u..(ow + 1) * u].copy_from_slice(bias);
+    }
+    let mut tap = vec![0.0f32; u * u]; // [ol][l]
+    for cs in 0..cb {
+        for kh in 0..k {
+            let ih = oh * s + kh;
+            let x_row = &x[((cs * hp + ih) * wp) * u..((cs * hp + ih) * wp + wp) * u];
+            for kw in 0..k {
+                // Gather the u_out x u_in tap block once per (cs,kh,kw).
+                for ol in 0..u {
+                    let w_base = ((((ms * u + ol) * cb + cs) * k + kh) * k + kw) * u;
+                    tap[ol * u..(ol + 1) * u].copy_from_slice(&wgt[w_base..w_base + u]);
+                }
+                for ow in 0..wo {
+                    // One u-wide superword load of input lanes (Fig. 6).
+                    let xv = &x_row[(ow * s + kw) * u..(ow * s + kw + 1) * u];
+                    let acc = &mut row[ow * u..(ow + 1) * u];
+                    for ol in 0..u {
+                        let wv = &tap[ol * u..(ol + 1) * u];
+                        let mut dot = 0.0f32;
+                        for l in 0..u {
+                            dot += xv[l] * wv[l];
+                        }
+                        acc[ol] += dot;
+                    }
+                }
+            }
+        }
+    }
+    if relu {
+        for a in row.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+}
+
+/// `u = 4` fast path: fixed-size tap block + accumulators in registers.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn conv_mm_row_u4(
+    x: &[f32],
+    wgt: &[f32],
+    b_mm: &[f32],
+    row: &mut [f32],
+    ms: usize,
+    oh: usize,
+    cb: usize,
+    hp: usize,
+    wp: usize,
+    k: usize,
+    s: usize,
+    wo: usize,
+    relu: bool,
+) {
+    const U: usize = 4;
+    /// Output pixels held in registers per tile (iteration 2: keeps the
+    /// accumulator block out of memory across the whole tap loop).
+    const TILE: usize = 8;
+    let bias: [f32; U] = b_mm[ms * U..(ms + 1) * U].try_into().unwrap();
+
+    let mut ow0 = 0;
+    while ow0 < wo {
+        let tile_len = TILE.min(wo - ow0);
+        // Accumulator tile: TILE x U f32 = 8 SIMD registers at AVX width.
+        let mut acc = [[0.0f32; U]; TILE];
+        for a in acc.iter_mut().take(tile_len) {
+            *a = bias;
+        }
+        for cs in 0..cb {
+            for kh in 0..k {
+                let ih = oh * s + kh;
+                let x_row = &x[((cs * hp + ih) * wp) * U..((cs * hp + ih) * wp + wp) * U];
+                for kw in 0..k {
+                    // 4x4 weight tap block, gathered once per tap, reused
+                    // for the whole tile (OLP kernel reuse).
+                    let mut tap = [[0.0f32; U]; U];
+                    for (ol, t) in tap.iter_mut().enumerate() {
+                        let w_base = ((((ms * U + ol) * cb + cs) * k + kh) * k + kw) * U;
+                        t.copy_from_slice(&wgt[w_base..w_base + U]);
+                    }
+                    let mut xoff = (ow0 * s + kw) * U;
+                    for a in acc.iter_mut().take(tile_len) {
+                        let xv: [f32; U] = x_row[xoff..xoff + U].try_into().unwrap();
+                        // 16 multiply-accumulates on registers: the
+                        // paper's Fig. 6 vector MAC across in/out lanes.
+                        for (ol, t) in tap.iter().enumerate() {
+                            a[ol] +=
+                                xv[0] * t[0] + xv[1] * t[1] + xv[2] * t[2] + xv[3] * t[3];
+                        }
+                        xoff += s * U;
+                    }
+                }
+            }
+        }
+        for (i, a) in acc.iter().take(tile_len).enumerate() {
+            row[(ow0 + i) * U..(ow0 + i + 1) * U].copy_from_slice(a);
+        }
+        ow0 += tile_len;
+    }
+    if relu {
+        for a in row.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+}
+
+/// FLP (section IV.A): each work item convolves one entire kernel — the
+/// 2-D convolution of input plane `ci` with kernel `(mi, ci)` — into a
+/// per-thread partial output; a reduction then sums partials. Row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_nchw_flp(
+    input: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    weights: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    relu: bool,
+    mode: ArithMode,
+    threads: usize,
+) -> (Vec<f32>, usize, usize) {
+    let ho = out_size(h, k, s, p);
+    let wo = out_size(w, k, s, p);
+    let (input_c, weights_c);
+    let (input, weights): (&[f32], &[f32]) = if mode == ArithMode::Precise {
+        (input, weights)
+    } else {
+        input_c = cast_buf(input, mode);
+        weights_c = cast_buf(weights, mode);
+        (&input_c, &weights_c)
+    };
+
+    let items = m * c; // one item per kernel (filter bank slice)
+    let mut out = parallel_reduce(items, threads, m * ho * wo, |_, range, buf| {
+        for item in range {
+            let mi = item / c;
+            let ci = item % c;
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    let mut acc = 0.0f32;
+                    for kh in 0..k {
+                        let ih = oh * s + kh;
+                        if ih < p || ih >= h + p {
+                            continue;
+                        }
+                        let ih = ih - p;
+                        for kw in 0..k {
+                            let iw = ow * s + kw;
+                            if iw < p || iw >= w + p {
+                                continue;
+                            }
+                            let iw = iw - p;
+                            acc += input[(ci * h + ih) * w + iw]
+                                * weights[((mi * c + ci) * k + kh) * k + kw];
+                        }
+                    }
+                    buf[(mi * ho + oh) * wo + ow] += acc;
+                }
+            }
+        }
+    });
+    finish_bias_relu(&mut out, bias, m, ho * wo, relu);
+    (out, ho, wo)
+}
+
+/// KLP (section IV.A): threads split the multiplications *within* each
+/// kernel window by input channel; every thread touches every output
+/// pixel, so each needs a full-size partial buffer + reduction. This is
+/// the finest-grained (and most overhead-prone) allocation. Row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_nchw_klp(
+    input: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    weights: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    relu: bool,
+    mode: ArithMode,
+    threads: usize,
+) -> (Vec<f32>, usize, usize) {
+    let ho = out_size(h, k, s, p);
+    let wo = out_size(w, k, s, p);
+    let (input_c, weights_c);
+    let (input, weights): (&[f32], &[f32]) = if mode == ArithMode::Precise {
+        (input, weights)
+    } else {
+        input_c = cast_buf(input, mode);
+        weights_c = cast_buf(weights, mode);
+        (&input_c, &weights_c)
+    };
+
+    // Work items: (input channel, kernel row) — the per-multiplication
+    // granularity of the paper, batched to a sane task size.
+    let items = c * k;
+    let mut out = parallel_reduce(items, threads, m * ho * wo, |_, range, buf| {
+        for item in range {
+            let ci = item / k;
+            let kh = item % k;
+            for mi in 0..m {
+                for oh in 0..ho {
+                    let ih = oh * s + kh;
+                    if ih < p || ih >= h + p {
+                        continue;
+                    }
+                    let ih = ih - p;
+                    for ow in 0..wo {
+                        let mut acc = 0.0f32;
+                        for kw in 0..k {
+                            let iw = ow * s + kw;
+                            if iw < p || iw >= w + p {
+                                continue;
+                            }
+                            let iw = iw - p;
+                            acc += input[(ci * h + ih) * w + iw]
+                                * weights[((mi * c + ci) * k + kh) * k + kw];
+                        }
+                        buf[(mi * ho + oh) * wo + ow] += acc;
+                    }
+                }
+            }
+        }
+    });
+    finish_bias_relu(&mut out, bias, m, ho * wo, relu);
+    (out, ho, wo)
+}
+
+fn finish_bias_relu(out: &mut [f32], bias: &[f32], m: usize, plane: usize, relu: bool) {
+    for mi in 0..m {
+        for v in &mut out[mi * plane..(mi + 1) * plane] {
+            *v += bias[mi];
+            if relu && *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout;
+    use crate::util::rng::Rng;
+
+    struct Case {
+        c: usize,
+        h: usize,
+        w: usize,
+        m: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+    }
+
+    fn cases() -> Vec<Case> {
+        vec![
+            Case { c: 3, h: 8, w: 8, m: 8, k: 3, s: 1, p: 1 },
+            Case { c: 6, h: 11, w: 9, m: 8, k: 3, s: 2, p: 1 },
+            Case { c: 4, h: 12, w: 12, m: 4, k: 5, s: 1, p: 2 },
+            Case { c: 3, h: 23, w: 23, m: 8, k: 11, s: 4, p: 0 },
+            Case { c: 8, h: 6, w: 6, m: 12, k: 1, s: 1, p: 0 },
+            Case { c: 5, h: 7, w: 7, m: 6, k: 3, s: 3, p: 0 },
+        ]
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{what}: elem {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn mapmajor_matches_scalar_all_cases() {
+        let mut rng = Rng::new(1);
+        for (i, case) in cases().iter().enumerate() {
+            let Case { c, h, w, m, k, s, p } = *case;
+            let u = 4;
+            let input = rng.normal_vec(c * h * w);
+            let weights = rng.normal_vec(m * c * k * k);
+            let bias = rng.normal_vec(m);
+            let (want, ho, wo) = conv_nchw_scalar(
+                &input, c, h, w, &weights, &bias, m, k, s, p, false, ArithMode::Precise,
+            );
+            let mm_in = MapTensor::from_nchw(&input, c, h, w, u);
+            let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+            let b_mm = layout::bias_to_mapmajor(&bias, u);
+            let got = conv_mm(&mm_in, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Precise, 1);
+            assert_eq!((got.h, got.w, got.c), (ho, wo, m), "case {i}");
+            assert_close(&got.to_nchw(), &want, 1e-5, &format!("case {i}"));
+        }
+    }
+
+    #[test]
+    fn mapmajor_threaded_matches_single() {
+        let mut rng = Rng::new(2);
+        let (c, h, w, m, k, s, p, u) = (6, 10, 10, 8, 3, 1, 1, 4);
+        let input = rng.normal_vec(c * h * w);
+        let weights = rng.normal_vec(m * c * k * k);
+        let bias = rng.normal_vec(m);
+        let mm_in = MapTensor::from_nchw(&input, c, h, w, u);
+        let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+        let b_mm = layout::bias_to_mapmajor(&bias, u);
+        let a = conv_mm(&mm_in, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Precise, 1);
+        for threads in [2, 4, 7] {
+            let b = conv_mm(&mm_in, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Precise, threads);
+            assert_eq!(a.data, b.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn flp_and_klp_match_scalar() {
+        let mut rng = Rng::new(3);
+        for case in &cases()[..4] {
+            let Case { c, h, w, m, k, s, p } = *case;
+            let input = rng.normal_vec(c * h * w);
+            let weights = rng.normal_vec(m * c * k * k);
+            let bias = rng.normal_vec(m);
+            let (want, ..) = conv_nchw_scalar(
+                &input, c, h, w, &weights, &bias, m, k, s, p, true, ArithMode::Precise,
+            );
+            for threads in [1, 3] {
+                let (flp, ..) = conv_nchw_flp(
+                    &input, c, h, w, &weights, &bias, m, k, s, p, true,
+                    ArithMode::Precise, threads,
+                );
+                assert_close(&flp, &want, 1e-4, "flp");
+                let (klp, ..) = conv_nchw_klp(
+                    &input, c, h, w, &weights, &bias, m, k, s, p, true,
+                    ArithMode::Precise, threads,
+                );
+                assert_close(&klp, &want, 1e-4, "klp");
+            }
+        }
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let input = vec![1.0f32; 4];
+        let weights = vec![-1.0f32; 4]; // 1x1 kernel, c=1, m=4? construct:
+        // c=1, h=2, w=2, m=1, k=1 -> out = -1 everywhere, relu clamps to 0.
+        let (out, ..) = conv_nchw_scalar(
+            &input, 1, 2, 2, &weights[..1], &[0.0], 1, 1, 1, 0, true, ArithMode::Precise,
+        );
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn imprecise_mode_close_to_precise() {
+        let mut rng = Rng::new(4);
+        let (c, h, w, m, k, s, p, u) = (6, 8, 8, 8, 3, 1, 1, 4);
+        let input = rng.normal_vec(c * h * w);
+        let weights = rng.normal_vec(m * c * k * k);
+        let bias = rng.normal_vec(m);
+        let mm_in = MapTensor::from_nchw(&input, c, h, w, u);
+        let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+        let b_mm = layout::bias_to_mapmajor(&bias, u);
+        let a = conv_mm(&mm_in, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Precise, 1);
+        let b = conv_mm(&mm_in, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Imprecise, 1);
+        let max_d = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_d > 0.0, "imprecise should differ at all");
+        assert!(max_d < 0.3, "imprecise too far off: {max_d}");
+    }
+
+    #[test]
+    fn relaxed_flushes_denormal_inputs() {
+        // A denormal input times a normal weight contributes ~0 under
+        // relaxed/imprecise, a denormal product under precise.
+        let input = vec![1e-40f32];
+        let weights = vec![1.0f32];
+        let (p_out, ..) = conv_nchw_scalar(
+            &input, 1, 1, 1, &weights, &[0.0], 1, 1, 1, 0, false, ArithMode::Precise,
+        );
+        let (r_out, ..) = conv_nchw_scalar(
+            &input, 1, 1, 1, &weights, &[0.0], 1, 1, 1, 0, false, ArithMode::Relaxed,
+        );
+        assert!(p_out[0] != 0.0);
+        assert_eq!(r_out[0], 0.0);
+    }
+
+    #[test]
+    fn different_u_values_agree() {
+        let mut rng = Rng::new(5);
+        let (c, h, w, m, k, s, p) = (6, 9, 9, 8, 3, 1, 1);
+        let input = rng.normal_vec(c * h * w);
+        let weights = rng.normal_vec(m * c * k * k);
+        let bias = rng.normal_vec(m);
+        let (want, ..) = conv_nchw_scalar(
+            &input, c, h, w, &weights, &bias, m, k, s, p, false, ArithMode::Precise,
+        );
+        for u in [1, 2, 4, 8] {
+            let mm_in = MapTensor::from_nchw(&input, c, h, w, u);
+            let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+            let b_mm = layout::bias_to_mapmajor(&bias, u);
+            let got = conv_mm(&mm_in, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Precise, 1);
+            assert_close(&got.to_nchw(), &want, 1e-5, &format!("u={u}"));
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Native execution engine — the synthesized program's runtime body.
+//!
+//! Cappuccino's synthesizer emits a *plan* (see [`crate::synth`]); this
+//! module is the machine that executes plans: map-major tensors,
+//! OLP-threaded vectorised convolutions (section IV.A/IV.B), per-layer
+//! arithmetic modes (section IV.C), plus the baseline and the rejected
+//! KLP/FLP policies for the ablation benches.
+
+pub mod conv;
+pub mod mode;
+pub mod network;
+pub mod ops;
+pub mod parallel;
+pub mod tensor;
+
+pub use conv::{conv_mm, conv_nchw_flp, conv_nchw_klp, conv_nchw_scalar};
+pub use mode::ArithMode;
+pub use network::{run_baseline, run_mapmajor, EngineParams, ExecConfig, ModeAssignment};
+pub use parallel::Parallelism;
+pub use tensor::{MapTensor, Tensor};

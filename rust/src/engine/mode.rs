@@ -1,0 +1,200 @@
+//! Arithmetic modes (paper section IV.C).
+//!
+//! RenderScript's precise / relaxed / imprecise floating-point contracts
+//! mapped to this testbed (DESIGN.md "Hardware-Adaptation"):
+//!
+//! * [`ArithMode::Precise`] — IEEE 754 f32, denormals honoured.
+//! * [`ArithMode::Relaxed`] — f32, denormal operands flushed to zero,
+//!   `-0.0` canonicalised to `+0.0`.
+//! * [`ArithMode::Imprecise`] — operands additionally rounded to
+//!   bfloat16 before multiplication (f32 accumulation) — the TPU-MXU
+//!   analogue of RenderScript's fast vectorised mode. Only this mode
+//!   unlocks the vectorised inner loop, mirroring "vector processing is
+//!   only available under imprecise computing modes".
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Smallest positive normal f32 (denormal threshold).
+pub const F32_MIN_NORMAL: f32 = 1.17549435e-38;
+
+/// Arithmetic mode for a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ArithMode {
+    Precise,
+    Relaxed,
+    Imprecise,
+}
+
+impl ArithMode {
+    pub const ALL: [ArithMode; 3] = [ArithMode::Precise, ArithMode::Relaxed, ArithMode::Imprecise];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArithMode::Precise => "precise",
+            ArithMode::Relaxed => "relaxed",
+            ArithMode::Imprecise => "imprecise",
+        }
+    }
+
+    /// Does this mode unlock the vectorised inner loop? (Paper: vector
+    /// processing is only available under the non-IEEE modes.)
+    pub fn vectorized(&self) -> bool {
+        !matches!(self, ArithMode::Precise)
+    }
+}
+
+impl fmt::Display for ArithMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for ArithMode {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "precise" => Ok(ArithMode::Precise),
+            "relaxed" => Ok(ArithMode::Relaxed),
+            "imprecise" => Ok(ArithMode::Imprecise),
+            other => Err(crate::Error::Invalid(format!("unknown arithmetic mode {other:?}"))),
+        }
+    }
+}
+
+/// Round an f32 to bfloat16 (round-to-nearest-even) and back.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // RNE on the low 16 bits.
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+/// Flush denormals to +0.0 (also canonicalises -0.0).
+#[inline]
+pub fn flush_denormal(x: f32) -> f32 {
+    if x.abs() < F32_MIN_NORMAL {
+        0.0
+    } else {
+        x
+    }
+}
+
+/// Operand transform for a mode — mirrors `ref.apply_mode_inputs`.
+#[inline]
+pub fn mode_cast(x: f32, mode: ArithMode) -> f32 {
+    match mode {
+        ArithMode::Precise => x,
+        ArithMode::Relaxed => flush_denormal(x),
+        ArithMode::Imprecise => bf16_round(flush_denormal(x)),
+    }
+}
+
+/// Static-dispatch operand transform: the engine's inner loops are
+/// generic over this so Precise pays zero per-element cost.
+pub trait ModeOps: Copy + Send + Sync + 'static {
+    const MODE: ArithMode;
+    fn cast(x: f32) -> f32;
+}
+
+/// IEEE f32.
+#[derive(Clone, Copy)]
+pub struct Precise;
+
+/// Flush-to-zero f32.
+#[derive(Clone, Copy)]
+pub struct Relaxed;
+
+/// bf16 operands, f32 accumulate, flush-to-zero.
+#[derive(Clone, Copy)]
+pub struct Imprecise;
+
+impl ModeOps for Precise {
+    const MODE: ArithMode = ArithMode::Precise;
+    #[inline(always)]
+    fn cast(x: f32) -> f32 {
+        x
+    }
+}
+
+impl ModeOps for Relaxed {
+    const MODE: ArithMode = ArithMode::Relaxed;
+    #[inline(always)]
+    fn cast(x: f32) -> f32 {
+        flush_denormal(x)
+    }
+}
+
+impl ModeOps for Imprecise {
+    const MODE: ArithMode = ArithMode::Imprecise;
+    #[inline(always)]
+    fn cast(x: f32) -> f32 {
+        bf16_round(flush_denormal(x))
+    }
+}
+
+/// Run `f` monomorphised for `mode`.
+#[inline]
+pub fn with_mode<R>(mode: ArithMode, f: impl FnOnce(ArithMode) -> R) -> R {
+    f(mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in ArithMode::ALL {
+            assert_eq!(m.as_str().parse::<ArithMode>().unwrap(), m);
+        }
+        assert!("fast".parse::<ArithMode>().is_err());
+    }
+
+    #[test]
+    fn bf16_round_known_values() {
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(0.0), 0.0);
+        // 1.00390625 = 1 + 2^-8: exactly the bf16 ulp at 1.0; RNE to even.
+        let x = 1.0 + 2.0_f32.powi(-8);
+        let r = bf16_round(x);
+        assert!(r == 1.0 || r == 1.0 + 2.0_f32.powi(-7));
+        // Relative error of bf16 rounding is <= 2^-8.
+        for &v in &[3.14159f32, -2.71828, 1e10, -1e-10, 123.456] {
+            let r = bf16_round(v);
+            assert!(((r - v) / v).abs() <= 0.00391, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn bf16_preserves_specials() {
+        assert!(bf16_round(f32::NAN).is_nan());
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn flush_denormal_contract() {
+        assert_eq!(flush_denormal(1e-40), 0.0);
+        assert_eq!(flush_denormal(-1e-40), 0.0);
+        assert_eq!(flush_denormal(1e-3), 1e-3);
+        // -0.0 canonicalised: sign bit cleared.
+        assert!(flush_denormal(-0.0).is_sign_positive());
+    }
+
+    #[test]
+    fn mode_cast_matches_python_oracle() {
+        // Matches ref.apply_mode_inputs semantics.
+        assert_eq!(mode_cast(1e-40, ArithMode::Precise), 1e-40);
+        assert_eq!(mode_cast(1e-40, ArithMode::Relaxed), 0.0);
+        assert_eq!(mode_cast(0.15625, ArithMode::Imprecise), 0.15625); // exact in bf16
+    }
+
+    #[test]
+    fn vectorized_flag() {
+        assert!(!ArithMode::Precise.vectorized());
+        assert!(ArithMode::Relaxed.vectorized());
+        assert!(ArithMode::Imprecise.vectorized());
+    }
+}

@@ -1,0 +1,543 @@
+//! Full-network execution on the native engine.
+//!
+//! Two executors:
+//!
+//! * [`run_baseline`] — single-threaded scalar row-major: the
+//!   "single-threaded Java" baseline of Table I (functionally, not in
+//!   absolute speed — the interpreter factor lives in the SoC model).
+//! * [`run_mapmajor`] — the Cappuccino-synthesized program: map-major
+//!   end-to-end, OLP-threaded vectorised convs, per-layer arithmetic
+//!   modes from a [`ModeAssignment`].
+//!
+//! Parameter handling mirrors the paper's compile-time flow:
+//! [`EngineParams::compile`] takes *conventional* weights (the `.capp`
+//! model file) and reorders them once into map-major form.
+
+use std::collections::HashMap;
+
+use crate::config::modelfile::ModelFile;
+use crate::engine::conv::{conv_mm, conv_nchw_scalar};
+use crate::engine::mode::ArithMode;
+use crate::engine::ops;
+use crate::engine::tensor::MapTensor;
+use crate::layout;
+use crate::model::{shapes, Layer, LayerOp, Network, TensorShape};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Per-layer arithmetic mode assignment (section IV.C). Layers not
+/// present use the default mode.
+#[derive(Debug, Clone)]
+pub struct ModeAssignment {
+    pub default: ArithMode,
+    pub per_layer: HashMap<String, ArithMode>,
+}
+
+impl ModeAssignment {
+    pub fn uniform(mode: ArithMode) -> Self {
+        ModeAssignment { default: mode, per_layer: HashMap::new() }
+    }
+
+    pub fn with(mut self, layer: impl Into<String>, mode: ArithMode) -> Self {
+        self.per_layer.insert(layer.into(), mode);
+        self
+    }
+
+    pub fn mode_of(&self, layer: &str) -> ArithMode {
+        self.per_layer.get(layer).copied().unwrap_or(self.default)
+    }
+
+    /// Count of layers (out of `names`) that run in an inexact mode.
+    pub fn inexact_count(&self, names: &[String]) -> usize {
+        names
+            .iter()
+            .filter(|n| self.mode_of(n) != ArithMode::Precise)
+            .count()
+    }
+}
+
+/// One layer's parameters in both layouts.
+#[derive(Debug, Clone)]
+struct LayerParams {
+    /// Conventional layout: conv `(M,C,K,K)` flat / dense `(O,I)` flat.
+    w_conv: Vec<f32>,
+    b_conv: Vec<f32>,
+    /// Map-major layout (convs: `(Mb,u,Cb,K,K,u)`; first-FC: permuted).
+    w_mm: Vec<f32>,
+    b_mm: Vec<f32>,
+}
+
+/// Compiled parameters for a network.
+#[derive(Debug, Clone)]
+pub struct EngineParams {
+    pub u: usize,
+    layers: HashMap<String, LayerParams>,
+}
+
+impl EngineParams {
+    /// Compile conventional weights (model file) into both layouts —
+    /// the paper's compile-time parameter reordering (section III).
+    pub fn compile(net: &Network, mf: &ModelFile, u: usize) -> Result<EngineParams> {
+        let info = shapes::infer(net)?;
+        let mut layers = HashMap::new();
+        for pl in &info.param_layers {
+            let (w, b) = mf.layer_params(&pl.name)?;
+            if w.data.len() != pl.weight_elems || b.data.len() != pl.bias_elems {
+                return Err(Error::Shape(format!(
+                    "layer {}: model file {}x{} vs expected {}x{}",
+                    pl.name,
+                    w.data.len(),
+                    b.data.len(),
+                    pl.weight_elems,
+                    pl.bias_elems
+                )));
+            }
+            layers.insert(pl.name.clone(), build_layer_params(pl, &w.data, &b.data, u));
+        }
+        Ok(EngineParams { u, layers })
+    }
+
+    /// Random He-normal parameters (for nets without a trained model
+    /// file — weight *values* do not affect latency benchmarks).
+    pub fn random(net: &Network, seed: u64, u: usize) -> Result<EngineParams> {
+        let info = shapes::infer(net)?;
+        let mut rng = Rng::new(seed);
+        let mut layers = HashMap::new();
+        for pl in &info.param_layers {
+            let fan_in = match pl.input {
+                TensorShape::Maps { c, .. } => c * pl.k * pl.k,
+                TensorShape::Flat { len } => len,
+            };
+            let mut lrng = rng.fork(&pl.name);
+            let w = lrng.he_normal_vec(pl.weight_elems, fan_in.max(1));
+            let b = vec![0.0f32; pl.bias_elems];
+            layers.insert(pl.name.clone(), build_layer_params(pl, &w, &b, u));
+        }
+        Ok(EngineParams { u, layers })
+    }
+
+    fn get(&self, name: &str) -> Result<&LayerParams> {
+        self.layers
+            .get(name)
+            .ok_or_else(|| Error::Invalid(format!("no params for layer {name:?}")))
+    }
+}
+
+fn build_layer_params(pl: &shapes::ParamLayer, w: &[f32], b: &[f32], u: usize) -> LayerParams {
+    match pl.input {
+        TensorShape::Maps { c, .. } => {
+            let m = pl.bias_elems;
+            LayerParams {
+                w_mm: layout::weights_to_mapmajor(w, m, c, pl.k, u),
+                b_mm: layout::bias_to_mapmajor(b, u),
+                w_conv: w.to_vec(),
+                b_conv: b.to_vec(),
+            }
+        }
+        TensorShape::Flat { .. } => {
+            let o = pl.bias_elems;
+            // The first dense after a flatten consumes the map-major
+            // flatten order: permute its weight columns at compile time.
+            let w_mm = if let Some((c, h, wd)) = pl.flatten_src {
+                layout::fc_weights_for_mapmajor(w, o, c, h, wd, u)
+            } else {
+                w.to_vec()
+            };
+            LayerParams {
+                w_mm,
+                b_mm: b.to_vec(),
+                w_conv: w.to_vec(),
+                b_conv: b.to_vec(),
+            }
+        }
+    }
+}
+
+/// Execution configuration for the optimised path.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecConfig {
+    pub threads: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig { threads: 1 }
+    }
+}
+
+/// Optimised executor: map-major, OLP-threaded, per-layer modes.
+/// `input` is conventional `(C, H, W)` data; the map-major transform of
+/// the *input image* is part of the synthesized program's prologue (the
+/// only dynamic reorder in the whole pipeline, amortised once).
+pub fn run_mapmajor(
+    net: &Network,
+    params: &EngineParams,
+    input: &[f32],
+    modes: &ModeAssignment,
+    cfg: ExecConfig,
+) -> Result<Vec<f32>> {
+    let (c, h, w) = net.input.as_maps()?;
+    if input.len() != c * h * w {
+        return Err(Error::Shape(format!(
+            "input len {} vs expected {}x{}x{}",
+            input.len(),
+            c,
+            h,
+            w
+        )));
+    }
+    let x = MapTensor::from_nchw(input, c, h, w, params.u);
+    let out = run_layers_mm(&net.layers, x, params, modes, cfg)?;
+    match out {
+        Activation::Flat(v) => Ok(v),
+        Activation::Maps(t) => Ok(t.to_nchw()),
+    }
+}
+
+enum Activation {
+    Maps(MapTensor),
+    Flat(Vec<f32>),
+}
+
+fn run_layers_mm(
+    layers: &[Layer],
+    mut x: MapTensor,
+    params: &EngineParams,
+    modes: &ModeAssignment,
+    cfg: ExecConfig,
+) -> Result<Activation> {
+    let mut flat: Option<Vec<f32>> = None;
+    for layer in layers {
+        if let Some(v) = flat.take() {
+            // Flat activations admit only dense/softmax layers.
+            flat = Some(run_flat_layer(layer, v, params, modes)?);
+            continue;
+        }
+        match &layer.op {
+            LayerOp::Conv { m, k, s, p, relu } => {
+                let lp = params.get(&layer.name)?;
+                x = conv_mm(
+                    &x,
+                    &lp.w_mm,
+                    &lp.b_mm,
+                    *m,
+                    *k,
+                    *s,
+                    *p,
+                    *relu,
+                    modes.mode_of(&layer.name),
+                    cfg.threads,
+                );
+            }
+            LayerOp::MaxPool { k, s, p } => x = ops::maxpool_mm(&x, *k, *s, *p),
+            LayerOp::AvgPool { k, s, p } => x = ops::avgpool_mm(&x, *k, *s, *p),
+            LayerOp::Lrn { size, alpha, beta } => x = ops::lrn_mm(&x, *size, *alpha, *beta),
+            LayerOp::Fork { branches } => {
+                let mut outs = Vec::with_capacity(branches.len());
+                for br in branches {
+                    match run_layers_mm(br, x.clone(), params, modes, cfg)? {
+                        Activation::Maps(t) => outs.push(t),
+                        Activation::Flat(_) => {
+                            return Err(Error::Invalid(format!(
+                                "fork {}: branch produced flat activation",
+                                layer.name
+                            )))
+                        }
+                    }
+                }
+                let refs: Vec<&MapTensor> = outs.iter().collect();
+                x = MapTensor::concat_channels(&refs);
+            }
+            LayerOp::Flatten => flat = Some(x.flatten()),
+            LayerOp::Gap => flat = Some(ops::gap_mm(&x)),
+            LayerOp::Dense { .. } | LayerOp::Softmax => {
+                return Err(Error::Invalid(format!(
+                    "layer {}: dense/softmax requires flatten or gap first",
+                    layer.name
+                )))
+            }
+        }
+    }
+    Ok(match flat {
+        Some(v) => Activation::Flat(v),
+        None => Activation::Maps(x),
+    })
+}
+
+fn run_flat_layer(
+    layer: &Layer,
+    v: Vec<f32>,
+    params: &EngineParams,
+    modes: &ModeAssignment,
+) -> Result<Vec<f32>> {
+    match &layer.op {
+        LayerOp::Dense { o, relu } => {
+            let lp = params.get(&layer.name)?;
+            Ok(ops::dense(
+                &v,
+                &lp.w_mm,
+                &lp.b_mm,
+                *o,
+                *relu,
+                modes.mode_of(&layer.name),
+            ))
+        }
+        LayerOp::Softmax => Ok(ops::softmax(&v)),
+        other => Err(Error::Invalid(format!(
+            "layer {}: op {other:?} cannot consume a flat activation",
+            layer.name
+        ))),
+    }
+}
+
+/// Baseline executor: single-threaded scalar row-major, precise
+/// arithmetic — the Table I "Baseline" program, functionally.
+pub fn run_baseline(net: &Network, params: &EngineParams, input: &[f32]) -> Result<Vec<f32>> {
+    let (c, h, w) = net.input.as_maps()?;
+    if input.len() != c * h * w {
+        return Err(Error::Shape(format!("input len {}", input.len())));
+    }
+    let out = run_layers_nchw(&net.layers, (input.to_vec(), c, h, w), params)?;
+    Ok(match out {
+        BaselineAct::Maps(v, ..) => v,
+        BaselineAct::Flat(v) => v,
+    })
+}
+
+enum BaselineAct {
+    Maps(Vec<f32>, usize, usize, usize),
+    Flat(Vec<f32>),
+}
+
+fn run_layers_nchw(
+    layers: &[Layer],
+    input: (Vec<f32>, usize, usize, usize),
+    params: &EngineParams,
+) -> Result<BaselineAct> {
+    let (mut x, mut c, mut h, mut w) = input;
+    let mut flat: Option<Vec<f32>> = None;
+    for layer in layers {
+        if let Some(v) = flat.take() {
+            flat = Some(match &layer.op {
+                LayerOp::Dense { o, relu } => {
+                    let lp = params.get(&layer.name)?;
+                    ops::dense(&v, &lp.w_conv, &lp.b_conv, *o, *relu, ArithMode::Precise)
+                }
+                LayerOp::Softmax => ops::softmax(&v),
+                other => {
+                    return Err(Error::Invalid(format!(
+                        "baseline: {other:?} after flatten"
+                    )))
+                }
+            });
+            continue;
+        }
+        match &layer.op {
+            LayerOp::Conv { m, k, s, p, relu } => {
+                let lp = params.get(&layer.name)?;
+                let (out, ho, wo) = conv_nchw_scalar(
+                    &x, c, h, w, &lp.w_conv, &lp.b_conv, *m, *k, *s, *p, *relu,
+                    ArithMode::Precise,
+                );
+                x = out;
+                c = *m;
+                h = ho;
+                w = wo;
+            }
+            LayerOp::MaxPool { k, s, p } | LayerOp::AvgPool { k, s, p } => {
+                let is_max = matches!(layer.op, LayerOp::MaxPool { .. });
+                let (out, ho, wo) = ops::pool_nchw(&x, c, h, w, *k, *s, *p, is_max);
+                x = out;
+                h = ho;
+                w = wo;
+            }
+            LayerOp::Lrn { size, alpha, beta } => {
+                x = ops::lrn_nchw(&x, c, h, w, *size, *alpha, *beta);
+            }
+            LayerOp::Fork { branches } => {
+                let mut outs = Vec::new();
+                let mut total_c = 0;
+                let mut hw = (0, 0);
+                for br in branches {
+                    match run_layers_nchw(br, (x.clone(), c, h, w), params)? {
+                        BaselineAct::Maps(v, bc, bh, bw) => {
+                            total_c += bc;
+                            hw = (bh, bw);
+                            outs.push(v);
+                        }
+                        BaselineAct::Flat(_) => {
+                            return Err(Error::Invalid("baseline: flat in fork".into()))
+                        }
+                    }
+                }
+                x = outs.concat();
+                c = total_c;
+                h = hw.0;
+                w = hw.1;
+            }
+            LayerOp::Flatten => flat = Some(x.clone()),
+            LayerOp::Gap => flat = Some(ops::gap_nchw(&x, c, h, w)),
+            LayerOp::Dense { .. } | LayerOp::Softmax => {
+                return Err(Error::Invalid("baseline: dense before flatten".into()))
+            }
+        }
+    }
+    Ok(match flat {
+        Some(v) => BaselineAct::Flat(v),
+        None => BaselineAct::Maps(x, c, h, w),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn rand_input(net: &Network, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        rng.normal_vec(net.input.elements())
+    }
+
+    #[test]
+    fn mapmajor_matches_baseline_tinynet() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 42, 4).unwrap();
+        let input = rand_input(&net, 7);
+        let base = run_baseline(&net, &params, &input).unwrap();
+        let opt = run_mapmajor(
+            &net,
+            &params,
+            &input,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            ExecConfig { threads: 1 },
+        )
+        .unwrap();
+        assert_eq!(base.len(), 8);
+        for (a, b) in base.iter().zip(&opt) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn threaded_matches_single_thread() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 1, 4).unwrap();
+        let input = rand_input(&net, 2);
+        let modes = ModeAssignment::uniform(ArithMode::Precise);
+        let a = run_mapmajor(&net, &params, &input, &modes, ExecConfig { threads: 1 }).unwrap();
+        let b = run_mapmajor(&net, &params, &input, &modes, ExecConfig { threads: 4 }).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fork_network_matches_baseline() {
+        // SqueezeNet head (conv1..fire3) at reduced input via a custom net.
+        use crate::config::parse_cappnet;
+        let net = parse_cappnet(
+            "net mini\ninput 3 31 31\nclasses 32\n\
+             conv conv1 m=16 k=3 s=2 p=0\n\
+             fire fire2 s1=8 e1=16 e3=16\n\
+             fire fire3 s1=8 e1=16 e3=16\n\
+             conv conv4 m=32 k=1 s=1 p=0\ngap\n",
+        )
+        .unwrap();
+        let params = EngineParams::random(&net, 3, 4).unwrap();
+        let input = rand_input(&net, 4);
+        let base = run_baseline(&net, &params, &input).unwrap();
+        let opt = run_mapmajor(
+            &net,
+            &params,
+            &input,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            ExecConfig { threads: 2 },
+        )
+        .unwrap();
+        for (a, b) in base.iter().zip(&opt) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn lrn_network_matches_baseline() {
+        use crate::config::parse_cappnet;
+        let net = parse_cappnet(
+            "net lrnnet\ninput 3 16 16\nclasses 8\n\
+             conv conv1 m=8 k=3 s=1 p=1\nlrn size=5\n\
+             conv conv2 m=8 k=3 s=2 p=1\nflatten\ndense fc o=8 relu=0\n",
+        )
+        .unwrap();
+        let params = EngineParams::random(&net, 5, 4).unwrap();
+        let input = rand_input(&net, 6);
+        let base = run_baseline(&net, &params, &input).unwrap();
+        let opt = run_mapmajor(
+            &net,
+            &params,
+            &input,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            ExecConfig::default(),
+        )
+        .unwrap();
+        for (a, b) in base.iter().zip(&opt) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn per_layer_modes_differ_monotonically() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 9, 4).unwrap();
+        let input = rand_input(&net, 10);
+        let cfg = ExecConfig::default();
+        let precise = run_mapmajor(
+            &net, &params, &input,
+            &ModeAssignment::uniform(ArithMode::Precise), cfg,
+        )
+        .unwrap();
+        let one_layer = run_mapmajor(
+            &net, &params, &input,
+            &ModeAssignment::uniform(ArithMode::Precise).with("conv1", ArithMode::Imprecise),
+            cfg,
+        )
+        .unwrap();
+        let all = run_mapmajor(
+            &net, &params, &input,
+            &ModeAssignment::uniform(ArithMode::Imprecise), cfg,
+        )
+        .unwrap();
+        let d1: f32 = precise.iter().zip(&one_layer).map(|(a, b)| (a - b).abs()).sum();
+        let da: f32 = precise.iter().zip(&all).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d1 > 0.0, "imprecise conv1 must perturb logits");
+        assert!(da >= d1, "all-imprecise must perturb at least as much");
+    }
+
+    #[test]
+    fn mode_assignment_helpers() {
+        let ma = ModeAssignment::uniform(ArithMode::Precise)
+            .with("a", ArithMode::Imprecise)
+            .with("b", ArithMode::Relaxed);
+        assert_eq!(ma.mode_of("a"), ArithMode::Imprecise);
+        assert_eq!(ma.mode_of("zzz"), ArithMode::Precise);
+        assert_eq!(
+            ma.inexact_count(&["a".into(), "b".into(), "c".into()]),
+            2
+        );
+    }
+
+    #[test]
+    fn compile_rejects_wrong_shapes() {
+        use crate::config::modelfile::{ModelFile, NamedTensor};
+        let net = zoo::tinynet();
+        let mut mf = ModelFile::new();
+        // Wrong weight size for conv1.
+        mf.insert("conv1/w", NamedTensor::new(vec![2], vec![0.0, 0.0]));
+        mf.insert("conv1/b", NamedTensor::new(vec![16], vec![0.0; 16]));
+        assert!(EngineParams::compile(&net, &mf, 4).is_err());
+    }
+
+    #[test]
+    fn bad_input_len_rejected() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 0, 4).unwrap();
+        assert!(run_baseline(&net, &params, &[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,378 @@
+//! Non-conv layer operations for the native engine, in both layouts.
+//!
+//! Map-major variants power the optimised executor; row-major variants
+//! power the single-threaded baseline. Pooling and GAP are
+//! layout-preserving in map-major (spatial-only windows); LRN crosses
+//! stack boundaries and therefore indexes through the true channel axis.
+
+use crate::engine::mode::{mode_cast, ArithMode};
+use crate::engine::tensor::MapTensor;
+
+#[inline]
+fn out_size(size: usize, k: usize, s: usize, p: usize) -> usize {
+    (size + 2 * p - k) / s + 1
+}
+
+// ---------------------------------------------------------------------------
+// Map-major ops
+// ---------------------------------------------------------------------------
+
+/// Max pooling, map-major, layout-preserving.
+pub fn maxpool_mm(x: &MapTensor, k: usize, s: usize, p: usize) -> MapTensor {
+    pool_mm(x, k, s, p, true)
+}
+
+/// Average pooling, map-major. Caffe-style count includes padding
+/// (divisor is always k*k), matching the Python layers.
+pub fn avgpool_mm(x: &MapTensor, k: usize, s: usize, p: usize) -> MapTensor {
+    pool_mm(x, k, s, p, false)
+}
+
+fn pool_mm(x: &MapTensor, k: usize, s: usize, p: usize, is_max: bool) -> MapTensor {
+    let padded = if is_max {
+        x.pad_spatial_with(p, f32::NEG_INFINITY)
+    } else {
+        x.pad_spatial(p)
+    };
+    let (hp, wp, u) = (padded.h, padded.w, padded.u);
+    let ho = (hp - k) / s + 1;
+    let wo = (wp - k) / s + 1;
+    let mut out = MapTensor::zeros(x.c, ho, wo, u);
+    let stacks = x.stacks();
+    for cs in 0..stacks {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let dst = out.offset(cs, oh, ow, 0);
+                let acc = &mut out.data[dst..dst + u];
+                if is_max {
+                    acc.fill(f32::NEG_INFINITY);
+                } else {
+                    acc.fill(0.0);
+                }
+                for kh in 0..k {
+                    let base = ((cs * hp + oh * s + kh) * wp + ow * s) * u;
+                    for kw in 0..k {
+                        let src = &padded.data[base + kw * u..base + (kw + 1) * u];
+                        for l in 0..u {
+                            if is_max {
+                                if src[l] > acc[l] {
+                                    acc[l] = src[l];
+                                }
+                            } else {
+                                acc[l] += src[l];
+                            }
+                        }
+                    }
+                }
+                if !is_max {
+                    let inv = 1.0 / (k * k) as f32;
+                    for a in acc.iter_mut() {
+                        *a *= inv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+impl MapTensor {
+    /// Spatial padding with an arbitrary fill value (max-pool needs -inf).
+    pub fn pad_spatial_with(&self, p: usize, fill: f32) -> MapTensor {
+        if p == 0 {
+            return self.clone();
+        }
+        let (hp, wp) = (self.h + 2 * p, self.w + 2 * p);
+        let mut out = MapTensor::zeros(self.c, hp, wp, self.u);
+        out.data.fill(fill);
+        let stacks = self.stacks();
+        for s in 0..stacks {
+            for hi in 0..self.h {
+                let src0 = self.offset(s, hi, 0, 0);
+                let dst0 = ((s * hp + hi + p) * wp + p) * self.u;
+                out.data[dst0..dst0 + self.w * self.u]
+                    .copy_from_slice(&self.data[src0..src0 + self.w * self.u]);
+            }
+        }
+        // Padding lanes beyond the true channel count must stay `fill`
+        // only where harmless; for max-pool the padded lanes are unused
+        // downstream (true c tracked), so leaving them at `fill` is fine.
+        out
+    }
+}
+
+/// Local response normalisation across channels (AlexNet/GoogLeNet).
+pub fn lrn_mm(x: &MapTensor, size: usize, alpha: f32, beta: f32) -> MapTensor {
+    let (c, h, w, u) = (x.c, x.h, x.w, x.u);
+    let half = size / 2;
+    let mut out = MapTensor::zeros(c, h, w, u);
+    for hi in 0..h {
+        for wi in 0..w {
+            for ci in 0..c {
+                let lo = ci.saturating_sub(half);
+                let hi_c = (ci + half).min(c - 1);
+                let mut ssum = 0.0f32;
+                for cj in lo..=hi_c {
+                    let v = x.at(cj, hi, wi);
+                    ssum += v * v;
+                }
+                let v = x.at(ci, hi, wi);
+                let denom = (1.0 + alpha / size as f32 * ssum).powf(beta);
+                let dst = out.offset(ci / u, hi, wi, ci % u);
+                out.data[dst] = v / denom;
+            }
+        }
+    }
+    out
+}
+
+/// Global average pooling: `(Cb, H, W, u)` → flat `(C,)` (true channels).
+pub fn gap_mm(x: &MapTensor) -> Vec<f32> {
+    let inv = 1.0 / (x.h * x.w) as f32;
+    (0..x.c)
+        .map(|ci| {
+            let mut sum = 0.0f32;
+            for hi in 0..x.h {
+                for wi in 0..x.w {
+                    sum += x.at(ci, hi, wi);
+                }
+            }
+            sum * inv
+        })
+        .collect()
+}
+
+/// Dense layer `(O, I) x (I,) + (O,)`, vectorisable inner loop.
+pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, mode: ArithMode) -> Vec<f32> {
+    let i = x.len();
+    assert_eq!(w.len(), o * i, "dense: weight len");
+    assert_eq!(b.len(), o, "dense: bias len");
+    let x_c;
+    let x: &[f32] = if mode == ArithMode::Precise {
+        x
+    } else {
+        x_c = x.iter().map(|&v| mode_cast(v, mode)).collect::<Vec<_>>();
+        &x_c
+    };
+    let mut out = Vec::with_capacity(o);
+    for oi in 0..o {
+        let row = &w[oi * i..(oi + 1) * i];
+        let mut acc = 0.0f32;
+        if mode == ArithMode::Precise {
+            for l in 0..i {
+                acc += x[l] * row[l];
+            }
+        } else {
+            for l in 0..i {
+                acc += x[l] * mode_cast(row[l], mode);
+            }
+        }
+        acc += b[oi];
+        if relu && acc < 0.0 {
+            acc = 0.0;
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// In-place ReLU.
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Numerically stable softmax.
+pub fn softmax(x: &[f32]) -> Vec<f32> {
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = x.iter().map(|&v| (v - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Row-major (baseline) ops
+// ---------------------------------------------------------------------------
+
+/// Max/avg pooling over `(C, H, W)` row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn pool_nchw(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    is_max: bool,
+) -> (Vec<f32>, usize, usize) {
+    let ho = out_size(h, k, s, p);
+    let wo = out_size(w, k, s, p);
+    let mut out = vec![0.0f32; c * ho * wo];
+    for ci in 0..c {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let mut acc = if is_max { f32::NEG_INFINITY } else { 0.0 };
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let ih = oh * s + kh;
+                        let iw = ow * s + kw;
+                        let v = if ih < p || ih >= h + p || iw < p || iw >= w + p {
+                            if is_max {
+                                f32::NEG_INFINITY
+                            } else {
+                                0.0
+                            }
+                        } else {
+                            x[(ci * h + ih - p) * w + iw - p]
+                        };
+                        if is_max {
+                            acc = acc.max(v);
+                        } else {
+                            acc += v;
+                        }
+                    }
+                }
+                out[(ci * ho + oh) * wo + ow] =
+                    if is_max { acc } else { acc / (k * k) as f32 };
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+/// LRN over `(C, H, W)` row-major.
+pub fn lrn_nchw(x: &[f32], c: usize, h: usize, w: usize, size: usize, alpha: f32, beta: f32) -> Vec<f32> {
+    let half = size / 2;
+    let mut out = vec![0.0f32; x.len()];
+    for ci in 0..c {
+        let lo = ci.saturating_sub(half);
+        let hi_c = (ci + half).min(c - 1);
+        for hi in 0..h {
+            for wi in 0..w {
+                let mut ssum = 0.0f32;
+                for cj in lo..=hi_c {
+                    let v = x[(cj * h + hi) * w + wi];
+                    ssum += v * v;
+                }
+                let v = x[(ci * h + hi) * w + wi];
+                out[(ci * h + hi) * w + wi] =
+                    v / (1.0 + alpha / size as f32 * ssum).powf(beta);
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool over `(C, H, W)` row-major.
+pub fn gap_nchw(x: &[f32], c: usize, h: usize, w: usize) -> Vec<f32> {
+    let inv = 1.0 / (h * w) as f32;
+    (0..c)
+        .map(|ci| x[ci * h * w..(ci + 1) * h * w].iter().sum::<f32>() * inv)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol, "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn maxpool_mm_matches_nchw() {
+        let mut rng = Rng::new(1);
+        for &(c, h, w, k, s, p) in &[(5, 8, 8, 2, 2, 0), (6, 7, 9, 3, 2, 1), (4, 5, 5, 3, 1, 1)] {
+            let x = rng.normal_vec(c * h * w);
+            let (want, ho, wo) = pool_nchw(&x, c, h, w, k, s, p, true);
+            let got = maxpool_mm(&MapTensor::from_nchw(&x, c, h, w, 4), k, s, p);
+            assert_eq!((got.h, got.w), (ho, wo));
+            assert_close(&got.to_nchw(), &want, 1e-6, "maxpool");
+        }
+    }
+
+    #[test]
+    fn avgpool_mm_matches_nchw() {
+        let mut rng = Rng::new(2);
+        let (c, h, w, k, s, p) = (6, 8, 8, 3, 2, 1);
+        let x = rng.normal_vec(c * h * w);
+        let (want, ..) = pool_nchw(&x, c, h, w, k, s, p, false);
+        let got = avgpool_mm(&MapTensor::from_nchw(&x, c, h, w, 4), k, s, p);
+        assert_close(&got.to_nchw(), &want, 1e-6, "avgpool");
+    }
+
+    #[test]
+    fn maxpool_padding_uses_neg_infinity() {
+        // All-negative input: zero padding would corrupt the max.
+        let x = vec![-5.0f32; 4 * 4 * 4];
+        let got = maxpool_mm(&MapTensor::from_nchw(&x, 4, 4, 4, 4), 3, 2, 1);
+        assert!(got.to_nchw().iter().all(|&v| v == -5.0));
+    }
+
+    #[test]
+    fn lrn_mm_matches_nchw() {
+        let mut rng = Rng::new(3);
+        let (c, h, w) = (10, 4, 4);
+        let x = rng.normal_vec(c * h * w);
+        let want = lrn_nchw(&x, c, h, w, 5, 1e-4, 0.75);
+        let got = lrn_mm(&MapTensor::from_nchw(&x, c, h, w, 4), 5, 1e-4, 0.75);
+        assert_close(&got.to_nchw(), &want, 1e-6, "lrn");
+    }
+
+    #[test]
+    fn gap_matches() {
+        let mut rng = Rng::new(4);
+        let (c, h, w) = (6, 3, 5);
+        let x = rng.normal_vec(c * h * w);
+        let want = gap_nchw(&x, c, h, w);
+        let got = gap_mm(&MapTensor::from_nchw(&x, c, h, w, 4));
+        assert_close(&got, &want, 1e-6, "gap");
+    }
+
+    #[test]
+    fn dense_modes() {
+        let mut rng = Rng::new(5);
+        let (i, o) = (32, 8);
+        let x = rng.normal_vec(i);
+        let w = rng.normal_vec(o * i);
+        let b = rng.normal_vec(o);
+        let precise = dense(&x, &w, &b, o, false, ArithMode::Precise);
+        let imprecise = dense(&x, &w, &b, o, false, ArithMode::Imprecise);
+        let max_d = precise
+            .iter()
+            .zip(&imprecise)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_d > 0.0 && max_d < 0.2, "max_d={max_d}");
+        // ReLU variant clamps.
+        let neg_b = vec![-100.0f32; o];
+        let clamped = dense(&x, &w, &neg_b, o, true, ArithMode::Precise);
+        assert!(clamped.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0, 4.0]);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(p[3] > p[2] && p[2] > p[1]);
+        // Stability: huge logits must not produce NaN.
+        let p = softmax(&[1000.0, 999.0]);
+        assert!(p.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn relu_inplace_works() {
+        let mut v = vec![-1.0, 0.0, 2.0];
+        relu_inplace(&mut v);
+        assert_eq!(v, vec![0.0, 0.0, 2.0]);
+    }
+}

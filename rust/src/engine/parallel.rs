@@ -1,0 +1,200 @@
+//! Thread workload allocation (paper section IV.A).
+//!
+//! The three sources of parallelism in a convolutional layer:
+//!
+//! * **OLP** (output-level) — each thread computes whole output pixels
+//!   (the full 3-D convolution for its pixels). No reduction, maximal
+//!   kernel reuse. Cappuccino's primary policy.
+//! * **FLP** (filter-bank-level) — each thread convolves *one entire
+//!   kernel* (one input plane against one 2-D kernel); a reduction sums
+//!   partial planes over input channels.
+//! * **KLP** (kernel-level) — threads split the multiplications *within*
+//!   a kernel window (here: by input-channel slices); a reduction
+//!   accumulates partial products.
+//!
+//! KLP/FLP exist to measure exactly what the paper argues against:
+//! reduction/synchronisation overhead and poor data reuse. The ablation
+//! bench regenerates that comparison.
+
+use std::ops::Range;
+use std::str::FromStr;
+
+/// Thread workload allocation policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Parallelism {
+    Olp,
+    Flp,
+    Klp,
+}
+
+impl Parallelism {
+    pub const ALL: [Parallelism; 3] = [Parallelism::Olp, Parallelism::Flp, Parallelism::Klp];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Parallelism::Olp => "olp",
+            Parallelism::Flp => "flp",
+            Parallelism::Klp => "klp",
+        }
+    }
+}
+
+impl FromStr for Parallelism {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "olp" => Ok(Parallelism::Olp),
+            "flp" => Ok(Parallelism::Flp),
+            "klp" => Ok(Parallelism::Klp),
+            other => Err(crate::Error::Invalid(format!("unknown parallelism {other:?}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Split `n_items` into at most `n_chunks` contiguous ranges.
+pub fn chunk_ranges(n_items: usize, n_chunks: usize) -> Vec<Range<usize>> {
+    if n_items == 0 || n_chunks == 0 {
+        return Vec::new();
+    }
+    let n_chunks = n_chunks.min(n_items);
+    let base = n_items / n_chunks;
+    let extra = n_items % n_chunks;
+    let mut out = Vec::with_capacity(n_chunks);
+    let mut start = 0;
+    for i in 0..n_chunks {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(chunk_index, range)` over `n_items` split across `n_threads`
+/// scoped OS threads. With `n_threads <= 1` runs inline (no spawn cost).
+pub fn parallel_for<F>(n_items: usize, n_threads: usize, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let ranges = chunk_ranges(n_items, n_threads.max(1));
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(0, r);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (i, r) in ranges.into_iter().enumerate() {
+            let f = &f;
+            scope.spawn(move || f(i, r));
+        }
+    });
+}
+
+/// Like [`parallel_for`] but each thread owns a scratch accumulation
+/// buffer of `buf_len` zeros; after the parallel phase the buffers are
+/// reduced (element-wise sum) into a single vector. This is the
+/// reduction + inter-thread data-transfer overhead KLP/FLP pay.
+pub fn parallel_reduce<F>(n_items: usize, n_threads: usize, buf_len: usize, f: F) -> Vec<f32>
+where
+    F: Fn(usize, Range<usize>, &mut [f32]) + Sync,
+{
+    let ranges = chunk_ranges(n_items, n_threads.max(1));
+    if ranges.len() <= 1 {
+        let mut buf = vec![0.0f32; buf_len];
+        if let Some(r) = ranges.into_iter().next() {
+            f(0, r, &mut buf);
+        }
+        return buf;
+    }
+    let n = ranges.len();
+    let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; buf_len]).collect();
+    std::thread::scope(|scope| {
+        for ((i, r), buf) in ranges.into_iter().enumerate().zip(bufs.iter_mut()) {
+            let f = &f;
+            scope.spawn(move || f(i, r, buf));
+        }
+    });
+    // Sequential reduction — deliberately the simple strategy a
+    // RenderScript reduction kernel would lower to.
+    let mut out = bufs.swap_remove(0);
+    for buf in &bufs {
+        for (o, v) in out.iter_mut().zip(buf) {
+            *o += *v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for &(n, c) in &[(10, 3), (3, 10), (0, 4), (7, 7), (100, 1)] {
+            let ranges = chunk_ranges(n, c);
+            let total: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n);
+            let mut expect = 0;
+            for r in &ranges {
+                assert_eq!(r.start, expect);
+                assert!(!r.is_empty());
+                expect = r.end;
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_sizes_balanced() {
+        let ranges = chunk_ranges(10, 3);
+        let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn parallel_for_visits_every_item() {
+        let visited = AtomicUsize::new(0);
+        parallel_for(1000, 4, |_, r| {
+            visited.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(visited.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_for_single_thread_inline() {
+        let visited = AtomicUsize::new(0);
+        parallel_for(10, 1, |i, r| {
+            assert_eq!(i, 0);
+            visited.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(visited.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn parallel_reduce_sums_buffers() {
+        // Each of 8 items adds 1.0 at its index; reduction must total 1
+        // per slot regardless of thread count.
+        for threads in [1, 2, 4, 8] {
+            let out = parallel_reduce(8, threads, 8, |_, range, buf| {
+                for i in range {
+                    buf[i] += 1.0;
+                }
+            });
+            assert_eq!(out, vec![1.0; 8], "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallelism_parse() {
+        assert_eq!("olp".parse::<Parallelism>().unwrap(), Parallelism::Olp);
+        assert!("slp".parse::<Parallelism>().is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Dense f32 tensors for the native engine.
+//!
+//! Two layout conventions flow through the engine:
+//!
+//! * conventional `(C, H, W)` row-major — the baseline executor,
+//! * map-major `(Cb, H, W, u)` — the optimised executor (section IV.B).
+//!
+//! `Tensor` is layout-agnostic storage (dims + row-major data); the
+//! layout-aware wrappers below carry the semantic channel count, since a
+//! map-major tensor's true `C` can be smaller than `Cb * u`.
+
+use crate::util::ceil_div;
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "tensor dims {dims:?} vs data len {}",
+            data.len()
+        );
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Feature maps in map-major layout: `(Cb, H, W, u)` + true channel count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapTensor {
+    /// True (unpadded) channel count.
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Vector width; stacks = ceil(c/u).
+    pub u: usize,
+    /// `(Cb, H, W, u)` C-order data, channel-padded with zeros.
+    pub data: Vec<f32>,
+}
+
+impl MapTensor {
+    pub fn zeros(c: usize, h: usize, w: usize, u: usize) -> Self {
+        let cb = ceil_div(c, u);
+        MapTensor { c, h, w, u, data: vec![0.0; cb * h * w * u] }
+    }
+
+    /// Number of channel stacks `Cb`.
+    pub fn stacks(&self) -> usize {
+        ceil_div(self.c, self.u)
+    }
+
+    /// Construct from conventional `(C, H, W)` data.
+    pub fn from_nchw(src: &[f32], c: usize, h: usize, w: usize, u: usize) -> Self {
+        MapTensor { c, h, w, u, data: crate::layout::nchw_to_mapmajor(src, c, h, w, u) }
+    }
+
+    /// Convert back to conventional `(C, H, W)` (drops padding).
+    pub fn to_nchw(&self) -> Vec<f32> {
+        crate::layout::mapmajor_to_nchw(&self.data, self.c, self.h, self.w, self.u)
+    }
+
+    /// Linear offset of `(stack, h, w, lane)`.
+    #[inline]
+    pub fn offset(&self, stack: usize, h: usize, w: usize, lane: usize) -> usize {
+        ((stack * self.h + h) * self.w + w) * self.u + lane
+    }
+
+    /// Value of true channel `ci` at `(h, w)`.
+    pub fn at(&self, ci: usize, h: usize, w: usize) -> f32 {
+        self.data[self.offset(ci / self.u, h, w, ci % self.u)]
+    }
+
+    /// Spatially zero-pad by `p` on each side (stays map-major).
+    pub fn pad_spatial(&self, p: usize) -> MapTensor {
+        if p == 0 {
+            return self.clone();
+        }
+        let (hp, wp) = (self.h + 2 * p, self.w + 2 * p);
+        let mut out = MapTensor::zeros(self.c, hp, wp, self.u);
+        let stacks = self.stacks();
+        for s in 0..stacks {
+            for hi in 0..self.h {
+                let src0 = self.offset(s, hi, 0, 0);
+                let dst0 = ((s * hp + hi + p) * wp + p) * self.u;
+                out.data[dst0..dst0 + self.w * self.u]
+                    .copy_from_slice(&self.data[src0..src0 + self.w * self.u]);
+            }
+        }
+        out
+    }
+
+    /// Channel-concatenate map-major tensors (fork merge). Requires every
+    /// input's true channel count to be a multiple of `u` (the synthesizer
+    /// checks this alignment precondition).
+    pub fn concat_channels(parts: &[&MapTensor]) -> MapTensor {
+        assert!(!parts.is_empty());
+        let (h, w, u) = (parts[0].h, parts[0].w, parts[0].u);
+        for p in parts {
+            assert_eq!((p.h, p.w, p.u), (h, w, u), "concat: spatial/u mismatch");
+            assert_eq!(p.c % u, 0, "concat: branch width {} not aligned to u={u}", p.c);
+        }
+        let c_total: usize = parts.iter().map(|p| p.c).sum();
+        let mut out = MapTensor::zeros(c_total, h, w, u);
+        let mut dst = 0;
+        for p in parts {
+            out.data[dst..dst + p.data.len()].copy_from_slice(&p.data);
+            dst += p.data.len();
+        }
+        out
+    }
+
+    /// Flatten to the map-major linear order (the order eq. (3)-(5)
+    /// indexes, and the order FC weights are reordered for).
+    pub fn flatten(&self) -> Vec<f32> {
+        self.data.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn from_nchw_at_roundtrip() {
+        let mut rng = Rng::new(1);
+        let (c, h, w, u) = (5, 3, 4, 4);
+        let src = rng.normal_vec(c * h * w);
+        let mm = MapTensor::from_nchw(&src, c, h, w, u);
+        for ci in 0..c {
+            for hi in 0..h {
+                for wi in 0..w {
+                    assert_eq!(mm.at(ci, hi, wi), src[(ci * h + hi) * w + wi]);
+                }
+            }
+        }
+        assert_eq!(mm.to_nchw(), src);
+    }
+
+    #[test]
+    fn pad_spatial_preserves_interior() {
+        let mut rng = Rng::new(2);
+        let (c, h, w, u) = (4, 3, 3, 4);
+        let src = rng.normal_vec(c * h * w);
+        let mm = MapTensor::from_nchw(&src, c, h, w, u);
+        let padded = mm.pad_spatial(2);
+        assert_eq!((padded.h, padded.w), (7, 7));
+        for ci in 0..c {
+            assert_eq!(padded.at(ci, 0, 0), 0.0);
+            assert_eq!(padded.at(ci, 2, 2), mm.at(ci, 0, 0));
+            assert_eq!(padded.at(ci, 4, 4), mm.at(ci, 2, 2));
+        }
+    }
+
+    #[test]
+    fn concat_channels_stacks_aligned_parts() {
+        let u = 4;
+        let a = MapTensor::from_nchw(&vec![1.0; 4 * 2 * 2], 4, 2, 2, u);
+        let b = MapTensor::from_nchw(&vec![2.0; 8 * 2 * 2], 8, 2, 2, u);
+        let cat = MapTensor::concat_channels(&[&a, &b]);
+        assert_eq!(cat.c, 12);
+        assert_eq!(cat.at(0, 0, 0), 1.0);
+        assert_eq!(cat.at(4, 1, 1), 2.0);
+        assert_eq!(cat.at(11, 0, 1), 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn concat_rejects_unaligned() {
+        let u = 4;
+        let a = MapTensor::from_nchw(&vec![1.0; 3 * 2 * 2], 3, 2, 2, u); // c=3 unaligned
+        let b = MapTensor::from_nchw(&vec![2.0; 4 * 2 * 2], 4, 2, 2, u);
+        MapTensor::concat_channels(&[&a, &b]);
+    }
+}

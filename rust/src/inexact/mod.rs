@@ -1,0 +1,225 @@
+//! Inexact-computing analysis (paper section IV.C).
+//!
+//! Given the primary parallel program, a trained model and the
+//! validation dataset, decide *per layer* which arithmetic mode to use:
+//! "the goal is to execute as many CNN layers as possible in inexact
+//! modes, under user specified constraints in terms of acceptable
+//! degradation in classification accuracy."
+//!
+//! The analyzer measures top-1 classification accuracy (not arithmetic
+//! accuracy — the paper's distinction) on the validation split, then
+//! greedily walks the layers in order, trying the cheapest acceptable
+//! mode for each (imprecise first, then relaxed) while keeping all
+//! previously accepted assignments in place. A layer whose inexact modes
+//! breach the accuracy budget stays precise.
+
+use crate::data::Dataset;
+use crate::engine::{self, ArithMode, EngineParams, ExecConfig, ModeAssignment};
+use crate::model::Network;
+use crate::util::error::Result;
+
+/// Analysis configuration.
+#[derive(Debug, Clone)]
+pub struct AnalysisConfig {
+    /// Acceptable top-1 accuracy drop (absolute, e.g. 0.01 = 1 point).
+    pub max_accuracy_drop: f64,
+    /// Validation images to evaluate (taken from the dataset's
+    /// validation split).
+    pub max_images: usize,
+    /// Engine threads per evaluation.
+    pub threads: usize,
+}
+
+impl Default for AnalysisConfig {
+    fn default() -> Self {
+        AnalysisConfig { max_accuracy_drop: 0.01, max_images: 256, threads: 1 }
+    }
+}
+
+/// Per-layer decision record.
+#[derive(Debug, Clone)]
+pub struct LayerDecision {
+    pub layer: String,
+    pub chosen: ArithMode,
+    /// Accuracy with the cumulative assignment including this decision.
+    pub accuracy: f64,
+    /// Modes that were tried and rejected (mode, accuracy).
+    pub rejected: Vec<(ArithMode, f64)>,
+}
+
+/// Full analysis result.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    pub baseline_accuracy: f64,
+    pub final_accuracy: f64,
+    pub decisions: Vec<LayerDecision>,
+    pub assignment: ModeAssignment,
+    /// Evaluations performed (engine runs over the val set).
+    pub evaluations: usize,
+}
+
+impl AnalysisReport {
+    pub fn inexact_layers(&self) -> usize {
+        self.decisions
+            .iter()
+            .filter(|d| d.chosen != ArithMode::Precise)
+            .count()
+    }
+}
+
+/// Top-1 accuracy of `net` under `modes` on (a prefix of) the
+/// validation split.
+pub fn evaluate_accuracy(
+    net: &Network,
+    params: &EngineParams,
+    dataset: &Dataset,
+    modes: &ModeAssignment,
+    cfg: &AnalysisConfig,
+) -> Result<f64> {
+    let (images, labels) = dataset.validation();
+    let n = images.len().min(cfg.max_images).max(1);
+    let mut correct = 0usize;
+    for (img, &label) in images.iter().zip(labels).take(n) {
+        let logits = engine::run_mapmajor(
+            net,
+            params,
+            img,
+            modes,
+            ExecConfig { threads: cfg.threads },
+        )?;
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if pred == label as usize {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+/// Run the layer-by-layer mode analysis.
+pub fn analyze(
+    net: &Network,
+    params: &EngineParams,
+    dataset: &Dataset,
+    cfg: &AnalysisConfig,
+) -> Result<AnalysisReport> {
+    let mut evaluations = 0usize;
+    let mut eval = |modes: &ModeAssignment| -> Result<f64> {
+        evaluations += 1;
+        evaluate_accuracy(net, params, dataset, modes, cfg)
+    };
+
+    let mut assignment = ModeAssignment::uniform(ArithMode::Precise);
+    let baseline = eval(&assignment)?;
+    let budget = baseline - cfg.max_accuracy_drop;
+
+    let mut decisions = Vec::new();
+    let mut last_accuracy = baseline;
+    for layer in net.param_layer_names() {
+        let mut rejected = Vec::new();
+        let mut chosen = ArithMode::Precise;
+        // Cheapest (fastest) mode first: imprecise, then relaxed.
+        for mode in [ArithMode::Imprecise, ArithMode::Relaxed] {
+            let mut candidate = assignment.clone();
+            candidate.per_layer.insert(layer.clone(), mode);
+            let acc = eval(&candidate)?;
+            if acc >= budget {
+                assignment = candidate;
+                chosen = mode;
+                last_accuracy = acc;
+                break;
+            }
+            rejected.push((mode, acc));
+        }
+        decisions.push(LayerDecision {
+            layer,
+            chosen,
+            accuracy: last_accuracy,
+            rejected,
+        });
+    }
+
+    let final_accuracy = last_accuracy;
+    Ok(AnalysisReport {
+        baseline_accuracy: baseline,
+        final_accuracy,
+        decisions,
+        assignment,
+        evaluations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::modelfile::ModelFile;
+    use crate::model::zoo;
+
+    fn trained_setup() -> Option<(Network, EngineParams, Dataset)> {
+        let dir = crate::artifacts_dir();
+        if !dir.join("tinynet.capp").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let net = zoo::tinynet();
+        let mf = ModelFile::read_from(dir.join("tinynet.capp")).unwrap();
+        let params = EngineParams::compile(&net, &mf, 4).unwrap();
+        let dataset = Dataset::read_from(dir.join("dataset.bin")).unwrap();
+        Some((net, params, dataset))
+    }
+
+    #[test]
+    fn trained_tinynet_accuracy_high() {
+        let Some((net, params, dataset)) = trained_setup() else { return };
+        let cfg = AnalysisConfig { max_images: 128, ..Default::default() };
+        let acc = evaluate_accuracy(
+            &net,
+            &params,
+            &dataset,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            &cfg,
+        )
+        .unwrap();
+        assert!(acc > 0.9, "precise accuracy {acc}");
+    }
+
+    #[test]
+    fn analysis_accepts_all_layers_imprecise() {
+        // The paper's headline result: "classification accuracy in
+        // imprecise mode turns out to be identical to the exact mode.
+        // Hence, Cappuccino recommends utilization of imprecise
+        // computing in all layers."
+        let Some((net, params, dataset)) = trained_setup() else { return };
+        let cfg = AnalysisConfig {
+            max_accuracy_drop: 0.02,
+            max_images: 96,
+            threads: 1,
+        };
+        let report = analyze(&net, &params, &dataset, &cfg).unwrap();
+        assert_eq!(report.inexact_layers(), 5, "{:#?}", report.decisions);
+        assert!(report.final_accuracy >= report.baseline_accuracy - 0.02);
+        // Greedy should accept imprecise immediately: 1 baseline + 5.
+        assert_eq!(report.evaluations, 6);
+    }
+
+    #[test]
+    fn zero_budget_keeps_layers_precise_for_random_net() {
+        // An untrained net near the decision boundary everywhere: with a
+        // strict budget, some layers can be rejected. We only assert the
+        // analysis respects the budget (final >= baseline - drop).
+        let Some((_, _, dataset)) = trained_setup() else { return };
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 123, 4).unwrap();
+        let cfg = AnalysisConfig {
+            max_accuracy_drop: 0.0,
+            max_images: 48,
+            threads: 1,
+        };
+        let report = analyze(&net, &params, &dataset, &cfg).unwrap();
+        assert!(report.final_accuracy >= report.baseline_accuracy - 1e-9);
+    }
+}

@@ -1,0 +1,248 @@
+//! Map-major data layout (paper section IV.B) and the zero-overhead OFM
+//! index equations (3)–(5).
+//!
+//! Conventional ("row-major") feature maps are `(C, H, W)` C-order;
+//! map-major groups channels into stacks of `u` with the `u` channel
+//! values of one spatial position contiguous: `(Cb, H, W, u)` with
+//! `Cb = ceil(C/u)` (zero-padded). Weights reorder from `(M, C, K, K)`
+//! to `(Mb, u, Cb, K, K, u)` at compile time. Mirrors
+//! `python/compile/kernels/ref.py` exactly.
+
+use crate::util::{ceil_div, round_up};
+
+/// Thread-id → `(w, h, m)` of the paper's equations (3), (4), (5).
+///
+/// Thread `x` writes its output at linear offset `x`, which by
+/// construction is the map-major location of element `(m, h, w)` — the
+/// "zero-overhead dynamic reordering of OFMs".
+#[inline]
+pub fn thread_index_to_whm(x: usize, u: usize, wout: usize, hout: usize) -> (usize, usize, usize) {
+    let w = (x / u) % wout; // eq. (3)
+    let h = (x / (u * wout)) % hout; // eq. (4)
+    let m = (x % u) + (x / (u * wout * hout)) * u; // eq. (5)
+    (w, h, m)
+}
+
+/// Inverse: map-major linear offset of element `(m, h, w)`.
+#[inline]
+pub fn whm_to_thread_index(w: usize, h: usize, m: usize, u: usize, wout: usize, hout: usize) -> usize {
+    let stack = m / u;
+    let lane = m % u;
+    lane + u * (w + wout * (h + hout * stack))
+}
+
+/// `(C, H, W)` row-major → `(Cb, H, W, u)` map-major (channel-padded).
+pub fn nchw_to_mapmajor(src: &[f32], c: usize, h: usize, w: usize, u: usize) -> Vec<f32> {
+    assert_eq!(src.len(), c * h * w, "nchw_to_mapmajor: src len");
+    let cb = ceil_div(c, u);
+    let mut out = vec![0.0f32; cb * h * w * u];
+    for ci in 0..c {
+        let (stack, lane) = (ci / u, ci % u);
+        for hi in 0..h {
+            for wi in 0..w {
+                out[((stack * h + hi) * w + wi) * u + lane] = src[(ci * h + hi) * w + wi];
+            }
+        }
+    }
+    out
+}
+
+/// `(Cb, H, W, u)` map-major → `(C, H, W)` row-major, dropping padding.
+pub fn mapmajor_to_nchw(src: &[f32], c: usize, h: usize, w: usize, u: usize) -> Vec<f32> {
+    let cb = ceil_div(c, u);
+    assert_eq!(src.len(), cb * h * w * u, "mapmajor_to_nchw: src len");
+    let mut out = vec![0.0f32; c * h * w];
+    for ci in 0..c {
+        let (stack, lane) = (ci / u, ci % u);
+        for hi in 0..h {
+            for wi in 0..w {
+                out[(ci * h + hi) * w + wi] = src[((stack * h + hi) * w + wi) * u + lane];
+            }
+        }
+    }
+    out
+}
+
+/// Weights `(M, C, K, K)` → `(Mb, u, Cb, K, K, u)` (compile-time reorder,
+/// paper section III: "parameter reordering ... occurs during
+/// compile-time").
+pub fn weights_to_mapmajor(src: &[f32], m: usize, c: usize, k: usize, u: usize) -> Vec<f32> {
+    assert_eq!(src.len(), m * c * k * k, "weights_to_mapmajor: src len");
+    let mb = ceil_div(m, u);
+    let cb = ceil_div(c, u);
+    let mut out = vec![0.0f32; mb * u * cb * k * k * u];
+    for mi in 0..m {
+        let (ms, ml) = (mi / u, mi % u);
+        for ci in 0..c {
+            let (cs, cl) = (ci / u, ci % u);
+            for kh in 0..k {
+                for kw in 0..k {
+                    let dst = ((((ms * u + ml) * cb + cs) * k + kh) * k + kw) * u + cl;
+                    out[dst] = src[((mi * c + ci) * k + kh) * k + kw];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Bias `(M,)` → `(Mb, u)` zero-padded.
+pub fn bias_to_mapmajor(src: &[f32], u: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; round_up(src.len(), u)];
+    out[..src.len()].copy_from_slice(src);
+    out
+}
+
+/// FC weight columns `(O, I)` with `I = c*h*w` row-major-flatten order →
+/// `(O, Ib)` consuming the map-major flatten order (`Ib = cb*u*h*w`).
+/// Compile-time only; mirrors `kernels/dense.fc_weights_for_mapmajor`.
+pub fn fc_weights_for_mapmajor(
+    src: &[f32],
+    o: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    u: usize,
+) -> Vec<f32> {
+    assert_eq!(src.len(), o * c * h * w, "fc_weights_for_mapmajor: src len");
+    let cb = ceil_div(c, u);
+    let ib = cb * h * w * u;
+    let mut out = vec![0.0f32; o * ib];
+    for oi in 0..o {
+        for ci in 0..c {
+            let (stack, lane) = (ci / u, ci % u);
+            for hi in 0..h {
+                for wi in 0..w {
+                    let dst_col = ((stack * h + hi) * w + wi) * u + lane;
+                    out[oi * ib + dst_col] = src[oi * c * h * w + (ci * h + hi) * w + wi];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eqs_3_4_5_bijection() {
+        for &(u, wout, hout, stacks) in &[(4, 5, 3, 2), (2, 7, 4, 3), (1, 3, 3, 1), (8, 2, 2, 2)] {
+            let total = u * wout * hout * stacks;
+            let mut seen = vec![false; total];
+            for x in 0..total {
+                let (w, h, m) = thread_index_to_whm(x, u, wout, hout);
+                assert!(w < wout && h < hout && m < stacks * u);
+                assert_eq!(whm_to_thread_index(w, h, m, u, wout, hout), x);
+                let key = (m * hout + h) * wout + w;
+                assert!(!seen[key], "duplicate mapping at x={x}");
+                seen[key] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn paper_example_second_thread() {
+        // Section IV.B.1: thread x=1 must produce (m=1, h=0, w=0).
+        let (w, h, m) = thread_index_to_whm(1, 4, 5, 5);
+        assert_eq!((m, h, w), (1, 0, 0));
+    }
+
+    #[test]
+    fn nchw_mapmajor_roundtrip() {
+        let mut rng = Rng::new(1);
+        for &(c, h, w, u) in &[(3, 4, 5, 4), (8, 3, 3, 4), (5, 2, 2, 2), (7, 4, 4, 8)] {
+            let src = rng.normal_vec(c * h * w);
+            let mm = nchw_to_mapmajor(&src, c, h, w, u);
+            assert_eq!(mm.len(), ceil_div(c, u) * h * w * u);
+            let back = mapmajor_to_nchw(&mm, c, h, w, u);
+            assert_eq!(back, src);
+        }
+    }
+
+    #[test]
+    fn mapmajor_matches_eq2_order() {
+        // Paper eq. (2): (0,0,0),(1,0,0),(2,0,0),(3,0,0),(0,0,1),...
+        let (c, h, w, u) = (8, 2, 3, 4);
+        let src: Vec<f32> = (0..c * h * w).map(|i| i as f32).collect();
+        let mm = nchw_to_mapmajor(&src, c, h, w, u);
+        let elem = |ch: usize, row: usize, col: usize| src[(ch * h + row) * w + col];
+        assert_eq!(&mm[..4], &[elem(0, 0, 0), elem(1, 0, 0), elem(2, 0, 0), elem(3, 0, 0)]);
+        assert_eq!(&mm[4..8], &[elem(0, 0, 1), elem(1, 0, 1), elem(2, 0, 1), elem(3, 0, 1)]);
+        // Second stack starts after the entire first stack.
+        assert_eq!(mm[h * w * u], elem(4, 0, 0));
+    }
+
+    #[test]
+    fn mapmajor_offset_agrees_with_index_equations() {
+        let (m_total, hout, wout, u) = (8, 3, 4, 4);
+        let src: Vec<f32> = (0..m_total * hout * wout).map(|i| i as f32).collect();
+        let mm = nchw_to_mapmajor(&src, m_total, hout, wout, u);
+        for (x, v) in mm.iter().enumerate() {
+            let (w, h, m) = thread_index_to_whm(x, u, wout, hout);
+            assert_eq!(*v, src[(m * hout + h) * wout + w]);
+        }
+    }
+
+    #[test]
+    fn weight_reorder_places_every_tap() {
+        let mut rng = Rng::new(2);
+        let (m, c, k, u) = (6, 5, 3, 4);
+        let src = rng.normal_vec(m * c * k * k);
+        let mm = weights_to_mapmajor(&src, m, c, k, u);
+        let mb = ceil_div(m, u);
+        let cb = ceil_div(c, u);
+        assert_eq!(mm.len(), mb * u * cb * k * k * u);
+        for mi in 0..m {
+            for ci in 0..c {
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let dst = (((((mi / u) * u + mi % u) * cb + ci / u) * k + kh) * k + kw) * u
+                            + ci % u;
+                        assert_eq!(mm[dst], src[((mi * c + ci) * k + kh) * k + kw]);
+                    }
+                }
+            }
+        }
+        // Padding lanes are zero.
+        for cs in 0..cb {
+            for lane in 0..u {
+                let ci = cs * u + lane;
+                if ci >= c {
+                    for ms in 0..mb * u {
+                        for kh in 0..k {
+                            for kw in 0..k {
+                                let dst = (((ms * cb + cs) * k + kh) * k + kw) * u + lane;
+                                assert_eq!(mm[dst], 0.0);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bias_reorder_pads() {
+        let b = bias_to_mapmajor(&[1.0, 2.0, 3.0, 4.0, 5.0], 4);
+        assert_eq!(b, vec![1.0, 2.0, 3.0, 4.0, 5.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn fc_reorder_preserves_dot_products() {
+        let mut rng = Rng::new(3);
+        let (o, c, h, w, u) = (5, 6, 3, 4, 4);
+        let x = rng.normal_vec(c * h * w);
+        let wt = rng.normal_vec(o * c * h * w);
+        let x_mm = nchw_to_mapmajor(&x, c, h, w, u);
+        let wt_mm = fc_weights_for_mapmajor(&wt, o, c, h, w, u);
+        let ib = x_mm.len();
+        for oi in 0..o {
+            let want: f32 = (0..c * h * w).map(|i| wt[oi * c * h * w + i] * x[i]).sum();
+            let got: f32 = (0..ib).map(|i| wt_mm[oi * ib + i] * x_mm[i]).sum();
+            assert!((want - got).abs() < 1e-4, "row {oi}: {want} vs {got}");
+        }
+    }
+}

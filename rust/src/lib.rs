@@ -1,0 +1,65 @@
+//! # Cappuccino — CNN inference software synthesis for mobile SoCs
+//!
+//! Reproduction of *"Cappuccino: Efficient Inference Software Synthesis
+//! for Mobile System-on-Chips"* (Motamedi, Fong, Ghiasi, 2017) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build-time Python): map-major vectorised convolution /
+//!   dense Pallas kernels (`python/compile/kernels/`).
+//! * **Layer 2** (build-time Python): the paper's three CNNs (AlexNet,
+//!   SqueezeNet, GoogLeNet) plus TinyNet, lowered once to HLO text
+//!   (`python/compile/aot.py` → `artifacts/`).
+//! * **Layer 3** (this crate): the Cappuccino system itself — network
+//!   description parsing, compile-time parameter reordering, the
+//!   synthesizer, the inexact-computing analyzer, the native execution
+//!   engine, a mobile-SoC simulator (the paper's testbed substitute),
+//!   the PJRT runtime that executes the AOT artifacts, and a serving
+//!   front-end. Python never runs on the request path.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | error type, PRNG, JSON, misc substrates |
+//! | [`config`] | `.cappnet` network descriptions + `.capp` model files |
+//! | [`model`] | layer IR, shape inference, FLOP counting, model zoo |
+//! | [`layout`] | map-major reordering + the paper's eqs. (3)–(5) |
+//! | [`engine`] | native execution engine (OLP/KLP/FLP, vector modes) |
+//! | [`soc`] | mobile SoC simulator: latency + energy + CNNDroid models |
+//! | [`data`] | synthetic validation dataset IO |
+//! | [`metrics`] | latency histograms, throughput, energy accounting |
+//! | [`synth`] | primary-program + software synthesizers (plans) |
+//! | [`inexact`] | per-layer arithmetic-mode analysis |
+//! | [`runtime`] | PJRT artifact loading/execution (`xla` crate) |
+//! | [`serve`] | request router, dynamic batcher, worker pool |
+//! | [`bench`] | in-repo micro-benchmark harness (criterion stand-in) |
+//! | [`testing`] | in-repo property-testing helper (proptest stand-in) |
+
+pub mod bench;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod inexact;
+pub mod layout;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod serve;
+pub mod soc;
+pub mod synth;
+pub mod testing;
+pub mod util;
+
+pub use util::error::{Error, Result};
+
+/// The vector width used throughout the repo's artifacts (paper's `u`).
+pub const DEFAULT_U: usize = 4;
+
+/// Locate the `artifacts/` directory: `$CAPPUCCINO_ARTIFACTS` or the
+/// crate-relative default.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("CAPPUCCINO_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}

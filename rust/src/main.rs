@@ -1,0 +1,333 @@
+//! Cappuccino CLI — the leader entrypoint.
+//!
+//! Subcommands mirror the paper's workflow (Fig. 3) plus the serving
+//! and simulation facilities:
+//!
+//! ```text
+//! cappuccino info                          # nets, devices, artifacts
+//! cappuccino synthesize --net squeezenet   # Fig. 3 flow -> plan JSON
+//! cappuccino analyze   --net tinynet       # sec IV.C mode analysis
+//! cappuccino simulate  --net alexnet       # Table I row on all devices
+//! cappuccino serve     --net tinynet --requests 64   # PJRT serving demo
+//! ```
+
+use std::collections::HashMap;
+
+use cappuccino::config::modelfile::ModelFile;
+use cappuccino::data::Dataset;
+use cappuccino::engine::{ArithMode, EngineParams, ModeAssignment};
+use cappuccino::inexact::{self, AnalysisConfig};
+use cappuccino::model::zoo;
+use cappuccino::serve::{pjrt_factory, BatchPolicy, Server};
+use cappuccino::soc::{self, ProcessingMode};
+use cappuccino::synth::{finalize, PrimarySynthesizer};
+use cappuccino::util::rng::Rng;
+use cappuccino::{Error, Result};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal `--key value` flag parser (clap is not in the vendored set).
+struct Flags {
+    cmd: String,
+    kv: HashMap<String, String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let cmd = args
+            .first()
+            .cloned()
+            .unwrap_or_else(|| "help".to_string());
+        let mut kv = HashMap::new();
+        let mut i = 1;
+        while i < args.len() {
+            let key = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Invalid(format!("expected --flag, got {:?}", args[i])))?;
+            let value = args
+                .get(i + 1)
+                .ok_or_else(|| Error::Invalid(format!("--{key} needs a value")))?;
+            kv.insert(key.to_string(), value.clone());
+            i += 2;
+        }
+        Ok(Flags { cmd, kv })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.kv.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Invalid(format!("--{key}: bad number {v:?}"))),
+            None => Ok(default),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.kv.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Invalid(format!("--{key}: bad number {v:?}"))),
+            None => Ok(default),
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    match flags.cmd.as_str() {
+        "info" => cmd_info(),
+        "synthesize" => cmd_synthesize(&flags),
+        "analyze" => cmd_analyze(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "serve" => cmd_serve(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(Error::Invalid(format!("unknown command {other:?}; try `help`"))),
+    }
+}
+
+const HELP: &str = "\
+cappuccino — CNN inference software synthesis for mobile SoCs (reproduction)
+
+USAGE: cappuccino <command> [--flag value ...]
+
+COMMANDS:
+  info                               list networks, devices, artifacts
+  synthesize --net NAME              run the Fig. 3 synthesis flow; emits plan JSON
+             [--u 4] [--threads 4] [--budget 0.01] [--out plan.json]
+  analyze    --net tinynet           per-layer inexact-computing analysis (sec IV.C)
+             [--images 256] [--budget 0.01]
+  simulate   --net NAME              Table I row for NAME on the device catalog
+  serve      --net tinynet           serve a synthetic workload over PJRT artifacts
+             [--mode imprecise] [--requests 64] [--batch 8]
+";
+
+fn cmd_info() -> Result<()> {
+    println!("networks:");
+    for net in zoo::all() {
+        let info = cappuccino::model::shapes::infer(&net)?;
+        println!(
+            "  {:<11} {:>6.2} GFLOPs  {:>7} params  {} mode-layers",
+            net.name,
+            info.total_flops() / 1e9,
+            cappuccino::util::eng(net.param_count() as f64),
+            net.param_layer_names().len()
+        );
+    }
+    println!("devices:");
+    for d in soc::catalog() {
+        println!(
+            "  {:<10} {:<15} {} cores @ {:.2} GHz, {:.0} GB/s",
+            d.name, d.soc, d.cores, d.ghz, d.mem_bw_gbs
+        );
+    }
+    let dir = cappuccino::artifacts_dir();
+    match cappuccino::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir.display());
+            for a in &m.artifacts {
+                println!("  {:<26} {:?}", a.name, a.input_shape);
+            }
+        }
+        Err(_) => println!("artifacts: not built (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_synthesize(flags: &Flags) -> Result<()> {
+    let net_name = flags.get("net", "tinynet");
+    let net = zoo::by_name(&net_name)
+        .ok_or_else(|| Error::Invalid(format!("unknown net {net_name:?}")))?;
+    let u = flags.get_usize("u", cappuccino::DEFAULT_U)?;
+    let threads = flags.get_usize("threads", 4)?;
+    let budget = flags.get_f64("budget", 0.01)?;
+
+    eprintln!("[1/3] primary program synthesis (OLP, map-major, u={u})");
+    let primary = PrimarySynthesizer::new(u, threads).synthesize(&net)?;
+
+    // Inexact analysis needs trained weights + the validation set; those
+    // exist for tinynet. Other nets follow the paper's measured outcome
+    // (imprecise everywhere, accuracy unchanged) as the default.
+    let dir = cappuccino::artifacts_dir();
+    let modes = if net_name == "tinynet" && dir.join("tinynet.capp").exists() {
+        eprintln!("[2/3] inexact-computing analysis on the validation set");
+        let mf = ModelFile::read_from(dir.join("tinynet.capp"))?;
+        let params = EngineParams::compile(&net, &mf, u)?;
+        let dataset = Dataset::read_from(dir.join("dataset.bin"))?;
+        let cfg = AnalysisConfig {
+            max_accuracy_drop: budget,
+            max_images: flags.get_usize("images", 256)?,
+            threads,
+        };
+        let report = inexact::analyze(&net, &params, &dataset, &cfg)?;
+        eprintln!(
+            "      baseline acc {:.4}, final acc {:.4}, {}/{} layers inexact",
+            report.baseline_accuracy,
+            report.final_accuracy,
+            report.inexact_layers(),
+            report.decisions.len()
+        );
+        report.assignment
+    } else {
+        eprintln!("[2/3] no trained weights for {net_name}: adopting the paper's");
+        eprintln!("      measured outcome (imprecise in all layers)");
+        ModeAssignment::uniform(ArithMode::Imprecise)
+    };
+
+    eprintln!("[3/3] software synthesis");
+    let plan = finalize(&primary, &modes);
+    let json = plan.to_json().to_string();
+    let out = flags.get("out", "-");
+    if out == "-" {
+        println!("{json}");
+    } else {
+        std::fs::write(&out, &json)?;
+        eprintln!("wrote plan to {out}");
+    }
+    for d in soc::catalog() {
+        eprintln!(
+            "      predicted on {:<10} {:>9.2} ms",
+            d.name,
+            cappuccino::synth::predict_latency_ms(&plan, &net, &d)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_analyze(flags: &Flags) -> Result<()> {
+    let net_name = flags.get("net", "tinynet");
+    if net_name != "tinynet" {
+        return Err(Error::Invalid(
+            "analysis needs trained weights; only tinynet ships them".into(),
+        ));
+    }
+    let dir = cappuccino::artifacts_dir();
+    let net = zoo::tinynet();
+    let mf = ModelFile::read_from(dir.join("tinynet.capp"))?;
+    let params = EngineParams::compile(&net, &mf, cappuccino::DEFAULT_U)?;
+    let dataset = Dataset::read_from(dir.join("dataset.bin"))?;
+    let cfg = AnalysisConfig {
+        max_accuracy_drop: flags.get_f64("budget", 0.01)?,
+        max_images: flags.get_usize("images", 256)?,
+        threads: flags.get_usize("threads", 1)?,
+    };
+    let report = inexact::analyze(&net, &params, &dataset, &cfg)?;
+    println!("baseline accuracy: {:.4}", report.baseline_accuracy);
+    for d in &report.decisions {
+        println!(
+            "  {:<8} -> {:<9} (cumulative acc {:.4}{})",
+            d.layer,
+            d.chosen.as_str(),
+            d.accuracy,
+            if d.rejected.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    ", rejected: {}",
+                    d.rejected
+                        .iter()
+                        .map(|(m, a)| format!("{}@{a:.4}", m.as_str()))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                )
+            }
+        );
+    }
+    println!(
+        "final accuracy: {:.4} ({} evaluations, {}/{} layers inexact)",
+        report.final_accuracy,
+        report.evaluations,
+        report.inexact_layers(),
+        report.decisions.len()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(flags: &Flags) -> Result<()> {
+    let net_name = flags.get("net", "squeezenet");
+    let net = zoo::by_name(&net_name)
+        .ok_or_else(|| Error::Invalid(format!("unknown net {net_name:?}")))?;
+    println!("{net_name} on the device catalog (simulated, ms):");
+    println!(
+        "{:<11} {:>12} {:>10} {:>10} {:>9}",
+        "device", "baseline", "parallel", "imprecise", "speedup"
+    );
+    for d in soc::catalog() {
+        let base = soc::measure_trimmed(&net, &d, ProcessingMode::JavaBaseline, 100, 0.01, 1);
+        let par = soc::measure_trimmed(&net, &d, ProcessingMode::Parallel, 100, 0.01, 2);
+        let imp = soc::measure_trimmed(&net, &d, ProcessingMode::Imprecise, 100, 0.01, 3);
+        println!(
+            "{:<11} {:>12.2} {:>10.2} {:>10.2} {:>8.2}x",
+            d.name,
+            base,
+            par,
+            imp,
+            base / imp
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let net = flags.get("net", "tinynet");
+    let mode = flags.get("mode", "imprecise");
+    let n_requests = flags.get_usize("requests", 64)?;
+    let max_batch = flags.get_usize("batch", 8)?;
+    let dir = cappuccino::artifacts_dir();
+
+    // tinynet serves its trained weights; other nets get random weights
+    // (latency-only serving demo).
+    let seed = if net == "tinynet" { None } else { Some(42) };
+    let factory = pjrt_factory(dir.clone(), net.clone(), mode.clone(), seed);
+    let policy = BatchPolicy {
+        max_batch,
+        max_delay: std::time::Duration::from_millis(2),
+        queue_depth: 128,
+    };
+    eprintln!("loading {net}/{mode} artifacts ...");
+    let server = Server::start(vec![(net.clone(), factory, policy)])?;
+
+    // Synthetic client: dataset validation images (tinynet) or noise.
+    let manifest = cappuccino::runtime::Manifest::load(&dir)?;
+    let network = manifest
+        .nets
+        .get(&net)
+        .ok_or_else(|| Error::Invalid(format!("no net {net} in manifest")))?;
+    let input_len = network.input.elements();
+    let images: Vec<Vec<f32>> = if net == "tinynet" {
+        let dataset = Dataset::read_from(dir.join("dataset.bin"))?;
+        let (val, _) = dataset.validation();
+        (0..n_requests).map(|i| val[i % val.len()].clone()).collect()
+    } else {
+        let mut rng = Rng::new(9);
+        (0..n_requests).map(|_| rng.normal_vec(input_len)).collect()
+    };
+
+    eprintln!("serving {n_requests} requests ...");
+    let mut receivers = Vec::with_capacity(n_requests);
+    for img in images {
+        receivers.push(server.router().submit(&net, img)?);
+    }
+    let mut ok = 0;
+    for rx in receivers {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    println!("{ok}/{n_requests} completed");
+    println!("{}", server.metrics().summary());
+    server.shutdown();
+    Ok(())
+}

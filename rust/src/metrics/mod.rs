@@ -1,0 +1,233 @@
+//! Measurement substrates: latency histograms, throughput meters, and
+//! the paper's trimmed-mean protocol.
+//!
+//! Section V.A: "all experiments have been repeated 100 times, the
+//! minimum and maximum observations are omitted, and the average of the
+//! remaining 98 observations are reported" — [`trimmed_mean`] implements
+//! exactly that protocol and every bench reports through it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// The paper's measurement protocol: drop min and max, average the rest.
+pub fn trimmed_mean(samples: &[f64]) -> f64 {
+    match samples.len() {
+        0 => 0.0,
+        1 => samples[0],
+        2 => (samples[0] + samples[1]) / 2.0,
+        n => {
+            let sum: f64 = samples.iter().sum();
+            let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            (sum - min - max) / (n - 2) as f64
+        }
+    }
+}
+
+/// Log-bucketed latency histogram (1µs … ~17min, 5% resolution).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    /// Bucket i covers [GROWTH^i, GROWTH^(i+1)) microseconds.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const GROWTH: f64 = 1.05;
+const N_BUCKETS: usize = 420; // 1.05^420 ≈ 8e8 µs ≈ 13 min
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        let idx = us.ln() / GROWTH.ln();
+        (idx as usize).min(N_BUCKETS - 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.max_us.fetch_max(us as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Quantile via bucket interpolation (upper bucket edge).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target.max(1) {
+                let upper_us = GROWTH.powi(i as i32 + 1);
+                return Duration::from_secs_f64(upper_us / 1e6);
+            }
+        }
+        self.max()
+    }
+
+    /// p50/p95/p99 summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.count(),
+            crate::util::fmt_duration(self.mean()),
+            crate::util::fmt_duration(self.quantile(0.50)),
+            crate::util::fmt_duration(self.quantile(0.95)),
+            crate::util::fmt_duration(self.quantile(0.99)),
+            crate::util::fmt_duration(self.max()),
+        )
+    }
+}
+
+/// Throughput meter: items completed since construction.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    items: AtomicU64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), items: AtomicU64::new(0) }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.items.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items.load(Ordering::Relaxed)
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let elapsed = self.start.elapsed().as_secs_f64();
+        if elapsed <= 0.0 {
+            0.0
+        } else {
+            self.items() as f64 / elapsed
+        }
+    }
+}
+
+/// Serving-side counters (requests, batches, rejections).
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+}
+
+impl ServeCounters {
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        // Paper protocol: omit min and max.
+        let samples = [10.0, 1.0, 10.0, 10.0, 100.0];
+        assert!((trimmed_mean(&samples) - 10.0).abs() < 1e-9);
+        assert_eq!(trimmed_mean(&[]), 0.0);
+        assert_eq!(trimmed_mean(&[5.0]), 5.0);
+        assert_eq!(trimmed_mean(&[4.0, 6.0]), 5.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i * 10));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // p50 ≈ 5ms within bucket resolution.
+        let p50_us = p50.as_secs_f64() * 1e6;
+        assert!((4000.0..7000.0).contains(&p50_us), "p50 {p50_us}µs");
+    }
+
+    #[test]
+    fn histogram_mean_max() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.mean(), Duration::from_micros(200));
+        assert_eq!(h.max(), Duration::from_micros(300));
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let t = Throughput::new();
+        t.add(5);
+        t.add(7);
+        assert_eq!(t.items(), 12);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.per_second() > 0.0);
+    }
+
+    #[test]
+    fn serve_counters_batch_mean() {
+        let c = ServeCounters::default();
+        c.batches.store(4, Ordering::Relaxed);
+        c.batched_items.store(10, Ordering::Relaxed);
+        assert_eq!(c.mean_batch_size(), 2.5);
+    }
+}

@@ -1,0 +1,243 @@
+//! Layer IR: the network representation every subsystem consumes.
+//!
+//! A [`Network`] is a linear list of [`Layer`]s whose only structural op
+//! is [`LayerOp::Fork`] (branch + channel-concat, covering SqueezeNet
+//! fire modules and GoogLeNet inception modules). The IR mirrors the
+//! Python spec in `python/compile/model.py` one-to-one — the AOT
+//! manifest embeds the expanded Python spec and
+//! [`Network::from_manifest`] rebuilds it here, so both sides provably
+//! describe the same computation (checked in integration tests).
+
+pub mod shapes;
+pub mod zoo;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Primitive layer operations (post fire/inception expansion).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerOp {
+    /// Convolution: `m` output maps, `k`x`k` kernels, stride `s`,
+    /// symmetric spatial padding `p`, optional fused ReLU.
+    Conv { m: usize, k: usize, s: usize, p: usize, relu: bool },
+    MaxPool { k: usize, s: usize, p: usize },
+    AvgPool { k: usize, s: usize, p: usize },
+    /// Local response normalisation across channels.
+    Lrn { size: usize, alpha: f32, beta: f32 },
+    /// Parallel branches whose outputs are channel-concatenated.
+    Fork { branches: Vec<Vec<Layer>> },
+    Flatten,
+    /// Global average pool (+ implicit flatten to `(C,)`).
+    Gap,
+    Dense { o: usize, relu: bool },
+    Softmax,
+}
+
+/// A named layer. Only conv/dense names are semantically meaningful
+/// (parameters + arithmetic-mode assignment address them); other layers
+/// carry names for diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub op: LayerOp,
+}
+
+impl Layer {
+    pub fn new(name: impl Into<String>, op: LayerOp) -> Self {
+        Layer { name: name.into(), op }
+    }
+
+    /// Does this layer own parameters (and therefore a mode assignment)?
+    pub fn has_params(&self) -> bool {
+        matches!(self.op, LayerOp::Conv { .. } | LayerOp::Dense { .. })
+    }
+}
+
+/// Activation shape flowing between layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorShape {
+    /// Feature maps `(C, H, W)` (stored map-major at runtime).
+    Maps { c: usize, h: usize, w: usize },
+    /// Flattened vector `(len,)`.
+    Flat { len: usize },
+}
+
+impl TensorShape {
+    pub fn maps(c: usize, h: usize, w: usize) -> Self {
+        TensorShape::Maps { c, h, w }
+    }
+
+    pub fn elements(&self) -> usize {
+        match *self {
+            TensorShape::Maps { c, h, w } => c * h * w,
+            TensorShape::Flat { len } => len,
+        }
+    }
+
+    /// `(C, H, W)` or an error for flat shapes.
+    pub fn as_maps(&self) -> Result<(usize, usize, usize)> {
+        match *self {
+            TensorShape::Maps { c, h, w } => Ok((c, h, w)),
+            TensorShape::Flat { len } => {
+                Err(Error::Shape(format!("expected feature maps, got flat({len})")))
+            }
+        }
+    }
+}
+
+/// A complete network: metadata + layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    /// Input shape `(C, H, W)` in conventional terms.
+    pub input: TensorShape,
+    /// Number of classifier outputs.
+    pub classes: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Walk every layer depth-first (branches in order), applying `f`.
+    pub fn visit<'a>(&'a self, f: &mut impl FnMut(&'a Layer)) {
+        fn walk<'a>(layers: &'a [Layer], f: &mut impl FnMut(&'a Layer)) {
+            for layer in layers {
+                f(layer);
+                if let LayerOp::Fork { branches } = &layer.op {
+                    for br in branches {
+                        walk(br, f);
+                    }
+                }
+            }
+        }
+        walk(&self.layers, f);
+    }
+
+    /// Names of every parameterised (conv/dense) layer, in the canonical
+    /// order shared with the Python AOT path (`model.param_order`).
+    pub fn param_layer_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        self.visit(&mut |l| {
+            if l.has_params() {
+                names.push(l.name.clone());
+            }
+        });
+        names
+    }
+
+    /// Total number of parameters (weights + biases, conventional layout).
+    pub fn param_count(&self) -> usize {
+        shapes::infer(self)
+            .map(|info| {
+                info.param_layers
+                    .iter()
+                    .map(|p| p.weight_elems + p.bias_elems)
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Rebuild a network from the AOT manifest's expanded spec.
+    pub fn from_manifest(name: &str, net_json: &Json) -> Result<Network> {
+        let input = net_json.get("input_shape")?.usize_vec()?;
+        if input.len() != 3 {
+            return Err(Error::parse("manifest", format!("input_shape {input:?}")));
+        }
+        let classes = net_json.get("classes")?.as_usize()?;
+        let layers = parse_layers(net_json.get("layers")?.as_arr()?)?;
+        Ok(Network {
+            name: name.to_string(),
+            input: TensorShape::maps(input[0], input[1], input[2]),
+            classes,
+            layers,
+        })
+    }
+}
+
+fn parse_layers(arr: &[Json]) -> Result<Vec<Layer>> {
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, lay) in arr.iter().enumerate() {
+        let op = lay.get("op")?.as_str()?;
+        let name = lay
+            .opt("name")
+            .and_then(|n| n.as_str().ok())
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("{op}{i}"));
+        let op = match op {
+            "conv" => LayerOp::Conv {
+                m: lay.get("m")?.as_usize()?,
+                k: lay.get("k")?.as_usize()?,
+                s: lay.get("s")?.as_usize()?,
+                p: lay.get("p")?.as_usize()?,
+                relu: lay.get("relu")?.as_bool()?,
+            },
+            "maxpool" | "avgpool" => {
+                let k = lay.get("k")?.as_usize()?;
+                let s = lay.get("s")?.as_usize()?;
+                let p = lay.get("p")?.as_usize()?;
+                if op == "maxpool" {
+                    LayerOp::MaxPool { k, s, p }
+                } else {
+                    LayerOp::AvgPool { k, s, p }
+                }
+            }
+            "lrn" => LayerOp::Lrn {
+                size: lay.get("size")?.as_usize()?,
+                alpha: lay.get("alpha")?.as_f64()? as f32,
+                beta: lay.get("beta")?.as_f64()? as f32,
+            },
+            "fork" => {
+                let branches = lay
+                    .get("branches")?
+                    .as_arr()?
+                    .iter()
+                    .map(|br| parse_layers(br.as_arr()?))
+                    .collect::<Result<Vec<_>>>()?;
+                LayerOp::Fork { branches }
+            }
+            "flatten" => LayerOp::Flatten,
+            "gap" => LayerOp::Gap,
+            "dense" => LayerOp::Dense {
+                o: lay.get("o")?.as_usize()?,
+                relu: lay.get("relu")?.as_bool()?,
+            },
+            "softmax" => LayerOp::Softmax,
+            other => {
+                return Err(Error::parse("manifest", format!("unknown op {other:?}")))
+            }
+        };
+        out.push(Layer { name, op });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn visit_covers_branches() {
+        let net = zoo::squeezenet();
+        let mut n = 0;
+        net.visit(&mut |_| n += 1);
+        // 2 convs+3 pools+1 gap + 8 fires * (1 squeeze conv + 1 fork +
+        // 2 branch convs) = definitely more than the top-level count.
+        assert!(n > net.layers.len());
+    }
+
+    #[test]
+    fn param_layer_names_order_matches_python() {
+        let net = zoo::tinynet();
+        assert_eq!(
+            net.param_layer_names(),
+            vec!["conv1", "conv2", "conv3", "fc4", "fc5"]
+        );
+    }
+
+    #[test]
+    fn tensor_shape_accessors() {
+        let s = TensorShape::maps(3, 4, 5);
+        assert_eq!(s.elements(), 60);
+        assert_eq!(s.as_maps().unwrap(), (3, 4, 5));
+        assert!(TensorShape::Flat { len: 9 }.as_maps().is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Shape inference + cost profiling over the layer IR.
+//!
+//! The cost numbers (FLOPs, parameter/activation bytes) feed the SoC
+//! simulator's roofline model (`soc::latency`), so they are computed per
+//! *primitive* layer, branches included.
+
+use crate::model::{Layer, LayerOp, Network, TensorShape};
+use crate::util::error::{Error, Result};
+
+/// Conv/pool output size: `floor((size + 2p - k) / s) + 1`.
+pub fn conv_out(size: usize, k: usize, s: usize, p: usize) -> Result<usize> {
+    let padded = size + 2 * p;
+    if padded < k {
+        return Err(Error::Shape(format!(
+            "window k={k} larger than padded input {padded}"
+        )));
+    }
+    Ok((padded - k) / s + 1)
+}
+
+/// Parameter geometry of one conv/dense layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamLayer {
+    pub name: String,
+    /// Input shape this layer sees.
+    pub input: TensorShape,
+    /// Output shape it produces.
+    pub output: TensorShape,
+    pub weight_elems: usize,
+    pub bias_elems: usize,
+    /// Kernel size (0 for dense).
+    pub k: usize,
+    /// For the first dense after a `flatten`: the `(C, H, W)` shape the
+    /// flatten consumed — needed to permute FC weight columns for the
+    /// map-major flatten order (compile-time reorder).
+    pub flatten_src: Option<(usize, usize, usize)>,
+}
+
+/// Per-primitive-layer cost entry for the simulator.
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    pub name: String,
+    pub kind: &'static str,
+    /// Multiply–accumulates counted as 2 FLOPs each; pools/LRN counted
+    /// as one op per element visited.
+    pub flops: f64,
+    /// Parameter bytes (f32) this layer must stream in.
+    pub param_bytes: f64,
+    pub input_bytes: f64,
+    pub output_bytes: f64,
+    /// Output elements — the OLP thread count for this layer (alpha in
+    /// section IV.A: one thread per output pixel).
+    pub output_elems: usize,
+}
+
+/// Full inference result.
+#[derive(Debug, Clone)]
+pub struct NetworkInfo {
+    pub output: TensorShape,
+    pub param_layers: Vec<ParamLayer>,
+    pub costs: Vec<LayerCost>,
+    /// Inference-time state: `(C,H,W)` a pending flatten consumed, handed
+    /// to the next dense layer (then cleared).
+    pending_flatten: Option<(usize, usize, usize)>,
+}
+
+impl NetworkInfo {
+    pub fn total_flops(&self) -> f64 {
+        self.costs.iter().map(|c| c.flops).sum()
+    }
+
+    pub fn total_param_bytes(&self) -> f64 {
+        self.costs.iter().map(|c| c.param_bytes).sum()
+    }
+
+    pub fn param_layer(&self, name: &str) -> Option<&ParamLayer> {
+        self.param_layers.iter().find(|p| p.name == name)
+    }
+}
+
+/// Infer every shape + cost in the network.
+pub fn infer(net: &Network) -> Result<NetworkInfo> {
+    let mut info = NetworkInfo {
+        output: net.input,
+        param_layers: Vec::new(),
+        costs: Vec::new(),
+        pending_flatten: None,
+    };
+    let out = walk(&net.layers, net.input, &mut info)?;
+    info.output = out;
+    Ok(info)
+}
+
+fn walk(layers: &[Layer], mut shape: TensorShape, info: &mut NetworkInfo) -> Result<TensorShape> {
+    for layer in layers {
+        shape = step(layer, shape, info)?;
+    }
+    Ok(shape)
+}
+
+fn step(layer: &Layer, shape: TensorShape, info: &mut NetworkInfo) -> Result<TensorShape> {
+    let f32b = 4.0;
+    match &layer.op {
+        LayerOp::Conv { m, k, s, p, .. } => {
+            let (c, h, w) = shape.as_maps().map_err(|e| named(e, layer))?;
+            let ho = conv_out(h, *k, *s, *p).map_err(|e| named(e, layer))?;
+            let wo = conv_out(w, *k, *s, *p).map_err(|e| named(e, layer))?;
+            let out = TensorShape::maps(*m, ho, wo);
+            let weight_elems = m * c * k * k;
+            info.param_layers.push(ParamLayer {
+                name: layer.name.clone(),
+                input: shape,
+                output: out,
+                weight_elems,
+                bias_elems: *m,
+                k: *k,
+                flatten_src: None,
+            });
+            info.costs.push(LayerCost {
+                name: layer.name.clone(),
+                kind: "conv",
+                flops: 2.0 * (m * c * k * k * ho * wo) as f64,
+                param_bytes: f32b * (weight_elems + m) as f64,
+                input_bytes: f32b * shape.elements() as f64,
+                output_bytes: f32b * out.elements() as f64,
+                output_elems: out.elements(),
+            });
+            Ok(out)
+        }
+        LayerOp::MaxPool { k, s, p } | LayerOp::AvgPool { k, s, p } => {
+            let (c, h, w) = shape.as_maps().map_err(|e| named(e, layer))?;
+            let ho = conv_out(h, *k, *s, *p).map_err(|e| named(e, layer))?;
+            let wo = conv_out(w, *k, *s, *p).map_err(|e| named(e, layer))?;
+            let out = TensorShape::maps(c, ho, wo);
+            info.costs.push(LayerCost {
+                name: layer.name.clone(),
+                kind: if matches!(layer.op, LayerOp::MaxPool { .. }) {
+                    "maxpool"
+                } else {
+                    "avgpool"
+                },
+                flops: (c * ho * wo * k * k) as f64,
+                param_bytes: 0.0,
+                input_bytes: f32b * shape.elements() as f64,
+                output_bytes: f32b * out.elements() as f64,
+                output_elems: out.elements(),
+            });
+            Ok(out)
+        }
+        LayerOp::Lrn { size, .. } => {
+            let _ = shape.as_maps().map_err(|e| named(e, layer))?;
+            info.costs.push(LayerCost {
+                name: layer.name.clone(),
+                kind: "lrn",
+                // per element: `size` squares+adds, a power, a divide ≈ size+4
+                flops: (shape.elements() * (size + 4)) as f64,
+                param_bytes: 0.0,
+                input_bytes: f32b * shape.elements() as f64,
+                output_bytes: f32b * shape.elements() as f64,
+                output_elems: shape.elements(),
+            });
+            Ok(shape)
+        }
+        LayerOp::Fork { branches } => {
+            let (_, h0, w0) = shape.as_maps().map_err(|e| named(e, layer))?;
+            let mut total_c = 0;
+            let mut out_hw = None;
+            for br in branches {
+                let out = walk(br, shape, info)?;
+                let (c, h, w) = out.as_maps().map_err(|e| named(e, layer))?;
+                if let Some((ph, pw)) = out_hw {
+                    if (h, w) != (ph, pw) {
+                        return Err(Error::Shape(format!(
+                            "fork {}: branch spatial mismatch {h}x{w} vs {ph}x{pw}",
+                            layer.name
+                        )));
+                    }
+                } else {
+                    out_hw = Some((h, w));
+                }
+                total_c += c;
+            }
+            let (h, w) = out_hw.unwrap_or((h0, w0));
+            Ok(TensorShape::maps(total_c, h, w))
+        }
+        LayerOp::Flatten => {
+            if let TensorShape::Maps { c, h, w } = shape {
+                info.pending_flatten = Some((c, h, w));
+            }
+            Ok(TensorShape::Flat { len: shape.elements() })
+        }
+        LayerOp::Gap => {
+            let (c, h, w) = shape.as_maps().map_err(|e| named(e, layer))?;
+            info.costs.push(LayerCost {
+                name: layer.name.clone(),
+                kind: "gap",
+                flops: (c * h * w) as f64,
+                param_bytes: 0.0,
+                input_bytes: f32b * shape.elements() as f64,
+                output_bytes: f32b * c as f64,
+                output_elems: c,
+            });
+            Ok(TensorShape::Flat { len: c })
+        }
+        LayerOp::Dense { o, .. } => {
+            let len = match shape {
+                TensorShape::Flat { len } => len,
+                TensorShape::Maps { .. } => {
+                    return Err(named(
+                        Error::Shape("dense requires flatten/gap first".into()),
+                        layer,
+                    ))
+                }
+            };
+            let out = TensorShape::Flat { len: *o };
+            info.param_layers.push(ParamLayer {
+                name: layer.name.clone(),
+                input: shape,
+                output: out,
+                weight_elems: o * len,
+                bias_elems: *o,
+                k: 0,
+                flatten_src: info.pending_flatten.take(),
+            });
+            info.costs.push(LayerCost {
+                name: layer.name.clone(),
+                kind: "dense",
+                flops: 2.0 * (o * len) as f64,
+                param_bytes: f32b * (o * len + o) as f64,
+                input_bytes: f32b * len as f64,
+                output_bytes: f32b * *o as f64,
+                output_elems: *o,
+            });
+            Ok(out)
+        }
+        LayerOp::Softmax => Ok(shape),
+    }
+}
+
+fn named(e: Error, layer: &Layer) -> Error {
+    Error::Shape(format!("layer {}: {e}", layer.name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn conv_out_matches_python() {
+        assert_eq!(conv_out(227, 11, 4, 0).unwrap(), 55);
+        assert_eq!(conv_out(55, 3, 2, 0).unwrap(), 27);
+        assert_eq!(conv_out(112, 3, 2, 1).unwrap(), 56); // ceil-mode emulation
+        assert!(conv_out(4, 5, 1, 0).is_err());
+    }
+
+    #[test]
+    fn tinynet_shapes() {
+        let info = infer(&zoo::tinynet()).unwrap();
+        assert_eq!(info.output, TensorShape::Flat { len: 8 });
+        let fc4 = info.param_layer("fc4").unwrap();
+        assert_eq!(fc4.input, TensorShape::Flat { len: 512 });
+        assert_eq!(fc4.weight_elems, 64 * 512);
+    }
+
+    #[test]
+    fn alexnet_shapes_and_flops() {
+        let info = infer(&zoo::alexnet()).unwrap();
+        assert_eq!(info.output, TensorShape::Flat { len: 1000 });
+        let conv1 = info.param_layer("conv1").unwrap();
+        assert_eq!(conv1.output.as_maps().unwrap(), (96, 55, 55));
+        let fc6 = info.param_layer("fc6").unwrap();
+        assert_eq!(fc6.input, TensorShape::Flat { len: 9216 });
+        // Our AlexNet is the group=1 (single-tower) variant: ≈ 2.28
+        // GFLOPs (the paper's group=2 original is ≈ 1.45) — DESIGN.md.
+        let gf = info.total_flops() / 1e9;
+        assert!((2.0..2.5).contains(&gf), "alexnet GFLOPs {gf}");
+        let params = zoo::alexnet().param_count() as f64 / 1e6;
+        assert!((58.0..63.0).contains(&params), "alexnet params {params}M");
+    }
+
+    #[test]
+    fn squeezenet_param_count_matches_paper_scale() {
+        // SqueezeNet's claim to fame: ~1.2M params (50x fewer than AlexNet).
+        let params = zoo::squeezenet().param_count() as f64 / 1e6;
+        assert!((1.0..1.5).contains(&params), "squeezenet params {params}M");
+    }
+
+    #[test]
+    fn googlenet_shapes() {
+        let info = infer(&zoo::googlenet()).unwrap();
+        assert_eq!(info.output, TensorShape::Flat { len: 1000 });
+        let b1 = info.param_layer("inc3a/b1").unwrap();
+        assert_eq!(b1.input.as_maps().unwrap(), (192, 28, 28));
+        let fc = info.param_layer("fc").unwrap();
+        assert_eq!(fc.input, TensorShape::Flat { len: 1024 });
+        // ~7M params, ~3 GFLOPs
+        let params = zoo::googlenet().param_count() as f64 / 1e6;
+        assert!((5.5..8.0).contains(&params), "googlenet params {params}M");
+    }
+
+    #[test]
+    fn dense_without_flatten_rejected() {
+        use crate::model::{Layer, Network};
+        let net = Network {
+            name: "bad".into(),
+            input: TensorShape::maps(3, 8, 8),
+            classes: 4,
+            layers: vec![Layer::new("fc", LayerOp::Dense { o: 4, relu: false })],
+        };
+        assert!(infer(&net).is_err());
+    }
+
+    #[test]
+    fn fork_spatial_mismatch_rejected() {
+        use crate::model::{Layer, Network};
+        let net = Network {
+            name: "bad".into(),
+            input: TensorShape::maps(4, 8, 8),
+            classes: 4,
+            layers: vec![Layer::new(
+                "fork",
+                LayerOp::Fork {
+                    branches: vec![
+                        vec![Layer::new("a", LayerOp::Conv { m: 4, k: 1, s: 1, p: 0, relu: true })],
+                        vec![Layer::new("b", LayerOp::Conv { m: 4, k: 3, s: 1, p: 0, relu: true })],
+                    ],
+                },
+            )],
+        };
+        assert!(infer(&net).is_err());
+    }
+}

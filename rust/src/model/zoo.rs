@@ -1,0 +1,221 @@
+//! Model zoo: Rust-side builders for the paper's networks.
+//!
+//! These mirror `python/compile/model.py` exactly (same layer names,
+//! same expansion of fire/inception composites); the integration tests
+//! cross-check them against the spec embedded in the AOT manifest.
+
+use crate::model::{Layer, LayerOp, Network, TensorShape};
+
+fn conv(name: &str, m: usize, k: usize, s: usize, p: usize) -> Layer {
+    Layer::new(name, LayerOp::Conv { m, k, s, p, relu: true })
+}
+
+fn maxpool(name: &str, k: usize, s: usize, p: usize) -> Layer {
+    Layer::new(name, LayerOp::MaxPool { k, s, p })
+}
+
+fn lrn(name: &str) -> Layer {
+    Layer::new(name, LayerOp::Lrn { size: 5, alpha: 1e-4, beta: 0.75 })
+}
+
+/// SqueezeNet fire module: squeeze 1x1, then fork(expand 1x1, expand 3x3).
+fn fire(name: &str, s1: usize, e1: usize, e3: usize) -> Vec<Layer> {
+    vec![
+        conv(&format!("{name}/s1"), s1, 1, 1, 0),
+        Layer::new(
+            name,
+            LayerOp::Fork {
+                branches: vec![
+                    vec![conv(&format!("{name}/e1"), e1, 1, 1, 0)],
+                    vec![conv(&format!("{name}/e3"), e3, 3, 1, 1)],
+                ],
+            },
+        ),
+    ]
+}
+
+/// GoogLeNet inception module: 4 branches channel-concatenated.
+fn inception(name: &str, b1: usize, b3r: usize, b3: usize, b5r: usize, b5: usize, pp: usize) -> Layer {
+    Layer::new(
+        name,
+        LayerOp::Fork {
+            branches: vec![
+                vec![conv(&format!("{name}/b1"), b1, 1, 1, 0)],
+                vec![
+                    conv(&format!("{name}/b3r"), b3r, 1, 1, 0),
+                    conv(&format!("{name}/b3"), b3, 3, 1, 1),
+                ],
+                vec![
+                    conv(&format!("{name}/b5r"), b5r, 1, 1, 0),
+                    conv(&format!("{name}/b5"), b5, 5, 1, 2),
+                ],
+                vec![
+                    maxpool(&format!("{name}/pool"), 3, 1, 1),
+                    conv(&format!("{name}/pp"), pp, 1, 1, 0),
+                ],
+            ],
+        },
+    )
+}
+
+/// TinyNet: the build-time-trained CNN for the inexact-computing study.
+pub fn tinynet() -> Network {
+    Network {
+        name: "tinynet".into(),
+        input: TensorShape::maps(3, 16, 16),
+        classes: 8,
+        layers: vec![
+            conv("conv1", 16, 3, 1, 1),
+            maxpool("pool1", 2, 2, 0),
+            conv("conv2", 32, 3, 1, 1),
+            maxpool("pool2", 2, 2, 0),
+            conv("conv3", 32, 3, 1, 1),
+            Layer::new("flatten", LayerOp::Flatten),
+            Layer::new("fc4", LayerOp::Dense { o: 64, relu: true }),
+            Layer::new("fc5", LayerOp::Dense { o: 8, relu: false }),
+        ],
+    }
+}
+
+/// AlexNet (CaffeNet single-tower variant, group=1 — DESIGN.md).
+pub fn alexnet() -> Network {
+    Network {
+        name: "alexnet".into(),
+        input: TensorShape::maps(3, 227, 227),
+        classes: 1000,
+        layers: vec![
+            conv("conv1", 96, 11, 4, 0),
+            lrn("lrn1"),
+            maxpool("pool1", 3, 2, 0),
+            conv("conv2", 256, 5, 1, 2),
+            lrn("lrn2"),
+            maxpool("pool2", 3, 2, 0),
+            conv("conv3", 384, 3, 1, 1),
+            conv("conv4", 384, 3, 1, 1),
+            conv("conv5", 256, 3, 1, 1),
+            maxpool("pool5", 3, 2, 0),
+            Layer::new("flatten", LayerOp::Flatten),
+            Layer::new("fc6", LayerOp::Dense { o: 4096, relu: true }),
+            Layer::new("fc7", LayerOp::Dense { o: 4096, relu: true }),
+            Layer::new("fc8", LayerOp::Dense { o: 1000, relu: false }),
+        ],
+    }
+}
+
+/// SqueezeNet v1.0.
+pub fn squeezenet() -> Network {
+    let mut layers = vec![conv("conv1", 96, 7, 2, 0), maxpool("pool1", 3, 2, 0)];
+    layers.extend(fire("fire2", 16, 64, 64));
+    layers.extend(fire("fire3", 16, 64, 64));
+    layers.extend(fire("fire4", 32, 128, 128));
+    layers.push(maxpool("pool4", 3, 2, 0));
+    layers.extend(fire("fire5", 32, 128, 128));
+    layers.extend(fire("fire6", 48, 192, 192));
+    layers.extend(fire("fire7", 48, 192, 192));
+    layers.extend(fire("fire8", 64, 256, 256));
+    layers.push(maxpool("pool8", 3, 2, 0));
+    layers.extend(fire("fire9", 64, 256, 256));
+    layers.push(conv("conv10", 1000, 1, 1, 0));
+    layers.push(Layer::new("gap", LayerOp::Gap));
+    Network {
+        name: "squeezenet".into(),
+        input: TensorShape::maps(3, 227, 227),
+        classes: 1000,
+        layers,
+    }
+}
+
+/// GoogLeNet / Inception-v1, main branch (aux heads are train-time only).
+pub fn googlenet() -> Network {
+    Network {
+        name: "googlenet".into(),
+        input: TensorShape::maps(3, 224, 224),
+        classes: 1000,
+        layers: vec![
+            conv("conv1", 64, 7, 2, 3),
+            maxpool("pool1", 3, 2, 1),
+            lrn("lrn1"),
+            conv("conv2r", 64, 1, 1, 0),
+            conv("conv2", 192, 3, 1, 1),
+            lrn("lrn2"),
+            maxpool("pool2", 3, 2, 1),
+            inception("inc3a", 64, 96, 128, 16, 32, 32),
+            inception("inc3b", 128, 128, 192, 32, 96, 64),
+            maxpool("pool3", 3, 2, 1),
+            inception("inc4a", 192, 96, 208, 16, 48, 64),
+            inception("inc4b", 160, 112, 224, 24, 64, 64),
+            inception("inc4c", 128, 128, 256, 24, 64, 64),
+            inception("inc4d", 112, 144, 288, 32, 64, 64),
+            inception("inc4e", 256, 160, 320, 32, 128, 128),
+            maxpool("pool4", 3, 2, 1),
+            inception("inc5a", 256, 160, 320, 32, 128, 128),
+            inception("inc5b", 384, 192, 384, 48, 128, 128),
+            Layer::new("gap", LayerOp::Gap),
+            Layer::new("fc", LayerOp::Dense { o: 1000, relu: false }),
+        ],
+    }
+}
+
+/// Look a network up by name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "tinynet" => Some(tinynet()),
+        "alexnet" => Some(alexnet()),
+        "squeezenet" => Some(squeezenet()),
+        "googlenet" => Some(googlenet()),
+        _ => None,
+    }
+}
+
+/// All networks evaluated in the paper's Table I, plus TinyNet.
+pub fn all() -> Vec<Network> {
+    vec![tinynet(), alexnet(), squeezenet(), googlenet()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::shapes;
+
+    #[test]
+    fn by_name_roundtrip() {
+        for net in all() {
+            assert_eq!(by_name(&net.name).unwrap().name, net.name);
+        }
+        assert!(by_name("vgg").is_none());
+    }
+
+    #[test]
+    fn all_networks_infer() {
+        for net in all() {
+            let info = shapes::infer(&net).unwrap();
+            assert_eq!(
+                info.output,
+                TensorShape::Flat { len: net.classes },
+                "{}",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn mode_layer_counts_match_python() {
+        // Mirrors python tests: tinynet 5, alexnet 8, squeezenet 26,
+        // googlenet 58 parameterised layers.
+        assert_eq!(tinynet().param_layer_names().len(), 5);
+        assert_eq!(alexnet().param_layer_names().len(), 8);
+        assert_eq!(squeezenet().param_layer_names().len(), 26);
+        assert_eq!(googlenet().param_layer_names().len(), 58);
+    }
+
+    #[test]
+    fn all_conv_widths_divide_u() {
+        for net in all() {
+            net.visit(&mut |l| {
+                if let LayerOp::Conv { m, .. } = l.op {
+                    assert_eq!(m % crate::DEFAULT_U, 0, "{}/{}", net.name, l.name);
+                }
+            });
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! PJRT execution of the AOT artifacts (`xla` crate, CPU plugin).
+//!
+//! Load path: HLO **text** → `HloModuleProto::from_text_file` →
+//! `XlaComputation` → `client.compile` (see /opt/xla-example and
+//! DESIGN.md: text is the interchange format because jax ≥ 0.5 emits
+//! 64-bit-id protos that xla_extension 0.5.1 rejects).
+//!
+//! Weights are uploaded to device buffers **once** at load
+//! (`execute_b` fast path); per-inference work is one host→device input
+//! transfer + execute + one device→host logits readback.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`): a [`Runtime`] and everything
+//! loaded from it must stay on one thread. The serving layer
+//! ([`crate::serve`]) owns a runtime on a dedicated worker thread.
+
+use crate::config::modelfile::ModelFile;
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Where parameter values come from when loading an artifact.
+pub enum ParamSource {
+    /// A `.capp` file already in map-major layout (e.g. the build-time
+    /// reordered `tinynet_mm.capp`).
+    MapMajorFile(ModelFile),
+    /// Deterministic random weights in the manifest's shapes — for
+    /// latency work on nets without shipped weights (values don't
+    /// affect timing).
+    Random(u64),
+}
+
+fn xla_err(e: xla::Error) -> Error {
+    Error::Xla(e.to_string())
+}
+
+/// A PJRT CPU runtime: owns the client; loads artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().map_err(xla_err)? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact and upload its weights.
+    pub fn load(
+        &self,
+        manifest: &Manifest,
+        spec: &ArtifactSpec,
+        source: &ParamSource,
+    ) -> Result<LoadedModel> {
+        let path = manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Invalid(format!("non-utf8 path {path:?}")))?,
+        )
+        .map_err(xla_err)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xla_err)?;
+
+        // Upload parameters once, in manifest order (w, b per layer).
+        let mut param_buffers = Vec::with_capacity(spec.params.len() * 2);
+        let mut rng = Rng::new(match source {
+            ParamSource::Random(seed) => *seed,
+            _ => 0,
+        });
+        for p in &spec.params {
+            let (w, b): (Vec<f32>, Vec<f32>) = match source {
+                ParamSource::MapMajorFile(mf) => {
+                    let (wt, bt) = mf.layer_params(&p.name)?;
+                    if wt.data.len() != p.w_len() || bt.data.len() != p.b_len() {
+                        return Err(Error::Shape(format!(
+                            "artifact {} layer {}: file {}/{} vs manifest {}/{}",
+                            spec.name,
+                            p.name,
+                            wt.data.len(),
+                            bt.data.len(),
+                            p.w_len(),
+                            p.b_len()
+                        )));
+                    }
+                    (wt.data.clone(), bt.data.clone())
+                }
+                ParamSource::Random(_) => {
+                    let mut lrng = rng.fork(&p.name);
+                    // Scale roughly He-normal by fan-in of the map-major
+                    // weight's trailing dims (values are irrelevant to
+                    // latency; just keep activations finite).
+                    let fan = p.w_dims.iter().skip(2).product::<usize>().max(1);
+                    (lrng.he_normal_vec(p.w_len(), fan), vec![0.0; p.b_len()])
+                }
+            };
+            param_buffers.push(
+                self.client
+                    .buffer_from_host_buffer(&w, &p.w_dims, None)
+                    .map_err(xla_err)?,
+            );
+            param_buffers.push(
+                self.client
+                    .buffer_from_host_buffer(&b, &p.b_dims, None)
+                    .map_err(xla_err)?,
+            );
+        }
+
+        Ok(LoadedModel {
+            client: self.client.clone(),
+            spec: spec.clone(),
+            exe,
+            param_buffers,
+        })
+    }
+}
+
+/// A compiled artifact with device-resident weights.
+pub struct LoadedModel {
+    client: xla::PjRtClient,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    param_buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl LoadedModel {
+    /// Batch capacity baked into the artifact.
+    pub fn batch(&self) -> usize {
+        self.spec.batch
+    }
+
+    /// Run inference on a full map-major input batch
+    /// (`spec.input_shape` elements) → logits `(batch * classes)`.
+    pub fn infer(&self, x_mm: &[f32]) -> Result<Vec<f32>> {
+        if x_mm.len() != self.spec.input_len() {
+            return Err(Error::Shape(format!(
+                "artifact {}: input {} vs expected {}",
+                self.spec.name,
+                x_mm.len(),
+                self.spec.input_len()
+            )));
+        }
+        let input = self
+            .client
+            .buffer_from_host_buffer(x_mm, &self.spec.input_shape, None)
+            .map_err(xla_err)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.param_buffers.len());
+        args.push(&input);
+        args.extend(self.param_buffers.iter());
+        let result = self.exe.execute_b(&args).map_err(xla_err)?;
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Xla("execute returned no outputs".into()))?
+            .to_literal_sync()
+            .map_err(xla_err)?;
+        // Artifacts are lowered with return_tuple=True: unwrap the 1-tuple.
+        let logits = out.to_tuple1().map_err(xla_err)?;
+        logits.to_vec::<f32>().map_err(xla_err)
+    }
+
+    /// Convenience: per-image logits rows.
+    pub fn infer_rows(&self, x_mm: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let flat = self.infer(x_mm)?;
+        let classes = self.spec.output_shape[1];
+        Ok(flat.chunks(classes).map(|c| c.to_vec()).collect())
+    }
+}
+
+/// Map-major transform of a batch of conventional NCHW images, padded
+/// up to `batch` with zeros — the serving-side input prologue.
+pub fn batch_to_mapmajor(
+    images: &[&[f32]],
+    c: usize,
+    h: usize,
+    w: usize,
+    u: usize,
+    batch: usize,
+) -> Vec<f32> {
+    assert!(images.len() <= batch, "batch overflow");
+    let per = crate::util::ceil_div(c, u) * h * w * u;
+    let mut out = vec![0.0f32; batch * per];
+    for (i, img) in images.iter().enumerate() {
+        let mm = crate::layout::nchw_to_mapmajor(img, c, h, w, u);
+        out[i * per..(i + 1) * per].copy_from_slice(&mm);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ops::softmax;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = crate::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    fn golden(m: &Manifest) -> ModelFile {
+        ModelFile::read_from(m.dir.join("golden_tinynet.capp")).unwrap()
+    }
+
+    fn tinynet_weights(m: &Manifest) -> ModelFile {
+        ModelFile::read_from(m.dir.join("tinynet_mm.capp")).unwrap()
+    }
+
+    #[test]
+    fn tinynet_matches_golden_logits() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::new().unwrap();
+        let spec = m.find("tinynet", "precise", 8).unwrap();
+        let model = rt
+            .load(&m, spec, &ParamSource::MapMajorFile(tinynet_weights(&m)))
+            .unwrap();
+        let g = golden(&m);
+        let x = &g.get("x_mm").unwrap().data;
+        let want = &g.get("logits_precise").unwrap().data;
+        let got = model.infer(x).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn imprecise_artifact_matches_golden() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::new().unwrap();
+        let spec = m.find("tinynet", "imprecise", 8).unwrap();
+        let model = rt
+            .load(&m, spec, &ParamSource::MapMajorFile(tinynet_weights(&m)))
+            .unwrap();
+        let g = golden(&m);
+        let got = model.infer(&g.get("x_mm").unwrap().data).unwrap();
+        let want = &g.get("logits_imprecise").unwrap().data;
+        for (a, b) in got.iter().zip(want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn golden_labels_predicted() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::new().unwrap();
+        let spec = m.find("tinynet", "precise", 8).unwrap();
+        let model = rt
+            .load(&m, spec, &ParamSource::MapMajorFile(tinynet_weights(&m)))
+            .unwrap();
+        let g = golden(&m);
+        let rows = model.infer_rows(&g.get("x_mm").unwrap().data).unwrap();
+        let labels = &g.get("labels").unwrap().data;
+        let correct = rows
+            .iter()
+            .zip(labels)
+            .filter(|(row, &lbl)| {
+                let probs = softmax(row);
+                let pred = probs
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0;
+                pred == lbl as usize
+            })
+            .count();
+        assert!(correct >= 6, "only {correct}/8 golden images classified");
+    }
+
+    #[test]
+    fn wrong_input_len_rejected() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::new().unwrap();
+        let spec = m.find("tinynet", "precise", 1).unwrap();
+        let model = rt
+            .load(&m, spec, &ParamSource::Random(3))
+            .unwrap();
+        assert!(model.infer(&[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn batch_to_mapmajor_pads() {
+        let img = vec![1.0f32; 3 * 2 * 2];
+        let out = batch_to_mapmajor(&[&img], 3, 2, 2, 4, 2);
+        // One stack of u=4 per image: 2*2*4 = 16 floats per image slot.
+        assert_eq!(out.len(), 32);
+        assert!(out[..16].iter().any(|&v| v != 0.0));
+        assert!(out[16..].iter().all(|&v| v == 0.0));
+    }
+}

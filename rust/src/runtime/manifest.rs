@@ -1,0 +1,220 @@
+//! AOT artifact manifest (`artifacts/manifest.json`) — the contract
+//! between the Python compile path and the Rust runtime.
+//!
+//! The manifest records every lowered artifact (net, mode, batch, HLO
+//! file, input/output shapes, parameter order + map-major shapes) plus
+//! the expanded network specs, so the runtime can build PJRT argument
+//! lists and the model IR without touching Python.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::Network;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Shape of one parameter pair in an artifact's argument list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub w_dims: Vec<usize>,
+    pub b_dims: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn w_len(&self) -> usize {
+        self.w_dims.iter().product()
+    }
+
+    pub fn b_len(&self) -> usize {
+        self.b_dims.iter().product()
+    }
+}
+
+/// One lowered artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub net: String,
+    /// Arithmetic mode baked into the artifact ("precise"/"imprecise").
+    pub mode: String,
+    pub batch: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub hlo: String,
+    /// `(B, Cb, H, W, u)` map-major input shape.
+    pub input_shape: Vec<usize>,
+    /// `(B, classes)`.
+    pub output_shape: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Vector width used by every artifact.
+    pub u: usize,
+    pub tinynet_val_accuracy: f64,
+    pub artifacts: Vec<ArtifactSpec>,
+    /// Expanded network specs, rebuilt into the Rust IR.
+    pub nets: BTreeMap<String, Network>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("{} (run `make artifacts` first)", path.display()),
+            ))
+        })?;
+        let json = Json::parse(&text)?;
+        let u = json.get("u")?.as_usize()?;
+        let tinynet_val_accuracy = json
+            .opt("tinynet_val_accuracy")
+            .map(|v| v.as_f64())
+            .transpose()?
+            .unwrap_or(0.0);
+
+        let mut artifacts = Vec::new();
+        for a in json.get("artifacts")?.as_arr()? {
+            let params = a
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        w_dims: p.get("w")?.usize_vec()?,
+                        b_dims: p.get("b")?.usize_vec()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: a.get("name")?.as_str()?.to_string(),
+                net: a.get("net")?.as_str()?.to_string(),
+                mode: a.get("mode")?.as_str()?.to_string(),
+                batch: a.get("batch")?.as_usize()?,
+                hlo: a.get("hlo")?.as_str()?.to_string(),
+                input_shape: a.get("input_shape")?.usize_vec()?,
+                output_shape: a.get("output_shape")?.usize_vec()?,
+                params,
+            });
+        }
+
+        let mut nets = BTreeMap::new();
+        for (name, net_json) in json.get("nets")?.as_obj()? {
+            nets.insert(name.clone(), Network::from_manifest(name, net_json)?);
+        }
+
+        Ok(Manifest { dir, u, tinynet_val_accuracy, artifacts, nets })
+    }
+
+    /// Find an artifact by (net, mode, batch).
+    pub fn find(&self, net: &str, mode: &str, batch: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.net == net && a.mode == mode && a.batch == batch)
+            .ok_or_else(|| {
+                Error::Invalid(format!("no artifact for net={net} mode={mode} batch={batch}"))
+            })
+    }
+
+    /// All batch sizes available for (net, mode), ascending.
+    pub fn batch_sizes(&self, net: &str, mode: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.net == net && a.mode == mode)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.hlo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        crate::artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(crate::artifacts_dir()).unwrap();
+        assert_eq!(m.u, 4);
+        assert!(m.artifacts.len() >= 11);
+        assert!(m.tinynet_val_accuracy > 0.9);
+        // Every referenced HLO file exists.
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn find_and_batches() {
+        if !artifacts_available() {
+            return;
+        }
+        let m = Manifest::load(crate::artifacts_dir()).unwrap();
+        let a = m.find("tinynet", "precise", 8).unwrap();
+        assert_eq!(a.input_shape, vec![8, 1, 16, 16, 4]);
+        assert_eq!(a.output_shape, vec![8, 8]);
+        assert_eq!(m.batch_sizes("tinynet", "precise"), vec![1, 4, 8]);
+        assert!(m.find("tinynet", "precise", 3).is_err());
+    }
+
+    #[test]
+    fn manifest_nets_match_zoo() {
+        if !artifacts_available() {
+            return;
+        }
+        let m = Manifest::load(crate::artifacts_dir()).unwrap();
+        // The manifest's expanded specs must rebuild into the same IR the
+        // Rust zoo defines — single-source-of-truth cross-check.
+        for (name, net) in &m.nets {
+            let zoo_net = crate::model::zoo::by_name(name).expect(name);
+            assert_eq!(
+                net.param_layer_names(),
+                zoo_net.param_layer_names(),
+                "{name}: param layer order"
+            );
+            assert_eq!(net.input, zoo_net.input, "{name}");
+            let a = crate::model::shapes::infer(net).unwrap();
+            let b = crate::model::shapes::infer(&zoo_net).unwrap();
+            assert_eq!(a.output, b.output, "{name}");
+            assert!((a.total_flops() - b.total_flops()).abs() < 1.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn param_spec_lens() {
+        let p = ParamSpec {
+            name: "c".into(),
+            w_dims: vec![4, 4, 1, 3, 3, 4],
+            b_dims: vec![4, 4],
+        };
+        assert_eq!(p.w_len(), 576);
+        assert_eq!(p.b_len(), 16);
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: artifact manifest + loader/executor.
+//!
+//! Python lowers each (net, mode, batch) variant once (`make
+//! artifacts`); this module loads the HLO text and serves inference
+//! with no Python anywhere near the request path.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{batch_to_mapmajor, LoadedModel, ParamSource, Runtime};
+pub use manifest::{ArtifactSpec, Manifest, ParamSpec};

@@ -1,0 +1,580 @@
+//! Serving front-end: request router, dynamic batcher, model workers.
+//!
+//! Cappuccino synthesizes *inference software*; this module is the
+//! deployment harness around it — the vLLM-router-shaped L3 that makes
+//! the synthesized program a service:
+//!
+//! * [`Router`] — routes requests to per-model bounded queues
+//!   (backpressure: a full queue rejects instead of buffering without
+//!   bound).
+//! * dynamic batcher — each worker drains its queue into the largest
+//!   AOT-compiled batch size available within a latency budget
+//!   ([`BatchPolicy`]), padding the final partial batch.
+//! * [`worker`] threads — own the execution backend. PJRT objects are
+//!   not `Send`, so the backend is constructed *on* the worker thread
+//!   from a `Send` factory; weights stay device-resident across
+//!   requests.
+//!
+//! Python never appears anywhere on this path.
+
+pub mod workload;
+
+pub use workload::ArrivalProcess;
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::metrics::{LatencyHistogram, ServeCounters, Throughput};
+use crate::util::error::{Error, Result};
+
+/// An inference request: one image (conventional NCHW layout).
+pub struct ServeRequest {
+    pub image: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::SyncSender<ServeResponse>,
+}
+
+/// The reply: logits + measured latency + the batch it rode in.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+/// Execution backend run by a worker thread.
+pub trait Backend {
+    /// Expected per-image input element count.
+    fn input_len(&self) -> usize;
+    /// AOT-available batch capacities, ascending (native backends may
+    /// return any set; `[1]` means no batching).
+    fn batch_sizes(&self) -> &[usize];
+    /// Run a batch (`images.len() <= capacity`) at the given capacity;
+    /// returns one logits row per input image.
+    fn infer_batch(&mut self, images: &[&[f32]], capacity: usize) -> Result<Vec<Vec<f32>>>;
+}
+
+/// Factory constructing a backend *on* the worker thread (PJRT is not
+/// `Send`).
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+
+/// Dynamic batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Upper bound on batch size (further capped by the backend).
+    pub max_batch: usize,
+    /// How long to wait for more requests after the first arrives.
+    pub max_delay: Duration,
+    /// Bound of the per-model request queue (backpressure limit).
+    pub queue_depth: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            queue_depth: 64,
+        }
+    }
+}
+
+/// Shared serving metrics.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub counters: ServeCounters,
+    pub latency: LatencyHistogram,
+    pub throughput: Throughput,
+}
+
+impl ServeMetrics {
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} completed={} rejected={} batches={} mean_batch={:.2} rps={:.1} latency[{}]",
+            self.counters.requests.load(Ordering::Relaxed),
+            self.counters.completed.load(Ordering::Relaxed),
+            self.counters.rejected.load(Ordering::Relaxed),
+            self.counters.batches.load(Ordering::Relaxed),
+            self.counters.mean_batch_size(),
+            self.throughput.per_second(),
+            self.latency.summary(),
+        )
+    }
+}
+
+enum Job {
+    Infer(ServeRequest),
+    Shutdown,
+}
+
+/// Routes requests to per-model worker queues.
+pub struct Router {
+    queues: HashMap<String, mpsc::SyncSender<Job>>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Router {
+    /// Submit an image for inference on `model`; returns the response
+    /// receiver. Full queues reject immediately (backpressure).
+    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<mpsc::Receiver<ServeResponse>> {
+        let queue = self
+            .queues
+            .get(model)
+            .ok_or_else(|| Error::Serve(format!("unknown model {model:?}")))?;
+        self.metrics.counters.requests.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        let req = ServeRequest { image, enqueued: Instant::now(), reply: reply_tx };
+        match queue.try_send(Job::Infer(req)) {
+            Ok(()) => Ok(reply_rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(Error::Serve(format!("model {model:?}: queue full (backpressure)")))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(Error::Serve(format!("model {model:?}: worker gone")))
+            }
+        }
+    }
+
+    /// Submit and wait for the response.
+    pub fn infer_blocking(&self, model: &str, image: Vec<f32>) -> Result<ServeResponse> {
+        let rx = self.submit(model, image)?;
+        rx.recv()
+            .map_err(|_| Error::Serve("worker dropped the request".into()))
+    }
+}
+
+/// A running server: router + worker threads.
+pub struct Server {
+    router: Router,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    shutdown_txs: Vec<mpsc::SyncSender<Job>>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Server {
+    /// Start a server hosting the given `(model name, backend factory,
+    /// policy)` triples — one worker thread per model.
+    pub fn start(models: Vec<(String, BackendFactory, BatchPolicy)>) -> Result<Server> {
+        let metrics = Arc::new(ServeMetrics::default());
+        let mut queues = HashMap::new();
+        let mut handles = Vec::new();
+        let mut shutdown_txs = Vec::new();
+        for (name, factory, policy) in models {
+            let (tx, rx) = mpsc::sync_channel::<Job>(policy.queue_depth);
+            // Construct the backend on the worker thread and report
+            // failures back through a startup channel.
+            let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+            let m = Arc::clone(&metrics);
+            let handle = std::thread::Builder::new()
+                .name(format!("cappuccino-worker-{name}"))
+                .spawn(move || worker_loop(factory, rx, policy, m, ready_tx))
+                .map_err(|e| Error::Serve(format!("spawn worker: {e}")))?;
+            ready_rx
+                .recv()
+                .map_err(|_| Error::Serve(format!("worker {name} died during startup")))??;
+            queues.insert(name, tx.clone());
+            shutdown_txs.push(tx);
+            handles.push(handle);
+        }
+        Ok(Server {
+            router: Router { queues, metrics: Arc::clone(&metrics) },
+            handles,
+            shutdown_txs,
+            metrics,
+        })
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Stop workers and join them.
+    pub fn shutdown(mut self) {
+        for tx in &self.shutdown_txs {
+            let _ = tx.send(Job::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker: construct backend, then batch-and-execute until shutdown.
+fn worker_loop(
+    factory: BackendFactory,
+    rx: mpsc::Receiver<Job>,
+    policy: BatchPolicy,
+    metrics: Arc<ServeMetrics>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    let mut backend = match factory() {
+        Ok(b) => {
+            let _ = ready.send(Ok(()));
+            b
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let max_capacity = backend
+        .batch_sizes()
+        .last()
+        .copied()
+        .unwrap_or(1)
+        .min(policy.max_batch)
+        .max(1);
+
+    loop {
+        // Block for the first request.
+        let first = match rx.recv() {
+            Ok(Job::Infer(r)) => r,
+            Ok(Job::Shutdown) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        // Dynamic batching: wait up to max_delay for more work.
+        let deadline = Instant::now() + policy.max_delay;
+        while batch.len() < max_capacity {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Job::Infer(r)) => batch.push(r),
+                Ok(Job::Shutdown) => {
+                    run_batch(&mut *backend, &batch, &metrics);
+                    return;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    run_batch(&mut *backend, &batch, &metrics);
+                    return;
+                }
+            }
+        }
+        run_batch(&mut *backend, &batch, &metrics);
+    }
+}
+
+/// Execute one formed batch at the smallest adequate AOT capacity.
+fn run_batch(backend: &mut dyn Backend, batch: &[ServeRequest], metrics: &ServeMetrics) {
+    // Pick the smallest compiled capacity that fits the batch; fall back
+    // to the largest (callers never exceed it by construction).
+    let capacity = backend
+        .batch_sizes()
+        .iter()
+        .copied()
+        .find(|&b| b >= batch.len())
+        .unwrap_or_else(|| backend.batch_sizes().last().copied().unwrap_or(1));
+
+    let images: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
+    let result = backend.infer_batch(&images, capacity);
+    metrics.counters.batches.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .counters
+        .batched_items
+        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+    match result {
+        Ok(rows) => {
+            for (req, logits) in batch.iter().zip(rows) {
+                let latency = req.enqueued.elapsed();
+                metrics.latency.record(latency);
+                metrics.counters.completed.fetch_add(1, Ordering::Relaxed);
+                metrics.throughput.add(1);
+                let _ = req.reply.send(ServeResponse {
+                    logits,
+                    latency,
+                    batch_size: batch.len(),
+                });
+            }
+        }
+        Err(e) => {
+            // Drop the reply senders: receivers observe RecvError.
+            eprintln!("worker batch failed: {e}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backends
+// ---------------------------------------------------------------------------
+
+/// Native-engine backend (no artifacts needed): runs the synthesized
+/// plan on [`crate::engine`]. `Send`, any batch size.
+pub struct EngineBackend {
+    net: crate::model::Network,
+    params: crate::engine::EngineParams,
+    modes: crate::engine::ModeAssignment,
+    threads: usize,
+    batches: Vec<usize>,
+    input_len: usize,
+}
+
+impl EngineBackend {
+    pub fn new(
+        net: crate::model::Network,
+        params: crate::engine::EngineParams,
+        modes: crate::engine::ModeAssignment,
+        threads: usize,
+        max_batch: usize,
+    ) -> Self {
+        let input_len = net.input.elements();
+        EngineBackend {
+            net,
+            params,
+            modes,
+            threads,
+            batches: (0..).map(|i| 1 << i).take_while(|&b| b <= max_batch.max(1)).collect(),
+            input_len,
+        }
+    }
+
+    /// Factory for [`Server::start`].
+    pub fn factory(self) -> BackendFactory {
+        Box::new(move || Ok(Box::new(self) as Box<dyn Backend>))
+    }
+}
+
+impl Backend for EngineBackend {
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn infer_batch(&mut self, images: &[&[f32]], _capacity: usize) -> Result<Vec<Vec<f32>>> {
+        images
+            .iter()
+            .map(|img| {
+                crate::engine::run_mapmajor(
+                    &self.net,
+                    &self.params,
+                    img,
+                    &self.modes,
+                    crate::engine::ExecConfig { threads: self.threads },
+                )
+            })
+            .collect()
+    }
+}
+
+/// PJRT backend: one compiled executable per AOT batch size, weights
+/// device-resident. Constructed on the worker thread via
+/// [`pjrt_factory`].
+pub struct PjrtBackend {
+    models: Vec<crate::runtime::LoadedModel>, // ascending batch
+    batches: Vec<usize>,
+    c: usize,
+    h: usize,
+    w: usize,
+    u: usize,
+}
+
+impl Backend for PjrtBackend {
+    fn input_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn infer_batch(&mut self, images: &[&[f32]], capacity: usize) -> Result<Vec<Vec<f32>>> {
+        let idx = self
+            .batches
+            .iter()
+            .position(|&b| b == capacity)
+            .ok_or_else(|| Error::Serve(format!("no artifact with batch {capacity}")))?;
+        let model = &self.models[idx];
+        let x = crate::runtime::batch_to_mapmajor(images, self.c, self.h, self.w, self.u, capacity);
+        let rows = model.infer_rows(&x)?;
+        Ok(rows.into_iter().take(images.len()).collect())
+    }
+}
+
+/// Build a PJRT backend factory for `(net, mode)` using every batch size
+/// in the manifest.
+pub fn pjrt_factory(
+    artifacts_dir: std::path::PathBuf,
+    net: String,
+    mode: String,
+    source_seed: Option<u64>,
+) -> BackendFactory {
+    Box::new(move || {
+        let manifest = crate::runtime::Manifest::load(&artifacts_dir)?;
+        let network = manifest
+            .nets
+            .get(&net)
+            .ok_or_else(|| Error::Invalid(format!("manifest has no net {net:?}")))?;
+        let (c, h, w) = network.input.as_maps()?;
+        let runtime = crate::runtime::Runtime::new()?;
+        let source = match source_seed {
+            Some(seed) => crate::runtime::ParamSource::Random(seed),
+            None => crate::runtime::ParamSource::MapMajorFile(
+                crate::config::ModelFile::read_from(
+                    artifacts_dir.join(format!("{net}_mm.capp")),
+                )?,
+            ),
+        };
+        let batches = manifest.batch_sizes(&net, &mode);
+        if batches.is_empty() {
+            return Err(Error::Invalid(format!("no artifacts for {net}/{mode}")));
+        }
+        let mut models = Vec::new();
+        for &b in &batches {
+            let spec = manifest.find(&net, &mode, b)?;
+            models.push(runtime.load(&manifest, spec, &source)?);
+        }
+        Ok(Box::new(PjrtBackend { models, batches, c, h, w, u: manifest.u }) as Box<dyn Backend>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ArithMode, EngineParams, ModeAssignment};
+    use crate::model::zoo;
+    use crate::util::rng::Rng;
+
+    fn engine_server(max_batch: usize, policy: BatchPolicy) -> Server {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 7, 4).unwrap();
+        let backend = EngineBackend::new(
+            net,
+            params,
+            ModeAssignment::uniform(ArithMode::Imprecise),
+            1,
+            max_batch,
+        );
+        Server::start(vec![("tinynet".into(), backend.factory(), policy)]).unwrap()
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = engine_server(8, BatchPolicy::default());
+        let mut rng = Rng::new(1);
+        let img = rng.normal_vec(3 * 16 * 16);
+        let resp = server.router().infer_blocking("tinynet", img).unwrap();
+        assert_eq!(resp.logits.len(), 8);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let server = engine_server(8, BatchPolicy::default());
+        let err = server.router().submit("resnet", vec![0.0; 768]).unwrap_err();
+        assert!(err.to_string().contains("unknown model"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn burst_is_batched() {
+        let server = engine_server(
+            8,
+            BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(30), queue_depth: 64 },
+        );
+        let mut rng = Rng::new(2);
+        let rxs: Vec<_> = (0..12)
+            .map(|_| {
+                server
+                    .router()
+                    .submit("tinynet", rng.normal_vec(3 * 16 * 16))
+                    .unwrap()
+            })
+            .collect();
+        let responses: Vec<ServeResponse> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert_eq!(responses.len(), 12);
+        // At least one response must have ridden a multi-request batch.
+        assert!(
+            responses.iter().any(|r| r.batch_size > 1),
+            "batcher never formed a batch"
+        );
+        let m = server.metrics();
+        assert_eq!(m.counters.completed.load(Ordering::Relaxed), 12);
+        assert!(m.counters.batches.load(Ordering::Relaxed) < 12);
+        server.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Tiny queue + slow drain: flooding must produce rejections.
+        let server = engine_server(
+            1,
+            BatchPolicy { max_batch: 1, max_delay: Duration::ZERO, queue_depth: 2 },
+        );
+        let mut rng = Rng::new(3);
+        let mut rejected = 0;
+        let mut pending = Vec::new();
+        for _ in 0..200 {
+            match server.router().submit("tinynet", rng.normal_vec(3 * 16 * 16)) {
+                Ok(rx) => pending.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        assert!(rejected > 0, "queue never filled");
+        assert_eq!(
+            server.metrics().counters.rejected.load(Ordering::Relaxed),
+            rejected
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn multi_model_routing() {
+        let net = zoo::tinynet();
+        let p1 = EngineParams::random(&net, 1, 4).unwrap();
+        let p2 = EngineParams::random(&net, 2, 4).unwrap();
+        let b1 = EngineBackend::new(
+            net.clone(),
+            p1,
+            ModeAssignment::uniform(ArithMode::Precise),
+            1,
+            4,
+        );
+        let b2 = EngineBackend::new(
+            net,
+            p2,
+            ModeAssignment::uniform(ArithMode::Precise),
+            1,
+            4,
+        );
+        let server = Server::start(vec![
+            ("a".into(), b1.factory(), BatchPolicy::default()),
+            ("b".into(), b2.factory(), BatchPolicy::default()),
+        ])
+        .unwrap();
+        let mut rng = Rng::new(4);
+        let img = rng.normal_vec(768);
+        let ra = server.router().infer_blocking("a", img.clone()).unwrap();
+        let rb = server.router().infer_blocking("b", img).unwrap();
+        // Different weights → different logits.
+        assert_ne!(ra.logits, rb.logits);
+        server.shutdown();
+    }
+
+    #[test]
+    fn failed_backend_startup_propagates() {
+        let factory: BackendFactory =
+            Box::new(|| Err(Error::Serve("no artifacts".into())));
+        let err = match Server::start(vec![("x".into(), factory, BatchPolicy::default())]) {
+            Err(e) => e,
+            Ok(_) => panic!("startup should have failed"),
+        };
+        assert!(err.to_string().contains("no artifacts"));
+    }
+}

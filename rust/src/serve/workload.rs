@@ -1,0 +1,121 @@
+//! Serving workload generation: arrival processes for driving the
+//! router/batcher in benches and examples.
+//!
+//! The paper evaluates single-inference latency; the serving layer this
+//! repo adds needs load *patterns* to characterise the dynamic batcher.
+//! Three standard processes are provided, all deterministic per seed.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Request arrival process.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// All requests at t=0 (closed-loop burst).
+    Burst,
+    /// Fixed inter-arrival gap (open-loop, deterministic rate).
+    Uniform { rate_per_s: f64 },
+    /// Exponential inter-arrival times (open-loop Poisson).
+    Poisson { rate_per_s: f64 },
+    /// Bursts of `size` back-to-back requests separated by `gap`.
+    Bursty { size: usize, gap: Duration },
+}
+
+impl ArrivalProcess {
+    /// Generate the inter-arrival delays for `n` requests (delay *before*
+    /// each request; first is always zero).
+    pub fn delays(&self, n: usize, seed: u64) -> Vec<Duration> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                if i == 0 {
+                    return Duration::ZERO;
+                }
+                match *self {
+                    ArrivalProcess::Burst => Duration::ZERO,
+                    ArrivalProcess::Uniform { rate_per_s } => {
+                        Duration::from_secs_f64(1.0 / rate_per_s.max(1e-9))
+                    }
+                    ArrivalProcess::Poisson { rate_per_s } => {
+                        // Inverse-CDF exponential sampling.
+                        let u = rng.f64().max(1e-12);
+                        Duration::from_secs_f64(-u.ln() / rate_per_s.max(1e-9))
+                    }
+                    ArrivalProcess::Bursty { size, gap } => {
+                        if i % size == 0 {
+                            gap
+                        } else {
+                            Duration::ZERO
+                        }
+                    }
+                }
+            })
+            .collect()
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            ArrivalProcess::Burst => "burst".into(),
+            ArrivalProcess::Uniform { rate_per_s } => format!("uniform-{rate_per_s:.0}rps"),
+            ArrivalProcess::Poisson { rate_per_s } => format!("poisson-{rate_per_s:.0}rps"),
+            ArrivalProcess::Bursty { size, gap } => {
+                format!("bursty-{size}x{}ms", gap.as_millis())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_has_zero_delays() {
+        let d = ArrivalProcess::Burst.delays(10, 1);
+        assert_eq!(d.len(), 10);
+        assert!(d.iter().all(|&x| x.is_zero()));
+    }
+
+    #[test]
+    fn uniform_rate_matches() {
+        let d = ArrivalProcess::Uniform { rate_per_s: 100.0 }.delays(11, 1);
+        let total: Duration = d.iter().sum();
+        assert!((total.as_secs_f64() - 0.1).abs() < 1e-6, "{total:?}");
+    }
+
+    #[test]
+    fn poisson_mean_close_to_rate() {
+        let rate = 200.0;
+        let n = 5000;
+        let d = ArrivalProcess::Poisson { rate_per_s: rate }.delays(n, 7);
+        let mean = d.iter().map(|x| x.as_secs_f64()).sum::<f64>() / (n - 1) as f64;
+        assert!((mean * rate - 1.0).abs() < 0.1, "mean gap {mean}");
+    }
+
+    #[test]
+    fn poisson_deterministic_per_seed() {
+        let a = ArrivalProcess::Poisson { rate_per_s: 50.0 }.delays(20, 3);
+        let b = ArrivalProcess::Poisson { rate_per_s: 50.0 }.delays(20, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bursty_structure() {
+        let gap = Duration::from_millis(5);
+        let d = ArrivalProcess::Bursty { size: 4, gap }.delays(12, 1);
+        assert_eq!(d[0], Duration::ZERO);
+        assert_eq!(d[4], gap);
+        assert_eq!(d[5], Duration::ZERO);
+        assert_eq!(d[8], gap);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(ArrivalProcess::Burst.label(), "burst");
+        assert_eq!(
+            ArrivalProcess::Bursty { size: 4, gap: Duration::from_millis(5) }.label(),
+            "bursty-4x5ms"
+        );
+    }
+}

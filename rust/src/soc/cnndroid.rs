@@ -1,0 +1,113 @@
+//! CNNDroid comparator model (paper Table III, prior art [10]).
+//!
+//! CNNDroid (Latifi Oskouei et al., MM'16) accelerates convolutions on
+//! the mobile GPU but keeps conventional row-major data and performs a
+//! host↔GPU round-trip per accelerated layer; FC and the remaining
+//! layers run on the CPU. The model below implements exactly that
+//! execution strategy on the same device constants our Cappuccino model
+//! uses, so Table III compares *approaches*, not fitted numbers:
+//!
+//! * per conv layer: GPU compute at an effective GPU rate, plus copy-in
+//!   (input + weights) and copy-out over the host↔GPU path, plus a
+//!   driver launch overhead;
+//! * everything else: single-core CPU at parallel-efficiency rate.
+//!
+//! No imprecise mode, no map-major vectorisation — the two Cappuccino
+//! advantages the paper credits for the 1.38x / 11.47x wins.
+
+use crate::model::{shapes, Network};
+use crate::soc::devices::DeviceModel;
+
+/// GPU-path constants for the CNNDroid execution strategy.
+#[derive(Debug, Clone)]
+pub struct CnnDroidModel {
+    /// Effective mobile-GPU conv throughput, GFLOP/s.
+    pub gpu_gflops: f64,
+    /// Host↔GPU copy bandwidth, GB/s (shared-memory SoCs still pay a
+    /// mapping/copy cost through the driver).
+    pub copy_bw_gbs: f64,
+    /// Per-kernel driver launch overhead, ms.
+    pub launch_ms: f64,
+}
+
+impl CnnDroidModel {
+    /// CNNDroid on a given SoC: GPU rate scales with the device's
+    /// parallel efficiency class.
+    pub fn for_device(device: &DeviceModel) -> CnnDroidModel {
+        CnnDroidModel {
+            // Adreno-class sustained conv throughput: a small multiple of
+            // the CPU-parallel rate on the same SoC generation.
+            gpu_gflops: device.parallel_gflops() * 0.9,
+            copy_bw_gbs: device.mem_bw_gbs * 0.25,
+            launch_ms: 1.2,
+        }
+    }
+
+    /// Simulated single-inference latency, ms.
+    pub fn latency_ms(&self, net: &Network, device: &DeviceModel) -> f64 {
+        let info = shapes::infer(net).expect("network must shape-check");
+        let mut total = 0.0;
+        for cost in &info.costs {
+            if cost.kind == "conv" {
+                let compute = cost.flops / (self.gpu_gflops * 1e9) * 1e3;
+                let copies = (cost.param_bytes + cost.input_bytes + cost.output_bytes)
+                    / (self.copy_bw_gbs * 1e9)
+                    * 1e3;
+                total += compute + copies + self.launch_ms;
+            } else {
+                // CPU path, multi-threaded but scalar.
+                let rate = device.parallel_gflops() * 1e9;
+                total += cost.flops / rate * 1e3
+                    + (cost.input_bytes + cost.output_bytes) / (device.mem_bw_gbs * 1e9) * 1e3;
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::soc::devices;
+    use crate::soc::devices::ProcessingMode;
+    use crate::soc::latency::simulate;
+
+    #[test]
+    fn table3_shape_holds() {
+        // Paper Table III (AlexNet on Snapdragon 810): CNNDroid 709ms,
+        // Cappuccino parallel 512.72ms (1.38x), imprecise 61.80ms
+        // (11.47x). Assert the ordering and coarse factors.
+        let device = devices::nexus6p();
+        let net = zoo::alexnet();
+        let droid = CnnDroidModel::for_device(&device).latency_ms(&net, &device);
+        let par = simulate(&net, &device, ProcessingMode::Parallel).total_ms();
+        let imp = simulate(&net, &device, ProcessingMode::Imprecise).total_ms();
+        assert!(droid > par, "CNNDroid {droid:.0}ms must trail parallel {par:.0}ms");
+        let s_par = droid / par;
+        let s_imp = droid / imp;
+        assert!((1.05..4.0).contains(&s_par), "parallel speedup {s_par:.2}");
+        assert!((4.0..40.0).contains(&s_imp), "imprecise speedup {s_imp:.2}");
+        assert!(s_imp > s_par);
+    }
+
+    #[test]
+    fn cnndroid_magnitude_close_to_paper() {
+        // Paper: 709 ms on SD810; accept a 2.5x band.
+        let device = devices::nexus6p();
+        let droid = CnnDroidModel::for_device(&device).latency_ms(&zoo::alexnet(), &device);
+        assert!(
+            (300.0..1800.0).contains(&droid),
+            "CNNDroid AlexNet latency {droid:.0}ms"
+        );
+    }
+
+    #[test]
+    fn cnndroid_still_beats_java() {
+        let device = devices::nexus6p();
+        let net = zoo::alexnet();
+        let droid = CnnDroidModel::for_device(&device).latency_ms(&net, &device);
+        let base = simulate(&net, &device, ProcessingMode::JavaBaseline).total_ms();
+        assert!(base / droid > 3.0, "GPU offload must beat interpreter");
+    }
+}

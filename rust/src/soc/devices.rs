@@ -1,0 +1,203 @@
+//! Device catalog: analytic models of the paper's three test phones.
+//!
+//! Architectural constants (cores, clocks, SIMD width, memory bandwidth)
+//! come from public Snapdragon 800/810/820 specifications. The three
+//! *efficiency* scalars per device (Java interpreter throughput, parallel
+//! compute efficiency, achievable bandwidth fraction) are calibrated from
+//! the paper's own Table I baselines — one scalar each, no per-network
+//! fitting (DESIGN.md "Calibration notes"). Absolute milliseconds are
+//! therefore approximate; the *shape* (who wins, speedup bands,
+//! imprecise ≥ parallel) is what the simulator reproduces and what the
+//! Table I bench asserts.
+
+/// Execution mode of the synthesized program on a device (Table I columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProcessingMode {
+    /// Single-threaded Java interpreter baseline.
+    JavaBaseline,
+    /// Cappuccino parallel program, RenderScript precise arithmetic
+    /// (no vector units — the paper: vectors need inexact modes).
+    Parallel,
+    /// Cappuccino parallel program, imprecise arithmetic + vectors.
+    Imprecise,
+}
+
+impl ProcessingMode {
+    pub const ALL: [ProcessingMode; 3] = [
+        ProcessingMode::JavaBaseline,
+        ProcessingMode::Parallel,
+        ProcessingMode::Imprecise,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ProcessingMode::JavaBaseline => "baseline",
+            ProcessingMode::Parallel => "parallel",
+            ProcessingMode::Imprecise => "imprecise",
+        }
+    }
+}
+
+/// Analytic model of one mobile SoC platform.
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    pub soc: &'static str,
+    /// CPU cores usable by the parallel runtime.
+    pub cores: usize,
+    /// Sustained big-core clock, GHz.
+    pub ghz: f64,
+    /// f32 SIMD lanes (NEON = 4) — the paper's `u`.
+    pub simd_lanes: usize,
+    /// Achievable memory bandwidth, GB/s (effective, not datasheet peak).
+    pub mem_bw_gbs: f64,
+    /// Measured single-thread Java throughput, MFLOP/s (calibrated from
+    /// the paper's baseline column).
+    pub java_mflops: f64,
+    /// Fraction of scalar-FMA peak the parallel RenderScript program
+    /// achieves across CPU+GPU+DSP (calibrated).
+    pub parallel_eff: f64,
+    /// Additional throughput factor of relaxed-FP arithmetic on top of
+    /// vectorisation (denormal handling, fast paths).
+    pub relaxed_gain: f64,
+    /// Per-kernel-launch dispatch overhead, ms (RenderScript runtime).
+    pub dispatch_ms: f64,
+    // -- power model (energy Table II) ---------------------------------
+    /// Single active core, W.
+    pub p_single_w: f64,
+    /// All cores + GPU active under the parallel program, W.
+    pub p_parallel_w: f64,
+}
+
+impl DeviceModel {
+    /// Peak scalar-FMA compute of the parallel configuration, GFLOP/s.
+    pub fn parallel_peak_gflops(&self) -> f64 {
+        self.cores as f64 * self.ghz * 2.0 // 2 FLOPs/cycle (FMA)
+    }
+
+    /// Effective parallel compute rate, GFLOP/s.
+    pub fn parallel_gflops(&self) -> f64 {
+        self.parallel_peak_gflops() * self.parallel_eff
+    }
+
+    /// Effective vectorised (imprecise-mode) compute rate, GFLOP/s,
+    /// before per-layer vector-efficiency derating.
+    pub fn imprecise_gflops(&self) -> f64 {
+        self.parallel_gflops() * self.simd_lanes as f64 * self.relaxed_gain
+    }
+}
+
+/// Nexus 5 — Snapdragon 800 (4x Krait 400 @ 2.26 GHz, Adreno 330,
+/// LPDDR3-1600 x2).
+pub fn nexus5() -> DeviceModel {
+    DeviceModel {
+        name: "Nexus 5",
+        soc: "Snapdragon 800",
+        cores: 4,
+        ghz: 2.26,
+        simd_lanes: 4,
+        mem_bw_gbs: 6.0,
+        java_mflops: 40.0,
+        parallel_eff: 0.075,
+        relaxed_gain: 1.3,
+        dispatch_ms: 0.45,
+        p_single_w: 0.60,
+        p_parallel_w: 2.60,
+    }
+}
+
+/// Nexus 6P — Snapdragon 810 (4x A57 @ ~2.0 GHz + 4x A53, Adreno 430,
+/// LPDDR4). The big.LITTLE pair is modelled as 8 usable cores at the
+/// big-core clock derated through `parallel_eff`.
+pub fn nexus6p() -> DeviceModel {
+    DeviceModel {
+        name: "Nexus 6P",
+        soc: "Snapdragon 810",
+        cores: 8,
+        ghz: 2.0,
+        simd_lanes: 4,
+        mem_bw_gbs: 12.0,
+        java_mflops: 120.0,
+        parallel_eff: 0.085,
+        relaxed_gain: 2.0,
+        dispatch_ms: 0.30,
+        p_single_w: 0.75,
+        p_parallel_w: 3.40,
+    }
+}
+
+/// Galaxy S7 — Snapdragon 820 (4x Kryo @ 2.15 GHz, Adreno 530, LPDDR4).
+pub fn galaxy_s7() -> DeviceModel {
+    DeviceModel {
+        name: "Galaxy S7",
+        soc: "Snapdragon 820",
+        cores: 4,
+        ghz: 2.15,
+        simd_lanes: 4,
+        mem_bw_gbs: 14.0,
+        java_mflops: 140.0,
+        parallel_eff: 0.135,
+        relaxed_gain: 1.3,
+        dispatch_ms: 0.25,
+        p_single_w: 0.70,
+        p_parallel_w: 3.00,
+    }
+}
+
+/// The paper's three platforms, in Table I order.
+pub fn catalog() -> Vec<DeviceModel> {
+    vec![nexus5(), nexus6p(), galaxy_s7()]
+}
+
+/// Look a device up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<DeviceModel> {
+    let l = name.to_lowercase().replace([' ', '-', '_'], "");
+    match l.as_str() {
+        "nexus5" => Some(nexus5()),
+        "nexus6p" => Some(nexus6p()),
+        "galaxys7" | "s7" => Some(galaxy_s7()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_has_three_paper_devices() {
+        let c = catalog();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[0].soc, "Snapdragon 800");
+        assert_eq!(c[2].name, "Galaxy S7");
+    }
+
+    #[test]
+    fn by_name_variants() {
+        assert!(by_name("Nexus 5").is_some());
+        assert!(by_name("nexus-6p").is_some());
+        assert!(by_name("galaxy_s7").is_some());
+        assert!(by_name("pixel9").is_none());
+    }
+
+    #[test]
+    fn compute_rates_ordered() {
+        // Vectorised rate must exceed parallel rate everywhere; parallel
+        // rate must exceed Java throughput by a wide margin.
+        for d in catalog() {
+            assert!(d.imprecise_gflops() > d.parallel_gflops(), "{}", d.name);
+            assert!(
+                d.parallel_gflops() * 1e3 > d.java_mflops * 5.0,
+                "{}: parallel barely beats java",
+                d.name
+            );
+        }
+    }
+
+    #[test]
+    fn power_ordering() {
+        for d in catalog() {
+            assert!(d.p_parallel_w > d.p_single_w);
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Latency model: per-layer roofline over the device catalog.
+//!
+//! For each primitive layer the simulator takes
+//! `t = max(compute term, memory term) + dispatch overhead` where the
+//! compute rate depends on the processing mode:
+//!
+//! * baseline — single-thread Java interpreter throughput;
+//! * parallel — all cores, scalar precise arithmetic (RenderScript
+//!   precise mode serialises vector element processing — paper §IV.C);
+//! * imprecise — vector units unlocked; the per-layer *vector
+//!   efficiency* models how well the map-major MAC fills `u` lanes:
+//!   1x1 convolutions (channel-dominated) vectorise perfectly, large
+//!   kernels and thin input layers less so, dense layers are mostly
+//!   memory-bound anyway.
+//!
+//! The simulated measurement protocol mirrors section V.A: every query
+//! can be sampled `n` times with small Gaussian measurement noise and
+//! reported through the trimmed mean.
+
+use crate::model::{shapes, Network};
+use crate::soc::devices::{DeviceModel, ProcessingMode};
+use crate::util::rng::Rng;
+
+/// Per-layer simulated timing.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub name: String,
+    pub kind: &'static str,
+    pub compute_ms: f64,
+    pub memory_ms: f64,
+    pub dispatch_ms: f64,
+}
+
+impl LayerTiming {
+    pub fn total_ms(&self) -> f64 {
+        self.compute_ms.max(self.memory_ms) + self.dispatch_ms
+    }
+}
+
+/// Full simulation result for (network, device, mode).
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub network: String,
+    pub device: &'static str,
+    pub mode: ProcessingMode,
+    pub layers: Vec<LayerTiming>,
+}
+
+impl SimReport {
+    pub fn total_ms(&self) -> f64 {
+        self.layers.iter().map(|l| l.total_ms()).sum()
+    }
+
+    /// The slowest layers, for profiling output.
+    pub fn hotspots(&self, n: usize) -> Vec<&LayerTiming> {
+        let mut v: Vec<&LayerTiming> = self.layers.iter().collect();
+        v.sort_by(|a, b| b.total_ms().total_cmp(&a.total_ms()));
+        v.truncate(n);
+        v
+    }
+}
+
+/// Simulate one layer under a mode.
+fn simulate_layer(
+    cost: &shapes::LayerCost,
+    veff: f64,
+    device: &DeviceModel,
+    mode: ProcessingMode,
+) -> LayerTiming {
+    let bytes = cost.param_bytes + cost.input_bytes + cost.output_bytes;
+    let (compute_ms, memory_ms, dispatch_ms) = match mode {
+        ProcessingMode::JavaBaseline => {
+            // Interpreted scalar loop: compute-bound by definition; the
+            // interpreter factor swallows memory behaviour.
+            (cost.flops / (device.java_mflops * 1e6) * 1e3, 0.0, 0.0)
+        }
+        ProcessingMode::Parallel => {
+            let rate = device.parallel_gflops() * 1e9;
+            (
+                cost.flops / rate * 1e3,
+                bytes / (device.mem_bw_gbs * 1e9) * 1e3,
+                device.dispatch_ms,
+            )
+        }
+        ProcessingMode::Imprecise => {
+            let rate = device.imprecise_gflops() * 1e9 * veff;
+            (
+                cost.flops / rate * 1e3,
+                bytes / (device.mem_bw_gbs * 1e9) * 1e3,
+                device.dispatch_ms,
+            )
+        }
+    };
+    LayerTiming {
+        name: cost.name.clone(),
+        kind: cost.kind,
+        compute_ms,
+        memory_ms,
+        dispatch_ms,
+    }
+}
+
+/// Simulate a full network on a device under a processing mode.
+pub fn simulate(net: &Network, device: &DeviceModel, mode: ProcessingMode) -> SimReport {
+    let info = shapes::infer(net).expect("network must shape-check before simulation");
+    let layers = info
+        .costs
+        .iter()
+        .map(|c| simulate_layer(c, vector_efficiency_cached(c, &info), device, mode))
+        .collect();
+    SimReport { network: net.name.clone(), device: device.name, mode, layers }
+}
+
+/// `vector_efficiency` without re-running shape inference per layer.
+fn vector_efficiency_cached(cost: &shapes::LayerCost, info: &shapes::NetworkInfo) -> f64 {
+    match cost.kind {
+        "conv" => {
+            let pl = info.param_layer(&cost.name).expect("conv has params");
+            let (c_in, _, _) = pl.input.as_maps().unwrap_or((4, 0, 0));
+            let k_eff = match pl.k {
+                1 => 1.00,
+                2 | 3 => 0.90,
+                4 | 5 => 0.80,
+                _ => 0.55,
+            };
+            let c_eff = (c_in as f64 / 4.0).min(1.0).max(0.25);
+            k_eff * c_eff
+        }
+        "dense" => 0.35,
+        _ => 0.50,
+    }
+}
+
+/// Sampled measurement with the paper's protocol (section V.A): `n`
+/// repetitions with ±`noise` relative Gaussian measurement jitter, min
+/// and max dropped, mean of the rest.
+pub fn measure_trimmed(
+    net: &Network,
+    device: &DeviceModel,
+    mode: ProcessingMode,
+    n: usize,
+    noise: f64,
+    seed: u64,
+) -> f64 {
+    let nominal = simulate(net, device, mode).total_ms();
+    let mut rng = Rng::new(seed ^ 0xCAFE);
+    let samples: Vec<f64> = (0..n.max(1))
+        .map(|_| nominal * (1.0 + noise * rng.normal() as f64))
+        .collect();
+    crate::metrics::trimmed_mean(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::soc::devices;
+
+    #[test]
+    fn modes_strictly_ordered_everywhere() {
+        // Table I invariant: baseline >> parallel >= imprecise.
+        for device in devices::catalog() {
+            for net in [zoo::alexnet(), zoo::squeezenet(), zoo::googlenet()] {
+                let base = simulate(&net, &device, ProcessingMode::JavaBaseline).total_ms();
+                let par = simulate(&net, &device, ProcessingMode::Parallel).total_ms();
+                let imp = simulate(&net, &device, ProcessingMode::Imprecise).total_ms();
+                assert!(base > par * 5.0, "{}/{}: {base} vs {par}", device.name, net.name);
+                assert!(par > imp, "{}/{}: {par} vs {imp}", device.name, net.name);
+            }
+        }
+    }
+
+    #[test]
+    fn speedup_bands_match_paper_shape() {
+        // Paper: overall speedups between ~32x and ~272x; our model must
+        // land every cell in a compatible coarse band (10x .. 500x).
+        for device in devices::catalog() {
+            for net in [zoo::alexnet(), zoo::squeezenet(), zoo::googlenet()] {
+                let base = simulate(&net, &device, ProcessingMode::JavaBaseline).total_ms();
+                let imp = simulate(&net, &device, ProcessingMode::Imprecise).total_ms();
+                let speedup = base / imp;
+                assert!(
+                    (10.0..500.0).contains(&speedup),
+                    "{}/{}: speedup {speedup:.1}",
+                    device.name,
+                    net.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_magnitudes_match_paper_column() {
+        // Calibrated java_mflops should land baselines within 2x of the
+        // paper's measured values.
+        let cases = [
+            ("alexnet", devices::nexus5(), 33848.0),
+            ("squeezenet", devices::nexus5(), 43932.0),
+            ("googlenet", devices::nexus5(), 84404.0),
+            ("alexnet", devices::nexus6p(), 8626.0),
+            ("alexnet", devices::galaxy_s7(), 8698.0),
+        ];
+        for (net_name, device, paper_ms) in cases {
+            let net = zoo::by_name(net_name).unwrap();
+            let ms = simulate(&net, &device, ProcessingMode::JavaBaseline).total_ms();
+            let ratio = ms / paper_ms;
+            assert!(
+                (0.4..2.5).contains(&ratio),
+                "{}/{}: model {ms:.0}ms vs paper {paper_ms}ms (ratio {ratio:.2})",
+                device.name,
+                net_name
+            );
+        }
+    }
+
+    #[test]
+    fn imprecise_subsecond_for_small_nets() {
+        // Paper: "execution time in all but one case is below a second".
+        for device in devices::catalog() {
+            for net in [zoo::alexnet(), zoo::squeezenet()] {
+                let imp = simulate(&net, &device, ProcessingMode::Imprecise).total_ms();
+                assert!(imp < 1000.0, "{}/{}: {imp}ms", device.name, net.name);
+            }
+        }
+    }
+
+    #[test]
+    fn hotspots_sorted() {
+        let net = zoo::alexnet();
+        let rep = simulate(&net, &devices::nexus5(), ProcessingMode::Parallel);
+        let hs = rep.hotspots(3);
+        assert_eq!(hs.len(), 3);
+        assert!(hs[0].total_ms() >= hs[1].total_ms());
+    }
+
+    #[test]
+    fn trimmed_measurement_close_to_nominal() {
+        let net = zoo::squeezenet();
+        let d = devices::nexus5();
+        let nominal = simulate(&net, &d, ProcessingMode::Imprecise).total_ms();
+        let measured = measure_trimmed(&net, &d, ProcessingMode::Imprecise, 100, 0.01, 7);
+        assert!((measured / nominal - 1.0).abs() < 0.01, "{measured} vs {nominal}");
+    }
+
+    #[test]
+    fn vector_efficiency_shape() {
+        // 1x1 convs must vectorise better than 11x11, thin-input conv1
+        // must be derated.
+        let net = zoo::alexnet();
+        let info = shapes::infer(&net).unwrap();
+        let conv1 = info.costs.iter().find(|c| c.name == "conv1").unwrap();
+        let conv3 = info.costs.iter().find(|c| c.name == "conv3").unwrap();
+        let e1 = vector_efficiency_cached(conv1, &info);
+        let e3 = vector_efficiency_cached(conv3, &info);
+        assert!(e1 < e3, "conv1 {e1} vs conv3 {e3}");
+    }
+}

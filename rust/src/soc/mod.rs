@@ -1,0 +1,19 @@
+//! Mobile SoC simulator — the paper's testbed substitute (DESIGN.md
+//! substitution table).
+//!
+//! The paper measures three Android phones; none exist here, so Tables
+//! I–III regenerate on an analytic per-layer roofline ([`latency`]),
+//! a power-integral energy model ([`energy`]), and an implementation of
+//! the CNNDroid prior-art execution strategy ([`cnndroid`]), all over a
+//! small device catalog ([`devices`]) whose efficiency scalars are
+//! calibrated once per device from the paper's own baseline column.
+
+pub mod cnndroid;
+pub mod devices;
+pub mod energy;
+pub mod latency;
+
+pub use cnndroid::CnnDroidModel;
+pub use devices::{by_name, catalog, DeviceModel, ProcessingMode};
+pub use energy::{energy_joules, energy_table2, EnergyTable};
+pub use latency::{measure_trimmed, simulate, SimReport};

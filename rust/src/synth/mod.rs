@@ -1,0 +1,333 @@
+//! Program synthesis — Cappuccino's top-level flow (paper Fig. 3).
+//!
+//! 1. [`PrimarySynthesizer`] builds the *primary parallel program*: OLP
+//!    thread allocation (section IV.A), map-major layout with vector
+//!    width `u` (section IV.B), every layer precise. It validates the
+//!    alignment precondition (every conv width divisible by `u`, so
+//!    fork concats align with stacks) and records per-layer thread
+//!    counts (`alpha = M x Wout x Hout`, Fig. 4).
+//! 2. The inexact analysis ([`crate::inexact`]) runs the primary program
+//!    against the validation set to pick per-layer arithmetic modes.
+//! 3. [`finalize`] stamps the chosen modes into the final
+//!    [`SynthesisPlan`] — the "synthesized software". Plans serialise to
+//!    JSON and bind to either execution substrate: the native engine
+//!    ([`execute_plan`]) or the SoC simulator ([`predict_latency_ms`]).
+
+use std::collections::BTreeMap;
+
+use crate::engine::{self, ArithMode, EngineParams, ExecConfig, ModeAssignment, Parallelism};
+use crate::model::{shapes, Network};
+use crate::soc::{DeviceModel, ProcessingMode};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Per-parameterised-layer plan entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlan {
+    pub layer: String,
+    /// Thread workload allocation (always OLP from the primary
+    /// synthesizer; KLP/FLP appear only in ablation plans).
+    pub parallelism: Parallelism,
+    /// Arithmetic mode chosen by the inexact analysis.
+    pub mode: ArithMode,
+    /// OLP thread-pool size for this layer.
+    pub threads: usize,
+    /// `alpha = M x Wout x Hout` — the paper's per-layer logical thread
+    /// count (one thread per output pixel, Fig. 4).
+    pub alpha: usize,
+}
+
+/// A synthesized program: the complete executable description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthesisPlan {
+    pub net: String,
+    pub u: usize,
+    pub threads: usize,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl SynthesisPlan {
+    /// Mode assignment view for the engine.
+    pub fn mode_assignment(&self) -> ModeAssignment {
+        let mut ma = ModeAssignment::uniform(ArithMode::Precise);
+        for lp in &self.layers {
+            ma.per_layer.insert(lp.layer.clone(), lp.mode);
+        }
+        ma
+    }
+
+    /// How many layers run inexact (the analysis' objective).
+    pub fn inexact_layers(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| l.mode != ArithMode::Precise)
+            .count()
+    }
+
+    // -- JSON round-trip ----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("net", Json::str(self.net.clone())),
+            ("u", Json::num(self.u as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("layer", Json::str(l.layer.clone())),
+                                ("parallelism", Json::str(l.parallelism.as_str())),
+                                ("mode", Json::str(l.mode.as_str())),
+                                ("threads", Json::num(l.threads as f64)),
+                                ("alpha", Json::num(l.alpha as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> Result<SynthesisPlan> {
+        let layers = json
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(LayerPlan {
+                    layer: l.get("layer")?.as_str()?.to_string(),
+                    parallelism: l.get("parallelism")?.as_str()?.parse()?,
+                    mode: l.get("mode")?.as_str()?.parse()?,
+                    threads: l.get("threads")?.as_usize()?,
+                    alpha: l.get("alpha")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SynthesisPlan {
+            net: json.get("net")?.as_str()?.to_string(),
+            u: json.get("u")?.as_usize()?,
+            threads: json.get("threads")?.as_usize()?,
+            layers,
+        })
+    }
+}
+
+/// Primary Program Synthesizer (Fig. 3, first stage).
+pub struct PrimarySynthesizer {
+    pub u: usize,
+    pub threads: usize,
+}
+
+impl PrimarySynthesizer {
+    pub fn new(u: usize, threads: usize) -> Self {
+        PrimarySynthesizer { u, threads }
+    }
+
+    /// Build the primary (all-precise) parallel program for `net`.
+    pub fn synthesize(&self, net: &Network) -> Result<SynthesisPlan> {
+        if self.u == 0 || !self.u.is_power_of_two() {
+            return Err(Error::Invalid(format!("u={} must be a power of two", self.u)));
+        }
+        let info = shapes::infer(net)?;
+        // Alignment precondition: every conv width must divide u so that
+        // fork concatenation keeps stack boundaries aligned (IV.B).
+        let mut misaligned = Vec::new();
+        net.visit(&mut |l| {
+            if let crate::model::LayerOp::Conv { m, .. } = l.op {
+                if m % self.u != 0 {
+                    misaligned.push(format!("{} (m={m})", l.name));
+                }
+            }
+        });
+        if !misaligned.is_empty() {
+            return Err(Error::Invalid(format!(
+                "net {}: conv widths not divisible by u={}: {}",
+                net.name,
+                self.u,
+                misaligned.join(", ")
+            )));
+        }
+        let layers = info
+            .param_layers
+            .iter()
+            .map(|pl| LayerPlan {
+                layer: pl.name.clone(),
+                parallelism: Parallelism::Olp,
+                mode: ArithMode::Precise,
+                threads: self.threads,
+                alpha: pl.output.elements(),
+            })
+            .collect();
+        Ok(SynthesisPlan { net: net.name.clone(), u: self.u, threads: self.threads, layers })
+    }
+}
+
+/// Software Synthesizer (Fig. 3, final stage): stamp the analysis'
+/// per-layer modes into the primary plan.
+pub fn finalize(primary: &SynthesisPlan, modes: &ModeAssignment) -> SynthesisPlan {
+    let mut plan = primary.clone();
+    for lp in &mut plan.layers {
+        lp.mode = modes.mode_of(&lp.layer);
+    }
+    plan
+}
+
+/// Execute a plan on the native engine.
+pub fn execute_plan(
+    plan: &SynthesisPlan,
+    net: &Network,
+    params: &EngineParams,
+    input: &[f32],
+) -> Result<Vec<f32>> {
+    if params.u != plan.u {
+        return Err(Error::Invalid(format!(
+            "plan u={} vs params u={}",
+            plan.u, params.u
+        )));
+    }
+    engine::run_mapmajor(
+        net,
+        params,
+        input,
+        &plan.mode_assignment(),
+        ExecConfig { threads: plan.threads },
+    )
+}
+
+/// Predict the plan's latency on a simulated device. Layers in inexact
+/// modes run at the vectorised rate, precise layers at the scalar
+/// parallel rate — the per-layer mixture Table I's "Imprecise" column
+/// assumes when the analysis accepts every layer.
+pub fn predict_latency_ms(plan: &SynthesisPlan, net: &Network, device: &DeviceModel) -> f64 {
+    let modes: BTreeMap<&str, ArithMode> =
+        plan.layers.iter().map(|l| (l.layer.as_str(), l.mode)).collect();
+    let parallel = crate::soc::simulate(net, device, ProcessingMode::Parallel);
+    let imprecise = crate::soc::simulate(net, device, ProcessingMode::Imprecise);
+    parallel
+        .layers
+        .iter()
+        .zip(&imprecise.layers)
+        .map(|(p, i)| {
+            match modes.get(p.name.as_str()) {
+                Some(ArithMode::Precise) | None => p.total_ms(),
+                // Relaxed unlocks vectors too (paper IV.C); model both
+                // inexact modes at the vectorised rate.
+                Some(_) => i.total_ms(),
+            }
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::soc::devices;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn primary_plan_is_olp_precise() {
+        let net = zoo::squeezenet();
+        let plan = PrimarySynthesizer::new(4, 4).synthesize(&net).unwrap();
+        assert_eq!(plan.layers.len(), 26);
+        assert!(plan
+            .layers
+            .iter()
+            .all(|l| l.parallelism == Parallelism::Olp && l.mode == ArithMode::Precise));
+        assert_eq!(plan.inexact_layers(), 0);
+    }
+
+    #[test]
+    fn alpha_matches_paper_definition() {
+        // alpha = M x Wout x Hout for conv layers (Fig. 4).
+        let net = zoo::alexnet();
+        let plan = PrimarySynthesizer::new(4, 4).synthesize(&net).unwrap();
+        let conv1 = plan.layers.iter().find(|l| l.layer == "conv1").unwrap();
+        assert_eq!(conv1.alpha, 96 * 55 * 55);
+    }
+
+    #[test]
+    fn misaligned_u_rejected() {
+        // u=32 does not divide tinynet's 16-wide conv1.
+        let net = zoo::tinynet();
+        let err = PrimarySynthesizer::new(32, 1).synthesize(&net).unwrap_err();
+        assert!(err.to_string().contains("conv1"), "{err}");
+        assert!(PrimarySynthesizer::new(3, 1).synthesize(&net).is_err());
+    }
+
+    #[test]
+    fn finalize_stamps_modes() {
+        let net = zoo::tinynet();
+        let primary = PrimarySynthesizer::new(4, 2).synthesize(&net).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise)
+            .with("fc5", ArithMode::Precise);
+        let plan = finalize(&primary, &modes);
+        assert_eq!(plan.inexact_layers(), 4);
+        assert_eq!(
+            plan.layers.iter().find(|l| l.layer == "fc5").unwrap().mode,
+            ArithMode::Precise
+        );
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let net = zoo::tinynet();
+        let primary = PrimarySynthesizer::new(4, 2).synthesize(&net).unwrap();
+        let plan = finalize(
+            &primary,
+            &ModeAssignment::uniform(ArithMode::Imprecise),
+        );
+        let back = SynthesisPlan::from_json(&Json::parse(&plan.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn execute_plan_matches_engine() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 5, 4).unwrap();
+        let plan = PrimarySynthesizer::new(4, 2).synthesize(&net).unwrap();
+        let mut rng = Rng::new(1);
+        let input = rng.normal_vec(net.input.elements());
+        let a = execute_plan(&plan, &net, &params, &input).unwrap();
+        let b = engine::run_mapmajor(
+            &net,
+            &params,
+            &input,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            ExecConfig { threads: 2 },
+        )
+        .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn execute_plan_u_mismatch_rejected() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 5, 4).unwrap();
+        let plan = PrimarySynthesizer::new(8, 1).synthesize(&net).unwrap();
+        let input = vec![0.0; net.input.elements()];
+        assert!(execute_plan(&plan, &net, &params, &input).is_err());
+    }
+
+    #[test]
+    fn predicted_latency_monotone_in_inexact_layers() {
+        let net = zoo::squeezenet();
+        let device = devices::nexus5();
+        let primary = PrimarySynthesizer::new(4, 4).synthesize(&net).unwrap();
+        let all_imprecise = finalize(
+            &primary,
+            &ModeAssignment::uniform(ArithMode::Imprecise),
+        );
+        let t_precise = predict_latency_ms(&primary, &net, &device);
+        let t_imprecise = predict_latency_ms(&all_imprecise, &net, &device);
+        assert!(t_imprecise < t_precise, "{t_imprecise} vs {t_precise}");
+        // Matches the plain simulator endpoints.
+        let sim_par =
+            crate::soc::simulate(&net, &device, ProcessingMode::Parallel).total_ms();
+        assert!((t_precise / sim_par - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,129 @@
+//! In-repo property-testing helper (proptest is not in the vendored
+//! crate set).
+//!
+//! [`check`] runs a property over `n` pseudo-random cases built from a
+//! seeded [`Gen`]; on failure it reports the case index and seed so the
+//! exact inputs reproduce deterministically. Shrinking is deliberately
+//! out of scope — generators here produce small cases by construction.
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0-based) — handy for size scaling.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// One of the listed values.
+    pub fn choose<T: Copy>(&mut self, options: &[T]) -> T {
+        options[self.rng.below(options.len())]
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    /// Standard-normal vector.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normal_vec(n)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self) -> bool {
+        self.rng.f32() < 0.5
+    }
+}
+
+/// Run `property` over `n` generated cases. Panics (failing the test)
+/// with seed + case number on the first violation.
+pub fn check(name: &str, n: usize, seed: u64, mut property: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..n {
+        let mut gen = Gen { rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)), case };
+        if let Err(msg) = property(&mut gen) {
+            panic!("property {name:?} failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert two f32 slices agree within `tol` (absolute + relative).
+pub fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("elem {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_valid_property() {
+        check("add-commutes", 50, 42, |g| {
+            let a = g.f32(-10.0, 10.0);
+            let b = g.f32(-10.0, 10.0);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn check_reports_failures() {
+        check("always-false", 3, 1, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen-ranges", 100, 7, |g| {
+            let v = g.int(3, 9);
+            if !(3..=9).contains(&v) {
+                return Err(format!("int out of range: {v}"));
+            }
+            let c = g.choose(&[1, 2, 4, 8]);
+            if ![1, 2, 4, 8].contains(&c) {
+                return Err(format!("choose out of set: {c}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_detects_divergence() {
+        assert!(close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut first = Vec::new();
+        check("record", 5, 99, |g| {
+            first.push(g.int(0, 1000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("record", 5, 99, |g| {
+            second.push(g.int(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,71 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Crate result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error for every subsystem; variants carry enough context to
+/// be actionable from the CLI without a backtrace.
+#[derive(Debug)]
+pub enum Error {
+    /// Parse failure in a `.cappnet` / `.capp` / JSON / manifest input.
+    Parse { what: String, detail: String },
+    /// A request or configuration is structurally invalid.
+    Invalid(String),
+    /// Shape/layout mismatch between tensors or layers.
+    Shape(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// PJRT / XLA runtime failure.
+    Xla(String),
+    /// A serving-side failure (queue closed, backpressure, …).
+    Serve(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Parse { what, detail } => write!(f, "parse error in {what}: {detail}"),
+            Error::Invalid(msg) => write!(f, "invalid: {msg}"),
+            Error::Shape(msg) => write!(f, "shape error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(msg) => write!(f, "xla error: {msg}"),
+            Error::Serve(msg) => write!(f, "serve error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// Convenience constructor for parse errors.
+    pub fn parse(what: impl Into<String>, detail: impl Into<String>) -> Self {
+        Error::Parse { what: what.into(), detail: detail.into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        let e = Error::parse("manifest.json", "unexpected token");
+        assert_eq!(e.to_string(), "parse error in manifest.json: unexpected token");
+        assert!(Error::Shape("a vs b".into()).to_string().contains("a vs b"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

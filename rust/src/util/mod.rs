@@ -1,0 +1,87 @@
+//! Small substrates the rest of the crate builds on.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (serde,
+//! rand, etc.) are unavailable — these modules are deliberately small,
+//! from-scratch implementations of exactly what the system needs.
+
+pub mod error;
+pub mod json;
+pub mod rng;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+/// Format a float with engineering-style units (1.23 k / 4.56 M / ...).
+pub fn eng(value: f64) -> String {
+    let (v, suffix) = if value.abs() >= 1e9 {
+        (value / 1e9, "G")
+    } else if value.abs() >= 1e6 {
+        (value / 1e6, "M")
+    } else if value.abs() >= 1e3 {
+        (value / 1e3, "k")
+    } else {
+        (value, "")
+    };
+    format!("{v:.2}{suffix}")
+}
+
+/// Format a duration in adaptive units (ns/µs/ms/s).
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(3, 4), 4);
+        assert_eq!(round_up(8, 4), 8);
+        assert_eq!(round_up(9, 4), 12);
+    }
+
+    #[test]
+    fn eng_formatting() {
+        assert_eq!(eng(1234.0), "1.23k");
+        assert_eq!(eng(12.0), "12.00");
+        assert_eq!(eng(2.5e7), "25.00M");
+        assert_eq!(eng(3.1e9), "3.10G");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        use std::time::Duration;
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+    }
+}

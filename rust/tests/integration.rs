@@ -1,0 +1,298 @@
+//! Cross-layer integration tests: the contracts between the Python
+//! compile path (artifacts), the Rust model IR, the native engine, the
+//! PJRT runtime, and the serving front-end.
+//!
+//! Tests that need `make artifacts` skip gracefully when the artifacts
+//! directory is absent (CI-before-artifacts), but `make test` always
+//! builds artifacts first.
+
+use cappuccino::config::modelfile::ModelFile;
+use cappuccino::config::parse_cappnet;
+use cappuccino::data::Dataset;
+use cappuccino::engine::{self, ArithMode, EngineParams, ExecConfig, ModeAssignment};
+use cappuccino::model::zoo;
+use cappuccino::runtime::{Manifest, ParamSource, Runtime};
+use cappuccino::serve::{pjrt_factory, BatchPolicy, EngineBackend, Server};
+use cappuccino::synth::{execute_plan, finalize, PrimarySynthesizer};
+use cappuccino::util::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = cappuccino::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts`");
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Python <-> Rust contracts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_matches_python_golden_logits() {
+    // The native Rust engine (compile-time reorder + map-major conv) must
+    // reproduce the JAX/Pallas pipeline's logits from the same weights.
+    let Some(dir) = artifacts() else { return };
+    let net = zoo::tinynet();
+    let mf = ModelFile::read_from(dir.join("tinynet.capp")).unwrap();
+    let params = EngineParams::compile(&net, &mf, 4).unwrap();
+    let golden = ModelFile::read_from(dir.join("golden_tinynet.capp")).unwrap();
+    let x_nchw = golden.get("x_nchw").unwrap();
+    let want = golden.get("logits_precise").unwrap();
+    let n_img = x_nchw.dims[0];
+    let img_len: usize = x_nchw.dims[1..].iter().product();
+    let classes = want.dims[1];
+    for i in 0..n_img {
+        let img = &x_nchw.data[i * img_len..(i + 1) * img_len];
+        let logits = engine::run_mapmajor(
+            &net,
+            &params,
+            img,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            ExecConfig { threads: 2 },
+        )
+        .unwrap();
+        for (a, b) in logits.iter().zip(&want.data[i * classes..(i + 1) * classes]) {
+            assert!((a - b).abs() < 2e-3, "image {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn rust_reorder_matches_python_reorder() {
+    // layout::weights_to_mapmajor (Rust) vs reorder_params (Python):
+    // tinynet_mm.capp was written by Python from tinynet.capp.
+    let Some(dir) = artifacts() else { return };
+    let conv = ModelFile::read_from(dir.join("tinynet.capp")).unwrap();
+    let mm = ModelFile::read_from(dir.join("tinynet_mm.capp")).unwrap();
+    for layer in ["conv1", "conv2", "conv3"] {
+        let (w, b) = conv.layer_params(layer).unwrap();
+        let (w_mm, b_mm) = mm.layer_params(layer).unwrap();
+        let dims = &w.dims;
+        let got = cappuccino::layout::weights_to_mapmajor(&w.data, dims[0], dims[1], dims[2], 4);
+        assert_eq!(got, w_mm.data, "{layer}: weight reorder mismatch");
+        let got_b = cappuccino::layout::bias_to_mapmajor(&b.data, 4);
+        assert_eq!(got_b, b_mm.data, "{layer}: bias reorder mismatch");
+    }
+    // First FC after flatten: column permutation.
+    let (w, _) = conv.layer_params("fc4").unwrap();
+    let (w_mm, _) = mm.layer_params("fc4").unwrap();
+    let got = cappuccino::layout::fc_weights_for_mapmajor(&w.data, 64, 32, 4, 4, 4);
+    assert_eq!(got, w_mm.data, "fc4: FC reorder mismatch");
+}
+
+#[test]
+fn engine_matches_pjrt_runtime() {
+    // Same weights, same input: native engine vs compiled artifact.
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::new().unwrap();
+    let spec = manifest.find("tinynet", "precise", 1).unwrap();
+    let mm_weights = ModelFile::read_from(dir.join("tinynet_mm.capp")).unwrap();
+    let model = rt
+        .load(&manifest, spec, &ParamSource::MapMajorFile(mm_weights))
+        .unwrap();
+
+    let net = zoo::tinynet();
+    let conv_weights = ModelFile::read_from(dir.join("tinynet.capp")).unwrap();
+    let params = EngineParams::compile(&net, &conv_weights, 4).unwrap();
+
+    let mut rng = Rng::new(77);
+    for trial in 0..4 {
+        let img = rng.normal_vec(net.input.elements());
+        let x_mm = cappuccino::layout::nchw_to_mapmajor(&img, 3, 16, 16, 4);
+        let pjrt_logits = model.infer(&x_mm).unwrap();
+        let engine_logits = engine::run_mapmajor(
+            &net,
+            &params,
+            &img,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            ExecConfig { threads: 1 },
+        )
+        .unwrap();
+        for (a, b) in pjrt_logits.iter().zip(&engine_logits) {
+            assert!((a - b).abs() < 2e-3, "trial {trial}: pjrt {a} vs engine {b}");
+        }
+    }
+}
+
+#[test]
+fn dataset_file_loads_and_is_balanced() {
+    let Some(dir) = artifacts() else { return };
+    let d = Dataset::read_from(dir.join("dataset.bin")).unwrap();
+    assert_eq!((d.c, d.h, d.w), (3, 16, 16));
+    assert_eq!(d.classes, 8);
+    assert!(d.n_train > 0 && d.n_train < d.len());
+    let (val, labels) = d.validation();
+    assert_eq!(val.len(), labels.len());
+    let mut counts = vec![0usize; d.classes];
+    for &l in labels {
+        counts[l as usize] += 1;
+    }
+    assert!(counts.iter().all(|&c| c > 0), "validation split unbalanced: {counts:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Synthesis pipeline end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cappnet_to_plan_to_execution() {
+    // Fig. 3 end to end on a custom net without any artifacts.
+    let net = parse_cappnet(
+        "net pipe\ninput 3 24 24\nclasses 16\n\
+         conv c1 m=16 k=3 s=1 p=1\nmaxpool k=2 s=2\n\
+         fire f2 s1=8 e1=16 e3=16\n\
+         conv c3 m=16 k=1 s=1 p=0\ngap\n",
+    )
+    .unwrap();
+    let params = EngineParams::random(&net, 11, 4).unwrap();
+    let primary = PrimarySynthesizer::new(4, 2).synthesize(&net).unwrap();
+    let plan = finalize(&primary, &ModeAssignment::uniform(ArithMode::Imprecise));
+
+    let mut rng = Rng::new(5);
+    let img = rng.normal_vec(net.input.elements());
+    let logits = execute_plan(&plan, &net, &params, &img).unwrap();
+    assert_eq!(logits.len(), 16);
+    assert!(logits.iter().all(|v| v.is_finite()));
+
+    // The plan's imprecise execution stays close to precise.
+    let precise = execute_plan(&primary, &net, &params, &img).unwrap();
+    let max_rel: f32 = logits
+        .iter()
+        .zip(&precise)
+        .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+        .fold(0.0, f32::max);
+    assert!(max_rel < 0.1, "imprecise drifted {max_rel}");
+}
+
+#[test]
+fn full_analysis_to_serving_flow() {
+    // synthesize -> analyze -> finalize -> serve on the native engine.
+    let Some(dir) = artifacts() else { return };
+    let net = zoo::tinynet();
+    let mf = ModelFile::read_from(dir.join("tinynet.capp")).unwrap();
+    let params = EngineParams::compile(&net, &mf, 4).unwrap();
+    let dataset = Dataset::read_from(dir.join("dataset.bin")).unwrap();
+    let cfg = cappuccino::inexact::AnalysisConfig {
+        max_accuracy_drop: 0.02,
+        max_images: 64,
+        threads: 1,
+    };
+    let report = cappuccino::inexact::analyze(&net, &params, &dataset, &cfg).unwrap();
+    assert!(report.inexact_layers() >= 4, "trained tinynet should go inexact");
+
+    let backend = EngineBackend::new(net, params, report.assignment, 1, 8);
+    let server = Server::start(vec![(
+        "tinynet".into(),
+        backend.factory(),
+        BatchPolicy::default(),
+    )])
+    .unwrap();
+    let (val, labels) = dataset.validation();
+    let mut correct = 0;
+    let n = 32;
+    for i in 0..n {
+        let resp = server
+            .router()
+            .infer_blocking("tinynet", val[i].clone())
+            .unwrap();
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        if pred == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    assert!(correct as f64 / n as f64 > 0.85, "served accuracy {correct}/{n}");
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_serving_end_to_end() {
+    // The production path: router -> batcher -> PJRT worker -> response.
+    let Some(dir) = artifacts() else { return };
+    let factory = pjrt_factory(dir.clone(), "tinynet".into(), "imprecise".into(), None);
+    let server = Server::start(vec![(
+        "tinynet".into(),
+        factory,
+        BatchPolicy {
+            max_batch: 8,
+            max_delay: std::time::Duration::from_millis(5),
+            queue_depth: 64,
+        },
+    )])
+    .unwrap();
+    let dataset = Dataset::read_from(dir.join("dataset.bin")).unwrap();
+    let (val, labels) = dataset.validation();
+    let rxs: Vec<_> = (0..24)
+        .map(|i| server.router().submit("tinynet", val[i].clone()).unwrap())
+        .collect();
+    let mut correct = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        if pred == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 20, "pjrt served accuracy {correct}/24");
+    let m = server.metrics();
+    assert!(m.counters.mean_batch_size() > 1.0, "batcher never batched");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Simulator consistency with the synthesized plans
+// ---------------------------------------------------------------------------
+
+#[test]
+fn simulator_and_plan_predictions_consistent() {
+    use cappuccino::soc::{self, ProcessingMode};
+    for net in [zoo::alexnet(), zoo::squeezenet()] {
+        for device in soc::catalog() {
+            let primary = PrimarySynthesizer::new(4, device.cores)
+                .synthesize(&net)
+                .unwrap();
+            let imprecise_plan =
+                finalize(&primary, &ModeAssignment::uniform(ArithMode::Imprecise));
+            let plan_ms = cappuccino::synth::predict_latency_ms(&imprecise_plan, &net, &device);
+            let sim_par = soc::simulate(&net, &device, ProcessingMode::Parallel).total_ms();
+            let sim_imp = soc::simulate(&net, &device, ProcessingMode::Imprecise).total_ms();
+            // The all-imprecise plan must land between the two pure
+            // simulator endpoints (pool/LRN layers stay at parallel rate).
+            assert!(
+                plan_ms >= sim_imp * 0.99 && plan_ms <= sim_par * 1.01,
+                "{}/{}: plan {plan_ms} vs [{sim_imp}, {sim_par}]",
+                net.name,
+                device.name
+            );
+        }
+    }
+}
+
+#[test]
+fn cli_binary_info_runs() {
+    // The built binary must at least run `info` (no artifacts needed).
+    let exe = env!("CARGO_BIN_EXE_cappuccino");
+    let out = std::process::Command::new(exe)
+        .arg("info")
+        .output()
+        .expect("run cappuccino info");
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("alexnet"));
+    assert!(stdout.contains("Nexus 5"));
+}

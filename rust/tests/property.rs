@@ -1,0 +1,313 @@
+//! Property-based tests over coordinator invariants, using the in-repo
+//! `testing` helper (proptest is not in the vendored crate set).
+//!
+//! Each property runs dozens of seeded pseudo-random cases; failures
+//! report the case index + seed for deterministic reproduction.
+
+use cappuccino::engine::{
+    conv_mm, conv_nchw_flp, conv_nchw_klp, conv_nchw_scalar, ArithMode, MapTensor,
+};
+use cappuccino::layout;
+use cappuccino::testing::{check, close, Gen};
+
+/// Random conv geometry small enough to run hundreds of cases.
+struct ConvCase {
+    c: usize,
+    h: usize,
+    w: usize,
+    m: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    u: usize,
+}
+
+fn conv_case(g: &mut Gen) -> ConvCase {
+    let k = g.choose(&[1usize, 3, 5]);
+    ConvCase {
+        c: g.int(1, 9),
+        h: g.int(k, 12),
+        w: g.int(k, 12),
+        m: g.int(1, 12),
+        k,
+        s: g.int(1, 3),
+        p: g.int(0, 2),
+        u: g.choose(&[1usize, 2, 4, 8]),
+    }
+}
+
+#[test]
+fn prop_layout_roundtrip() {
+    check("nchw<->mapmajor roundtrip", 100, 0xA1, |g| {
+        let (c, h, w) = (g.int(1, 16), g.int(1, 10), g.int(1, 10));
+        let u = g.choose(&[1usize, 2, 4, 8]);
+        let src = g.normal_vec(c * h * w);
+        let back = layout::mapmajor_to_nchw(&layout::nchw_to_mapmajor(&src, c, h, w, u), c, h, w, u);
+        if back != src {
+            return Err("roundtrip not identity".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_index_equations_bijective() {
+    check("eqs (3)-(5) bijective", 60, 0xA2, |g| {
+        let u = g.choose(&[1usize, 2, 4, 8]);
+        let wout = g.int(1, 9);
+        let hout = g.int(1, 9);
+        let stacks = g.int(1, 4);
+        let total = u * wout * hout * stacks;
+        let mut seen = vec![false; total];
+        for x in 0..total {
+            let (w, h, m) = layout::thread_index_to_whm(x, u, wout, hout);
+            let back = layout::whm_to_thread_index(w, h, m, u, wout, hout);
+            if back != x {
+                return Err(format!("x={x} -> ({w},{h},{m}) -> {back}"));
+            }
+            let key = (m * hout + h) * wout + w;
+            if seen[key] {
+                return Err(format!("duplicate target at x={x}"));
+            }
+            seen[key] = true;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mapmajor_conv_matches_scalar() {
+    check("conv_mm == conv_nchw_scalar", 40, 0xA3, |g| {
+        let case = conv_case(g);
+        let ConvCase { c, h, w, m, k, s, p, u } = case;
+        if h + 2 * p < k || w + 2 * p < k {
+            return Ok(()); // degenerate window; constructor rejects
+        }
+        let input = g.normal_vec(c * h * w);
+        let weights = g.normal_vec(m * c * k * k);
+        let bias = g.normal_vec(m);
+        let (want, ..) = conv_nchw_scalar(
+            &input, c, h, w, &weights, &bias, m, k, s, p, false, ArithMode::Precise,
+        );
+        let got = conv_mm(
+            &MapTensor::from_nchw(&input, c, h, w, u),
+            &layout::weights_to_mapmajor(&weights, m, c, k, u),
+            &layout::bias_to_mapmajor(&bias, u),
+            m, k, s, p, false, ArithMode::Precise, g.int(1, 4),
+        );
+        close(&got.to_nchw(), &want, 1e-4)
+    });
+}
+
+#[test]
+fn prop_all_parallelism_policies_agree() {
+    check("OLP == FLP == KLP numerics", 25, 0xA4, |g| {
+        let case = conv_case(g);
+        let ConvCase { c, h, w, m, k, s, p, .. } = case;
+        if h + 2 * p < k || w + 2 * p < k {
+            return Ok(());
+        }
+        let input = g.normal_vec(c * h * w);
+        let weights = g.normal_vec(m * c * k * k);
+        let bias = g.normal_vec(m);
+        let threads = g.int(1, 4);
+        let (scalar, ..) = conv_nchw_scalar(
+            &input, c, h, w, &weights, &bias, m, k, s, p, true, ArithMode::Precise,
+        );
+        let (flp, ..) = conv_nchw_flp(
+            &input, c, h, w, &weights, &bias, m, k, s, p, true, ArithMode::Precise, threads,
+        );
+        let (klp, ..) = conv_nchw_klp(
+            &input, c, h, w, &weights, &bias, m, k, s, p, true, ArithMode::Precise, threads,
+        );
+        close(&flp, &scalar, 1e-3)?;
+        close(&klp, &scalar, 1e-3)
+    });
+}
+
+#[test]
+fn prop_thread_count_does_not_change_olp_output() {
+    check("OLP output invariant to thread count", 30, 0xA5, |g| {
+        let case = conv_case(g);
+        let ConvCase { c, h, w, m, k, s, p, u } = case;
+        if h + 2 * p < k || w + 2 * p < k {
+            return Ok(());
+        }
+        let input = g.normal_vec(c * h * w);
+        let weights = g.normal_vec(m * c * k * k);
+        let bias = g.normal_vec(m);
+        let mm = MapTensor::from_nchw(&input, c, h, w, u);
+        let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+        let b_mm = layout::bias_to_mapmajor(&bias, u);
+        let one = conv_mm(&mm, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Precise, 1);
+        for threads in [2, 3, 5, 8] {
+            let t = conv_mm(&mm, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Precise, threads);
+            if t.data != one.data {
+                return Err(format!("threads={threads} changed the output"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_imprecise_error_bounded() {
+    // bf16 operand rounding has <= 2^-8 relative error per operand; the
+    // conv accumulation keeps the result within a modest relative bound.
+    check("imprecise error bounded", 30, 0xA6, |g| {
+        let case = conv_case(g);
+        let ConvCase { c, h, w, m, k, s, p, u } = case;
+        if h + 2 * p < k || w + 2 * p < k {
+            return Ok(());
+        }
+        let input = g.normal_vec(c * h * w);
+        let weights = g.normal_vec(m * c * k * k);
+        let bias = g.normal_vec(m);
+        let mm = MapTensor::from_nchw(&input, c, h, w, u);
+        let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+        let b_mm = layout::bias_to_mapmajor(&bias, u);
+        let precise = conv_mm(&mm, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Precise, 1);
+        let imprecise = conv_mm(&mm, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Imprecise, 1);
+        // Scale: the reduction length bounds worst-case error growth.
+        let terms = (c * k * k) as f32;
+        let tol = 0.01 * terms.sqrt().max(1.0);
+        close(&imprecise.data, &precise.data, tol)
+    });
+}
+
+#[test]
+fn prop_modelfile_roundtrip() {
+    use cappuccino::config::modelfile::{ModelFile, NamedTensor};
+    check("modelfile roundtrip", 50, 0xA7, |g| {
+        let mut mf = ModelFile::new();
+        let n_tensors = g.int(1, 6);
+        for i in 0..n_tensors {
+            let ndim = g.int(1, 4);
+            let dims: Vec<usize> = (0..ndim).map(|_| g.int(1, 5)).collect();
+            let data = g.normal_vec(dims.iter().product());
+            mf.insert(format!("t{i}/w"), NamedTensor::new(dims, data));
+        }
+        let back = ModelFile::parse(&mf.serialize()).map_err(|e| e.to_string())?;
+        if back.names() != mf.names() {
+            return Err("name order changed".into());
+        }
+        for name in mf.names() {
+            if back.get(name).unwrap() != mf.get(name).unwrap() {
+                return Err(format!("tensor {name} changed"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use cappuccino::util::json::Json;
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        if depth == 0 {
+            return match g.int(0, 3) {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f32(-1e6, 1e6) as f64 * 100.0).round() / 100.0),
+                _ => Json::Str(format!("s{}-\"quoted\"\n", g.int(0, 99))),
+            };
+        }
+        match g.int(0, 1) {
+            0 => Json::Arr((0..g.int(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.int(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", 80, 0xA8, |g| {
+        let v = gen_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        if back != v {
+            return Err(format!("roundtrip changed value: {text}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cappnet_shape_inference_total() {
+    // Any well-formed linear net the generator produces must either
+    // parse+infer cleanly or be rejected with an error — no panics.
+    check("cappnet parse/infer total", 60, 0xA9, |g| {
+        let mut text = String::from("net gen\n");
+        let (c, hw) = (g.int(1, 8), g.int(6, 24));
+        text.push_str(&format!("input {c} {hw} {hw}\n"));
+        let mut conv_count = 0;
+        let mut last_m = c;
+        for i in 0..g.int(1, 5) {
+            match g.int(0, 2) {
+                0 => {
+                    last_m = g.choose(&[4usize, 8, 16]);
+                    text.push_str(&format!(
+                        "conv c{i} m={last_m} k=3 s=1 p=1\n"
+                    ));
+                    conv_count += 1;
+                }
+                1 => text.push_str("maxpool k=2 s=2\n"),
+                _ => text.push_str("lrn size=3\n"),
+            }
+        }
+        let _ = conv_count;
+        text.push_str(&format!("classes {last_m}\ngap\n"));
+        match cappuccino::config::parse_cappnet(&text) {
+            Ok(net) => {
+                // Inference must agree with the declared classes.
+                let info = cappuccino::model::shapes::infer(&net).map_err(|e| e.to_string())?;
+                if info.output.elements() != last_m {
+                    return Err(format!("output {:?} vs classes {last_m}", info.output));
+                }
+                Ok(())
+            }
+            // Rejection is fine (e.g. pooling shrank below the window).
+            Err(_) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_never_loses_requests() {
+    use cappuccino::engine::{EngineParams, ModeAssignment};
+    use cappuccino::model::zoo;
+    use cappuccino::serve::{BatchPolicy, EngineBackend, Server};
+    check("serving conservation", 6, 0xAA, |g| {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 3, 4).map_err(|e| e.to_string())?;
+        let backend = EngineBackend::new(
+            net,
+            params,
+            ModeAssignment::uniform(ArithMode::Imprecise),
+            1,
+            g.choose(&[1usize, 4, 8]),
+        );
+        let policy = BatchPolicy {
+            max_batch: g.choose(&[1usize, 4, 8]),
+            max_delay: std::time::Duration::from_millis(g.int(0, 4) as u64),
+            queue_depth: 256,
+        };
+        let server = Server::start(vec![("m".into(), backend.factory(), policy)])
+            .map_err(|e| e.to_string())?;
+        let n = g.int(1, 40);
+        let rxs: Vec<_> = (0..n)
+            .map(|_| server.router().submit("m", g.normal_vec(768)).unwrap())
+            .collect();
+        let mut got = 0;
+        for rx in rxs {
+            if rx.recv().is_ok() {
+                got += 1;
+            }
+        }
+        server.shutdown();
+        if got != n {
+            return Err(format!("submitted {n}, completed {got}"));
+        }
+        Ok(())
+    });
+}
