@@ -7,7 +7,7 @@
 //! itself. Also reports the row-major scalar reference.
 
 use cappuccino::bench::{bench, ms, BenchConfig, Table};
-use cappuccino::engine::{conv_mm, conv_nchw_scalar, ArithMode, MapTensor};
+use cappuccino::engine::{cast_weights, conv_mm, conv_nchw_scalar, ArithMode, MapTensor};
 use cappuccino::layout;
 use cappuccino::util::rng::Rng;
 
@@ -38,7 +38,11 @@ fn main() {
     let mut best_ms = f64::INFINITY;
     for u in [1usize, 2, 4, 8, 16] {
         let mm_in = MapTensor::from_nchw(&input, c, h, w, u);
-        let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+        // Weights baked into the imprecise domain once, compile-time.
+        let w_mm = cast_weights(
+            &layout::weights_to_mapmajor(&weights, m, c, k, u),
+            ArithMode::Imprecise,
+        );
         let b_mm = layout::bias_to_mapmajor(&bias, u);
         let meas = bench(format!("mm-u{u}"), cfg, || {
             std::hint::black_box(conv_mm(

@@ -11,7 +11,9 @@
 
 use cappuccino::bench::{bench, ms, BenchConfig, Table};
 use cappuccino::config::parse_cappnet;
-use cappuccino::engine::{ArithMode, EngineParams, ExecConfig, ModeAssignment};
+use cappuccino::engine::{
+    run_baseline_legacy, ArithMode, EngineParams, ExecConfig, ExecutionPlan, ModeAssignment,
+};
 use cappuccino::layout;
 use cappuccino::model::Network;
 use cappuccino::util::rng::Rng;
@@ -26,7 +28,7 @@ fn naive_with_explicit_reorder(net: &Network, params: &EngineParams, input: &[f3
     // the explicit reorder per layer on top by replaying the layer
     // output shapes.
     let t0 = Instant::now();
-    let out = cappuccino::engine::run_baseline(net, params, input).unwrap();
+    let out = run_baseline_legacy(net, params, input).unwrap();
     let compute_s = t0.elapsed().as_secs_f64();
 
     // Explicit per-layer reorder cost: transpose every conv OFM to
@@ -80,17 +82,16 @@ fn main() {
         let input = rng.normal_vec(net.input.elements());
 
         // Cappuccino pipeline: map-major end to end, zero reorders.
+        // Compiled once — the wrapper would re-bake weights per call.
+        let mut plan = ExecutionPlan::compile(
+            &net,
+            &params,
+            &ModeAssignment::uniform(ArithMode::Imprecise),
+            ExecConfig { threads: 1 },
+        )
+        .unwrap();
         let fused = bench("fused", cfg, || {
-            std::hint::black_box(
-                cappuccino::engine::run_mapmajor(
-                    &net,
-                    &params,
-                    &input,
-                    &ModeAssignment::uniform(ArithMode::Imprecise),
-                    ExecConfig { threads: 1 },
-                )
-                .unwrap(),
-            );
+            std::hint::black_box(plan.run(&input).unwrap());
         });
 
         // Naive pipeline with explicit reorders.

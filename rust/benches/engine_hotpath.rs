@@ -2,12 +2,63 @@
 //! the PJRT artifact path, across representative layer geometries and
 //! full networks. This is the profile target of the performance pass
 //! (EXPERIMENTS.md section "Perf").
+//!
+//! The network-level section compares the **legacy interpreter** (walks
+//! the layer tree per call: fresh activations, per-call weight casts,
+//! per-layer buffer churn) against a **compiled ExecutionPlan** (arena
+//! resident, weights baked, persistent thread pool), and reports the
+//! measured heap traffic per inference so the arena win is a number,
+//! not an anecdote.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use cappuccino::bench::{bench, ms, BenchConfig, Table};
-use cappuccino::engine::{conv_mm, ArithMode, EngineParams, ExecConfig, MapTensor, ModeAssignment};
+use cappuccino::engine::{
+    cast_weights, conv_mm, ArithMode, EngineParams, ExecConfig, ExecutionPlan, MapTensor,
+    ModeAssignment,
+};
 use cappuccino::layout;
 use cappuccino::model::zoo;
 use cappuccino::util::rng::Rng;
+
+/// Counting allocator: measures the real heap traffic of one inference
+/// on either executor. `metrics::AllocCounter` meters only what the
+/// plan itself hands out; this wrapper sees *everything*, which is what
+/// makes the legacy column a measurement instead of an estimate.
+struct CountingAlloc;
+
+static HEAP_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        HEAP_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        HEAP_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        HEAP_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Bytes allocated anywhere in the process while `f` runs (the bench
+/// is single-threaded at threads = 1, so this is the inference's own
+/// traffic).
+fn heap_bytes_during(f: impl FnOnce()) -> u64 {
+    let before = HEAP_BYTES.load(Ordering::Relaxed);
+    f();
+    HEAP_BYTES.load(Ordering::Relaxed) - before
+}
 
 fn main() {
     let cfg = BenchConfig::from_env();
@@ -30,7 +81,11 @@ fn main() {
         let bias = rng.normal_vec(m);
         let u = 4;
         let mm_in = MapTensor::from_nchw(&input, c, h, w, u);
-        let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+        // Weights baked once (the plan compiler's contract).
+        let w_mm = cast_weights(
+            &layout::weights_to_mapmajor(&weights, m, c, k, u),
+            ArithMode::Imprecise,
+        );
         let b_mm = layout::bias_to_mapmajor(&bias, u);
         let ho = (h + 2 * p - k) / s + 1;
         let flops = 2.0 * (m * c * k * k * ho * ho) as f64;
@@ -49,29 +104,75 @@ fn main() {
     println!("# Engine hot path — conv_mm kernel\n");
     table.print();
 
-    // -- Network-level: native engine end-to-end -------------------------
-    let mut net_table = Table::new(&["network", "path", "time(ms)"]);
+    // -- Network-level: legacy interpreter vs compiled plan ---------------
+    let mut net_table = Table::new(&[
+        "network",
+        "path",
+        "time(ms)",
+        "speedup",
+        "alloc/inf",
+        "resident",
+    ]);
     for net in [zoo::tinynet(), zoo::squeezenet()] {
         let params = EngineParams::random(&net, 3, 4).unwrap();
         let input = rng.normal_vec(net.input.elements());
-        let meas = bench(net.name.clone(), cfg, || {
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let exec = ExecConfig { threads: 1 };
+
+        let legacy = bench(format!("{}-legacy", net.name), cfg, || {
             std::hint::black_box(
-                cappuccino::engine::run_mapmajor(
-                    &net,
-                    &params,
-                    &input,
-                    &ModeAssignment::uniform(ArithMode::Imprecise),
-                    ExecConfig { threads: 1 },
-                )
-                .unwrap(),
+                cappuccino::engine::run_mapmajor_legacy(&net, &params, &input, &modes, exec)
+                    .unwrap(),
             );
         });
-        net_table.row(&[net.name.clone(), "engine-mm".into(), ms(meas.mean_ms)]);
+
+        let mut plan = ExecutionPlan::compile(&net, &params, &modes, exec).unwrap();
+        let meas = bench(format!("{}-plan", net.name), cfg, || {
+            std::hint::black_box(plan.run(&input).unwrap());
+        });
+
+        // Measured (counting allocator) heap traffic of one warm
+        // inference on each executor: the legacy interpreter re-creates
+        // every activation plus the baked-weight casts per call; the
+        // plan's request path allocates the logits vector alone.
+        let legacy_alloc = heap_bytes_during(|| {
+            std::hint::black_box(
+                cappuccino::engine::run_mapmajor_legacy(&net, &params, &input, &modes, exec)
+                    .unwrap(),
+            );
+        });
+        let plan_alloc = heap_bytes_during(|| {
+            std::hint::black_box(plan.run(&input).unwrap());
+        });
+        net_table.row(&[
+            net.name.clone(),
+            "legacy-interp".into(),
+            ms(legacy.mean_ms),
+            "1.00x".into(),
+            format!("{:.0} KiB", legacy_alloc as f64 / 1024.0),
+            "-".into(),
+        ]);
+        net_table.row(&[
+            net.name.clone(),
+            "compiled-plan".into(),
+            ms(meas.mean_ms),
+            format!("{:.2}x", legacy.mean_ms / meas.mean_ms),
+            format!("{plan_alloc} B"),
+            format!("{:.0} KiB", plan.arena_bytes() as f64 / 1024.0),
+        ]);
+        assert!(
+            plan_alloc < 4096,
+            "plan request path must be (near-)allocation-free, got {plan_alloc} B/inf"
+        );
+        assert!(
+            plan_alloc * 10 < legacy_alloc,
+            "arena win not visible: plan {plan_alloc} B vs legacy {legacy_alloc} B"
+        );
     }
 
     // -- PJRT path (needs artifacts) --------------------------------------
-    let dir = cappuccino::artifacts_dir();
-    if dir.join("manifest.json").exists() {
+    if cappuccino::artifacts_dir().join("manifest.json").exists() {
+        let dir = cappuccino::artifacts_dir();
         let manifest = cappuccino::runtime::Manifest::load(&dir).unwrap();
         let rt = cappuccino::runtime::Runtime::new().unwrap();
         for (net, mode, batch) in
@@ -89,12 +190,15 @@ fn main() {
                 format!("{net} (b{batch})"),
                 format!("pjrt-{mode}"),
                 ms(meas.mean_ms),
+                "-".into(),
+                "-".into(),
+                "-".into(),
             ]);
         }
     } else {
         eprintln!("(artifacts not built: skipping PJRT rows)");
     }
-    println!("\n# End-to-end inference\n");
+    println!("\n# End-to-end inference — legacy vs compiled plan\n");
     net_table.print();
     println!("\nengine_hotpath bench OK");
 }

@@ -12,29 +12,55 @@
 //!   policies of section IV.A, implemented with the per-thread partial
 //!   buffers + reduction they require, for the ablation benchmark.
 //!
-//! Arithmetic modes transform operands *wholesale* before the MAC loop
-//! (exactly like the Pallas kernel casts its refs on load), so Precise
-//! and Imprecise share one inner loop and numerics match the L1 kernel.
+//! ## Arithmetic-mode contract
+//!
+//! Parameters (weights) are **baked**: every kernel expects weights
+//! already transformed into the target mode's arithmetic domain
+//! (see [`cast_weights`]) — the compiled-plan executor casts them once
+//! at plan-compile time, exactly like the Pallas kernel's compile-time
+//! parameter preparation. The `mode` argument therefore transforms the
+//! *activations* only (the one operand that is dynamic per inference).
+//! Precise and the inexact modes still share one inner loop, so
+//! numerics match the L1 kernel.
 
 use crate::engine::mode::{mode_cast, ArithMode};
-use crate::engine::parallel::parallel_reduce;
+use crate::engine::parallel::{chunk_ranges, parallel_reduce};
 use crate::engine::tensor::MapTensor;
 use crate::util::ceil_div;
+use std::ops::Range;
 
-/// Output spatial size (caller must have validated k <= padded input).
+/// Output spatial size. Shape inference ([`crate::model::shapes::infer`])
+/// validates `k <= size + 2p` ahead of time and turns violations into
+/// `Error::Shape`; a direct kernel call with a too-large window panics
+/// here with a clear message instead of underflowing.
 #[inline]
 fn out_size(size: usize, k: usize, s: usize, p: usize) -> usize {
-    (size + 2 * p - k) / s + 1
+    let padded = size + 2 * p;
+    assert!(
+        padded >= k,
+        "conv window k={k} larger than padded input {padded} (run shapes::infer first)"
+    );
+    (padded - k) / s + 1
 }
 
 fn cast_buf(src: &[f32], mode: ArithMode) -> Vec<f32> {
     src.iter().map(|&x| mode_cast(x, mode)).collect()
 }
 
+/// Bake parameters into `mode`'s arithmetic domain (compile-time weight
+/// cast). Identity for [`ArithMode::Precise`].
+pub fn cast_weights(src: &[f32], mode: ArithMode) -> Vec<f32> {
+    if mode == ArithMode::Precise {
+        src.to_vec()
+    } else {
+        cast_buf(src, mode)
+    }
+}
+
 /// Baseline: single-threaded scalar convolution over row-major NCHW.
 ///
-/// `input` is `(C, H, W)`, `weights` `(M, C, K, K)`, `bias` `(M,)`.
-/// Returns `(output (M, Ho, Wo), ho, wo)`.
+/// `input` is `(C, H, W)`, `weights` `(M, C, K, K)` (baked), `bias`
+/// `(M,)`. Returns `(output (M, Ho, Wo), ho, wo)`.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_nchw_scalar(
     input: &[f32],
@@ -52,15 +78,38 @@ pub fn conv_nchw_scalar(
 ) -> (Vec<f32>, usize, usize) {
     let ho = out_size(h, k, s, p);
     let wo = out_size(w, k, s, p);
-    let (input_c, weights_c);
-    let (input, weights): (&[f32], &[f32]) = if mode == ArithMode::Precise {
-        (input, weights)
+    let input_c;
+    let input: &[f32] = if mode == ArithMode::Precise {
+        input
     } else {
         input_c = cast_buf(input, mode);
-        weights_c = cast_buf(weights, mode);
-        (&input_c, &weights_c)
+        &input_c
     };
     let mut out = vec![0.0f32; m * ho * wo];
+    conv_nchw_scalar_into(input, c, h, w, weights, bias, m, k, s, p, relu, ho, wo, &mut out);
+    (out, ho, wo)
+}
+
+/// Scalar conv inner loops writing into a caller-owned buffer (the plan
+/// executor's arena slot). `input` must already be mode-cast.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_nchw_scalar_into(
+    input: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    weights: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    relu: bool,
+    ho: usize,
+    wo: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), m * ho * wo);
     for mi in 0..m {
         for oh in 0..ho {
             for ow in 0..wo {
@@ -90,7 +139,6 @@ pub fn conv_nchw_scalar(
             }
         }
     }
-    (out, ho, wo)
 }
 
 /// Cappuccino's optimised convolution: map-major in, map-major out.
@@ -100,8 +148,10 @@ pub fn conv_nchw_scalar(
 /// * Within a thread, the Fig. 6 vectorised MAC: a `u`-wide load of
 ///   channel-adjacent input elements against the matching `u`-wide
 ///   weight row, accumulated per output lane.
-/// * `w_mm` is `(Mb, u, Cb, K, K, u)` (compile-time reordered), `b_mm`
-///   `(Mb, u)`.
+/// * `w_mm` is `(Mb, u, Cb, K, K, u)` (compile-time reordered *and*
+///   baked into `mode`'s domain), `b_mm` `(Mb, u)`.
+/// * Threads come from the persistent [`crate::engine::parallel`] pool —
+///   no OS thread is spawned per call.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_mm(
     input: &MapTensor,
@@ -123,48 +173,86 @@ pub fn conv_mm(
 
     let padded = input.pad_spatial(p);
     let (hp, wp) = (padded.h, padded.w);
+    assert!(
+        hp >= k && wp >= k,
+        "conv_mm: window k={k} larger than padded input {hp}x{wp}"
+    );
     let ho = (hp - k) / s + 1;
     let wo = (wp - k) / s + 1;
 
-    let (x_c, w_c);
-    let (x, wgt): (&[f32], &[f32]) = if mode == ArithMode::Precise {
-        (&padded.data, w_mm)
+    let x_c;
+    let x: &[f32] = if mode == ArithMode::Precise {
+        &padded.data
     } else {
         x_c = cast_buf(&padded.data, mode);
-        w_c = cast_buf(w_mm, mode);
-        (&x_c, &w_c)
+        &x_c
     };
 
     let mut out = MapTensor::zeros(m, ho, wo, u);
+    conv_mm_core(x, hp, wp, cb, u, w_mm, b_mm, &mut out.data, mb, k, s, ho, wo, relu, threads);
+    out
+}
+
+/// Map-major conv inner engine: pre-padded, pre-cast input in; output
+/// written into a caller-owned buffer. Chunked over the persistent
+/// thread pool; each chunk owns a disjoint contiguous slice of the
+/// output, so writes need zero synchronisation — the zero-overhead
+/// map-major store of section IV.B.1.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_mm_core(
+    x: &[f32],
+    hp: usize,
+    wp: usize,
+    cb: usize,
+    u: usize,
+    wgt: &[f32],
+    b_mm: &[f32],
+    out: &mut [f32],
+    mb: usize,
+    k: usize,
+    s: usize,
+    ho: usize,
+    wo: usize,
+    relu: bool,
+    threads: usize,
+) {
     let out_row_len = wo * u;
     let items = mb * ho;
-
-    // OLP work items are (output stack, output row) pairs; chunk ranges
-    // are contiguous, so each thread owns a disjoint contiguous slice of
-    // the output buffer and writes with zero synchronisation — the
-    // zero-overhead map-major store of section IV.B.1.
-    let ranges = crate::engine::parallel::chunk_ranges(items, threads.max(1));
+    debug_assert_eq!(out.len(), items * out_row_len, "conv_mm_core: out len");
+    if threads <= 1 || items <= 1 {
+        // Inline path: zero dispatch, zero allocation (the compiled
+        // plan's steady-state contract at threads = 1).
+        for item in 0..items {
+            let ms = item / ho;
+            let oh = item % ho;
+            let row = &mut out[item * out_row_len..(item + 1) * out_row_len];
+            conv_mm_row(x, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu);
+        }
+        return;
+    }
+    let ranges = chunk_ranges(items, threads);
     let mut slices: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
-    let mut rest = out.data.as_mut_slice();
+    let mut rest = out;
     for r in &ranges {
         let (head, tail) = rest.split_at_mut(r.len() * out_row_len);
         slices.push(head);
         rest = tail;
     }
-    std::thread::scope(|scope| {
-        for (range, slice) in ranges.iter().zip(slices) {
-            let range = range.clone();
-            scope.spawn(move || {
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+        .into_iter()
+        .zip(slices)
+        .map(|(range, slice)| {
+            Box::new(move || {
                 for (j, item) in range.enumerate() {
                     let ms = item / ho; // output stack
                     let oh = item % ho; // output row
                     let row = &mut slice[j * out_row_len..(j + 1) * out_row_len];
                     conv_mm_row(x, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu);
                 }
-            });
-        }
-    });
-    out
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::engine::parallel::global_pool().scope(tasks);
 }
 
 /// Compute one output row (stack `ms`, row `oh`): the per-thread OLP
@@ -313,6 +401,100 @@ fn conv_mm_row_u4(
     }
 }
 
+/// FLP per-item accumulation (one work item = one 2-D kernel convolved
+/// over its input plane into the shared partial buffer). Shared by the
+/// allocating wrapper and the plan executor's arena path. `input` must
+/// already be mode-cast, `weights` baked.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn flp_accumulate(
+    input: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    weights: &[f32],
+    k: usize,
+    s: usize,
+    p: usize,
+    ho: usize,
+    wo: usize,
+    range: Range<usize>,
+    buf: &mut [f32],
+) {
+    for item in range {
+        let mi = item / c;
+        let ci = item % c;
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let mut acc = 0.0f32;
+                for kh in 0..k {
+                    let ih = oh * s + kh;
+                    if ih < p || ih >= h + p {
+                        continue;
+                    }
+                    let ih = ih - p;
+                    for kw in 0..k {
+                        let iw = ow * s + kw;
+                        if iw < p || iw >= w + p {
+                            continue;
+                        }
+                        let iw = iw - p;
+                        acc += input[(ci * h + ih) * w + iw]
+                            * weights[((mi * c + ci) * k + kh) * k + kw];
+                    }
+                }
+                buf[(mi * ho + oh) * wo + ow] += acc;
+            }
+        }
+    }
+}
+
+/// KLP per-item accumulation (one work item = one (input channel,
+/// kernel row) slice across every filter). Shared by the allocating
+/// wrapper and the plan executor's arena path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn klp_accumulate(
+    input: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    weights: &[f32],
+    m: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    ho: usize,
+    wo: usize,
+    range: Range<usize>,
+    buf: &mut [f32],
+) {
+    for item in range {
+        let ci = item / k;
+        let kh = item % k;
+        for mi in 0..m {
+            for oh in 0..ho {
+                let ih = oh * s + kh;
+                if ih < p || ih >= h + p {
+                    continue;
+                }
+                let ih = ih - p;
+                for ow in 0..wo {
+                    let mut acc = 0.0f32;
+                    for kw in 0..k {
+                        let iw = ow * s + kw;
+                        if iw < p || iw >= w + p {
+                            continue;
+                        }
+                        let iw = iw - p;
+                        acc += input[(ci * h + ih) * w + iw]
+                            * weights[((mi * c + ci) * k + kh) * k + kw];
+                    }
+                    buf[(mi * ho + oh) * wo + ow] += acc;
+                }
+            }
+        }
+    }
+}
+
 /// FLP (section IV.A): each work item convolves one entire kernel — the
 /// 2-D convolution of input plane `ci` with kernel `(mi, ci)` — into a
 /// per-thread partial output; a reduction then sums partials. Row-major.
@@ -334,43 +516,17 @@ pub fn conv_nchw_flp(
 ) -> (Vec<f32>, usize, usize) {
     let ho = out_size(h, k, s, p);
     let wo = out_size(w, k, s, p);
-    let (input_c, weights_c);
-    let (input, weights): (&[f32], &[f32]) = if mode == ArithMode::Precise {
-        (input, weights)
+    let input_c;
+    let input: &[f32] = if mode == ArithMode::Precise {
+        input
     } else {
         input_c = cast_buf(input, mode);
-        weights_c = cast_buf(weights, mode);
-        (&input_c, &weights_c)
+        &input_c
     };
 
     let items = m * c; // one item per kernel (filter bank slice)
     let mut out = parallel_reduce(items, threads, m * ho * wo, |_, range, buf| {
-        for item in range {
-            let mi = item / c;
-            let ci = item % c;
-            for oh in 0..ho {
-                for ow in 0..wo {
-                    let mut acc = 0.0f32;
-                    for kh in 0..k {
-                        let ih = oh * s + kh;
-                        if ih < p || ih >= h + p {
-                            continue;
-                        }
-                        let ih = ih - p;
-                        for kw in 0..k {
-                            let iw = ow * s + kw;
-                            if iw < p || iw >= w + p {
-                                continue;
-                            }
-                            let iw = iw - p;
-                            acc += input[(ci * h + ih) * w + iw]
-                                * weights[((mi * c + ci) * k + kh) * k + kw];
-                        }
-                    }
-                    buf[(mi * ho + oh) * wo + ow] += acc;
-                }
-            }
-        }
+        flp_accumulate(input, c, h, w, weights, k, s, p, ho, wo, range, buf);
     });
     finish_bias_relu(&mut out, bias, m, ho * wo, relu);
     (out, ho, wo)
@@ -398,51 +554,25 @@ pub fn conv_nchw_klp(
 ) -> (Vec<f32>, usize, usize) {
     let ho = out_size(h, k, s, p);
     let wo = out_size(w, k, s, p);
-    let (input_c, weights_c);
-    let (input, weights): (&[f32], &[f32]) = if mode == ArithMode::Precise {
-        (input, weights)
+    let input_c;
+    let input: &[f32] = if mode == ArithMode::Precise {
+        input
     } else {
         input_c = cast_buf(input, mode);
-        weights_c = cast_buf(weights, mode);
-        (&input_c, &weights_c)
+        &input_c
     };
 
     // Work items: (input channel, kernel row) — the per-multiplication
     // granularity of the paper, batched to a sane task size.
     let items = c * k;
     let mut out = parallel_reduce(items, threads, m * ho * wo, |_, range, buf| {
-        for item in range {
-            let ci = item / k;
-            let kh = item % k;
-            for mi in 0..m {
-                for oh in 0..ho {
-                    let ih = oh * s + kh;
-                    if ih < p || ih >= h + p {
-                        continue;
-                    }
-                    let ih = ih - p;
-                    for ow in 0..wo {
-                        let mut acc = 0.0f32;
-                        for kw in 0..k {
-                            let iw = ow * s + kw;
-                            if iw < p || iw >= w + p {
-                                continue;
-                            }
-                            let iw = iw - p;
-                            acc += input[(ci * h + ih) * w + iw]
-                                * weights[((mi * c + ci) * k + kh) * k + kw];
-                        }
-                        buf[(mi * ho + oh) * wo + ow] += acc;
-                    }
-                }
-            }
-        }
+        klp_accumulate(input, c, h, w, weights, m, k, s, p, ho, wo, range, buf);
     });
     finish_bias_relu(&mut out, bias, m, ho * wo, relu);
     (out, ho, wo)
 }
 
-fn finish_bias_relu(out: &mut [f32], bias: &[f32], m: usize, plane: usize, relu: bool) {
+pub(crate) fn finish_bias_relu(out: &mut [f32], bias: &[f32], m: usize, plane: usize, relu: bool) {
     for mi in 0..m {
         for v in &mut out[mi * plane..(mi + 1) * plane] {
             *v += bias[mi];
@@ -576,7 +706,10 @@ mod tests {
         let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
         let b_mm = layout::bias_to_mapmajor(&bias, u);
         let a = conv_mm(&mm_in, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Precise, 1);
-        let b = conv_mm(&mm_in, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Imprecise, 1);
+        // Bake the weights the way the plan compiler does, then run the
+        // kernel in imprecise mode (which casts the activations).
+        let w_baked = cast_weights(&w_mm, ArithMode::Imprecise);
+        let b = conv_mm(&mm_in, &w_baked, &b_mm, m, k, s, p, false, ArithMode::Imprecise, 1);
         let max_d = a
             .data
             .iter()
@@ -585,6 +718,17 @@ mod tests {
             .fold(0.0f32, f32::max);
         assert!(max_d > 0.0, "imprecise should differ at all");
         assert!(max_d < 0.3, "imprecise too far off: {max_d}");
+    }
+
+    #[test]
+    fn cast_weights_bakes_bf16() {
+        let w = vec![3.14159f32, 1e-40, -2.5];
+        let baked = cast_weights(&w, ArithMode::Imprecise);
+        assert_eq!(baked[0], crate::engine::mode::bf16_round(3.14159));
+        assert_eq!(baked[1], 0.0, "denormal weight must flush");
+        assert_eq!(baked[2], -2.5, "exact bf16 value unchanged");
+        // Precise baking is the identity.
+        assert_eq!(cast_weights(&w, ArithMode::Precise), w);
     }
 
     #[test]
@@ -601,6 +745,17 @@ mod tests {
         );
         assert!(p_out[0] != 0.0);
         assert_eq!(r_out[0], 0.0);
+    }
+
+    #[test]
+    fn oversized_window_panics_with_message() {
+        let result = std::panic::catch_unwind(|| {
+            conv_nchw_scalar(
+                &[0.0; 4], 1, 2, 2, &[0.0; 25], &[0.0], 1, 5, 1, 0, false,
+                ArithMode::Precise,
+            )
+        });
+        assert!(result.is_err(), "k > h + 2p must not silently underflow");
     }
 
     #[test]

@@ -5,16 +5,26 @@
 //! OLP-threaded vectorised convolutions (section IV.A/IV.B), per-layer
 //! arithmetic modes (section IV.C), plus the baseline and the rejected
 //! KLP/FLP policies for the ablation benches.
+//!
+//! The steady-state entry point is [`plan::ExecutionPlan`]: compile
+//! once (shape inference, weight baking, buffer-arena sizing), then
+//! execute per request with zero allocation and zero thread spawns —
+//! all parallel sections run on the persistent [`parallel`] pool.
 
 pub mod conv;
 pub mod mode;
 pub mod network;
 pub mod ops;
 pub mod parallel;
+pub mod plan;
 pub mod tensor;
 
-pub use conv::{conv_mm, conv_nchw_flp, conv_nchw_klp, conv_nchw_scalar};
+pub use conv::{cast_weights, conv_mm, conv_nchw_flp, conv_nchw_klp, conv_nchw_scalar};
 pub use mode::ArithMode;
-pub use network::{run_baseline, run_mapmajor, EngineParams, ExecConfig, ModeAssignment};
-pub use parallel::Parallelism;
+pub use network::{
+    run_baseline, run_baseline_legacy, run_mapmajor, run_mapmajor_legacy, EngineParams,
+    ExecConfig, ModeAssignment,
+};
+pub use parallel::{global_pool, pool_threads_spawned, Parallelism, ThreadPool};
+pub use plan::ExecutionPlan;
 pub use tensor::{MapTensor, Tensor};

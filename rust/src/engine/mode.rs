@@ -92,6 +92,15 @@ pub fn mode_cast(x: f32, mode: ArithMode) -> f32 {
     }
 }
 
+/// Elementwise `mode_cast` of a whole slice into a caller-owned buffer
+/// (the plan executor's activation-cast scratch path).
+pub(crate) fn cast_slice_into(src: &[f32], mode: ArithMode, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = mode_cast(s, mode);
+    }
+}
+
 /// Static-dispatch operand transform: the engine's inner loops are
 /// generic over this so Precise pays zero per-element cost.
 pub trait ModeOps: Copy + Send + Sync + 'static {

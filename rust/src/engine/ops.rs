@@ -4,13 +4,27 @@
 //! power the single-threaded baseline. Pooling and GAP are
 //! layout-preserving in map-major (spatial-only windows); LRN crosses
 //! stack boundaries and therefore indexes through the true channel axis.
+//!
+//! Every op has an `_into` core writing into a caller-owned buffer —
+//! the compiled plan executor's arena path — plus the original
+//! allocating wrapper for ad-hoc use. Dense weights follow the baked
+//! contract of [`crate::engine::conv`]: the `mode` argument casts the
+//! activations only; weights must already be in the mode's domain.
 
 use crate::engine::mode::{mode_cast, ArithMode};
 use crate::engine::tensor::MapTensor;
 
+/// Output spatial size. Shape inference validates `k <= size + 2p`
+/// ahead of time; a direct call with a too-large window panics with a
+/// clear message instead of underflowing.
 #[inline]
 fn out_size(size: usize, k: usize, s: usize, p: usize) -> usize {
-    (size + 2 * p - k) / s + 1
+    let padded = size + 2 * p;
+    assert!(
+        padded >= k,
+        "pool window k={k} larger than padded input {padded} (run shapes::infer first)"
+    );
+    (padded - k) / s + 1
 }
 
 // ---------------------------------------------------------------------------
@@ -35,15 +49,35 @@ fn pool_mm(x: &MapTensor, k: usize, s: usize, p: usize, is_max: bool) -> MapTens
         x.pad_spatial(p)
     };
     let (hp, wp, u) = (padded.h, padded.w, padded.u);
-    let ho = (hp - k) / s + 1;
-    let wo = (wp - k) / s + 1;
+    let ho = out_size(x.h, k, s, p);
+    let wo = out_size(x.w, k, s, p);
     let mut out = MapTensor::zeros(x.c, ho, wo, u);
-    let stacks = x.stacks();
+    pool_mm_core(&padded.data, hp, wp, u, x.stacks(), &mut out.data, ho, wo, k, s, is_max);
+    out
+}
+
+/// Pooling inner loops over pre-padded map-major data, writing into a
+/// caller-owned buffer (`stacks * ho * wo * u` elements).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pool_mm_core(
+    padded: &[f32],
+    hp: usize,
+    wp: usize,
+    u: usize,
+    stacks: usize,
+    out: &mut [f32],
+    ho: usize,
+    wo: usize,
+    k: usize,
+    s: usize,
+    is_max: bool,
+) {
+    debug_assert_eq!(out.len(), stacks * ho * wo * u, "pool_mm_core: out len");
     for cs in 0..stacks {
         for oh in 0..ho {
             for ow in 0..wo {
-                let dst = out.offset(cs, oh, ow, 0);
-                let acc = &mut out.data[dst..dst + u];
+                let dst = ((cs * ho + oh) * wo + ow) * u;
+                let acc = &mut out[dst..dst + u];
                 if is_max {
                     acc.fill(f32::NEG_INFINITY);
                 } else {
@@ -52,7 +86,7 @@ fn pool_mm(x: &MapTensor, k: usize, s: usize, p: usize, is_max: bool) -> MapTens
                 for kh in 0..k {
                     let base = ((cs * hp + oh * s + kh) * wp + ow * s) * u;
                     for kw in 0..k {
-                        let src = &padded.data[base + kw * u..base + (kw + 1) * u];
+                        let src = &padded[base + kw * u..base + (kw + 1) * u];
                         for l in 0..u {
                             if is_max {
                                 if src[l] > acc[l] {
@@ -73,7 +107,6 @@ fn pool_mm(x: &MapTensor, k: usize, s: usize, p: usize, is_max: bool) -> MapTens
             }
         }
     }
-    out
 }
 
 impl MapTensor {
@@ -84,19 +117,16 @@ impl MapTensor {
         }
         let (hp, wp) = (self.h + 2 * p, self.w + 2 * p);
         let mut out = MapTensor::zeros(self.c, hp, wp, self.u);
-        out.data.fill(fill);
-        let stacks = self.stacks();
-        for s in 0..stacks {
-            for hi in 0..self.h {
-                let src0 = self.offset(s, hi, 0, 0);
-                let dst0 = ((s * hp + hi + p) * wp + p) * self.u;
-                out.data[dst0..dst0 + self.w * self.u]
-                    .copy_from_slice(&self.data[src0..src0 + self.w * self.u]);
-            }
-        }
-        // Padding lanes beyond the true channel count must stay `fill`
-        // only where harmless; for max-pool the padded lanes are unused
-        // downstream (true c tracked), so leaving them at `fill` is fine.
+        crate::engine::tensor::pad_spatial_into(
+            &self.data,
+            self.stacks(),
+            self.h,
+            self.w,
+            self.u,
+            p,
+            fill,
+            &mut out.data,
+        );
         out
     }
 }
@@ -104,8 +134,27 @@ impl MapTensor {
 /// Local response normalisation across channels (AlexNet/GoogLeNet).
 pub fn lrn_mm(x: &MapTensor, size: usize, alpha: f32, beta: f32) -> MapTensor {
     let (c, h, w, u) = (x.c, x.h, x.w, x.u);
-    let half = size / 2;
     let mut out = MapTensor::zeros(c, h, w, u);
+    lrn_mm_into(&x.data, c, h, w, u, size, alpha, beta, &mut out.data);
+    out
+}
+
+/// LRN inner loops over raw map-major data. Channel-padding lanes are
+/// never written (callers keep them zero — the arena invariant).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lrn_mm_into(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    u: usize,
+    size: usize,
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
+    let half = size / 2;
+    let at = |ci: usize, hi: usize, wi: usize| x[(((ci / u) * h + hi) * w + wi) * u + ci % u];
     for hi in 0..h {
         for wi in 0..w {
             for ci in 0..c {
@@ -113,40 +162,42 @@ pub fn lrn_mm(x: &MapTensor, size: usize, alpha: f32, beta: f32) -> MapTensor {
                 let hi_c = (ci + half).min(c - 1);
                 let mut ssum = 0.0f32;
                 for cj in lo..=hi_c {
-                    let v = x.at(cj, hi, wi);
+                    let v = at(cj, hi, wi);
                     ssum += v * v;
                 }
-                let v = x.at(ci, hi, wi);
+                let v = at(ci, hi, wi);
                 let denom = (1.0 + alpha / size as f32 * ssum).powf(beta);
-                let dst = out.offset(ci / u, hi, wi, ci % u);
-                out.data[dst] = v / denom;
+                out[(((ci / u) * h + hi) * w + wi) * u + ci % u] = v / denom;
             }
         }
     }
-    out
 }
 
 /// Global average pooling: `(Cb, H, W, u)` → flat `(C,)` (true channels).
 pub fn gap_mm(x: &MapTensor) -> Vec<f32> {
-    let inv = 1.0 / (x.h * x.w) as f32;
-    (0..x.c)
-        .map(|ci| {
-            let mut sum = 0.0f32;
-            for hi in 0..x.h {
-                for wi in 0..x.w {
-                    sum += x.at(ci, hi, wi);
-                }
+    let mut out = vec![0.0f32; x.c];
+    gap_mm_into(&x.data, x.c, x.h, x.w, x.u, &mut out);
+    out
+}
+
+/// GAP inner loop over raw map-major data (u = 1 covers row-major too).
+pub(crate) fn gap_mm_into(x: &[f32], c: usize, h: usize, w: usize, u: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), c);
+    let inv = 1.0 / (h * w) as f32;
+    for (ci, o) in out.iter_mut().enumerate() {
+        let mut sum = 0.0f32;
+        for hi in 0..h {
+            for wi in 0..w {
+                sum += x[(((ci / u) * h + hi) * w + wi) * u + ci % u];
             }
-            sum * inv
-        })
-        .collect()
+        }
+        *o = sum * inv;
+    }
 }
 
 /// Dense layer `(O, I) x (I,) + (O,)`, vectorisable inner loop.
+/// `w` must be baked into `mode`'s domain; `mode` casts `x` only.
 pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, mode: ArithMode) -> Vec<f32> {
-    let i = x.len();
-    assert_eq!(w.len(), o * i, "dense: weight len");
-    assert_eq!(b.len(), o, "dense: bias len");
     let x_c;
     let x: &[f32] = if mode == ArithMode::Precise {
         x
@@ -154,26 +205,30 @@ pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, mode: ArithM
         x_c = x.iter().map(|&v| mode_cast(v, mode)).collect::<Vec<_>>();
         &x_c
     };
-    let mut out = Vec::with_capacity(o);
+    let mut out = vec![0.0f32; o];
+    dense_into(x, w, b, o, relu, &mut out);
+    out
+}
+
+/// Dense inner loop over a pre-cast activation vector, writing into a
+/// caller-owned buffer.
+pub(crate) fn dense_into(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, out: &mut [f32]) {
+    let i = x.len();
+    assert_eq!(w.len(), o * i, "dense: weight len");
+    assert_eq!(b.len(), o, "dense: bias len");
+    debug_assert_eq!(out.len(), o);
     for oi in 0..o {
         let row = &w[oi * i..(oi + 1) * i];
         let mut acc = 0.0f32;
-        if mode == ArithMode::Precise {
-            for l in 0..i {
-                acc += x[l] * row[l];
-            }
-        } else {
-            for l in 0..i {
-                acc += x[l] * mode_cast(row[l], mode);
-            }
+        for l in 0..i {
+            acc += x[l] * row[l];
         }
         acc += b[oi];
         if relu && acc < 0.0 {
             acc = 0.0;
         }
-        out.push(acc);
+        out[oi] = acc;
     }
-    out
 }
 
 /// In-place ReLU.
@@ -187,10 +242,24 @@ pub fn relu_inplace(x: &mut [f32]) {
 
 /// Numerically stable softmax.
 pub fn softmax(x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    softmax_into(x, &mut out);
+    out
+}
+
+/// Softmax into a caller-owned buffer.
+pub(crate) fn softmax_into(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
     let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = x.iter().map(|&v| (v - max).exp()).collect();
-    let sum: f32 = exps.iter().sum();
-    exps.into_iter().map(|e| e / sum).collect()
+    let mut sum = 0.0f32;
+    for (o, &v) in out.iter_mut().zip(x) {
+        let e = (v - max).exp();
+        *o = e;
+        sum += e;
+    }
+    for o in out.iter_mut() {
+        *o /= sum;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -212,6 +281,27 @@ pub fn pool_nchw(
     let ho = out_size(h, k, s, p);
     let wo = out_size(w, k, s, p);
     let mut out = vec![0.0f32; c * ho * wo];
+    pool_nchw_into(x, c, h, w, k, s, p, is_max, ho, wo, &mut out);
+    (out, ho, wo)
+}
+
+/// Row-major pooling into a caller-owned buffer (padding handled by
+/// bounds checks — no scratch needed).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pool_nchw_into(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    is_max: bool,
+    ho: usize,
+    wo: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), c * ho * wo);
     for ci in 0..c {
         for oh in 0..ho {
             for ow in 0..wo {
@@ -241,38 +331,20 @@ pub fn pool_nchw(
             }
         }
     }
-    (out, ho, wo)
 }
 
 /// LRN over `(C, H, W)` row-major.
 pub fn lrn_nchw(x: &[f32], c: usize, h: usize, w: usize, size: usize, alpha: f32, beta: f32) -> Vec<f32> {
-    let half = size / 2;
     let mut out = vec![0.0f32; x.len()];
-    for ci in 0..c {
-        let lo = ci.saturating_sub(half);
-        let hi_c = (ci + half).min(c - 1);
-        for hi in 0..h {
-            for wi in 0..w {
-                let mut ssum = 0.0f32;
-                for cj in lo..=hi_c {
-                    let v = x[(cj * h + hi) * w + wi];
-                    ssum += v * v;
-                }
-                let v = x[(ci * h + hi) * w + wi];
-                out[(ci * h + hi) * w + wi] =
-                    v / (1.0 + alpha / size as f32 * ssum).powf(beta);
-            }
-        }
-    }
+    lrn_mm_into(x, c, h, w, 1, size, alpha, beta, &mut out);
     out
 }
 
 /// Global average pool over `(C, H, W)` row-major.
 pub fn gap_nchw(x: &[f32], c: usize, h: usize, w: usize) -> Vec<f32> {
-    let inv = 1.0 / (h * w) as f32;
-    (0..c)
-        .map(|ci| x[ci * h * w..(ci + 1) * h * w].iter().sum::<f32>() * inv)
-        .collect()
+    let mut out = vec![0.0f32; c];
+    gap_mm_into(x, c, h, w, 1, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -339,13 +411,15 @@ mod tests {
 
     #[test]
     fn dense_modes() {
+        use crate::engine::conv::cast_weights;
         let mut rng = Rng::new(5);
         let (i, o) = (32, 8);
         let x = rng.normal_vec(i);
         let w = rng.normal_vec(o * i);
         let b = rng.normal_vec(o);
         let precise = dense(&x, &w, &b, o, false, ArithMode::Precise);
-        let imprecise = dense(&x, &w, &b, o, false, ArithMode::Imprecise);
+        let w_baked = cast_weights(&w, ArithMode::Imprecise);
+        let imprecise = dense(&x, &w_baked, &b, o, false, ArithMode::Imprecise);
         let max_d = precise
             .iter()
             .zip(&imprecise)

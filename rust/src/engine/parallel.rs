@@ -1,4 +1,5 @@
-//! Thread workload allocation (paper section IV.A).
+//! Thread workload allocation (paper section IV.A) and the persistent
+//! worker pool the compiled execution plans run on.
 //!
 //! The three sources of parallelism in a convolutional layer:
 //!
@@ -15,9 +16,21 @@
 //! KLP/FLP exist to measure exactly what the paper argues against:
 //! reduction/synchronisation overhead and poor data reuse. The ablation
 //! bench regenerates that comparison.
+//!
+//! ## Execution substrate
+//!
+//! [`parallel_for`] / [`parallel_reduce`] run on a process-wide
+//! [`ThreadPool`]: long-lived workers blocked on a work channel, so the
+//! per-layer cost of going parallel is one enqueue + one wakeup instead
+//! of an OS thread spawn. The original scoped-spawn implementations are
+//! kept as [`parallel_for_spawn`] / [`parallel_reduce_spawn`] purely as
+//! the ablation reference (what every conv layer used to pay).
 
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::str::FromStr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Thread workload allocation policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -76,9 +89,294 @@ pub fn chunk_ranges(n_items: usize, n_chunks: usize) -> Vec<Range<usize>> {
     out
 }
 
-/// Run `f(chunk_index, range)` over `n_items` split across `n_threads`
-/// scoped OS threads. With `n_threads <= 1` runs inline (no spawn cost).
+// ---------------------------------------------------------------------------
+// Persistent thread pool
+// ---------------------------------------------------------------------------
+
+/// Total OS threads ever spawned by pools in this process — the plan
+/// parity tests assert this stays flat across inferences (zero per-layer
+/// spawns once the pool is warm).
+static THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// OS threads spawned by [`ThreadPool`]s since process start.
+pub fn pool_threads_spawned() -> usize {
+    THREADS_SPAWNED.load(Ordering::Relaxed)
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+/// Completion latch for one [`ThreadPool::scope`] call.
+struct Latch {
+    state: Mutex<(usize, bool)>, // (tasks remaining, any panicked)
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { state: Mutex::new((n, false)), cv: Condvar::new() }
+    }
+
+    fn done(&self, ok: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        if !ok {
+            st.1 = true;
+        }
+        if st.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.1 {
+            panic!("thread-pool task panicked");
+        }
+    }
+}
+
+/// Long-lived worker pool: workers block on a shared work queue; scoped
+/// task batches borrow caller data (the submitting call blocks until
+/// every task in the batch has completed, so the borrow is sound).
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(format!("capp-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Worker count.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run a batch of borrowed tasks to completion.
+    ///
+    /// Tasks may borrow caller data (`'a`): the call blocks until every
+    /// task has finished, and the caller *helps* by draining the queue
+    /// while it waits, so the batch makes progress even when all workers
+    /// are busy (and nested `scope` calls cannot deadlock).
+    pub fn scope<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for task in tasks {
+                // SAFETY: `latch.wait()` below blocks this call until
+                // every task in the batch has run to completion, so the
+                // `'a` borrows each task captures strictly outlive its
+                // execution. The wrapper job cannot panic (the user task
+                // runs under `catch_unwind`), so an unwinding worker or
+                // helper never abandons a queued sibling mid-borrow.
+                let task: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(task)
+                };
+                let latch = Arc::clone(&latch);
+                st.queue.push_back(Box::new(move || {
+                    let ok =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_ok();
+                    latch.done(ok);
+                }));
+            }
+            self.shared.work_cv.notify_all();
+        }
+        // Help while waiting.
+        loop {
+            let job = self.shared.state.lock().unwrap().queue.pop_front();
+            match job {
+                Some(job) => job(),
+                None => break,
+            }
+        }
+        latch.wait();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    break Some(j);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = sh.work_cv.wait(st).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+/// The process-wide pool every executor shares. Sized to the machine
+/// once, on first use; callers limit their own parallelism via the
+/// chunk count they submit, not by resizing the pool.
+pub fn global_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        ThreadPool::new(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        )
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Data-parallel helpers (pool-backed)
+// ---------------------------------------------------------------------------
+
+/// Run `f(chunk_index, range)` over `n_items` split into at most
+/// `n_threads` chunks on the persistent [`global_pool`]. With
+/// `n_threads <= 1` (or a single chunk) runs inline with zero overhead.
 pub fn parallel_for<F>(n_items: usize, n_threads: usize, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let ranges = chunk_ranges(n_items, n_threads.max(1));
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(0, r);
+        }
+        return;
+    }
+    let f = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| Box::new(move || f(i, r)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    global_pool().scope(tasks);
+}
+
+/// Like [`parallel_for`] but each chunk owns a scratch accumulation
+/// buffer of `buf_len` zeros; after the parallel phase the buffers are
+/// reduced (element-wise sum) into a single vector. This is the
+/// reduction + inter-thread data-transfer overhead KLP/FLP pay.
+pub fn parallel_reduce<F>(n_items: usize, n_threads: usize, buf_len: usize, f: F) -> Vec<f32>
+where
+    F: Fn(usize, Range<usize>, &mut [f32]) + Sync,
+{
+    let n_chunks = chunk_ranges(n_items, n_threads.max(1)).len().max(1);
+    let mut bufs: Vec<Vec<f32>> = (0..n_chunks).map(|_| vec![0.0f32; buf_len]).collect();
+    parallel_reduce_with(n_items, n_threads, buf_len, &mut bufs, &f);
+    bufs.swap_remove(0)
+}
+
+/// Arena-friendly reduction: run the KLP/FLP accumulation over
+/// preallocated per-thread buffers (each at least `buf_len` long) and
+/// leave the reduced result in `bufs[0][..buf_len]`. The compiled plan
+/// executor reuses one set of buffers across every layer and inference.
+pub fn parallel_reduce_with<F>(
+    n_items: usize,
+    n_threads: usize,
+    buf_len: usize,
+    bufs: &mut [Vec<f32>],
+    f: &F,
+) where
+    F: Fn(usize, Range<usize>, &mut [f32]) + Sync,
+{
+    let ranges = chunk_ranges(n_items, n_threads.max(1));
+    let n = ranges.len();
+    assert!(
+        bufs.len() >= n.max(1),
+        "parallel_reduce_with: {} buffers for {} chunks",
+        bufs.len(),
+        n
+    );
+    for buf in bufs.iter_mut().take(n.max(1)) {
+        assert!(buf.len() >= buf_len, "parallel_reduce_with: buffer too small");
+        buf[..buf_len].fill(0.0);
+    }
+    if n <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(0, r, &mut bufs[0][..buf_len]);
+        }
+        return;
+    }
+    {
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+            .into_iter()
+            .enumerate()
+            .zip(bufs.iter_mut())
+            .map(|((i, r), buf)| {
+                let buf = &mut buf[..buf_len];
+                Box::new(move || f(i, r, buf)) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        global_pool().scope(tasks);
+    }
+    // Sequential reduction — deliberately the simple strategy a
+    // RenderScript reduction kernel would lower to.
+    let (first, rest) = bufs.split_at_mut(1);
+    let out = &mut first[0][..buf_len];
+    for buf in rest.iter().take(n - 1) {
+        for (o, v) in out.iter_mut().zip(&buf[..buf_len]) {
+            *o += *v;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scoped-spawn ablation reference (the pre-pool execution substrate)
+// ---------------------------------------------------------------------------
+
+/// Ablation reference: the original scoped-spawn `parallel_for` — one
+/// fresh OS thread per chunk per call, exactly what every conv layer
+/// paid before the persistent pool.
+pub fn parallel_for_spawn<F>(n_items: usize, n_threads: usize, f: F)
 where
     F: Fn(usize, Range<usize>) + Sync,
 {
@@ -97,11 +395,8 @@ where
     });
 }
 
-/// Like [`parallel_for`] but each thread owns a scratch accumulation
-/// buffer of `buf_len` zeros; after the parallel phase the buffers are
-/// reduced (element-wise sum) into a single vector. This is the
-/// reduction + inter-thread data-transfer overhead KLP/FLP pay.
-pub fn parallel_reduce<F>(n_items: usize, n_threads: usize, buf_len: usize, f: F) -> Vec<f32>
+/// Ablation reference: the original scoped-spawn `parallel_reduce`.
+pub fn parallel_reduce_spawn<F>(n_items: usize, n_threads: usize, buf_len: usize, f: F) -> Vec<f32>
 where
     F: Fn(usize, Range<usize>, &mut [f32]) + Sync,
 {
@@ -121,8 +416,6 @@ where
             scope.spawn(move || f(i, r, buf));
         }
     });
-    // Sequential reduction — deliberately the simple strategy a
-    // RenderScript reduction kernel would lower to.
     let mut out = bufs.swap_remove(0);
     for buf in &bufs {
         for (o, v) in out.iter_mut().zip(buf) {
@@ -189,6 +482,71 @@ mod tests {
                 }
             });
             assert_eq!(out, vec![1.0; 8], "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn spawn_reference_matches_pool() {
+        let pool_sum = AtomicUsize::new(0);
+        let spawn_sum = AtomicUsize::new(0);
+        parallel_for(100, 4, |_, r| {
+            pool_sum.fetch_add(r.sum::<usize>(), Ordering::Relaxed);
+        });
+        parallel_for_spawn(100, 4, |_, r| {
+            spawn_sum.fetch_add(r.sum::<usize>(), Ordering::Relaxed);
+        });
+        assert_eq!(pool_sum.load(Ordering::Relaxed), spawn_sum.load(Ordering::Relaxed));
+        let a = parallel_reduce(16, 4, 16, |_, range, buf| {
+            for i in range {
+                buf[i] += i as f32;
+            }
+        });
+        let b = parallel_reduce_spawn(16, 4, 16, |_, range, buf| {
+            for i in range {
+                buf[i] += i as f32;
+            }
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pool_reused_across_calls_and_private_scope() {
+        // One test on purpose: THREADS_SPAWNED is process-global and
+        // libtest runs tests concurrently, so the private-pool check
+        // must not race the flat-counter assertion below.
+        let pool = ThreadPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..16)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+        drop(pool);
+
+        // Warm the global pool, then check no further threads are
+        // spawned no matter how many parallel sections run.
+        parallel_for(64, 8, |_, _| {});
+        let warm = pool_threads_spawned();
+        for _ in 0..32 {
+            parallel_for(64, 8, |_, _| {});
+        }
+        assert_eq!(pool_threads_spawned(), warm, "pool spawned threads per call");
+    }
+
+    #[test]
+    fn reduce_with_reuses_buffers() {
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![7.0f32; 8]).collect();
+        for _ in 0..3 {
+            parallel_reduce_with(8, 4, 8, &mut bufs, &|_, range, buf: &mut [f32]| {
+                for i in range {
+                    buf[i] += 1.0;
+                }
+            });
+            assert_eq!(&bufs[0][..8], &[1.0f32; 8][..], "stale partials leaked");
         }
     }
 

@@ -1,0 +1,1008 @@
+//! Compiled execution plans — compile once, execute many.
+//!
+//! Cappuccino's premise is that inference software is *synthesized*
+//! ahead of time and then runs with no interpretive or allocation
+//! overhead on the request path. [`ExecutionPlan`] is that executable
+//! form for the native engine: given a network, compiled parameters, a
+//! per-layer mode assignment and an execution config, `compile`:
+//!
+//! 1. runs shape inference **once** (every window/shape violation
+//!    surfaces here as `Error::Shape`, never as a hot-path underflow),
+//! 2. lowers the layer tree into a flat step sequence over an explicit
+//!    register file of activation buffers,
+//! 3. **bakes** every layer's weights into its arithmetic mode's domain
+//!    (the per-call weight cast the legacy executor paid is gone), and
+//! 4. sizes a buffer arena — per-step outputs, one shared pad/cast
+//!    scratch, and per-thread FLP/KLP reduction buffers — that is
+//!    allocated once and reused across every inference.
+//!
+//! `run` then walks the steps with zero steady-state allocation — at
+//! `threads = 1` the returned logits vector is the only per-inference
+//! heap traffic (metered through [`crate::metrics::AllocCounter`]);
+//! multi-threaded runs additionally pay a handful of small dispatch
+//! boxes per parallel section — and zero thread spawns (all parallel
+//! sections run on the persistent [`crate::engine::parallel`] pool).
+//!
+//! Three lowering families share the machinery:
+//!
+//! * [`ExecutionPlan::compile`] — map-major + OLP `conv_mm`: the
+//!   synthesized program (what [`crate::engine::run_mapmajor`] wraps).
+//! * [`ExecutionPlan::compile_baseline`] — row-major scalar, precise:
+//!   the Table I baseline (what [`crate::engine::run_baseline`] wraps).
+//! * [`ExecutionPlan::compile_policy`] — FLP/KLP network-level plans
+//!   for the section IV.A ablation, with their per-thread partial
+//!   buffers preallocated in the arena.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::engine::conv;
+use crate::engine::mode::{self, ArithMode};
+use crate::engine::network::{EngineParams, ExecConfig, ModeAssignment};
+use crate::engine::ops;
+use crate::engine::parallel::{self, Parallelism};
+use crate::engine::tensor;
+use crate::layout;
+use crate::metrics::AllocCounter;
+use crate::model::{shapes, Layer, LayerOp, Network};
+use crate::util::ceil_div;
+use crate::util::error::{Error, Result};
+
+/// Which executor family a plan lowers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Family {
+    /// Map-major activations, OLP-threaded vectorised convolutions.
+    MapMajor,
+    /// Row-major activations with the named conv implementation.
+    Nchw(NchwConv),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum NchwConv {
+    Scalar,
+    Flp,
+    Klp,
+}
+
+/// Static shape of one activation register.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotShape {
+    /// Map-major `(ceil(c/u), h, w, u)` data; `u = 1` is row-major NCHW.
+    Maps { c: usize, h: usize, w: usize, u: usize },
+    Flat { len: usize },
+}
+
+impl SlotShape {
+    fn len(&self) -> usize {
+        match *self {
+            SlotShape::Maps { c, h, w, u } => ceil_div(c, u) * h * w * u,
+            SlotShape::Flat { len } => len,
+        }
+    }
+}
+
+fn maps_of(s: SlotShape) -> (usize, usize, usize, usize) {
+    match s {
+        SlotShape::Maps { c, h, w, u } => (c, h, w, u),
+        SlotShape::Flat { .. } => unreachable!("plan step expected a maps register"),
+    }
+}
+
+fn flat_of(s: SlotShape) -> usize {
+    match s {
+        SlotShape::Flat { len } => len,
+        SlotShape::Maps { .. } => unreachable!("plan step expected a flat register"),
+    }
+}
+
+/// One lowered instruction. Weights are baked (mode-cast at compile
+/// time) and shared via `Arc` so cloning a plan (one arena per serve
+/// batch capacity) does not duplicate parameters.
+#[derive(Clone)]
+enum Step {
+    /// Prologue: conventional NCHW request data into the input register.
+    Input { dst: usize },
+    ConvMm {
+        src: usize,
+        dst: usize,
+        w: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
+        k: usize,
+        s: usize,
+        p: usize,
+        relu: bool,
+        mode: ArithMode,
+    },
+    ConvNchw {
+        src: usize,
+        dst: usize,
+        w: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
+        k: usize,
+        s: usize,
+        p: usize,
+        relu: bool,
+        mode: ArithMode,
+        policy: NchwConv,
+    },
+    PoolMm { src: usize, dst: usize, k: usize, s: usize, p: usize, is_max: bool },
+    PoolNchw { src: usize, dst: usize, k: usize, s: usize, p: usize, is_max: bool },
+    Lrn { src: usize, dst: usize, size: usize, alpha: f32, beta: f32 },
+    Gap { src: usize, dst: usize },
+    Copy { src: usize, dst: usize },
+    Concat { srcs: Vec<usize>, dst: usize },
+    Dense {
+        src: usize,
+        dst: usize,
+        w: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
+        relu: bool,
+        mode: ArithMode,
+    },
+    Softmax { src: usize, dst: usize },
+}
+
+/// The preallocated buffer arena: activation registers, one shared
+/// pad/cast scratch sized to the largest conv/pool working set, and
+/// per-thread FLP/KLP reduction buffers. Compile-time sized, reused
+/// across every inference.
+#[derive(Clone)]
+struct Arena {
+    bufs: Vec<Vec<f32>>,
+    scratch: Vec<f32>,
+    reduce: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    fn bytes(&self) -> usize {
+        let elems: usize = self.bufs.iter().map(|b| b.len()).sum::<usize>()
+            + self.scratch.len()
+            + self.reduce.iter().map(|b| b.len()).sum::<usize>();
+        4 * elems
+    }
+}
+
+/// A compiled, immediately executable inference program for the native
+/// engine. Holds baked weights and a resident buffer arena; `run` is
+/// allocation-free apart from the returned logits vector.
+#[derive(Clone)]
+pub struct ExecutionPlan {
+    u: usize,
+    threads: usize,
+    input_shape: (usize, usize, usize),
+    slots: Vec<SlotShape>,
+    steps: Vec<Step>,
+    out_slot: usize,
+    arena: Arena,
+    baked_param_bytes: usize,
+    runs: u64,
+    alloc: AllocCounter,
+}
+
+impl std::fmt::Debug for ExecutionPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecutionPlan")
+            .field("u", &self.u)
+            .field("threads", &self.threads)
+            .field("steps", &self.steps.len())
+            .field("registers", &self.slots.len())
+            .field("arena_bytes", &self.arena.bytes())
+            .field("baked_param_bytes", &self.baked_param_bytes)
+            .field("runs", &self.runs)
+            .finish()
+    }
+}
+
+impl ExecutionPlan {
+    /// Compile the map-major OLP program — the synthesized software.
+    pub fn compile(
+        net: &Network,
+        params: &EngineParams,
+        modes: &ModeAssignment,
+        cfg: ExecConfig,
+    ) -> Result<ExecutionPlan> {
+        Self::compile_with(net, params, modes, cfg, Family::MapMajor)
+    }
+
+    /// Compile the single-threaded scalar row-major baseline (Table I's
+    /// "single-threaded Java" program, functionally).
+    pub fn compile_baseline(net: &Network, params: &EngineParams) -> Result<ExecutionPlan> {
+        Self::compile_with(
+            net,
+            params,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            ExecConfig { threads: 1 },
+            Family::Nchw(NchwConv::Scalar),
+        )
+    }
+
+    /// Compile under an explicit thread-workload-allocation policy:
+    /// OLP lowers map-major (same as [`ExecutionPlan::compile`]),
+    /// FLP/KLP lower row-major with per-thread reduction buffers in the
+    /// arena — the section IV.A ablation executors.
+    pub fn compile_policy(
+        net: &Network,
+        params: &EngineParams,
+        modes: &ModeAssignment,
+        cfg: ExecConfig,
+        policy: Parallelism,
+    ) -> Result<ExecutionPlan> {
+        let family = match policy {
+            Parallelism::Olp => Family::MapMajor,
+            Parallelism::Flp => Family::Nchw(NchwConv::Flp),
+            Parallelism::Klp => Family::Nchw(NchwConv::Klp),
+        };
+        Self::compile_with(net, params, modes, cfg, family)
+    }
+
+    fn compile_with(
+        net: &Network,
+        params: &EngineParams,
+        modes: &ModeAssignment,
+        cfg: ExecConfig,
+        family: Family,
+    ) -> Result<ExecutionPlan> {
+        // Shape inference once, up front: every undersized window or
+        // malformed topology becomes Error::Shape here instead of an
+        // arithmetic underflow on the request path.
+        shapes::infer(net)?;
+        let (c, h, w) = net.input.as_maps()?;
+        let u = match family {
+            Family::MapMajor => params.u,
+            Family::Nchw(_) => 1,
+        };
+        let threads = cfg.threads.max(1);
+        let mut lw = Lowerer {
+            params,
+            modes,
+            family,
+            slots: Vec::new(),
+            steps: Vec::new(),
+            scratch_len: 0,
+            reduce_len: 0,
+            baked_param_bytes: 0,
+        };
+        let in_slot = lw.slot(SlotShape::Maps { c, h, w, u });
+        lw.steps.push(Step::Input { dst: in_slot });
+        let out_slot = lw.lower(&net.layers, in_slot)?;
+
+        let bufs: Vec<Vec<f32>> = lw.slots.iter().map(|s| vec![0.0f32; s.len()]).collect();
+        let scratch = vec![0.0f32; lw.scratch_len];
+        let n_reduce = if lw.reduce_len > 0 { threads } else { 0 };
+        let reduce: Vec<Vec<f32>> =
+            (0..n_reduce).map(|_| vec![0.0f32; lw.reduce_len]).collect();
+
+        Ok(ExecutionPlan {
+            u,
+            threads,
+            input_shape: (c, h, w),
+            slots: lw.slots,
+            steps: lw.steps,
+            out_slot,
+            arena: Arena { bufs, scratch, reduce },
+            baked_param_bytes: lw.baked_param_bytes,
+            runs: 0,
+            alloc: AllocCounter::new(),
+        })
+    }
+
+    /// Execute one inference. `input` is conventional `(C, H, W)` data;
+    /// the map-major transform of the request is the plan's prologue
+    /// (the only dynamic reorder in the pipeline). Steady-state
+    /// allocation-free apart from the returned logits vector.
+    pub fn run(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let (c, h, w) = self.input_shape;
+        if input.len() != c * h * w {
+            return Err(Error::Shape(format!(
+                "input len {} vs expected {c}x{h}x{w}",
+                input.len()
+            )));
+        }
+        let slots = &self.slots;
+        let threads = self.threads;
+        for step in &self.steps {
+            exec_step(step, slots, &mut self.arena, input, threads);
+        }
+        self.runs += 1;
+        let out = match slots[self.out_slot] {
+            SlotShape::Flat { len } => self.arena.bufs[self.out_slot][..len].to_vec(),
+            SlotShape::Maps { c, h, w, u } => {
+                layout::mapmajor_to_nchw(&self.arena.bufs[self.out_slot], c, h, w, u)
+            }
+        };
+        self.alloc.record(4 * out.len());
+        Ok(out)
+    }
+
+    /// Vector width the plan was compiled for (1 for row-major plans).
+    pub fn u(&self) -> usize {
+        self.u
+    }
+
+    /// Pool-chunk parallelism the plan executes with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Expected per-image input element count.
+    pub fn input_len(&self) -> usize {
+        let (c, h, w) = self.input_shape;
+        c * h * w
+    }
+
+    /// Lowered step count (prologue included).
+    pub fn step_count(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Resident arena bytes (activation registers + scratch + reduction
+    /// buffers) — what the legacy executor re-allocated every inference.
+    pub fn arena_bytes(&self) -> usize {
+        self.arena.bytes()
+    }
+
+    /// Bytes of baked (mode-cast) parameters the plan holds — what the
+    /// legacy executor re-cast every inference for inexact layers.
+    pub fn baked_param_bytes(&self) -> usize {
+        self.baked_param_bytes
+    }
+
+    /// Inferences executed so far.
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    /// Request-path allocation meter (logits vectors only, by design).
+    pub fn alloc(&self) -> &AllocCounter {
+        &self.alloc
+    }
+
+    /// Mean request-path bytes allocated per inference.
+    pub fn alloc_bytes_per_run(&self) -> f64 {
+        self.alloc.per_inference(self.runs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering
+// ---------------------------------------------------------------------------
+
+struct Lowerer<'a> {
+    params: &'a EngineParams,
+    modes: &'a ModeAssignment,
+    family: Family,
+    slots: Vec<SlotShape>,
+    steps: Vec<Step>,
+    scratch_len: usize,
+    reduce_len: usize,
+    baked_param_bytes: usize,
+}
+
+impl Lowerer<'_> {
+    fn slot(&mut self, shape: SlotShape) -> usize {
+        self.slots.push(shape);
+        self.slots.len() - 1
+    }
+
+    fn bake(&mut self, w: &[f32], mode: ArithMode) -> Arc<Vec<f32>> {
+        self.baked_param_bytes += 4 * w.len();
+        Arc::new(conv::cast_weights(w, mode))
+    }
+
+    fn bias(&mut self, b: &[f32]) -> Arc<Vec<f32>> {
+        self.baked_param_bytes += 4 * b.len();
+        Arc::new(b.to_vec())
+    }
+
+    fn lower(&mut self, layers: &[Layer], mut cur: usize) -> Result<usize> {
+        for layer in layers {
+            cur = self.lower_layer(layer, cur)?;
+        }
+        Ok(cur)
+    }
+
+    fn lower_layer(&mut self, layer: &Layer, cur: usize) -> Result<usize> {
+        let named = |e: Error| Error::Shape(format!("layer {}: {e}", layer.name));
+        match &layer.op {
+            LayerOp::Conv { m, k, s, p, relu } => {
+                let (c, h, w, u) = self.require_maps(cur, layer)?;
+                let ho = shapes::conv_out(h, *k, *s, *p).map_err(named)?;
+                let wo = shapes::conv_out(w, *k, *s, *p).map_err(named)?;
+                let lp = self.params.layer_params(&layer.name)?;
+                let mode = self.modes.mode_of(&layer.name);
+                let dst = self.slot(SlotShape::Maps { c: *m, h: ho, w: wo, u });
+                match self.family {
+                    Family::MapMajor => {
+                        let (mb, cb) = (ceil_div(*m, u), ceil_div(c, u));
+                        if lp.w_mm.len() != mb * u * cb * k * k * u
+                            || lp.b_mm.len() != mb * u
+                        {
+                            return Err(Error::Shape(format!(
+                                "layer {}: map-major params {}x{} vs expected {}x{}",
+                                layer.name,
+                                lp.w_mm.len(),
+                                lp.b_mm.len(),
+                                mb * u * cb * k * k * u,
+                                mb * u
+                            )));
+                        }
+                        if *p > 0 || mode != ArithMode::Precise {
+                            let padded = cb * (h + 2 * p) * (w + 2 * p) * u;
+                            self.scratch_len = self.scratch_len.max(padded);
+                        }
+                        let (wgt, b) = (self.bake(&lp.w_mm, mode), self.bias(&lp.b_mm));
+                        self.steps.push(Step::ConvMm {
+                            src: cur,
+                            dst,
+                            w: wgt,
+                            b,
+                            k: *k,
+                            s: *s,
+                            p: *p,
+                            relu: *relu,
+                            mode,
+                        });
+                    }
+                    Family::Nchw(policy) => {
+                        if lp.w_conv.len() != m * c * k * k || lp.b_conv.len() != *m {
+                            return Err(Error::Shape(format!(
+                                "layer {}: params {}x{} vs expected {}x{}",
+                                layer.name,
+                                lp.w_conv.len(),
+                                lp.b_conv.len(),
+                                m * c * k * k,
+                                m
+                            )));
+                        }
+                        if mode != ArithMode::Precise {
+                            self.scratch_len = self.scratch_len.max(c * h * w);
+                        }
+                        if policy != NchwConv::Scalar {
+                            self.reduce_len = self.reduce_len.max(m * ho * wo);
+                        }
+                        let (wgt, b) = (self.bake(&lp.w_conv, mode), self.bias(&lp.b_conv));
+                        self.steps.push(Step::ConvNchw {
+                            src: cur,
+                            dst,
+                            w: wgt,
+                            b,
+                            k: *k,
+                            s: *s,
+                            p: *p,
+                            relu: *relu,
+                            mode,
+                            policy,
+                        });
+                    }
+                }
+                Ok(dst)
+            }
+            LayerOp::MaxPool { k, s, p } | LayerOp::AvgPool { k, s, p } => {
+                let is_max = matches!(layer.op, LayerOp::MaxPool { .. });
+                let (c, h, w, u) = self.require_maps(cur, layer)?;
+                let ho = shapes::conv_out(h, *k, *s, *p).map_err(named)?;
+                let wo = shapes::conv_out(w, *k, *s, *p).map_err(named)?;
+                let dst = self.slot(SlotShape::Maps { c, h: ho, w: wo, u });
+                match self.family {
+                    Family::MapMajor => {
+                        if *p > 0 {
+                            let padded = ceil_div(c, u) * (h + 2 * p) * (w + 2 * p) * u;
+                            self.scratch_len = self.scratch_len.max(padded);
+                        }
+                        self.steps.push(Step::PoolMm {
+                            src: cur,
+                            dst,
+                            k: *k,
+                            s: *s,
+                            p: *p,
+                            is_max,
+                        });
+                    }
+                    Family::Nchw(_) => {
+                        self.steps.push(Step::PoolNchw {
+                            src: cur,
+                            dst,
+                            k: *k,
+                            s: *s,
+                            p: *p,
+                            is_max,
+                        });
+                    }
+                }
+                Ok(dst)
+            }
+            LayerOp::Lrn { size, alpha, beta } => {
+                let (c, h, w, u) = self.require_maps(cur, layer)?;
+                let dst = self.slot(SlotShape::Maps { c, h, w, u });
+                self.steps.push(Step::Lrn {
+                    src: cur,
+                    dst,
+                    size: *size,
+                    alpha: *alpha,
+                    beta: *beta,
+                });
+                Ok(dst)
+            }
+            LayerOp::Fork { branches } => {
+                let (_, _, _, u) = self.require_maps(cur, layer)?;
+                let mut outs = Vec::with_capacity(branches.len());
+                for br in branches {
+                    outs.push(self.lower(br, cur)?);
+                }
+                let mut total_c = 0;
+                let mut hw: Option<(usize, usize)> = None;
+                for &o in &outs {
+                    let (bc, bh, bw, _) = match self.slots[o] {
+                        SlotShape::Maps { c, h, w, u } => (c, h, w, u),
+                        SlotShape::Flat { .. } => {
+                            return Err(Error::Invalid(format!(
+                                "fork {}: branch produced flat activation",
+                                layer.name
+                            )))
+                        }
+                    };
+                    if let Some((ph, pw)) = hw {
+                        if (bh, bw) != (ph, pw) {
+                            return Err(Error::Shape(format!(
+                                "fork {}: branch spatial mismatch {bh}x{bw} vs {ph}x{pw}",
+                                layer.name
+                            )));
+                        }
+                    } else {
+                        hw = Some((bh, bw));
+                    }
+                    if self.family == Family::MapMajor && bc % u != 0 {
+                        return Err(Error::Invalid(format!(
+                            "fork {}: branch width {bc} not aligned to u={u}",
+                            layer.name
+                        )));
+                    }
+                    total_c += bc;
+                }
+                let (h, w) = hw.ok_or_else(|| {
+                    Error::Invalid(format!("fork {}: no branches", layer.name))
+                })?;
+                let dst = self.slot(SlotShape::Maps { c: total_c, h, w, u });
+                self.steps.push(Step::Concat { srcs: outs, dst });
+                Ok(dst)
+            }
+            LayerOp::Flatten => {
+                let len = self.slots[cur].len();
+                let dst = self.slot(SlotShape::Flat { len });
+                self.steps.push(Step::Copy { src: cur, dst });
+                Ok(dst)
+            }
+            LayerOp::Gap => {
+                let (c, ..) = self.require_maps(cur, layer)?;
+                let dst = self.slot(SlotShape::Flat { len: c });
+                self.steps.push(Step::Gap { src: cur, dst });
+                Ok(dst)
+            }
+            LayerOp::Dense { o, relu } => {
+                let len = match self.slots[cur] {
+                    SlotShape::Flat { len } => len,
+                    SlotShape::Maps { .. } => {
+                        return Err(Error::Invalid(format!(
+                            "layer {}: dense/softmax requires flatten or gap first",
+                            layer.name
+                        )))
+                    }
+                };
+                let lp = self.params.layer_params(&layer.name)?;
+                let mode = self.modes.mode_of(&layer.name);
+                let (w_src, b_src) = match self.family {
+                    Family::MapMajor => (&lp.w_mm, &lp.b_mm),
+                    Family::Nchw(_) => (&lp.w_conv, &lp.b_conv),
+                };
+                if w_src.len() != o * len || b_src.len() != *o {
+                    return Err(Error::Shape(format!(
+                        "layer {}: dense params {}x{} vs expected {}x{}",
+                        layer.name,
+                        w_src.len(),
+                        b_src.len(),
+                        o * len,
+                        o
+                    )));
+                }
+                if mode != ArithMode::Precise {
+                    self.scratch_len = self.scratch_len.max(len);
+                }
+                let (wgt, b) = (self.bake(w_src, mode), self.bias(b_src));
+                let dst = self.slot(SlotShape::Flat { len: *o });
+                self.steps.push(Step::Dense { src: cur, dst, w: wgt, b, relu: *relu, mode });
+                Ok(dst)
+            }
+            LayerOp::Softmax => {
+                let len = match self.slots[cur] {
+                    SlotShape::Flat { len } => len,
+                    SlotShape::Maps { .. } => {
+                        return Err(Error::Invalid(format!(
+                            "layer {}: dense/softmax requires flatten or gap first",
+                            layer.name
+                        )))
+                    }
+                };
+                let dst = self.slot(SlotShape::Flat { len });
+                self.steps.push(Step::Softmax { src: cur, dst });
+                Ok(dst)
+            }
+        }
+    }
+
+    fn require_maps(&self, slot: usize, layer: &Layer) -> Result<(usize, usize, usize, usize)> {
+        match self.slots[slot] {
+            SlotShape::Maps { c, h, w, u } => Ok((c, h, w, u)),
+            SlotShape::Flat { .. } => Err(Error::Invalid(format!(
+                "layer {}: op {:?} cannot consume a flat activation",
+                layer.name, layer.op
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+/// Disjoint (read, write) access into the register file.
+fn pair_mut(bufs: &mut [Vec<f32>], read: usize, write: usize) -> (&[f32], &mut [f32]) {
+    assert_ne!(read, write, "plan step reads and writes the same register");
+    if read < write {
+        let (lo, hi) = bufs.split_at_mut(write);
+        (lo[read].as_slice(), hi[0].as_mut_slice())
+    } else {
+        let (lo, hi) = bufs.split_at_mut(read);
+        (hi[0].as_slice(), lo[write].as_mut_slice())
+    }
+}
+
+fn exec_step(step: &Step, slots: &[SlotShape], arena: &mut Arena, input: &[f32], threads: usize) {
+    match step {
+        Step::Input { dst } => {
+            let (c, h, w, u) = maps_of(slots[*dst]);
+            layout::nchw_to_mapmajor_into(input, c, h, w, u, &mut arena.bufs[*dst]);
+        }
+        Step::ConvMm { src, dst, w, b, k, s, p, relu, mode } => {
+            let (cin, h, wd, u) = maps_of(slots[*src]);
+            let (m, ho, wo, _) = maps_of(slots[*dst]);
+            let (cb, mb) = (ceil_div(cin, u), ceil_div(m, u));
+            let (hp, wp) = (h + 2 * p, wd + 2 * p);
+            if *p > 0 || *mode != ArithMode::Precise {
+                let plen = cb * hp * wp * u;
+                tensor::pad_cast_into(
+                    &arena.bufs[*src],
+                    cb,
+                    h,
+                    wd,
+                    u,
+                    *p,
+                    0.0,
+                    *mode,
+                    &mut arena.scratch[..plen],
+                );
+                conv::conv_mm_core(
+                    &arena.scratch[..plen],
+                    hp,
+                    wp,
+                    cb,
+                    u,
+                    w,
+                    b,
+                    &mut arena.bufs[*dst],
+                    mb,
+                    *k,
+                    *s,
+                    ho,
+                    wo,
+                    *relu,
+                    threads,
+                );
+            } else {
+                let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+                conv::conv_mm_core(x, hp, wp, cb, u, w, b, out, mb, *k, *s, ho, wo, *relu, threads);
+            }
+        }
+        Step::ConvNchw { src, dst, w, b, k, s, p, relu, mode, policy } => {
+            let (cin, h, wd, _) = maps_of(slots[*src]);
+            let (m, ho, wo, _) = maps_of(slots[*dst]);
+            let x_len = cin * h * wd;
+            if *mode != ArithMode::Precise {
+                mode::cast_slice_into(&arena.bufs[*src], *mode, &mut arena.scratch[..x_len]);
+            }
+            match policy {
+                NchwConv::Scalar => {
+                    if *mode != ArithMode::Precise {
+                        let x = &arena.scratch[..x_len];
+                        conv::conv_nchw_scalar_into(
+                            x, cin, h, wd, w, b, m, *k, *s, *p, *relu, ho, wo,
+                            &mut arena.bufs[*dst],
+                        );
+                    } else {
+                        let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+                        conv::conv_nchw_scalar_into(
+                            x, cin, h, wd, w, b, m, *k, *s, *p, *relu, ho, wo, out,
+                        );
+                    }
+                }
+                NchwConv::Flp | NchwConv::Klp => {
+                    let is_flp = matches!(policy, NchwConv::Flp);
+                    let items = if is_flp { m * cin } else { cin * k };
+                    let buf_len = m * ho * wo;
+                    {
+                        let x: &[f32] = if *mode != ArithMode::Precise {
+                            &arena.scratch[..x_len]
+                        } else {
+                            &arena.bufs[*src]
+                        };
+                        let wgt: &[f32] = w;
+                        let (kk, ss, pp) = (*k, *s, *p);
+                        parallel::parallel_reduce_with(
+                            items,
+                            threads,
+                            buf_len,
+                            &mut arena.reduce,
+                            &|_i, range: Range<usize>, buf: &mut [f32]| {
+                                if is_flp {
+                                    conv::flp_accumulate(
+                                        x, cin, h, wd, wgt, kk, ss, pp, ho, wo, range, buf,
+                                    );
+                                } else {
+                                    conv::klp_accumulate(
+                                        x, cin, h, wd, wgt, m, kk, ss, pp, ho, wo, range, buf,
+                                    );
+                                }
+                            },
+                        );
+                    }
+                    let out = &mut arena.bufs[*dst];
+                    out[..].copy_from_slice(&arena.reduce[0][..buf_len]);
+                    conv::finish_bias_relu(out, b, m, ho * wo, *relu);
+                }
+            }
+        }
+        Step::PoolMm { src, dst, k, s, p, is_max } => {
+            let (c, h, wd, u) = maps_of(slots[*src]);
+            let (_, ho, wo, _) = maps_of(slots[*dst]);
+            let cb = ceil_div(c, u);
+            let fill = if *is_max { f32::NEG_INFINITY } else { 0.0 };
+            if *p > 0 {
+                let (hp, wp) = (h + 2 * p, wd + 2 * p);
+                let plen = cb * hp * wp * u;
+                tensor::pad_spatial_into(
+                    &arena.bufs[*src],
+                    cb,
+                    h,
+                    wd,
+                    u,
+                    *p,
+                    fill,
+                    &mut arena.scratch[..plen],
+                );
+                ops::pool_mm_core(
+                    &arena.scratch[..plen],
+                    hp,
+                    wp,
+                    u,
+                    cb,
+                    &mut arena.bufs[*dst],
+                    ho,
+                    wo,
+                    *k,
+                    *s,
+                    *is_max,
+                );
+            } else {
+                let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+                ops::pool_mm_core(x, h, wd, u, cb, out, ho, wo, *k, *s, *is_max);
+            }
+        }
+        Step::PoolNchw { src, dst, k, s, p, is_max } => {
+            let (c, h, wd, _) = maps_of(slots[*src]);
+            let (_, ho, wo, _) = maps_of(slots[*dst]);
+            let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+            ops::pool_nchw_into(x, c, h, wd, *k, *s, *p, *is_max, ho, wo, out);
+        }
+        Step::Lrn { src, dst, size, alpha, beta } => {
+            let (c, h, wd, u) = maps_of(slots[*src]);
+            let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+            ops::lrn_mm_into(x, c, h, wd, u, *size, *alpha, *beta, out);
+        }
+        Step::Gap { src, dst } => {
+            let (c, h, wd, u) = maps_of(slots[*src]);
+            let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+            ops::gap_mm_into(x, c, h, wd, u, out);
+        }
+        Step::Copy { src, dst } => {
+            let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+            out.copy_from_slice(x);
+        }
+        Step::Concat { srcs, dst } => {
+            let mut off = 0;
+            for &sidx in srcs {
+                let part_len = slots[sidx].len();
+                let (x, out) = pair_mut(&mut arena.bufs, sidx, *dst);
+                out[off..off + part_len].copy_from_slice(x);
+                off += part_len;
+            }
+        }
+        Step::Dense { src, dst, w, b, relu, mode } => {
+            let o = flat_of(slots[*dst]);
+            let len = flat_of(slots[*src]);
+            if *mode != ArithMode::Precise {
+                mode::cast_slice_into(&arena.bufs[*src], *mode, &mut arena.scratch[..len]);
+                let x = &arena.scratch[..len];
+                ops::dense_into(x, w, b, o, *relu, &mut arena.bufs[*dst]);
+            } else {
+                let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+                ops::dense_into(x, w, b, o, *relu, out);
+            }
+        }
+        Step::Softmax { src, dst } => {
+            let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+            ops::softmax_into(x, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_cappnet;
+    use crate::model::zoo;
+    use crate::util::rng::Rng;
+
+    fn rand_input(net: &Network, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(net.input.elements())
+    }
+
+    #[test]
+    fn plan_compiles_and_runs_tinynet() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 42, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Precise);
+        let mut plan =
+            ExecutionPlan::compile(&net, &params, &modes, ExecConfig { threads: 2 }).unwrap();
+        let input = rand_input(&net, 7);
+        let a = plan.run(&input).unwrap();
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // Re-running the same plan with the same input is bitwise stable
+        // (the arena leaks no state between inferences).
+        let b = plan.run(&input).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(plan.runs(), 2);
+    }
+
+    #[test]
+    fn plan_interleaved_inputs_do_not_contaminate() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 1, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let cfg = ExecConfig { threads: 2 };
+        let mut plan = ExecutionPlan::compile(&net, &params, &modes, cfg).unwrap();
+        let x1 = rand_input(&net, 2);
+        let x2 = rand_input(&net, 3);
+        let a1 = plan.run(&x1).unwrap();
+        let a2 = plan.run(&x2).unwrap();
+        let a1_again = plan.run(&x1).unwrap();
+        assert_ne!(a1, a2);
+        assert_eq!(a1, a1_again, "arena state leaked between inferences");
+    }
+
+    #[test]
+    fn plan_alloc_is_logits_only() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 5, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let mut plan =
+            ExecutionPlan::compile(&net, &params, &modes, ExecConfig { threads: 1 }).unwrap();
+        let input = rand_input(&net, 9);
+        for _ in 0..4 {
+            plan.run(&input).unwrap();
+        }
+        // 8 logits * 4 bytes per inference, nothing else.
+        assert_eq!(plan.alloc_bytes_per_run(), 32.0);
+        assert_eq!(plan.alloc().allocs(), 4);
+        assert!(plan.arena_bytes() > 0);
+        assert!(plan.baked_param_bytes() > 0);
+    }
+
+    #[test]
+    fn plan_clone_shares_weights_not_arena() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 5, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Precise);
+        let plan =
+            ExecutionPlan::compile(&net, &params, &modes, ExecConfig { threads: 1 }).unwrap();
+        let mut a = plan.clone();
+        let mut b = plan;
+        let input = rand_input(&net, 11);
+        assert_eq!(a.run(&input).unwrap(), b.run(&input).unwrap());
+    }
+
+    #[test]
+    fn oversized_window_is_shape_error_not_panic() {
+        let net = parse_cappnet(
+            "net bad\ninput 3 4 4\nclasses 4\nconv c1 m=4 k=7 s=1 p=0\ngap\n",
+        )
+        .unwrap();
+        let params = EngineParams::random(&net, 0, 4);
+        // Shape inference fails before any parameter work.
+        assert!(params.is_err() || {
+            let p = params.unwrap();
+            matches!(
+                ExecutionPlan::compile(
+                    &net,
+                    &p,
+                    &ModeAssignment::uniform(ArithMode::Precise),
+                    ExecConfig::default(),
+                ),
+                Err(Error::Shape(_))
+            )
+        });
+    }
+
+    #[test]
+    fn bad_input_len_rejected() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 0, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Precise);
+        let mut plan =
+            ExecutionPlan::compile(&net, &params, &modes, ExecConfig::default()).unwrap();
+        assert!(matches!(plan.run(&[0.0; 3]), Err(Error::Shape(_))));
+    }
+
+    #[test]
+    fn baseline_plan_matches_mapmajor_plan() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 21, 4).unwrap();
+        let mut base = ExecutionPlan::compile_baseline(&net, &params).unwrap();
+        let mut opt = ExecutionPlan::compile(
+            &net,
+            &params,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            ExecConfig { threads: 2 },
+        )
+        .unwrap();
+        let input = rand_input(&net, 22);
+        let a = base.run(&input).unwrap();
+        let b = opt.run(&input).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn flp_klp_policy_plans_agree_with_baseline() {
+        let net = parse_cappnet(
+            "net mini\ninput 3 12 12\nclasses 8\n\
+             conv c1 m=8 k=3 s=1 p=1\nmaxpool k=2 s=2\n\
+             conv c2 m=8 k=3 s=1 p=0\ngap\n",
+        )
+        .unwrap();
+        let params = EngineParams::random(&net, 8, 4).unwrap();
+        let mut base = ExecutionPlan::compile_baseline(&net, &params).unwrap();
+        let input = rand_input(&net, 13);
+        let want = base.run(&input).unwrap();
+        for policy in [Parallelism::Flp, Parallelism::Klp] {
+            for threads in [1, 3] {
+                let mut plan = ExecutionPlan::compile_policy(
+                    &net,
+                    &params,
+                    &ModeAssignment::uniform(ArithMode::Precise),
+                    ExecConfig { threads },
+                    policy,
+                )
+                .unwrap();
+                assert!(plan.arena_bytes() > 0);
+                let got = plan.run(&input).unwrap();
+                for (x, y) in want.iter().zip(&got) {
+                    assert!(
+                        (x - y).abs() < 1e-4 * (1.0 + x.abs()),
+                        "{policy}/{threads}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+}

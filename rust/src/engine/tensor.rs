@@ -9,7 +9,72 @@
 //! layout-aware wrappers below carry the semantic channel count, since a
 //! map-major tensor's true `C` can be smaller than `Cb * u`.
 
+use crate::engine::mode::{mode_cast, ArithMode};
 use crate::util::ceil_div;
+
+/// Pad map-major `(stacks, h, w, u)` data spatially by `p` into `dst`
+/// (`stacks, h+2p, w+2p, u`), filling borders with `fill` — the arena
+/// variant of [`MapTensor::pad_spatial`], overwriting `dst` completely.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pad_spatial_into(
+    src: &[f32],
+    stacks: usize,
+    h: usize,
+    w: usize,
+    u: usize,
+    p: usize,
+    fill: f32,
+    dst: &mut [f32],
+) {
+    pad_cast_into(src, stacks, h, w, u, p, fill, ArithMode::Precise, dst);
+}
+
+/// Fused spatial pad + arithmetic-mode cast into a caller-owned scratch
+/// buffer: borders get `mode_cast(fill)`, the interior `mode_cast(src)`.
+/// Identical to casting after padding (the legacy executor's order),
+/// since `mode_cast` is elementwise.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pad_cast_into(
+    src: &[f32],
+    stacks: usize,
+    h: usize,
+    w: usize,
+    u: usize,
+    p: usize,
+    fill: f32,
+    mode: ArithMode,
+    dst: &mut [f32],
+) {
+    let (hp, wp) = (h + 2 * p, w + 2 * p);
+    debug_assert_eq!(src.len(), stacks * h * w * u, "pad_cast_into: src len");
+    debug_assert_eq!(dst.len(), stacks * hp * wp * u, "pad_cast_into: dst len");
+    if p == 0 {
+        if mode == ArithMode::Precise {
+            dst.copy_from_slice(src);
+        } else {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = mode_cast(s, mode);
+            }
+        }
+        return;
+    }
+    dst.fill(mode_cast(fill, mode));
+    for st in 0..stacks {
+        for hi in 0..h {
+            let s0 = ((st * h + hi) * w) * u;
+            let d0 = ((st * hp + hi + p) * wp + p) * u;
+            let srow = &src[s0..s0 + w * u];
+            let drow = &mut dst[d0..d0 + w * u];
+            if mode == ArithMode::Precise {
+                drow.copy_from_slice(srow);
+            } else {
+                for (d, &s) in drow.iter_mut().zip(srow) {
+                    *d = mode_cast(s, mode);
+                }
+            }
+        }
+    }
+}
 
 /// Row-major dense f32 tensor.
 #[derive(Debug, Clone, PartialEq)]

@@ -78,15 +78,18 @@ pub fn evaluate_accuracy(
 ) -> Result<f64> {
     let (images, labels) = dataset.validation();
     let n = images.len().min(cfg.max_images).max(1);
+    // Compile one execution plan per candidate assignment and stream the
+    // whole validation prefix through it: weights are baked and buffers
+    // preallocated once per evaluation, not once per image.
+    let mut plan = engine::ExecutionPlan::compile(
+        net,
+        params,
+        modes,
+        ExecConfig { threads: cfg.threads },
+    )?;
     let mut correct = 0usize;
     for (img, &label) in images.iter().zip(labels).take(n) {
-        let logits = engine::run_mapmajor(
-            net,
-            params,
-            img,
-            modes,
-            ExecConfig { threads: cfg.threads },
-        )?;
+        let logits = plan.run(img)?;
         let pred = logits
             .iter()
             .enumerate()

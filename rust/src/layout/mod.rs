@@ -33,18 +33,30 @@ pub fn whm_to_thread_index(w: usize, h: usize, m: usize, u: usize, wout: usize, 
 
 /// `(C, H, W)` row-major → `(Cb, H, W, u)` map-major (channel-padded).
 pub fn nchw_to_mapmajor(src: &[f32], c: usize, h: usize, w: usize, u: usize) -> Vec<f32> {
-    assert_eq!(src.len(), c * h * w, "nchw_to_mapmajor: src len");
     let cb = ceil_div(c, u);
     let mut out = vec![0.0f32; cb * h * w * u];
+    nchw_to_mapmajor_into(src, c, h, w, u, &mut out);
+    out
+}
+
+/// In-place variant of [`nchw_to_mapmajor`] writing into a caller-owned
+/// buffer — the compiled plan's input prologue. Overwrites `dst`
+/// completely (channel-padding lanes are zeroed every call).
+pub fn nchw_to_mapmajor_into(src: &[f32], c: usize, h: usize, w: usize, u: usize, dst: &mut [f32]) {
+    assert_eq!(src.len(), c * h * w, "nchw_to_mapmajor: src len");
+    let cb = ceil_div(c, u);
+    assert_eq!(dst.len(), cb * h * w * u, "nchw_to_mapmajor: dst len");
+    if c % u != 0 {
+        dst.fill(0.0);
+    }
     for ci in 0..c {
         let (stack, lane) = (ci / u, ci % u);
         for hi in 0..h {
             for wi in 0..w {
-                out[((stack * h + hi) * w + wi) * u + lane] = src[(ci * h + hi) * w + wi];
+                dst[((stack * h + hi) * w + wi) * u + lane] = src[(ci * h + hi) * w + wi];
             }
         }
     }
-    out
 }
 
 /// `(Cb, H, W, u)` map-major → `(C, H, W)` row-major, dropping padding.

@@ -25,6 +25,8 @@
 //! | [`model`] | layer IR, shape inference, FLOP counting, model zoo |
 //! | [`layout`] | map-major reordering + the paper's eqs. (3)–(5) |
 //! | [`engine`] | native execution engine (OLP/KLP/FLP, vector modes) |
+//! | [`engine::plan`] | compiled execution plans: buffer arena, baked weights, flat step sequence |
+//! | [`engine::parallel`] | persistent worker pool + thread workload allocation policies |
 //! | [`soc`] | mobile SoC simulator: latency + energy + CNNDroid models |
 //! | [`data`] | synthetic validation dataset IO |
 //! | [`metrics`] | latency histograms, throughput, energy accounting |

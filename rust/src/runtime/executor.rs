@@ -168,26 +168,6 @@ impl LoadedModel {
     }
 }
 
-/// Map-major transform of a batch of conventional NCHW images, padded
-/// up to `batch` with zeros — the serving-side input prologue.
-pub fn batch_to_mapmajor(
-    images: &[&[f32]],
-    c: usize,
-    h: usize,
-    w: usize,
-    u: usize,
-    batch: usize,
-) -> Vec<f32> {
-    assert!(images.len() <= batch, "batch overflow");
-    let per = crate::util::ceil_div(c, u) * h * w * u;
-    let mut out = vec![0.0f32; batch * per];
-    for (i, img) in images.iter().enumerate() {
-        let mm = crate::layout::nchw_to_mapmajor(img, c, h, w, u);
-        out[i * per..(i + 1) * per].copy_from_slice(&mm);
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,7 +267,7 @@ mod tests {
     #[test]
     fn batch_to_mapmajor_pads() {
         let img = vec![1.0f32; 3 * 2 * 2];
-        let out = batch_to_mapmajor(&[&img], 3, 2, 2, 4, 2);
+        let out = crate::runtime::batch_to_mapmajor(&[&img], 3, 2, 2, 4, 2);
         // One stack of u=4 per image: 2*2*4 = 16 floats per image slot.
         assert_eq!(out.len(), 32);
         assert!(out[..16].iter().any(|&v| v != 0.0));

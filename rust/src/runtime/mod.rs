@@ -3,9 +3,55 @@
 //! Python lowers each (net, mode, batch) variant once (`make
 //! artifacts`); this module loads the HLO text and serves inference
 //! with no Python anywhere near the request path.
+//!
+//! The real executor needs the `xla` crate (PJRT CPU plugin), which is
+//! vendored only in full build environments. The default build ships a
+//! stub with the identical API whose `Runtime::new` reports that PJRT
+//! support is absent; enable the `pjrt` cargo feature (with the `xla`
+//! crate wired in via a path/patch dependency) for the real thing.
+//! Everything manifest- and layout-related is pure Rust and always on.
 
+#[cfg(feature = "pjrt")]
+pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 pub mod manifest;
 
-pub use executor::{batch_to_mapmajor, LoadedModel, ParamSource, Runtime};
+pub use executor::{LoadedModel, ParamSource, Runtime};
 pub use manifest::{ArtifactSpec, Manifest, ParamSpec};
+
+/// Map-major transform of a batch of conventional NCHW images, padded
+/// up to `batch` with zeros — the serving-side input prologue.
+pub fn batch_to_mapmajor(
+    images: &[&[f32]],
+    c: usize,
+    h: usize,
+    w: usize,
+    u: usize,
+    batch: usize,
+) -> Vec<f32> {
+    assert!(images.len() <= batch, "batch overflow");
+    let per = crate::util::ceil_div(c, u) * h * w * u;
+    let mut out = vec![0.0f32; batch * per];
+    for (i, img) in images.iter().enumerate() {
+        crate::layout::nchw_to_mapmajor_into(img, c, h, w, u, &mut out[i * per..(i + 1) * per]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_transform_pads_with_zeros() {
+        let (c, h, w, u) = (3, 2, 2, 4);
+        let img: Vec<f32> = (0..c * h * w).map(|i| i as f32 + 1.0).collect();
+        let out = batch_to_mapmajor(&[&img], c, h, w, u, 2);
+        let per = crate::util::ceil_div(c, u) * h * w * u;
+        assert_eq!(out.len(), 2 * per);
+        assert_eq!(&out[..per], &crate::layout::nchw_to_mapmajor(&img, c, h, w, u)[..]);
+        assert!(out[per..].iter().all(|&v| v == 0.0), "pad slot must be zero");
+    }
+}

@@ -307,8 +307,11 @@ fn run_batch(backend: &mut dyn Backend, batch: &[ServeRequest], metrics: &ServeM
 // Backends
 // ---------------------------------------------------------------------------
 
-/// Native-engine backend (no artifacts needed): runs the synthesized
-/// plan on [`crate::engine`]. `Send`, any batch size.
+/// Native-engine backend configuration (no artifacts needed). The
+/// factory compiles one [`crate::engine::ExecutionPlan`] per AOT batch
+/// capacity on the worker thread, so weights (baked per arithmetic
+/// mode) and buffer arenas stay resident across requests — the native
+/// analogue of the PJRT backend's device-resident executables.
 pub struct EngineBackend {
     net: crate::model::Network,
     params: crate::engine::EngineParams,
@@ -337,13 +340,38 @@ impl EngineBackend {
         }
     }
 
-    /// Factory for [`Server::start`].
+    /// Factory for [`Server::start`]: plan compilation happens on the
+    /// worker thread (mirroring the PJRT startup path) and failures
+    /// propagate through the server's startup channel.
     pub fn factory(self) -> BackendFactory {
-        Box::new(move || Ok(Box::new(self) as Box<dyn Backend>))
+        Box::new(move || {
+            let plan = crate::engine::ExecutionPlan::compile(
+                &self.net,
+                &self.params,
+                &self.modes,
+                crate::engine::ExecConfig { threads: self.threads },
+            )?;
+            // One plan (weights Arc-shared, arena private) per batch
+            // capacity; images stream through the matching plan one at a
+            // time until batched plan execution lands (ROADMAP).
+            let plans = self.batches.iter().map(|_| plan.clone()).collect();
+            Ok(Box::new(CompiledEngineBackend {
+                plans,
+                batches: self.batches,
+                input_len: self.input_len,
+            }) as Box<dyn Backend>)
+        })
     }
 }
 
-impl Backend for EngineBackend {
+/// The worker-resident form of [`EngineBackend`]: compiled plans only.
+struct CompiledEngineBackend {
+    plans: Vec<crate::engine::ExecutionPlan>,
+    batches: Vec<usize>,
+    input_len: usize,
+}
+
+impl Backend for CompiledEngineBackend {
     fn input_len(&self) -> usize {
         self.input_len
     }
@@ -352,19 +380,17 @@ impl Backend for EngineBackend {
         &self.batches
     }
 
-    fn infer_batch(&mut self, images: &[&[f32]], _capacity: usize) -> Result<Vec<Vec<f32>>> {
-        images
+    fn infer_batch(&mut self, images: &[&[f32]], capacity: usize) -> Result<Vec<Vec<f32>>> {
+        let idx = self
+            .batches
             .iter()
-            .map(|img| {
-                crate::engine::run_mapmajor(
-                    &self.net,
-                    &self.params,
-                    img,
-                    &self.modes,
-                    crate::engine::ExecConfig { threads: self.threads },
-                )
-            })
-            .collect()
+            .position(|&b| b == capacity)
+            .unwrap_or(self.batches.len().saturating_sub(1));
+        let plan = self
+            .plans
+            .get_mut(idx)
+            .ok_or_else(|| Error::Serve("engine backend has no compiled plans".into()))?;
+        images.iter().map(|img| plan.run(img)).collect()
     }
 }
 

@@ -15,7 +15,9 @@
 
 use std::collections::BTreeMap;
 
-use crate::engine::{self, ArithMode, EngineParams, ExecConfig, ModeAssignment, Parallelism};
+use crate::engine::{
+    self, ArithMode, EngineParams, ExecConfig, ExecutionPlan, ModeAssignment, Parallelism,
+};
 use crate::model::{shapes, Network};
 use crate::soc::{DeviceModel, ProcessingMode};
 use crate::util::error::{Error, Result};
@@ -175,26 +177,46 @@ pub fn finalize(primary: &SynthesisPlan, modes: &ModeAssignment) -> SynthesisPla
     plan
 }
 
-/// Execute a plan on the native engine.
-pub fn execute_plan(
+/// Compile a synthesized plan into an immediately executable
+/// [`ExecutionPlan`]: weights baked per the plan's layer modes, buffer
+/// arena sized, thread-pool chunking fixed — the "synthesized software"
+/// in its runnable form. Honours the plan's thread-workload allocation
+/// when it is uniform (ablation plans lower FLP/KLP executors).
+pub fn compile_plan(
     plan: &SynthesisPlan,
     net: &Network,
     params: &EngineParams,
-    input: &[f32],
-) -> Result<Vec<f32>> {
+) -> Result<ExecutionPlan> {
     if params.u != plan.u {
         return Err(Error::Invalid(format!(
             "plan u={} vs params u={}",
             plan.u, params.u
         )));
     }
-    engine::run_mapmajor(
+    let policy = match plan.layers.first() {
+        Some(first) if plan.layers.iter().all(|l| l.parallelism == first.parallelism) => {
+            first.parallelism
+        }
+        _ => Parallelism::Olp,
+    };
+    ExecutionPlan::compile_policy(
         net,
         params,
-        input,
         &plan.mode_assignment(),
         ExecConfig { threads: plan.threads },
+        policy,
     )
+}
+
+/// Execute a plan on the native engine (compile + single run; hold the
+/// [`compile_plan`] result to amortise compilation across requests).
+pub fn execute_plan(
+    plan: &SynthesisPlan,
+    net: &Network,
+    params: &EngineParams,
+    input: &[f32],
+) -> Result<Vec<f32>> {
+    compile_plan(plan, net, params)?.run(input)
 }
 
 /// Predict the plan's latency on a simulated device. Layers in inexact
@@ -302,6 +324,25 @@ mod tests {
         )
         .unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn compiled_plan_amortises_across_requests() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 5, 4).unwrap();
+        let plan = finalize(
+            &PrimarySynthesizer::new(4, 2).synthesize(&net).unwrap(),
+            &ModeAssignment::uniform(ArithMode::Imprecise),
+        );
+        let mut compiled = compile_plan(&plan, &net, &params).unwrap();
+        let mut rng = Rng::new(2);
+        for _ in 0..3 {
+            let input = rng.normal_vec(net.input.elements());
+            let a = compiled.run(&input).unwrap();
+            let b = execute_plan(&plan, &net, &params, &input).unwrap();
+            assert_eq!(a, b, "resident plan drifted from one-shot execution");
+        }
+        assert_eq!(compiled.runs(), 3);
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Plan-vs-legacy parity: the compiled [`ExecutionPlan`] must be
+//! **bitwise identical** to the pre-plan interpreters across the model
+//! zoo (Fork/concat nets included), every arithmetic mode, and thread
+//! counts {1, 2, 8} — while allocating nothing on the request path and
+//! spawning zero threads once the pool is warm.
+//!
+//! Bitwise equality (not tolerance) is the point: baking weights at
+//! compile time, renting buffers from the arena, and chunking over the
+//! persistent pool must be pure refactorings of the numerics.
+
+use cappuccino::config::parse_cappnet;
+use cappuccino::engine::{
+    pool_threads_spawned, run_baseline_legacy, run_mapmajor_legacy, ArithMode, EngineParams,
+    ExecConfig, ExecutionPlan, ModeAssignment, Parallelism,
+};
+use cappuccino::model::{zoo, Network};
+use cappuccino::testing::{check, close, Gen};
+use cappuccino::util::rng::Rng;
+use cappuccino::Error;
+
+const THREAD_SWEEP: [usize; 3] = [1, 2, 8];
+
+/// Small nets covering every lowering path: linear conv/pool/dense,
+/// LRN, GAP, softmax, and Fork/concat (fire modules).
+fn small_zoo() -> Vec<Network> {
+    let fork_net = parse_cappnet(
+        "net forknet\ninput 3 23 23\nclasses 16\n\
+         conv conv1 m=8 k=3 s=1 p=1\nmaxpool k=2 s=2\n\
+         fire fire2 s1=8 e1=8 e3=8\n\
+         fire fire3 s1=8 e1=16 e3=16\n\
+         conv conv4 m=16 k=1 s=1 p=0\ngap\n",
+    )
+    .unwrap();
+    let lrn_net = parse_cappnet(
+        "net lrnnet\ninput 3 16 16\nclasses 8\n\
+         conv conv1 m=8 k=3 s=1 p=1\nlrn size=5\nmaxpool k=3 s=2\n\
+         conv conv2 m=8 k=3 s=1 p=0\navgpool k=2 s=2\n\
+         flatten\ndense fc1 o=16 relu=1\ndense fc2 o=8 relu=0\nsoftmax\n",
+    )
+    .unwrap();
+    vec![zoo::tinynet(), fork_net, lrn_net]
+}
+
+#[test]
+fn plan_bitwise_matches_legacy_across_zoo_modes_threads() {
+    for (ni, net) in small_zoo().iter().enumerate() {
+        let params = EngineParams::random(net, 100 + ni as u64, 4).unwrap();
+        let mut rng = Rng::new(200 + ni as u64);
+        let input = rng.normal_vec(net.input.elements());
+        for mode in ArithMode::ALL {
+            let modes = ModeAssignment::uniform(mode);
+            for threads in THREAD_SWEEP {
+                let cfg = ExecConfig { threads };
+                let want = run_mapmajor_legacy(net, &params, &input, &modes, cfg).unwrap();
+                let mut plan = ExecutionPlan::compile(net, &params, &modes, cfg).unwrap();
+                let got = plan.run(&input).unwrap();
+                assert_eq!(
+                    got, want,
+                    "{}: mode={mode} threads={threads} diverged from legacy",
+                    net.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn baseline_plan_bitwise_matches_legacy() {
+    for (ni, net) in small_zoo().iter().enumerate() {
+        let params = EngineParams::random(net, 300 + ni as u64, 4).unwrap();
+        let mut rng = Rng::new(400 + ni as u64);
+        let input = rng.normal_vec(net.input.elements());
+        let want = run_baseline_legacy(net, &params, &input).unwrap();
+        let mut plan = ExecutionPlan::compile_baseline(net, &params).unwrap();
+        let got = plan.run(&input).unwrap();
+        assert_eq!(got, want, "{}: baseline plan diverged", net.name);
+    }
+}
+
+#[test]
+fn resident_plan_stays_bitwise_identical_across_requests() {
+    // One plan, many requests: the arena must leak no state between
+    // inferences, matching a fresh legacy run for every input.
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 500, 4).unwrap();
+    let modes = ModeAssignment::uniform(ArithMode::Imprecise)
+        .with("conv2", ArithMode::Precise)
+        .with("fc5", ArithMode::Relaxed);
+    let cfg = ExecConfig { threads: 2 };
+    let mut plan = ExecutionPlan::compile(&net, &params, &modes, cfg).unwrap();
+    let mut rng = Rng::new(501);
+    for i in 0..12 {
+        let input = rng.normal_vec(net.input.elements());
+        let want = run_mapmajor_legacy(&net, &params, &input, &modes, cfg).unwrap();
+        let got = plan.run(&input).unwrap();
+        assert_eq!(got, want, "request {i} diverged");
+    }
+    assert_eq!(plan.runs(), 12);
+}
+
+#[test]
+fn prop_random_mode_assignments_bitwise_match() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 600, 4).unwrap();
+    let layer_names = net.param_layer_names();
+    check("plan == legacy under random mode maps", 12, 0xB17A11, |g: &mut Gen| {
+        let mut modes = ModeAssignment::uniform(g.choose(&ArithMode::ALL));
+        for name in &layer_names {
+            if g.bool() {
+                modes = modes.with(name.clone(), g.choose(&ArithMode::ALL));
+            }
+        }
+        let threads = g.choose(&THREAD_SWEEP);
+        let cfg = ExecConfig { threads };
+        let input = g.normal_vec(net.input.elements());
+        let want = run_mapmajor_legacy(&net, &params, &input, &modes, cfg)
+            .map_err(|e| e.to_string())?;
+        let got = ExecutionPlan::compile(&net, &params, &modes, cfg)
+            .map_err(|e| e.to_string())?
+            .run(&input)
+            .map_err(|e| e.to_string())?;
+        if got != want {
+            return Err(format!("diverged (threads={threads})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn squeezenet_compiles_and_matches_legacy() {
+    // Full-size fork-heavy zoo net: one imprecise inference, plan vs
+    // legacy, bitwise.
+    let net = zoo::squeezenet();
+    let params = EngineParams::random(&net, 700, 4).unwrap();
+    let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+    let cfg = ExecConfig { threads: 8 };
+    let mut rng = Rng::new(701);
+    let input = rng.normal_vec(net.input.elements());
+    let want = run_mapmajor_legacy(&net, &params, &input, &modes, cfg).unwrap();
+    let mut plan = ExecutionPlan::compile(&net, &params, &modes, cfg).unwrap();
+    let got = plan.run(&input).unwrap();
+    assert_eq!(got, want, "squeezenet plan diverged from legacy");
+    // Steady state: request-path heap traffic is the logits vector only.
+    assert_eq!(plan.alloc_bytes_per_run(), (4 * got.len()) as f64);
+}
+
+#[test]
+fn googlenet_plan_compiles() {
+    // Compile-only coverage for the largest zoo net (running it in a
+    // debug-mode test is wasteful; lowering exercises every layer kind).
+    let net = zoo::googlenet();
+    let params = EngineParams::random(&net, 800, 4).unwrap();
+    let plan = ExecutionPlan::compile(
+        &net,
+        &params,
+        &ModeAssignment::uniform(ArithMode::Imprecise),
+        ExecConfig { threads: 4 },
+    )
+    .unwrap();
+    assert!(plan.step_count() > 50, "googlenet lowered to {} steps", plan.step_count());
+    assert!(plan.arena_bytes() > 0 && plan.baked_param_bytes() > 0);
+}
+
+#[test]
+fn warm_pool_spawns_no_threads_per_inference() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 900, 4).unwrap();
+    let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+    let cfg = ExecConfig { threads: 8 };
+    let mut plan = ExecutionPlan::compile(&net, &params, &modes, cfg).unwrap();
+    let mut rng = Rng::new(901);
+    let input = rng.normal_vec(net.input.elements());
+    plan.run(&input).unwrap(); // warm the global pool
+    let warm = pool_threads_spawned();
+    for _ in 0..16 {
+        plan.run(&input).unwrap();
+    }
+    assert_eq!(
+        pool_threads_spawned(),
+        warm,
+        "inference spawned OS threads after the pool was warm"
+    );
+}
+
+#[test]
+fn flp_klp_policy_plans_track_legacy_numerics() {
+    // Network-level FLP/KLP executors (reduction buffers in the arena)
+    // agree with the scalar baseline within reduction-order tolerance.
+    let net = parse_cappnet(
+        "net mini\ninput 3 14 14\nclasses 8\n\
+         conv c1 m=8 k=3 s=1 p=1\nmaxpool k=2 s=2\n\
+         conv c2 m=8 k=3 s=1 p=0\ngap\n",
+    )
+    .unwrap();
+    let params = EngineParams::random(&net, 1000, 4).unwrap();
+    let mut rng = Rng::new(1001);
+    let input = rng.normal_vec(net.input.elements());
+    let want = run_baseline_legacy(&net, &params, &input).unwrap();
+    for policy in [Parallelism::Flp, Parallelism::Klp] {
+        for threads in THREAD_SWEEP {
+            let mut plan = ExecutionPlan::compile_policy(
+                &net,
+                &params,
+                &ModeAssignment::uniform(ArithMode::Precise),
+                ExecConfig { threads },
+                policy,
+            )
+            .unwrap();
+            let got = plan.run(&input).unwrap();
+            close(&got, &want, 1e-4).unwrap_or_else(|e| {
+                panic!("{policy} threads={threads}: {e}");
+            });
+        }
+    }
+}
+
+#[test]
+fn oversized_window_is_shape_error_in_both_executors() {
+    let net = parse_cappnet(
+        "net bad\ninput 3 4 4\nclasses 4\nconv c1 m=4 k=7 s=1 p=0\ngap\n",
+    )
+    .unwrap();
+    // Shape inference guards both parameter construction and plan
+    // compilation; whichever trips first must be Error::Shape.
+    match EngineParams::random(&net, 0, 4) {
+        Err(e) => assert!(matches!(e, Error::Shape(_)), "unexpected error {e}"),
+        Ok(params) => {
+            let r = ExecutionPlan::compile(
+                &net,
+                &params,
+                &ModeAssignment::uniform(ArithMode::Precise),
+                ExecConfig::default(),
+            );
+            assert!(matches!(r, Err(Error::Shape(_))));
+            let r = ExecutionPlan::compile_baseline(&net, &params);
+            assert!(matches!(r, Err(Error::Shape(_))));
+        }
+    }
+}

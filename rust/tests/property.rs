@@ -167,7 +167,10 @@ fn prop_imprecise_error_bounded() {
         let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
         let b_mm = layout::bias_to_mapmajor(&bias, u);
         let precise = conv_mm(&mm, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Precise, 1);
-        let imprecise = conv_mm(&mm, &w_mm, &b_mm, m, k, s, p, false, ArithMode::Imprecise, 1);
+        // Production contract: weights baked at compile time, activations
+        // cast by the kernel — both operands rounded.
+        let w_baked = cappuccino::engine::cast_weights(&w_mm, ArithMode::Imprecise);
+        let imprecise = conv_mm(&mm, &w_baked, &b_mm, m, k, s, p, false, ArithMode::Imprecise, 1);
         // Scale: the reduction length bounds worst-case error growth.
         let terms = (c * k * k) as f32;
         let tol = 0.01 * terms.sqrt().max(1.0);
