@@ -12,7 +12,7 @@
 use cappuccino::bench::{bench, ms, BenchConfig, Table};
 use cappuccino::config::parse_cappnet;
 use cappuccino::engine::{
-    run_baseline_legacy, ArithMode, EngineParams, ExecConfig, ExecutionPlan, ModeAssignment,
+    run_baseline_legacy, ArithMode, EngineParams, ModeAssignment, PlanBuilder,
 };
 use cappuccino::layout;
 use cappuccino::model::Network;
@@ -83,13 +83,10 @@ fn main() {
 
         // Cappuccino pipeline: map-major end to end, zero reorders.
         // Compiled once — the wrapper would re-bake weights per call.
-        let mut plan = ExecutionPlan::compile(
-            &net,
-            &params,
-            &ModeAssignment::uniform(ArithMode::Imprecise),
-            ExecConfig { threads: 1 },
-        )
-        .unwrap();
+        let mut plan = PlanBuilder::new(&net, &params)
+            .modes(&ModeAssignment::uniform(ArithMode::Imprecise))
+            .build()
+            .unwrap();
         let fused = bench("fused", cfg, || {
             std::hint::black_box(plan.run(&input).unwrap());
         });

@@ -15,8 +15,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use cappuccino::bench::{bench, ms, BenchConfig, Table};
 use cappuccino::engine::{
-    cast_weights, conv_mm, ArithMode, EngineParams, ExecConfig, ExecutionPlan, MapTensor,
-    ModeAssignment,
+    cast_weights, conv_mm, ArithMode, EngineParams, ExecConfig, MapTensor, ModeAssignment,
+    PlanBuilder,
 };
 use cappuccino::layout;
 use cappuccino::model::zoo;
@@ -126,7 +126,11 @@ fn main() {
             );
         });
 
-        let mut plan = ExecutionPlan::compile(&net, &params, &modes, exec).unwrap();
+        let mut plan = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .config(exec)
+            .build()
+            .unwrap();
         let meas = bench(format!("{}-plan", net.name), cfg, || {
             std::hint::black_box(plan.run(&input).unwrap());
         });
@@ -168,6 +172,90 @@ fn main() {
             plan_alloc * 10 < legacy_alloc,
             "arena win not visible: plan {plan_alloc} B vs legacy {legacy_alloc} B"
         );
+    }
+
+    // -- Batched execution: looped single-image vs one-walk batch ---------
+    //
+    // The batch-first API's claim in numbers: a dynamic batch of B
+    // images as ONE run_batch plan walk (arena B x, one parallel region
+    // per layer spanning B x alpha items) vs the old per-image loop.
+    // Both paths use the plan's own AllocCounter for bytes/image.
+    let mut batch_table = Table::new(&[
+        "network",
+        "B",
+        "path",
+        "time/img(ms)",
+        "imgs/s",
+        "alloc/img",
+        "speedup",
+    ]);
+    {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 7, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let threads = 4;
+        let mut rng = Rng::new(0x8A7);
+        let mut b8_speedup = 0.0f64;
+        for b in [1usize, 4, 8] {
+            let inputs: Vec<Vec<f32>> =
+                (0..b).map(|_| rng.normal_vec(net.input.elements())).collect();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+            let mut looped_plan = PlanBuilder::new(&net, &params)
+                .modes(&modes)
+                .threads(threads)
+                .build()
+                .unwrap();
+            let looped = bench(format!("b{b}-looped"), cfg, || {
+                for img in &inputs {
+                    std::hint::black_box(looped_plan.run(img).unwrap());
+                }
+            });
+
+            let mut batched_plan = PlanBuilder::new(&net, &params)
+                .modes(&modes)
+                .threads(threads)
+                .batch(b)
+                .build()
+                .unwrap();
+            let batched = bench(format!("b{b}-batched"), cfg, || {
+                std::hint::black_box(batched_plan.run_batch(&refs).unwrap());
+            });
+
+            let speedup = looped.mean_ms / batched.mean_ms;
+            if b == 8 {
+                b8_speedup = speedup;
+            }
+            batch_table.row(&[
+                net.name.clone(),
+                b.to_string(),
+                "looped-single".into(),
+                ms(looped.mean_ms / b as f64),
+                format!("{:.0}", b as f64 / (looped.mean_ms / 1e3)),
+                format!("{:.0} B", looped_plan.alloc_bytes_per_run()),
+                "1.00x".into(),
+            ]);
+            batch_table.row(&[
+                net.name.clone(),
+                b.to_string(),
+                "one-walk-batch".into(),
+                ms(batched.mean_ms / b as f64),
+                format!("{:.0}", b as f64 / (batched.mean_ms / 1e3)),
+                format!("{:.0} B", batched_plan.alloc_bytes_per_run()),
+                format!("{speedup:.2}x"),
+            ]);
+        }
+        println!("\n# Batched execution — looped vs one plan walk\n");
+        batch_table.print();
+        // Timing comparison, not a hard gate: a loaded machine can make
+        // any single measurement flaky, and a panic here would kill the
+        // PJRT section below. Flag regressions loudly instead.
+        if b8_speedup <= 0.90 {
+            eprintln!(
+                "WARNING: batched B=8 throughput below looped single-image \
+                 ({b8_speedup:.2}x) — expected >= 1.0x on an idle machine"
+            );
+        }
     }
 
     // -- PJRT path (needs artifacts) --------------------------------------

@@ -24,7 +24,7 @@
 //! numerics match the L1 kernel.
 
 use crate::engine::mode::{mode_cast, ArithMode};
-use crate::engine::parallel::{chunk_ranges, parallel_reduce};
+use crate::engine::parallel::{parallel_for_slices, parallel_reduce};
 use crate::engine::tensor::MapTensor;
 use crate::util::ceil_div;
 use std::ops::Range;
@@ -189,18 +189,43 @@ pub fn conv_mm(
     };
 
     let mut out = MapTensor::zeros(m, ho, wo, u);
-    conv_mm_core(x, hp, wp, cb, u, w_mm, b_mm, &mut out.data, mb, k, s, ho, wo, relu, threads);
+    conv_mm_core(
+        x,
+        cb * hp * wp * u,
+        hp,
+        wp,
+        cb,
+        u,
+        w_mm,
+        b_mm,
+        &mut out.data,
+        mb,
+        k,
+        s,
+        ho,
+        wo,
+        relu,
+        threads,
+        1,
+    );
     out
 }
 
 /// Map-major conv inner engine: pre-padded, pre-cast input in; output
-/// written into a caller-owned buffer. Chunked over the persistent
-/// thread pool; each chunk owns a disjoint contiguous slice of the
-/// output, so writes need zero synchronisation — the zero-overhead
-/// map-major store of section IV.B.1.
+/// written into a caller-owned buffer. Batch-first: `x` holds `rows`
+/// images at stride `x_stride` (each `cb * hp * wp * u` long), the
+/// output is the matching `rows * mb * ho * wo * u` contiguous block,
+/// and the whole `rows x mb x ho` item space is chunked over the
+/// persistent thread pool in **one** parallel region — dynamic batches
+/// amortise region startup across every image instead of paying it per
+/// image. Each chunk owns a disjoint contiguous slice of the output, so
+/// writes need zero synchronisation — the zero-overhead map-major store
+/// of section IV.B.1. Per-item numerics are independent of `rows` and
+/// chunking (bitwise batch parity).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn conv_mm_core(
     x: &[f32],
+    x_stride: usize,
     hp: usize,
     wp: usize,
     cb: usize,
@@ -215,44 +240,42 @@ pub(crate) fn conv_mm_core(
     wo: usize,
     relu: bool,
     threads: usize,
+    rows: usize,
 ) {
     let out_row_len = wo * u;
-    let items = mb * ho;
-    debug_assert_eq!(out.len(), items * out_row_len, "conv_mm_core: out len");
+    let per_image = mb * ho;
+    let items = rows * per_image;
+    let x_len = cb * hp * wp * u;
+    debug_assert!(x_stride >= x_len, "conv_mm_core: x stride");
+    debug_assert!(out.len() >= items * out_row_len, "conv_mm_core: out len");
+    let out = &mut out[..items * out_row_len];
     if threads <= 1 || items <= 1 {
         // Inline path: zero dispatch, zero allocation (the compiled
         // plan's steady-state contract at threads = 1).
         for item in 0..items {
-            let ms = item / ho;
+            let xi = &x[(item / per_image) * x_stride..][..x_len];
+            let ms = (item % per_image) / ho;
             let oh = item % ho;
             let row = &mut out[item * out_row_len..(item + 1) * out_row_len];
-            conv_mm_row(x, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu);
+            conv_mm_row(xi, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu);
         }
         return;
     }
-    let ranges = chunk_ranges(items, threads);
-    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
-    let mut rest = out;
-    for r in &ranges {
-        let (head, tail) = rest.split_at_mut(r.len() * out_row_len);
-        slices.push(head);
-        rest = tail;
-    }
-    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
-        .into_iter()
-        .zip(slices)
-        .map(|(range, slice)| {
-            Box::new(move || {
-                for (j, item) in range.enumerate() {
-                    let ms = item / ho; // output stack
-                    let oh = item % ho; // output row
-                    let row = &mut slice[j * out_row_len..(j + 1) * out_row_len];
-                    conv_mm_row(x, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu);
-                }
-            }) as Box<dyn FnOnce() + Send + '_>
-        })
-        .collect();
-    crate::engine::parallel::global_pool().scope(tasks);
+    parallel_for_slices(
+        items,
+        threads,
+        out_row_len,
+        out,
+        &|range: Range<usize>, slice: &mut [f32]| {
+            for (j, item) in range.enumerate() {
+                let xi = &x[(item / per_image) * x_stride..][..x_len]; // batch lane
+                let ms = (item % per_image) / ho; // output stack
+                let oh = item % ho; // output row
+                let row = &mut slice[j * out_row_len..(j + 1) * out_row_len];
+                conv_mm_row(xi, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu);
+            }
+        },
+    );
 }
 
 /// Compute one output row (stack `ms`, row `oh`): the per-thread OLP

@@ -6,10 +6,13 @@
 //! arithmetic modes (section IV.C), plus the baseline and the rejected
 //! KLP/FLP policies for the ablation benches.
 //!
-//! The steady-state entry point is [`plan::ExecutionPlan`]: compile
-//! once (shape inference, weight baking, buffer-arena sizing), then
-//! execute per request with zero allocation and zero thread spawns —
-//! all parallel sections run on the persistent [`parallel`] pool.
+//! The steady-state entry point is [`plan::ExecutionPlan`], built via
+//! [`plan::PlanBuilder`]: compile once (shape inference, weight baking,
+//! buffer-arena sizing for a batch capacity `B`), then execute whole
+//! dynamic batches with [`plan::ExecutionPlan::run_batch`] — one plan
+//! walk per batch, zero steady-state allocation and zero thread spawns
+//! (all parallel sections run on the persistent [`parallel`] pool).
+//! Single-image `run` is just `B = 1`.
 
 pub mod conv;
 pub mod mode;
@@ -26,5 +29,5 @@ pub use network::{
     ExecConfig, ModeAssignment,
 };
 pub use parallel::{global_pool, pool_threads_spawned, Parallelism, ThreadPool};
-pub use plan::ExecutionPlan;
+pub use plan::{ExecutionPlan, PlanBuilder};
 pub use tensor::{MapTensor, Tensor};

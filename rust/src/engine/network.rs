@@ -28,7 +28,7 @@ use crate::config::modelfile::ModelFile;
 use crate::engine::conv::{cast_weights, conv_mm, conv_nchw_scalar};
 use crate::engine::mode::ArithMode;
 use crate::engine::ops;
-use crate::engine::plan::ExecutionPlan;
+use crate::engine::plan::PlanBuilder;
 use crate::engine::tensor::MapTensor;
 use crate::layout;
 use crate::model::{shapes, Layer, LayerOp, Network, TensorShape};
@@ -180,9 +180,10 @@ impl Default for ExecConfig {
 }
 
 /// Optimised executor: map-major, OLP-threaded, per-layer modes.
-/// Compiles an [`ExecutionPlan`] and runs it once — a convenience for
-/// one-shot callers; steady-state callers should compile once and call
-/// [`ExecutionPlan::run`] per request.
+/// Builds an execution plan (via [`PlanBuilder`]) and runs it once — a
+/// convenience for one-shot callers; steady-state callers should build
+/// once and call [`crate::engine::ExecutionPlan::run_batch`] per
+/// drained batch.
 pub fn run_mapmajor(
     net: &Network,
     params: &EngineParams,
@@ -190,14 +191,21 @@ pub fn run_mapmajor(
     modes: &ModeAssignment,
     cfg: ExecConfig,
 ) -> Result<Vec<f32>> {
-    ExecutionPlan::compile(net, params, modes, cfg)?.run(input)
+    PlanBuilder::new(net, params)
+        .modes(modes)
+        .config(cfg)
+        .build()?
+        .run(input)
 }
 
 /// Baseline executor: single-threaded scalar row-major, precise
 /// arithmetic — the Table I "Baseline" program, functionally. Plan-
 /// compiled per call, like [`run_mapmajor`].
 pub fn run_baseline(net: &Network, params: &EngineParams, input: &[f32]) -> Result<Vec<f32>> {
-    ExecutionPlan::compile_baseline(net, params)?.run(input)
+    PlanBuilder::new(net, params)
+        .baseline()
+        .build()?
+        .run(input)
 }
 
 // ---------------------------------------------------------------------------
@@ -207,7 +215,8 @@ pub fn run_baseline(net: &Network, params: &EngineParams, input: &[f32]) -> Resu
 /// The pre-plan map-major interpreter: walks the layer tree per call,
 /// allocates every activation, and re-casts weights for every inexact
 /// layer on every inference. Kept as the parity oracle for
-/// [`ExecutionPlan`] and the `engine_hotpath` legacy-vs-plan bench.
+/// [`crate::engine::ExecutionPlan`] and the `engine_hotpath`
+/// legacy-vs-plan bench.
 pub fn run_mapmajor_legacy(
     net: &Network,
     params: &EngineParams,
@@ -330,7 +339,7 @@ fn run_flat_layer(
 }
 
 /// The pre-plan baseline interpreter (single-threaded scalar row-major,
-/// precise). Parity oracle for [`ExecutionPlan::compile_baseline`].
+/// precise). Parity oracle for [`PlanBuilder::baseline`] plans.
 pub fn run_baseline_legacy(
     net: &Network,
     params: &EngineParams,

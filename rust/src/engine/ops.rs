@@ -231,6 +231,47 @@ pub(crate) fn dense_into(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, 
     }
 }
 
+/// Batched dense: `rows` pre-cast activation vectors (`x_stride` apart,
+/// each `i` long) against one baked weight matrix, output rows written
+/// contiguously (`o` apart). Rows are chunked over the persistent pool
+/// in **one** parallel region — per-row results are computed by the
+/// exact same [`dense_into`] loop, so batching is bitwise invisible.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dense_rows_into(
+    xs: &[f32],
+    x_stride: usize,
+    i: usize,
+    w: &[f32],
+    b: &[f32],
+    o: usize,
+    relu: bool,
+    out: &mut [f32],
+    rows: usize,
+    threads: usize,
+) {
+    debug_assert!(xs.len() >= (rows.saturating_sub(1)) * x_stride + i);
+    debug_assert!(out.len() >= rows * o);
+    if threads <= 1 || rows <= 1 {
+        for r in 0..rows {
+            let x = &xs[r * x_stride..][..i];
+            dense_into(x, w, b, o, relu, &mut out[r * o..(r + 1) * o]);
+        }
+        return;
+    }
+    crate::engine::parallel::parallel_for_slices(
+        rows,
+        threads,
+        o,
+        &mut out[..rows * o],
+        &|range: std::ops::Range<usize>, slice: &mut [f32]| {
+            for (j, r) in range.enumerate() {
+                let x = &xs[r * x_stride..][..i];
+                dense_into(x, w, b, o, relu, &mut slice[j * o..(j + 1) * o]);
+            }
+        },
+    );
+}
+
 /// In-place ReLU.
 pub fn relu_inplace(x: &mut [f32]) {
     for v in x {

@@ -25,6 +25,11 @@
 //! of an OS thread spawn. The original scoped-spawn implementations are
 //! kept as [`parallel_for_spawn`] / [`parallel_reduce_spawn`] purely as
 //! the ablation reference (what every conv layer used to pay).
+//!
+//! Batch-first plans stretch each region instead of adding regions: a
+//! `run_batch` of `B` images submits **one** task batch per conv layer
+//! spanning the whole `B x alpha` item space, so the enqueue + wakeup
+//! cost above is paid once per layer per *batch*, not per image.
 
 use std::collections::VecDeque;
 use std::ops::Range;
@@ -297,6 +302,47 @@ where
         .into_iter()
         .enumerate()
         .map(|(i, r)| Box::new(move || f(i, r)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    global_pool().scope(tasks);
+}
+
+/// Split `items` into at most `n_threads` contiguous ranges, hand each
+/// range its disjoint `range.len() * row_len` slice of `out`, and run
+/// `f(range, slice)` on the persistent [`global_pool`] in **one**
+/// parallel region (inline when a single chunk results). This is the
+/// writer side of the batched conv/dense kernels: every work item owns
+/// one contiguous `row_len` output row, so disjoint chunk slices need
+/// zero synchronisation.
+pub(crate) fn parallel_for_slices<F>(
+    items: usize,
+    n_threads: usize,
+    row_len: usize,
+    out: &mut [f32],
+    f: &F,
+) where
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
+{
+    let ranges = chunk_ranges(items, n_threads.max(1));
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            let len = r.len() * row_len;
+            f(r, &mut out[..len]);
+        }
+        return;
+    }
+    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+    let mut rest = out;
+    for r in &ranges {
+        let (head, tail) = rest.split_at_mut(r.len() * row_len);
+        slices.push(head);
+        rest = tail;
+    }
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+        .into_iter()
+        .zip(slices)
+        .map(|(range, slice)| {
+            Box::new(move || f(range, slice)) as Box<dyn FnOnce() + Send + '_>
+        })
         .collect();
     global_pool().scope(tasks);
 }

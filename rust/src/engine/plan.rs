@@ -1,10 +1,13 @@
-//! Compiled execution plans — compile once, execute many.
+//! Compiled execution plans — compile once, execute many, **batch
+//! first**.
 //!
 //! Cappuccino's premise is that inference software is *synthesized*
 //! ahead of time and then runs with no interpretive or allocation
 //! overhead on the request path. [`ExecutionPlan`] is that executable
-//! form for the native engine: given a network, compiled parameters, a
-//! per-layer mode assignment and an execution config, `compile`:
+//! form for the native engine, and [`PlanBuilder`] is the one way to
+//! make one: given a network, compiled parameters, a per-layer mode
+//! assignment, an execution config, an executor family and a batch
+//! capacity `B`, `build`:
 //!
 //! 1. runs shape inference **once** (every window/shape violation
 //!    surfaces here as `Error::Shape`, never as a hot-path underflow),
@@ -12,26 +15,45 @@
 //!    register file of activation buffers,
 //! 3. **bakes** every layer's weights into its arithmetic mode's domain
 //!    (the per-call weight cast the legacy executor paid is gone), and
-//! 4. sizes a buffer arena — per-step outputs, one shared pad/cast
-//!    scratch, and per-thread FLP/KLP reduction buffers — that is
-//!    allocated once and reused across every inference.
+//! 4. sizes a buffer arena — per-step outputs, pad/cast scratch, and
+//!    per-thread FLP/KLP reduction buffers — with every activation
+//!    register and scratch row sized `B x`, allocated once and reused
+//!    across every batch.
 //!
-//! `run` then walks the steps with zero steady-state allocation — at
-//! `threads = 1` the returned logits vector is the only per-inference
-//! heap traffic (metered through [`crate::metrics::AllocCounter`]);
-//! multi-threaded runs additionally pay a handful of small dispatch
+//! The execution entry point is [`ExecutionPlan::run_batch`] (plus
+//! [`ExecutionPlan::run_batch_into`] for caller-owned output rows): a
+//! dynamic batch of `len <= B` images executes as **one** walk of the
+//! step sequence. The batch loop is lowered *into* the steps — a conv
+//! layer's OLP `parallel_for` chunks span the whole `B x alpha` item
+//! space in a single parallel region, so region startup and dispatch
+//! are paid once per layer per batch instead of once per layer per
+//! image. Only live rows are walked: a partial batch never computes
+//! (or leaks) padded lanes. Per-row numerics are independent of the
+//! batch size and chunking, so `run_batch` of `N` images is **bitwise
+//! identical** to `N` single-image runs (`rust/tests/batch_parity.rs`).
+//! [`ExecutionPlan::run`] is the thin `B = 1` wrapper.
+//!
+//! `run_batch` is steady-state allocation-free apart from the returned
+//! logits rows (metered through [`crate::metrics::AllocCounter`]);
+//! multi-threaded walks additionally pay a handful of small dispatch
 //! boxes per parallel section — and zero thread spawns (all parallel
 //! sections run on the persistent [`crate::engine::parallel`] pool).
 //!
-//! Three lowering families share the machinery:
+//! Three lowering families share the machinery, selected on the
+//! builder:
 //!
-//! * [`ExecutionPlan::compile`] — map-major + OLP `conv_mm`: the
+//! * [`PlanBuilder::new`] (default) — map-major + OLP `conv_mm`: the
 //!   synthesized program (what [`crate::engine::run_mapmajor`] wraps).
-//! * [`ExecutionPlan::compile_baseline`] — row-major scalar, precise:
-//!   the Table I baseline (what [`crate::engine::run_baseline`] wraps).
-//! * [`ExecutionPlan::compile_policy`] — FLP/KLP network-level plans
-//!   for the section IV.A ablation, with their per-thread partial
-//!   buffers preallocated in the arena.
+//! * [`PlanBuilder::baseline`] — row-major scalar, precise: the
+//!   Table I baseline (what [`crate::engine::run_baseline`] wraps).
+//! * [`PlanBuilder::policy`] — FLP/KLP network-level plans for the
+//!   section IV.A ablation, with their per-thread partial buffers
+//!   preallocated in the arena.
+//!
+//! Serve backends hold one plan per AOT batch capacity;
+//! [`ExecutionPlan::with_capacity`] derives a sibling plan with a
+//! different `B` that **shares the baked weights** (`Arc`) and only
+//! re-sizes the arena — capacities never duplicate parameters.
 
 use std::ops::Range;
 use std::sync::Arc;
@@ -64,7 +86,8 @@ enum NchwConv {
     Klp,
 }
 
-/// Static shape of one activation register.
+/// Static shape of one activation register (one batch row; the arena
+/// allocates `B` rows per register).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum SlotShape {
     /// Map-major `(ceil(c/u), h, w, u)` data; `u = 1` is row-major NCHW.
@@ -96,11 +119,12 @@ fn flat_of(s: SlotShape) -> usize {
 }
 
 /// One lowered instruction. Weights are baked (mode-cast at compile
-/// time) and shared via `Arc` so cloning a plan (one arena per serve
-/// batch capacity) does not duplicate parameters.
+/// time) and shared via `Arc` so cloning a plan — or deriving a sibling
+/// capacity with [`ExecutionPlan::with_capacity`] — does not duplicate
+/// parameters.
 #[derive(Clone)]
 enum Step {
-    /// Prologue: conventional NCHW request data into the input register.
+    /// Prologue: conventional NCHW request rows into the input register.
     Input { dst: usize },
     ConvMm {
         src: usize,
@@ -142,10 +166,9 @@ enum Step {
     Softmax { src: usize, dst: usize },
 }
 
-/// The preallocated buffer arena: activation registers, one shared
-/// pad/cast scratch sized to the largest conv/pool working set, and
-/// per-thread FLP/KLP reduction buffers. Compile-time sized, reused
-/// across every inference.
+/// The preallocated buffer arena: activation registers and pad/cast
+/// scratch sized `B x` one row, plus per-thread FLP/KLP reduction
+/// buffers. Compile-time sized, reused across every batch.
 #[derive(Clone)]
 struct Arena {
     bufs: Vec<Vec<f32>>,
@@ -154,6 +177,20 @@ struct Arena {
 }
 
 impl Arena {
+    fn sized(
+        slots: &[SlotShape],
+        scratch_row: usize,
+        reduce_len: usize,
+        threads: usize,
+        batch: usize,
+    ) -> Arena {
+        let bufs = slots.iter().map(|s| vec![0.0f32; batch * s.len()]).collect();
+        let scratch = vec![0.0f32; batch * scratch_row];
+        let n_reduce = if reduce_len > 0 { threads } else { 0 };
+        let reduce = (0..n_reduce).map(|_| vec![0.0f32; reduce_len]).collect();
+        Arena { bufs, scratch, reduce }
+    }
+
     fn bytes(&self) -> usize {
         let elems: usize = self.bufs.iter().map(|b| b.len()).sum::<usize>()
             + self.scratch.len()
@@ -162,18 +199,139 @@ impl Arena {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Fluent constructor for [`ExecutionPlan`] — the single entry point to
+/// plan compilation (it replaced the old `compile` / `compile_baseline`
+/// / `compile_policy` trio).
+///
+/// Defaults: map-major OLP family, all-precise modes, 1 thread, batch
+/// capacity 1.
+///
+/// ```
+/// use cappuccino::engine::{ArithMode, EngineParams, ModeAssignment, PlanBuilder};
+/// use cappuccino::model::zoo;
+///
+/// let net = zoo::tinynet();
+/// let params = EngineParams::random(&net, 1, 4).unwrap();
+/// let mut plan = PlanBuilder::new(&net, &params)
+///     .modes(&ModeAssignment::uniform(ArithMode::Imprecise))
+///     .threads(2)
+///     .batch(4)
+///     .build()
+///     .unwrap();
+/// let img = vec![0.0f32; plan.input_len()];
+/// let rows = plan.run_batch(&[&img[..], &img[..], &img[..]]).unwrap(); // 3 live rows
+/// assert_eq!(rows.len(), 3);
+/// ```
+pub struct PlanBuilder<'a> {
+    net: &'a Network,
+    params: &'a EngineParams,
+    modes: ModeAssignment,
+    cfg: ExecConfig,
+    family: Family,
+    batch: usize,
+}
+
+impl<'a> PlanBuilder<'a> {
+    /// Start a builder for the map-major OLP family (the synthesized
+    /// program), all layers precise, 1 thread, batch capacity 1.
+    pub fn new(net: &'a Network, params: &'a EngineParams) -> PlanBuilder<'a> {
+        PlanBuilder {
+            net,
+            params,
+            modes: ModeAssignment::uniform(ArithMode::Precise),
+            cfg: ExecConfig::default(),
+            family: Family::MapMajor,
+            batch: 1,
+        }
+    }
+
+    /// Per-layer arithmetic mode assignment (section IV.C).
+    pub fn modes(mut self, modes: &ModeAssignment) -> Self {
+        self.modes = modes.clone();
+        self
+    }
+
+    /// Full execution config (currently: thread count).
+    pub fn config(mut self, cfg: ExecConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Pool-chunk parallelism per parallel region.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Batch capacity `B`: arena registers are sized `B x` and
+    /// [`ExecutionPlan::run_batch`] accepts up to `B` images per walk.
+    pub fn batch(mut self, capacity: usize) -> Self {
+        self.batch = capacity.max(1);
+        self
+    }
+
+    /// Thread-workload-allocation family: OLP lowers map-major (the
+    /// default), FLP/KLP lower row-major with per-thread reduction
+    /// buffers in the arena — the section IV.A ablation executors.
+    pub fn policy(mut self, policy: Parallelism) -> Self {
+        self.family = match policy {
+            Parallelism::Olp => Family::MapMajor,
+            Parallelism::Flp => Family::Nchw(NchwConv::Flp),
+            Parallelism::Klp => Family::Nchw(NchwConv::Klp),
+        };
+        self
+    }
+
+    /// The single-threaded scalar row-major baseline (Table I's
+    /// "single-threaded Java" program, functionally). Selects the
+    /// scalar family; [`PlanBuilder::build`] then pins precise modes
+    /// and one thread for that family, so `.modes(..)`/`.threads(..)`
+    /// in any order cannot subvert the baseline's contract. (Like any
+    /// family selection, a *later* [`PlanBuilder::policy`] call
+    /// supersedes it — last family choice wins.)
+    pub fn baseline(mut self) -> Self {
+        self.family = Family::Nchw(NchwConv::Scalar);
+        self
+    }
+
+    /// Compile: shape inference, lowering, weight baking, arena sizing.
+    pub fn build(self) -> Result<ExecutionPlan> {
+        // The scalar-baseline family pins precise arithmetic and one
+        // thread regardless of the order builder methods were called in.
+        let (modes, cfg) = if self.family == Family::Nchw(NchwConv::Scalar) {
+            (
+                ModeAssignment::uniform(ArithMode::Precise),
+                ExecConfig { threads: 1 },
+            )
+        } else {
+            (self.modes, self.cfg)
+        };
+        ExecutionPlan::compile_with(self.net, self.params, &modes, cfg, self.family, self.batch)
+    }
+}
+
 /// A compiled, immediately executable inference program for the native
-/// engine. Holds baked weights and a resident buffer arena; `run` is
-/// allocation-free apart from the returned logits vector.
+/// engine. Holds baked weights and a resident buffer arena sized for a
+/// fixed batch capacity; `run_batch` executes a dynamic batch in one
+/// walk, allocation-free apart from the returned logits rows.
 #[derive(Clone)]
 pub struct ExecutionPlan {
     u: usize,
     threads: usize,
+    batch: usize,
     input_shape: (usize, usize, usize),
     slots: Vec<SlotShape>,
     steps: Vec<Step>,
     out_slot: usize,
     arena: Arena,
+    /// Per-row pad/cast scratch length (row stride into `arena.scratch`).
+    scratch_row: usize,
+    /// Per-thread FLP/KLP reduction buffer length (0 = none needed).
+    reduce_len: usize,
     baked_param_bytes: usize,
     runs: u64,
     alloc: AllocCounter,
@@ -184,6 +342,7 @@ impl std::fmt::Debug for ExecutionPlan {
         f.debug_struct("ExecutionPlan")
             .field("u", &self.u)
             .field("threads", &self.threads)
+            .field("batch", &self.batch)
             .field("steps", &self.steps.len())
             .field("registers", &self.slots.len())
             .field("arena_bytes", &self.arena.bytes())
@@ -194,53 +353,13 @@ impl std::fmt::Debug for ExecutionPlan {
 }
 
 impl ExecutionPlan {
-    /// Compile the map-major OLP program — the synthesized software.
-    pub fn compile(
-        net: &Network,
-        params: &EngineParams,
-        modes: &ModeAssignment,
-        cfg: ExecConfig,
-    ) -> Result<ExecutionPlan> {
-        Self::compile_with(net, params, modes, cfg, Family::MapMajor)
-    }
-
-    /// Compile the single-threaded scalar row-major baseline (Table I's
-    /// "single-threaded Java" program, functionally).
-    pub fn compile_baseline(net: &Network, params: &EngineParams) -> Result<ExecutionPlan> {
-        Self::compile_with(
-            net,
-            params,
-            &ModeAssignment::uniform(ArithMode::Precise),
-            ExecConfig { threads: 1 },
-            Family::Nchw(NchwConv::Scalar),
-        )
-    }
-
-    /// Compile under an explicit thread-workload-allocation policy:
-    /// OLP lowers map-major (same as [`ExecutionPlan::compile`]),
-    /// FLP/KLP lower row-major with per-thread reduction buffers in the
-    /// arena — the section IV.A ablation executors.
-    pub fn compile_policy(
-        net: &Network,
-        params: &EngineParams,
-        modes: &ModeAssignment,
-        cfg: ExecConfig,
-        policy: Parallelism,
-    ) -> Result<ExecutionPlan> {
-        let family = match policy {
-            Parallelism::Olp => Family::MapMajor,
-            Parallelism::Flp => Family::Nchw(NchwConv::Flp),
-            Parallelism::Klp => Family::Nchw(NchwConv::Klp),
-        };
-        Self::compile_with(net, params, modes, cfg, family)
-    }
-
     fn compile_with(
         net: &Network,
         params: &EngineParams,
         modes: &ModeAssignment,
         cfg: ExecConfig,
         family: Family,
+        batch: usize,
     ) -> Result<ExecutionPlan> {
         // Shape inference once, up front: every undersized window or
         // malformed topology becomes Error::Shape here instead of an
@@ -252,6 +371,7 @@ impl ExecutionPlan {
             Family::Nchw(_) => 1,
         };
         let threads = cfg.threads.max(1);
+        let batch = batch.max(1);
         let mut lw = Lowerer {
             params,
             modes,
@@ -266,52 +386,148 @@ impl ExecutionPlan {
         lw.steps.push(Step::Input { dst: in_slot });
         let out_slot = lw.lower(&net.layers, in_slot)?;
 
-        let bufs: Vec<Vec<f32>> = lw.slots.iter().map(|s| vec![0.0f32; s.len()]).collect();
-        let scratch = vec![0.0f32; lw.scratch_len];
-        let n_reduce = if lw.reduce_len > 0 { threads } else { 0 };
-        let reduce: Vec<Vec<f32>> =
-            (0..n_reduce).map(|_| vec![0.0f32; lw.reduce_len]).collect();
-
+        let arena = Arena::sized(&lw.slots, lw.scratch_len, lw.reduce_len, threads, batch);
         Ok(ExecutionPlan {
             u,
             threads,
+            batch,
             input_shape: (c, h, w),
             slots: lw.slots,
             steps: lw.steps,
             out_slot,
-            arena: Arena { bufs, scratch, reduce },
+            arena,
+            scratch_row: lw.scratch_len,
+            reduce_len: lw.reduce_len,
             baked_param_bytes: lw.baked_param_bytes,
             runs: 0,
             alloc: AllocCounter::new(),
         })
     }
 
-    /// Execute one inference. `input` is conventional `(C, H, W)` data;
-    /// the map-major transform of the request is the plan's prologue
-    /// (the only dynamic reorder in the pipeline). Steady-state
-    /// allocation-free apart from the returned logits vector.
-    pub fn run(&mut self, input: &[f32]) -> Result<Vec<f32>> {
-        let (c, h, w) = self.input_shape;
-        if input.len() != c * h * w {
-            return Err(Error::Shape(format!(
-                "input len {} vs expected {c}x{h}x{w}",
-                input.len()
+    /// Derive a sibling plan with a different batch capacity. The step
+    /// sequence and baked weights are **shared** (`Arc` — parameters
+    /// are never duplicated per capacity); only the arena is re-sized.
+    /// Run counters start fresh on the derived plan.
+    pub fn with_capacity(&self, batch: usize) -> ExecutionPlan {
+        let batch = batch.max(1);
+        ExecutionPlan {
+            u: self.u,
+            threads: self.threads,
+            batch,
+            input_shape: self.input_shape,
+            slots: self.slots.clone(),
+            steps: self.steps.clone(),
+            out_slot: self.out_slot,
+            arena: Arena::sized(
+                &self.slots,
+                self.scratch_row,
+                self.reduce_len,
+                self.threads,
+                batch,
+            ),
+            scratch_row: self.scratch_row,
+            reduce_len: self.reduce_len,
+            baked_param_bytes: self.baked_param_bytes,
+            runs: 0,
+            alloc: AllocCounter::new(),
+        }
+    }
+
+    fn validate_batch(&self, images: &[&[f32]]) -> Result<()> {
+        if images.len() > self.batch {
+            return Err(Error::Invalid(format!(
+                "batch of {} exceeds plan capacity {}",
+                images.len(),
+                self.batch
             )));
         }
-        let slots = &self.slots;
-        let threads = self.threads;
-        for step in &self.steps {
-            exec_step(step, slots, &mut self.arena, input, threads);
-        }
-        self.runs += 1;
-        let out = match slots[self.out_slot] {
-            SlotShape::Flat { len } => self.arena.bufs[self.out_slot][..len].to_vec(),
-            SlotShape::Maps { c, h, w, u } => {
-                layout::mapmajor_to_nchw(&self.arena.bufs[self.out_slot], c, h, w, u)
+        let (c, h, w) = self.input_shape;
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != c * h * w {
+                return Err(Error::Shape(format!(
+                    "batch row {i}: input len {} vs expected {c}x{h}x{w}",
+                    img.len()
+                )));
             }
-        };
-        self.alloc.record(4 * out.len());
-        Ok(out)
+        }
+        Ok(())
+    }
+
+    /// One walk of the step sequence over `images.len()` live rows.
+    fn exec(&mut self, images: &[&[f32]]) {
+        for step in &self.steps {
+            exec_step(step, &self.slots, &mut self.arena, images, self.threads, self.scratch_row);
+        }
+        self.runs += images.len() as u64;
+    }
+
+    /// Copy live row `row` of the output register into `out`
+    /// (conventional NCHW order, padding lanes dropped).
+    fn extract_row_into(&self, row: usize, out: &mut [f32]) {
+        let slot_len = self.slots[self.out_slot].len();
+        let data = &self.arena.bufs[self.out_slot][row * slot_len..(row + 1) * slot_len];
+        match self.slots[self.out_slot] {
+            SlotShape::Flat { .. } => out.copy_from_slice(data),
+            SlotShape::Maps { c, h, w, u } => {
+                layout::mapmajor_to_nchw_into(data, c, h, w, u, out)
+            }
+        }
+    }
+
+    /// Execute a dynamic batch (`images.len() <= capacity`) as **one**
+    /// plan walk; returns one logits row per input image, in order.
+    /// Each image is conventional `(C, H, W)` data; the map-major
+    /// transform of every live row is the plan's prologue (the only
+    /// dynamic reorder in the pipeline). Only live rows are computed —
+    /// a partial batch never touches (or reads back) padded lanes.
+    /// Bitwise identical to `images.len()` single-image [`ExecutionPlan::run`]
+    /// calls. Steady-state allocation-free apart from the returned rows.
+    pub fn run_batch(&mut self, images: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.validate_batch(images)?;
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.exec(images);
+        let out_len = self.output_len();
+        let mut rows = Vec::with_capacity(images.len());
+        for r in 0..images.len() {
+            let mut row = vec![0.0f32; out_len];
+            self.extract_row_into(r, &mut row);
+            rows.push(row);
+        }
+        self.alloc.record(4 * out_len * images.len());
+        Ok(rows)
+    }
+
+    /// [`ExecutionPlan::run_batch`] into caller-owned output rows:
+    /// `out` is `images.len() * output_len()` floats, row-major. Zero
+    /// plan-side allocation — the fully arena-resident request path.
+    pub fn run_batch_into(&mut self, images: &[&[f32]], out: &mut [f32]) -> Result<()> {
+        self.validate_batch(images)?;
+        let out_len = self.output_len();
+        if out.len() != images.len() * out_len {
+            return Err(Error::Shape(format!(
+                "output buffer len {} vs expected {} ({} rows x {out_len})",
+                out.len(),
+                images.len() * out_len,
+                images.len()
+            )));
+        }
+        if images.is_empty() {
+            return Ok(());
+        }
+        self.exec(images);
+        for r in 0..images.len() {
+            self.extract_row_into(r, &mut out[r * out_len..(r + 1) * out_len]);
+        }
+        Ok(())
+    }
+
+    /// Single-image inference — the thin `B = 1` wrapper over
+    /// [`ExecutionPlan::run_batch`].
+    pub fn run(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let mut rows = self.run_batch(&[input])?;
+        Ok(rows.pop().expect("batch of one yields one row"))
     }
 
     /// Vector width the plan was compiled for (1 for row-major plans).
@@ -324,10 +540,23 @@ impl ExecutionPlan {
         self.threads
     }
 
+    /// Batch capacity `B` the arena is sized for.
+    pub fn capacity(&self) -> usize {
+        self.batch
+    }
+
     /// Expected per-image input element count.
     pub fn input_len(&self) -> usize {
         let (c, h, w) = self.input_shape;
         c * h * w
+    }
+
+    /// Per-image logits row length.
+    pub fn output_len(&self) -> usize {
+        match self.slots[self.out_slot] {
+            SlotShape::Flat { len } => len,
+            SlotShape::Maps { c, h, w, .. } => c * h * w,
+        }
     }
 
     /// Lowered step count (prologue included).
@@ -336,28 +565,31 @@ impl ExecutionPlan {
     }
 
     /// Resident arena bytes (activation registers + scratch + reduction
-    /// buffers) — what the legacy executor re-allocated every inference.
+    /// buffers, all batch rows) — what the legacy executor re-allocated
+    /// every inference.
     pub fn arena_bytes(&self) -> usize {
         self.arena.bytes()
     }
 
     /// Bytes of baked (mode-cast) parameters the plan holds — what the
     /// legacy executor re-cast every inference for inexact layers.
+    /// Shared (not duplicated) across [`ExecutionPlan::with_capacity`]
+    /// siblings.
     pub fn baked_param_bytes(&self) -> usize {
         self.baked_param_bytes
     }
 
-    /// Inferences executed so far.
+    /// Images inferred so far (every live batch row counts).
     pub fn runs(&self) -> u64 {
         self.runs
     }
 
-    /// Request-path allocation meter (logits vectors only, by design).
+    /// Request-path allocation meter (logits rows only, by design).
     pub fn alloc(&self) -> &AllocCounter {
         &self.alloc
     }
 
-    /// Mean request-path bytes allocated per inference.
+    /// Mean request-path bytes allocated per image.
     pub fn alloc_bytes_per_run(&self) -> f64 {
         self.alloc.per_inference(self.runs)
     }
@@ -656,32 +888,61 @@ fn pair_mut(bufs: &mut [Vec<f32>], read: usize, write: usize) -> (&[f32], &mut [
     }
 }
 
-fn exec_step(step: &Step, slots: &[SlotShape], arena: &mut Arena, input: &[f32], threads: usize) {
+/// Execute one step over `images.len()` live batch rows. Registers hold
+/// `B` rows at a fixed per-row stride (`slots[i].len()`); scratch rows
+/// are `scratch_row` apart. Conv (map-major) and dense lower the batch
+/// loop into a single parallel region; the remaining (memory-bound)
+/// steps walk rows sequentially with per-row kernels, so numerics never
+/// depend on the batch size.
+fn exec_step(
+    step: &Step,
+    slots: &[SlotShape],
+    arena: &mut Arena,
+    images: &[&[f32]],
+    threads: usize,
+    scratch_row: usize,
+) {
+    let live = images.len();
     match step {
         Step::Input { dst } => {
             let (c, h, w, u) = maps_of(slots[*dst]);
-            layout::nchw_to_mapmajor_into(input, c, h, w, u, &mut arena.bufs[*dst]);
+            let len = slots[*dst].len();
+            for (r, img) in images.iter().enumerate() {
+                layout::nchw_to_mapmajor_into(
+                    img,
+                    c,
+                    h,
+                    w,
+                    u,
+                    &mut arena.bufs[*dst][r * len..(r + 1) * len],
+                );
+            }
         }
         Step::ConvMm { src, dst, w, b, k, s, p, relu, mode } => {
             let (cin, h, wd, u) = maps_of(slots[*src]);
             let (m, ho, wo, _) = maps_of(slots[*dst]);
             let (cb, mb) = (ceil_div(cin, u), ceil_div(m, u));
             let (hp, wp) = (h + 2 * p, wd + 2 * p);
+            let src_len = slots[*src].len();
             if *p > 0 || *mode != ArithMode::Precise {
                 let plen = cb * hp * wp * u;
-                tensor::pad_cast_into(
-                    &arena.bufs[*src],
-                    cb,
-                    h,
-                    wd,
-                    u,
-                    *p,
-                    0.0,
-                    *mode,
-                    &mut arena.scratch[..plen],
-                );
+                for r in 0..live {
+                    tensor::pad_cast_into(
+                        &arena.bufs[*src][r * src_len..(r + 1) * src_len],
+                        cb,
+                        h,
+                        wd,
+                        u,
+                        *p,
+                        0.0,
+                        *mode,
+                        &mut arena.scratch[r * scratch_row..][..plen],
+                    );
+                }
+                // One parallel region spanning live x mb x ho items.
                 conv::conv_mm_core(
-                    &arena.scratch[..plen],
+                    &arena.scratch,
+                    scratch_row,
                     hp,
                     wp,
                     cb,
@@ -696,67 +957,99 @@ fn exec_step(step: &Step, slots: &[SlotShape], arena: &mut Arena, input: &[f32],
                     wo,
                     *relu,
                     threads,
+                    live,
                 );
             } else {
                 let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-                conv::conv_mm_core(x, hp, wp, cb, u, w, b, out, mb, *k, *s, ho, wo, *relu, threads);
+                conv::conv_mm_core(
+                    x, src_len, hp, wp, cb, u, w, b, out, mb, *k, *s, ho, wo, *relu, threads,
+                    live,
+                );
             }
         }
         Step::ConvNchw { src, dst, w, b, k, s, p, relu, mode, policy } => {
             let (cin, h, wd, _) = maps_of(slots[*src]);
             let (m, ho, wo, _) = maps_of(slots[*dst]);
             let x_len = cin * h * wd;
+            let src_len = slots[*src].len();
+            let dst_len = slots[*dst].len();
             if *mode != ArithMode::Precise {
-                mode::cast_slice_into(&arena.bufs[*src], *mode, &mut arena.scratch[..x_len]);
+                for r in 0..live {
+                    mode::cast_slice_into(
+                        &arena.bufs[*src][r * src_len..(r + 1) * src_len],
+                        *mode,
+                        &mut arena.scratch[r * scratch_row..][..x_len],
+                    );
+                }
             }
             match policy {
                 NchwConv::Scalar => {
                     if *mode != ArithMode::Precise {
-                        let x = &arena.scratch[..x_len];
-                        conv::conv_nchw_scalar_into(
-                            x, cin, h, wd, w, b, m, *k, *s, *p, *relu, ho, wo,
-                            &mut arena.bufs[*dst],
-                        );
+                        for r in 0..live {
+                            let x = &arena.scratch[r * scratch_row..][..x_len];
+                            conv::conv_nchw_scalar_into(
+                                x, cin, h, wd, w, b, m, *k, *s, *p, *relu, ho, wo,
+                                &mut arena.bufs[*dst][r * dst_len..(r + 1) * dst_len],
+                            );
+                        }
                     } else {
                         let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-                        conv::conv_nchw_scalar_into(
-                            x, cin, h, wd, w, b, m, *k, *s, *p, *relu, ho, wo, out,
-                        );
+                        for r in 0..live {
+                            conv::conv_nchw_scalar_into(
+                                &x[r * src_len..(r + 1) * src_len],
+                                cin,
+                                h,
+                                wd,
+                                w,
+                                b,
+                                m,
+                                *k,
+                                *s,
+                                *p,
+                                *relu,
+                                ho,
+                                wo,
+                                &mut out[r * dst_len..(r + 1) * dst_len],
+                            );
+                        }
                     }
                 }
                 NchwConv::Flp | NchwConv::Klp => {
                     let is_flp = matches!(policy, NchwConv::Flp);
                     let items = if is_flp { m * cin } else { cin * k };
                     let buf_len = m * ho * wo;
-                    {
-                        let x: &[f32] = if *mode != ArithMode::Precise {
-                            &arena.scratch[..x_len]
-                        } else {
-                            &arena.bufs[*src]
-                        };
-                        let wgt: &[f32] = w;
-                        let (kk, ss, pp) = (*k, *s, *p);
-                        parallel::parallel_reduce_with(
-                            items,
-                            threads,
-                            buf_len,
-                            &mut arena.reduce,
-                            &|_i, range: Range<usize>, buf: &mut [f32]| {
-                                if is_flp {
-                                    conv::flp_accumulate(
-                                        x, cin, h, wd, wgt, kk, ss, pp, ho, wo, range, buf,
-                                    );
-                                } else {
-                                    conv::klp_accumulate(
-                                        x, cin, h, wd, wgt, m, kk, ss, pp, ho, wo, range, buf,
-                                    );
-                                }
-                            },
-                        );
+                    for r in 0..live {
+                        {
+                            let x: &[f32] = if *mode != ArithMode::Precise {
+                                &arena.scratch[r * scratch_row..][..x_len]
+                            } else {
+                                &arena.bufs[*src][r * src_len..(r + 1) * src_len]
+                            };
+                            let wgt: &[f32] = w;
+                            let (kk, ss, pp) = (*k, *s, *p);
+                            parallel::parallel_reduce_with(
+                                items,
+                                threads,
+                                buf_len,
+                                &mut arena.reduce,
+                                &|_i, range: Range<usize>, buf: &mut [f32]| {
+                                    if is_flp {
+                                        conv::flp_accumulate(
+                                            x, cin, h, wd, wgt, kk, ss, pp, ho, wo, range, buf,
+                                        );
+                                    } else {
+                                        conv::klp_accumulate(
+                                            x, cin, h, wd, wgt, m, kk, ss, pp, ho, wo, range,
+                                            buf,
+                                        );
+                                    }
+                                },
+                            );
+                        }
+                        let out = &mut arena.bufs[*dst][r * dst_len..(r + 1) * dst_len];
+                        out.copy_from_slice(&arena.reduce[0][..buf_len]);
+                        conv::finish_bias_relu(out, b, m, ho * wo, *relu);
                     }
-                    let out = &mut arena.bufs[*dst];
-                    out[..].copy_from_slice(&arena.reduce[0][..buf_len]);
-                    conv::finish_bias_relu(out, b, m, ho * wo, *relu);
                 }
             }
         }
@@ -764,64 +1057,129 @@ fn exec_step(step: &Step, slots: &[SlotShape], arena: &mut Arena, input: &[f32],
             let (c, h, wd, u) = maps_of(slots[*src]);
             let (_, ho, wo, _) = maps_of(slots[*dst]);
             let cb = ceil_div(c, u);
+            let src_len = slots[*src].len();
+            let dst_len = slots[*dst].len();
             let fill = if *is_max { f32::NEG_INFINITY } else { 0.0 };
             if *p > 0 {
                 let (hp, wp) = (h + 2 * p, wd + 2 * p);
                 let plen = cb * hp * wp * u;
-                tensor::pad_spatial_into(
-                    &arena.bufs[*src],
-                    cb,
-                    h,
-                    wd,
-                    u,
-                    *p,
-                    fill,
-                    &mut arena.scratch[..plen],
-                );
-                ops::pool_mm_core(
-                    &arena.scratch[..plen],
-                    hp,
-                    wp,
-                    u,
-                    cb,
-                    &mut arena.bufs[*dst],
-                    ho,
-                    wo,
-                    *k,
-                    *s,
-                    *is_max,
-                );
+                for r in 0..live {
+                    tensor::pad_spatial_into(
+                        &arena.bufs[*src][r * src_len..(r + 1) * src_len],
+                        cb,
+                        h,
+                        wd,
+                        u,
+                        *p,
+                        fill,
+                        &mut arena.scratch[r * scratch_row..][..plen],
+                    );
+                }
+                for r in 0..live {
+                    ops::pool_mm_core(
+                        &arena.scratch[r * scratch_row..][..plen],
+                        hp,
+                        wp,
+                        u,
+                        cb,
+                        &mut arena.bufs[*dst][r * dst_len..(r + 1) * dst_len],
+                        ho,
+                        wo,
+                        *k,
+                        *s,
+                        *is_max,
+                    );
+                }
             } else {
                 let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-                ops::pool_mm_core(x, h, wd, u, cb, out, ho, wo, *k, *s, *is_max);
+                for r in 0..live {
+                    ops::pool_mm_core(
+                        &x[r * src_len..(r + 1) * src_len],
+                        h,
+                        wd,
+                        u,
+                        cb,
+                        &mut out[r * dst_len..(r + 1) * dst_len],
+                        ho,
+                        wo,
+                        *k,
+                        *s,
+                        *is_max,
+                    );
+                }
             }
         }
         Step::PoolNchw { src, dst, k, s, p, is_max } => {
             let (c, h, wd, _) = maps_of(slots[*src]);
             let (_, ho, wo, _) = maps_of(slots[*dst]);
+            let src_len = slots[*src].len();
+            let dst_len = slots[*dst].len();
             let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-            ops::pool_nchw_into(x, c, h, wd, *k, *s, *p, *is_max, ho, wo, out);
+            for r in 0..live {
+                ops::pool_nchw_into(
+                    &x[r * src_len..(r + 1) * src_len],
+                    c,
+                    h,
+                    wd,
+                    *k,
+                    *s,
+                    *p,
+                    *is_max,
+                    ho,
+                    wo,
+                    &mut out[r * dst_len..(r + 1) * dst_len],
+                );
+            }
         }
         Step::Lrn { src, dst, size, alpha, beta } => {
             let (c, h, wd, u) = maps_of(slots[*src]);
+            let len = slots[*src].len();
             let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-            ops::lrn_mm_into(x, c, h, wd, u, *size, *alpha, *beta, out);
+            for r in 0..live {
+                ops::lrn_mm_into(
+                    &x[r * len..(r + 1) * len],
+                    c,
+                    h,
+                    wd,
+                    u,
+                    *size,
+                    *alpha,
+                    *beta,
+                    &mut out[r * len..(r + 1) * len],
+                );
+            }
         }
         Step::Gap { src, dst } => {
             let (c, h, wd, u) = maps_of(slots[*src]);
+            let src_len = slots[*src].len();
+            let dst_len = slots[*dst].len();
             let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-            ops::gap_mm_into(x, c, h, wd, u, out);
+            for r in 0..live {
+                ops::gap_mm_into(
+                    &x[r * src_len..(r + 1) * src_len],
+                    c,
+                    h,
+                    wd,
+                    u,
+                    &mut out[r * dst_len..(r + 1) * dst_len],
+                );
+            }
         }
         Step::Copy { src, dst } => {
+            let len = slots[*src].len();
             let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-            out.copy_from_slice(x);
+            out[..live * len].copy_from_slice(&x[..live * len]);
         }
         Step::Concat { srcs, dst } => {
+            let dst_total = slots[*dst].len();
             let mut off = 0;
             for &sidx in srcs {
                 let part_len = slots[sidx].len();
                 let (x, out) = pair_mut(&mut arena.bufs, sidx, *dst);
-                out[off..off + part_len].copy_from_slice(x);
+                for r in 0..live {
+                    out[r * dst_total + off..r * dst_total + off + part_len]
+                        .copy_from_slice(&x[r * part_len..(r + 1) * part_len]);
+                }
                 off += part_len;
             }
         }
@@ -829,17 +1187,36 @@ fn exec_step(step: &Step, slots: &[SlotShape], arena: &mut Arena, input: &[f32],
             let o = flat_of(slots[*dst]);
             let len = flat_of(slots[*src]);
             if *mode != ArithMode::Precise {
-                mode::cast_slice_into(&arena.bufs[*src], *mode, &mut arena.scratch[..len]);
-                let x = &arena.scratch[..len];
-                ops::dense_into(x, w, b, o, *relu, &mut arena.bufs[*dst]);
+                for r in 0..live {
+                    mode::cast_slice_into(
+                        &arena.bufs[*src][r * len..(r + 1) * len],
+                        *mode,
+                        &mut arena.scratch[r * scratch_row..][..len],
+                    );
+                }
+                ops::dense_rows_into(
+                    &arena.scratch,
+                    scratch_row,
+                    len,
+                    w,
+                    b,
+                    o,
+                    *relu,
+                    &mut arena.bufs[*dst],
+                    live,
+                    threads,
+                );
             } else {
                 let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-                ops::dense_into(x, w, b, o, *relu, out);
+                ops::dense_rows_into(x, len, len, w, b, o, *relu, out, live, threads);
             }
         }
         Step::Softmax { src, dst } => {
+            let len = flat_of(slots[*src]);
             let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-            ops::softmax_into(x, out);
+            for r in 0..live {
+                ops::softmax_into(&x[r * len..(r + 1) * len], &mut out[r * len..(r + 1) * len]);
+            }
         }
     }
 }
@@ -859,9 +1236,7 @@ mod tests {
     fn plan_compiles_and_runs_tinynet() {
         let net = zoo::tinynet();
         let params = EngineParams::random(&net, 42, 4).unwrap();
-        let modes = ModeAssignment::uniform(ArithMode::Precise);
-        let mut plan =
-            ExecutionPlan::compile(&net, &params, &modes, ExecConfig { threads: 2 }).unwrap();
+        let mut plan = PlanBuilder::new(&net, &params).threads(2).build().unwrap();
         let input = rand_input(&net, 7);
         let a = plan.run(&input).unwrap();
         assert_eq!(a.len(), 8);
@@ -878,8 +1253,11 @@ mod tests {
         let net = zoo::tinynet();
         let params = EngineParams::random(&net, 1, 4).unwrap();
         let modes = ModeAssignment::uniform(ArithMode::Imprecise);
-        let cfg = ExecConfig { threads: 2 };
-        let mut plan = ExecutionPlan::compile(&net, &params, &modes, cfg).unwrap();
+        let mut plan = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(2)
+            .build()
+            .unwrap();
         let x1 = rand_input(&net, 2);
         let x2 = rand_input(&net, 3);
         let a1 = plan.run(&x1).unwrap();
@@ -894,8 +1272,7 @@ mod tests {
         let net = zoo::tinynet();
         let params = EngineParams::random(&net, 5, 4).unwrap();
         let modes = ModeAssignment::uniform(ArithMode::Imprecise);
-        let mut plan =
-            ExecutionPlan::compile(&net, &params, &modes, ExecConfig { threads: 1 }).unwrap();
+        let mut plan = PlanBuilder::new(&net, &params).modes(&modes).build().unwrap();
         let input = rand_input(&net, 9);
         for _ in 0..4 {
             plan.run(&input).unwrap();
@@ -911,13 +1288,113 @@ mod tests {
     fn plan_clone_shares_weights_not_arena() {
         let net = zoo::tinynet();
         let params = EngineParams::random(&net, 5, 4).unwrap();
-        let modes = ModeAssignment::uniform(ArithMode::Precise);
-        let plan =
-            ExecutionPlan::compile(&net, &params, &modes, ExecConfig { threads: 1 }).unwrap();
+        let plan = PlanBuilder::new(&net, &params).build().unwrap();
         let mut a = plan.clone();
         let mut b = plan;
         let input = rand_input(&net, 11);
         assert_eq!(a.run(&input).unwrap(), b.run(&input).unwrap());
+    }
+
+    /// First baked weight tensor of a plan (for Arc-sharing checks).
+    fn first_weight(plan: &ExecutionPlan) -> Arc<Vec<f32>> {
+        plan.steps
+            .iter()
+            .find_map(|s| match s {
+                Step::ConvMm { w, .. }
+                | Step::ConvNchw { w, .. }
+                | Step::Dense { w, .. } => Some(Arc::clone(w)),
+                _ => None,
+            })
+            .expect("plan has at least one parameterised step")
+    }
+
+    #[test]
+    fn with_capacity_shares_baked_weights_and_scales_arena() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 6, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let base = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(2)
+            .batch(8)
+            .build()
+            .unwrap();
+        let small = base.with_capacity(2);
+        assert_eq!(base.capacity(), 8);
+        assert_eq!(small.capacity(), 2);
+        // Baked parameters are the same Arc allocation, not a copy.
+        assert!(Arc::ptr_eq(&first_weight(&base), &first_weight(&small)));
+        assert_eq!(base.baked_param_bytes(), small.baked_param_bytes());
+        // The arena scales with the capacity (registers are B x rows).
+        assert!(base.arena_bytes() > small.arena_bytes());
+        // And both capacities produce identical logits.
+        let input = rand_input(&net, 12);
+        let mut b8 = base;
+        let mut b2 = small;
+        assert_eq!(b8.run(&input).unwrap(), b2.run(&input).unwrap());
+    }
+
+    #[test]
+    fn run_batch_matches_singles_and_skips_padded_lanes() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 13, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let mut batch_plan = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(2)
+            .batch(8)
+            .build()
+            .unwrap();
+        let mut single = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(2)
+            .build()
+            .unwrap();
+        let inputs: Vec<Vec<f32>> = (0..8).map(|i| rand_input(&net, 20 + i)).collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        // Fill every lane, then run a partial batch: the stale rows from
+        // the full batch must not reach the partial batch's replies.
+        let full = batch_plan.run_batch(&refs).unwrap();
+        assert_eq!(full.len(), 8);
+        let partial = batch_plan.run_batch(&refs[..3]).unwrap();
+        assert_eq!(partial.len(), 3);
+        for (i, row) in partial.iter().enumerate() {
+            assert_eq!(row, &single.run(&inputs[i]).unwrap(), "lane {i}");
+            assert_eq!(row, &full[i], "lane {i} vs full batch");
+        }
+        assert_eq!(batch_plan.runs(), 11);
+    }
+
+    #[test]
+    fn run_batch_into_writes_caller_rows() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 14, 4).unwrap();
+        let mut plan = PlanBuilder::new(&net, &params).batch(4).build().unwrap();
+        let inputs: Vec<Vec<f32>> = (0..3).map(|i| rand_input(&net, 30 + i)).collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let want = plan.run_batch(&refs).unwrap();
+        let out_len = plan.output_len();
+        let mut out = vec![0.0f32; 3 * out_len];
+        plan.run_batch_into(&refs, &mut out).unwrap();
+        for (r, row) in want.iter().enumerate() {
+            assert_eq!(&out[r * out_len..(r + 1) * out_len], row.as_slice());
+        }
+        // Wrong-size output buffer is rejected before any compute.
+        let mut short = vec![0.0f32; out_len];
+        assert!(matches!(plan.run_batch_into(&refs, &mut short), Err(Error::Shape(_))));
+    }
+
+    #[test]
+    fn over_capacity_batch_rejected() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 15, 4).unwrap();
+        let mut plan = PlanBuilder::new(&net, &params).batch(2).build().unwrap();
+        let inputs: Vec<Vec<f32>> = (0..3).map(|i| rand_input(&net, 40 + i)).collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        assert!(matches!(plan.run_batch(&refs), Err(Error::Invalid(_))));
+        // Empty batches are a no-op.
+        assert!(plan.run_batch(&[]).unwrap().is_empty());
+        assert_eq!(plan.runs(), 0);
     }
 
     #[test]
@@ -931,12 +1408,7 @@ mod tests {
         assert!(params.is_err() || {
             let p = params.unwrap();
             matches!(
-                ExecutionPlan::compile(
-                    &net,
-                    &p,
-                    &ModeAssignment::uniform(ArithMode::Precise),
-                    ExecConfig::default(),
-                ),
+                PlanBuilder::new(&net, &p).build(),
                 Err(Error::Shape(_))
             )
         });
@@ -946,9 +1418,7 @@ mod tests {
     fn bad_input_len_rejected() {
         let net = zoo::tinynet();
         let params = EngineParams::random(&net, 0, 4).unwrap();
-        let modes = ModeAssignment::uniform(ArithMode::Precise);
-        let mut plan =
-            ExecutionPlan::compile(&net, &params, &modes, ExecConfig::default()).unwrap();
+        let mut plan = PlanBuilder::new(&net, &params).build().unwrap();
         assert!(matches!(plan.run(&[0.0; 3]), Err(Error::Shape(_))));
     }
 
@@ -956,14 +1426,8 @@ mod tests {
     fn baseline_plan_matches_mapmajor_plan() {
         let net = zoo::tinynet();
         let params = EngineParams::random(&net, 21, 4).unwrap();
-        let mut base = ExecutionPlan::compile_baseline(&net, &params).unwrap();
-        let mut opt = ExecutionPlan::compile(
-            &net,
-            &params,
-            &ModeAssignment::uniform(ArithMode::Precise),
-            ExecConfig { threads: 2 },
-        )
-        .unwrap();
+        let mut base = PlanBuilder::new(&net, &params).baseline().build().unwrap();
+        let mut opt = PlanBuilder::new(&net, &params).threads(2).build().unwrap();
         let input = rand_input(&net, 22);
         let a = base.run(&input).unwrap();
         let b = opt.run(&input).unwrap();
@@ -981,19 +1445,16 @@ mod tests {
         )
         .unwrap();
         let params = EngineParams::random(&net, 8, 4).unwrap();
-        let mut base = ExecutionPlan::compile_baseline(&net, &params).unwrap();
+        let mut base = PlanBuilder::new(&net, &params).baseline().build().unwrap();
         let input = rand_input(&net, 13);
         let want = base.run(&input).unwrap();
         for policy in [Parallelism::Flp, Parallelism::Klp] {
             for threads in [1, 3] {
-                let mut plan = ExecutionPlan::compile_policy(
-                    &net,
-                    &params,
-                    &ModeAssignment::uniform(ArithMode::Precise),
-                    ExecConfig { threads },
-                    policy,
-                )
-                .unwrap();
+                let mut plan = PlanBuilder::new(&net, &params)
+                    .threads(threads)
+                    .policy(policy)
+                    .build()
+                    .unwrap();
                 assert!(plan.arena_bytes() > 0);
                 let got = plan.run(&input).unwrap();
                 for (x, y) in want.iter().zip(&got) {

@@ -15,6 +15,8 @@ use crate::util::ceil_div;
 /// Pad map-major `(stacks, h, w, u)` data spatially by `p` into `dst`
 /// (`stacks, h+2p, w+2p, u`), filling borders with `fill` — the arena
 /// variant of [`MapTensor::pad_spatial`], overwriting `dst` completely.
+/// The batched plan walk calls this once per live batch row, each row
+/// into its own `scratch_row`-strided scratch lane.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn pad_spatial_into(
     src: &[f32],

@@ -61,18 +61,26 @@ pub fn nchw_to_mapmajor_into(src: &[f32], c: usize, h: usize, w: usize, u: usize
 
 /// `(Cb, H, W, u)` map-major → `(C, H, W)` row-major, dropping padding.
 pub fn mapmajor_to_nchw(src: &[f32], c: usize, h: usize, w: usize, u: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; c * h * w];
+    mapmajor_to_nchw_into(src, c, h, w, u, &mut out);
+    out
+}
+
+/// In-place variant of [`mapmajor_to_nchw`] writing into a caller-owned
+/// row — the compiled plan's batched output epilogue (one call per live
+/// batch lane, zero allocation).
+pub fn mapmajor_to_nchw_into(src: &[f32], c: usize, h: usize, w: usize, u: usize, dst: &mut [f32]) {
     let cb = ceil_div(c, u);
     assert_eq!(src.len(), cb * h * w * u, "mapmajor_to_nchw: src len");
-    let mut out = vec![0.0f32; c * h * w];
+    assert_eq!(dst.len(), c * h * w, "mapmajor_to_nchw: dst len");
     for ci in 0..c {
         let (stack, lane) = (ci / u, ci % u);
         for hi in 0..h {
             for wi in 0..w {
-                out[(ci * h + hi) * w + wi] = src[((stack * h + hi) * w + wi) * u + lane];
+                dst[(ci * h + hi) * w + wi] = src[((stack * h + hi) * w + wi) * u + lane];
             }
         }
     }
-    out
 }
 
 /// Weights `(M, C, K, K)` → `(Mb, u, Cb, K, K, u)` (compile-time reorder,

@@ -25,7 +25,7 @@
 //! | [`model`] | layer IR, shape inference, FLOP counting, model zoo |
 //! | [`layout`] | map-major reordering + the paper's eqs. (3)–(5) |
 //! | [`engine`] | native execution engine (OLP/KLP/FLP, vector modes) |
-//! | [`engine::plan`] | compiled execution plans: buffer arena, baked weights, flat step sequence |
+//! | [`engine::plan`] | batch-first compiled plans: `PlanBuilder` → `ExecutionPlan::run_batch`, `B x` buffer arena, baked weights, flat step sequence |
 //! | [`engine::parallel`] | persistent worker pool + thread workload allocation policies |
 //! | [`soc`] | mobile SoC simulator: latency + energy + CNNDroid models |
 //! | [`data`] | synthetic validation dataset IO |
@@ -33,7 +33,7 @@
 //! | [`synth`] | primary-program + software synthesizers (plans) |
 //! | [`inexact`] | per-layer arithmetic-mode analysis |
 //! | [`runtime`] | PJRT artifact loading/execution (`xla` crate) |
-//! | [`serve`] | request router, dynamic batcher, worker pool |
+//! | [`serve`] | request router, dynamic batcher (one plan walk per drained batch), worker pool |
 //! | [`bench`] | in-repo micro-benchmark harness (criterion stand-in) |
 //! | [`testing`] | in-repo property-testing helper (proptest stand-in) |
 

@@ -110,8 +110,11 @@ COMMANDS:
   analyze    --net tinynet           per-layer inexact-computing analysis (sec IV.C)
              [--images 256] [--budget 0.01]
   simulate   --net NAME              Table I row for NAME on the device catalog
-  serve      --net tinynet           serve a synthetic workload over PJRT artifacts
-             [--mode imprecise] [--requests 64] [--batch 8]
+  serve      --net tinynet           serve a synthetic workload
+             [--backend engine|pjrt] [--mode imprecise] [--requests 64]
+             [--batch 8] [--threads 1]
+             engine: batch-compiled native plans (one plan walk per
+             drained batch, no artifacts needed); pjrt: AOT artifacts
 ";
 
 fn cmd_info() -> Result<()> {
@@ -283,30 +286,65 @@ fn cmd_simulate(flags: &Flags) -> Result<()> {
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let net = flags.get("net", "tinynet");
     let mode = flags.get("mode", "imprecise");
+    let backend = flags.get("backend", "pjrt");
     let n_requests = flags.get_usize("requests", 64)?;
     let max_batch = flags.get_usize("batch", 8)?;
+    let threads = flags.get_usize("threads", 1)?;
     let dir = cappuccino::artifacts_dir();
 
-    // tinynet serves its trained weights; other nets get random weights
-    // (latency-only serving demo).
-    let seed = if net == "tinynet" { None } else { Some(42) };
-    let factory = pjrt_factory(dir.clone(), net.clone(), mode.clone(), seed);
+    let (factory, input_len) = match backend.as_str() {
+        "engine" => {
+            // Native engine: batch-capacity plans compiled on the worker
+            // thread; every drained batch is one plan walk. Needs no
+            // artifacts — weights are random (latency/throughput demo).
+            let network = zoo::by_name(&net)
+                .ok_or_else(|| Error::Invalid(format!("unknown net {net:?}")))?;
+            let arith: ArithMode = mode.parse()?;
+            let params =
+                EngineParams::random(&network, 42, cappuccino::DEFAULT_U)?;
+            let input_len = network.input.elements();
+            eprintln!("compiling {net}/{mode} batch plans (native engine) ...");
+            let eb = cappuccino::serve::EngineBackend::new(
+                network,
+                params,
+                ModeAssignment::uniform(arith),
+                threads,
+                max_batch,
+            );
+            (eb.factory(), input_len)
+        }
+        "pjrt" => {
+            // tinynet serves its trained weights; other nets get random
+            // weights (latency-only serving demo).
+            let seed = if net == "tinynet" { None } else { Some(42) };
+            eprintln!("loading {net}/{mode} artifacts ...");
+            let manifest = cappuccino::runtime::Manifest::load(&dir)?;
+            let network = manifest
+                .nets
+                .get(&net)
+                .ok_or_else(|| Error::Invalid(format!("no net {net} in manifest")))?;
+            let input_len = network.input.elements();
+            (
+                pjrt_factory(dir.clone(), net.clone(), mode.clone(), seed),
+                input_len,
+            )
+        }
+        other => {
+            return Err(Error::Invalid(format!(
+                "--backend {other:?}: expected \"engine\" or \"pjrt\""
+            )))
+        }
+    };
     let policy = BatchPolicy {
         max_batch,
         max_delay: std::time::Duration::from_millis(2),
         queue_depth: 128,
     };
-    eprintln!("loading {net}/{mode} artifacts ...");
     let server = Server::start(vec![(net.clone(), factory, policy)])?;
 
-    // Synthetic client: dataset validation images (tinynet) or noise.
-    let manifest = cappuccino::runtime::Manifest::load(&dir)?;
-    let network = manifest
-        .nets
-        .get(&net)
-        .ok_or_else(|| Error::Invalid(format!("no net {net} in manifest")))?;
-    let input_len = network.input.elements();
-    let images: Vec<Vec<f32>> = if net == "tinynet" {
+    // Synthetic client: dataset validation images (tinynet with
+    // artifacts) or noise.
+    let images: Vec<Vec<f32>> = if net == "tinynet" && dir.join("dataset.bin").exists() {
         let dataset = Dataset::read_from(dir.join("dataset.bin"))?;
         let (val, _) = dataset.validation();
         (0..n_requests).map(|i| val[i % val.len()].clone()).collect()

@@ -7,9 +7,14 @@
 //! * [`Router`] — routes requests to per-model bounded queues
 //!   (backpressure: a full queue rejects instead of buffering without
 //!   bound).
-//! * dynamic batcher — each worker drains its queue into the largest
-//!   AOT-compiled batch size available within a latency budget
-//!   ([`BatchPolicy`]), padding the final partial batch.
+//! * dynamic batcher — each worker drains its queue into the smallest
+//!   adequate AOT-compiled batch capacity within a latency budget
+//!   ([`BatchPolicy`]). A drained batch executes as **one** backend
+//!   call. The native engine backend runs only the `len <= capacity`
+//!   live rows of a partial batch — padded lanes are never computed, so
+//!   stale or duplicated data cannot reach replies. The PJRT backend's
+//!   fixed-shape executables still zero-pad to capacity and truncate
+//!   the reply rows to `len` (device programs have static shapes).
 //! * [`worker`] threads — own the execution backend. PJRT objects are
 //!   not `Send`, so the backend is constructed *on* the worker thread
 //!   from a `Send` factory; weights stay device-resident across
@@ -308,10 +313,15 @@ fn run_batch(backend: &mut dyn Backend, batch: &[ServeRequest], metrics: &ServeM
 // ---------------------------------------------------------------------------
 
 /// Native-engine backend configuration (no artifacts needed). The
-/// factory compiles one [`crate::engine::ExecutionPlan`] per AOT batch
-/// capacity on the worker thread, so weights (baked per arithmetic
-/// mode) and buffer arenas stay resident across requests — the native
-/// analogue of the PJRT backend's device-resident executables.
+/// factory builds one batch-capacity [`crate::engine::ExecutionPlan`]
+/// per AOT batch size on the worker thread (baked weights `Arc`-shared
+/// across capacities via
+/// [`crate::engine::ExecutionPlan::with_capacity`] — parameters are
+/// never duplicated), so weights and the `B x`-sized buffer arenas stay
+/// resident across requests — the native analogue of the PJRT backend's
+/// device-resident executables. A drained dynamic batch executes as
+/// **one** plan walk ([`crate::engine::ExecutionPlan::run_batch`]), not
+/// a per-image loop; partial batches only walk live rows.
 pub struct EngineBackend {
     net: crate::model::Network,
     params: crate::engine::EngineParams,
@@ -342,19 +352,25 @@ impl EngineBackend {
 
     /// Factory for [`Server::start`]: plan compilation happens on the
     /// worker thread (mirroring the PJRT startup path) and failures
-    /// propagate through the server's startup channel.
+    /// propagate through the server's startup channel. The network is
+    /// compiled **once** at the largest capacity; every other capacity
+    /// is derived with `with_capacity`, sharing the baked weights.
     pub fn factory(self) -> BackendFactory {
         Box::new(move || {
-            let plan = crate::engine::ExecutionPlan::compile(
-                &self.net,
-                &self.params,
-                &self.modes,
-                crate::engine::ExecConfig { threads: self.threads },
-            )?;
-            // One plan (weights Arc-shared, arena private) per batch
-            // capacity; images stream through the matching plan one at a
-            // time until batched plan execution lands (ROADMAP).
-            let plans = self.batches.iter().map(|_| plan.clone()).collect();
+            let max_capacity = self.batches.last().copied().unwrap_or(1);
+            let base = crate::engine::PlanBuilder::new(&self.net, &self.params)
+                .modes(&self.modes)
+                .config(crate::engine::ExecConfig { threads: self.threads })
+                .batch(max_capacity)
+                .build()?;
+            // Derive the smaller capacities, then reuse `base` as the
+            // largest — no throwaway duplicate of the biggest arena.
+            let smaller = self.batches.len().saturating_sub(1);
+            let mut plans: Vec<crate::engine::ExecutionPlan> = self.batches[..smaller]
+                .iter()
+                .map(|&b| base.with_capacity(b))
+                .collect();
+            plans.push(base);
             Ok(Box::new(CompiledEngineBackend {
                 plans,
                 batches: self.batches,
@@ -390,7 +406,10 @@ impl Backend for CompiledEngineBackend {
             .plans
             .get_mut(idx)
             .ok_or_else(|| Error::Serve("engine backend has no compiled plans".into()))?;
-        images.iter().map(|img| plan.run(img)).collect()
+        // One plan walk for the whole drained batch: only the
+        // `images.len() <= capacity` live rows are computed, so padded
+        // lanes can never surface stale or duplicated data in replies.
+        plan.run_batch(images)
     }
 }
 
@@ -558,6 +577,43 @@ mod tests {
             rejected
         );
         server.shutdown();
+    }
+
+    #[test]
+    fn partial_batch_at_capacity_matches_single_image_runs() {
+        // Regression (batch-first redesign): a 3-request batch executed
+        // at capacity 8 must reply with each request's own logits —
+        // padded lanes (and stale rows from earlier full batches) must
+        // never reach a reply. Exercised directly against the backend so
+        // the capacity is pinned rather than left to the batcher's
+        // smallest-adequate choice.
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 11, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let backend =
+            EngineBackend::new(net.clone(), params.clone(), modes.clone(), 2, 8);
+        let mut backend = (backend.factory())().unwrap();
+        assert_eq!(backend.batch_sizes().last(), Some(&8));
+
+        let mut rng = Rng::new(12);
+        let images: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(3 * 16 * 16)).collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        // Prime every lane with a full batch, then run the partial one:
+        // whatever the full batch left behind must not leak.
+        let full = backend.infer_batch(&refs, 8).unwrap();
+        assert_eq!(full.len(), 8);
+        let partial = backend.infer_batch(&refs[..3], 8).unwrap();
+        assert_eq!(partial.len(), 3, "one reply per live request, none for padding");
+
+        // Oracle: fresh single-image plans.
+        let mut single = crate::engine::PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(2)
+            .build()
+            .unwrap();
+        for (i, row) in partial.iter().enumerate() {
+            assert_eq!(row, &single.run(&images[i]).unwrap(), "lane {i} leaked");
+        }
     }
 
     #[test]

@@ -178,14 +178,28 @@ pub fn finalize(primary: &SynthesisPlan, modes: &ModeAssignment) -> SynthesisPla
 }
 
 /// Compile a synthesized plan into an immediately executable
-/// [`ExecutionPlan`]: weights baked per the plan's layer modes, buffer
-/// arena sized, thread-pool chunking fixed — the "synthesized software"
-/// in its runnable form. Honours the plan's thread-workload allocation
-/// when it is uniform (ablation plans lower FLP/KLP executors).
+/// [`ExecutionPlan`] with batch capacity 1 — see
+/// [`compile_plan_batched`] for serving-style capacities.
 pub fn compile_plan(
     plan: &SynthesisPlan,
     net: &Network,
     params: &EngineParams,
+) -> Result<ExecutionPlan> {
+    compile_plan_batched(plan, net, params, 1)
+}
+
+/// Compile a synthesized plan into an immediately executable
+/// [`ExecutionPlan`] (via [`crate::engine::PlanBuilder`]): weights
+/// baked per the plan's layer modes, buffer arena sized `batch x`,
+/// thread-pool chunking fixed — the "synthesized software" in its
+/// runnable form, executing up to `batch` images per walk. Honours the
+/// plan's thread-workload allocation when it is uniform (ablation plans
+/// lower FLP/KLP executors).
+pub fn compile_plan_batched(
+    plan: &SynthesisPlan,
+    net: &Network,
+    params: &EngineParams,
+    batch: usize,
 ) -> Result<ExecutionPlan> {
     if params.u != plan.u {
         return Err(Error::Invalid(format!(
@@ -199,13 +213,12 @@ pub fn compile_plan(
         }
         _ => Parallelism::Olp,
     };
-    ExecutionPlan::compile_policy(
-        net,
-        params,
-        &plan.mode_assignment(),
-        ExecConfig { threads: plan.threads },
-        policy,
-    )
+    crate::engine::PlanBuilder::new(net, params)
+        .modes(&plan.mode_assignment())
+        .config(ExecConfig { threads: plan.threads })
+        .policy(policy)
+        .batch(batch)
+        .build()
 }
 
 /// Execute a plan on the native engine (compile + single run; hold the
@@ -343,6 +356,27 @@ mod tests {
             assert_eq!(a, b, "resident plan drifted from one-shot execution");
         }
         assert_eq!(compiled.runs(), 3);
+    }
+
+    #[test]
+    fn batched_compiled_plan_matches_singles() {
+        // One walk over a dynamic batch is bitwise the per-image flow.
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 5, 4).unwrap();
+        let plan = finalize(
+            &PrimarySynthesizer::new(4, 2).synthesize(&net).unwrap(),
+            &ModeAssignment::uniform(ArithMode::Imprecise),
+        );
+        let mut batched = compile_plan_batched(&plan, &net, &params, 4).unwrap();
+        assert_eq!(batched.capacity(), 4);
+        let mut rng = Rng::new(3);
+        let inputs: Vec<Vec<f32>> =
+            (0..3).map(|_| rng.normal_vec(net.input.elements())).collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let rows = batched.run_batch(&refs).unwrap();
+        for (row, input) in rows.iter().zip(&inputs) {
+            assert_eq!(row, &execute_plan(&plan, &net, &params, input).unwrap());
+        }
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Bitwise batch parity: `run_batch` of N images must equal N
+//! independent single-image `run` calls — across every executor family
+//! (map-major OLP, row-major scalar baseline, FLP/KLP ablation), every
+//! arithmetic mode, and thread counts {1, 2, 4}.
+//!
+//! Bitwise equality (not tolerance) is the point: lowering the batch
+//! loop into the step sequence, sizing the arena `B x`, and spanning
+//! one parallel region over `B x alpha` items must be pure refactorings
+//! of the per-image numerics. Partial batches (`len < capacity`) get
+//! the same guarantee — padded lanes never feed replies.
+
+use cappuccino::engine::{
+    ArithMode, EngineParams, ExecutionPlan, ModeAssignment, Parallelism, PlanBuilder,
+};
+use cappuccino::model::{zoo, Network};
+use cappuccino::util::rng::Rng;
+use cappuccino::Error;
+
+const THREAD_SWEEP: [usize; 3] = [1, 2, 4];
+const BATCH: usize = 4;
+
+/// One builder configuration under test.
+#[derive(Clone, Copy)]
+struct Cfg<'m> {
+    modes: Option<&'m ModeAssignment>,
+    threads: usize,
+    policy: Option<Parallelism>,
+    baseline: bool,
+}
+
+impl<'m> Cfg<'m> {
+    fn mapmajor(modes: &'m ModeAssignment, threads: usize) -> Self {
+        Cfg { modes: Some(modes), threads, policy: None, baseline: false }
+    }
+
+    fn policy(modes: &'m ModeAssignment, threads: usize, policy: Parallelism) -> Self {
+        Cfg { modes: Some(modes), threads, policy: Some(policy), baseline: false }
+    }
+
+    fn baseline() -> Self {
+        Cfg { modes: None, threads: 1, policy: None, baseline: true }
+    }
+
+    fn build(&self, net: &Network, params: &EngineParams, batch: usize) -> ExecutionPlan {
+        let mut b = PlanBuilder::new(net, params).threads(self.threads).batch(batch);
+        if let Some(m) = self.modes {
+            b = b.modes(m);
+        }
+        if let Some(p) = self.policy {
+            b = b.policy(p);
+        }
+        if self.baseline {
+            b = b.baseline();
+        }
+        b.build().unwrap()
+    }
+}
+
+fn batch_inputs(net: &Network, seed: u64, n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_vec(net.input.elements())).collect()
+}
+
+/// Compare `run_batch` against per-image `run` for one configuration.
+fn assert_batch_parity(
+    net: &Network,
+    params: &EngineParams,
+    cfg: Cfg<'_>,
+    label: &str,
+    seed: u64,
+) {
+    let inputs = batch_inputs(net, seed, BATCH);
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let mut single = cfg.build(net, params, 1);
+    let mut batched = cfg.build(net, params, BATCH);
+    let rows = batched.run_batch(&refs).unwrap();
+    assert_eq!(rows.len(), BATCH, "{label}: row count");
+    for (i, (row, input)) in rows.iter().zip(&inputs).enumerate() {
+        let want = single.run(input).unwrap();
+        assert_eq!(row, &want, "{label}: batch lane {i} diverged from single run");
+    }
+    // Partial batch over the same (now dirty) arena: live rows only.
+    let partial = batched.run_batch(&refs[..BATCH - 1]).unwrap();
+    assert_eq!(partial.len(), BATCH - 1, "{label}: partial row count");
+    for (i, row) in partial.iter().enumerate() {
+        assert_eq!(row, &rows[i], "{label}: partial lane {i} leaked stale data");
+    }
+}
+
+#[test]
+fn mapmajor_batches_bitwise_match_singles_across_modes_threads() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 60, 4).unwrap();
+    for mode in ArithMode::ALL {
+        let modes = ModeAssignment::uniform(mode);
+        for threads in THREAD_SWEEP {
+            assert_batch_parity(
+                &net,
+                &params,
+                Cfg::mapmajor(&modes, threads),
+                &format!("map-major mode={mode} threads={threads}"),
+                61,
+            );
+        }
+    }
+}
+
+#[test]
+fn baseline_batches_bitwise_match_singles() {
+    // The baseline family pins precise/1-thread itself; the batch
+    // dimension is the only variable.
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 62, 4).unwrap();
+    assert_batch_parity(&net, &params, Cfg::baseline(), "baseline", 63);
+}
+
+#[test]
+fn flp_klp_batches_bitwise_match_singles_across_modes_threads() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 64, 4).unwrap();
+    for policy in [Parallelism::Flp, Parallelism::Klp] {
+        for mode in ArithMode::ALL {
+            let modes = ModeAssignment::uniform(mode);
+            for threads in THREAD_SWEEP {
+                assert_batch_parity(
+                    &net,
+                    &params,
+                    Cfg::policy(&modes, threads, policy),
+                    &format!("{policy} mode={mode} threads={threads}"),
+                    65,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fork_and_lrn_lowerings_keep_batch_parity() {
+    // Fork/concat (fire module), LRN, flatten->dense->softmax: every
+    // batched step kind in one network.
+    use cappuccino::config::parse_cappnet;
+    let net = parse_cappnet(
+        "net mixed\ninput 3 23 23\nclasses 8\n\
+         conv conv1 m=8 k=3 s=1 p=1\nlrn size=3\nmaxpool k=2 s=2\n\
+         fire fire2 s1=8 e1=8 e3=8\n\
+         conv conv3 m=8 k=1 s=1 p=0\navgpool k=2 s=2\n\
+         flatten\ndense fc1 o=16 relu=1\ndense fc2 o=8 relu=0\nsoftmax\n",
+    )
+    .unwrap();
+    let params = EngineParams::random(&net, 66, 4).unwrap();
+    let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+    for threads in THREAD_SWEEP {
+        assert_batch_parity(
+            &net,
+            &params,
+            Cfg::mapmajor(&modes, threads),
+            &format!("mixed threads={threads}"),
+            67,
+        );
+    }
+}
+
+#[test]
+fn mixed_per_layer_modes_keep_batch_parity() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 68, 4).unwrap();
+    let modes = ModeAssignment::uniform(ArithMode::Imprecise)
+        .with("conv2", ArithMode::Precise)
+        .with("fc5", ArithMode::Relaxed);
+    assert_batch_parity(&net, &params, Cfg::mapmajor(&modes, 2), "mixed-modes", 69);
+}
+
+#[test]
+fn run_batch_into_matches_run_batch() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 70, 4).unwrap();
+    let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+    let mut plan = Cfg::mapmajor(&modes, 2).build(&net, &params, BATCH);
+    let inputs = batch_inputs(&net, 71, BATCH);
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let rows = plan.run_batch(&refs).unwrap();
+    let out_len = plan.output_len();
+    let mut flat = vec![0.0f32; BATCH * out_len];
+    plan.run_batch_into(&refs, &mut flat).unwrap();
+    for (r, row) in rows.iter().enumerate() {
+        assert_eq!(&flat[r * out_len..(r + 1) * out_len], row.as_slice(), "row {r}");
+    }
+}
+
+#[test]
+fn capacity_and_shape_violations_rejected() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 72, 4).unwrap();
+    let mut plan = PlanBuilder::new(&net, &params).batch(2).build().unwrap();
+    let inputs = batch_inputs(&net, 73, 3);
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    // Over capacity.
+    assert!(matches!(plan.run_batch(&refs), Err(Error::Invalid(_))));
+    // Bad row length.
+    let bad = [&refs[0][..7]];
+    assert!(matches!(plan.run_batch(&bad), Err(Error::Shape(_))));
+    // Nothing executed.
+    assert_eq!(plan.runs(), 0);
+}

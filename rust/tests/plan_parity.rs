@@ -11,7 +11,7 @@
 use cappuccino::config::parse_cappnet;
 use cappuccino::engine::{
     pool_threads_spawned, run_baseline_legacy, run_mapmajor_legacy, ArithMode, EngineParams,
-    ExecConfig, ExecutionPlan, ModeAssignment, Parallelism,
+    ExecConfig, ModeAssignment, Parallelism, PlanBuilder,
 };
 use cappuccino::model::{zoo, Network};
 use cappuccino::testing::{check, close, Gen};
@@ -52,7 +52,8 @@ fn plan_bitwise_matches_legacy_across_zoo_modes_threads() {
             for threads in THREAD_SWEEP {
                 let cfg = ExecConfig { threads };
                 let want = run_mapmajor_legacy(net, &params, &input, &modes, cfg).unwrap();
-                let mut plan = ExecutionPlan::compile(net, &params, &modes, cfg).unwrap();
+                let mut plan =
+                    PlanBuilder::new(net, &params).modes(&modes).config(cfg).build().unwrap();
                 let got = plan.run(&input).unwrap();
                 assert_eq!(
                     got, want,
@@ -71,7 +72,7 @@ fn baseline_plan_bitwise_matches_legacy() {
         let mut rng = Rng::new(400 + ni as u64);
         let input = rng.normal_vec(net.input.elements());
         let want = run_baseline_legacy(net, &params, &input).unwrap();
-        let mut plan = ExecutionPlan::compile_baseline(net, &params).unwrap();
+        let mut plan = PlanBuilder::new(net, &params).baseline().build().unwrap();
         let got = plan.run(&input).unwrap();
         assert_eq!(got, want, "{}: baseline plan diverged", net.name);
     }
@@ -87,7 +88,8 @@ fn resident_plan_stays_bitwise_identical_across_requests() {
         .with("conv2", ArithMode::Precise)
         .with("fc5", ArithMode::Relaxed);
     let cfg = ExecConfig { threads: 2 };
-    let mut plan = ExecutionPlan::compile(&net, &params, &modes, cfg).unwrap();
+    let mut plan =
+        PlanBuilder::new(&net, &params).modes(&modes).config(cfg).build().unwrap();
     let mut rng = Rng::new(501);
     for i in 0..12 {
         let input = rng.normal_vec(net.input.elements());
@@ -115,7 +117,10 @@ fn prop_random_mode_assignments_bitwise_match() {
         let input = g.normal_vec(net.input.elements());
         let want = run_mapmajor_legacy(&net, &params, &input, &modes, cfg)
             .map_err(|e| e.to_string())?;
-        let got = ExecutionPlan::compile(&net, &params, &modes, cfg)
+        let got = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .config(cfg)
+            .build()
             .map_err(|e| e.to_string())?
             .run(&input)
             .map_err(|e| e.to_string())?;
@@ -137,7 +142,8 @@ fn squeezenet_compiles_and_matches_legacy() {
     let mut rng = Rng::new(701);
     let input = rng.normal_vec(net.input.elements());
     let want = run_mapmajor_legacy(&net, &params, &input, &modes, cfg).unwrap();
-    let mut plan = ExecutionPlan::compile(&net, &params, &modes, cfg).unwrap();
+    let mut plan =
+        PlanBuilder::new(&net, &params).modes(&modes).config(cfg).build().unwrap();
     let got = plan.run(&input).unwrap();
     assert_eq!(got, want, "squeezenet plan diverged from legacy");
     // Steady state: request-path heap traffic is the logits vector only.
@@ -150,13 +156,11 @@ fn googlenet_plan_compiles() {
     // debug-mode test is wasteful; lowering exercises every layer kind).
     let net = zoo::googlenet();
     let params = EngineParams::random(&net, 800, 4).unwrap();
-    let plan = ExecutionPlan::compile(
-        &net,
-        &params,
-        &ModeAssignment::uniform(ArithMode::Imprecise),
-        ExecConfig { threads: 4 },
-    )
-    .unwrap();
+    let plan = PlanBuilder::new(&net, &params)
+        .modes(&ModeAssignment::uniform(ArithMode::Imprecise))
+        .threads(4)
+        .build()
+        .unwrap();
     assert!(plan.step_count() > 50, "googlenet lowered to {} steps", plan.step_count());
     assert!(plan.arena_bytes() > 0 && plan.baked_param_bytes() > 0);
 }
@@ -167,7 +171,8 @@ fn warm_pool_spawns_no_threads_per_inference() {
     let params = EngineParams::random(&net, 900, 4).unwrap();
     let modes = ModeAssignment::uniform(ArithMode::Imprecise);
     let cfg = ExecConfig { threads: 8 };
-    let mut plan = ExecutionPlan::compile(&net, &params, &modes, cfg).unwrap();
+    let mut plan =
+        PlanBuilder::new(&net, &params).modes(&modes).config(cfg).build().unwrap();
     let mut rng = Rng::new(901);
     let input = rng.normal_vec(net.input.elements());
     plan.run(&input).unwrap(); // warm the global pool
@@ -198,14 +203,11 @@ fn flp_klp_policy_plans_track_legacy_numerics() {
     let want = run_baseline_legacy(&net, &params, &input).unwrap();
     for policy in [Parallelism::Flp, Parallelism::Klp] {
         for threads in THREAD_SWEEP {
-            let mut plan = ExecutionPlan::compile_policy(
-                &net,
-                &params,
-                &ModeAssignment::uniform(ArithMode::Precise),
-                ExecConfig { threads },
-                policy,
-            )
-            .unwrap();
+            let mut plan = PlanBuilder::new(&net, &params)
+                .threads(threads)
+                .policy(policy)
+                .build()
+                .unwrap();
             let got = plan.run(&input).unwrap();
             close(&got, &want, 1e-4).unwrap_or_else(|e| {
                 panic!("{policy} threads={threads}: {e}");
@@ -225,14 +227,9 @@ fn oversized_window_is_shape_error_in_both_executors() {
     match EngineParams::random(&net, 0, 4) {
         Err(e) => assert!(matches!(e, Error::Shape(_)), "unexpected error {e}"),
         Ok(params) => {
-            let r = ExecutionPlan::compile(
-                &net,
-                &params,
-                &ModeAssignment::uniform(ArithMode::Precise),
-                ExecConfig::default(),
-            );
+            let r = PlanBuilder::new(&net, &params).build();
             assert!(matches!(r, Err(Error::Shape(_))));
-            let r = ExecutionPlan::compile_baseline(&net, &params);
+            let r = PlanBuilder::new(&net, &params).baseline().build();
             assert!(matches!(r, Err(Error::Shape(_))));
         }
     }
