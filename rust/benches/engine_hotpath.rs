@@ -9,6 +9,13 @@
 //! resident, weights baked, persistent thread pool), and reports the
 //! measured heap traffic per inference so the arena win is a number,
 //! not an anecdote.
+//!
+//! The packed/tiled sweep at the end compares legacy vs the PR 2 plan
+//! (`packing(false)`, unpacked row walk) vs the packed+tiled plan over
+//! `B x threads`, and `--json` writes the whole sweep to
+//! `BENCH_engine_hotpath.json` so the perf trajectory is recorded as a
+//! machine-readable CI artifact from this PR onward (no threshold
+//! gate).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,6 +27,7 @@ use cappuccino::engine::{
 };
 use cappuccino::layout;
 use cappuccino::model::zoo;
+use cappuccino::util::json::Json;
 use cappuccino::util::rng::Rng;
 
 /// Counting allocator: measures the real heap traffic of one inference
@@ -255,6 +263,140 @@ fn main() {
                 "WARNING: batched B=8 throughput below looped single-image \
                  ({b8_speedup:.2}x) — expected >= 1.0x on an idle machine"
             );
+        }
+    }
+
+    // -- Packed/tiled sweep: legacy vs PR 2 plan vs packed+tiled ----------
+    //
+    // Three executors per (B, threads) cell on the same network:
+    //   legacy  — pre-plan interpreter, per-image walk
+    //   plan    — compiled plan, unpacked row-walk (the PR 2 hot path)
+    //   packed  — compiled plan, tap-major panels + row-tile macro-kernel
+    // `--json` additionally writes every row to BENCH_engine_hotpath.json.
+    {
+        let json_mode = std::env::args().any(|a| a == "--json");
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 9, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let mut rng = Rng::new(0xBEEF);
+        let mut table = Table::new(&[
+            "path",
+            "B",
+            "threads",
+            "time/img(ms)",
+            "imgs/s",
+            "alloc/img",
+            "vs legacy",
+        ]);
+        let mut json_rows: Vec<Json> = Vec::new();
+        let mut packed_vs_plan_b8_t4 = 0.0f64;
+        for threads in [1usize, 2, 4] {
+            for b in [1usize, 4, 8] {
+                let inputs: Vec<Vec<f32>> =
+                    (0..b).map(|_| rng.normal_vec(net.input.elements())).collect();
+                let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                let exec = ExecConfig { threads };
+
+                let legacy = bench(format!("sweep-legacy-t{threads}-b{b}"), cfg, || {
+                    for img in &inputs {
+                        std::hint::black_box(
+                            cappuccino::engine::run_mapmajor_legacy(
+                                &net, &params, img, &modes, exec,
+                            )
+                            .unwrap(),
+                        );
+                    }
+                });
+                let legacy_alloc = heap_bytes_during(|| {
+                    for img in &inputs {
+                        std::hint::black_box(
+                            cappuccino::engine::run_mapmajor_legacy(
+                                &net, &params, img, &modes, exec,
+                            )
+                            .unwrap(),
+                        );
+                    }
+                }) as f64
+                    / b as f64;
+
+                let mut unpacked_plan = PlanBuilder::new(&net, &params)
+                    .modes(&modes)
+                    .threads(threads)
+                    .batch(b)
+                    .packing(false)
+                    .build()
+                    .unwrap();
+                let unpacked = bench(format!("sweep-plan-t{threads}-b{b}"), cfg, || {
+                    std::hint::black_box(unpacked_plan.run_batch(&refs).unwrap());
+                });
+
+                let mut packed_plan = PlanBuilder::new(&net, &params)
+                    .modes(&modes)
+                    .threads(threads)
+                    .batch(b)
+                    .build()
+                    .unwrap();
+                let packed = bench(format!("sweep-packed-t{threads}-b{b}"), cfg, || {
+                    std::hint::black_box(packed_plan.run_batch(&refs).unwrap());
+                });
+
+                if threads == 4 && b == 8 {
+                    packed_vs_plan_b8_t4 = unpacked.mean_ms / packed.mean_ms;
+                }
+
+                let cells: [(&str, f64, f64); 3] = [
+                    ("legacy", legacy.mean_ms, legacy_alloc),
+                    ("plan", unpacked.mean_ms, unpacked_plan.alloc_bytes_per_run()),
+                    ("packed", packed.mean_ms, packed_plan.alloc_bytes_per_run()),
+                ];
+                for (path, mean_ms, alloc_per_img) in cells {
+                    let per_img = mean_ms / b as f64;
+                    let imgs_per_s = b as f64 / (mean_ms / 1e3);
+                    let speedup = legacy.mean_ms / mean_ms;
+                    table.row(&[
+                        path.into(),
+                        b.to_string(),
+                        threads.to_string(),
+                        ms(per_img),
+                        format!("{imgs_per_s:.0}"),
+                        format!("{alloc_per_img:.0} B"),
+                        format!("{speedup:.2}x"),
+                    ]);
+                    json_rows.push(Json::obj(vec![
+                        ("path", Json::str(path)),
+                        ("batch", Json::num(b as f64)),
+                        ("threads", Json::num(threads as f64)),
+                        ("time_ms_per_img", Json::num(per_img)),
+                        ("imgs_per_s", Json::num(imgs_per_s)),
+                        ("alloc_bytes_per_img", Json::num(alloc_per_img)),
+                        ("speedup_vs_legacy", Json::num(speedup)),
+                    ]));
+                }
+            }
+        }
+        println!("\n# Packed/tiled sweep — legacy vs PR 2 plan vs packed plan\n");
+        table.print();
+        println!(
+            "\npacked+tiled vs PR 2 plan at B=8, threads=4: {packed_vs_plan_b8_t4:.2}x"
+        );
+        // Trend flag, not a gate: loaded CI machines make single
+        // measurements flaky.
+        if packed_vs_plan_b8_t4 < 1.0 {
+            eprintln!(
+                "WARNING: packed+tiled plan below the unpacked plan at B=8/t=4 \
+                 ({packed_vs_plan_b8_t4:.2}x) — expected >= 1.0x on an idle machine"
+            );
+        }
+        if json_mode {
+            let doc = Json::obj(vec![
+                ("bench", Json::str("engine_hotpath")),
+                ("network", Json::str(net.name.clone())),
+                ("packed_vs_plan_b8_t4", Json::num(packed_vs_plan_b8_t4)),
+                ("rows", Json::Arr(json_rows)),
+            ]);
+            std::fs::write("BENCH_engine_hotpath.json", doc.to_string())
+                .expect("write BENCH_engine_hotpath.json");
+            println!("wrote BENCH_engine_hotpath.json");
         }
     }
 

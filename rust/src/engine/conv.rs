@@ -22,12 +22,104 @@
 //! *activations* only (the one operand that is dynamic per inference).
 //! Precise and the inexact modes still share one inner loop, so
 //! numerics match the L1 kernel.
+//!
+//! ## Packed panels + row-tile macro-kernel (compiled-plan hot path)
+//!
+//! [`conv_mm`] walks the `(Mb, u, Cb, K, K, u)` weight layout and pays
+//! a `u`-load gather per tap to assemble the `u x u` tap block. The
+//! compiled plan instead repacks weights into **tap-major panels**
+//! ([`crate::layout::pack_conv_panels`]) and runs
+//! [`conv_mm_packed`] / `conv_mm_packed_core`: the kernel streams the
+//! panel strictly sequentially (each tap one contiguous `u*u` block),
+//! and the item space is tiled into `(batch row, stack tile)` macro
+//! items walked as `(oh band, ms)` so each padded input row loaded into
+//! cache serves up to `ceil(k/s)` output rows across [`ConvTiling::tm`]
+//! stacks before eviction. Tile sizes come from a small L1/L2 cost
+//! model ([`ConvTiling::choose`]) at plan-compile time. Both kernels
+//! keep the exact per-element tap order and dot expressions of the
+//! unpacked kernels, so packed output is **bitwise identical** — the
+//! unpacked kernels stay as the parity oracle and ablation reference.
 
 use crate::engine::mode::{mode_cast, ArithMode};
-use crate::engine::parallel::{parallel_for_slices, parallel_reduce};
+use crate::engine::parallel::{parallel_for_macro_slices, parallel_reduce};
 use crate::engine::tensor::MapTensor;
 use crate::util::ceil_div;
 use std::ops::Range;
+
+/// Output pixels per accumulator tile in the map-major row kernels
+/// (`OW_TILE x u` floats — 8 SIMD registers at AVX width for `u = 4`).
+pub(crate) const OW_TILE: usize = 8;
+
+/// Row-tile macro-kernel tile sizes for one conv layer (the compiled
+/// plan stores one per lowered conv step).
+///
+/// A macro work item covers `tm` output stacks of one image; within it
+/// the rows are walked in bands of `th` with the stack loop innermost,
+/// so each padded input row loaded into cache serves up to `ceil(k/s)`
+/// output rows across `tm` stacks before eviction — the paper's "load
+/// each kernel once, reuse it `Ho x Wo` times" argument applied to the
+/// input side as well. `{tm: 1, th: 1}` degenerates to the plain
+/// row-walk order (the ablation reference).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvTiling {
+    /// Output stacks per macro item (>= 1; clamped to `Mb`).
+    pub tm: usize,
+    /// Output rows per band within a macro item (>= 1; clamped to `Ho`).
+    pub th: usize,
+}
+
+impl ConvTiling {
+    /// L1 budget of the compile-time cost model (bytes).
+    pub const L1_BYTES: usize = 32 * 1024;
+    /// L2 budget of the compile-time cost model (bytes).
+    pub const L2_BYTES: usize = 512 * 1024;
+
+    /// Pick tile sizes for one lowered conv layer from the layer's
+    /// streamed working sets:
+    ///
+    /// * `tm` — output stacks whose packed panels
+    ///   (`tm * Cb*K*K*u*u` floats, re-streamed once per output row)
+    ///   fit in half of [`ConvTiling::L2_BYTES`], capped at 8.
+    /// * `th` — output rows per band, capped at 16, bounded twice: the
+    ///   band's padded input working set (`(th-1)*s + k` input rows
+    ///   across all `Cb` stacks) must fit in the other half of L2, and
+    ///   the single-stack slice of those rows (what the innermost tap
+    ///   loop walks repeatedly) must fit in
+    ///   [`ConvTiling::L1_BYTES`].
+    pub fn choose(
+        cb: usize,
+        wp: usize,
+        u: usize,
+        k: usize,
+        s: usize,
+        mb: usize,
+        ho: usize,
+    ) -> ConvTiling {
+        let budget = Self::L2_BYTES / 2;
+        let panel_bytes = 4 * cb * k * k * u * u;
+        let tm = (budget / panel_bytes.max(1)).clamp(1, 8);
+        let row_bytes = 4 * cb * wp * u; // all stacks, one padded row
+        let stack_row_bytes = 4 * wp * u; // one stack, one padded row
+        let max_rows = (budget / row_bytes.max(1))
+            .min(Self::L1_BYTES / stack_row_bytes.max(1));
+        let th = if max_rows > k {
+            ((max_rows - k) / s.max(1) + 1).min(16)
+        } else {
+            1
+        };
+        ConvTiling { tm, th }.clamped(mb, ho)
+    }
+
+    /// Clamp to a layer's actual `Mb x Ho` grid (a builder override may
+    /// exceed a small layer; oversized tiles are harmless but clamped
+    /// so remainder arithmetic stays trivial).
+    pub(crate) fn clamped(self, mb: usize, ho: usize) -> ConvTiling {
+        ConvTiling {
+            tm: self.tm.clamp(1, mb.max(1)),
+            th: self.th.clamp(1, ho.max(1)),
+        }
+    }
+}
 
 /// Output spatial size. Shape inference ([`crate::model::shapes::infer`])
 /// validates `k <= size + 2p` ahead of time and turns violations into
@@ -189,6 +281,12 @@ pub fn conv_mm(
     };
 
     let mut out = MapTensor::zeros(m, ho, wo, u);
+    // Per-chunk tap scratch, hoisted out of the row kernel: one u x u
+    // block per thread for the whole call instead of one heap
+    // allocation per output row (the generic-u path's old cost). The
+    // u = 4 register kernel needs none — empty rows allocate nothing.
+    let tap_row = if u == 4 { 0 } else { u * u };
+    let mut tap_scratch = row_scratch(threads, tap_row);
     conv_mm_core(
         x,
         cb * hp * wp * u,
@@ -207,8 +305,15 @@ pub fn conv_mm(
         relu,
         threads,
         1,
+        &mut tap_scratch,
     );
     out
+}
+
+/// Per-thread scratch rows for the allocating kernel wrappers (the
+/// compiled plan holds these in its arena instead).
+fn row_scratch(threads: usize, row_len: usize) -> Vec<Vec<f32>> {
+    (0..threads.max(1)).map(|_| vec![0.0f32; row_len]).collect()
 }
 
 /// Map-major conv inner engine: pre-padded, pre-cast input in; output
@@ -221,7 +326,9 @@ pub fn conv_mm(
 /// image. Each chunk owns a disjoint contiguous slice of the output, so
 /// writes need zero synchronisation — the zero-overhead map-major store
 /// of section IV.B.1. Per-item numerics are independent of `rows` and
-/// chunking (bitwise batch parity).
+/// chunking (bitwise batch parity). `tap_scratch` supplies one row per
+/// chunk (>= `u*u` floats each; may be empty rows when `u == 4`) for
+/// the generic-`u` tap block — no allocation inside the loop.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn conv_mm_core(
     x: &[f32],
@@ -241,6 +348,7 @@ pub(crate) fn conv_mm_core(
     relu: bool,
     threads: usize,
     rows: usize,
+    tap_scratch: &mut [Vec<f32>],
 ) {
     let out_row_len = wo * u;
     let per_image = mb * ho;
@@ -252,27 +360,32 @@ pub(crate) fn conv_mm_core(
     if threads <= 1 || items <= 1 {
         // Inline path: zero dispatch, zero allocation (the compiled
         // plan's steady-state contract at threads = 1).
+        let tap = tap_scratch
+            .first_mut()
+            .map(|v| v.as_mut_slice())
+            .unwrap_or(&mut []);
         for item in 0..items {
             let xi = &x[(item / per_image) * x_stride..][..x_len];
             let ms = (item % per_image) / ho;
             let oh = item % ho;
             let row = &mut out[item * out_row_len..(item + 1) * out_row_len];
-            conv_mm_row(xi, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu);
+            conv_mm_row(xi, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu, tap);
         }
         return;
     }
-    parallel_for_slices(
+    parallel_for_macro_slices(
         items,
         threads,
-        out_row_len,
         out,
-        &|range: Range<usize>, slice: &mut [f32]| {
+        &|i| i * out_row_len,
+        tap_scratch,
+        &|range: Range<usize>, slice: &mut [f32], tap: &mut [f32]| {
             for (j, item) in range.enumerate() {
                 let xi = &x[(item / per_image) * x_stride..][..x_len]; // batch lane
                 let ms = (item % per_image) / ho; // output stack
                 let oh = item % ho; // output row
                 let row = &mut slice[j * out_row_len..(j + 1) * out_row_len];
-                conv_mm_row(xi, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu);
+                conv_mm_row(xi, wgt, b_mm, row, ms, oh, cb, hp, wp, u, k, s, wo, relu, tap);
             }
         },
     );
@@ -287,7 +400,9 @@ pub(crate) fn conv_mm_core(
 /// row-level analogue of the paper's "load each kernel once, use it
 /// `Wout x Hout` times" OLP-reuse argument. A `u = 4` specialisation
 /// uses fixed-size arrays so LLVM keeps the accumulator block and the
-/// tap block in SIMD registers.
+/// tap block in SIMD registers. The generic-`u` tap block lives in
+/// `tap_scratch` (>= `u*u` floats, caller-provided) — the per-row heap
+/// allocation it used to make is gone.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn conv_mm_row(
@@ -305,6 +420,7 @@ fn conv_mm_row(
     s: usize,
     wo: usize,
     relu: bool,
+    tap_scratch: &mut [f32],
 ) {
     debug_assert_eq!(row.len(), wo * u);
     if u == 4 {
@@ -316,7 +432,7 @@ fn conv_mm_row(
     for ow in 0..wo {
         row[ow * u..(ow + 1) * u].copy_from_slice(bias);
     }
-    let mut tap = vec![0.0f32; u * u]; // [ol][l]
+    let tap = &mut tap_scratch[..u * u]; // [ol][l]
     for cs in 0..cb {
         for kh in 0..k {
             let ih = oh * s + kh;
@@ -371,16 +487,15 @@ fn conv_mm_row_u4(
     relu: bool,
 ) {
     const U: usize = 4;
-    /// Output pixels held in registers per tile (iteration 2: keeps the
-    /// accumulator block out of memory across the whole tap loop).
-    const TILE: usize = 8;
     let bias: [f32; U] = b_mm[ms * U..(ms + 1) * U].try_into().unwrap();
 
     let mut ow0 = 0;
     while ow0 < wo {
-        let tile_len = TILE.min(wo - ow0);
-        // Accumulator tile: TILE x U f32 = 8 SIMD registers at AVX width.
-        let mut acc = [[0.0f32; U]; TILE];
+        let tile_len = OW_TILE.min(wo - ow0);
+        // Accumulator tile: OW_TILE x U f32 = 8 SIMD registers at AVX
+        // width (iteration 2: keeps the accumulator block out of memory
+        // across the whole tap loop).
+        let mut acc = [[0.0f32; U]; OW_TILE];
         for a in acc.iter_mut().take(tile_len) {
             *a = bias;
         }
@@ -404,6 +519,358 @@ fn conv_mm_row_u4(
                         for (ol, t) in tap.iter().enumerate() {
                             a[ol] +=
                                 xv[0] * t[0] + xv[1] * t[1] + xv[2] * t[2] + xv[3] * t[3];
+                        }
+                        xoff += s * U;
+                    }
+                }
+            }
+        }
+        for (i, a) in acc.iter().take(tile_len).enumerate() {
+            row[(ow0 + i) * U..(ow0 + i + 1) * U].copy_from_slice(a);
+        }
+        ow0 += tile_len;
+    }
+    if relu {
+        for a in row.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed-panel tiled kernels (the compiled plan's conv hot path)
+// ---------------------------------------------------------------------------
+
+/// [`conv_mm`] over **packed tap-major panels**
+/// ([`crate::layout::pack_conv_panels`]) with the row-tile macro-kernel
+/// — the compiled plan's conv hot path, exposed for the layout ablation
+/// bench and direct kernel tests. Bitwise identical to [`conv_mm`] fed
+/// the same baked weights in the unpacked layout, for any `tile`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_mm_packed(
+    input: &MapTensor,
+    w_pack: &[f32],
+    b_mm: &[f32],
+    m: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    relu: bool,
+    mode: ArithMode,
+    threads: usize,
+    tile: ConvTiling,
+) -> MapTensor {
+    let u = input.u;
+    let cb = input.stacks();
+    let mb = ceil_div(m, u);
+    assert_eq!(w_pack.len(), mb * cb * k * k * u * u, "conv_mm_packed: weight len");
+    assert_eq!(b_mm.len(), mb * u, "conv_mm_packed: bias len");
+
+    let padded = input.pad_spatial(p);
+    let (hp, wp) = (padded.h, padded.w);
+    assert!(
+        hp >= k && wp >= k,
+        "conv_mm_packed: window k={k} larger than padded input {hp}x{wp}"
+    );
+    let ho = (hp - k) / s + 1;
+    let wo = (wp - k) / s + 1;
+
+    let x_c;
+    let x: &[f32] = if mode == ArithMode::Precise {
+        &padded.data
+    } else {
+        x_c = cast_buf(&padded.data, mode);
+        &x_c
+    };
+
+    let mut out = MapTensor::zeros(m, ho, wo, u);
+    let row_len = if u == 4 { 0 } else { (u * u).max(OW_TILE * u) };
+    let mut scratch = row_scratch(threads, row_len);
+    conv_mm_packed_core(
+        x,
+        cb * hp * wp * u,
+        hp,
+        wp,
+        cb,
+        u,
+        w_pack,
+        b_mm,
+        &mut out.data,
+        mb,
+        k,
+        s,
+        ho,
+        wo,
+        relu,
+        threads,
+        1,
+        tile,
+        &mut scratch,
+    );
+    out
+}
+
+/// Geometry of one packed conv dispatch, bundled so the macro-item
+/// walker stays below a sane argument count.
+#[derive(Clone, Copy)]
+struct PackedGeo {
+    hp: usize,
+    wp: usize,
+    cb: usize,
+    u: usize,
+    mb: usize,
+    k: usize,
+    s: usize,
+    ho: usize,
+    wo: usize,
+    relu: bool,
+    /// Clamped tile sizes.
+    tm: usize,
+    th: usize,
+    /// Stack-tile count `ceil(mb / tm)`.
+    n_mt: usize,
+}
+
+/// Packed-panel tiled conv engine: the batched analogue of
+/// [`conv_mm_core`] reading tap-major panels. The item space is
+/// `rows x ceil(mb/tm)` **macro items** — one item covers `tm` output
+/// stacks (all `ho` rows) of one image, so every item owns one
+/// contiguous output block and chunk boundaries always fall on tile
+/// boundaries (`tm` is shrunk at dispatch when the item count could
+/// not otherwise feed every thread). `scratch` supplies one per-chunk
+/// row (>=
+/// `max(u*u, OW_TILE*u)` floats for generic `u`; empty rows suffice at
+/// `u = 4`) holding the row kernel's accumulator tile. Bitwise
+/// identical to [`conv_mm_core`] on the unpacked layout.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_mm_packed_core(
+    x: &[f32],
+    x_stride: usize,
+    hp: usize,
+    wp: usize,
+    cb: usize,
+    u: usize,
+    w_pack: &[f32],
+    b_mm: &[f32],
+    out: &mut [f32],
+    mb: usize,
+    k: usize,
+    s: usize,
+    ho: usize,
+    wo: usize,
+    relu: bool,
+    threads: usize,
+    rows: usize,
+    tile: ConvTiling,
+    scratch: &mut [Vec<f32>],
+) {
+    let out_row_len = wo * u;
+    let x_len = cb * hp * wp * u;
+    let ConvTiling { mut tm, th } = tile.clamped(mb, ho);
+    // Load balance: shrink the stack tile until the macro-item count
+    // can feed every thread (small batches of wide-tile layers would
+    // otherwise serialise). Tiling is bitwise-invariant, so this only
+    // moves work boundaries, never numerics.
+    while tm > 1 && rows * ceil_div(mb, tm) < threads {
+        tm = ceil_div(tm, 2);
+    }
+    let n_mt = ceil_div(mb, tm);
+    let items = rows * n_mt;
+    let total = rows * mb * ho * out_row_len;
+    debug_assert!(x_stride >= x_len, "conv_mm_packed_core: x stride");
+    debug_assert!(out.len() >= total, "conv_mm_packed_core: out len");
+    let out = &mut out[..total];
+    let g = PackedGeo { hp, wp, cb, u, mb, k, s, ho, wo, relu, tm, th, n_mt };
+    if threads <= 1 || items <= 1 {
+        let sc = scratch
+            .first_mut()
+            .map(|v| v.as_mut_slice())
+            .unwrap_or(&mut []);
+        packed_macro_items(0..items, out, sc, x, x_stride, x_len, w_pack, b_mm, g);
+        return;
+    }
+    parallel_for_macro_slices(
+        items,
+        threads,
+        out,
+        &|i: usize| (i / n_mt * mb + (i % n_mt) * tm) * ho * out_row_len,
+        scratch,
+        &|range: Range<usize>, slice: &mut [f32], sc: &mut [f32]| {
+            packed_macro_items(range, slice, sc, x, x_stride, x_len, w_pack, b_mm, g);
+        },
+    );
+}
+
+/// Walk a contiguous range of macro items: per item, rows advance in
+/// bands of `th` with the stack loop innermost — the input rows of the
+/// band stay cached while all `tm` stacks consume them, and `k > s`
+/// windows re-use `k - s` of them on the next row.
+#[allow(clippy::too_many_arguments)]
+fn packed_macro_items(
+    range: Range<usize>,
+    slice: &mut [f32],
+    scratch: &mut [f32],
+    x: &[f32],
+    x_stride: usize,
+    x_len: usize,
+    w_pack: &[f32],
+    b_mm: &[f32],
+    g: PackedGeo,
+) {
+    let out_row_len = g.wo * g.u;
+    let mut off = 0usize;
+    for item in range {
+        let (r, t) = (item / g.n_mt, item % g.n_mt);
+        let ms0 = t * g.tm;
+        let tm_eff = g.tm.min(g.mb - ms0); // remainder stack tile
+        let xi = &x[r * x_stride..][..x_len];
+        let block_len = tm_eff * g.ho * out_row_len;
+        let block = &mut slice[off..off + block_len];
+        let mut oh0 = 0;
+        while oh0 < g.ho {
+            let th_eff = g.th.min(g.ho - oh0); // remainder row band
+            for oh in oh0..oh0 + th_eff {
+                for mi in 0..tm_eff {
+                    let ms = ms0 + mi;
+                    let row = &mut block[(mi * g.ho + oh) * out_row_len..][..out_row_len];
+                    conv_mm_packed_row(
+                        xi, w_pack, b_mm, row, ms, oh, g.cb, g.hp, g.wp, g.u, g.k, g.s,
+                        g.wo, g.relu, scratch,
+                    );
+                }
+            }
+            oh0 += th_eff;
+        }
+        off += block_len;
+    }
+}
+
+/// Compute one output row from packed panels: the panel for stack `ms`
+/// is streamed strictly sequentially (`w_off` only ever advances by
+/// `u*u`), so the unpacked layout's per-tap gather is gone. Tap order
+/// and dot expressions match [`conv_mm_row`] exactly — bitwise
+/// identical output.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn conv_mm_packed_row(
+    x: &[f32],
+    w_pack: &[f32],
+    b_mm: &[f32],
+    row: &mut [f32],
+    ms: usize,
+    oh: usize,
+    cb: usize,
+    hp: usize,
+    wp: usize,
+    u: usize,
+    k: usize,
+    s: usize,
+    wo: usize,
+    relu: bool,
+    scratch: &mut [f32],
+) {
+    debug_assert_eq!(row.len(), wo * u);
+    if u == 4 {
+        conv_mm_packed_row_u4(x, w_pack, b_mm, row, ms, oh, cb, hp, wp, k, s, wo, relu);
+        return;
+    }
+    // Generic-u path: the ow-tile accumulator block lives in the
+    // caller's per-thread scratch — zero allocations at any u.
+    let bias = &b_mm[ms * u..(ms + 1) * u];
+    let panel0 = ms * cb * k * k * u * u;
+    debug_assert!(scratch.len() >= OW_TILE * u, "conv_mm_packed_row: scratch");
+    let mut ow0 = 0;
+    while ow0 < wo {
+        let tl = OW_TILE.min(wo - ow0);
+        let acc = &mut scratch[..tl * u];
+        for a in acc.chunks_exact_mut(u) {
+            a.copy_from_slice(bias);
+        }
+        let mut w_off = panel0;
+        for cs in 0..cb {
+            for kh in 0..k {
+                let ih = oh * s + kh;
+                let x_row = &x[((cs * hp + ih) * wp) * u..((cs * hp + ih) * wp + wp) * u];
+                for kw in 0..k {
+                    let tap = &w_pack[w_off..w_off + u * u]; // [ol][il], contiguous
+                    w_off += u * u;
+                    for (j, a) in acc.chunks_exact_mut(u).enumerate() {
+                        // One u-wide superword load of input lanes (Fig. 6).
+                        let x0 = ((ow0 + j) * s + kw) * u;
+                        let xv = &x_row[x0..x0 + u];
+                        for (ol, av) in a.iter_mut().enumerate() {
+                            let wv = &tap[ol * u..(ol + 1) * u];
+                            let mut dot = 0.0f32;
+                            for (xl, wl) in xv.iter().zip(wv) {
+                                dot += xl * wl;
+                            }
+                            *av += dot;
+                        }
+                    }
+                }
+            }
+        }
+        row[ow0 * u..(ow0 + tl) * u].copy_from_slice(acc);
+        ow0 += tl;
+    }
+    if relu {
+        for a in row.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+}
+
+/// `u = 4` packed fast path: register accumulator tile + one contiguous
+/// 16-float tap read per `(cs, kh, kw)`.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn conv_mm_packed_row_u4(
+    x: &[f32],
+    w_pack: &[f32],
+    b_mm: &[f32],
+    row: &mut [f32],
+    ms: usize,
+    oh: usize,
+    cb: usize,
+    hp: usize,
+    wp: usize,
+    k: usize,
+    s: usize,
+    wo: usize,
+    relu: bool,
+) {
+    const U: usize = 4;
+    let bias: [f32; U] = b_mm[ms * U..(ms + 1) * U].try_into().unwrap();
+    let panel0 = ms * cb * k * k * U * U;
+    let mut ow0 = 0;
+    while ow0 < wo {
+        let tile_len = OW_TILE.min(wo - ow0);
+        let mut acc = [[0.0f32; U]; OW_TILE];
+        for a in acc.iter_mut().take(tile_len) {
+            *a = bias;
+        }
+        let mut w_off = panel0;
+        for cs in 0..cb {
+            for kh in 0..k {
+                let ih = oh * s + kh;
+                let x_row = &x[((cs * hp + ih) * wp) * U..((cs * hp + ih) * wp + wp) * U];
+                for kw in 0..k {
+                    // One sequential 16-float read replaces the 4-load
+                    // strided gather of the unpacked layout.
+                    let tap: &[f32; U * U] =
+                        w_pack[w_off..w_off + U * U].try_into().unwrap();
+                    w_off += U * U;
+                    let mut xoff = (ow0 * s + kw) * U;
+                    for a in acc.iter_mut().take(tile_len) {
+                        let xv: [f32; U] = x_row[xoff..xoff + U].try_into().unwrap();
+                        // 16 multiply-accumulates on registers (Fig. 6).
+                        for (ol, av) in a.iter_mut().enumerate() {
+                            let t = &tap[ol * U..(ol + 1) * U];
+                            *av += xv[0] * t[0] + xv[1] * t[1] + xv[2] * t[2] + xv[3] * t[3];
                         }
                         xoff += s * U;
                     }
@@ -704,6 +1171,65 @@ mod tests {
                 );
                 assert_close(&klp, &want, 1e-4, "klp");
             }
+        }
+    }
+
+    #[test]
+    fn packed_kernel_bitwise_matches_unpacked() {
+        // Every geometry class x u x threads x tile shape (remainder
+        // tiles, oversized tiles, row-walk, cost model) must be bitwise
+        // identical to the unpacked kernel on the same baked weights.
+        let mut rng = Rng::new(6);
+        for (i, case) in cases().iter().enumerate() {
+            let Case { c, h, w, m, k, s, p } = *case;
+            for u in [1usize, 2, 4, 8] {
+                let input = rng.normal_vec(c * h * w);
+                let weights = rng.normal_vec(m * c * k * k);
+                let bias = rng.normal_vec(m);
+                let mm_in = MapTensor::from_nchw(&input, c, h, w, u);
+                let w_mm = cast_weights(
+                    &layout::weights_to_mapmajor(&weights, m, c, k, u),
+                    ArithMode::Imprecise,
+                );
+                let b_mm = layout::bias_to_mapmajor(&bias, u);
+                let (mb, cb) = (ceil_div(m, u), ceil_div(c, u));
+                let w_pack = layout::pack_conv_panels(&w_mm, mb, cb, k, u);
+                let ho = (h + 2 * p - k) / s + 1;
+                for threads in [1usize, 3] {
+                    let want = conv_mm(
+                        &mm_in, &w_mm, &b_mm, m, k, s, p, true, ArithMode::Imprecise, threads,
+                    );
+                    for tile in [
+                        ConvTiling { tm: 1, th: 1 },
+                        ConvTiling { tm: 2, th: 3 },
+                        ConvTiling { tm: 100, th: 100 },
+                        ConvTiling::choose(cb, w + 2 * p, u, k, s, mb, ho),
+                    ] {
+                        let got = conv_mm_packed(
+                            &mm_in, &w_pack, &b_mm, m, k, s, p, true,
+                            ArithMode::Imprecise, threads, tile,
+                        );
+                        assert_eq!(
+                            got.data, want.data,
+                            "case {i} u={u} threads={threads} tile={tile:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_cost_model_stays_in_grid() {
+        for &(cb, wp, u, k, s, mb, ho) in &[
+            (1usize, 8usize, 4usize, 3usize, 1usize, 1usize, 6usize),
+            (64, 230, 4, 11, 4, 24, 55),
+            (16, 28, 8, 3, 1, 8, 28),
+            (2, 4, 1, 1, 1, 3, 4),
+        ] {
+            let t = ConvTiling::choose(cb, wp, u, k, s, mb, ho);
+            assert!(t.tm >= 1 && t.tm <= mb, "tm={} mb={mb}", t.tm);
+            assert!(t.th >= 1 && t.th <= ho, "th={} ho={ho}", t.th);
         }
     }
 

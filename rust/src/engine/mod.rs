@@ -7,12 +7,15 @@
 //! KLP/FLP policies for the ablation benches.
 //!
 //! The steady-state entry point is [`plan::ExecutionPlan`], built via
-//! [`plan::PlanBuilder`]: compile once (shape inference, weight baking,
-//! buffer-arena sizing for a batch capacity `B`), then execute whole
-//! dynamic batches with [`plan::ExecutionPlan::run_batch`] — one plan
-//! walk per batch, zero steady-state allocation and zero thread spawns
-//! (all parallel sections run on the persistent [`parallel`] pool).
-//! Single-image `run` is just `B = 1`.
+//! [`plan::PlanBuilder`]: compile once (shape inference, weight baking
+//! **and packing into tap-major / column-blocked panels**, per-layer
+//! tile selection from an L1/L2 cost model, buffer-arena sizing for a
+//! batch capacity `B`), then execute whole dynamic batches with
+//! [`plan::ExecutionPlan::run_batch`] — one plan walk per batch, zero
+//! steady-state allocation at any `u` (per-thread kernel scratch lives
+//! in the arena) and zero thread spawns (all parallel sections run on
+//! the persistent [`parallel`] pool). Single-image `run` is just
+//! `B = 1`.
 
 pub mod conv;
 pub mod mode;
@@ -22,7 +25,10 @@ pub mod parallel;
 pub mod plan;
 pub mod tensor;
 
-pub use conv::{cast_weights, conv_mm, conv_nchw_flp, conv_nchw_klp, conv_nchw_scalar};
+pub use conv::{
+    cast_weights, conv_mm, conv_mm_packed, conv_nchw_flp, conv_nchw_klp, conv_nchw_scalar,
+    ConvTiling,
+};
 pub use mode::ArithMode;
 pub use network::{
     run_baseline, run_baseline_legacy, run_mapmajor, run_mapmajor_legacy, EngineParams,

@@ -272,6 +272,93 @@ pub(crate) fn dense_rows_into(
     );
 }
 
+/// Dense inner loop over **column-blocked packed panels**
+/// ([`crate::layout::pack_dense_panels`]): one pass over the activation
+/// vector feeds [`crate::layout::DENSE_BLOCK`] output neurons from
+/// strictly sequential panel reads, instead of one full `x` pass per
+/// neuron. Per-output accumulation order (columns ascending, bias
+/// last) matches [`dense_into`] exactly — bitwise identical output.
+pub(crate) fn dense_packed_into(
+    x: &[f32],
+    w_pack: &[f32],
+    b: &[f32],
+    o: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    use crate::layout::DENSE_BLOCK as BL;
+    let i = x.len();
+    debug_assert_eq!(
+        w_pack.len(),
+        crate::util::ceil_div(o, BL) * i * BL,
+        "dense_packed_into: weight len"
+    );
+    debug_assert_eq!(b.len(), o, "dense_packed_into: bias len");
+    debug_assert_eq!(out.len(), o);
+    if i == 0 {
+        for (v, &bv) in out.iter_mut().zip(b) {
+            *v = if relu && bv < 0.0 { 0.0 } else { bv };
+        }
+        return;
+    }
+    for (blk, panel) in w_pack.chunks_exact(i * BL).enumerate() {
+        let o0 = blk * BL;
+        let live = BL.min(o - o0); // remainder block
+        let mut acc = [0.0f32; BL];
+        for (col, &xv) in x.iter().enumerate() {
+            let wv = &panel[col * BL..(col + 1) * BL];
+            for (a, &wl) in acc.iter_mut().zip(wv) {
+                *a += xv * wl;
+            }
+        }
+        for (ol, &a) in acc.iter().enumerate().take(live) {
+            let mut v = a + b[o0 + ol];
+            if relu && v < 0.0 {
+                v = 0.0;
+            }
+            out[o0 + ol] = v;
+        }
+    }
+}
+
+/// Batched [`dense_packed_into`]: drop-in packed analogue of
+/// [`dense_rows_into`] (same chunking, same bitwise-invisible batching).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dense_rows_packed_into(
+    xs: &[f32],
+    x_stride: usize,
+    i: usize,
+    w_pack: &[f32],
+    b: &[f32],
+    o: usize,
+    relu: bool,
+    out: &mut [f32],
+    rows: usize,
+    threads: usize,
+) {
+    debug_assert!(xs.len() >= (rows.saturating_sub(1)) * x_stride + i);
+    debug_assert!(out.len() >= rows * o);
+    if threads <= 1 || rows <= 1 {
+        for r in 0..rows {
+            let x = &xs[r * x_stride..][..i];
+            dense_packed_into(x, w_pack, b, o, relu, &mut out[r * o..(r + 1) * o]);
+        }
+        return;
+    }
+    crate::engine::parallel::parallel_for_slices(
+        rows,
+        threads,
+        o,
+        &mut out[..rows * o],
+        &|range: std::ops::Range<usize>, slice: &mut [f32]| {
+            for (j, r) in range.enumerate() {
+                let x = &xs[r * x_stride..][..i];
+                dense_packed_into(x, w_pack, b, o, relu, &mut slice[j * o..(j + 1) * o]);
+            }
+        },
+    );
+}
+
 /// In-place ReLU.
 pub fn relu_inplace(x: &mut [f32]) {
     for v in x {
@@ -471,6 +558,33 @@ mod tests {
         let neg_b = vec![-100.0f32; o];
         let clamped = dense(&x, &w, &neg_b, o, true, ArithMode::Precise);
         assert!(clamped.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dense_packed_bitwise_matches_unpacked() {
+        let mut rng = Rng::new(6);
+        // Output counts straddling DENSE_BLOCK boundaries, incl. o < B.
+        for &(i, o) in &[(32usize, 8usize), (17, 5), (9, 1), (4, 3), (5, 4)] {
+            let x = rng.normal_vec(i);
+            let w = rng.normal_vec(o * i);
+            let b = rng.normal_vec(o);
+            for relu in [false, true] {
+                let mut want = vec![0.0f32; o];
+                dense_into(&x, &w, &b, o, relu, &mut want);
+                let packed = crate::layout::pack_dense_panels(&w, o, i);
+                let mut got = vec![0.0f32; o];
+                dense_packed_into(&x, &packed, &b, o, relu, &mut got);
+                assert_eq!(got, want, "i={i} o={o} relu={relu}");
+                // Batched packed rows with threads: still bitwise.
+                let rows = 3;
+                let xs: Vec<f32> = (0..rows).flat_map(|_| x.clone()).collect();
+                let mut rows_out = vec![0.0f32; rows * o];
+                dense_rows_packed_into(&xs, i, i, &packed, &b, o, relu, &mut rows_out, rows, 2);
+                for r in 0..rows {
+                    assert_eq!(&rows_out[r * o..(r + 1) * o], want.as_slice(), "row {r}");
+                }
+            }
+        }
     }
 
     #[test]

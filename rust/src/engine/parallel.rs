@@ -347,6 +347,68 @@ pub(crate) fn parallel_for_slices<F>(
     global_pool().scope(tasks);
 }
 
+/// Macro-item variant of [`parallel_for_slices`] for the tiled conv
+/// core: items may own output slices of *varying* length, and every
+/// chunk is paired with its own per-thread scratch row.
+///
+/// `offset_of(i)` maps item `i` to the element offset where its output
+/// region starts (monotone non-decreasing, `offset_of(0) == 0`,
+/// `offset_of(items)` = total region length). Chunks are contiguous
+/// item ranges, so **chunk boundaries always fall on macro-item
+/// boundaries** — a tile is never split across threads, and each chunk's
+/// output slice is disjoint (zero write synchronisation, as in the
+/// uniform-row case). `scratch` must hold at least one row per chunk
+/// (chunk count <= `n_threads`); rows may be empty when the kernel
+/// needs none (the `u = 4` register path).
+pub(crate) fn parallel_for_macro_slices<O, F>(
+    items: usize,
+    n_threads: usize,
+    out: &mut [f32],
+    offset_of: &O,
+    scratch: &mut [Vec<f32>],
+    f: &F,
+) where
+    O: Fn(usize) -> usize,
+    F: Fn(Range<usize>, &mut [f32], &mut [f32]) + Sync,
+{
+    let ranges = chunk_ranges(items, n_threads.max(1));
+    if ranges.is_empty() {
+        return;
+    }
+    assert!(
+        scratch.len() >= ranges.len(),
+        "parallel_for_macro_slices: {} scratch rows for {} chunks",
+        scratch.len(),
+        ranges.len()
+    );
+    if ranges.len() == 1 {
+        let r = ranges.into_iter().next().unwrap();
+        let (lo, hi) = (offset_of(r.start), offset_of(r.end));
+        f(r, &mut out[lo..hi], scratch[0].as_mut_slice());
+        return;
+    }
+    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+    let mut rest = out;
+    let mut consumed = 0usize;
+    for r in &ranges {
+        let end = offset_of(r.end);
+        let (head, tail) = rest.split_at_mut(end - consumed);
+        slices.push(head);
+        rest = tail;
+        consumed = end;
+    }
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+        .into_iter()
+        .zip(slices)
+        .zip(scratch.iter_mut())
+        .map(|((range, slice), sc)| {
+            let sc: &mut [f32] = sc.as_mut_slice();
+            Box::new(move || f(range, slice, sc)) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    global_pool().scope(tasks);
+}
+
 /// Like [`parallel_for`] but each chunk owns a scratch accumulation
 /// buffer of `buf_len` zeros; after the parallel phase the buffers are
 /// reduced (element-wise sum) into a single vector. This is the
@@ -581,6 +643,48 @@ mod tests {
             parallel_for(64, 8, |_, _| {});
         }
         assert_eq!(pool_threads_spawned(), warm, "pool spawned threads per call");
+    }
+
+    #[test]
+    fn macro_slices_cover_varying_items_on_boundaries() {
+        // Five macro items with different output lengths; every thread
+        // count must cover each item exactly once, never splitting one.
+        let lens = [3usize, 1, 4, 2, 5];
+        let mut offsets = vec![0usize];
+        for &l in &lens {
+            offsets.push(offsets.last().unwrap() + l);
+        }
+        let total = *offsets.last().unwrap();
+        let mut want = Vec::new();
+        for (i, &l) in lens.iter().enumerate() {
+            for _ in 0..l {
+                want.push(i as f32 + 1.0);
+            }
+        }
+        for threads in [1usize, 2, 4, 8] {
+            let mut out = vec![0.0f32; total];
+            let mut scratch: Vec<Vec<f32>> = (0..threads).map(|_| vec![0.0f32; 1]).collect();
+            parallel_for_macro_slices(
+                lens.len(),
+                threads,
+                &mut out,
+                &|i| offsets[i],
+                &mut scratch,
+                &|range: Range<usize>, slice: &mut [f32], sc: &mut [f32]| {
+                    sc[0] += 1.0;
+                    let mut off = 0;
+                    for item in range {
+                        for v in &mut slice[off..off + lens[item]] {
+                            *v = item as f32 + 1.0;
+                        }
+                        off += lens[item];
+                    }
+                },
+            );
+            assert_eq!(out, want, "threads={threads}");
+            let used: f32 = scratch.iter().map(|s| s[0]).sum();
+            assert!(used >= 1.0, "threads={threads}: no chunk ran");
+        }
     }
 
     #[test]

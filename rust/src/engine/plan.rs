@@ -14,11 +14,45 @@
 //! 2. lowers the layer tree into a flat step sequence over an explicit
 //!    register file of activation buffers,
 //! 3. **bakes** every layer's weights into its arithmetic mode's domain
-//!    (the per-call weight cast the legacy executor paid is gone), and
-//! 4. sizes a buffer arena — per-step outputs, pad/cast scratch, and
-//!    per-thread FLP/KLP reduction buffers — with every activation
-//!    register and scratch row sized `B x`, allocated once and reused
-//!    across every batch.
+//!    (the per-call weight cast the legacy executor paid is gone) and
+//!    **packs** them into streaming panels (below),
+//! 4. picks per-conv-layer **tile sizes** from a small L1/L2 cost model
+//!    ([`crate::engine::conv::ConvTiling::choose`]), stored on the
+//!    lowered step, and
+//! 5. sizes a buffer arena — per-step outputs, pad/cast scratch,
+//!    per-thread FLP/KLP reduction buffers, and per-thread kernel
+//!    scratch rows — with every activation register and scratch row
+//!    sized `B x`, allocated once and reused across every batch.
+//!
+//! ## Packed weight panels
+//!
+//! Conv weights leave `build` as **tap-major panels** (mode-cast first,
+//! then permuted — the two commute elementwise):
+//! `w[((((ms*Cb + cs)*K + kh)*K + kw)*u + ol)*u + il]` is the weight of
+//! output channel `ms*u + ol` against input channel `cs*u + il` at tap
+//! `(kh, kw)`, so the conv kernel streams weights strictly sequentially
+//! with zero per-tap gathers (see [`crate::layout::pack_conv_panels`]).
+//! Dense weights become column-blocked panels
+//! ([`crate::layout::pack_dense_panels`]):
+//! `w[(ob*I + col)*B + ol]` feeds `B =`
+//! [`crate::layout::DENSE_BLOCK`] output neurons per pass over the
+//! activation vector. Packing is bitwise invisible — the packed kernels
+//! keep the unpacked kernels' exact accumulation order, and the legacy
+//! interpreters (unpacked layout) remain the parity oracle.
+//! [`PlanBuilder::packing`]`(false)` compiles the previous unpacked
+//! row-walk plan for the ablation bench;
+//! [`PlanBuilder::tiling`] overrides the cost model's tile choice.
+//!
+//! ## Tile cost model
+//!
+//! Per conv layer, [`crate::engine::conv::ConvTiling::choose`] sizes
+//! `(tm, th)` so that `tm` stacks' packed panels and a `th`-row band's
+//! padded input working set each fit in half of the modelled L2: one
+//! `(batch row, stack tile)` macro item then walks rows in bands with
+//! the stack loop innermost, so each padded input row loaded into cache
+//! serves up to `ceil(k/s)` output rows across `tm` stacks before
+//! eviction. Macro items own contiguous output blocks, and the pool
+//! chunks on macro-item boundaries — tiles never straddle threads.
 //!
 //! The execution entry point is [`ExecutionPlan::run_batch`] (plus
 //! [`ExecutionPlan::run_batch_into`] for caller-owned output rows): a
@@ -58,7 +92,7 @@
 use std::ops::Range;
 use std::sync::Arc;
 
-use crate::engine::conv;
+use crate::engine::conv::{self, ConvTiling};
 use crate::engine::mode::{self, ArithMode};
 use crate::engine::network::{EngineParams, ExecConfig, ModeAssignment};
 use crate::engine::ops;
@@ -129,6 +163,8 @@ enum Step {
     ConvMm {
         src: usize,
         dst: usize,
+        /// Packed tap-major panels when `packed`, else the unpacked
+        /// `(Mb, u, Cb, K, K, u)` layout (ablation reference).
         w: Arc<Vec<f32>>,
         b: Arc<Vec<f32>>,
         k: usize,
@@ -136,6 +172,9 @@ enum Step {
         p: usize,
         relu: bool,
         mode: ArithMode,
+        packed: bool,
+        /// Row-tile macro-kernel sizes (ignored by the unpacked core).
+        tile: ConvTiling,
     },
     ConvNchw {
         src: usize,
@@ -158,22 +197,27 @@ enum Step {
     Dense {
         src: usize,
         dst: usize,
+        /// Column-blocked panels when `packed`, else row-major `(O, I)`.
         w: Arc<Vec<f32>>,
         b: Arc<Vec<f32>>,
         relu: bool,
         mode: ArithMode,
+        packed: bool,
     },
     Softmax { src: usize, dst: usize },
 }
 
 /// The preallocated buffer arena: activation registers and pad/cast
-/// scratch sized `B x` one row, plus per-thread FLP/KLP reduction
-/// buffers. Compile-time sized, reused across every batch.
+/// scratch sized `B x` one row, per-thread FLP/KLP reduction buffers,
+/// and per-thread kernel scratch rows (the generic-`u` conv kernels'
+/// tap block / accumulator tile — zero allocations per inference at any
+/// `u`). Compile-time sized, reused across every batch.
 #[derive(Clone)]
 struct Arena {
     bufs: Vec<Vec<f32>>,
     scratch: Vec<f32>,
     reduce: Vec<Vec<f32>>,
+    thread_scratch: Vec<Vec<f32>>,
 }
 
 impl Arena {
@@ -183,18 +227,25 @@ impl Arena {
         reduce_len: usize,
         threads: usize,
         batch: usize,
+        thread_scratch_row: usize,
     ) -> Arena {
         let bufs = slots.iter().map(|s| vec![0.0f32; batch * s.len()]).collect();
         let scratch = vec![0.0f32; batch * scratch_row];
         let n_reduce = if reduce_len > 0 { threads } else { 0 };
         let reduce = (0..n_reduce).map(|_| vec![0.0f32; reduce_len]).collect();
-        Arena { bufs, scratch, reduce }
+        // One row per pool chunk; rows are empty (no allocation) when
+        // every kernel runs its register fast path (u = 4 / NCHW).
+        let thread_scratch = (0..threads)
+            .map(|_| vec![0.0f32; thread_scratch_row])
+            .collect();
+        Arena { bufs, scratch, reduce, thread_scratch }
     }
 
     fn bytes(&self) -> usize {
         let elems: usize = self.bufs.iter().map(|b| b.len()).sum::<usize>()
             + self.scratch.len()
-            + self.reduce.iter().map(|b| b.len()).sum::<usize>();
+            + self.reduce.iter().map(|b| b.len()).sum::<usize>()
+            + self.thread_scratch.iter().map(|b| b.len()).sum::<usize>();
         4 * elems
     }
 }
@@ -233,6 +284,8 @@ pub struct PlanBuilder<'a> {
     cfg: ExecConfig,
     family: Family,
     batch: usize,
+    packing: bool,
+    tiling: Option<ConvTiling>,
 }
 
 impl<'a> PlanBuilder<'a> {
@@ -246,6 +299,8 @@ impl<'a> PlanBuilder<'a> {
             cfg: ExecConfig::default(),
             family: Family::MapMajor,
             batch: 1,
+            packing: true,
+            tiling: None,
         }
     }
 
@@ -271,6 +326,26 @@ impl<'a> PlanBuilder<'a> {
     /// [`ExecutionPlan::run_batch`] accepts up to `B` images per walk.
     pub fn batch(mut self, capacity: usize) -> Self {
         self.batch = capacity.max(1);
+        self
+    }
+
+    /// Weight packing on/off (default **on**). `packing(false)` keeps
+    /// conv weights in the unpacked `(Mb, u, Cb, K, K, u)` layout and
+    /// dense weights row-major, executed by the plain row-walk cores —
+    /// exactly the pre-packing plan, kept so the ablation bench can
+    /// isolate the packed-panel + tiling win. Output is bitwise
+    /// identical either way.
+    pub fn packing(mut self, on: bool) -> Self {
+        self.packing = on;
+        self
+    }
+
+    /// Override the per-layer tile cost model with fixed row-tile sizes
+    /// (clamped per layer to its `Mb x Ho` grid). For the tiling
+    /// ablation: `ConvTiling { tm: 1, th: 1 }` is the plain row-walk
+    /// order. Ignored by `packing(false)` plans and non-conv steps.
+    pub fn tiling(mut self, tile: ConvTiling) -> Self {
+        self.tiling = Some(tile);
         self
     }
 
@@ -310,7 +385,16 @@ impl<'a> PlanBuilder<'a> {
         } else {
             (self.modes, self.cfg)
         };
-        ExecutionPlan::compile_with(self.net, self.params, &modes, cfg, self.family, self.batch)
+        ExecutionPlan::compile_with(
+            self.net,
+            self.params,
+            &modes,
+            cfg,
+            self.family,
+            self.batch,
+            self.packing,
+            self.tiling,
+        )
     }
 }
 
@@ -332,6 +416,8 @@ pub struct ExecutionPlan {
     scratch_row: usize,
     /// Per-thread FLP/KLP reduction buffer length (0 = none needed).
     reduce_len: usize,
+    /// Per-thread kernel scratch row length (0 = register fast paths).
+    thread_scratch_row: usize,
     baked_param_bytes: usize,
     runs: u64,
     alloc: AllocCounter,
@@ -353,6 +439,7 @@ impl std::fmt::Debug for ExecutionPlan {
 }
 
 impl ExecutionPlan {
+    #[allow(clippy::too_many_arguments)]
     fn compile_with(
         net: &Network,
         params: &EngineParams,
@@ -360,6 +447,8 @@ impl ExecutionPlan {
         cfg: ExecConfig,
         family: Family,
         batch: usize,
+        packing: bool,
+        tiling: Option<ConvTiling>,
     ) -> Result<ExecutionPlan> {
         // Shape inference once, up front: every undersized window or
         // malformed topology becomes Error::Shape here instead of an
@@ -376,17 +465,27 @@ impl ExecutionPlan {
             params,
             modes,
             family,
+            packing,
+            tiling,
             slots: Vec::new(),
             steps: Vec::new(),
             scratch_len: 0,
             reduce_len: 0,
+            thread_scratch_row: 0,
             baked_param_bytes: 0,
         };
         let in_slot = lw.slot(SlotShape::Maps { c, h, w, u });
         lw.steps.push(Step::Input { dst: in_slot });
         let out_slot = lw.lower(&net.layers, in_slot)?;
 
-        let arena = Arena::sized(&lw.slots, lw.scratch_len, lw.reduce_len, threads, batch);
+        let arena = Arena::sized(
+            &lw.slots,
+            lw.scratch_len,
+            lw.reduce_len,
+            threads,
+            batch,
+            lw.thread_scratch_row,
+        );
         Ok(ExecutionPlan {
             u,
             threads,
@@ -398,6 +497,7 @@ impl ExecutionPlan {
             arena,
             scratch_row: lw.scratch_len,
             reduce_len: lw.reduce_len,
+            thread_scratch_row: lw.thread_scratch_row,
             baked_param_bytes: lw.baked_param_bytes,
             runs: 0,
             alloc: AllocCounter::new(),
@@ -424,9 +524,11 @@ impl ExecutionPlan {
                 self.reduce_len,
                 self.threads,
                 batch,
+                self.thread_scratch_row,
             ),
             scratch_row: self.scratch_row,
             reduce_len: self.reduce_len,
+            thread_scratch_row: self.thread_scratch_row,
             baked_param_bytes: self.baked_param_bytes,
             runs: 0,
             alloc: AllocCounter::new(),
@@ -603,10 +705,13 @@ struct Lowerer<'a> {
     params: &'a EngineParams,
     modes: &'a ModeAssignment,
     family: Family,
+    packing: bool,
+    tiling: Option<ConvTiling>,
     slots: Vec<SlotShape>,
     steps: Vec<Step>,
     scratch_len: usize,
     reduce_len: usize,
+    thread_scratch_row: usize,
     baked_param_bytes: usize,
 }
 
@@ -619,6 +724,37 @@ impl Lowerer<'_> {
     fn bake(&mut self, w: &[f32], mode: ArithMode) -> Arc<Vec<f32>> {
         self.baked_param_bytes += 4 * w.len();
         Arc::new(conv::cast_weights(w, mode))
+    }
+
+    /// Bake + repack conv weights into tap-major panels. Mode-cast is
+    /// elementwise and packing a permutation, so this equals casting the
+    /// packed layout — packing cannot perturb numerics.
+    fn bake_conv_panels(
+        &mut self,
+        w_mm: &[f32],
+        mode: ArithMode,
+        mb: usize,
+        cb: usize,
+        k: usize,
+        u: usize,
+    ) -> Arc<Vec<f32>> {
+        self.baked_param_bytes += 4 * w_mm.len();
+        let baked = conv::cast_weights(w_mm, mode);
+        Arc::new(layout::pack_conv_panels(&baked, mb, cb, k, u))
+    }
+
+    /// Bake + repack dense weights into column-blocked panels.
+    fn bake_dense_panels(
+        &mut self,
+        w: &[f32],
+        mode: ArithMode,
+        o: usize,
+        len: usize,
+    ) -> Arc<Vec<f32>> {
+        let baked = conv::cast_weights(w, mode);
+        let packed = layout::pack_dense_panels(&baked, o, len);
+        self.baked_param_bytes += 4 * packed.len();
+        Arc::new(packed)
     }
 
     fn bias(&mut self, b: &[f32]) -> Arc<Vec<f32>> {
@@ -662,7 +798,27 @@ impl Lowerer<'_> {
                             let padded = cb * (h + 2 * p) * (w + 2 * p) * u;
                             self.scratch_len = self.scratch_len.max(padded);
                         }
-                        let (wgt, b) = (self.bake(&lp.w_mm, mode), self.bias(&lp.b_mm));
+                        // Generic-u kernels keep their tap block /
+                        // accumulator tile in per-thread arena scratch
+                        // (u = 4 runs fully in registers).
+                        if u != 4 {
+                            self.thread_scratch_row =
+                                self.thread_scratch_row.max((u * u).max(conv::OW_TILE * u));
+                        }
+                        // Tile sizes: builder override or the L1/L2 cost
+                        // model, clamped to this layer's Mb x Ho grid.
+                        let tile = self
+                            .tiling
+                            .unwrap_or_else(|| {
+                                ConvTiling::choose(cb, w + 2 * p, u, *k, *s, mb, ho)
+                            })
+                            .clamped(mb, ho);
+                        let wgt = if self.packing {
+                            self.bake_conv_panels(&lp.w_mm, mode, mb, cb, *k, u)
+                        } else {
+                            self.bake(&lp.w_mm, mode)
+                        };
+                        let b = self.bias(&lp.b_mm);
                         self.steps.push(Step::ConvMm {
                             src: cur,
                             dst,
@@ -673,6 +829,8 @@ impl Lowerer<'_> {
                             p: *p,
                             relu: *relu,
                             mode,
+                            packed: self.packing,
+                            tile,
                         });
                     }
                     Family::Nchw(policy) => {
@@ -839,9 +997,22 @@ impl Lowerer<'_> {
                 if mode != ArithMode::Precise {
                     self.scratch_len = self.scratch_len.max(len);
                 }
-                let (wgt, b) = (self.bake(w_src, mode), self.bias(b_src));
+                let wgt = if self.packing {
+                    self.bake_dense_panels(w_src, mode, *o, len)
+                } else {
+                    self.bake(w_src, mode)
+                };
+                let b = self.bias(b_src);
                 let dst = self.slot(SlotShape::Flat { len: *o });
-                self.steps.push(Step::Dense { src: cur, dst, w: wgt, b, relu: *relu, mode });
+                self.steps.push(Step::Dense {
+                    src: cur,
+                    dst,
+                    w: wgt,
+                    b,
+                    relu: *relu,
+                    mode,
+                    packed: self.packing,
+                });
                 Ok(dst)
             }
             LayerOp::Softmax => {
@@ -918,7 +1089,7 @@ fn exec_step(
                 );
             }
         }
-        Step::ConvMm { src, dst, w, b, k, s, p, relu, mode } => {
+        Step::ConvMm { src, dst, w, b, k, s, p, relu, mode, packed, tile } => {
             let (cin, h, wd, u) = maps_of(slots[*src]);
             let (m, ho, wo, _) = maps_of(slots[*dst]);
             let (cb, mb) = (ceil_div(cin, u), ceil_div(m, u));
@@ -939,32 +1110,82 @@ fn exec_step(
                         &mut arena.scratch[r * scratch_row..][..plen],
                     );
                 }
-                // One parallel region spanning live x mb x ho items.
-                conv::conv_mm_core(
-                    &arena.scratch,
-                    scratch_row,
-                    hp,
-                    wp,
-                    cb,
-                    u,
-                    w,
-                    b,
-                    &mut arena.bufs[*dst],
-                    mb,
-                    *k,
-                    *s,
-                    ho,
-                    wo,
-                    *relu,
-                    threads,
-                    live,
-                );
+                // One parallel region spanning every macro item of the
+                // live batch.
+                if *packed {
+                    conv::conv_mm_packed_core(
+                        &arena.scratch,
+                        scratch_row,
+                        hp,
+                        wp,
+                        cb,
+                        u,
+                        w,
+                        b,
+                        &mut arena.bufs[*dst],
+                        mb,
+                        *k,
+                        *s,
+                        ho,
+                        wo,
+                        *relu,
+                        threads,
+                        live,
+                        *tile,
+                        &mut arena.thread_scratch,
+                    );
+                } else {
+                    conv::conv_mm_core(
+                        &arena.scratch,
+                        scratch_row,
+                        hp,
+                        wp,
+                        cb,
+                        u,
+                        w,
+                        b,
+                        &mut arena.bufs[*dst],
+                        mb,
+                        *k,
+                        *s,
+                        ho,
+                        wo,
+                        *relu,
+                        threads,
+                        live,
+                        &mut arena.thread_scratch,
+                    );
+                }
             } else {
                 let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-                conv::conv_mm_core(
-                    x, src_len, hp, wp, cb, u, w, b, out, mb, *k, *s, ho, wo, *relu, threads,
-                    live,
-                );
+                if *packed {
+                    conv::conv_mm_packed_core(
+                        x,
+                        src_len,
+                        hp,
+                        wp,
+                        cb,
+                        u,
+                        w,
+                        b,
+                        out,
+                        mb,
+                        *k,
+                        *s,
+                        ho,
+                        wo,
+                        *relu,
+                        threads,
+                        live,
+                        *tile,
+                        &mut arena.thread_scratch,
+                    );
+                } else {
+                    conv::conv_mm_core(
+                        x, src_len, hp, wp, cb, u, w, b, out, mb, *k, *s, ho, wo, *relu,
+                        threads, live, &mut arena.thread_scratch,
+                    );
+                }
             }
         }
         Step::ConvNchw { src, dst, w, b, k, s, p, relu, mode, policy } => {
@@ -1183,7 +1404,7 @@ fn exec_step(
                 off += part_len;
             }
         }
-        Step::Dense { src, dst, w, b, relu, mode } => {
+        Step::Dense { src, dst, w, b, relu, mode, packed } => {
             let o = flat_of(slots[*dst]);
             let len = flat_of(slots[*src]);
             if *mode != ArithMode::Precise {
@@ -1194,21 +1415,40 @@ fn exec_step(
                         &mut arena.scratch[r * scratch_row..][..len],
                     );
                 }
-                ops::dense_rows_into(
-                    &arena.scratch,
-                    scratch_row,
-                    len,
-                    w,
-                    b,
-                    o,
-                    *relu,
-                    &mut arena.bufs[*dst],
-                    live,
-                    threads,
-                );
+                if *packed {
+                    ops::dense_rows_packed_into(
+                        &arena.scratch,
+                        scratch_row,
+                        len,
+                        w,
+                        b,
+                        o,
+                        *relu,
+                        &mut arena.bufs[*dst],
+                        live,
+                        threads,
+                    );
+                } else {
+                    ops::dense_rows_into(
+                        &arena.scratch,
+                        scratch_row,
+                        len,
+                        w,
+                        b,
+                        o,
+                        *relu,
+                        &mut arena.bufs[*dst],
+                        live,
+                        threads,
+                    );
+                }
             } else {
                 let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
-                ops::dense_rows_into(x, len, len, w, b, o, *relu, out, live, threads);
+                if *packed {
+                    ops::dense_rows_packed_into(x, len, len, w, b, o, *relu, out, live, threads);
+                } else {
+                    ops::dense_rows_into(x, len, len, w, b, o, *relu, out, live, threads);
+                }
             }
         }
         Step::Softmax { src, dst } => {
@@ -1332,6 +1572,42 @@ mod tests {
         let mut b8 = base;
         let mut b2 = small;
         assert_eq!(b8.run(&input).unwrap(), b2.run(&input).unwrap());
+    }
+
+    #[test]
+    fn unpacked_plan_and_tiling_overrides_bitwise_match() {
+        // packing(false) (the pre-packing plan) and any tiling override
+        // must leave the numerics bitwise untouched.
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 77, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let input = rand_input(&net, 78);
+        let mut packed = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(2)
+            .build()
+            .unwrap();
+        let want = packed.run(&input).unwrap();
+        let mut unpacked = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(2)
+            .packing(false)
+            .build()
+            .unwrap();
+        assert_eq!(unpacked.run(&input).unwrap(), want, "packing(false) diverged");
+        for tile in [
+            ConvTiling { tm: 1, th: 1 },
+            ConvTiling { tm: 3, th: 5 },
+            ConvTiling { tm: 64, th: 64 },
+        ] {
+            let mut tiled = PlanBuilder::new(&net, &params)
+                .modes(&modes)
+                .threads(2)
+                .tiling(tile)
+                .build()
+                .unwrap();
+            assert_eq!(tiled.run(&input).unwrap(), want, "tile {tile:?} diverged");
+        }
     }
 
     #[test]

@@ -7,8 +7,36 @@
 //! `Cb = ceil(C/u)` (zero-padded). Weights reorder from `(M, C, K, K)`
 //! to `(Mb, u, Cb, K, K, u)` at compile time. Mirrors
 //! `python/compile/kernels/ref.py` exactly.
+//!
+//! ## Packed panels (compiled-plan layout)
+//!
+//! The `(Mb, u, Cb, K, K, u)` layout still makes the conv inner loop
+//! gather its `u_out x u_in` tap block with `u` strided loads per tap
+//! (the `ol` rows sit `Cb*K*K*u` apart). The compiled plan repacks one
+//! step further at `PlanBuilder::build`:
+//!
+//! * [`pack_conv_panels`] — **tap-major panels**: for each output stack
+//!   `ms`, the taps `(cs, kh, kw)` are laid out in exactly the order the
+//!   kernel walks them, each tap a contiguous `u x u` block. Index
+//!   formula: `packed[((((ms*Cb + cs)*K + kh)*K + kw)*u + ol)*u + il]`
+//!   holds the weight of output channel `ms*u + ol` against input
+//!   channel `cs*u + il` at tap `(kh, kw)` — the hot loop streams
+//!   weights strictly sequentially, zero per-tap gathers.
+//! * [`pack_dense_panels`] — **column-blocked panels**: output rows are
+//!   grouped in blocks of [`DENSE_BLOCK`] and interleaved by column:
+//!   `packed[(ob*I + col)*B + ol]` = `w[(ob*B + ol)*I + col]`
+//!   (zero-padded past `O`), so one pass over the activation vector
+//!   feeds `B` output neurons from sequential weight reads.
+//!
+//! Both repacks are pure permutations (values untouched), so packing
+//! commutes with the arithmetic-mode weight bake and the packed kernels
+//! stay bitwise identical to the unpacked oracles.
 
 use crate::util::{ceil_div, round_up};
+
+/// Output-row block width of [`pack_dense_panels`]: how many dense
+/// output neurons share one pass over the activation vector.
+pub const DENSE_BLOCK: usize = 4;
 
 /// Thread-id → `(w, h, m)` of the paper's equations (3), (4), (5).
 ///
@@ -101,6 +129,46 @@ pub fn weights_to_mapmajor(src: &[f32], m: usize, c: usize, k: usize, u: usize) 
                     out[dst] = src[((mi * c + ci) * k + kh) * k + kw];
                 }
             }
+        }
+    }
+    out
+}
+
+/// Map-major conv weights `(Mb, u, Cb, K, K, u)` → tap-major packed
+/// panels `(Mb, Cb, K, K, u, u)` (see the module docs for the index
+/// formula). Plan-compile time only: the packed kernels read each tap's
+/// `u_out x u_in` block as one contiguous `u*u` slice and walk taps
+/// sequentially, so the per-tap gather of the unpacked layout vanishes.
+pub fn pack_conv_panels(w_mm: &[f32], mb: usize, cb: usize, k: usize, u: usize) -> Vec<f32> {
+    assert_eq!(w_mm.len(), mb * u * cb * k * k * u, "pack_conv_panels: src len");
+    let mut out = vec![0.0f32; w_mm.len()];
+    for ms in 0..mb {
+        for cs in 0..cb {
+            for kh in 0..k {
+                for kw in 0..k {
+                    for ol in 0..u {
+                        let src = ((((ms * u + ol) * cb + cs) * k + kh) * k + kw) * u;
+                        let dst = (((((ms * cb + cs) * k + kh) * k + kw) * u) + ol) * u;
+                        out[dst..dst + u].copy_from_slice(&w_mm[src..src + u]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dense weights `(O, I)` row-major → column-blocked panels
+/// `(Ob, I, B)` with `B =` [`DENSE_BLOCK`], `Ob = ceil(O/B)`,
+/// zero-padded past `O` (see the module docs for the index formula).
+pub fn pack_dense_panels(w: &[f32], o: usize, i: usize) -> Vec<f32> {
+    assert_eq!(w.len(), o * i, "pack_dense_panels: src len");
+    let ob = ceil_div(o, DENSE_BLOCK);
+    let mut out = vec![0.0f32; ob * i * DENSE_BLOCK];
+    for oi in 0..o {
+        let (blk, ol) = (oi / DENSE_BLOCK, oi % DENSE_BLOCK);
+        for col in 0..i {
+            out[(blk * i + col) * DENSE_BLOCK + ol] = w[oi * i + col];
         }
     }
     out
@@ -239,6 +307,68 @@ mod tests {
                             }
                         }
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_panels_place_every_tap_contiguously() {
+        let mut rng = Rng::new(7);
+        for &(m, c, k, u) in &[(6usize, 5usize, 3usize, 4usize), (8, 8, 1, 4), (3, 7, 5, 2), (4, 4, 3, 1)] {
+            let src = rng.normal_vec(m * c * k * k);
+            let mm = weights_to_mapmajor(&src, m, c, k, u);
+            let (mb, cb) = (ceil_div(m, u), ceil_div(c, u));
+            let packed = pack_conv_panels(&mm, mb, cb, k, u);
+            assert_eq!(packed.len(), mm.len());
+            // Every (mi, ci, kh, kw) weight lands at the documented
+            // packed index; padding lanes stay zero.
+            for ms in 0..mb {
+                for cs in 0..cb {
+                    for kh in 0..k {
+                        for kw in 0..k {
+                            for ol in 0..u {
+                                for il in 0..u {
+                                    let dst = ((((ms * cb + cs) * k + kh) * k + kw) * u + ol)
+                                        * u
+                                        + il;
+                                    let (mi, ci) = (ms * u + ol, cs * u + il);
+                                    let want = if mi < m && ci < c {
+                                        src[((mi * c + ci) * k + kh) * k + kw]
+                                    } else {
+                                        0.0
+                                    };
+                                    assert_eq!(packed[dst], want, "m{mi} c{ci} {kh},{kw}");
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_panels_preserve_dot_products() {
+        let mut rng = Rng::new(8);
+        for &(o, i) in &[(8usize, 12usize), (5, 7), (1, 3), (4, 4)] {
+            let w = rng.normal_vec(o * i);
+            let x = rng.normal_vec(i);
+            let packed = pack_dense_panels(&w, o, i);
+            assert_eq!(packed.len(), ceil_div(o, DENSE_BLOCK) * i * DENSE_BLOCK);
+            for oi in 0..o {
+                let want: f32 = (0..i).map(|col| w[oi * i + col] * x[col]).sum();
+                let (blk, ol) = (oi / DENSE_BLOCK, oi % DENSE_BLOCK);
+                let got: f32 = (0..i)
+                    .map(|col| packed[(blk * i + col) * DENSE_BLOCK + ol] * x[col])
+                    .sum();
+                assert_eq!(got, want, "row {oi}");
+            }
+            // Padding rows are all-zero.
+            for oi in o..ceil_div(o, DENSE_BLOCK) * DENSE_BLOCK {
+                let (blk, ol) = (oi / DENSE_BLOCK, oi % DENSE_BLOCK);
+                for col in 0..i {
+                    assert_eq!(packed[(blk * i + col) * DENSE_BLOCK + ol], 0.0);
                 }
             }
         }

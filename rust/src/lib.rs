@@ -23,9 +23,9 @@
 //! | [`util`] | error type, PRNG, JSON, misc substrates |
 //! | [`config`] | `.cappnet` network descriptions + `.capp` model files |
 //! | [`model`] | layer IR, shape inference, FLOP counting, model zoo |
-//! | [`layout`] | map-major reordering + the paper's eqs. (3)–(5) |
+//! | [`layout`] | map-major reordering, packed tap-major / column-blocked weight panels, the paper's eqs. (3)–(5) |
 //! | [`engine`] | native execution engine (OLP/KLP/FLP, vector modes) |
-//! | [`engine::plan`] | batch-first compiled plans: `PlanBuilder` → `ExecutionPlan::run_batch`, `B x` buffer arena, baked weights, flat step sequence |
+//! | [`engine::plan`] | batch-first compiled plans: `PlanBuilder` → `ExecutionPlan::run_batch`, `B x` buffer arena, baked+packed weights, per-layer conv tiles from an L1/L2 cost model, per-thread kernel scratch, flat step sequence |
 //! | [`engine::parallel`] | persistent worker pool + thread workload allocation policies |
 //! | [`soc`] | mobile SoC simulator: latency + energy + CNNDroid models |
 //! | [`data`] | synthetic validation dataset IO |

@@ -190,11 +190,14 @@ pub fn compile_plan(
 
 /// Compile a synthesized plan into an immediately executable
 /// [`ExecutionPlan`] (via [`crate::engine::PlanBuilder`]): weights
-/// baked per the plan's layer modes, buffer arena sized `batch x`,
-/// thread-pool chunking fixed — the "synthesized software" in its
-/// runnable form, executing up to `batch` images per walk. Honours the
-/// plan's thread-workload allocation when it is uniform (ablation plans
-/// lower FLP/KLP executors).
+/// baked per the plan's layer modes **and packed into streaming panels**
+/// (tap-major conv panels, column-blocked dense panels — see
+/// [`crate::layout`]), per-conv-layer row tiles from the L1/L2 cost
+/// model, buffer arena sized `batch x`, thread-pool chunking fixed on
+/// macro-item boundaries — the "synthesized software" in its runnable
+/// form, executing up to `batch` images per walk. Honours the plan's
+/// thread-workload allocation when it is uniform (ablation plans lower
+/// FLP/KLP executors).
 pub fn compile_plan_batched(
     plan: &SynthesisPlan,
     net: &Network,

@@ -10,7 +10,8 @@
 //! the same guarantee — padded lanes never feed replies.
 
 use cappuccino::engine::{
-    ArithMode, EngineParams, ExecutionPlan, ModeAssignment, Parallelism, PlanBuilder,
+    run_mapmajor_legacy, ArithMode, ConvTiling, EngineParams, ExecConfig, ExecutionPlan,
+    ModeAssignment, Parallelism, PlanBuilder,
 };
 use cappuccino::model::{zoo, Network};
 use cappuccino::util::rng::Rng;
@@ -168,6 +169,68 @@ fn mixed_per_layer_modes_keep_batch_parity() {
         .with("conv2", ArithMode::Precise)
         .with("fc5", ArithMode::Relaxed);
     assert_batch_parity(&net, &params, Cfg::mapmajor(&modes, 2), "mixed-modes", 69);
+}
+
+#[test]
+fn tiling_edge_cases_bitwise_match_legacy_across_modes_threads() {
+    // Grids the tiles do NOT divide (remainder stack tiles and row
+    // bands), k > s overlap on both conv layers, padding rows landing
+    // inside tile bands (p=1 and p=2), and u != 4 — every combination
+    // must stay bitwise identical to the unpacked legacy interpreter,
+    // and run_batch must stay bitwise identical to single runs.
+    use cappuccino::config::parse_cappnet;
+    let net = parse_cappnet(
+        "net tiled\ninput 3 13 13\nclasses 8\n\
+         conv c1 m=12 k=3 s=1 p=1\n\
+         conv c2 m=8 k=5 s=2 p=2\n\
+         gap\n",
+    )
+    .unwrap();
+    let tiles = [
+        ConvTiling { tm: 2, th: 4 },   // remainder in both dimensions
+        ConvTiling { tm: 3, th: 5 },
+        ConvTiling { tm: 1, th: 1 },   // plain row walk
+        ConvTiling { tm: 16, th: 64 }, // oversized -> clamped whole-layer tile
+    ];
+    for u in [2usize, 4, 8] {
+        let params = EngineParams::random(&net, 80 + u as u64, u).unwrap();
+        let inputs = batch_inputs(&net, 90 + u as u64, BATCH);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        for mode in ArithMode::ALL {
+            let modes = ModeAssignment::uniform(mode);
+            for threads in THREAD_SWEEP {
+                let cfg = ExecConfig { threads };
+                let wants: Vec<Vec<f32>> = inputs
+                    .iter()
+                    .map(|x| run_mapmajor_legacy(&net, &params, x, &modes, cfg).unwrap())
+                    .collect();
+                for tile in tiles {
+                    let mut plan = PlanBuilder::new(&net, &params)
+                        .modes(&modes)
+                        .threads(threads)
+                        .batch(BATCH)
+                        .tiling(tile)
+                        .build()
+                        .unwrap();
+                    let rows = plan.run_batch(&refs).unwrap();
+                    for (i, (row, want)) in rows.iter().zip(&wants).enumerate() {
+                        assert_eq!(
+                            row, want,
+                            "u={u} mode={mode} threads={threads} tile={tile:?} lane {i}"
+                        );
+                    }
+                    // Plan-side allocation meter: the request path hands
+                    // out logits rows and nothing else, at any u.
+                    assert_eq!(
+                        plan.alloc_bytes_per_run(),
+                        (4 * plan.output_len()) as f64,
+                        "u={u} tile={tile:?}: request path allocated beyond logits"
+                    );
+                    assert_eq!(plan.alloc().allocs(), 1, "one record per batch walk");
+                }
+            }
+        }
+    }
 }
 
 #[test]

@@ -5,10 +5,12 @@
 //! report the case index + seed for deterministic reproduction.
 
 use cappuccino::engine::{
-    conv_mm, conv_nchw_flp, conv_nchw_klp, conv_nchw_scalar, ArithMode, MapTensor,
+    cast_weights, conv_mm, conv_mm_packed, conv_nchw_flp, conv_nchw_klp, conv_nchw_scalar,
+    ArithMode, ConvTiling, MapTensor,
 };
 use cappuccino::layout;
 use cappuccino::testing::{check, close, Gen};
+use cappuccino::util::ceil_div;
 
 /// Random conv geometry small enough to run hundreds of cases.
 struct ConvCase {
@@ -145,6 +147,38 @@ fn prop_thread_count_does_not_change_olp_output() {
             if t.data != one.data {
                 return Err(format!("threads={threads} changed the output"));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_tiled_kernel_bitwise_matches_unpacked() {
+    // The packed-panel row-tile macro-kernel must be a pure layout /
+    // traversal refactoring: bitwise identical to the unpacked kernel
+    // for random geometry, u, thread count, and (random, usually
+    // non-dividing) tile sizes.
+    check("packed+tiled == unpacked bitwise", 40, 0xAB, |g| {
+        let case = conv_case(g);
+        let ConvCase { c, h, w, m, k, s, p, u } = case;
+        if h + 2 * p < k || w + 2 * p < k {
+            return Ok(());
+        }
+        let input = g.normal_vec(c * h * w);
+        let weights = g.normal_vec(m * c * k * k);
+        let bias = g.normal_vec(m);
+        let mm = MapTensor::from_nchw(&input, c, h, w, u);
+        let mode = g.choose(&ArithMode::ALL);
+        let w_mm = cast_weights(&layout::weights_to_mapmajor(&weights, m, c, k, u), mode);
+        let b_mm = layout::bias_to_mapmajor(&bias, u);
+        let (mb, cb) = (ceil_div(m, u), ceil_div(c, u));
+        let w_pack = layout::pack_conv_panels(&w_mm, mb, cb, k, u);
+        let threads = g.int(1, 4);
+        let tile = ConvTiling { tm: g.int(1, 5), th: g.int(1, 8) };
+        let want = conv_mm(&mm, &w_mm, &b_mm, m, k, s, p, true, mode, threads);
+        let got = conv_mm_packed(&mm, &w_pack, &b_mm, m, k, s, p, true, mode, threads, tile);
+        if got.data != want.data {
+            return Err(format!("diverged (u={u} threads={threads} tile={tile:?})"));
         }
         Ok(())
     });
