@@ -38,6 +38,7 @@ fn main() -> cappuccino::Result<()> {
             max_batch: 8,
             max_delay: Duration::from_millis(2),
             queue_depth: 512,
+            ..Default::default()
         };
         let server = Server::start(vec![("tinynet".into(), factory, policy)])?;
 

@@ -16,10 +16,15 @@
 //! * **tiled vs row-walk** — packed weights in both, cost-model tiles
 //!   vs `{tm: 1, th: 1}`, so the delta is the input-row reuse of the
 //!   row-tile macro-kernel alone.
+//! * **pinned vs unpinned pool** — the same packed tiled kernel on two
+//!   private topology-shaped pools ([`cappuccino::engine::with_pool`]),
+//!   differing only in worker pinning, so the delta is the affinity
+//!   contribution alone (uniform hosts show ~1.00x by construction).
 
 use cappuccino::bench::{bench, ms, BenchConfig, Table};
 use cappuccino::engine::{
-    cast_weights, conv_mm, conv_mm_packed, conv_nchw_scalar, ArithMode, ConvTiling, MapTensor,
+    cast_weights, conv_mm, conv_mm_packed, conv_nchw_scalar, with_pool, ArithMode, ConvTiling,
+    MapTensor, ThreadPool, Topology,
 };
 use cappuccino::layout;
 use cappuccino::util::ceil_div;
@@ -141,6 +146,63 @@ fn main() {
     packed_table.print();
     println!("(packed row-walk isolates the weight-streaming win; packed tiled");
     println!("adds the input-row reuse of the macro-kernel on top)");
+
+    // -- Pinned vs unpinned pool (ISSUE 4 affinity contribution) ---------
+    {
+        let topo = Topology::probe();
+        let threads = topo.cpu_count().max(2);
+        let pinned = ThreadPool::with_topology(&topo, true);
+        let unpinned = ThreadPool::with_topology(&topo, false);
+        let u = 4usize;
+        let mm_in = MapTensor::from_nchw(&input, c, h, w, u);
+        let w_mm = cast_weights(
+            &layout::weights_to_mapmajor(&weights, m, c, k, u),
+            ArithMode::Imprecise,
+        );
+        let b_mm = layout::bias_to_mapmajor(&bias, u);
+        let (mb, cb) = (ceil_div(m, u), ceil_div(c, u));
+        let w_pack = layout::pack_conv_panels(&w_mm, mb, cb, k, u);
+        let ho = (h + 2 * p - k) / s + 1;
+        let model = ConvTiling::choose(cb, w + 2 * p, u, k, s, mb, ho);
+
+        let mut aff_table = Table::new(&["pool", "clusters", "time(ms)", "vs unpinned"]);
+        let mut base_ms = f64::NAN;
+        for (name, pool) in [("unpinned", &unpinned), ("pinned", &pinned)] {
+            let meas = bench(format!("{name}-packed-tiled"), cfg, || {
+                with_pool(pool, || {
+                    std::hint::black_box(conv_mm_packed(
+                        &mm_in,
+                        &w_pack,
+                        &b_mm,
+                        m,
+                        k,
+                        s,
+                        p,
+                        true,
+                        ArithMode::Imprecise,
+                        threads,
+                        model,
+                    ));
+                });
+            });
+            if name == "unpinned" {
+                base_ms = meas.mean_ms;
+            }
+            aff_table.row(&[
+                name.into(),
+                pool.clusters().len().to_string(),
+                ms(meas.mean_ms),
+                format!("{:.2}x", base_ms / meas.mean_ms),
+            ]);
+        }
+        println!(
+            "\n# Ablation — pinned vs unpinned pool (threads={threads}, pinnable={})\n",
+            topo.probed
+        );
+        aff_table.print();
+        println!("(same packed tiled kernel on two private pools via with_pool; the");
+        println!("delta is worker pinning alone — uniform-fallback hosts show ~1.00x)");
+    }
 
     println!("ablation_layout bench OK");
 }

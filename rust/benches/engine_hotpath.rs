@@ -125,7 +125,7 @@ fn main() {
         let params = EngineParams::random(&net, 3, 4).unwrap();
         let input = rng.normal_vec(net.input.elements());
         let modes = ModeAssignment::uniform(ArithMode::Imprecise);
-        let exec = ExecConfig { threads: 1 };
+        let exec = ExecConfig { threads: 1, ..Default::default() };
 
         let legacy = bench(format!("{}-legacy", net.name), cfg, || {
             std::hint::black_box(
@@ -295,7 +295,7 @@ fn main() {
                 let inputs: Vec<Vec<f32>> =
                     (0..b).map(|_| rng.normal_vec(net.input.elements())).collect();
                 let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
-                let exec = ExecConfig { threads };
+                let exec = ExecConfig { threads, ..Default::default() };
 
                 let legacy = bench(format!("sweep-legacy-t{threads}-b{b}"), cfg, || {
                     for img in &inputs {
@@ -388,9 +388,15 @@ fn main() {
             );
         }
         if json_mode {
+            // Record the pool shape next to the numbers: imgs/s at a
+            // given (B, threads) is only comparable across runs with
+            // the same worker/cluster layout.
+            let pool = cappuccino::engine::global_pool();
             let doc = Json::obj(vec![
                 ("bench", Json::str("engine_hotpath")),
                 ("network", Json::str(net.name.clone())),
+                ("pool_workers", Json::num(pool.size() as f64)),
+                ("pool_clusters", Json::num(pool.clusters().len() as f64)),
                 ("packed_vs_plan_b8_t4", Json::num(packed_vs_plan_b8_t4)),
                 ("rows", Json::Arr(json_rows)),
             ]);

@@ -29,7 +29,7 @@ fn run_scenario(
         1,
         max_batch,
     );
-    let policy = BatchPolicy { max_batch, max_delay, queue_depth: 4096 };
+    let policy = BatchPolicy { max_batch, max_delay, queue_depth: 4096, ..Default::default() };
     let server = Server::start(vec![("m".into(), backend.factory(), policy)]).unwrap();
 
     let mut rng = Rng::new(11);

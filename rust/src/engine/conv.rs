@@ -41,7 +41,9 @@
 //! unpacked kernels stay as the parity oracle and ablation reference.
 
 use crate::engine::mode::{mode_cast, ArithMode};
-use crate::engine::parallel::{parallel_for_macro_slices, parallel_reduce};
+use crate::engine::parallel::{
+    parallel_for_macro_slices, parallel_for_macro_slices_placed, parallel_reduce,
+};
 use crate::engine::tensor::MapTensor;
 use crate::util::ceil_div;
 use std::ops::Range;
@@ -118,6 +120,18 @@ impl ConvTiling {
             tm: self.tm.clamp(1, mb.max(1)),
             th: self.th.clamp(1, ho.max(1)),
         }
+    }
+
+    /// Bytes one macro item streams repeatedly while walking a row
+    /// band: `tm` stacks' packed panels plus the band's padded input
+    /// rows (`(th-1)*s + k` rows across all `Cb` input stacks). This is
+    /// the per-tile working-set cost the topology-aware pool's
+    /// cost-weighted placement consumes: items whose working set fits
+    /// the modelled L2 are compute-bound (place by cluster capacity),
+    /// larger ones are memory-bound (place by core count alone).
+    pub fn working_set_bytes(&self, cb: usize, wp: usize, u: usize, k: usize, s: usize) -> usize {
+        let band_rows = (self.th.saturating_sub(1)) * s + k;
+        4 * (self.tm * cb * k * k * u * u + cb * band_rows * wp * u)
     }
 }
 
@@ -607,6 +621,7 @@ pub fn conv_mm_packed(
         threads,
         1,
         tile,
+        None,
         &mut scratch,
     );
     out
@@ -642,8 +657,16 @@ struct PackedGeo {
 /// not otherwise feed every thread). `scratch` supplies one per-chunk
 /// row (>=
 /// `max(u*u, OW_TILE*u)` floats for generic `u`; empty rows suffice at
-/// `u = 4`) holding the row kernel's accumulator tile. Bitwise
-/// identical to [`conv_mm_core`] on the unpacked layout.
+/// `u = 4`) holding the row kernel's accumulator tile.
+///
+/// `place` is the layer's [`ConvTiling::working_set_bytes`] cost when
+/// cost-weighted cluster placement is on
+/// ([`crate::engine::PlanBuilder::affinity`]); macro items are then
+/// split across the pool's core clusters by throughput weight and
+/// submitted to per-cluster deques. `None` keeps the plain chunked
+/// dispatch. Either way — and for any `tile` — every macro item is
+/// computed whole by exactly one thread, so output is bitwise identical
+/// to [`conv_mm_core`] on the unpacked layout.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn conv_mm_packed_core(
     x: &[f32],
@@ -664,6 +687,7 @@ pub(crate) fn conv_mm_packed_core(
     threads: usize,
     rows: usize,
     tile: ConvTiling,
+    place: Option<usize>,
     scratch: &mut [Vec<f32>],
 ) {
     let out_row_len = wo * u;
@@ -691,16 +715,22 @@ pub(crate) fn conv_mm_packed_core(
         packed_macro_items(0..items, out, sc, x, x_stride, x_len, w_pack, b_mm, g);
         return;
     }
-    parallel_for_macro_slices(
-        items,
-        threads,
-        out,
-        &|i: usize| (i / n_mt * mb + (i % n_mt) * tm) * ho * out_row_len,
-        scratch,
-        &|range: Range<usize>, slice: &mut [f32], sc: &mut [f32]| {
-            packed_macro_items(range, slice, sc, x, x_stride, x_len, w_pack, b_mm, g);
-        },
-    );
+    let offset_of = |i: usize| (i / n_mt * mb + (i % n_mt) * tm) * ho * out_row_len;
+    let body = |range: Range<usize>, slice: &mut [f32], sc: &mut [f32]| {
+        packed_macro_items(range, slice, sc, x, x_stride, x_len, w_pack, b_mm, g);
+    };
+    match place {
+        Some(ws_bytes) => parallel_for_macro_slices_placed(
+            items,
+            threads,
+            ws_bytes <= ConvTiling::L2_BYTES,
+            out,
+            &offset_of,
+            scratch,
+            &body,
+        ),
+        None => parallel_for_macro_slices(items, threads, out, &offset_of, scratch, &body),
+    }
 }
 
 /// Walk a contiguous range of macro items: per item, rows advance in

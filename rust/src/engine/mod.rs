@@ -16,6 +16,13 @@
 //! in the arena) and zero thread spawns (all parallel sections run on
 //! the persistent [`parallel`] pool). Single-image `run` is just
 //! `B = 1`.
+//!
+//! The pool itself is **topology-aware** ([`topology`] probes core
+//! clusters and pins workers; [`parallel`] gives each cluster its own
+//! work deque with idle-only stealing), and
+//! [`plan::PlanBuilder::affinity`] turns on cost-weighted placement of
+//! packed conv macro items across clusters — placement moves work
+//! between cores, never changes what is computed.
 
 pub mod conv;
 pub mod mode;
@@ -24,6 +31,7 @@ pub mod ops;
 pub mod parallel;
 pub mod plan;
 pub mod tensor;
+pub mod topology;
 
 pub use conv::{
     cast_weights, conv_mm, conv_mm_packed, conv_nchw_flp, conv_nchw_klp, conv_nchw_scalar,
@@ -34,6 +42,10 @@ pub use network::{
     run_baseline, run_baseline_legacy, run_mapmajor, run_mapmajor_legacy, EngineParams,
     ExecConfig, ModeAssignment,
 };
-pub use parallel::{global_pool, pool_threads_spawned, Parallelism, ThreadPool};
+pub use parallel::{
+    chunk_ranges_weighted, global_pool, pool_threads_spawned, with_pool, ClusterInfo,
+    Parallelism, ThreadPool,
+};
 pub use plan::{ExecutionPlan, PlanBuilder};
 pub use tensor::{MapTensor, Tensor};
+pub use topology::{pin_current_thread, CoreCluster, CoreSet, Topology};

@@ -168,14 +168,29 @@ fn build_layer_params(pl: &shapes::ParamLayer, w: &[f32], b: &[f32], u: usize) -
 }
 
 /// Execution configuration for the optimised path.
+///
+/// `threads` is the number of pool **chunks** each parallel region is
+/// split into, not a pool size: the process-wide worker pool
+/// ([`crate::engine::parallel::global_pool`]) is shaped once, at first
+/// use, by the machine's topology, and a plan compiled with
+/// `threads = n` simply submits at most `n` chunks per region. Values
+/// above the pool's worker count queue extra chunks rather than
+/// spawning threads.
+///
+/// `affinity` turns on cost-weighted cluster placement for packed conv
+/// layers (see [`crate::engine::PlanBuilder::affinity`]): chunks are
+/// apportioned across big/LITTLE (or per-socket) clusters by throughput
+/// weight and routed to each cluster's own work deque. Off by default;
+/// bitwise-invisible either way.
 #[derive(Debug, Clone, Copy)]
 pub struct ExecConfig {
     pub threads: usize,
+    pub affinity: bool,
 }
 
 impl Default for ExecConfig {
     fn default() -> Self {
-        ExecConfig { threads: 1 }
+        ExecConfig { threads: 1, affinity: false }
     }
 }
 
@@ -461,7 +476,7 @@ mod tests {
             &params,
             &input,
             &ModeAssignment::uniform(ArithMode::Precise),
-            ExecConfig { threads: 1 },
+            ExecConfig { threads: 1, ..Default::default() },
         )
         .unwrap();
         assert_eq!(base.len(), 8);
@@ -478,7 +493,7 @@ mod tests {
         for mode in ArithMode::ALL {
             let modes = ModeAssignment::uniform(mode);
             for threads in [1, 2] {
-                let cfg = ExecConfig { threads };
+                let cfg = ExecConfig { threads, ..Default::default() };
                 let a = run_mapmajor(&net, &params, &input, &modes, cfg).unwrap();
                 let b = run_mapmajor_legacy(&net, &params, &input, &modes, cfg).unwrap();
                 assert_eq!(a, b, "mode={mode} threads={threads}");
@@ -495,8 +510,15 @@ mod tests {
         let params = EngineParams::random(&net, 1, 4).unwrap();
         let input = rand_input(&net, 2);
         let modes = ModeAssignment::uniform(ArithMode::Precise);
-        let a = run_mapmajor(&net, &params, &input, &modes, ExecConfig { threads: 1 }).unwrap();
-        let b = run_mapmajor(&net, &params, &input, &modes, ExecConfig { threads: 4 }).unwrap();
+        let a = run_mapmajor(&net, &params, &input, &modes, ExecConfig::default()).unwrap();
+        let b = run_mapmajor(
+            &net,
+            &params,
+            &input,
+            &modes,
+            ExecConfig { threads: 4, ..Default::default() },
+        )
+        .unwrap();
         assert_eq!(a, b);
     }
 
@@ -520,7 +542,7 @@ mod tests {
             &params,
             &input,
             &ModeAssignment::uniform(ArithMode::Precise),
-            ExecConfig { threads: 2 },
+            ExecConfig { threads: 2, ..Default::default() },
         )
         .unwrap();
         for (a, b) in base.iter().zip(&opt) {

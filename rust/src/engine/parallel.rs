@@ -1,5 +1,5 @@
-//! Thread workload allocation (paper section IV.A) and the persistent
-//! worker pool the compiled execution plans run on.
+//! Thread workload allocation (paper section IV.A) and the persistent,
+//! **topology-aware** worker pool the compiled execution plans run on.
 //!
 //! The three sources of parallelism in a convolutional layer:
 //!
@@ -20,22 +20,72 @@
 //! ## Execution substrate
 //!
 //! [`parallel_for`] / [`parallel_reduce`] run on a process-wide
-//! [`ThreadPool`]: long-lived workers blocked on a work channel, so the
+//! [`ThreadPool`]: long-lived workers blocked on work deques, so the
 //! per-layer cost of going parallel is one enqueue + one wakeup instead
 //! of an OS thread spawn. The original scoped-spawn implementations are
 //! kept as [`parallel_for_spawn`] / [`parallel_reduce_spawn`] purely as
 //! the ablation reference (what every conv layer used to pay).
 //!
+//! ## Cluster model (big.LITTLE / multi-socket)
+//!
+//! The pool is shaped by a [`Topology`] probe
+//! ([`crate::engine::topology`]): cores group into **clusters** (by
+//! sysfs `cpu_capacity`, falling back to package ids, falling back to
+//! one uniform cluster), each cluster owns its **own work deque**, and
+//! each worker is pinned to a core of its cluster
+//! (`sched_setaffinity`; a silent no-op off Linux, on failure, or when
+//! the probe fell back to uniform — pinning is a placement hint, never
+//! a correctness dependency). Workers drain their own cluster's deque
+//! first and **steal from other clusters only when idle**, so work
+//! placed on a cluster stays on the cores whose caches hold its data
+//! unless those cores cannot keep up.
+//!
+//! ## Batch-tagged scopes (no head-of-line blocking)
+//!
+//! Every [`ThreadPool::scope`] call tags its jobs with a unique batch
+//! id. Workers run anything; but the *submitting* thread, which helps
+//! while it waits, only ever executes **its own batch's** jobs and
+//! stops as soon as its completion latch clears. (The previous pool let
+//! the helper pop *any* queued job, so a small scope could get stuck
+//! executing an unrelated batch's long-running work — unbounded latency
+//! for small layers. The `affinity` integration test pins this down.)
+//!
+//! ## Cost-weighted placement
+//!
+//! [`chunk_ranges_weighted`] splits an item space into per-cluster
+//! spans proportional to throughput weights
+//! ([`ThreadPool::cluster_weights`]: capacity-weighted core counts for
+//! compute-bound work, plain core counts for memory-bound work), and
+//! [`ThreadPool::scope_placed`] routes each task to its cluster's
+//! deque. The packed conv macro-kernel feeds this with its per-layer
+//! [`crate::engine::conv::ConvTiling`] working-set cost (see
+//! [`crate::engine::PlanBuilder::affinity`]). Placement moves work
+//! between cores — it never changes what is computed, so every parity
+//! suite stays bitwise green with affinity on or off.
+//!
 //! Batch-first plans stretch each region instead of adding regions: a
 //! `run_batch` of `B` images submits **one** task batch per conv layer
 //! spanning the whole `B x alpha` item space, so the enqueue + wakeup
 //! cost above is paid once per layer per *batch*, not per image.
+//!
+//! ## Pool size vs `ExecConfig::threads`
+//!
+//! [`global_pool`] is sized **once**, at first use, to the probed
+//! topology (one worker per allowed core; `CAPPUCCINO_PIN=0` disables
+//! pinning). Plans do not resize it: a plan compiled with
+//! `ExecConfig { threads: n, .. }` limits itself by submitting at most
+//! `n` chunks per parallel region. Tests may run a region on a private
+//! pool via [`with_pool`] (the pinned-vs-unpinned ablation and parity
+//! tests do).
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::str::FromStr;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::engine::topology::{self, Topology};
 
 /// Thread workload allocation policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -94,8 +144,66 @@ pub fn chunk_ranges(n_items: usize, n_chunks: usize) -> Vec<Range<usize>> {
     out
 }
 
+/// Split `n_items` into exactly `weights.len()` contiguous spans whose
+/// lengths apportion the items by weight (largest-remainder rounding;
+/// ties go to the lower index). Non-finite and non-positive weights
+/// count as zero; all-zero weights degrade to an equal split. Spans may
+/// be empty — unlike [`chunk_ranges`], the output always has one span
+/// per weight, in order, covering `0..n_items` exactly.
+///
+/// This is the cost-weighted placement primitive: weights are
+/// per-cluster throughput estimates and the spans are the macro items
+/// each cluster is asked to compute.
+pub fn chunk_ranges_weighted(n_items: usize, weights: &[f64]) -> Vec<Range<usize>> {
+    let k = weights.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    let sane: Vec<f64> = weights
+        .iter()
+        .map(|w| if w.is_finite() && *w > 0.0 { *w } else { 0.0 })
+        .collect();
+    let total: f64 = sane.iter().sum();
+    if total <= 0.0 {
+        return chunk_ranges_weighted(n_items, &vec![1.0; k]);
+    }
+    let mut counts = vec![0usize; k];
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(k);
+    let mut assigned = 0usize;
+    for (i, w) in sane.iter().enumerate() {
+        let ideal = n_items as f64 * w / total;
+        let floor = ideal.floor() as usize;
+        counts[i] = floor;
+        assigned += floor;
+        fracs.push((ideal - floor as f64, i));
+    }
+    fracs.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+    });
+    let mut rem = n_items.saturating_sub(assigned);
+    let mut idx = 0usize;
+    while rem > 0 {
+        let (_, i) = fracs[idx % k];
+        if sane[i] > 0.0 {
+            counts[i] += 1;
+            rem -= 1;
+        }
+        idx += 1;
+    }
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for c in counts {
+        out.push(start..start + c);
+        start += c;
+    }
+    debug_assert_eq!(start, n_items, "chunk_ranges_weighted: items not covered");
+    out
+}
+
 // ---------------------------------------------------------------------------
-// Persistent thread pool
+// Persistent topology-aware thread pool
 // ---------------------------------------------------------------------------
 
 /// Total OS threads ever spawned by pools in this process — the plan
@@ -108,16 +216,39 @@ pub fn pool_threads_spawned() -> usize {
     THREADS_SPAWNED.load(Ordering::Relaxed)
 }
 
+/// Monotone scope-batch ids: the tag that scopes the help loop to its
+/// own work (process-wide so ids stay unique across pools).
+static NEXT_BATCH: AtomicU64 = AtomicU64::new(1);
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-struct PoolState {
-    queue: VecDeque<Job>,
-    shutdown: bool,
+/// One queued job, tagged with the scope batch it belongs to.
+struct Tagged {
+    batch: u64,
+    job: Job,
+}
+
+/// One cluster's work deque + wakeup signal.
+struct ClusterQueue {
+    queue: Mutex<VecDeque<Tagged>>,
+    cv: Condvar,
 }
 
 struct PoolShared {
-    state: Mutex<PoolState>,
-    work_cv: Condvar,
+    clusters: Vec<ClusterQueue>,
+    shutdown: AtomicBool,
+}
+
+/// Public description of one pool cluster (for placement decisions and
+/// diagnostics).
+#[derive(Debug, Clone)]
+pub struct ClusterInfo {
+    /// CPU ids the cluster's workers are pinned to (empty = unpinned).
+    pub cpus: Vec<usize>,
+    /// Relative per-core compute capacity (sysfs `cpu_capacity` scale).
+    pub capacity: u32,
+    /// Worker threads serving this cluster's deque.
+    pub workers: usize,
 }
 
 /// Completion latch for one [`ThreadPool::scope`] call.
@@ -142,6 +273,10 @@ impl Latch {
         }
     }
 
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().0 == 0
+    }
+
     fn wait(&self) {
         let mut st = self.state.lock().unwrap();
         while st.0 > 0 {
@@ -153,33 +288,85 @@ impl Latch {
     }
 }
 
-/// Long-lived worker pool: workers block on a shared work queue; scoped
-/// task batches borrow caller data (the submitting call blocks until
-/// every task in the batch has completed, so the borrow is sound).
+/// Long-lived worker pool with one work deque per core cluster: workers
+/// drain their own cluster first and steal across clusters only when
+/// idle; scoped task batches borrow caller data (the submitting call
+/// blocks until every task in the batch has completed, so the borrow is
+/// sound) and are batch-tagged so the helping submitter never executes
+/// another scope's work.
 pub struct ThreadPool {
     shared: Arc<PoolShared>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    clusters: Vec<ClusterInfo>,
 }
 
 impl ThreadPool {
-    /// Spawn a pool with `size` workers (min 1).
+    /// Spawn a pool with `size` unpinned workers in a single uniform
+    /// cluster (min 1) — the shape private test pools use.
     pub fn new(size: usize) -> ThreadPool {
         let size = size.max(1);
-        let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
-            work_cv: Condvar::new(),
-        });
-        let workers = (0..size)
-            .map(|i| {
-                let sh = Arc::clone(&shared);
-                THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
-                std::thread::Builder::new()
-                    .name(format!("capp-pool-{i}"))
-                    .spawn(move || worker_loop(sh))
-                    .expect("spawn pool worker")
+        Self::build(vec![ClusterInfo {
+            cpus: Vec::new(),
+            capacity: topology::DEFAULT_CAPACITY,
+            workers: size,
+        }])
+    }
+
+    /// Spawn a pool shaped like `topo`: one worker per core, grouped
+    /// into per-cluster deques. With `pin` (and a probed topology) each
+    /// worker is pinned to its own core via `sched_setaffinity`;
+    /// unprobed topologies and non-Linux hosts never pin (the uniform
+    /// fallback contract the constrained-host CI job checks).
+    pub fn with_topology(topo: &Topology, pin: bool) -> ThreadPool {
+        let pin = pin && topo.probed;
+        let mut infos: Vec<ClusterInfo> = topo
+            .clusters
+            .iter()
+            .filter(|c| !c.cpus.is_empty())
+            .map(|c| ClusterInfo {
+                cpus: if pin { c.cpus.clone() } else { Vec::new() },
+                capacity: c.capacity,
+                workers: c.cpus.len(),
             })
             .collect();
-        ThreadPool { shared, workers }
+        if infos.is_empty() {
+            infos.push(ClusterInfo {
+                cpus: Vec::new(),
+                capacity: topology::DEFAULT_CAPACITY,
+                workers: 1,
+            });
+        }
+        Self::build(infos)
+    }
+
+    fn build(infos: Vec<ClusterInfo>) -> ThreadPool {
+        let shared = Arc::new(PoolShared {
+            clusters: infos
+                .iter()
+                .map(|_| ClusterQueue { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() })
+                .collect(),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut workers = Vec::new();
+        for (ci, info) in infos.iter().enumerate() {
+            for wi in 0..info.workers {
+                let sh = Arc::clone(&shared);
+                let cpu = info.cpus.get(wi % info.cpus.len().max(1)).copied();
+                THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("capp-pool-{ci}-{wi}"))
+                        .spawn(move || {
+                            if let Some(cpu) = cpu {
+                                let _ = topology::pin_current_thread(&[cpu]);
+                            }
+                            worker_loop(sh, ci)
+                        })
+                        .expect("spawn pool worker"),
+                );
+            }
+        }
+        ThreadPool { shared, workers, clusters: infos }
     }
 
     /// Worker count.
@@ -187,43 +374,120 @@ impl ThreadPool {
         self.workers.len()
     }
 
-    /// Run a batch of borrowed tasks to completion.
+    /// Per-cluster shape of the pool.
+    pub fn clusters(&self) -> &[ClusterInfo] {
+        &self.clusters
+    }
+
+    /// Per-cluster throughput weights for cost-weighted placement.
+    /// Compute-bound work scales with each cluster's capacity-weighted
+    /// core count (a LITTLE cluster retires fewer MACs per cycle);
+    /// memory-bound work — a working set that overflows the modelled L2
+    /// — scales with plain core counts (all clusters share the memory
+    /// system).
+    pub fn cluster_weights(&self, compute_bound: bool) -> Vec<f64> {
+        self.clusters
+            .iter()
+            .map(|c| {
+                if compute_bound {
+                    c.workers as f64 * c.capacity as f64
+                        / topology::DEFAULT_CAPACITY as f64
+                } else {
+                    c.workers as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Run a batch of borrowed tasks to completion, spreading contiguous
+    /// task blocks over clusters in proportion to their worker counts.
     ///
     /// Tasks may borrow caller data (`'a`): the call blocks until every
-    /// task has finished, and the caller *helps* by draining the queue
-    /// while it waits, so the batch makes progress even when all workers
-    /// are busy (and nested `scope` calls cannot deadlock).
+    /// task has finished, and the caller *helps* by draining **its own
+    /// batch's** queued jobs while it waits, so the batch makes progress
+    /// even when all workers are busy (and nested `scope` calls cannot
+    /// deadlock). The batch tag keeps the helper off other scopes' jobs
+    /// — a concurrent scope's long-running tasks can no longer inflate
+    /// this call's latency (head-of-line blocking).
     pub fn scope<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let weights: Vec<f64> = self.clusters.iter().map(|c| c.workers as f64).collect();
+        let spans = chunk_ranges_weighted(n, &weights);
+        let mut hints = vec![0usize; n];
+        for (c, span) in spans.iter().enumerate() {
+            for h in &mut hints[span.clone()] {
+                *h = c;
+            }
+        }
+        self.scope_placed(hints.into_iter().zip(tasks).collect());
+    }
+
+    /// [`ThreadPool::scope`] with an explicit target cluster per task
+    /// (indices clamped into range by modulo): the cost-weighted
+    /// placement entry point. Placement only chooses which cluster's
+    /// deque — and therefore which cores' caches — a task lands on;
+    /// idle workers may still steal it, and execution order within the
+    /// batch is unspecified either way.
+    pub fn scope_placed<'a>(&self, tasks: Vec<(usize, Box<dyn FnOnce() + Send + 'a>)>) {
         if tasks.is_empty() {
             return;
         }
+        let batch = NEXT_BATCH.fetch_add(1, Ordering::Relaxed);
         let latch = Arc::new(Latch::new(tasks.len()));
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            for task in tasks {
-                // SAFETY: `latch.wait()` below blocks this call until
-                // every task in the batch has run to completion, so the
-                // `'a` borrows each task captures strictly outlive its
-                // execution. The wrapper job cannot panic (the user task
-                // runs under `catch_unwind`), so an unwinding worker or
-                // helper never abandons a queued sibling mid-borrow.
-                let task: Job = unsafe {
-                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(task)
-                };
-                let latch = Arc::clone(&latch);
-                st.queue.push_back(Box::new(move || {
-                    let ok =
-                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_ok();
-                    latch.done(ok);
-                }));
-            }
-            self.shared.work_cv.notify_all();
+        let n_clusters = self.shared.clusters.len();
+        let mut touched = vec![false; n_clusters];
+        for (hint, task) in tasks {
+            let cluster = if hint < n_clusters { hint } else { hint % n_clusters };
+            // SAFETY: `latch.wait()` below blocks this call until every
+            // task in the batch has run to completion — workers drain
+            // every queue and the helper drains this batch's leftovers,
+            // so no tagged job can outlive the scope — hence the `'a`
+            // borrows each task captures strictly outlive its
+            // execution. The wrapper job cannot panic (the user task
+            // runs under `catch_unwind`), so an unwinding worker or
+            // helper never abandons a queued sibling mid-borrow.
+            let task: Job =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(task) };
+            let latch_c = Arc::clone(&latch);
+            let job: Job = Box::new(move || {
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_ok();
+                latch_c.done(ok);
+            });
+            self.shared.clusters[cluster]
+                .queue
+                .lock()
+                .unwrap()
+                .push_back(Tagged { batch, job });
+            touched[cluster] = true;
         }
-        // Help while waiting.
+        // Wake the clusters that received work; nudge one worker on each
+        // other cluster so an idle stealer gets a chance.
+        for (c, cl) in self.shared.clusters.iter().enumerate() {
+            if touched[c] {
+                cl.cv.notify_all();
+            } else {
+                cl.cv.notify_one();
+            }
+        }
+        // Help while waiting — own batch only, stopping once the latch
+        // clears or no own-batch jobs remain queued.
         loop {
-            let job = self.shared.state.lock().unwrap().queue.pop_front();
-            match job {
-                Some(job) => job(),
+            if latch.is_done() {
+                break;
+            }
+            let mut found: Option<Tagged> = None;
+            for cl in &self.shared.clusters {
+                let mut q = cl.queue.lock().unwrap();
+                if let Some(pos) = q.iter().position(|t| t.batch == batch) {
+                    found = q.remove(pos);
+                    break;
+                }
+            }
+            match found {
+                Some(t) => (t.job)(),
                 None => break,
             }
         }
@@ -233,50 +497,114 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.shutdown = true;
+        self.shared.shutdown.store(true, Ordering::Release);
+        for cl in &self.shared.clusters {
+            // Acquire each queue lock so no worker is between its empty
+            // check and its wait when the wakeup lands.
+            let _guard = cl.queue.lock().unwrap();
+            cl.cv.notify_all();
         }
-        self.shared.work_cv.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn worker_loop(sh: Arc<PoolShared>) {
+fn worker_loop(sh: Arc<PoolShared>, me: usize) {
     loop {
-        let job = {
-            let mut st = sh.state.lock().unwrap();
-            loop {
-                if let Some(j) = st.queue.pop_front() {
-                    break Some(j);
-                }
-                if st.shutdown {
-                    break None;
-                }
-                st = sh.work_cv.wait(st).unwrap();
-            }
-        };
-        match job {
-            Some(j) => j(),
+        match next_job(&sh, me) {
+            Some(t) => (t.job)(),
             None => return,
         }
     }
 }
 
-/// The process-wide pool every executor shares. Sized to the machine
-/// once, on first use; callers limit their own parallelism via the
-/// chunk count they submit, not by resizing the pool.
+/// Next job for a worker of cluster `me`: own deque first, then — only
+/// when idle — steal from the other clusters, then block on the own
+/// cluster's condvar until new work or shutdown.
+fn next_job(sh: &PoolShared, me: usize) -> Option<Tagged> {
+    let n = sh.clusters.len();
+    loop {
+        if let Some(t) = sh.clusters[me].queue.lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        for k in 1..n {
+            let c = (me + k) % n;
+            if let Some(t) = sh.clusters[c].queue.lock().unwrap().pop_front() {
+                return Some(t);
+            }
+        }
+        let cl = &sh.clusters[me];
+        let q = cl.queue.lock().unwrap();
+        if !q.is_empty() {
+            continue;
+        }
+        if sh.shutdown.load(Ordering::Acquire) {
+            return None;
+        }
+        // Woken by own-cluster work, a steal nudge, or shutdown; every
+        // path rescans from the top.
+        let _q = cl.cv.wait(q).unwrap();
+    }
+}
+
+/// The process-wide pool every executor shares. Shaped **once**, on
+/// first use, by [`Topology::probe`] — one worker per allowed core,
+/// grouped into per-cluster deques and pinned to their cores
+/// (`CAPPUCCINO_PIN=0`/`false`/`off` disables pinning; the uniform
+/// fallback never pins). Callers limit their own parallelism via the
+/// chunk count they submit ([`crate::engine::network::ExecConfig`]'s
+/// `threads`), not by resizing the pool.
 pub fn global_pool() -> &'static ThreadPool {
     static POOL: OnceLock<ThreadPool> = OnceLock::new();
     POOL.get_or_init(|| {
-        ThreadPool::new(
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4),
-        )
+        let pin = !matches!(
+            std::env::var("CAPPUCCINO_PIN").as_deref(),
+            Ok("0") | Ok("false") | Ok("off")
+        );
+        ThreadPool::with_topology(&Topology::probe(), pin)
     })
+}
+
+// ---------------------------------------------------------------------------
+// Current-pool override (tests + ablations)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static POOL_OVERRIDE: Cell<*const ThreadPool> = Cell::new(std::ptr::null());
+}
+
+/// Run `f` with every `parallel_*` helper on this thread dispatching to
+/// `pool` instead of the process-wide [`global_pool`]. Scoped to the
+/// call (restored on unwind) and to the current thread. This is how the
+/// parity tests prove pinned and unpinned pools — and synthetic
+/// multi-cluster topologies — execute plans bitwise identically, and
+/// how the layout ablation isolates the pinning contribution without
+/// re-spawning the global pool.
+pub fn with_pool<R>(pool: &ThreadPool, f: impl FnOnce() -> R) -> R {
+    struct Restore(*const ThreadPool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            POOL_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = POOL_OVERRIDE.with(|c| c.replace(pool as *const ThreadPool));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Dispatch target for the helpers below: the thread's override if one
+/// is active, else the global pool.
+fn with_current_pool<R>(f: impl FnOnce(&ThreadPool) -> R) -> R {
+    let ptr = POOL_OVERRIDE.with(|c| c.get());
+    if ptr.is_null() {
+        f(global_pool())
+    } else {
+        // SAFETY: the pointer is set only by `with_pool`, whose borrow
+        // of the pool outlives its dynamic extent on this thread, and
+        // which restores the previous value before returning.
+        f(unsafe { &*ptr })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -284,8 +612,9 @@ pub fn global_pool() -> &'static ThreadPool {
 // ---------------------------------------------------------------------------
 
 /// Run `f(chunk_index, range)` over `n_items` split into at most
-/// `n_threads` chunks on the persistent [`global_pool`]. With
-/// `n_threads <= 1` (or a single chunk) runs inline with zero overhead.
+/// `n_threads` chunks on the persistent pool ([`global_pool`] unless a
+/// [`with_pool`] override is active). With `n_threads <= 1` (or a
+/// single chunk) runs inline with zero overhead.
 pub fn parallel_for<F>(n_items: usize, n_threads: usize, f: F)
 where
     F: Fn(usize, Range<usize>) + Sync,
@@ -303,16 +632,16 @@ where
         .enumerate()
         .map(|(i, r)| Box::new(move || f(i, r)) as Box<dyn FnOnce() + Send + '_>)
         .collect();
-    global_pool().scope(tasks);
+    with_current_pool(|pool| pool.scope(tasks));
 }
 
 /// Split `items` into at most `n_threads` contiguous ranges, hand each
 /// range its disjoint `range.len() * row_len` slice of `out`, and run
-/// `f(range, slice)` on the persistent [`global_pool`] in **one**
-/// parallel region (inline when a single chunk results). This is the
-/// writer side of the batched conv/dense kernels: every work item owns
-/// one contiguous `row_len` output row, so disjoint chunk slices need
-/// zero synchronisation.
+/// `f(range, slice)` on the persistent pool in **one** parallel region
+/// (inline when a single chunk results). This is the writer side of the
+/// batched conv/dense kernels: every work item owns one contiguous
+/// `row_len` output row, so disjoint chunk slices need zero
+/// synchronisation.
 pub(crate) fn parallel_for_slices<F>(
     items: usize,
     n_threads: usize,
@@ -344,7 +673,7 @@ pub(crate) fn parallel_for_slices<F>(
             Box::new(move || f(range, slice)) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
-    global_pool().scope(tasks);
+    with_current_pool(|pool| pool.scope(tasks));
 }
 
 /// Macro-item variant of [`parallel_for_slices`] for the tiled conv
@@ -406,13 +735,123 @@ pub(crate) fn parallel_for_macro_slices<O, F>(
             Box::new(move || f(range, slice, sc)) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
-    global_pool().scope(tasks);
+    with_current_pool(|pool| pool.scope(tasks));
+}
+
+/// Give every cluster with a non-empty span one chunk slot, then
+/// apportion the remaining `slots` by weight. `None` when the pool has
+/// more working clusters than slots (the caller falls back to plain
+/// chunking).
+fn distribute_slots(
+    slots: usize,
+    weights: &[f64],
+    spans: &[Range<usize>],
+) -> Option<Vec<usize>> {
+    let live: Vec<usize> = (0..spans.len()).filter(|&i| !spans[i].is_empty()).collect();
+    if live.is_empty() || live.len() > slots {
+        return None;
+    }
+    let mut out = vec![0usize; spans.len()];
+    for &i in &live {
+        out[i] = 1;
+    }
+    let extra = slots - live.len();
+    if extra > 0 {
+        let w: Vec<f64> = (0..spans.len())
+            .map(|i| if spans[i].is_empty() { 0.0 } else { weights[i].max(0.0) })
+            .collect();
+        for (i, r) in chunk_ranges_weighted(extra, &w).into_iter().enumerate() {
+            out[i] += r.len();
+        }
+    }
+    for (i, s) in spans.iter().enumerate() {
+        out[i] = out[i].min(s.len());
+    }
+    Some(out)
+}
+
+/// Cost-weighted placed variant of [`parallel_for_macro_slices`]: the
+/// macro-item space is first split into per-cluster spans by the
+/// current pool's throughput weights
+/// ([`ThreadPool::cluster_weights`]`(compute_bound)`), each span is
+/// chunked for its cluster's share of the `n_threads` budget, and every
+/// chunk is submitted to its cluster's deque
+/// ([`ThreadPool::scope_placed`]). Single-cluster pools — and degenerate
+/// shapes (more clusters than thread slots, fewer chunks than 2) — fall
+/// back to the plain helper. Chunk boundaries still always fall on
+/// macro-item boundaries and every item is computed exactly once by one
+/// thread, so output is **bitwise identical** to the unplaced dispatch.
+pub(crate) fn parallel_for_macro_slices_placed<O, F>(
+    items: usize,
+    n_threads: usize,
+    compute_bound: bool,
+    out: &mut [f32],
+    offset_of: &O,
+    scratch: &mut [Vec<f32>],
+    f: &F,
+) where
+    O: Fn(usize) -> usize,
+    F: Fn(Range<usize>, &mut [f32], &mut [f32]) + Sync,
+{
+    with_current_pool(|pool| {
+        let n_threads = n_threads.max(1);
+        if pool.clusters().len() <= 1 || n_threads <= 1 || items <= 1 {
+            return parallel_for_macro_slices(items, n_threads, out, offset_of, scratch, f);
+        }
+        let weights = pool.cluster_weights(compute_bound);
+        let spans = chunk_ranges_weighted(items, &weights);
+        let Some(slots) = distribute_slots(n_threads, &weights, &spans) else {
+            return parallel_for_macro_slices(items, n_threads, out, offset_of, scratch, f);
+        };
+        let mut chunks: Vec<(usize, Range<usize>)> = Vec::new();
+        for (c, span) in spans.iter().enumerate() {
+            if span.is_empty() || slots[c] == 0 {
+                continue;
+            }
+            for r in chunk_ranges(span.len(), slots[c]) {
+                chunks.push((c, span.start + r.start..span.start + r.end));
+            }
+        }
+        if chunks.len() <= 1 || chunks.len() > scratch.len() {
+            return parallel_for_macro_slices(items, n_threads, out, offset_of, scratch, f);
+        }
+        // Spans are ascending and contiguous from 0, so the chunk list
+        // walks the output region front to back — same disjoint
+        // slicing as the plain helper.
+        let mut slices: Vec<&mut [f32]> = Vec::with_capacity(chunks.len());
+        let mut rest = out;
+        let mut consumed = 0usize;
+        for (_, r) in &chunks {
+            let end = offset_of(r.end);
+            let (head, tail) = rest.split_at_mut(end - consumed);
+            slices.push(head);
+            rest = tail;
+            consumed = end;
+        }
+        let tasks: Vec<(usize, Box<dyn FnOnce() + Send + '_>)> = chunks
+            .into_iter()
+            .zip(slices)
+            .zip(scratch.iter_mut())
+            .map(|(((cluster, range), slice), sc)| {
+                let sc: &mut [f32] = sc.as_mut_slice();
+                (
+                    cluster,
+                    Box::new(move || f(range, slice, sc)) as Box<dyn FnOnce() + Send + '_>,
+                )
+            })
+            .collect();
+        pool.scope_placed(tasks);
+    })
 }
 
 /// Like [`parallel_for`] but each chunk owns a scratch accumulation
 /// buffer of `buf_len` zeros; after the parallel phase the buffers are
 /// reduced (element-wise sum) into a single vector. This is the
 /// reduction + inter-thread data-transfer overhead KLP/FLP pay.
+///
+/// Reductions are **never** cost-weight placed: the sequential sum
+/// below depends on the chunk boundaries, so placement here would
+/// change numerics — exactly what the affinity design forbids.
 pub fn parallel_reduce<F>(n_items: usize, n_threads: usize, buf_len: usize, f: F) -> Vec<f32>
 where
     F: Fn(usize, Range<usize>, &mut [f32]) + Sync,
@@ -464,7 +903,7 @@ pub fn parallel_reduce_with<F>(
                 Box::new(move || f(i, r, buf)) as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
-        global_pool().scope(tasks);
+        with_current_pool(|pool| pool.scope(tasks));
     }
     // Sequential reduction — deliberately the simple strategy a
     // RenderScript reduction kernel would lower to.
@@ -561,6 +1000,38 @@ mod tests {
     }
 
     #[test]
+    fn weighted_chunks_cover_and_apportion() {
+        // Exact coverage, one span per weight, ascending.
+        for &(n, ref w) in &[
+            (12usize, vec![3.0, 1.0]),
+            (10, vec![1.0, 1.0, 1.0]),
+            (1, vec![0.5, 0.5]),
+            (0, vec![1.0, 2.0]),
+            (7, vec![0.0, 1.0]),
+            (9, vec![f64::NAN, 1.0, -3.0]),
+        ] {
+            let spans = chunk_ranges_weighted(n, w);
+            assert_eq!(spans.len(), w.len());
+            let mut expect = 0usize;
+            for s in &spans {
+                assert_eq!(s.start, expect);
+                expect = s.end;
+            }
+            assert_eq!(expect, n, "weights {w:?}");
+        }
+        // 3:1 weights on 12 items: exactly 9 + 3.
+        let spans = chunk_ranges_weighted(12, &[3.0, 1.0]);
+        assert_eq!((spans[0].len(), spans[1].len()), (9, 3));
+        // Zero-weight clusters get nothing.
+        let spans = chunk_ranges_weighted(7, &[0.0, 1.0]);
+        assert_eq!((spans[0].len(), spans[1].len()), (0, 7));
+        // All-garbage weights degrade to an equal split.
+        let spans = chunk_ranges_weighted(8, &[f64::NAN, -1.0]);
+        assert_eq!((spans[0].len(), spans[1].len()), (4, 4));
+        assert!(chunk_ranges_weighted(5, &[]).is_empty());
+    }
+
+    #[test]
     fn parallel_for_visits_every_item() {
         let visited = AtomicUsize::new(0);
         parallel_for(1000, 4, |_, r| {
@@ -621,8 +1092,12 @@ mod tests {
     fn pool_reused_across_calls_and_private_scope() {
         // One test on purpose: THREADS_SPAWNED is process-global and
         // libtest runs tests concurrently, so the private-pool check
-        // must not race the flat-counter assertion below.
+        // must not race the flat-counter assertion below. (Pool tests
+        // that spawn more private pools live in the separate `affinity`
+        // test binary for the same reason.)
         let pool = ThreadPool::new(2);
+        assert_eq!(pool.size(), 2);
+        assert_eq!(pool.clusters().len(), 1, "ThreadPool::new is single-cluster");
         let hits = AtomicUsize::new(0);
         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..16)
             .map(|_| {

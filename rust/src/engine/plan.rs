@@ -175,6 +175,10 @@ enum Step {
         packed: bool,
         /// Row-tile macro-kernel sizes (ignored by the unpacked core).
         tile: ConvTiling,
+        /// Per-tile working-set bytes when cost-weighted cluster
+        /// placement is on ([`PlanBuilder::affinity`]); `None` keeps
+        /// the plain chunked dispatch.
+        place: Option<usize>,
     },
     ConvNchw {
         src: usize,
@@ -322,6 +326,23 @@ impl<'a> PlanBuilder<'a> {
         self
     }
 
+    /// Cost-weighted cluster placement (default **off**). When on — and
+    /// the process pool spans more than one core cluster
+    /// (big.LITTLE/multi-socket; see [`crate::engine::Topology`]) —
+    /// each packed conv layer's macro items are split across clusters
+    /// by per-cluster throughput weights, using the layer's
+    /// [`ConvTiling`] working-set cost to decide compute- vs
+    /// memory-bound weighting, and each chunk is submitted to its
+    /// cluster's own work deque. Placement moves work between cores,
+    /// never changes what is computed: output is bitwise identical with
+    /// affinity on or off. Requires packing (the unpacked row-walk
+    /// ablation plan ignores it); single-cluster hosts fall back to the
+    /// plain dispatch at execution time.
+    pub fn affinity(mut self, on: bool) -> Self {
+        self.cfg.affinity = on;
+        self
+    }
+
     /// Batch capacity `B`: arena registers are sized `B x` and
     /// [`ExecutionPlan::run_batch`] accepts up to `B` images per walk.
     pub fn batch(mut self, capacity: usize) -> Self {
@@ -380,7 +401,7 @@ impl<'a> PlanBuilder<'a> {
         let (modes, cfg) = if self.family == Family::Nchw(NchwConv::Scalar) {
             (
                 ModeAssignment::uniform(ArithMode::Precise),
-                ExecConfig { threads: 1 },
+                ExecConfig { threads: 1, affinity: false },
             )
         } else {
             (self.modes, self.cfg)
@@ -467,6 +488,7 @@ impl ExecutionPlan {
             family,
             packing,
             tiling,
+            affinity: cfg.affinity,
             slots: Vec::new(),
             steps: Vec::new(),
             scratch_len: 0,
@@ -707,6 +729,9 @@ struct Lowerer<'a> {
     family: Family,
     packing: bool,
     tiling: Option<ConvTiling>,
+    /// Cost-weighted cluster placement: lowered conv steps carry their
+    /// working-set cost so the executor can weight clusters per layer.
+    affinity: bool,
     slots: Vec<SlotShape>,
     steps: Vec<Step>,
     scratch_len: usize,
@@ -813,6 +838,15 @@ impl Lowerer<'_> {
                                 ConvTiling::choose(cb, w + 2 * p, u, *k, *s, mb, ho)
                             })
                             .clamped(mb, ho);
+                        // Cost-weighted placement consumes the tile's
+                        // working-set bytes (packed path only — the
+                        // unpacked row walk is the placement-free
+                        // ablation reference).
+                        let place = if self.affinity && self.packing {
+                            Some(tile.working_set_bytes(cb, w + 2 * p, u, *k, *s))
+                        } else {
+                            None
+                        };
                         let wgt = if self.packing {
                             self.bake_conv_panels(&lp.w_mm, mode, mb, cb, *k, u)
                         } else {
@@ -831,6 +865,7 @@ impl Lowerer<'_> {
                             mode,
                             packed: self.packing,
                             tile,
+                            place,
                         });
                     }
                     Family::Nchw(policy) => {
@@ -1089,7 +1124,7 @@ fn exec_step(
                 );
             }
         }
-        Step::ConvMm { src, dst, w, b, k, s, p, relu, mode, packed, tile } => {
+        Step::ConvMm { src, dst, w, b, k, s, p, relu, mode, packed, tile, place } => {
             let (cin, h, wd, u) = maps_of(slots[*src]);
             let (m, ho, wo, _) = maps_of(slots[*dst]);
             let (cb, mb) = (ceil_div(cin, u), ceil_div(m, u));
@@ -1132,6 +1167,7 @@ fn exec_step(
                         threads,
                         live,
                         *tile,
+                        *place,
                         &mut arena.thread_scratch,
                     );
                 } else {
@@ -1178,6 +1214,7 @@ fn exec_step(
                         threads,
                         live,
                         *tile,
+                        *place,
                         &mut arena.thread_scratch,
                     );
                 } else {

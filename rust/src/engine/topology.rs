@@ -1,0 +1,383 @@
+//! CPU topology probe and thread-affinity primitives for the
+//! topology-aware thread pool (ROADMAP "NUMA/affinity-aware thread
+//! pool").
+//!
+//! Mobile SoCs are heterogeneous: big.LITTLE designs pair high-capacity
+//! cores with efficiency cores, and each cluster has its own L2. A
+//! thread-workload allocation that assumes threads stay where their
+//! caches are (paper section IV.A) needs to know that grouping, so this
+//! module answers two questions with zero external dependencies:
+//!
+//! * **What does the machine look like?** [`Topology::probe`] reads
+//!   Linux sysfs: per-CPU `cpu_capacity` (the scheduler's relative
+//!   per-core throughput, 1024 = the biggest core) groups cores into
+//!   clusters; when capacities are uniform, `physical_package_id`
+//!   distinguishes multi-socket hosts. Only CPUs in the calling
+//!   process's affinity mask (`sched_getaffinity`) are considered, so a
+//!   `taskset -c 0,1` harness sees exactly the two cores it was given.
+//!   Off Linux — or when sysfs is absent — the probe degrades to
+//!   [`Topology::uniform`]: one cluster, `available_parallelism` cores,
+//!   and every pinning request becomes a no-op.
+//! * **How do threads stay put?** [`pin_current_thread`] wraps
+//!   `sched_setaffinity` via a direct libc FFI declaration (the crate
+//!   stays std-only). Failures — and non-Linux builds — are silent
+//!   no-ops: affinity is a performance hint, never a correctness
+//!   dependency, so every parity suite must pass identically with
+//!   pinning on, off, or unavailable.
+//!
+//! [`CoreSet`] is the serve-layer face of the same machinery: a small
+//! copyable CPU mask a model worker can be pinned to, with
+//! [`Topology::partition`] handing co-hosted models **disjoint** sets so
+//! they stop trampling each other's caches.
+
+use crate::engine::parallel::chunk_ranges;
+
+/// The `cpu_capacity` value of a baseline big core (Linux convention).
+pub const DEFAULT_CAPACITY: u32 = 1024;
+
+/// One group of cores sharing a capacity class (and, in practice, an L2
+/// slice): a big or LITTLE cluster, or one socket of a multi-socket
+/// host.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoreCluster {
+    /// CPU ids in the cluster, ascending.
+    pub cpus: Vec<usize>,
+    /// Relative per-core compute capacity (sysfs `cpu_capacity` scale;
+    /// [`DEFAULT_CAPACITY`] when the host does not report one).
+    pub capacity: u32,
+}
+
+/// The machine's core grouping, as seen through the process's CPU
+/// affinity mask.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Clusters sorted by capacity, biggest first.
+    pub clusters: Vec<CoreCluster>,
+    /// True when `cpus` hold real ids from the affinity mask (pinning
+    /// is meaningful); false for the uniform fallback (pinning no-ops).
+    pub probed: bool,
+}
+
+impl Topology {
+    /// Probe the host. Linux: sysfs capacities + packages filtered by
+    /// the `sched_getaffinity` mask. Elsewhere (or on probe failure):
+    /// the uniform fallback.
+    pub fn probe() -> Topology {
+        #[cfg(target_os = "linux")]
+        {
+            if let Some(t) = probe_linux() {
+                return t;
+            }
+        }
+        Topology::uniform(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        )
+    }
+
+    /// One homogeneous cluster of `n` logical cores with placeholder
+    /// ids. `probed` is false, so pinning requests derived from it are
+    /// no-ops — this is the portable fallback the constrained-host CI
+    /// job exercises.
+    pub fn uniform(n: usize) -> Topology {
+        let n = n.max(1);
+        Topology {
+            clusters: vec![CoreCluster {
+                cpus: (0..n).collect(),
+                capacity: DEFAULT_CAPACITY,
+            }],
+            probed: false,
+        }
+    }
+
+    /// Total cores across clusters.
+    pub fn cpu_count(&self) -> usize {
+        self.clusters.iter().map(|c| c.cpus.len()).sum()
+    }
+
+    /// Split the machine's cores into `n` **disjoint** [`CoreSet`]s
+    /// (contiguous runs, biggest cluster first) for co-hosted serve
+    /// workers. Unprobed topologies yield empty sets: pinning stays a
+    /// no-op rather than guessing ids.
+    pub fn partition(&self, n: usize) -> Vec<CoreSet> {
+        if n == 0 {
+            return Vec::new();
+        }
+        if !self.probed {
+            return vec![CoreSet::empty(); n];
+        }
+        let all: Vec<usize> = self
+            .clusters
+            .iter()
+            .flat_map(|c| c.cpus.iter().copied())
+            .collect();
+        let mut out = vec![CoreSet::empty(); n];
+        for (i, r) in chunk_ranges(all.len(), n).into_iter().enumerate() {
+            out[i] = CoreSet::of(&all[r]);
+        }
+        out
+    }
+}
+
+/// A copyable set of CPU ids (0..64) for serve-worker affinity
+/// requests. Ids >= 64 are ignored — the serve layer targets mobile
+/// SoCs and small hosts; the engine pool's own pinning has no such
+/// limit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CoreSet(u64);
+
+impl CoreSet {
+    /// The empty set (pinning no-op).
+    pub fn empty() -> CoreSet {
+        CoreSet(0)
+    }
+
+    /// Set of the given CPU ids (ids >= 64 ignored).
+    pub fn of(cpus: &[usize]) -> CoreSet {
+        let mut bits = 0u64;
+        for &c in cpus {
+            if c < 64 {
+                bits |= 1 << c;
+            }
+        }
+        CoreSet(bits)
+    }
+
+    /// CPU ids in the set, ascending.
+    pub fn cpus(&self) -> Vec<usize> {
+        (0..64).filter(|&c| self.0 >> c & 1 == 1).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+
+    /// True when the two sets share no CPU — what co-hosted models
+    /// should verify before pinning.
+    pub fn disjoint(&self, other: &CoreSet) -> bool {
+        self.0 & other.0 == 0
+    }
+}
+
+impl std::fmt::Display for CoreSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ids: Vec<String> = self.cpus().iter().map(|c| c.to_string()).collect();
+        write!(f, "{{{}}}", ids.join(","))
+    }
+}
+
+/// Pin the calling thread to `cpus`. Returns whether the kernel
+/// accepted the mask; empty sets, failures (ids outside the process
+/// mask), and non-Linux builds are no-ops returning false. Never
+/// affects correctness — only where the scheduler may place the thread.
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        if cpus.is_empty() {
+            return false;
+        }
+        let mut set = sys::CpuSet::zero();
+        for &c in cpus {
+            set.set(c);
+        }
+        // pid 0 = the calling thread.
+        unsafe {
+            sys::sched_setaffinity(0, std::mem::size_of::<sys::CpuSet>(), &set) == 0
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpus;
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linux probe internals
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    /// Fixed 1024-CPU mask matching glibc's `cpu_set_t`.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct CpuSet {
+        pub bits: [u64; 16],
+    }
+
+    impl CpuSet {
+        pub fn zero() -> CpuSet {
+            CpuSet { bits: [0; 16] }
+        }
+
+        pub fn set(&mut self, cpu: usize) {
+            if cpu < 1024 {
+                self.bits[cpu / 64] |= 1 << (cpu % 64);
+            }
+        }
+
+        pub fn has(&self, cpu: usize) -> bool {
+            cpu < 1024 && self.bits[cpu / 64] >> (cpu % 64) & 1 == 1
+        }
+    }
+
+    extern "C" {
+        pub fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+        pub fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut CpuSet) -> i32;
+    }
+}
+
+/// CPUs the current process may run on, per `sched_getaffinity` — the
+/// honest universe for both the probe and pinning (a `taskset` wrapper
+/// shrinks it).
+#[cfg(target_os = "linux")]
+fn allowed_cpus() -> Option<Vec<usize>> {
+    let mut set = sys::CpuSet::zero();
+    let rc = unsafe {
+        sys::sched_getaffinity(0, std::mem::size_of::<sys::CpuSet>(), &mut set)
+    };
+    if rc != 0 {
+        return None;
+    }
+    let cpus: Vec<usize> = (0..1024).filter(|&c| set.has(c)).collect();
+    if cpus.is_empty() {
+        None
+    } else {
+        Some(cpus)
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn read_sysfs_u32(path: &str) -> Option<u32> {
+    std::fs::read_to_string(path).ok()?.trim().parse().ok()
+}
+
+#[cfg(target_os = "linux")]
+fn probe_linux() -> Option<Topology> {
+    let cpus = allowed_cpus()?;
+    // Capacity classes (big.LITTLE). Hosts without cpu_capacity report
+    // one uniform class.
+    let caps: Vec<u32> = cpus
+        .iter()
+        .map(|&c| {
+            read_sysfs_u32(&format!("/sys/devices/system/cpu/cpu{c}/cpu_capacity"))
+                .unwrap_or(DEFAULT_CAPACITY)
+        })
+        .collect();
+    let mut clusters: Vec<CoreCluster> = Vec::new();
+    for (&cpu, &cap) in cpus.iter().zip(&caps) {
+        match clusters.iter_mut().find(|cl| cl.capacity == cap) {
+            Some(cl) => cl.cpus.push(cpu),
+            None => clusters.push(CoreCluster { cpus: vec![cpu], capacity: cap }),
+        }
+    }
+    // Uniform capacities on >1 CPU: fall back to package grouping so
+    // multi-socket hosts still get per-socket queues.
+    if clusters.len() == 1 && cpus.len() > 1 {
+        let pkgs: Vec<Option<u32>> = cpus
+            .iter()
+            .map(|&c| {
+                read_sysfs_u32(&format!(
+                    "/sys/devices/system/cpu/cpu{c}/topology/physical_package_id"
+                ))
+            })
+            .collect();
+        if pkgs.iter().all(|p| p.is_some()) {
+            let mut by_pkg: Vec<(u32, Vec<usize>)> = Vec::new();
+            for (&cpu, pkg) in cpus.iter().zip(&pkgs) {
+                let pkg = pkg.unwrap();
+                match by_pkg.iter_mut().find(|(p, _)| *p == pkg) {
+                    Some((_, v)) => v.push(cpu),
+                    None => by_pkg.push((pkg, vec![cpu])),
+                }
+            }
+            if by_pkg.len() > 1 {
+                clusters = by_pkg
+                    .into_iter()
+                    .map(|(_, cpus)| CoreCluster { cpus, capacity: DEFAULT_CAPACITY })
+                    .collect();
+            }
+        }
+    }
+    // Biggest cluster first; stable order for deterministic placement.
+    clusters.sort_by(|a, b| b.capacity.cmp(&a.capacity));
+    Some(Topology { clusters, probed: true })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_reports_at_least_one_core() {
+        let t = Topology::probe();
+        assert!(!t.clusters.is_empty());
+        assert!(t.cpu_count() >= 1);
+        for cl in &t.clusters {
+            assert!(!cl.cpus.is_empty());
+            assert!(cl.capacity > 0);
+        }
+    }
+
+    #[test]
+    fn uniform_fallback_shape() {
+        let t = Topology::uniform(4);
+        assert_eq!(t.clusters.len(), 1);
+        assert_eq!(t.cpu_count(), 4);
+        assert!(!t.probed);
+        // Unprobed topologies hand out empty (no-op) core sets.
+        let sets = t.partition(2);
+        assert_eq!(sets.len(), 2);
+        assert!(sets.iter().all(|s| s.is_empty()));
+        assert_eq!(Topology::uniform(0).cpu_count(), 1);
+    }
+
+    #[test]
+    fn partition_is_disjoint_and_covers() {
+        let t = Topology {
+            clusters: vec![
+                CoreCluster { cpus: vec![0, 1, 2, 3], capacity: 1024 },
+                CoreCluster { cpus: vec![4, 5], capacity: 512 },
+            ],
+            probed: true,
+        };
+        let sets = t.partition(3);
+        assert_eq!(sets.len(), 3);
+        for i in 0..sets.len() {
+            for j in i + 1..sets.len() {
+                assert!(sets[i].disjoint(&sets[j]), "sets {i} and {j} overlap");
+            }
+        }
+        let mut all: Vec<usize> = sets.iter().flat_map(|s| s.cpus()).collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn core_set_roundtrip() {
+        let s = CoreSet::of(&[0, 3, 63, 64, 1000]);
+        assert_eq!(s.cpus(), vec![0, 3, 63]); // >= 64 ignored
+        assert!(!s.is_empty());
+        assert!(CoreSet::empty().is_empty());
+        assert!(s.disjoint(&CoreSet::of(&[1, 2])));
+        assert!(!s.disjoint(&CoreSet::of(&[3])));
+        assert_eq!(format!("{}", CoreSet::of(&[1, 2])), "{1,2}");
+    }
+
+    #[test]
+    fn pinning_is_a_safe_no_op_or_success() {
+        // Whatever the host, pinning must never panic; empty = no-op.
+        assert!(!pin_current_thread(&[]));
+        let t = Topology::probe();
+        if t.probed {
+            let first = t.clusters[0].cpus[0];
+            // Pinning to a CPU from our own mask should succeed on
+            // Linux; restore the full mask afterwards.
+            assert!(pin_current_thread(&[first]));
+            let all: Vec<usize> =
+                t.clusters.iter().flat_map(|c| c.cpus.iter().copied()).collect();
+            assert!(pin_current_thread(&all));
+        }
+    }
+}

@@ -92,7 +92,7 @@ pub fn evaluate_accuracy(
     // identical to the per-image flow).
     let mut plan = engine::PlanBuilder::new(net, params)
         .modes(modes)
-        .config(ExecConfig { threads: cfg.threads })
+        .config(ExecConfig { threads: cfg.threads, ..Default::default() })
         .batch(EVAL_BATCH.min(n))
         .build()?;
     let mut correct = 0usize;

@@ -112,9 +112,12 @@ COMMANDS:
   simulate   --net NAME              Table I row for NAME on the device catalog
   serve      --net tinynet           serve a synthetic workload
              [--backend engine|pjrt] [--mode imprecise] [--requests 64]
-             [--batch 8] [--threads 1]
+             [--batch 8] [--threads 1] [--cores 0,1]
              engine: batch-compiled native plans (one plan walk per
              drained batch, no artifacts needed); pjrt: AOT artifacts
+             --cores pins the model worker to the given CPUs
+             (sched_setaffinity; co-hosted models should use disjoint
+             sets so they stop trampling each other's caches)
 ";
 
 fn cmd_info() -> Result<()> {
@@ -290,6 +293,26 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let n_requests = flags.get_usize("requests", 64)?;
     let max_batch = flags.get_usize("batch", 8)?;
     let threads = flags.get_usize("threads", 1)?;
+    let cores_flag = flags.get("cores", "");
+    let cores = if cores_flag.is_empty() {
+        None
+    } else {
+        let mut cpus = Vec::new();
+        for part in cores_flag.split(',') {
+            let cpu = part.trim().parse::<usize>().map_err(|_| {
+                Error::Invalid(format!("--cores: bad cpu id {part:?}"))
+            })?;
+            // CoreSet is a 64-bit mask; reject out-of-range ids instead
+            // of silently running the worker unpinned.
+            if cpu >= 64 {
+                return Err(Error::Invalid(format!(
+                    "--cores: cpu id {cpu} out of range (serve core sets cover cpus 0-63)"
+                )));
+            }
+            cpus.push(cpu);
+        }
+        Some(cappuccino::engine::CoreSet::of(&cpus))
+    };
     let dir = cappuccino::artifacts_dir();
 
     let (factory, input_len) = match backend.as_str() {
@@ -339,6 +362,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         max_batch,
         max_delay: std::time::Duration::from_millis(2),
         queue_depth: 128,
+        cores,
     };
     let server = Server::start(vec![(net.clone(), factory, policy)])?;
 

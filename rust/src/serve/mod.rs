@@ -18,13 +18,22 @@
 //! * [`worker`] threads — own the execution backend. PJRT objects are
 //!   not `Send`, so the backend is constructed *on* the worker thread
 //!   from a `Send` factory; weights stay device-resident across
-//!   requests.
+//!   requests. A worker may request a [`CoreSet`] ([`BatchPolicy`]):
+//!   its thread is then pinned via `sched_setaffinity` (no-op off
+//!   Linux), and co-hosted models given **disjoint** sets
+//!   ([`crate::engine::Topology::partition`]) stop trampling each
+//!   other's caches.
+//! * **shutdown drains**: a worker that observes the shutdown signal
+//!   first executes every request already accepted into its queue —
+//!   the router never admits a request that is then silently dropped.
 //!
 //! Python never appears anywhere on this path.
 
 pub mod workload;
 
 pub use workload::ArrivalProcess;
+
+pub use crate::engine::topology::CoreSet;
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -66,7 +75,7 @@ pub trait Backend {
 /// `Send`).
 pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
 
-/// Dynamic batching policy.
+/// Dynamic batching policy (plus the worker's placement request).
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     /// Upper bound on batch size (further capped by the backend).
@@ -75,6 +84,14 @@ pub struct BatchPolicy {
     pub max_delay: Duration,
     /// Bound of the per-model request queue (backpressure limit).
     pub queue_depth: usize,
+    /// Optional core set the model's worker thread is pinned to
+    /// (`sched_setaffinity`; silently a no-op off Linux or when the
+    /// kernel rejects the mask). Co-hosted models should request
+    /// **disjoint** sets — [`crate::engine::Topology::partition`] hands
+    /// them out. With `threads = 1` the whole inference runs inline on
+    /// the pinned worker thread; multi-chunk parallel regions still run
+    /// on the shared engine pool.
+    pub cores: Option<CoreSet>,
 }
 
 impl Default for BatchPolicy {
@@ -83,6 +100,7 @@ impl Default for BatchPolicy {
             max_batch: 8,
             max_delay: Duration::from_millis(2),
             queue_depth: 64,
+            cores: None,
         }
     }
 }
@@ -212,7 +230,9 @@ impl Server {
     }
 }
 
-/// Worker: construct backend, then batch-and-execute until shutdown.
+/// Worker: pin if requested, construct backend, then batch-and-execute
+/// until shutdown — and **drain** on shutdown (see
+/// [`drain_after_shutdown`]).
 fn worker_loop(
     factory: BackendFactory,
     rx: mpsc::Receiver<Job>,
@@ -220,6 +240,11 @@ fn worker_loop(
     metrics: Arc<ServeMetrics>,
     ready: mpsc::SyncSender<Result<()>>,
 ) {
+    if let Some(cores) = policy.cores {
+        // Placement hint only: failure (or a non-Linux host) leaves the
+        // worker unpinned and everything else identical.
+        let _ = crate::engine::topology::pin_current_thread(&cores.cpus());
+    }
     let mut backend = match factory() {
         Ok(b) => {
             let _ = ready.send(Ok(()));
@@ -242,7 +267,11 @@ fn worker_loop(
         // Block for the first request.
         let first = match rx.recv() {
             Ok(Job::Infer(r)) => r,
-            Ok(Job::Shutdown) | Err(_) => return,
+            Ok(Job::Shutdown) => {
+                drain_after_shutdown(&mut *backend, &rx, max_capacity, &metrics);
+                return;
+            }
+            Err(_) => return,
         };
         let mut batch = vec![first];
         // Dynamic batching: wait up to max_delay for more work.
@@ -256,6 +285,7 @@ fn worker_loop(
                 Ok(Job::Infer(r)) => batch.push(r),
                 Ok(Job::Shutdown) => {
                     run_batch(&mut *backend, &batch, &metrics);
+                    drain_after_shutdown(&mut *backend, &rx, max_capacity, &metrics);
                     return;
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
@@ -266,6 +296,41 @@ fn worker_loop(
             }
         }
         run_batch(&mut *backend, &batch, &metrics);
+    }
+}
+
+/// Post-shutdown drain: execute every request already sitting in the
+/// queue, in arrival order, batched at the worker's capacity.
+///
+/// Without this, a worker observing `Job::Shutdown` returned
+/// immediately and dropped every `Infer` job queued behind the signal —
+/// requests the router had *accepted* (clients were already waiting on
+/// a reply channel) surfaced as "worker dropped the request". A
+/// shutdown now closes the door to new work (the router's sender is
+/// dropped by [`Server::shutdown`]) but always finishes work it let in.
+fn drain_after_shutdown(
+    backend: &mut dyn Backend,
+    rx: &mpsc::Receiver<Job>,
+    max_capacity: usize,
+    metrics: &ServeMetrics,
+) {
+    let mut batch: Vec<ServeRequest> = Vec::new();
+    loop {
+        match rx.try_recv() {
+            Ok(Job::Infer(r)) => {
+                batch.push(r);
+                if batch.len() >= max_capacity {
+                    run_batch(backend, &batch, metrics);
+                    batch.clear();
+                }
+            }
+            // Duplicate shutdown signals fold into the first.
+            Ok(Job::Shutdown) => {}
+            Err(mpsc::TryRecvError::Empty) | Err(mpsc::TryRecvError::Disconnected) => break,
+        }
+    }
+    if !batch.is_empty() {
+        run_batch(backend, &batch, metrics);
     }
 }
 
@@ -360,7 +425,10 @@ impl EngineBackend {
             let max_capacity = self.batches.last().copied().unwrap_or(1);
             let base = crate::engine::PlanBuilder::new(&self.net, &self.params)
                 .modes(&self.modes)
-                .config(crate::engine::ExecConfig { threads: self.threads })
+                .config(crate::engine::ExecConfig {
+                    threads: self.threads,
+                    ..Default::default()
+                })
                 .batch(max_capacity)
                 .build()?;
             // Derive the smaller capacities, then reuse `base` as the
@@ -527,7 +595,12 @@ mod tests {
     fn burst_is_batched() {
         let server = engine_server(
             8,
-            BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(30), queue_depth: 64 },
+            BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(30),
+                queue_depth: 64,
+                ..Default::default()
+            },
         );
         let mut rng = Rng::new(2);
         let rxs: Vec<_> = (0..12)
@@ -557,7 +630,12 @@ mod tests {
         // Tiny queue + slow drain: flooding must produce rejections.
         let server = engine_server(
             1,
-            BatchPolicy { max_batch: 1, max_delay: Duration::ZERO, queue_depth: 2 },
+            BatchPolicy {
+                max_batch: 1,
+                max_delay: Duration::ZERO,
+                queue_depth: 2,
+                ..Default::default()
+            },
         );
         let mut rng = Rng::new(3);
         let mut rejected = 0;
@@ -646,6 +724,102 @@ mod tests {
         let rb = server.router().infer_blocking("b", img).unwrap();
         // Different weights → different logits.
         assert_ne!(ra.logits, rb.logits);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_requests_queued_behind_the_signal() {
+        // Regression: worker_loop used to return the moment it popped
+        // Job::Shutdown, silently dropping every accepted Infer job
+        // still queued behind the signal (clients saw "worker dropped
+        // the request"). Drive the loop directly with a pre-filled
+        // queue so the interleaving is deterministic: requests are
+        // submitted past the shutdown signal in both positions the loop
+        // can observe it (mid-batching and as the first job).
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 31, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let mut rng = Rng::new(32);
+
+        for shutdown_first in [false, true] {
+            let backend =
+                EngineBackend::new(net.clone(), params.clone(), modes.clone(), 1, 4);
+            let (tx, rx) = mpsc::sync_channel::<Job>(16);
+            let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+            let metrics = Arc::new(ServeMetrics::default());
+
+            let mut reply_rxs = Vec::new();
+            let mut queue: Vec<Job> = Vec::new();
+            for i in 0..3 {
+                let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+                reply_rxs.push(reply_rx);
+                let req = ServeRequest {
+                    image: rng.normal_vec(3 * 16 * 16),
+                    enqueued: Instant::now(),
+                    reply: reply_tx,
+                };
+                queue.push(Job::Infer(req));
+                // Mid-batching variant: shutdown lands after the first
+                // request, with two more accepted behind it.
+                if !shutdown_first && i == 0 {
+                    queue.push(Job::Shutdown);
+                }
+            }
+            if shutdown_first {
+                queue.insert(0, Job::Shutdown);
+            }
+            for job in queue {
+                tx.try_send(job).unwrap();
+            }
+
+            let policy = BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_millis(50),
+                queue_depth: 16,
+                ..Default::default()
+            };
+            worker_loop(backend.factory(), rx, policy, Arc::clone(&metrics), ready_tx);
+            ready_rx.recv().unwrap().unwrap();
+
+            for (i, reply_rx) in reply_rxs.into_iter().enumerate() {
+                let resp = reply_rx.recv().unwrap_or_else(|_| {
+                    panic!("shutdown_first={shutdown_first}: request {i} dropped at shutdown")
+                });
+                assert!(resp.logits.iter().all(|v| v.is_finite()));
+            }
+            assert_eq!(
+                metrics.counters.completed.load(Ordering::Relaxed),
+                3,
+                "shutdown_first={shutdown_first}"
+            );
+        }
+    }
+
+    #[test]
+    fn pinned_worker_roundtrips_and_partitions_are_disjoint() {
+        // Core-set pinning is a placement hint: whatever the host (no
+        // Linux, taskset mask, bad ids), serving must work identically.
+        let sets = crate::engine::Topology::probe().partition(2);
+        assert_eq!(sets.len(), 2);
+        assert!(sets[0].disjoint(&sets[1]));
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 33, 4).unwrap();
+        let backend = EngineBackend::new(
+            net,
+            params,
+            ModeAssignment::uniform(ArithMode::Imprecise),
+            1,
+            4,
+        );
+        let policy = BatchPolicy { cores: Some(sets[0]), ..Default::default() };
+        let server =
+            Server::start(vec![("pinned".into(), backend.factory(), policy)]).unwrap();
+        let mut rng = Rng::new(34);
+        let resp = server
+            .router()
+            .infer_blocking("pinned", rng.normal_vec(3 * 16 * 16))
+            .unwrap();
+        assert_eq!(resp.logits.len(), 8);
         server.shutdown();
     }
 

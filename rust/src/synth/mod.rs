@@ -218,7 +218,7 @@ pub fn compile_plan_batched(
     };
     crate::engine::PlanBuilder::new(net, params)
         .modes(&plan.mode_assignment())
-        .config(ExecConfig { threads: plan.threads })
+        .config(ExecConfig { threads: plan.threads, ..Default::default() })
         .policy(policy)
         .batch(batch)
         .build()
@@ -336,7 +336,7 @@ mod tests {
             &params,
             &input,
             &ModeAssignment::uniform(ArithMode::Precise),
-            ExecConfig { threads: 2 },
+            ExecConfig { threads: 2, ..Default::default() },
         )
         .unwrap();
         assert_eq!(a, b);

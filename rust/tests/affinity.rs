@@ -1,0 +1,219 @@
+//! Topology-aware pool integration suite (ISSUE 4).
+//!
+//! Three contracts under test:
+//!
+//! 1. **No head-of-line blocking** — a scope's helping submitter only
+//!    ever executes its own batch's jobs, so a small concurrent scope
+//!    cannot get stuck running another batch's long work (the old
+//!    pool's help loop popped *any* queued job; the regression test
+//!    below fails on it by ~30 s).
+//! 2. **Placement and pinning are bitwise invisible** — plans run
+//!    bitwise identically on the global pool, a pinned pool, an
+//!    unpinned pool, and a synthetic heterogeneous (two-cluster)
+//!    pool, with cost-weighted affinity placement on or off, across
+//!    thread counts — against the legacy interpreter oracle.
+//! 3. **The uniform fallback is safe** — unprobed topologies never pin
+//!    and still execute everything (the constrained-host CI job runs
+//!    this whole binary under `taskset -c 0,1`).
+//!
+//! This binary deliberately hosts every test that spawns private
+//! [`ThreadPool`]s: the `pool_threads_spawned` counter is
+//! process-global, and the lib/parity binaries assert it stays flat.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cappuccino::engine::{
+    run_mapmajor_legacy, with_pool, ArithMode, CoreCluster, EngineParams, ExecConfig,
+    ModeAssignment, PlanBuilder, ThreadPool, Topology,
+};
+use cappuccino::model::zoo;
+use cappuccino::util::rng::Rng;
+
+fn wait_until(flag: &AtomicBool, timeout: Duration) {
+    let t0 = Instant::now();
+    while !flag.load(Ordering::Acquire) && t0.elapsed() < timeout {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Synthetic big.LITTLE shape: one 1024-capacity core, one 512-capacity
+/// core. `probed` is false, so worker pinning no-ops (the cpu ids are
+/// placeholders) while the per-cluster deques and weighted placement
+/// are fully exercised.
+fn two_cluster_pool() -> ThreadPool {
+    let topo = Topology {
+        clusters: vec![
+            CoreCluster { cpus: vec![0], capacity: 1024 },
+            CoreCluster { cpus: vec![1], capacity: 512 },
+        ],
+        probed: false,
+    };
+    ThreadPool::with_topology(&topo, true)
+}
+
+#[test]
+fn small_scope_is_not_blocked_behind_a_concurrent_slow_batch() {
+    // Pool of ONE worker. Scope A submits three jobs that block until
+    // released: the worker takes one, A's own helper takes a second,
+    // and the third sits queued. A concurrent small scope B must then
+    // complete immediately — its helper runs B's job itself and must
+    // NOT pop A's queued slow job (the old pool did exactly that, so
+    // this test times out at ~30 s on it).
+    let pool = Arc::new(ThreadPool::new(1));
+    let release = Arc::new(AtomicBool::new(false));
+    let started = Arc::new(AtomicUsize::new(0));
+    let slow = {
+        let (pool, release, started) =
+            (Arc::clone(&pool), Arc::clone(&release), Arc::clone(&started));
+        std::thread::spawn(move || {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                .map(|_| {
+                    let (release, started) = (&release, &started);
+                    Box::new(move || {
+                        started.fetch_add(1, Ordering::AcqRel);
+                        wait_until(release, Duration::from_secs(30));
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(tasks);
+        })
+    };
+    // Both execution contexts (worker + A's helper) are inside slow
+    // jobs once two have started; the third is queued.
+    let t0 = Instant::now();
+    while started.load(Ordering::Acquire) < 2 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(started.load(Ordering::Acquire), 2, "slow scope never saturated the pool");
+
+    let ran = AtomicBool::new(false);
+    let t1 = Instant::now();
+    pool.scope(vec![Box::new(|| {
+        ran.store(true, Ordering::Release);
+    }) as Box<dyn FnOnce() + Send + '_>]);
+    let quick = t1.elapsed();
+    release.store(true, Ordering::Release);
+    slow.join().unwrap();
+    assert!(ran.load(Ordering::Acquire), "quick job never ran");
+    assert!(
+        quick < Duration::from_secs(5),
+        "head-of-line blocking: quick scope took {quick:?} behind a foreign slow batch"
+    );
+}
+
+#[test]
+fn placed_scope_runs_every_task_on_a_multi_cluster_pool() {
+    let pool = two_cluster_pool();
+    assert_eq!(pool.size(), 2);
+    assert_eq!(pool.clusters().len(), 2);
+    // Compute-bound weights follow capacity; memory-bound weights are
+    // plain core counts.
+    let wc = pool.cluster_weights(true);
+    assert!(wc[0] > wc[1], "capacity weighting lost: {wc:?}");
+    let wm = pool.cluster_weights(false);
+    assert_eq!(wm[0], wm[1], "memory-bound weights should be core counts: {wm:?}");
+
+    let hits = AtomicUsize::new(0);
+    // Hints beyond the cluster count must fold into range, and every
+    // task must run exactly once wherever it lands.
+    let tasks: Vec<(usize, Box<dyn FnOnce() + Send + '_>)> = (0..16)
+        .map(|i| {
+            (
+                i % 5,
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>,
+            )
+        })
+        .collect();
+    pool.scope_placed(tasks);
+    assert_eq!(hits.load(Ordering::Relaxed), 16);
+}
+
+#[test]
+fn plans_are_bitwise_identical_across_pools_pinning_and_affinity() {
+    // The acceptance matrix: pinned / unpinned / heterogeneous pools x
+    // affinity on/off x threads {1, 2, 4}, all bitwise against the
+    // legacy interpreter — placement changes who computes, never what.
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 90, 4).unwrap();
+    let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+    let mut rng = Rng::new(91);
+    let inputs: Vec<Vec<f32>> =
+        (0..3).map(|_| rng.normal_vec(net.input.elements())).collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+    let topo = Topology::probe();
+    let pinned = ThreadPool::with_topology(&topo, true);
+    let unpinned = ThreadPool::with_topology(&topo, false);
+    let hetero = two_cluster_pool();
+
+    for threads in [1usize, 2, 4] {
+        let cfg = ExecConfig { threads, ..Default::default() };
+        let wants: Vec<Vec<f32>> = inputs
+            .iter()
+            .map(|x| run_mapmajor_legacy(&net, &params, x, &modes, cfg).unwrap())
+            .collect();
+        for affinity in [false, true] {
+            let mut plan = PlanBuilder::new(&net, &params)
+                .modes(&modes)
+                .threads(threads)
+                .batch(3)
+                .affinity(affinity)
+                .build()
+                .unwrap();
+            let on_global = plan.run_batch(&refs).unwrap();
+            let on_pinned = with_pool(&pinned, || plan.run_batch(&refs).unwrap());
+            let on_unpinned = with_pool(&unpinned, || plan.run_batch(&refs).unwrap());
+            let on_hetero = with_pool(&hetero, || plan.run_batch(&refs).unwrap());
+            for (i, want) in wants.iter().enumerate() {
+                let label = format!("threads={threads} affinity={affinity} lane {i}");
+                assert_eq!(&on_global[i], want, "global pool: {label}");
+                assert_eq!(&on_pinned[i], want, "pinned pool: {label}");
+                assert_eq!(&on_unpinned[i], want, "unpinned pool: {label}");
+                assert_eq!(&on_hetero[i], want, "two-cluster pool: {label}");
+            }
+        }
+    }
+}
+
+#[test]
+fn placed_dispatch_keeps_generic_u_parity() {
+    // u != 4 routes per-thread scratch rows through the placed
+    // dispatch; the weighted chunk layout must pair them correctly.
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 92, 3).unwrap();
+    let modes = ModeAssignment::uniform(ArithMode::Relaxed);
+    let hetero = two_cluster_pool();
+    let mut rng = Rng::new(93);
+    let input = rng.normal_vec(net.input.elements());
+    for threads in [2usize, 4] {
+        let cfg = ExecConfig { threads, ..Default::default() };
+        let want = run_mapmajor_legacy(&net, &params, &input, &modes, cfg).unwrap();
+        let mut plan = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(threads)
+            .affinity(true)
+            .build()
+            .unwrap();
+        let got = with_pool(&hetero, || plan.run(&input).unwrap());
+        assert_eq!(got, want, "u=3 threads={threads} placed dispatch diverged");
+    }
+}
+
+#[test]
+fn global_pool_is_topology_shaped() {
+    let pool = cappuccino::engine::global_pool();
+    assert!(pool.size() >= 1);
+    assert!(!pool.clusters().is_empty());
+    let total: usize = pool.clusters().iter().map(|c| c.workers).sum();
+    assert_eq!(total, pool.size(), "every worker belongs to exactly one cluster");
+    // Uniform-fallback hosts (and CAPPUCCINO_PIN=0) run unpinned; when
+    // the probe grouped by capacity the weights must be finite and
+    // positive either way.
+    for w in pool.cluster_weights(true) {
+        assert!(w.is_finite() && w > 0.0);
+    }
+}

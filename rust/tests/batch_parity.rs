@@ -199,7 +199,7 @@ fn tiling_edge_cases_bitwise_match_legacy_across_modes_threads() {
         for mode in ArithMode::ALL {
             let modes = ModeAssignment::uniform(mode);
             for threads in THREAD_SWEEP {
-                let cfg = ExecConfig { threads };
+                let cfg = ExecConfig { threads, ..Default::default() };
                 let wants: Vec<Vec<f32>> = inputs
                     .iter()
                     .map(|x| run_mapmajor_legacy(&net, &params, x, &modes, cfg).unwrap())

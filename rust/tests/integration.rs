@@ -51,7 +51,7 @@ fn engine_matches_python_golden_logits() {
             &params,
             img,
             &ModeAssignment::uniform(ArithMode::Precise),
-            ExecConfig { threads: 2 },
+            ExecConfig { threads: 2, ..Default::default() },
         )
         .unwrap();
         for (a, b) in logits.iter().zip(&want.data[i * classes..(i + 1) * classes]) {
@@ -109,7 +109,7 @@ fn engine_matches_pjrt_runtime() {
             &params,
             &img,
             &ModeAssignment::uniform(ArithMode::Precise),
-            ExecConfig { threads: 1 },
+            ExecConfig { threads: 1, ..Default::default() },
         )
         .unwrap();
         for (a, b) in pjrt_logits.iter().zip(&engine_logits) {
@@ -226,6 +226,7 @@ fn pjrt_serving_end_to_end() {
             max_batch: 8,
             max_delay: std::time::Duration::from_millis(5),
             queue_depth: 64,
+            ..Default::default()
         },
     )])
     .unwrap();

@@ -50,7 +50,7 @@ fn plan_bitwise_matches_legacy_across_zoo_modes_threads() {
         for mode in ArithMode::ALL {
             let modes = ModeAssignment::uniform(mode);
             for threads in THREAD_SWEEP {
-                let cfg = ExecConfig { threads };
+                let cfg = ExecConfig { threads, ..Default::default() };
                 let want = run_mapmajor_legacy(net, &params, &input, &modes, cfg).unwrap();
                 let mut plan =
                     PlanBuilder::new(net, &params).modes(&modes).config(cfg).build().unwrap();
@@ -87,7 +87,7 @@ fn resident_plan_stays_bitwise_identical_across_requests() {
     let modes = ModeAssignment::uniform(ArithMode::Imprecise)
         .with("conv2", ArithMode::Precise)
         .with("fc5", ArithMode::Relaxed);
-    let cfg = ExecConfig { threads: 2 };
+    let cfg = ExecConfig { threads: 2, ..Default::default() };
     let mut plan =
         PlanBuilder::new(&net, &params).modes(&modes).config(cfg).build().unwrap();
     let mut rng = Rng::new(501);
@@ -113,7 +113,7 @@ fn prop_random_mode_assignments_bitwise_match() {
             }
         }
         let threads = g.choose(&THREAD_SWEEP);
-        let cfg = ExecConfig { threads };
+        let cfg = ExecConfig { threads, ..Default::default() };
         let input = g.normal_vec(net.input.elements());
         let want = run_mapmajor_legacy(&net, &params, &input, &modes, cfg)
             .map_err(|e| e.to_string())?;
@@ -138,7 +138,7 @@ fn squeezenet_compiles_and_matches_legacy() {
     let net = zoo::squeezenet();
     let params = EngineParams::random(&net, 700, 4).unwrap();
     let modes = ModeAssignment::uniform(ArithMode::Imprecise);
-    let cfg = ExecConfig { threads: 8 };
+    let cfg = ExecConfig { threads: 8, ..Default::default() };
     let mut rng = Rng::new(701);
     let input = rng.normal_vec(net.input.elements());
     let want = run_mapmajor_legacy(&net, &params, &input, &modes, cfg).unwrap();
@@ -170,7 +170,7 @@ fn warm_pool_spawns_no_threads_per_inference() {
     let net = zoo::tinynet();
     let params = EngineParams::random(&net, 900, 4).unwrap();
     let modes = ModeAssignment::uniform(ArithMode::Imprecise);
-    let cfg = ExecConfig { threads: 8 };
+    let cfg = ExecConfig { threads: 8, ..Default::default() };
     let mut plan =
         PlanBuilder::new(&net, &params).modes(&modes).config(cfg).build().unwrap();
     let mut rng = Rng::new(901);

@@ -328,6 +328,7 @@ fn prop_batcher_never_loses_requests() {
             max_batch: g.choose(&[1usize, 4, 8]),
             max_delay: std::time::Duration::from_millis(g.int(0, 4) as u64),
             queue_depth: 256,
+            ..Default::default()
         };
         let server = Server::start(vec![("m".into(), backend.factory(), policy)])
             .map_err(|e| e.to_string())?;
