@@ -387,6 +387,100 @@ fn main() {
                  ({packed_vs_plan_b8_t4:.2}x) — expected >= 1.0x on an idle machine"
             );
         }
+
+        // -- Autotuned schedule vs cost-model defaults ----------------
+        //
+        // The autotuner greedily searches per-layer tiling / packing /
+        // parallelism plus pool chunking with real timed walks;
+        // "default" is the same plan surface at the ConvTiling::choose
+        // defaults with threads = 4 (the best known fixed config).
+        // Rows land in BENCH_engine_hotpath.json alongside the sweep.
+        let mut tuned_vs_default_b8 = 0.0f64;
+        let tuned_threads;
+        {
+            let fast = std::env::var("CAPPUCCINO_BENCH_FAST").as_deref() == Ok("1");
+            let tune_cfg = cappuccino::autotune::TuneConfig {
+                batch: 8,
+                max_threads: 4,
+                warmup: 1,
+                reps: 3,
+                budget: if fast { 16 } else { 48 },
+                modes: modes.clone(),
+                seed: 0x7E57,
+            };
+            let report = cappuccino::autotune::tune(&net, &params, &tune_cfg).unwrap();
+            tuned_threads = report.schedule.pool.threads;
+            let mut tuned_table = Table::new(&[
+                "path",
+                "B",
+                "threads",
+                "time/img(ms)",
+                "imgs/s",
+                "vs default",
+            ]);
+            for b in [1usize, 8] {
+                let inputs: Vec<Vec<f32>> =
+                    (0..b).map(|_| rng.normal_vec(net.input.elements())).collect();
+                let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                let mut default_plan = PlanBuilder::new(&net, &params)
+                    .modes(&modes)
+                    .threads(4)
+                    .batch(b)
+                    .build()
+                    .unwrap();
+                let default_m = bench(format!("sched-default-b{b}"), cfg, || {
+                    std::hint::black_box(default_plan.run_batch(&refs).unwrap());
+                });
+                let mut tuned_plan = PlanBuilder::new(&net, &params)
+                    .schedule(report.schedule.clone())
+                    .batch(b)
+                    .build()
+                    .unwrap();
+                let tuned_m = bench(format!("sched-tuned-b{b}"), cfg, || {
+                    std::hint::black_box(tuned_plan.run_batch(&refs).unwrap());
+                });
+                let speedup = default_m.mean_ms / tuned_m.mean_ms;
+                if b == 8 {
+                    tuned_vs_default_b8 = speedup;
+                }
+                let cells: [(&str, f64, usize, f64); 2] = [
+                    ("sched-default", default_m.mean_ms, 4, 1.0),
+                    ("sched-tuned", tuned_m.mean_ms, tuned_threads, speedup),
+                ];
+                for (path, mean_ms, threads, vs_default) in cells {
+                    tuned_table.row(&[
+                        path.into(),
+                        b.to_string(),
+                        threads.to_string(),
+                        ms(mean_ms / b as f64),
+                        format!("{:.0}", b as f64 / (mean_ms / 1e3)),
+                        format!("{vs_default:.2}x"),
+                    ]);
+                    json_rows.push(Json::obj(vec![
+                        ("path", Json::str(path)),
+                        ("batch", Json::num(b as f64)),
+                        ("threads", Json::num(threads as f64)),
+                        ("time_ms_per_img", Json::num(mean_ms / b as f64)),
+                        ("imgs_per_s", Json::num(b as f64 / (mean_ms / 1e3))),
+                        ("speedup_vs_default", Json::num(vs_default)),
+                    ]));
+                }
+            }
+            println!("\n# Autotuned schedule vs cost-model defaults\n");
+            tuned_table.print();
+            println!(
+                "\ntuned vs default at B=8 ({} tune measurements, tuned threads={}): \
+                 {tuned_vs_default_b8:.2}x",
+                report.measurements,
+                tuned_threads
+            );
+            if tuned_vs_default_b8 < 0.95 {
+                eprintln!(
+                    "WARNING: tuned schedule below the default at B=8 \
+                     ({tuned_vs_default_b8:.2}x) — timer noise or a loaded machine"
+                );
+            }
+        }
         if json_mode {
             // Record the pool shape next to the numbers: imgs/s at a
             // given (B, threads) is only comparable across runs with
@@ -398,6 +492,8 @@ fn main() {
                 ("pool_workers", Json::num(pool.size() as f64)),
                 ("pool_clusters", Json::num(pool.clusters().len() as f64)),
                 ("packed_vs_plan_b8_t4", Json::num(packed_vs_plan_b8_t4)),
+                ("tuned_vs_default_b8", Json::num(tuned_vs_default_b8)),
+                ("tuned_pool_threads", Json::num(tuned_threads as f64)),
                 ("rows", Json::Arr(json_rows)),
             ]);
             std::fs::write("BENCH_engine_hotpath.json", doc.to_string())

@@ -1,0 +1,445 @@
+//! On-device schedule autotuning — search the per-layer tuning surface
+//! with real micro-benchmarks.
+//!
+//! Cappuccino's analytic models ([`crate::engine::conv::ConvTiling::choose`],
+//! [`crate::synth::predict_latency_ms`]) pick good defaults, but
+//! heterogeneous mobile silicon rewards *measuring*: the fastest
+//! per-layer configuration differs across SoCs and even across layers
+//! of one network. [`tune`] runs a budgeted greedy search over the
+//! [`Schedule`] IR on the machine it executes on:
+//!
+//! 1. **Seed** — the search starts from the analytic defaults (every
+//!    layer OLP + packed + cost-model tiles) and visits layers in
+//!    descending analytic-FLOP order (the same cost model that feeds
+//!    the SoC predictor), so a small budget is spent where the model
+//!    says the time goes.
+//! 2. **Pool stage** — candidate pool-chunk counts (powers of two up to
+//!    [`TuneConfig::max_threads`]) are timed and the best kept.
+//! 3. **Per-layer stage** — for each conv layer: row-tile variants
+//!    around the cost model's choice, unpacked weights, and the FLP/KLP
+//!    allocation policies; for each dense layer: unpacked weights. Every
+//!    candidate plan is compiled and timed for real — warmup walks, then
+//!    median of [`TuneConfig::reps`] timed [`run_batch`] walks — and a
+//!    candidate must beat the incumbent by >1% to be adopted (hysteresis
+//!    against timer noise).
+//!
+//! Arithmetic modes are **not** searched: they change numerics, and
+//! belong to the accuracy-gated analysis in [`crate::inexact`]. Pass the
+//! chosen assignment in [`TuneConfig::modes`]; the tuner preserves it.
+//!
+//! The result is a [`TuneReport`] whose [`Schedule`] serializes to
+//! `schedule.json` (`cappuccino tune --out schedule.json`) and feeds
+//! straight into `cappuccino serve --schedule` or
+//! [`crate::engine::PlanBuilder::schedule`] — the measured software
+//! configuration as a durable artifact.
+//!
+//! [`run_batch`]: crate::engine::ExecutionPlan::run_batch
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::engine::conv::ConvTiling;
+use crate::engine::network::ModeAssignment;
+use crate::engine::parallel::Parallelism;
+use crate::engine::schedule::{LayerSchedule, PoolSettings, Schedule};
+use crate::engine::{ArithMode, EngineParams, PlanBuilder};
+use crate::model::{shapes, LayerOp, Network};
+use crate::synth::{predict_latency_ms, SynthesisPlan};
+use crate::util::ceil_div;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Autotuning configuration.
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    /// Batch capacity the schedule is tuned for (and the batch each
+    /// timed walk executes).
+    pub batch: usize,
+    /// Largest pool-chunk count tried (powers of two from 1).
+    pub max_threads: usize,
+    /// Untimed warmup walks per candidate.
+    pub warmup: usize,
+    /// Timed walks per candidate; the median is the candidate's score.
+    pub reps: usize,
+    /// Hard cap on timed candidate measurements (the seed measurement
+    /// included) — the CI smoke budget is single digits, a real tuning
+    /// run tens to hundreds.
+    pub budget: usize,
+    /// Per-layer arithmetic modes to preserve (from [`crate::inexact`]
+    /// or the paper's all-imprecise outcome). Not searched.
+    pub modes: ModeAssignment,
+    /// Seed for the synthetic timing inputs.
+    pub seed: u64,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            batch: 8,
+            max_threads: 4,
+            warmup: 2,
+            reps: 5,
+            budget: 64,
+            modes: ModeAssignment::uniform(ArithMode::Imprecise),
+            seed: 0xCAFE,
+        }
+    }
+}
+
+/// One timed candidate.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    /// Layer name, or `"(pool)"` for the pool stage.
+    pub layer: String,
+    /// Human-readable candidate description (e.g. `tile tm=4 th=8`).
+    pub candidate: String,
+    pub median_ms: f64,
+    /// Did this candidate become the incumbent?
+    pub accepted: bool,
+}
+
+/// The autotuner's output: the tuned schedule plus the evidence.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub schedule: Schedule,
+    /// Median walk time of the analytic-default schedule (the seed).
+    pub default_ms: f64,
+    /// Median walk time of the tuned schedule.
+    pub tuned_ms: f64,
+    /// Timed measurements actually spent (<= budget).
+    pub measurements: usize,
+    pub trials: Vec<Trial>,
+    /// SoC-model prediction for the tuned schedule on the first catalog
+    /// device (via the [`SynthesisPlan`] bridge), for comparison against
+    /// the measured numbers.
+    pub predicted_ms: Option<f64>,
+}
+
+impl TuneReport {
+    /// Measured end-to-end speedup of tuned over the analytic defaults.
+    pub fn speedup(&self) -> f64 {
+        self.default_ms / self.tuned_ms
+    }
+}
+
+/// A candidate must beat the incumbent by >1% to be adopted.
+const ACCEPT_RATIO: f64 = 0.99;
+
+/// Per-conv-layer geometry the candidate generator needs.
+struct LayerGeom {
+    name: String,
+    /// `None` for dense layers.
+    conv: Option<ConvGeom>,
+    /// Analytic FLOPs (search-order key).
+    flops: f64,
+}
+
+struct ConvGeom {
+    c: usize,
+    w: usize,
+    m: usize,
+    ho: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+}
+
+fn layer_geometry(net: &Network) -> Result<Vec<LayerGeom>> {
+    let info = shapes::infer(net)?;
+    let mut conv_ops: HashMap<String, (usize, usize, usize)> = HashMap::new();
+    net.visit(&mut |l| {
+        if let LayerOp::Conv { k, s, p, .. } = l.op {
+            conv_ops.insert(l.name.clone(), (k, s, p));
+        }
+    });
+    let flops: HashMap<&str, f64> =
+        info.costs.iter().map(|c| (c.name.as_str(), c.flops)).collect();
+    let mut out = Vec::new();
+    for pl in &info.param_layers {
+        let conv = match conv_ops.get(&pl.name) {
+            Some(&(k, s, p)) => {
+                let (c, _, w) = pl.input.as_maps()?;
+                let (m, ho, _) = pl.output.as_maps()?;
+                Some(ConvGeom { c, w, m, ho, k, s, p })
+            }
+            None => None,
+        };
+        out.push(LayerGeom {
+            name: pl.name.clone(),
+            conv,
+            flops: flops.get(pl.name.as_str()).copied().unwrap_or(0.0),
+        });
+    }
+    // Most expensive first: a small budget goes where the cost model
+    // says the time is.
+    out.sort_by(|a, b| b.flops.total_cmp(&a.flops));
+    Ok(out)
+}
+
+/// Candidate variants for one layer, derived from its current schedule
+/// (mode and placement are preserved).
+fn layer_candidates(
+    geom: &LayerGeom,
+    u: usize,
+    cur: &LayerSchedule,
+) -> Vec<(String, LayerSchedule)> {
+    let mut out = Vec::new();
+    if let Some(g) = &geom.conv {
+        let (cb, mb) = (ceil_div(g.c, u), ceil_div(g.m, u));
+        let wp = g.w + 2 * g.p;
+        let base = ConvTiling::choose(cb, wp, u, g.k, g.s, mb, g.ho);
+        let raw = [
+            ConvTiling { tm: base.tm * 2, th: base.th },
+            ConvTiling { tm: (base.tm / 2).max(1), th: base.th },
+            ConvTiling { tm: base.tm, th: base.th * 2 },
+            ConvTiling { tm: base.tm, th: (base.th / 2).max(1) },
+            ConvTiling { tm: 1, th: 1 },
+        ];
+        let mut seen = vec![base];
+        for t in raw {
+            let t = t.clamped(mb, g.ho);
+            if !seen.contains(&t) {
+                seen.push(t);
+                out.push((
+                    format!("tile tm={} th={}", t.tm, t.th),
+                    LayerSchedule { tiling: Some(t), ..*cur },
+                ));
+            }
+        }
+        out.push(("packing=off".into(), LayerSchedule { packing: false, tiling: None, ..*cur }));
+        out.push((
+            "parallelism=flp".into(),
+            LayerSchedule { parallelism: Parallelism::Flp, ..*cur },
+        ));
+        out.push((
+            "parallelism=klp".into(),
+            LayerSchedule { parallelism: Parallelism::Klp, ..*cur },
+        ));
+    } else {
+        out.push(("packing=off".into(), LayerSchedule { packing: false, ..*cur }));
+    }
+    out
+}
+
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(f64::total_cmp);
+    v[v.len() / 2]
+}
+
+/// Compile `schedule` and time one full `run_batch` walk: `warmup`
+/// untimed walks, then the median of `reps` timed ones.
+fn measure(
+    net: &Network,
+    params: &EngineParams,
+    schedule: &Schedule,
+    batch: usize,
+    inputs: &[&[f32]],
+    warmup: usize,
+    reps: usize,
+) -> Result<f64> {
+    let mut plan = PlanBuilder::new(net, params)
+        .schedule(schedule.clone())
+        .batch(batch)
+        .build()?;
+    for _ in 0..warmup {
+        plan.run_batch(inputs)?;
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        plan.run_batch(inputs)?;
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(median(samples))
+}
+
+/// Tune a per-layer [`Schedule`] for `net` on **this** machine. See the
+/// module docs for the search; every timing is a real plan compile +
+/// batch walk, so the returned schedule is the measured-fastest
+/// configuration the budget could find, never a model's guess.
+pub fn tune(net: &Network, params: &EngineParams, cfg: &TuneConfig) -> Result<TuneReport> {
+    if cfg.batch == 0 {
+        return Err(Error::Config("tune batch 0: need at least one image per walk".into()));
+    }
+    if cfg.reps == 0 {
+        return Err(Error::Config("tune reps 0: need at least one timed walk".into()));
+    }
+    if cfg.budget == 0 {
+        return Err(Error::Config(
+            "tune budget 0: need at least the seed measurement".into(),
+        ));
+    }
+    let mut sched = Schedule::from_uniform(
+        net,
+        params.u,
+        &cfg.modes,
+        Parallelism::Olp,
+        true,
+        None,
+        PoolSettings { threads: 1, affinity: false, cores: None },
+    )?;
+
+    let mut rng = Rng::new(cfg.seed);
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.batch).map(|_| rng.normal_vec(net.input.elements())).collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let time = |s: &Schedule| measure(net, params, s, cfg.batch, &refs, cfg.warmup, cfg.reps);
+
+    let mut used = 0usize;
+    let mut trials = Vec::new();
+
+    // Seed: the analytic defaults at one pool chunk.
+    let default_ms = time(&sched)?;
+    used += 1;
+    let mut best_ms = default_ms;
+
+    // Pool stage: chunk counts, powers of two.
+    let mut threads = 2usize;
+    while threads <= cfg.max_threads && used < cfg.budget {
+        let mut cand = sched.clone();
+        cand.pool.threads = threads;
+        let ms = time(&cand)?;
+        used += 1;
+        let accepted = ms < best_ms * ACCEPT_RATIO;
+        trials.push(Trial {
+            layer: "(pool)".into(),
+            candidate: format!("threads={threads}"),
+            median_ms: ms,
+            accepted,
+        });
+        if accepted {
+            sched = cand;
+            best_ms = ms;
+        }
+        threads *= 2;
+    }
+
+    // Per-layer stage: each layer adopts its best measured variant.
+    let mut exhausted = false;
+    for geom in &layer_geometry(net)? {
+        let cur = sched.layers[geom.name.as_str()];
+        let mut layer_best_ms = best_ms;
+        let mut layer_best: Option<LayerSchedule> = None;
+        for (label, cand_ls) in layer_candidates(geom, params.u, &cur) {
+            if used >= cfg.budget {
+                exhausted = true;
+                break;
+            }
+            let mut cand = sched.clone();
+            cand.layers.insert(geom.name.clone(), cand_ls);
+            let ms = time(&cand)?;
+            used += 1;
+            let accepted = ms < layer_best_ms * ACCEPT_RATIO;
+            trials.push(Trial {
+                layer: geom.name.clone(),
+                candidate: label,
+                median_ms: ms,
+                accepted,
+            });
+            if accepted {
+                layer_best_ms = ms;
+                layer_best = Some(cand_ls);
+            }
+        }
+        // Adopt the layer's winner even when the budget ran out
+        // mid-layer: a measured, accepted candidate must never be
+        // missing from the emitted schedule (trials and schedule would
+        // disagree otherwise).
+        if let Some(ls) = layer_best {
+            sched.layers.insert(geom.name.clone(), ls);
+            best_ms = layer_best_ms;
+        }
+        if exhausted {
+            break;
+        }
+    }
+
+    // SoC-model cross-check via the synthesis bridge.
+    let predicted_ms = crate::soc::catalog().into_iter().next().and_then(|device| {
+        SynthesisPlan::from_schedule(&sched, net)
+            .ok()
+            .map(|plan| predict_latency_ms(&plan, net, &device))
+    });
+
+    Ok(TuneReport {
+        schedule: sched,
+        default_ms,
+        tuned_ms: best_ms,
+        measurements: used,
+        trials,
+        predicted_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::util::json::Json;
+
+    fn quick_cfg() -> TuneConfig {
+        TuneConfig {
+            batch: 2,
+            max_threads: 2,
+            warmup: 0,
+            reps: 1,
+            budget: 6,
+            modes: ModeAssignment::uniform(ArithMode::Imprecise),
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn tune_respects_budget_and_emits_a_valid_schedule() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 1, 4).unwrap();
+        let report = tune(&net, &params, &quick_cfg()).unwrap();
+        assert!(report.measurements <= 6);
+        assert!(!report.trials.is_empty());
+        assert!(report.default_ms > 0.0 && report.tuned_ms > 0.0);
+        // The incumbent only ever improves, so tuned <= default.
+        assert!(report.tuned_ms <= report.default_ms);
+        report.schedule.validate_for(&net, 4).unwrap();
+        // Modes are preserved, never searched.
+        for ls in report.schedule.layers.values() {
+            assert_eq!(ls.mode, ArithMode::Imprecise);
+        }
+        assert!(report.predicted_ms.unwrap_or(0.0) > 0.0);
+    }
+
+    #[test]
+    fn tuned_schedule_roundtrips_to_an_identical_plan() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 2, 4).unwrap();
+        let report = tune(&net, &params, &quick_cfg()).unwrap();
+        let text = report.schedule.to_json().to_string();
+        let loaded = Schedule::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(loaded, report.schedule);
+        let mut a = PlanBuilder::new(&net, &params)
+            .schedule(report.schedule.clone())
+            .batch(2)
+            .build()
+            .unwrap();
+        let mut b = PlanBuilder::new(&net, &params).schedule(loaded).batch(2).build().unwrap();
+        let mut rng = Rng::new(3);
+        let x1 = rng.normal_vec(net.input.elements());
+        let x2 = rng.normal_vec(net.input.elements());
+        assert_eq!(
+            a.run_batch(&[&x1[..], &x2[..]]).unwrap(),
+            b.run_batch(&[&x1[..], &x2[..]]).unwrap()
+        );
+    }
+
+    #[test]
+    fn degenerate_tune_configs_are_config_errors() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 4, 4).unwrap();
+        for cfg in [
+            TuneConfig { batch: 0, ..quick_cfg() },
+            TuneConfig { reps: 0, ..quick_cfg() },
+            TuneConfig { budget: 0, ..quick_cfg() },
+        ] {
+            assert!(matches!(tune(&net, &params, &cfg), Err(Error::Config(_))));
+        }
+    }
+}

@@ -23,6 +23,14 @@
 //! [`plan::PlanBuilder::affinity`] turns on cost-weighted placement of
 //! packed conv macro items across clusters — placement moves work
 //! between cores, never changes what is computed.
+//!
+//! The whole tuning surface — per-layer parallelism, packing, tiling,
+//! arithmetic mode, placement, plus the pool settings — is the
+//! [`schedule::Schedule`] IR: every `PlanBuilder` fluent setter lowers
+//! into one, [`plan::PlanBuilder::schedule`] accepts a heterogeneous
+//! one directly, and schedules serialize to the `schedule.json`
+//! artifact that [`crate::autotune`] emits and `serve --schedule`
+//! consumes.
 
 pub mod conv;
 pub mod mode;
@@ -30,6 +38,7 @@ pub mod network;
 pub mod ops;
 pub mod parallel;
 pub mod plan;
+pub mod schedule;
 pub mod tensor;
 pub mod topology;
 
@@ -47,5 +56,6 @@ pub use parallel::{
     Parallelism, ThreadPool,
 };
 pub use plan::{ExecutionPlan, PlanBuilder};
+pub use schedule::{LayerSchedule, PoolSettings, Schedule};
 pub use tensor::{MapTensor, Tensor};
 pub use topology::{pin_current_thread, CoreCluster, CoreSet, Topology};

@@ -88,6 +88,39 @@
 //! [`ExecutionPlan::with_capacity`] derives a sibling plan with a
 //! different `B` that **shares the baked weights** (`Arc`) and only
 //! re-sizes the arena — capacities never duplicate parameters.
+//!
+//! ## The schedule surface (setter → `Schedule` migration)
+//!
+//! Every tuning knob above is now a field of the
+//! [`crate::engine::schedule::Schedule`] IR, and plan compilation has
+//! exactly **one** entry: a `Schedule`. The fluent setters are sugar
+//! that [`PlanBuilder::build`] lowers into a *uniform* schedule
+//! ([`crate::engine::schedule::Schedule::from_uniform`]):
+//!
+//! | fluent setter | schedule field |
+//! |---|---|
+//! | `.modes(ma)` | `layers[name].mode` (per layer) |
+//! | `.policy(p)` | `layers[*].parallelism` (uniform) |
+//! | `.packing(b)` | `layers[*].packing` (uniform) |
+//! | `.tiling(t)` | `layers[*].tiling` (uniform override) |
+//! | `.threads(n)` / `.config(cfg)` | `pool.threads` |
+//! | `.affinity(b)` | `pool.affinity` + `layers[*].placement` |
+//!
+//! [`PlanBuilder::schedule`] accepts a **heterogeneous** schedule
+//! directly: parallelism, packing, tiling, mode, and placement are
+//! honored *per layer*. A boundary between a map-major (OLP) layer and
+//! a row-major (FLP/KLP) layer lowers to an exact layout-reorder step —
+//! a pure permutation, so each layer stays bitwise faithful to its
+//! uniform-plan kernel. Schedules serialize to JSON
+//! (`cappuccino tune` → `schedule.json` → `serve --schedule`), and a
+//! plan rebuilt from a reloaded schedule is bitwise identical to the
+//! plan it was exported from ([`ExecutionPlan::schedule`] exposes the
+//! lowered schedule for exactly that round trip).
+//!
+//! Degenerate configurations — `batch(0)`, `threads(0)`, mode or
+//! schedule entries naming layers the network does not have, or a
+//! schedule whose layer set / `u` does not match — are rejected at
+//! `build` with [`Error::Config`] instead of panicking in compile.
 
 use std::ops::Range;
 use std::sync::Arc;
@@ -97,6 +130,7 @@ use crate::engine::mode::{self, ArithMode};
 use crate::engine::network::{EngineParams, ExecConfig, ModeAssignment};
 use crate::engine::ops;
 use crate::engine::parallel::{self, Parallelism};
+use crate::engine::schedule::{LayerSchedule, PoolSettings, Schedule};
 use crate::engine::tensor;
 use crate::layout;
 use crate::metrics::AllocCounter;
@@ -104,15 +138,7 @@ use crate::model::{shapes, Layer, LayerOp, Network};
 use crate::util::ceil_div;
 use crate::util::error::{Error, Result};
 
-/// Which executor family a plan lowers to.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Family {
-    /// Map-major activations, OLP-threaded vectorised convolutions.
-    MapMajor,
-    /// Row-major activations with the named conv implementation.
-    Nchw(NchwConv),
-}
-
+/// Row-major conv implementation a non-OLP layer lowers to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum NchwConv {
     Scalar,
@@ -209,6 +235,10 @@ enum Step {
         packed: bool,
     },
     Softmax { src: usize, dst: usize },
+    /// Exact layout change between map-major widths (`u = 1` is
+    /// row-major NCHW) at a heterogeneous-parallelism boundary. A pure
+    /// permutation: bitwise invisible to every surrounding kernel.
+    Reorder { src: usize, dst: usize },
 }
 
 /// The preallocated buffer arena: activation registers and pad/cast
@@ -286,10 +316,12 @@ pub struct PlanBuilder<'a> {
     params: &'a EngineParams,
     modes: ModeAssignment,
     cfg: ExecConfig,
-    family: Family,
+    policy: Parallelism,
+    baseline: bool,
     batch: usize,
     packing: bool,
     tiling: Option<ConvTiling>,
+    schedule: Option<Schedule>,
 }
 
 impl<'a> PlanBuilder<'a> {
@@ -301,10 +333,12 @@ impl<'a> PlanBuilder<'a> {
             params,
             modes: ModeAssignment::uniform(ArithMode::Precise),
             cfg: ExecConfig::default(),
-            family: Family::MapMajor,
+            policy: Parallelism::Olp,
+            baseline: false,
             batch: 1,
             packing: true,
             tiling: None,
+            schedule: None,
         }
     }
 
@@ -345,8 +379,25 @@ impl<'a> PlanBuilder<'a> {
 
     /// Batch capacity `B`: arena registers are sized `B x` and
     /// [`ExecutionPlan::run_batch`] accepts up to `B` images per walk.
+    /// `batch(0)` is rejected at [`PlanBuilder::build`] with
+    /// [`Error::Config`].
     pub fn batch(mut self, capacity: usize) -> Self {
-        self.batch = capacity.max(1);
+        self.batch = capacity;
+        self
+    }
+
+    /// Compile from an explicit (possibly heterogeneous) [`Schedule`]
+    /// instead of the fluent setters: parallelism, packing, tiling,
+    /// mode, and placement are honored **per layer**, and
+    /// `pool.threads` / `pool.affinity` replace `.config()`. When a
+    /// schedule is set, `.modes/.policy/.packing/.tiling/.config/`
+    /// `.threads/.affinity` are ignored — the schedule *is* the whole
+    /// tuning surface; only [`PlanBuilder::batch`] and
+    /// [`PlanBuilder::baseline`] still apply. The schedule is validated
+    /// against the network and parameter width at build
+    /// ([`Schedule::validate_for`]).
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = Some(schedule);
         self
     }
 
@@ -370,15 +421,13 @@ impl<'a> PlanBuilder<'a> {
         self
     }
 
-    /// Thread-workload-allocation family: OLP lowers map-major (the
-    /// default), FLP/KLP lower row-major with per-thread reduction
+    /// Uniform thread-workload-allocation policy: OLP lowers map-major
+    /// (the default), FLP/KLP lower row-major with per-thread reduction
     /// buffers in the arena — the section IV.A ablation executors.
+    /// Per-layer mixtures go through [`PlanBuilder::schedule`].
     pub fn policy(mut self, policy: Parallelism) -> Self {
-        self.family = match policy {
-            Parallelism::Olp => Family::MapMajor,
-            Parallelism::Flp => Family::Nchw(NchwConv::Flp),
-            Parallelism::Klp => Family::Nchw(NchwConv::Klp),
-        };
+        self.policy = policy;
+        self.baseline = false;
         self
     }
 
@@ -390,32 +439,58 @@ impl<'a> PlanBuilder<'a> {
     /// family selection, a *later* [`PlanBuilder::policy`] call
     /// supersedes it — last family choice wins.)
     pub fn baseline(mut self) -> Self {
-        self.family = Family::Nchw(NchwConv::Scalar);
+        self.baseline = true;
         self
     }
 
-    /// Compile: shape inference, lowering, weight baking, arena sizing.
+    /// Compile: schedule normalization (the fluent setters lower into a
+    /// uniform [`Schedule`] — the one path into compilation), shape
+    /// inference, lowering, weight baking, arena sizing. Degenerate
+    /// configurations surface here as [`Error::Config`].
     pub fn build(self) -> Result<ExecutionPlan> {
-        // The scalar-baseline family pins precise arithmetic and one
-        // thread regardless of the order builder methods were called in.
-        let (modes, cfg) = if self.family == Family::Nchw(NchwConv::Scalar) {
+        if self.batch == 0 {
+            return Err(Error::Config(
+                "batch capacity 0: a plan must hold at least one image per walk".into(),
+            ));
+        }
+        let (schedule, baseline) = if self.baseline {
+            // The scalar-baseline family pins precise arithmetic and one
+            // thread regardless of the order builder methods were
+            // called in.
             (
-                ModeAssignment::uniform(ArithMode::Precise),
-                ExecConfig { threads: 1, affinity: false },
+                Schedule::from_uniform(
+                    self.net,
+                    self.params.u,
+                    &ModeAssignment::uniform(ArithMode::Precise),
+                    Parallelism::Olp,
+                    self.packing,
+                    None,
+                    PoolSettings::default(),
+                )?,
+                true,
             )
+        } else if let Some(s) = self.schedule {
+            s.validate_for(self.net, self.params.u)?;
+            (s, false)
         } else {
-            (self.modes, self.cfg)
+            (
+                Schedule::from_uniform(
+                    self.net,
+                    self.params.u,
+                    &self.modes,
+                    self.policy,
+                    self.packing,
+                    self.tiling,
+                    PoolSettings {
+                        threads: self.cfg.threads,
+                        affinity: self.cfg.affinity,
+                        cores: None,
+                    },
+                )?,
+                false,
+            )
         };
-        ExecutionPlan::compile_with(
-            self.net,
-            self.params,
-            &modes,
-            cfg,
-            self.family,
-            self.batch,
-            self.packing,
-            self.tiling,
-        )
+        ExecutionPlan::compile_with(self.net, self.params, schedule, baseline, self.batch)
     }
 }
 
@@ -428,6 +503,9 @@ pub struct ExecutionPlan {
     u: usize,
     threads: usize,
     batch: usize,
+    /// The (normalized) schedule this plan was compiled from — the
+    /// exportable tuning surface ([`ExecutionPlan::schedule`]).
+    sched: Schedule,
     input_shape: (usize, usize, usize),
     slots: Vec<SlotShape>,
     steps: Vec<Step>,
@@ -460,35 +538,37 @@ impl std::fmt::Debug for ExecutionPlan {
 }
 
 impl ExecutionPlan {
-    #[allow(clippy::too_many_arguments)]
     fn compile_with(
         net: &Network,
         params: &EngineParams,
-        modes: &ModeAssignment,
-        cfg: ExecConfig,
-        family: Family,
+        schedule: Schedule,
+        baseline: bool,
         batch: usize,
-        packing: bool,
-        tiling: Option<ConvTiling>,
     ) -> Result<ExecutionPlan> {
+        debug_assert!(batch >= 1 && schedule.pool.threads >= 1, "builder validates");
         // Shape inference once, up front: every undersized window or
         // malformed topology becomes Error::Shape here instead of an
         // arithmetic underflow on the request path.
         shapes::infer(net)?;
         let (c, h, w) = net.input.as_maps()?;
-        let u = match family {
-            Family::MapMajor => params.u,
-            Family::Nchw(_) => 1,
-        };
-        let threads = cfg.threads.max(1);
-        let batch = batch.max(1);
+        // A plan whose every layer lowers row-major (FLP/KLP uniform, or
+        // the scalar baseline) runs u = 1 end to end; any OLP layer
+        // makes the plan map-major at the parameter width, with exact
+        // reorder steps at row-major boundaries. When the *first* conv
+        // is scheduled row-major the input also starts row-major — never
+        // pay a map-major input transform just to reorder it straight
+        // back before the first layer.
+        let nchw_start =
+            baseline || schedule.all_rowmajor() || first_conv_is_rowmajor(net, &schedule);
+        let u = if nchw_start { 1 } else { params.u };
+        let threads = schedule.pool.threads;
         let mut lw = Lowerer {
             params,
-            modes,
-            family,
-            packing,
-            tiling,
-            affinity: cfg.affinity,
+            schedule: &schedule,
+            baseline,
+            mm_u: params.u,
+            nchw_ctx: nchw_start,
+            flat_mm: false,
             slots: Vec::new(),
             steps: Vec::new(),
             scratch_len: 0,
@@ -499,28 +579,40 @@ impl ExecutionPlan {
         let in_slot = lw.slot(SlotShape::Maps { c, h, w, u });
         lw.steps.push(Step::Input { dst: in_slot });
         let out_slot = lw.lower(&net.layers, in_slot)?;
+        // End the lowerer's borrow of the schedule before moving it
+        // into the plan.
+        let Lowerer {
+            slots,
+            steps,
+            scratch_len,
+            reduce_len,
+            thread_scratch_row,
+            baked_param_bytes,
+            ..
+        } = lw;
 
         let arena = Arena::sized(
-            &lw.slots,
-            lw.scratch_len,
-            lw.reduce_len,
+            &slots,
+            scratch_len,
+            reduce_len,
             threads,
             batch,
-            lw.thread_scratch_row,
+            thread_scratch_row,
         );
         Ok(ExecutionPlan {
             u,
             threads,
             batch,
+            sched: schedule,
             input_shape: (c, h, w),
-            slots: lw.slots,
-            steps: lw.steps,
+            slots,
+            steps,
             out_slot,
             arena,
-            scratch_row: lw.scratch_len,
-            reduce_len: lw.reduce_len,
-            thread_scratch_row: lw.thread_scratch_row,
-            baked_param_bytes: lw.baked_param_bytes,
+            scratch_row: scratch_len,
+            reduce_len,
+            thread_scratch_row,
+            baked_param_bytes,
             runs: 0,
             alloc: AllocCounter::new(),
         })
@@ -536,6 +628,7 @@ impl ExecutionPlan {
             u: self.u,
             threads: self.threads,
             batch,
+            sched: self.sched.clone(),
             input_shape: self.input_shape,
             slots: self.slots.clone(),
             steps: self.steps.clone(),
@@ -659,6 +752,16 @@ impl ExecutionPlan {
         self.u
     }
 
+    /// The normalized [`Schedule`] this plan was compiled from — fluent
+    /// setters and explicit schedules converge here, so exporting it
+    /// (`to_json`), reloading, and rebuilding via
+    /// [`PlanBuilder::schedule`] reproduces this plan bitwise. (Baseline
+    /// plans record their pinned uniform precise schedule; the scalar
+    /// family itself is not a schedule knob.)
+    pub fn schedule(&self) -> &Schedule {
+        &self.sched
+    }
+
     /// Pool-chunk parallelism the plan executes with.
     pub fn threads(&self) -> usize {
         self.threads
@@ -723,15 +826,42 @@ impl ExecutionPlan {
 // Lowering
 // ---------------------------------------------------------------------------
 
+/// Is the first conv layer (in lowering order) scheduled row-major
+/// (FLP/KLP)? Decides the input register's starting layout for mixed
+/// plans; `false` for conv-free nets.
+fn first_conv_is_rowmajor(net: &Network, schedule: &Schedule) -> bool {
+    let mut first: Option<bool> = None;
+    net.visit(&mut |l| {
+        if first.is_none() {
+            if let LayerOp::Conv { .. } = l.op {
+                let rm = schedule
+                    .layers
+                    .get(&l.name)
+                    .is_some_and(|ls| ls.parallelism != Parallelism::Olp);
+                first = Some(rm);
+            }
+        }
+    });
+    first.unwrap_or(false)
+}
+
 struct Lowerer<'a> {
     params: &'a EngineParams,
-    modes: &'a ModeAssignment,
-    family: Family,
-    packing: bool,
-    tiling: Option<ConvTiling>,
-    /// Cost-weighted cluster placement: lowered conv steps carry their
-    /// working-set cost so the executor can weight clusters per layer.
-    affinity: bool,
+    /// Per-layer tuning surface (validated against the net upstream).
+    schedule: &'a Schedule,
+    /// Scalar-baseline plans force every conv to the scalar row-major
+    /// kernel regardless of the schedule's parallelism.
+    baseline: bool,
+    /// Map-major vector width OLP layers run at (`params.u`).
+    mm_u: usize,
+    /// Is the current activation in row-major (FLP/KLP/baseline)
+    /// context? Decides which kernels non-parameterised layers lower to
+    /// and whether a flat activation carries map-major flatten order.
+    nchw_ctx: bool,
+    /// Did the most recent flatten/gap consume a map-major activation?
+    /// (Picks the permuted `w_mm` vs conventional `w_conv` dense
+    /// weights.)
+    flat_mm: bool,
     slots: Vec<SlotShape>,
     steps: Vec<Step>,
     scratch_len: usize,
@@ -744,6 +874,37 @@ impl Lowerer<'_> {
     fn slot(&mut self, shape: SlotShape) -> usize {
         self.slots.push(shape);
         self.slots.len() - 1
+    }
+
+    /// The schedule entry for a parameterised layer (guaranteed present
+    /// by [`Schedule::validate_for`] / [`Schedule::from_uniform`]).
+    fn layer_schedule(&self, name: &str) -> Result<LayerSchedule> {
+        match self.schedule.layers.get(name) {
+            Some(ls) => Ok(*ls),
+            None => Err(Error::Config(format!("schedule has no entry for layer {name:?}"))),
+        }
+    }
+
+    /// Ensure the activation in `cur` has map-major width `target`
+    /// (`1` = row-major NCHW), inserting exact layout-reorder steps at
+    /// heterogeneous-parallelism boundaries. Scheduled targets are
+    /// always `1` or the plan's map-major width; a hypothetical
+    /// wide-to-wide change goes through a row-major intermediate so the
+    /// executor only ever performs single-sided permutations.
+    fn ensure_u(&mut self, cur: usize, layer: &Layer, target: usize) -> Result<usize> {
+        let (c, h, w, u) = self.require_maps(cur, layer)?;
+        if u == target {
+            return Ok(cur);
+        }
+        let mut src = cur;
+        if u != 1 && target != 1 {
+            let mid = self.slot(SlotShape::Maps { c, h, w, u: 1 });
+            self.steps.push(Step::Reorder { src, dst: mid });
+            src = mid;
+        }
+        let dst = self.slot(SlotShape::Maps { c, h, w, u: target });
+        self.steps.push(Step::Reorder { src, dst });
+        Ok(dst)
     }
 
     fn bake(&mut self, w: &[f32], mode: ArithMode) -> Arc<Vec<f32>> {
@@ -798,107 +959,120 @@ impl Lowerer<'_> {
         let named = |e: Error| Error::Shape(format!("layer {}: {e}", layer.name));
         match &layer.op {
             LayerOp::Conv { m, k, s, p, relu } => {
+                let ls = self.layer_schedule(&layer.name)?;
+                // Per-layer family: OLP lowers map-major at the plan's
+                // vector width; FLP/KLP (and the baseline's scalar)
+                // lower row-major. An exact reorder step bridges
+                // heterogeneous boundaries.
+                let rowmajor = self.baseline || ls.parallelism != Parallelism::Olp;
+                let cur = self.ensure_u(cur, layer, if rowmajor { 1 } else { self.mm_u })?;
                 let (c, h, w, u) = self.require_maps(cur, layer)?;
                 let ho = shapes::conv_out(h, *k, *s, *p).map_err(named)?;
                 let wo = shapes::conv_out(w, *k, *s, *p).map_err(named)?;
                 let lp = self.params.layer_params(&layer.name)?;
-                let mode = self.modes.mode_of(&layer.name);
+                let mode = ls.mode;
                 let dst = self.slot(SlotShape::Maps { c: *m, h: ho, w: wo, u });
-                match self.family {
-                    Family::MapMajor => {
-                        let (mb, cb) = (ceil_div(*m, u), ceil_div(c, u));
-                        if lp.w_mm.len() != mb * u * cb * k * k * u
-                            || lp.b_mm.len() != mb * u
-                        {
-                            return Err(Error::Shape(format!(
-                                "layer {}: map-major params {}x{} vs expected {}x{}",
-                                layer.name,
-                                lp.w_mm.len(),
-                                lp.b_mm.len(),
-                                mb * u * cb * k * k * u,
-                                mb * u
-                            )));
-                        }
-                        if *p > 0 || mode != ArithMode::Precise {
-                            let padded = cb * (h + 2 * p) * (w + 2 * p) * u;
-                            self.scratch_len = self.scratch_len.max(padded);
-                        }
-                        // Generic-u kernels keep their tap block /
-                        // accumulator tile in per-thread arena scratch
-                        // (u = 4 runs fully in registers).
-                        if u != 4 {
-                            self.thread_scratch_row =
-                                self.thread_scratch_row.max((u * u).max(conv::OW_TILE * u));
-                        }
-                        // Tile sizes: builder override or the L1/L2 cost
-                        // model, clamped to this layer's Mb x Ho grid.
-                        let tile = self
-                            .tiling
-                            .unwrap_or_else(|| {
-                                ConvTiling::choose(cb, w + 2 * p, u, *k, *s, mb, ho)
-                            })
-                            .clamped(mb, ho);
-                        // Cost-weighted placement consumes the tile's
-                        // working-set bytes (packed path only — the
-                        // unpacked row walk is the placement-free
-                        // ablation reference).
-                        let place = if self.affinity && self.packing {
-                            Some(tile.working_set_bytes(cb, w + 2 * p, u, *k, *s))
-                        } else {
-                            None
-                        };
-                        let wgt = if self.packing {
-                            self.bake_conv_panels(&lp.w_mm, mode, mb, cb, *k, u)
-                        } else {
-                            self.bake(&lp.w_mm, mode)
-                        };
-                        let b = self.bias(&lp.b_mm);
-                        self.steps.push(Step::ConvMm {
-                            src: cur,
-                            dst,
-                            w: wgt,
-                            b,
-                            k: *k,
-                            s: *s,
-                            p: *p,
-                            relu: *relu,
-                            mode,
-                            packed: self.packing,
-                            tile,
-                            place,
-                        });
+                if !rowmajor {
+                    let (mb, cb) = (ceil_div(*m, u), ceil_div(c, u));
+                    if lp.w_mm.len() != mb * u * cb * k * k * u || lp.b_mm.len() != mb * u {
+                        return Err(Error::Shape(format!(
+                            "layer {}: map-major params {}x{} vs expected {}x{}",
+                            layer.name,
+                            lp.w_mm.len(),
+                            lp.b_mm.len(),
+                            mb * u * cb * k * k * u,
+                            mb * u
+                        )));
                     }
-                    Family::Nchw(policy) => {
-                        if lp.w_conv.len() != m * c * k * k || lp.b_conv.len() != *m {
-                            return Err(Error::Shape(format!(
-                                "layer {}: params {}x{} vs expected {}x{}",
-                                layer.name,
-                                lp.w_conv.len(),
-                                lp.b_conv.len(),
-                                m * c * k * k,
-                                m
-                            )));
-                        }
-                        if mode != ArithMode::Precise {
-                            self.scratch_len = self.scratch_len.max(c * h * w);
-                        }
-                        if policy != NchwConv::Scalar {
-                            self.reduce_len = self.reduce_len.max(m * ho * wo);
-                        }
-                        let (wgt, b) = (self.bake(&lp.w_conv, mode), self.bias(&lp.b_conv));
-                        self.steps.push(Step::ConvNchw {
-                            src: cur,
-                            dst,
-                            w: wgt,
-                            b,
-                            k: *k,
-                            s: *s,
-                            p: *p,
-                            relu: *relu,
-                            mode,
-                            policy,
-                        });
+                    if *p > 0 || mode != ArithMode::Precise {
+                        let padded = cb * (h + 2 * p) * (w + 2 * p) * u;
+                        self.scratch_len = self.scratch_len.max(padded);
                     }
+                    // Generic-u kernels keep their tap block /
+                    // accumulator tile in per-thread arena scratch
+                    // (u = 4 runs fully in registers).
+                    if u != 4 {
+                        self.thread_scratch_row =
+                            self.thread_scratch_row.max((u * u).max(conv::OW_TILE * u));
+                    }
+                    // Tile sizes: schedule override or the L1/L2 cost
+                    // model, clamped to this layer's Mb x Ho grid.
+                    let tile = ls
+                        .tiling
+                        .unwrap_or_else(|| {
+                            ConvTiling::choose(cb, w + 2 * p, u, *k, *s, mb, ho)
+                        })
+                        .clamped(mb, ho);
+                    // Cost-weighted placement consumes the tile's
+                    // working-set bytes (packed path only — the
+                    // unpacked row walk is the placement-free
+                    // ablation reference).
+                    let place = if ls.placement && ls.packing {
+                        Some(tile.working_set_bytes(cb, w + 2 * p, u, *k, *s))
+                    } else {
+                        None
+                    };
+                    let wgt = if ls.packing {
+                        self.bake_conv_panels(&lp.w_mm, mode, mb, cb, *k, u)
+                    } else {
+                        self.bake(&lp.w_mm, mode)
+                    };
+                    let b = self.bias(&lp.b_mm);
+                    self.steps.push(Step::ConvMm {
+                        src: cur,
+                        dst,
+                        w: wgt,
+                        b,
+                        k: *k,
+                        s: *s,
+                        p: *p,
+                        relu: *relu,
+                        mode,
+                        packed: ls.packing,
+                        tile,
+                        place,
+                    });
+                    self.nchw_ctx = false;
+                } else {
+                    let policy = if self.baseline {
+                        NchwConv::Scalar
+                    } else {
+                        match ls.parallelism {
+                            Parallelism::Flp => NchwConv::Flp,
+                            Parallelism::Klp => NchwConv::Klp,
+                            Parallelism::Olp => unreachable!("rowmajor implies non-OLP"),
+                        }
+                    };
+                    if lp.w_conv.len() != m * c * k * k || lp.b_conv.len() != *m {
+                        return Err(Error::Shape(format!(
+                            "layer {}: params {}x{} vs expected {}x{}",
+                            layer.name,
+                            lp.w_conv.len(),
+                            lp.b_conv.len(),
+                            m * c * k * k,
+                            m
+                        )));
+                    }
+                    if mode != ArithMode::Precise {
+                        self.scratch_len = self.scratch_len.max(c * h * w);
+                    }
+                    if policy != NchwConv::Scalar {
+                        self.reduce_len = self.reduce_len.max(m * ho * wo);
+                    }
+                    let (wgt, b) = (self.bake(&lp.w_conv, mode), self.bias(&lp.b_conv));
+                    self.steps.push(Step::ConvNchw {
+                        src: cur,
+                        dst,
+                        w: wgt,
+                        b,
+                        k: *k,
+                        s: *s,
+                        p: *p,
+                        relu: *relu,
+                        mode,
+                        policy,
+                    });
+                    self.nchw_ctx = true;
                 }
                 Ok(dst)
             }
@@ -908,31 +1082,30 @@ impl Lowerer<'_> {
                 let ho = shapes::conv_out(h, *k, *s, *p).map_err(named)?;
                 let wo = shapes::conv_out(w, *k, *s, *p).map_err(named)?;
                 let dst = self.slot(SlotShape::Maps { c, h: ho, w: wo, u });
-                match self.family {
-                    Family::MapMajor => {
-                        if *p > 0 {
-                            let padded = ceil_div(c, u) * (h + 2 * p) * (w + 2 * p) * u;
-                            self.scratch_len = self.scratch_len.max(padded);
-                        }
-                        self.steps.push(Step::PoolMm {
-                            src: cur,
-                            dst,
-                            k: *k,
-                            s: *s,
-                            p: *p,
-                            is_max,
-                        });
+                // Non-parameterised layers run at whatever layout the
+                // surrounding scheduled layers left the activation in.
+                if !self.nchw_ctx {
+                    if *p > 0 {
+                        let padded = ceil_div(c, u) * (h + 2 * p) * (w + 2 * p) * u;
+                        self.scratch_len = self.scratch_len.max(padded);
                     }
-                    Family::Nchw(_) => {
-                        self.steps.push(Step::PoolNchw {
-                            src: cur,
-                            dst,
-                            k: *k,
-                            s: *s,
-                            p: *p,
-                            is_max,
-                        });
-                    }
+                    self.steps.push(Step::PoolMm {
+                        src: cur,
+                        dst,
+                        k: *k,
+                        s: *s,
+                        p: *p,
+                        is_max,
+                    });
+                } else {
+                    self.steps.push(Step::PoolNchw {
+                        src: cur,
+                        dst,
+                        k: *k,
+                        s: *s,
+                        p: *p,
+                        is_max,
+                    });
                 }
                 Ok(dst)
             }
@@ -949,15 +1122,24 @@ impl Lowerer<'_> {
                 Ok(dst)
             }
             LayerOp::Fork { branches } => {
-                let (_, _, _, u) = self.require_maps(cur, layer)?;
+                self.require_maps(cur, layer)?;
+                // Every branch starts from the pre-fork layout context;
+                // channel concat requires the branches to agree on the
+                // layout they end in (schedule heterogeneity *within* a
+                // branch is fine, *across* the join it must line up).
+                let ctx_before = self.nchw_ctx;
                 let mut outs = Vec::with_capacity(branches.len());
+                let mut ctx_after = true;
                 for br in branches {
+                    self.nchw_ctx = ctx_before;
                     outs.push(self.lower(br, cur)?);
+                    ctx_after &= self.nchw_ctx;
                 }
                 let mut total_c = 0;
                 let mut hw: Option<(usize, usize)> = None;
+                let mut join_u: Option<usize> = None;
                 for &o in &outs {
-                    let (bc, bh, bw, _) = match self.slots[o] {
+                    let (bc, bh, bw, bu) = match self.slots[o] {
                         SlotShape::Maps { c, h, w, u } => (c, h, w, u),
                         SlotShape::Flat { .. } => {
                             return Err(Error::Invalid(format!(
@@ -976,9 +1158,20 @@ impl Lowerer<'_> {
                     } else {
                         hw = Some((bh, bw));
                     }
-                    if self.family == Family::MapMajor && bc % u != 0 {
+                    match join_u {
+                        Some(pu) if pu != bu => {
+                            return Err(Error::Config(format!(
+                                "fork {}: branches end in different layouts \
+                                 (u={bu} vs u={pu}); schedule the last conv of \
+                                 every branch with the same parallelism family",
+                                layer.name
+                            )))
+                        }
+                        _ => join_u = Some(bu),
+                    }
+                    if bc % bu != 0 {
                         return Err(Error::Invalid(format!(
-                            "fork {}: branch width {bc} not aligned to u={u}",
+                            "fork {}: branch width {bc} not aligned to u={bu}",
                             layer.name
                         )));
                     }
@@ -987,17 +1180,21 @@ impl Lowerer<'_> {
                 let (h, w) = hw.ok_or_else(|| {
                     Error::Invalid(format!("fork {}: no branches", layer.name))
                 })?;
+                let u = join_u.expect("hw implies at least one branch");
+                self.nchw_ctx = ctx_after;
                 let dst = self.slot(SlotShape::Maps { c: total_c, h, w, u });
                 self.steps.push(Step::Concat { srcs: outs, dst });
                 Ok(dst)
             }
             LayerOp::Flatten => {
+                self.flat_mm = !self.nchw_ctx;
                 let len = self.slots[cur].len();
                 let dst = self.slot(SlotShape::Flat { len });
                 self.steps.push(Step::Copy { src: cur, dst });
                 Ok(dst)
             }
             LayerOp::Gap => {
+                self.flat_mm = !self.nchw_ctx;
                 let (c, ..) = self.require_maps(cur, layer)?;
                 let dst = self.slot(SlotShape::Flat { len: c });
                 self.steps.push(Step::Gap { src: cur, dst });
@@ -1013,11 +1210,18 @@ impl Lowerer<'_> {
                         )))
                     }
                 };
+                let ls = self.layer_schedule(&layer.name)?;
                 let lp = self.params.layer_params(&layer.name)?;
-                let mode = self.modes.mode_of(&layer.name);
-                let (w_src, b_src) = match self.family {
-                    Family::MapMajor => (&lp.w_mm, &lp.b_mm),
-                    Family::Nchw(_) => (&lp.w_conv, &lp.b_conv),
+                let mode = ls.mode;
+                // The flat activation's element order is fixed by the
+                // layout the flatten/gap consumed: map-major flattens
+                // need the column-permuted `w_mm`, row-major flattens
+                // the conventional `w_conv` (they coincide after gap and
+                // at u = 1).
+                let (w_src, b_src) = if self.flat_mm {
+                    (&lp.w_mm, &lp.b_mm)
+                } else {
+                    (&lp.w_conv, &lp.b_conv)
                 };
                 if w_src.len() != o * len || b_src.len() != *o {
                     return Err(Error::Shape(format!(
@@ -1032,7 +1236,7 @@ impl Lowerer<'_> {
                 if mode != ArithMode::Precise {
                     self.scratch_len = self.scratch_len.max(len);
                 }
-                let wgt = if self.packing {
+                let wgt = if ls.packing {
                     self.bake_dense_panels(w_src, mode, *o, len)
                 } else {
                     self.bake(w_src, mode)
@@ -1046,7 +1250,7 @@ impl Lowerer<'_> {
                     b,
                     relu: *relu,
                     mode,
-                    packed: self.packing,
+                    packed: ls.packing,
                 });
                 Ok(dst)
             }
@@ -1495,6 +1699,25 @@ fn exec_step(
                 ops::softmax_into(&x[r * len..(r + 1) * len], &mut out[r * len..(r + 1) * len]);
             }
         }
+        Step::Reorder { src, dst } => {
+            // Exact permutation between map-major widths; lowering
+            // guarantees one side is row-major (u = 1).
+            let (c, h, wd, su) = maps_of(slots[*src]);
+            let (.., du) = maps_of(slots[*dst]);
+            let src_len = slots[*src].len();
+            let dst_len = slots[*dst].len();
+            let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+            for r in 0..live {
+                let s_row = &x[r * src_len..(r + 1) * src_len];
+                let d_row = &mut out[r * dst_len..(r + 1) * dst_len];
+                if su == 1 {
+                    layout::nchw_to_mapmajor_into(s_row, c, h, wd, du, d_row);
+                } else {
+                    assert_eq!(du, 1, "reorder steps always cross u = 1");
+                    layout::mapmajor_to_nchw_into(s_row, c, h, wd, su, d_row);
+                }
+            }
+        }
     }
 }
 
@@ -1747,6 +1970,88 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-3 * (1.0 + x.abs()), "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn degenerate_builder_inputs_are_config_errors() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 50, 4).unwrap();
+        // batch(0): rejected before compilation, typed.
+        assert!(matches!(
+            PlanBuilder::new(&net, &params).batch(0).build(),
+            Err(Error::Config(_))
+        ));
+        // threads(0), via both the setter and a raw ExecConfig.
+        assert!(matches!(
+            PlanBuilder::new(&net, &params).threads(0).build(),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            PlanBuilder::new(&net, &params)
+                .config(ExecConfig { threads: 0, affinity: false })
+                .build(),
+            Err(Error::Config(_))
+        ));
+        // A mode assignment naming a layer the net does not have.
+        let bad = ModeAssignment::uniform(ArithMode::Precise).with("convX", ArithMode::Imprecise);
+        assert!(matches!(
+            PlanBuilder::new(&net, &params).modes(&bad).build(),
+            Err(Error::Config(_))
+        ));
+        // A schedule whose layer set mismatches the net's layer count.
+        let mut sched = Schedule::default_for(&net, 4);
+        sched.layers.remove("conv1");
+        assert!(matches!(
+            PlanBuilder::new(&net, &params).schedule(sched).build(),
+            Err(Error::Config(_))
+        ));
+        // A schedule built for a different vector width.
+        let sched = Schedule::default_for(&net, 8);
+        assert!(matches!(
+            PlanBuilder::new(&net, &params).schedule(sched).build(),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn exported_schedule_rebuilds_bitwise_identically() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 51, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise).with("fc5", ArithMode::Precise);
+        let mut fluent = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(2)
+            .batch(3)
+            .build()
+            .unwrap();
+        let sched = fluent.schedule().clone();
+        assert_eq!(sched.pool.threads, 2);
+        let mut rebuilt = PlanBuilder::new(&net, &params)
+            .schedule(sched)
+            .batch(3)
+            .build()
+            .unwrap();
+        let inputs: Vec<Vec<f32>> = (0..3).map(|i| rand_input(&net, 52 + i)).collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(
+            fluent.run_batch(&refs).unwrap(),
+            rebuilt.run_batch(&refs).unwrap(),
+            "schedule round trip changed the numerics"
+        );
+    }
+
+    #[test]
+    fn per_layer_packing_is_honored_and_bitwise_invisible() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 53, 4).unwrap();
+        let input = rand_input(&net, 54);
+        let mut all_packed = PlanBuilder::new(&net, &params).threads(2).build().unwrap();
+        let want = all_packed.run(&input).unwrap();
+        let mut sched = Schedule::default_for(&net, 4);
+        sched.pool.threads = 2;
+        sched.layers.get_mut("conv1").unwrap().packing = false;
+        let mut mixed = PlanBuilder::new(&net, &params).schedule(sched).build().unwrap();
+        assert_eq!(mixed.run(&input).unwrap(), want, "per-layer packing perturbed output");
     }
 
     #[test]

@@ -1,0 +1,447 @@
+//! Schedule IR — the engine's one per-layer tuning surface.
+//!
+//! Cappuccino's output is not a model, it is *software*: a per-layer
+//! choice of parallelization, layout, and arithmetic for one concrete
+//! SoC. Until this module those choices were scattered across
+//! [`crate::engine::PlanBuilder`] setters (`.policy/.packing/.tiling/`
+//! `.modes/.config/.affinity`) and mostly plan-global. A [`Schedule`]
+//! is the canonical, serializable form of the whole tuning surface:
+//!
+//! * [`LayerSchedule`] — per parameterised layer: thread-workload
+//!   allocation ([`Parallelism`]: OLP lowers map-major vectorised,
+//!   FLP/KLP lower row-major with reduction buffers), weight
+//!   [`LayerSchedule::packing`], an optional row-tile
+//!   [`LayerSchedule::tiling`] override (None = the L1/L2 cost model
+//!   [`ConvTiling::choose`]), the arithmetic [`LayerSchedule::mode`],
+//!   and [`LayerSchedule::placement`] (cost-weighted cluster placement
+//!   of that layer's macro items).
+//! * [`PoolSettings`] — plan-global execution state: pool-chunk
+//!   `threads` per parallel region, the `affinity` default, and an
+//!   optional serve-worker [`CoreSet`].
+//!
+//! Every [`crate::engine::PlanBuilder`] fluent setter now lowers into a
+//! uniform `Schedule` ([`Schedule::from_uniform`]), so there is exactly
+//! **one** path into plan compilation, and
+//! [`crate::engine::PlanBuilder::schedule`] accepts a heterogeneous one
+//! directly. Schedules serialize ([`Schedule::to_json`] /
+//! [`Schedule::from_json`]) so a tuning run on the target device
+//! (`cappuccino tune`, [`crate::autotune`]) becomes a durable
+//! `schedule.json` artifact that `cappuccino serve --schedule` loads —
+//! the synthesized software travels from tune to serve as a file, like
+//! the paper's emitted programs.
+
+use std::collections::BTreeMap;
+
+use crate::engine::conv::ConvTiling;
+use crate::engine::mode::ArithMode;
+use crate::engine::network::ModeAssignment;
+use crate::engine::parallel::Parallelism;
+use crate::engine::topology::CoreSet;
+use crate::model::Network;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// The tuning surface of one parameterised (conv/dense) layer.
+///
+/// Dense layers honour `packing` and `mode`; `parallelism`, `tiling`
+/// and `placement` apply to conv layers (dense rows always chunk over
+/// the pool). A conv layer scheduled [`Parallelism::Flp`] /
+/// [`Parallelism::Klp`] lowers row-major — the plan inserts an exact
+/// layout-reorder step at every boundary between map-major and
+/// row-major layers, so heterogeneous schedules stay bitwise faithful
+/// to the per-layer kernels.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerSchedule {
+    /// Thread-workload allocation (section IV.A).
+    pub parallelism: Parallelism,
+    /// Arithmetic mode (section IV.C).
+    pub mode: ArithMode,
+    /// Tap-major / column-blocked weight panels (bitwise invisible).
+    pub packing: bool,
+    /// Row-tile macro-kernel override; `None` = the L1/L2 cost model.
+    pub tiling: Option<ConvTiling>,
+    /// Cost-weighted cluster placement of this layer's macro items
+    /// (packed OLP conv only; bitwise invisible).
+    pub placement: bool,
+}
+
+impl Default for LayerSchedule {
+    fn default() -> Self {
+        LayerSchedule {
+            parallelism: Parallelism::Olp,
+            mode: ArithMode::Precise,
+            packing: true,
+            tiling: None,
+            placement: false,
+        }
+    }
+}
+
+/// Plan-global execution settings.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolSettings {
+    /// Pool **chunks** per parallel region (not a pool size — see
+    /// [`crate::engine::ExecConfig`]). Must be >= 1.
+    pub threads: usize,
+    /// Default for cost-weighted cluster placement (the per-layer
+    /// [`LayerSchedule::placement`] flag is what lowering consumes).
+    pub affinity: bool,
+    /// Serve-worker core set carried with the artifact
+    /// ([`crate::serve::BatchPolicy::cores`]); plan compilation itself
+    /// does not pin.
+    pub cores: Option<CoreSet>,
+}
+
+impl Default for PoolSettings {
+    fn default() -> Self {
+        PoolSettings { threads: 1, affinity: false, cores: None }
+    }
+}
+
+/// A complete per-layer schedule for one network — the canonical
+/// configuration every plan is compiled from, and the artifact
+/// `cappuccino tune` emits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    /// Network the schedule was built for (validated at apply time).
+    pub net: String,
+    /// Map-major vector width the schedule assumes (must match
+    /// [`crate::engine::EngineParams::u`]).
+    pub u: usize,
+    pub pool: PoolSettings,
+    /// One entry per parameterised layer, keyed by layer name.
+    pub layers: BTreeMap<String, LayerSchedule>,
+}
+
+impl Schedule {
+    /// The all-defaults schedule: every layer OLP / precise / packed /
+    /// cost-model tiling, one pool chunk. The starting point the
+    /// autotuner searches from.
+    pub fn default_for(net: &Network, u: usize) -> Schedule {
+        let layers = net
+            .param_layer_names()
+            .into_iter()
+            .map(|n| (n, LayerSchedule::default()))
+            .collect();
+        Schedule { net: net.name.clone(), u, pool: PoolSettings::default(), layers }
+    }
+
+    /// Lower the fluent-setter surface into a uniform schedule — the
+    /// designated (and only) translation from
+    /// [`crate::engine::PlanBuilder`]'s global knobs to the per-layer
+    /// IR. Rejects degenerate pools (`threads = 0`) and mode
+    /// assignments naming layers the network does not have with
+    /// [`Error::Config`].
+    pub fn from_uniform(
+        net: &Network,
+        u: usize,
+        modes: &ModeAssignment,
+        policy: Parallelism,
+        packing: bool,
+        tiling: Option<ConvTiling>,
+        pool: PoolSettings,
+    ) -> Result<Schedule> {
+        if u == 0 {
+            return Err(Error::Config("u = 0: the vector width must be at least 1".into()));
+        }
+        if pool.threads == 0 {
+            return Err(Error::Config(
+                "threads = 0: a plan needs at least one pool chunk per region".into(),
+            ));
+        }
+        let names = net.param_layer_names();
+        for key in modes.per_layer.keys() {
+            if !names.iter().any(|n| n == key) {
+                return Err(Error::Config(format!(
+                    "mode assignment names layer {key:?}, which net {:?} does not have \
+                     ({} parameterised layers)",
+                    net.name,
+                    names.len()
+                )));
+            }
+        }
+        let layers = names
+            .into_iter()
+            .map(|n| {
+                let ls = LayerSchedule {
+                    parallelism: policy,
+                    mode: modes.mode_of(&n),
+                    packing,
+                    tiling,
+                    placement: pool.affinity,
+                };
+                (n, ls)
+            })
+            .collect();
+        Ok(Schedule { net: net.name.clone(), u, pool, layers })
+    }
+
+    /// The schedule's modes as a [`ModeAssignment`] view.
+    pub fn mode_assignment(&self) -> ModeAssignment {
+        let mut ma = ModeAssignment::uniform(ArithMode::Precise);
+        for (name, ls) in &self.layers {
+            ma.per_layer.insert(name.clone(), ls.mode);
+        }
+        ma
+    }
+
+    /// Do all layers lower row-major (FLP/KLP)? Such plans run `u = 1`
+    /// end to end, exactly like the pre-schedule `.policy()` families.
+    pub(crate) fn all_rowmajor(&self) -> bool {
+        !self.layers.is_empty()
+            && self.layers.values().all(|l| l.parallelism != Parallelism::Olp)
+    }
+
+    /// Validate the schedule against the network and parameter width it
+    /// is about to compile with. Every violation is [`Error::Config`].
+    pub fn validate_for(&self, net: &Network, params_u: usize) -> Result<()> {
+        if self.net != net.name {
+            return Err(Error::Config(format!(
+                "schedule was built for net {:?}, applied to {:?}",
+                self.net, net.name
+            )));
+        }
+        if self.u == 0 {
+            return Err(Error::Config("schedule u = 0: vector width must be >= 1".into()));
+        }
+        if self.u != params_u {
+            return Err(Error::Config(format!("schedule u={} vs params u={params_u}", self.u)));
+        }
+        if self.pool.threads == 0 {
+            return Err(Error::Config(
+                "schedule pool.threads = 0: a plan needs at least one pool chunk".into(),
+            ));
+        }
+        let names = net.param_layer_names();
+        if self.layers.len() != names.len() {
+            return Err(Error::Config(format!(
+                "schedule has {} layer entries vs net {:?}'s {} parameterised layers",
+                self.layers.len(),
+                net.name,
+                names.len()
+            )));
+        }
+        for n in &names {
+            if !self.layers.contains_key(n) {
+                return Err(Error::Config(format!("schedule is missing an entry for layer {n:?}")));
+            }
+        }
+        Ok(())
+    }
+
+    // -- JSON artifact ------------------------------------------------------
+
+    /// Serialise to the `schedule.json` artifact format (stable key
+    /// order; layers as an array sorted by name).
+    pub fn to_json(&self) -> Json {
+        let cores = match self.pool.cores {
+            Some(cs) => Json::usizes(&cs.cpus()),
+            None => Json::Null,
+        };
+        let layers = self
+            .layers
+            .iter()
+            .map(|(name, ls)| {
+                let tiling = match ls.tiling {
+                    Some(t) => Json::obj(vec![
+                        ("tm", Json::num(t.tm as f64)),
+                        ("th", Json::num(t.th as f64)),
+                    ]),
+                    None => Json::Null,
+                };
+                Json::obj(vec![
+                    ("layer", Json::str(name.clone())),
+                    ("parallelism", Json::str(ls.parallelism.as_str())),
+                    ("mode", Json::str(ls.mode.as_str())),
+                    ("packing", Json::Bool(ls.packing)),
+                    ("tiling", tiling),
+                    ("placement", Json::Bool(ls.placement)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("net", Json::str(self.net.clone())),
+            ("u", Json::num(self.u as f64)),
+            (
+                "pool",
+                Json::obj(vec![
+                    ("threads", Json::num(self.pool.threads as f64)),
+                    ("affinity", Json::Bool(self.pool.affinity)),
+                    ("cores", cores),
+                ]),
+            ),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    /// Parse a `schedule.json` document.
+    pub fn from_json(json: &Json) -> Result<Schedule> {
+        let pool_json = json.get("pool")?;
+        let cores = match pool_json.get("cores")? {
+            Json::Null => None,
+            v => Some(CoreSet::of(&v.usize_vec()?)),
+        };
+        let pool = PoolSettings {
+            threads: pool_json.get("threads")?.as_usize()?,
+            affinity: pool_json.get("affinity")?.as_bool()?,
+            cores,
+        };
+        let mut layers = BTreeMap::new();
+        for l in json.get("layers")?.as_arr()? {
+            let name = l.get("layer")?.as_str()?.to_string();
+            let tiling = match l.get("tiling")? {
+                Json::Null => None,
+                t => Some(ConvTiling {
+                    tm: t.get("tm")?.as_usize()?,
+                    th: t.get("th")?.as_usize()?,
+                }),
+            };
+            let ls = LayerSchedule {
+                parallelism: l.get("parallelism")?.as_str()?.parse()?,
+                mode: l.get("mode")?.as_str()?.parse()?,
+                packing: l.get("packing")?.as_bool()?,
+                tiling,
+                placement: l.get("placement")?.as_bool()?,
+            };
+            if layers.insert(name.clone(), ls).is_some() {
+                return Err(Error::Config(format!("schedule lists layer {name:?} twice")));
+            }
+        }
+        let u = json.get("u")?.as_usize()?;
+        // A zero width or chunk count can never describe a runnable
+        // plan; reject the artifact at parse time rather than letting
+        // it panic inside parameter layout later.
+        if u == 0 || pool.threads == 0 {
+            return Err(Error::Config(format!(
+                "schedule artifact has u={u}, pool.threads={}: both must be >= 1",
+                pool.threads
+            )));
+        }
+        Ok(Schedule {
+            net: json.get("net")?.as_str()?.to_string(),
+            u,
+            pool,
+            layers,
+        })
+    }
+
+    /// Write the artifact to disk (pretty enough to diff: one document).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load a `schedule.json` artifact from disk.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Schedule> {
+        let text = std::fs::read_to_string(path)?;
+        Schedule::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn sample() -> Schedule {
+        let net = zoo::tinynet();
+        let mut s = Schedule::default_for(&net, 4);
+        s.pool = PoolSettings { threads: 4, affinity: true, cores: Some(CoreSet::of(&[0, 2])) };
+        let c2 = s.layers.get_mut("conv2").unwrap();
+        c2.parallelism = Parallelism::Flp;
+        c2.mode = ArithMode::Imprecise;
+        c2.packing = false;
+        c2.tiling = Some(ConvTiling { tm: 2, th: 3 });
+        c2.placement = true;
+        s
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let s = sample();
+        let text = s.to_json().to_string();
+        let back = Schedule::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn validate_catches_mismatches() {
+        let net = zoo::tinynet();
+        let s = sample();
+        assert!(s.validate_for(&net, 4).is_ok());
+        assert!(matches!(s.validate_for(&net, 8), Err(Error::Config(_))));
+        let mut wrong_net = s.clone();
+        wrong_net.net = "alexnet".into();
+        assert!(matches!(wrong_net.validate_for(&net, 4), Err(Error::Config(_))));
+        let mut missing = s.clone();
+        missing.layers.remove("conv1");
+        assert!(matches!(missing.validate_for(&net, 4), Err(Error::Config(_))));
+        let mut renamed = s.clone();
+        let ls = renamed.layers.remove("conv1").unwrap();
+        renamed.layers.insert("conv_zzz".into(), ls);
+        assert!(matches!(renamed.validate_for(&net, 4), Err(Error::Config(_))));
+        let mut zero = s;
+        zero.pool.threads = 0;
+        assert!(matches!(zero.validate_for(&net, 4), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn from_uniform_rejects_unknown_mode_layers_and_zero_threads() {
+        let net = zoo::tinynet();
+        let bad_modes =
+            ModeAssignment::uniform(ArithMode::Precise).with("nope", ArithMode::Imprecise);
+        let r = Schedule::from_uniform(
+            &net,
+            4,
+            &bad_modes,
+            Parallelism::Olp,
+            true,
+            None,
+            PoolSettings::default(),
+        );
+        assert!(matches!(r, Err(Error::Config(_))));
+        let r = Schedule::from_uniform(
+            &net,
+            4,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            Parallelism::Olp,
+            true,
+            None,
+            PoolSettings { threads: 0, ..Default::default() },
+        );
+        assert!(matches!(r, Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn zero_width_artifacts_rejected() {
+        // A hand-edited artifact with u = 0 (or threads = 0) must be a
+        // typed parse-time rejection, not a divide-by-zero later.
+        let mut zero_u = sample();
+        zero_u.u = 0;
+        let text = zero_u.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert!(matches!(Schedule::from_json(&parsed), Err(Error::Config(_))));
+        assert!(matches!(zero_u.validate_for(&zoo::tinynet(), 0), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn duplicate_layer_entries_rejected() {
+        let s = sample();
+        let mut text = s.to_json().to_string();
+        // Duplicate the first layer entry in the array.
+        let start = text.find("{\"layer\"").unwrap();
+        let end = text[start..].find('}').unwrap() + start + 1;
+        let entry = text[start..end].to_string();
+        text.insert_str(start, &format!("{entry},"));
+        let parsed = Json::parse(&text).unwrap();
+        assert!(matches!(Schedule::from_json(&parsed), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn mode_assignment_view_matches_layers() {
+        let s = sample();
+        let ma = s.mode_assignment();
+        assert_eq!(ma.mode_of("conv2"), ArithMode::Imprecise);
+        assert_eq!(ma.mode_of("conv1"), ArithMode::Precise);
+    }
+}

@@ -26,18 +26,21 @@
 //! | [`layout`] | map-major reordering, packed tap-major / column-blocked weight panels, the paper's eqs. (3)–(5) |
 //! | [`engine`] | native execution engine (OLP/KLP/FLP, vector modes) |
 //! | [`engine::plan`] | batch-first compiled plans: `PlanBuilder` → `ExecutionPlan::run_batch`, `B x` buffer arena, baked+packed weights, per-layer conv tiles from an L1/L2 cost model, per-thread kernel scratch, flat step sequence |
+//! | [`engine::schedule`] | Schedule IR — the one per-layer tuning surface (parallelism, packing, tiling, mode, placement + pool settings); every `PlanBuilder` setter lowers into it; serializes to the `schedule.json` artifact |
 //! | [`engine::parallel`] | topology-aware persistent worker pool (per-cluster deques, idle-only stealing, batch-tagged scopes, cost-weighted placement) + thread workload allocation policies |
 //! | [`engine::topology`] | CPU topology probe (sysfs `cpu_capacity`/packages, affinity-mask aware, uniform fallback), `sched_setaffinity` pinning, serve-worker `CoreSet`s |
 //! | [`soc`] | mobile SoC simulator: latency + energy + CNNDroid models |
 //! | [`data`] | synthetic validation dataset IO |
 //! | [`metrics`] | latency histograms, throughput, energy accounting |
 //! | [`synth`] | primary-program + software synthesizers (plans) |
+//! | [`autotune`] | on-device schedule search: budgeted greedy tuner, warmup + median-of-N timed plan walks per candidate, `cappuccino tune` → `schedule.json` |
 //! | [`inexact`] | per-layer arithmetic-mode analysis |
 //! | [`runtime`] | PJRT artifact loading/execution (`xla` crate) |
 //! | [`serve`] | request router, dynamic batcher (one plan walk per drained batch), worker pool |
 //! | [`bench`] | in-repo micro-benchmark harness (criterion stand-in) |
 //! | [`testing`] | in-repo property-testing helper (proptest stand-in) |
 
+pub mod autotune;
 pub mod bench;
 pub mod config;
 pub mod data;

@@ -13,9 +13,10 @@
 
 use std::collections::HashMap;
 
+use cappuccino::autotune::{self, TuneConfig};
 use cappuccino::config::modelfile::ModelFile;
 use cappuccino::data::Dataset;
-use cappuccino::engine::{ArithMode, EngineParams, ModeAssignment};
+use cappuccino::engine::{ArithMode, EngineParams, ModeAssignment, Schedule};
 use cappuccino::inexact::{self, AnalysisConfig};
 use cappuccino::model::zoo;
 use cappuccino::serve::{pjrt_factory, BatchPolicy, Server};
@@ -87,6 +88,7 @@ fn run(args: &[String]) -> Result<()> {
     match flags.cmd.as_str() {
         "info" => cmd_info(),
         "synthesize" => cmd_synthesize(&flags),
+        "tune" => cmd_tune(&flags),
         "analyze" => cmd_analyze(&flags),
         "simulate" => cmd_simulate(&flags),
         "serve" => cmd_serve(&flags),
@@ -107,14 +109,24 @@ COMMANDS:
   info                               list networks, devices, artifacts
   synthesize --net NAME              run the Fig. 3 synthesis flow; emits plan JSON
              [--u 4] [--threads 4] [--budget 0.01] [--out plan.json]
+  tune       --net tinynet           autotune a per-layer schedule ON THIS MACHINE
+             [--batch 8] [--threads 4] [--budget 64] [--reps 5]
+             [--warmup 2] [--mode imprecise] [--out schedule.json]
+             greedy search over per-layer parallelism/packing/tiling and
+             pool chunking; every candidate is compiled and timed for
+             real (median of --reps walks), --budget caps measurements
   analyze    --net tinynet           per-layer inexact-computing analysis (sec IV.C)
              [--images 256] [--budget 0.01]
   simulate   --net NAME              Table I row for NAME on the device catalog
   serve      --net tinynet           serve a synthetic workload
              [--backend engine|pjrt] [--mode imprecise] [--requests 64]
              [--batch 8] [--threads 1] [--cores 0,1]
+             [--schedule schedule.json]
              engine: batch-compiled native plans (one plan walk per
              drained batch, no artifacts needed); pjrt: AOT artifacts
+             --schedule serves a tuned artifact from `cappuccino tune`
+             (engine backend only: modes, threads, per-layer schedule,
+             and core set all come from the file)
              --cores pins the model worker to the given CPUs
              (sched_setaffinity; co-hosted models should use disjoint
              sets so they stop trampling each other's caches)
@@ -208,6 +220,63 @@ fn cmd_synthesize(flags: &Flags) -> Result<()> {
             d.name,
             cappuccino::synth::predict_latency_ms(&plan, &net, &d)
         );
+    }
+    Ok(())
+}
+
+fn cmd_tune(flags: &Flags) -> Result<()> {
+    let net_name = flags.get("net", "tinynet");
+    let net = zoo::by_name(&net_name)
+        .ok_or_else(|| Error::Invalid(format!("unknown net {net_name:?}")))?;
+    let u = flags.get_usize("u", cappuccino::DEFAULT_U)?;
+    if u == 0 {
+        return Err(Error::Invalid("--u 0: the vector width must be at least 1".into()));
+    }
+    let mode: ArithMode = flags.get("mode", "imprecise").parse()?;
+    let cfg = TuneConfig {
+        batch: flags.get_usize("batch", 8)?,
+        max_threads: flags.get_usize("threads", 4)?,
+        warmup: flags.get_usize("warmup", 2)?,
+        reps: flags.get_usize("reps", 5)?,
+        budget: flags.get_usize("budget", 64)?,
+        modes: ModeAssignment::uniform(mode),
+        ..Default::default()
+    };
+    // Weight values do not affect latency; random parameters make every
+    // zoo net tunable without trained artifacts.
+    let params = EngineParams::random(&net, 42, u)?;
+    eprintln!(
+        "tuning {net_name} on this machine (u={u}, batch={}, budget {} measurements) ...",
+        cfg.batch,
+        cfg.budget
+    );
+    let report = autotune::tune(&net, &params, &cfg)?;
+    for t in &report.trials {
+        eprintln!(
+            "  {:<8} {:<22} {:>9.3} ms{}",
+            t.layer,
+            t.candidate,
+            t.median_ms,
+            if t.accepted { "  <- adopted" } else { "" }
+        );
+    }
+    eprintln!(
+        "default {:.3} ms/walk -> tuned {:.3} ms/walk ({:.2}x) in {} measurements",
+        report.default_ms,
+        report.tuned_ms,
+        report.speedup(),
+        report.measurements
+    );
+    if let Some(p) = report.predicted_ms {
+        eprintln!("SoC-model prediction for the tuned schedule: {p:.2} ms/image");
+    }
+    let out = flags.get("out", "schedule.json");
+    if out == "-" {
+        let text = report.schedule.to_json().to_string();
+        println!("{text}");
+    } else {
+        report.schedule.save(&out)?;
+        eprintln!("wrote schedule to {out}");
     }
     Ok(())
 }
@@ -313,8 +382,12 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         }
         Some(cappuccino::engine::CoreSet::of(&cpus))
     };
+    let schedule_path = flags.get("schedule", "");
     let dir = cappuccino::artifacts_dir();
 
+    // A tuned schedule artifact may carry the worker's core set; an
+    // explicit --cores flag still wins.
+    let mut schedule_cores = None;
     let (factory, input_len) = match backend.as_str() {
         "engine" => {
             // Native engine: batch-capacity plans compiled on the worker
@@ -322,19 +395,49 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             // artifacts — weights are random (latency/throughput demo).
             let network = zoo::by_name(&net)
                 .ok_or_else(|| Error::Invalid(format!("unknown net {net:?}")))?;
-            let arith: ArithMode = mode.parse()?;
-            let params =
-                EngineParams::random(&network, 42, cappuccino::DEFAULT_U)?;
             let input_len = network.input.elements();
-            eprintln!("compiling {net}/{mode} batch plans (native engine) ...");
-            let eb = cappuccino::serve::EngineBackend::new(
-                network,
-                params,
-                ModeAssignment::uniform(arith),
-                threads,
-                max_batch,
-            );
+            let eb = if !schedule_path.is_empty() {
+                // Serve the measured configuration exactly as tuned:
+                // per-layer schedule, modes, pool threads, and core set
+                // all come from the artifact.
+                let schedule = Schedule::load(&schedule_path)?;
+                if schedule.net != net {
+                    return Err(Error::Invalid(format!(
+                        "schedule {schedule_path:?} was tuned for net {:?}, serving {net:?} \
+                         (pass --net {})",
+                        schedule.net,
+                        schedule.net
+                    )));
+                }
+                schedule_cores = schedule.pool.cores;
+                let params = EngineParams::random(&network, 42, schedule.u)?;
+                eprintln!("compiling {net} batch plans from {schedule_path} (native engine) ...");
+                cappuccino::serve::EngineBackend::with_schedule(
+                    network,
+                    params,
+                    schedule,
+                    max_batch,
+                )
+            } else {
+                let arith: ArithMode = mode.parse()?;
+                let params = EngineParams::random(&network, 42, cappuccino::DEFAULT_U)?;
+                eprintln!("compiling {net}/{mode} batch plans (native engine) ...");
+                cappuccino::serve::EngineBackend::new(
+                    network,
+                    params,
+                    ModeAssignment::uniform(arith),
+                    threads,
+                    max_batch,
+                )
+            };
             (eb.factory(), input_len)
+        }
+        "pjrt" if !schedule_path.is_empty() => {
+            return Err(Error::Invalid(
+                "--schedule applies to the engine backend (PJRT executables are fixed \
+                 artifacts); drop --schedule or use --backend engine"
+                    .into(),
+            ))
         }
         "pjrt" => {
             // tinynet serves its trained weights; other nets get random
@@ -362,7 +465,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         max_batch,
         max_delay: std::time::Duration::from_millis(2),
         queue_depth: 128,
-        cores,
+        cores: cores.or(schedule_cores),
     };
     let server = Server::start(vec![(net.clone(), factory, policy)])?;
 

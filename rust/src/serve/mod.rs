@@ -392,6 +392,11 @@ pub struct EngineBackend {
     params: crate::engine::EngineParams,
     modes: crate::engine::ModeAssignment,
     threads: usize,
+    /// Explicit per-layer schedule (a `schedule.json` artifact from
+    /// `cappuccino tune`); `None` lowers the uniform modes/threads
+    /// configuration. Either way plan compilation goes through the one
+    /// [`crate::engine::Schedule`] surface.
+    schedule: Option<crate::engine::Schedule>,
     batches: Vec<usize>,
     input_len: usize,
 }
@@ -410,9 +415,28 @@ impl EngineBackend {
             params,
             modes,
             threads,
+            schedule: None,
             batches: (0..).map(|i| 1 << i).take_while(|&b| b <= max_batch.max(1)).collect(),
             input_len,
         }
+    }
+
+    /// Serve a tuned schedule artifact: per-layer parallelism, packing,
+    /// tiling, modes, and the pool settings all come from `schedule`
+    /// (validated against the net at worker startup). This is the
+    /// `serve --schedule schedule.json` path — the configuration
+    /// measured by `cappuccino tune` runs unchanged in production.
+    pub fn with_schedule(
+        net: crate::model::Network,
+        params: crate::engine::EngineParams,
+        schedule: crate::engine::Schedule,
+        max_batch: usize,
+    ) -> Self {
+        let modes = schedule.mode_assignment();
+        let threads = schedule.pool.threads;
+        let mut backend = EngineBackend::new(net, params, modes, threads, max_batch);
+        backend.schedule = Some(schedule);
+        backend
     }
 
     /// Factory for [`Server::start`]: plan compilation happens on the
@@ -423,14 +447,17 @@ impl EngineBackend {
     pub fn factory(self) -> BackendFactory {
         Box::new(move || {
             let max_capacity = self.batches.last().copied().unwrap_or(1);
-            let base = crate::engine::PlanBuilder::new(&self.net, &self.params)
+            // Either way the builder lowers into the one Schedule
+            // surface; an explicit artifact is applied verbatim, the
+            // uniform configuration through the fluent sugar.
+            let mut builder = crate::engine::PlanBuilder::new(&self.net, &self.params)
                 .modes(&self.modes)
-                .config(crate::engine::ExecConfig {
-                    threads: self.threads,
-                    ..Default::default()
-                })
-                .batch(max_capacity)
-                .build()?;
+                .threads(self.threads)
+                .batch(max_capacity);
+            if let Some(s) = self.schedule.clone() {
+                builder = builder.schedule(s);
+            }
+            let base = builder.build()?;
             // Derive the smaller capacities, then reuse `base` as the
             // largest — no throwaway duplicate of the biggest arena.
             let smaller = self.batches.len().saturating_sub(1);
@@ -692,6 +719,37 @@ mod tests {
         for (i, row) in partial.iter().enumerate() {
             assert_eq!(row, &single.run(&images[i]).unwrap(), "lane {i} leaked");
         }
+    }
+
+    #[test]
+    fn schedule_backend_matches_uniform_backend() {
+        // A serve worker fed a schedule artifact must produce bitwise
+        // the logits of the equivalent uniform-setter backend — the
+        // tune → serve artifact path cannot perturb numerics.
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 21, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let uniform = EngineBackend::new(net.clone(), params.clone(), modes.clone(), 2, 4);
+        let mut uniform = (uniform.factory())().unwrap();
+        let sched = crate::engine::Schedule::from_uniform(
+            &net,
+            4,
+            &modes,
+            crate::engine::Parallelism::Olp,
+            true,
+            None,
+            crate::engine::PoolSettings { threads: 2, affinity: false, cores: None },
+        )
+        .unwrap();
+        let scheduled = EngineBackend::with_schedule(net, params, sched, 4);
+        let mut scheduled = (scheduled.factory())().unwrap();
+        let mut rng = Rng::new(22);
+        let imgs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(3 * 16 * 16)).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(
+            uniform.infer_batch(&refs, 4).unwrap(),
+            scheduled.infer_batch(&refs, 4).unwrap()
+        );
     }
 
     #[test]

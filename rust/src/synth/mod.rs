@@ -16,7 +16,8 @@
 use std::collections::BTreeMap;
 
 use crate::engine::{
-    self, ArithMode, EngineParams, ExecConfig, ExecutionPlan, ModeAssignment, Parallelism,
+    self, ArithMode, EngineParams, ExecutionPlan, LayerSchedule, ModeAssignment, Parallelism,
+    PoolSettings, Schedule,
 };
 use crate::model::{shapes, Network};
 use crate::soc::{DeviceModel, ProcessingMode};
@@ -64,6 +65,62 @@ impl SynthesisPlan {
             .iter()
             .filter(|l| l.mode != ArithMode::Precise)
             .count()
+    }
+
+    // -- Schedule bridge ----------------------------------------------------
+
+    /// Lower the synthesized program into the engine's [`Schedule`] IR
+    /// — the single surface plan compilation accepts. Per-layer
+    /// parallelism and modes carry over; packing/tiling/placement take
+    /// their defaults (packed, cost-model tiles, no placement), which
+    /// the autotuner ([`crate::autotune`]) then refines in place.
+    pub fn to_schedule(&self) -> Schedule {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let ls = LayerSchedule {
+                    parallelism: l.parallelism,
+                    mode: l.mode,
+                    ..Default::default()
+                };
+                (l.layer.clone(), ls)
+            })
+            .collect();
+        Schedule {
+            net: self.net.clone(),
+            u: self.u,
+            pool: PoolSettings { threads: self.threads, ..Default::default() },
+            layers,
+        }
+    }
+
+    /// Rebuild a synthesis-plan view from a schedule (the reverse
+    /// bridge: `alpha` comes from shape inference, per-layer threads
+    /// from the schedule's pool). Validates the schedule against `net`.
+    pub fn from_schedule(schedule: &Schedule, net: &Network) -> Result<SynthesisPlan> {
+        schedule.validate_for(net, schedule.u)?;
+        let info = shapes::infer(net)?;
+        let layers = info
+            .param_layers
+            .iter()
+            .map(|pl| {
+                let ls = schedule.layers.get(&pl.name).copied().unwrap_or_default();
+                LayerPlan {
+                    layer: pl.name.clone(),
+                    parallelism: ls.parallelism,
+                    mode: ls.mode,
+                    threads: schedule.pool.threads,
+                    alpha: pl.output.elements(),
+                }
+            })
+            .collect();
+        Ok(SynthesisPlan {
+            net: net.name.clone(),
+            u: schedule.u,
+            threads: schedule.pool.threads,
+            layers,
+        })
     }
 
     // -- JSON round-trip ----------------------------------------------------
@@ -204,24 +261,11 @@ pub fn compile_plan_batched(
     params: &EngineParams,
     batch: usize,
 ) -> Result<ExecutionPlan> {
-    if params.u != plan.u {
-        return Err(Error::Invalid(format!(
-            "plan u={} vs params u={}",
-            plan.u, params.u
-        )));
-    }
-    let policy = match plan.layers.first() {
-        Some(first) if plan.layers.iter().all(|l| l.parallelism == first.parallelism) => {
-            first.parallelism
-        }
-        _ => Parallelism::Olp,
-    };
-    crate::engine::PlanBuilder::new(net, params)
-        .modes(&plan.mode_assignment())
-        .config(ExecConfig { threads: plan.threads, ..Default::default() })
-        .policy(policy)
-        .batch(batch)
-        .build()
+    // One lowering path: the synthesis plan bridges into the Schedule
+    // IR and plan compilation consumes that (per-layer parallelism is
+    // honored — ablation plans mixing OLP with FLP/KLP lower exactly as
+    // written, with layout reorders at family boundaries).
+    crate::engine::PlanBuilder::new(net, params).schedule(plan.to_schedule()).batch(batch).build()
 }
 
 /// Execute a plan on the native engine (compile + single run; hold the
@@ -262,6 +306,7 @@ pub fn predict_latency_ms(plan: &SynthesisPlan, net: &Network, device: &DeviceMo
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::ExecConfig;
     use crate::model::zoo;
     use crate::soc::devices;
     use crate::util::rng::Rng;
@@ -380,6 +425,32 @@ mod tests {
         for (row, input) in rows.iter().zip(&inputs) {
             assert_eq!(row, &execute_plan(&plan, &net, &params, input).unwrap());
         }
+    }
+
+    #[test]
+    fn schedule_bridge_roundtrips_both_directions() {
+        let net = zoo::tinynet();
+        let primary = PrimarySynthesizer::new(4, 2).synthesize(&net).unwrap();
+        let plan = finalize(
+            &primary,
+            &ModeAssignment::uniform(ArithMode::Imprecise).with("fc5", ArithMode::Precise),
+        );
+        let sched = plan.to_schedule();
+        assert_eq!(sched.pool.threads, 2);
+        assert_eq!(sched.layers.len(), plan.layers.len());
+        assert_eq!(sched.layers["fc5"].mode, ArithMode::Precise);
+        let back = SynthesisPlan::from_schedule(&sched, &net).unwrap();
+        assert_eq!(back, plan);
+        // And the schedule path compiles to the same numerics as the
+        // one-shot execute_plan flow.
+        let params = EngineParams::random(&net, 6, 4).unwrap();
+        let mut rng = Rng::new(7);
+        let input = rng.normal_vec(net.input.elements());
+        let mut compiled = compile_plan(&plan, &net, &params).unwrap();
+        assert_eq!(
+            compiled.run(&input).unwrap(),
+            execute_plan(&plan, &net, &params, &input).unwrap()
+        );
     }
 
     #[test]

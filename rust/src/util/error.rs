@@ -13,6 +13,12 @@ pub enum Error {
     Parse { what: String, detail: String },
     /// A request or configuration is structurally invalid.
     Invalid(String),
+    /// A tuning-surface (schedule / builder) configuration is rejected
+    /// before compilation: degenerate knobs (`threads = 0`,
+    /// `batch = 0`), mode or schedule entries naming layers the network
+    /// does not have, or a schedule whose layer set / vector width does
+    /// not match the network it is applied to.
+    Config(String),
     /// Shape/layout mismatch between tensors or layers.
     Shape(String),
     /// Underlying I/O failure.
@@ -28,6 +34,7 @@ impl fmt::Display for Error {
         match self {
             Error::Parse { what, detail } => write!(f, "parse error in {what}: {detail}"),
             Error::Invalid(msg) => write!(f, "invalid: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Shape(msg) => write!(f, "shape error: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(msg) => write!(f, "xla error: {msg}"),

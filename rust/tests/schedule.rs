@@ -1,0 +1,304 @@
+//! Schedule-IR acceptance: the artifact round trip (fluent setters →
+//! exported `Schedule` → JSON → reload → rebuilt plan) must be
+//! **bitwise** identical, and per-layer heterogeneity must be real —
+//! a plan mixing parallelism families and packing choices across
+//! layers has to match the legacy per-layer oracles bitwise, not just
+//! approximately.
+
+use cappuccino::config::modelfile::{ModelFile, NamedTensor};
+use cappuccino::engine::{
+    ArithMode, ConvTiling, EngineParams, ModeAssignment, Parallelism, PlanBuilder, Schedule,
+};
+use cappuccino::model::{zoo, Layer, LayerOp, Network, TensorShape};
+use cappuccino::testing::{check, Gen};
+use cappuccino::util::json::Json;
+use cappuccino::util::rng::Rng;
+use cappuccino::Error;
+
+/// Export → serialize → reload → rebuild, bitwise, across the full
+/// threads x u sweep the artifact must survive.
+#[test]
+fn schedule_roundtrip_is_bitwise_across_threads_and_u() {
+    let net = zoo::tinynet();
+    for u in [1usize, 2, 4] {
+        let params = EngineParams::random(&net, 40 + u as u64, u).unwrap();
+        for threads in [1usize, 2, 4] {
+            let modes = ModeAssignment::uniform(ArithMode::Imprecise)
+                .with("conv2", ArithMode::Precise)
+                .with("fc5", ArithMode::Relaxed);
+            let mut fluent = PlanBuilder::new(&net, &params)
+                .modes(&modes)
+                .threads(threads)
+                .batch(4)
+                .build()
+                .unwrap();
+            let exported = fluent.schedule().clone();
+            let text = exported.to_json().to_string();
+            let loaded = Schedule::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(loaded, exported, "u={u} threads={threads}: JSON not identity");
+            let mut rebuilt = PlanBuilder::new(&net, &params)
+                .schedule(loaded)
+                .batch(4)
+                .build()
+                .unwrap();
+            let mut rng = Rng::new(60 + (u * 10 + threads) as u64);
+            let inputs: Vec<Vec<f32>> =
+                (0..3).map(|_| rng.normal_vec(net.input.elements())).collect();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            assert_eq!(
+                fluent.run_batch(&refs).unwrap(),
+                rebuilt.run_batch(&refs).unwrap(),
+                "u={u} threads={threads}: rebuilt plan diverged"
+            );
+        }
+    }
+}
+
+/// Random uniform knobs through the same round trip (property form).
+#[test]
+fn prop_schedule_roundtrip_under_random_knobs() {
+    let net = zoo::tinynet();
+    let layer_names = net.param_layer_names();
+    check("schedule roundtrip", 10, 0x5EED, |g: &mut Gen| {
+        let u = g.choose(&[1usize, 2, 4]);
+        let threads = g.choose(&[1usize, 2, 4]);
+        let params = EngineParams::random(&net, 70 + u as u64, u).map_err(|e| e.to_string())?;
+        let mut modes = ModeAssignment::uniform(g.choose(&ArithMode::ALL));
+        for name in &layer_names {
+            if g.bool() {
+                modes = modes.with(name.clone(), g.choose(&ArithMode::ALL));
+            }
+        }
+        let policy = g.choose(&[Parallelism::Olp, Parallelism::Flp, Parallelism::Klp]);
+        let mut builder = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(threads)
+            .policy(policy)
+            .packing(g.bool())
+            .batch(2);
+        if g.bool() {
+            builder = builder.tiling(ConvTiling { tm: g.int(1, 8), th: g.int(1, 8) });
+        }
+        let mut fluent = builder.build().map_err(|e| e.to_string())?;
+        let exported = fluent.schedule().clone();
+        let loaded = Schedule::from_json(
+            &Json::parse(&exported.to_json().to_string()).map_err(|e| e.to_string())?,
+        )
+        .map_err(|e| e.to_string())?;
+        if loaded != exported {
+            return Err("schedule JSON round trip not identity".into());
+        }
+        let mut rebuilt = PlanBuilder::new(&net, &params)
+            .schedule(loaded)
+            .batch(2)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let x1 = g.normal_vec(net.input.elements());
+        let x2 = g.normal_vec(net.input.elements());
+        let a = fluent.run_batch(&[&x1[..], &x2[..]]).map_err(|e| e.to_string())?;
+        let b = rebuilt.run_batch(&[&x1[..], &x2[..]]).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err(format!("diverged (u={u} threads={threads} policy={policy})"));
+        }
+        Ok(())
+    });
+}
+
+/// Save/load through a real file — the exact tune → serve artifact path.
+#[test]
+fn schedule_file_artifact_roundtrips() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 80, 4).unwrap();
+    let mut fluent = PlanBuilder::new(&net, &params)
+        .modes(&ModeAssignment::uniform(ArithMode::Imprecise))
+        .threads(2)
+        .build()
+        .unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("cappuccino_schedule_{}.json", std::process::id()));
+    fluent.schedule().save(&path).unwrap();
+    let loaded = Schedule::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(&loaded, fluent.schedule());
+    let mut rebuilt = PlanBuilder::new(&net, &params).schedule(loaded).build().unwrap();
+    let mut rng = Rng::new(81);
+    let input = rng.normal_vec(net.input.elements());
+    assert_eq!(fluent.run(&input).unwrap(), rebuilt.run(&input).unwrap());
+}
+
+/// The four-layer mixed net used by the heterogeneity tests, with
+/// deterministic weights shared through a model file so sub-networks
+/// compile the exact same parameters.
+fn mixnet() -> (Network, Network, Network, ModelFile) {
+    let full = Network {
+        name: "mixnet".into(),
+        input: TensorShape::maps(3, 12, 12),
+        classes: 8,
+        layers: vec![
+            Layer::new("c1", LayerOp::Conv { m: 8, k: 3, s: 1, p: 1, relu: true }),
+            Layer::new("pool1", LayerOp::MaxPool { k: 2, s: 2, p: 0 }),
+            Layer::new("c2", LayerOp::Conv { m: 8, k: 3, s: 1, p: 0, relu: true }),
+            Layer::new("gap", LayerOp::Gap),
+        ],
+    };
+    let prefix = Network {
+        name: "mixnet-prefix".into(),
+        input: TensorShape::maps(3, 12, 12),
+        classes: 8,
+        layers: full.layers[..2].to_vec(),
+    };
+    let suffix = Network {
+        name: "mixnet-suffix".into(),
+        input: TensorShape::maps(8, 6, 6),
+        classes: 8,
+        layers: full.layers[2..].to_vec(),
+    };
+    let mut rng = Rng::new(0x0317);
+    let mut mf = ModelFile::new();
+    mf.insert("c1/w", NamedTensor::new(vec![8, 3, 3, 3], rng.normal_vec(8 * 3 * 3 * 3)));
+    mf.insert("c1/b", NamedTensor::new(vec![8], rng.normal_vec(8)));
+    mf.insert("c2/w", NamedTensor::new(vec![8, 8, 3, 3], rng.normal_vec(8 * 8 * 3 * 3)));
+    mf.insert("c2/b", NamedTensor::new(vec![8], rng.normal_vec(8)));
+    (full, prefix, suffix, mf)
+}
+
+/// Acceptance: two layers carrying different `parallelism` AND
+/// `packing` in one plan, proven bitwise against the legacy per-layer
+/// oracles. The oracle is compositional: the OLP prefix runs as its own
+/// uniform plan (itself bitwise-locked to `run_mapmajor_legacy` by
+/// `plan_parity`), its NCHW output feeds a uniform FLP suffix plan —
+/// exactly the per-layer kernels the mixed plan claims to execute, with
+/// the layout reorder at the boundary being the same exact permutation
+/// as the prefix's output extraction.
+#[test]
+fn heterogeneous_parallelism_and_packing_match_composed_oracle_bitwise() {
+    let (full, prefix, suffix, mf) = mixnet();
+    let params_full = EngineParams::compile(&full, &mf, 4).unwrap();
+    let params_prefix = EngineParams::compile(&prefix, &mf, 4).unwrap();
+    let params_suffix = EngineParams::compile(&suffix, &mf, 4).unwrap();
+    let mut rng = Rng::new(90);
+    let input = rng.normal_vec(full.input.elements());
+
+    for threads in [1usize, 2, 4] {
+        // Mixed schedule: c1 OLP + packed + imprecise, c2 FLP + unpacked
+        // + precise — different parallelism and packing per layer.
+        let mut sched = Schedule::default_for(&full, 4);
+        sched.pool.threads = threads;
+        {
+            let c1 = sched.layers.get_mut("c1").unwrap();
+            c1.mode = ArithMode::Imprecise;
+            c1.packing = true;
+        }
+        {
+            let c2 = sched.layers.get_mut("c2").unwrap();
+            c2.parallelism = Parallelism::Flp;
+            c2.packing = false;
+        }
+        let mut mixed = PlanBuilder::new(&full, &params_full).schedule(sched).build().unwrap();
+        let got = mixed.run(&input).unwrap();
+
+        // Composed oracle from uniform plans.
+        let mut head = PlanBuilder::new(&prefix, &params_prefix)
+            .modes(&ModeAssignment::uniform(ArithMode::Precise).with("c1", ArithMode::Imprecise))
+            .threads(threads)
+            .build()
+            .unwrap();
+        let mid = head.run(&input).unwrap();
+        let mut tail = PlanBuilder::new(&suffix, &params_suffix)
+            .policy(Parallelism::Flp)
+            .threads(threads)
+            .build()
+            .unwrap();
+        let want = tail.run(&mid).unwrap();
+        assert_eq!(got, want, "threads={threads}: mixed plan diverged from composed oracle");
+        // The mixture is real, not collapsed: the mixed plan runs
+        // map-major (u = 4) where the uniform-FLP lowering runs u = 1.
+        assert_eq!(mixed.u(), 4);
+    }
+}
+
+/// The mirror mixture — row-major (FLP) first, OLP second. The plan
+/// must start the input row-major (no map-major transform that a
+/// reorder would immediately undo: exactly one Reorder step, at the
+/// FLP→OLP boundary) and still match the composed uniform-plan oracle
+/// bitwise.
+#[test]
+fn rowmajor_first_mixture_starts_nchw_and_matches_oracle_bitwise() {
+    let (full, prefix, suffix, mf) = mixnet();
+    let params_full = EngineParams::compile(&full, &mf, 4).unwrap();
+    let params_prefix = EngineParams::compile(&prefix, &mf, 4).unwrap();
+    let params_suffix = EngineParams::compile(&suffix, &mf, 4).unwrap();
+    let mut rng = Rng::new(95);
+    let input = rng.normal_vec(full.input.elements());
+
+    for threads in [1usize, 2] {
+        let mut sched = Schedule::default_for(&full, 4);
+        sched.pool.threads = threads;
+        sched.layers.get_mut("c1").unwrap().parallelism = Parallelism::Flp;
+        sched.layers.get_mut("c2").unwrap().mode = ArithMode::Imprecise;
+        let mut mixed = PlanBuilder::new(&full, &params_full).schedule(sched).build().unwrap();
+        // Input, ConvNchw(c1), PoolNchw, Reorder, ConvMm(c2), Gap — the
+        // input starts row-major, so there is exactly one reorder.
+        assert_eq!(mixed.step_count(), 6, "unexpected lowering for the FLP-first mixture");
+        let got = mixed.run(&input).unwrap();
+
+        let mut head = PlanBuilder::new(&prefix, &params_prefix)
+            .policy(Parallelism::Flp)
+            .threads(threads)
+            .build()
+            .unwrap();
+        let mid = head.run(&input).unwrap();
+        let mut tail = PlanBuilder::new(&suffix, &params_suffix)
+            .modes(&ModeAssignment::uniform(ArithMode::Precise).with("c2", ArithMode::Imprecise))
+            .threads(threads)
+            .build()
+            .unwrap();
+        let want = tail.run(&mid).unwrap();
+        assert_eq!(got, want, "threads={threads}: FLP-first mixture diverged from oracle");
+    }
+}
+
+/// Per-layer packing against the true legacy interpreter: packing is a
+/// bitwise-invisible permutation, so any per-layer mixture must still
+/// equal `run_mapmajor_legacy` exactly.
+#[test]
+fn per_layer_packing_mixture_matches_legacy_interpreter_bitwise() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 91, 4).unwrap();
+    let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+    let mut rng = Rng::new(92);
+    let input = rng.normal_vec(net.input.elements());
+    for threads in [1usize, 2, 4] {
+        let cfg = cappuccino::engine::ExecConfig { threads, affinity: false };
+        let want =
+            cappuccino::engine::run_mapmajor_legacy(&net, &params, &input, &modes, cfg).unwrap();
+        let mut sched = Schedule::default_for(&net, 4);
+        sched.pool.threads = threads;
+        for (i, ls) in sched.layers.values_mut().enumerate() {
+            ls.mode = ArithMode::Imprecise;
+            ls.packing = i % 2 == 0; // alternate packed / unpacked
+        }
+        let mut plan = PlanBuilder::new(&net, &params).schedule(sched).build().unwrap();
+        assert_eq!(
+            plan.run(&input).unwrap(),
+            want,
+            "threads={threads}: packing mixture diverged from legacy"
+        );
+    }
+}
+
+/// A schedule built for one net cannot be applied to another, and
+/// malformed artifacts surface as typed config/parse errors.
+#[test]
+fn schedule_artifact_validation_is_typed() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 93, 4).unwrap();
+    let (full, ..) = mixnet();
+    let foreign = Schedule::default_for(&full, 4);
+    assert!(matches!(
+        PlanBuilder::new(&net, &params).schedule(foreign).build(),
+        Err(Error::Config(_))
+    ));
+    assert!(Schedule::from_json(&Json::parse("{\"net\":\"x\"}").unwrap()).is_err());
+    assert!(Schedule::load(std::path::Path::new("/nonexistent/schedule.json")).is_err());
+}
