@@ -15,7 +15,9 @@
 //! `B x threads`, and `--json` writes the whole sweep to
 //! `BENCH_engine_hotpath.json` so the perf trajectory is recorded as a
 //! machine-readable CI artifact from this PR onward (no threshold
-//! gate).
+//! gate). The PR 6 section adds SIMD rows vs forced-scalar rows and
+//! int8 panels vs f32 at B=8 (`simd_vs_scalar_b8` / `int8_vs_f32_b8`
+//! summary keys, plus `simd_enabled` recording the runtime gate).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -481,6 +483,90 @@ fn main() {
                 );
             }
         }
+        // -- SIMD rows vs forced-scalar rows, and int8 vs f32 ---------
+        //
+        // The same packed plan surface three ways at B=8, threads=4:
+        // auto vector width (SIMD rows where the backend has them),
+        // vector_width = 1 (forced scalar rows, bitwise identical
+        // output), and the quantized int8 kernels. The summary ratios
+        // land in BENCH_engine_hotpath.json as `simd_vs_scalar_b8`
+        // and `int8_vs_f32_b8`.
+        let (simd_vs_scalar_b8, int8_vs_f32_b8) = {
+            let (b, threads) = (8usize, 4usize);
+            let inputs: Vec<Vec<f32>> =
+                (0..b).map(|_| rng.normal_vec(net.input.elements())).collect();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let mut simd_plan = PlanBuilder::new(&net, &params)
+                .modes(&modes)
+                .threads(threads)
+                .batch(b)
+                .build()
+                .unwrap();
+            let mut scalar_sched = simd_plan.schedule().clone();
+            for ls in scalar_sched.layers.values_mut() {
+                ls.vector_width = 1;
+            }
+            let mut scalar_plan = PlanBuilder::new(&net, &params)
+                .schedule(scalar_sched)
+                .batch(b)
+                .build()
+                .unwrap();
+            let mut quant_sched = simd_plan.schedule().clone();
+            for ls in quant_sched.layers.values_mut() {
+                ls.mode = ArithMode::QuantI8;
+            }
+            let mut quant_plan = PlanBuilder::new(&net, &params)
+                .schedule(quant_sched)
+                .batch(b)
+                .build()
+                .unwrap();
+            let simd_m = bench("kernel-simd-b8", cfg, || {
+                std::hint::black_box(simd_plan.run_batch(&refs).unwrap());
+            });
+            let scalar_m = bench("kernel-scalar-rows-b8", cfg, || {
+                std::hint::black_box(scalar_plan.run_batch(&refs).unwrap());
+            });
+            let quant_m = bench("kernel-int8-b8", cfg, || {
+                std::hint::black_box(quant_plan.run_batch(&refs).unwrap());
+            });
+            let simd_vs_scalar = scalar_m.mean_ms / simd_m.mean_ms;
+            let int8_vs_f32 = simd_m.mean_ms / quant_m.mean_ms;
+            let mut simd_table =
+                Table::new(&["path", "B", "threads", "time/img(ms)", "imgs/s", "vs scalar-rows"]);
+            let cells: [(&str, f64); 3] = [
+                ("scalar-rows", scalar_m.mean_ms),
+                ("simd-rows", simd_m.mean_ms),
+                ("int8-panels", quant_m.mean_ms),
+            ];
+            for (path, mean_ms) in cells {
+                simd_table.row(&[
+                    path.into(),
+                    b.to_string(),
+                    threads.to_string(),
+                    ms(mean_ms / b as f64),
+                    format!("{:.0}", b as f64 / (mean_ms / 1e3)),
+                    format!("{:.2}x", scalar_m.mean_ms / mean_ms),
+                ]);
+                json_rows.push(Json::obj(vec![
+                    ("path", Json::str(path)),
+                    ("batch", Json::num(b as f64)),
+                    ("threads", Json::num(threads as f64)),
+                    ("time_ms_per_img", Json::num(mean_ms / b as f64)),
+                    ("imgs_per_s", Json::num(b as f64 / (mean_ms / 1e3))),
+                    ("speedup_vs_scalar_rows", Json::num(scalar_m.mean_ms / mean_ms)),
+                ]));
+            }
+            println!(
+                "\n# SIMD rows vs scalar rows vs int8 panels (runtime SIMD gate: {})\n",
+                if cappuccino::engine::simd::enabled() { "on" } else { "off (scalar fallback)" }
+            );
+            simd_table.print();
+            println!(
+                "\nsimd vs scalar-rows at B=8: {simd_vs_scalar:.2}x; \
+                 int8 vs f32 SIMD at B=8: {int8_vs_f32:.2}x"
+            );
+            (simd_vs_scalar, int8_vs_f32)
+        };
         if json_mode {
             // Record the pool shape next to the numbers: imgs/s at a
             // given (B, threads) is only comparable across runs with
@@ -494,6 +580,9 @@ fn main() {
                 ("packed_vs_plan_b8_t4", Json::num(packed_vs_plan_b8_t4)),
                 ("tuned_vs_default_b8", Json::num(tuned_vs_default_b8)),
                 ("tuned_pool_threads", Json::num(tuned_threads as f64)),
+                ("simd_enabled", Json::Bool(cappuccino::engine::simd::enabled())),
+                ("simd_vs_scalar_b8", Json::num(simd_vs_scalar_b8)),
+                ("int8_vs_f32_b8", Json::num(int8_vs_f32_b8)),
                 ("rows", Json::Arr(json_rows)),
             ]);
             std::fs::write("BENCH_engine_hotpath.json", doc.to_string())

@@ -17,15 +17,24 @@
 //!    [`TuneConfig::max_threads`]) are timed and the best kept.
 //! 3. **Per-layer stage** — for each conv layer: row-tile variants
 //!    around the cost model's choice, unpacked weights, and the FLP/KLP
-//!    allocation policies; for each dense layer: unpacked weights. Every
+//!    allocation policies; for each dense layer: unpacked weights. Both
+//!    also try the PR-6 kernel knobs: `vector_width = 1` (force the
+//!    scalar row kernels — occasionally faster on narrow layers) and
+//!    the quantized int8 kernels ([`ArithMode::QuantI8`], packed OLP
+//!    only, withheld for widths that cannot be lane-padded). Every
 //!    candidate plan is compiled and timed for real — warmup walks, then
 //!    median of [`TuneConfig::reps`] timed [`run_batch`] walks — and a
 //!    candidate must beat the incumbent by >1% to be adopted (hysteresis
 //!    against timer noise).
 //!
-//! Arithmetic modes are **not** searched: they change numerics, and
-//! belong to the accuracy-gated analysis in [`crate::inexact`]. Pass the
-//! chosen assignment in [`TuneConfig::modes`]; the tuner preserves it.
+//! The **f32** arithmetic modes are **not** searched: they change
+//! numerics, and belong to the accuracy-gated analysis in
+//! [`crate::inexact`]. Pass the chosen assignment in
+//! [`TuneConfig::modes`]; the tuner preserves it. The one exception is
+//! [`ArithMode::QuantI8`], offered as a per-layer *speed* candidate
+//! (int8 panels quarter the weight traffic, so it is often the
+//! fastest path); a schedule that adopted it should still clear the
+//! tolerance gate (`inexact::evaluate_accuracy`) before serving.
 //!
 //! The result is a [`TuneReport`] whose [`Schedule`] serializes to
 //! `schedule.json` (`cappuccino tune --out schedule.json`) and feeds
@@ -218,6 +227,26 @@ fn layer_candidates(
     } else {
         out.push(("packing=off".into(), LayerSchedule { packing: false, ..*cur }));
     }
+    // PR-6 kernel knobs, conv and dense alike. Forced-scalar rows are
+    // bitwise invisible (pure speed); the quantized int8 kernels change
+    // numerics and are accuracy-gated downstream (`crate::inexact`) —
+    // here they compete on time only. Quant lowers packed OLP only, and
+    // conv additionally needs a lane-paddable width.
+    if cur.vector_width != 1 {
+        out.push(("vector_width=1".into(), LayerSchedule { vector_width: 1, ..*cur }));
+    }
+    let quant_ok = geom.conv.is_none() || matches!(u, 1 | 2 | 4 | 8);
+    if cur.mode != ArithMode::QuantI8 && quant_ok {
+        out.push((
+            "mode=quant_i8".into(),
+            LayerSchedule {
+                mode: ArithMode::QuantI8,
+                packing: true,
+                parallelism: Parallelism::Olp,
+                ..*cur
+            },
+        ));
+    }
     out
 }
 
@@ -327,7 +356,14 @@ pub fn tune(net: &Network, params: &EngineParams, cfg: &TuneConfig) -> Result<Tu
             }
             let mut cand = sched.clone();
             cand.layers.insert(geom.name.clone(), cand_ls);
-            let ms = time(&cand)?;
+            // A candidate the plan compiler rejects (e.g. packing=off
+            // or FLP under a quant_i8 layer) is skipped, not fatal —
+            // and costs no budget, since nothing was measured.
+            let ms = match time(&cand) {
+                Ok(ms) => ms,
+                Err(Error::Config(_)) => continue,
+                Err(e) => return Err(e),
+            };
             used += 1;
             let accepted = ms < layer_best_ms * ACCEPT_RATIO;
             trials.push(Trial {
@@ -400,9 +436,10 @@ mod tests {
         // The incumbent only ever improves, so tuned <= default.
         assert!(report.tuned_ms <= report.default_ms);
         report.schedule.validate_for(&net, 4).unwrap();
-        // Modes are preserved, never searched.
+        // f32 modes are preserved, never searched; quant_i8 is the one
+        // mode the tuner may adopt on its own (as a speed candidate).
         for ls in report.schedule.layers.values() {
-            assert_eq!(ls.mode, ArithMode::Imprecise);
+            assert!(matches!(ls.mode, ArithMode::Imprecise | ArithMode::QuantI8));
         }
         assert!(report.predicted_ms.unwrap_or(0.0) > 0.0);
     }
@@ -428,6 +465,73 @@ mod tests {
             a.run_batch(&[&x1[..], &x2[..]]).unwrap(),
             b.run_batch(&[&x1[..], &x2[..]]).unwrap()
         );
+    }
+
+    #[test]
+    fn pr6_candidates_cover_scalar_and_quant_with_lane_gate() {
+        let net = zoo::tinynet();
+        let geoms = layer_geometry(&net).unwrap();
+        let conv = geoms.iter().find(|g| g.conv.is_some()).unwrap();
+        let dense = geoms.iter().find(|g| g.conv.is_none()).unwrap();
+        let cur = LayerSchedule { mode: ArithMode::Imprecise, ..LayerSchedule::default() };
+        for g in [conv, dense] {
+            let cands = layer_candidates(g, 4, &cur);
+            assert!(cands
+                .iter()
+                .any(|(l, ls)| l == "vector_width=1" && ls.vector_width == 1));
+            let (_, q) = cands.iter().find(|(l, _)| l == "mode=quant_i8").unwrap();
+            assert!(
+                q.mode == ArithMode::QuantI8
+                    && q.packing
+                    && q.parallelism == Parallelism::Olp
+            );
+        }
+        // u = 3 cannot be lane-padded: the quant candidate is withheld
+        // for conv layers (dense has no width constraint).
+        assert!(!layer_candidates(conv, 3, &cur).iter().any(|(l, _)| l == "mode=quant_i8"));
+        assert!(layer_candidates(dense, 3, &cur).iter().any(|(l, _)| l == "mode=quant_i8"));
+        // A layer already forced scalar / quantized gets no duplicate.
+        let scalar_quant = LayerSchedule {
+            mode: ArithMode::QuantI8,
+            vector_width: 1,
+            ..LayerSchedule::default()
+        };
+        let cands = layer_candidates(conv, 4, &scalar_quant);
+        assert!(!cands.iter().any(|(l, _)| l == "vector_width=1" || l == "mode=quant_i8"));
+    }
+
+    #[test]
+    fn adopted_pr6_candidates_roundtrip_and_compile() {
+        // A schedule that adopted the quant_i8 and vector_width
+        // candidates must survive the JSON artifact round trip and
+        // compile into a runnable plan — the tune -> serve contract for
+        // the new knobs.
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 7, 4).unwrap();
+        let geoms = layer_geometry(&net).unwrap();
+        let conv = geoms.iter().find(|g| g.conv.is_some()).unwrap();
+        let dense = geoms.iter().find(|g| g.conv.is_none()).unwrap();
+        let mut sched = Schedule::default_for(&net, 4);
+        let cur = LayerSchedule { mode: ArithMode::Imprecise, ..LayerSchedule::default() };
+        let quant = layer_candidates(conv, 4, &cur)
+            .into_iter()
+            .find(|(l, _)| l == "mode=quant_i8")
+            .unwrap()
+            .1;
+        let scalar = layer_candidates(dense, 4, &cur)
+            .into_iter()
+            .find(|(l, _)| l == "vector_width=1")
+            .unwrap()
+            .1;
+        sched.layers.insert(conv.name.clone(), quant);
+        sched.layers.insert(dense.name.clone(), scalar);
+        sched.validate_for(&net, 4).unwrap();
+        let text = sched.to_json().to_string();
+        let loaded = Schedule::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(loaded, sched);
+        let mut plan = PlanBuilder::new(&net, &params).schedule(loaded).build().unwrap();
+        let x = Rng::new(8).normal_vec(net.input.elements());
+        assert!(plan.run(&x).unwrap().iter().all(|v| v.is_finite()));
     }
 
     #[test]

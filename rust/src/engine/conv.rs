@@ -39,8 +39,26 @@
 //! keep the exact per-element tap order and dot expressions of the
 //! unpacked kernels, so packed output is **bitwise identical** — the
 //! unpacked kernels stay as the parity oracle and ablation reference.
+//!
+//! ## SIMD row kernels and the quantized path
+//!
+//! The packed tap block is stored input-lane-major (`[il][ol]`), so
+//! each input lane's `u` output-lane weights are one contiguous
+//! lane-width load: the tap block *is* the vector register tile. When a
+//! layer's mode is vectorised (and the schedule does not force
+//! `vector_width = 1`), [`conv_mm_packed_row`] dispatches to
+//! [`packed_row_lanes`] over the [`crate::engine::simd`] lane
+//! abstraction — `f32x4` at `u = 4`, `f32x8` at `u = 8` — which
+//! performs the *identical per-lane op sequence* as the scalar
+//! expressions (no FMA, no re-association), so vector output stays
+//! bitwise equal to the scalar oracle whichever backend runs.
+//! [`ArithMode::QuantI8`](crate::engine::mode::ArithMode) layers run
+//! [`conv_i8_packed_core`] instead: `i8` panels in the same layout,
+//! `i16` products accumulated in widening `i32`, requantized to f32 on
+//! store (`acc * s_x * s_w + bias`).
 
 use crate::engine::mode::{mode_cast, ArithMode};
+use crate::engine::simd::{self, F32Lanes, I8Dot};
 use crate::engine::parallel::{
     parallel_for_macro_slices, parallel_for_macro_slices_placed, parallel_reduce,
 };
@@ -618,6 +636,7 @@ pub fn conv_mm_packed(
         ho,
         wo,
         relu,
+        mode.vectorized(),
         threads,
         1,
         tile,
@@ -641,6 +660,9 @@ struct PackedGeo {
     ho: usize,
     wo: usize,
     relu: bool,
+    /// Use the lane-abstraction row kernel where a width exists for
+    /// this `u` (mode is vectorised and the schedule allows it).
+    vec: bool,
     /// Clamped tile sizes.
     tm: usize,
     th: usize,
@@ -684,6 +706,7 @@ pub(crate) fn conv_mm_packed_core(
     ho: usize,
     wo: usize,
     relu: bool,
+    vec: bool,
     threads: usize,
     rows: usize,
     tile: ConvTiling,
@@ -706,7 +729,7 @@ pub(crate) fn conv_mm_packed_core(
     debug_assert!(x_stride >= x_len, "conv_mm_packed_core: x stride");
     debug_assert!(out.len() >= total, "conv_mm_packed_core: out len");
     let out = &mut out[..total];
-    let g = PackedGeo { hp, wp, cb, u, mb, k, s, ho, wo, relu, tm, th, n_mt };
+    let g = PackedGeo { hp, wp, cb, u, mb, k, s, ho, wo, relu, vec, tm, th, n_mt };
     if threads <= 1 || items <= 1 {
         let sc = scratch
             .first_mut()
@@ -767,7 +790,7 @@ fn packed_macro_items(
                     let row = &mut block[(mi * g.ho + oh) * out_row_len..][..out_row_len];
                     conv_mm_packed_row(
                         xi, w_pack, b_mm, row, ms, oh, g.cb, g.hp, g.wp, g.u, g.k, g.s,
-                        g.wo, g.relu, scratch,
+                        g.wo, g.relu, g.vec, scratch,
                     );
                 }
             }
@@ -781,7 +804,10 @@ fn packed_macro_items(
 /// is streamed strictly sequentially (`w_off` only ever advances by
 /// `u*u`), so the unpacked layout's per-tap gather is gone. Tap order
 /// and dot expressions match [`conv_mm_row`] exactly — bitwise
-/// identical output.
+/// identical output. With `vec` set and a lane width available for `u`
+/// ({4, 8}) the same expressions run on the [`crate::engine::simd`]
+/// register backends, which is still bitwise identical (per-lane IEEE
+/// ops, same order).
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn conv_mm_packed_row(
@@ -799,9 +825,38 @@ fn conv_mm_packed_row(
     s: usize,
     wo: usize,
     relu: bool,
+    vec: bool,
     scratch: &mut [f32],
 ) {
     debug_assert_eq!(row.len(), wo * u);
+    if vec && u == 4 {
+        // `u = 4` tap expression carries no leading zero (ZS = false).
+        #[cfg(target_arch = "x86_64")]
+        if simd::enabled() {
+            packed_row_lanes::<simd::SseF32x4, false>(
+                x, w_pack, b_mm, row, ms, oh, cb, hp, wp, k, s, wo, relu,
+            );
+            return;
+        }
+        packed_row_lanes::<simd::ScalarF32x4, false>(
+            x, w_pack, b_mm, row, ms, oh, cb, hp, wp, k, s, wo, relu,
+        );
+        return;
+    }
+    if vec && u == 8 {
+        #[cfg(target_arch = "x86_64")]
+        if simd::avx() {
+            // SAFETY: `simd::avx()` verified AVX support at runtime.
+            unsafe {
+                packed_row_x8_avx(x, w_pack, b_mm, row, ms, oh, cb, hp, wp, k, s, wo, relu);
+            }
+            return;
+        }
+        packed_row_lanes::<simd::ScalarF32x8, true>(
+            x, w_pack, b_mm, row, ms, oh, cb, hp, wp, k, s, wo, relu,
+        );
+        return;
+    }
     if u == 4 {
         conv_mm_packed_row_u4(x, w_pack, b_mm, row, ms, oh, cb, hp, wp, k, s, wo, relu);
         return;
@@ -824,17 +879,16 @@ fn conv_mm_packed_row(
                 let ih = oh * s + kh;
                 let x_row = &x[((cs * hp + ih) * wp) * u..((cs * hp + ih) * wp + wp) * u];
                 for kw in 0..k {
-                    let tap = &w_pack[w_off..w_off + u * u]; // [ol][il], contiguous
+                    let tap = &w_pack[w_off..w_off + u * u]; // [il][ol], contiguous
                     w_off += u * u;
                     for (j, a) in acc.chunks_exact_mut(u).enumerate() {
                         // One u-wide superword load of input lanes (Fig. 6).
                         let x0 = ((ow0 + j) * s + kw) * u;
                         let xv = &x_row[x0..x0 + u];
                         for (ol, av) in a.iter_mut().enumerate() {
-                            let wv = &tap[ol * u..(ol + 1) * u];
                             let mut dot = 0.0f32;
-                            for (xl, wl) in xv.iter().zip(wv) {
-                                dot += xl * wl;
+                            for (il, xl) in xv.iter().enumerate() {
+                                dot += xl * tap[il * u + ol];
                             }
                             *av += dot;
                         }
@@ -852,6 +906,108 @@ fn conv_mm_packed_row(
             }
         }
     }
+}
+
+/// One output row on the [`F32Lanes`] abstraction, `V::N == u`. Each
+/// input lane's `u` weights are one contiguous register load from the
+/// input-lane-major tap block; the accumulator tile is `OW_TILE`
+/// registers. `ZS` mirrors the matching scalar expression's leading
+/// zero: the generic-u dot starts from `0.0` (`ZS = true`, which
+/// canonicalises a leading `-0.0` product), the `u = 4` expression does
+/// not (`ZS = false`). Per-lane op order is identical to the scalar
+/// kernels, so output is bitwise identical on every backend.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn packed_row_lanes<V: F32Lanes, const ZS: bool>(
+    x: &[f32],
+    w_pack: &[f32],
+    b_mm: &[f32],
+    row: &mut [f32],
+    ms: usize,
+    oh: usize,
+    cb: usize,
+    hp: usize,
+    wp: usize,
+    k: usize,
+    s: usize,
+    wo: usize,
+    relu: bool,
+) {
+    let u = V::N;
+    let bias = V::load(&b_mm[ms * u..]);
+    let panel0 = ms * cb * k * k * u * u;
+    let mut ow0 = 0;
+    while ow0 < wo {
+        let tile_len = OW_TILE.min(wo - ow0);
+        let mut acc = [bias; OW_TILE];
+        let mut w_off = panel0;
+        for cs in 0..cb {
+            for kh in 0..k {
+                let ih = oh * s + kh;
+                let x_row = &x[((cs * hp + ih) * wp) * u..((cs * hp + ih) * wp + wp) * u];
+                for kw in 0..k {
+                    let tap = &w_pack[w_off..w_off + u * u];
+                    w_off += u * u;
+                    // Hoist the tap block into registers once per tap.
+                    let mut cols = [V::zero(); 8];
+                    for (il, c) in cols.iter_mut().take(u).enumerate() {
+                        *c = V::load(&tap[il * u..]);
+                    }
+                    let mut xoff = (ow0 * s + kw) * u;
+                    for a in acc.iter_mut().take(tile_len) {
+                        let xv = &x_row[xoff..xoff + u];
+                        let mut sum = V::splat(xv[0]).mul(cols[0]);
+                        if ZS {
+                            sum = V::zero().add(sum);
+                        }
+                        for (il, &xl) in xv.iter().enumerate().skip(1) {
+                            sum = sum.add(V::splat(xl).mul(cols[il]));
+                        }
+                        *a = a.add(sum);
+                        xoff += s * u;
+                    }
+                }
+            }
+        }
+        for (i, a) in acc.iter().take(tile_len).enumerate() {
+            a.store(&mut row[(ow0 + i) * u..]);
+        }
+        ow0 += tile_len;
+    }
+    if relu {
+        for a in row.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+}
+
+/// AVX entry for the `u = 8` lanes kernel. Only called when
+/// [`simd::avx`] reported support — the `#[target_feature]` wrapper is
+/// what lets the compiler actually emit 256-bit ops for the generic
+/// body.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn packed_row_x8_avx(
+    x: &[f32],
+    w_pack: &[f32],
+    b_mm: &[f32],
+    row: &mut [f32],
+    ms: usize,
+    oh: usize,
+    cb: usize,
+    hp: usize,
+    wp: usize,
+    k: usize,
+    s: usize,
+    wo: usize,
+    relu: bool,
+) {
+    packed_row_lanes::<simd::AvxF32x8, true>(
+        x, w_pack, b_mm, row, ms, oh, cb, hp, wp, k, s, wo, relu,
+    );
 }
 
 /// `u = 4` packed fast path: register accumulator tile + one contiguous
@@ -897,10 +1053,13 @@ fn conv_mm_packed_row_u4(
                     let mut xoff = (ow0 * s + kw) * U;
                     for a in acc.iter_mut().take(tile_len) {
                         let xv: [f32; U] = x_row[xoff..xoff + U].try_into().unwrap();
-                        // 16 multiply-accumulates on registers (Fig. 6).
+                        // 16 multiply-accumulates on registers (Fig. 6);
+                        // the tap block is [il][ol], stride U per il.
                         for (ol, av) in a.iter_mut().enumerate() {
-                            let t = &tap[ol * U..(ol + 1) * U];
-                            *av += xv[0] * t[0] + xv[1] * t[1] + xv[2] * t[2] + xv[3] * t[3];
+                            *av += xv[0] * tap[ol]
+                                + xv[1] * tap[U + ol]
+                                + xv[2] * tap[2 * U + ol]
+                                + xv[3] * tap[3 * U + ol];
                         }
                         xoff += s * U;
                     }
@@ -917,6 +1076,337 @@ fn conv_mm_packed_row_u4(
             if *a < 0.0 {
                 *a = 0.0;
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized int8 packed kernels (ArithMode::QuantI8)
+// ---------------------------------------------------------------------------
+
+/// Packed-panel conv over symmetric-int8 operands — the
+/// [`ArithMode::QuantI8`](crate::engine::mode::ArithMode) hot path.
+/// Same macro-item space, tiling, and dispatch as
+/// [`conv_mm_packed_core`]; operands are `i8` (weights quantized and
+/// packed at plan compile, activations quantized per image by the
+/// executor), products accumulate in widening `i32` (exact: worst-case
+/// `cb*k*k*u * 127^2` stays far below `i32::MAX` for any real layer),
+/// and each output element requantizes on store as
+/// `acc * x_scales[row] * w_scale + bias` (then ReLU). `scratch` is
+/// accepted for dispatch symmetry but unused — accumulators live in
+/// registers.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_i8_packed_core(
+    xq: &[i8],
+    x_scales: &[f32],
+    x_stride: usize,
+    hp: usize,
+    wp: usize,
+    cb: usize,
+    u: usize,
+    w_pack: &[i8],
+    w_scale: f32,
+    b_mm: &[f32],
+    out: &mut [f32],
+    mb: usize,
+    k: usize,
+    s: usize,
+    ho: usize,
+    wo: usize,
+    relu: bool,
+    threads: usize,
+    rows: usize,
+    tile: ConvTiling,
+    place: Option<usize>,
+    scratch: &mut [Vec<f32>],
+) {
+    let out_row_len = wo * u;
+    let x_len = cb * hp * wp * u;
+    let ConvTiling { mut tm, th } = tile.clamped(mb, ho);
+    while tm > 1 && rows * ceil_div(mb, tm) < threads {
+        tm = ceil_div(tm, 2);
+    }
+    let n_mt = ceil_div(mb, tm);
+    let items = rows * n_mt;
+    let total = rows * mb * ho * out_row_len;
+    debug_assert!(x_stride >= x_len, "conv_i8_packed_core: x stride");
+    debug_assert!(x_scales.len() >= rows, "conv_i8_packed_core: scales len");
+    debug_assert!(out.len() >= total, "conv_i8_packed_core: out len");
+    let out = &mut out[..total];
+    let vec = simd::enabled();
+    let g = PackedGeo { hp, wp, cb, u, mb, k, s, ho, wo, relu, vec, tm, th, n_mt };
+    if threads <= 1 || items <= 1 {
+        packed_i8_macro_items(
+            0..items, out, xq, x_scales, x_stride, x_len, w_pack, w_scale, b_mm, g,
+        );
+        return;
+    }
+    let offset_of = |i: usize| (i / n_mt * mb + (i % n_mt) * tm) * ho * out_row_len;
+    let body = |range: Range<usize>, slice: &mut [f32], _sc: &mut [f32]| {
+        packed_i8_macro_items(range, slice, xq, x_scales, x_stride, x_len, w_pack, w_scale, b_mm, g);
+    };
+    match place {
+        Some(ws_bytes) => parallel_for_macro_slices_placed(
+            items,
+            threads,
+            ws_bytes <= ConvTiling::L2_BYTES,
+            out,
+            &offset_of,
+            scratch,
+            &body,
+        ),
+        None => parallel_for_macro_slices(items, threads, out, &offset_of, scratch, &body),
+    }
+}
+
+/// Walk a contiguous range of quantized macro items — the i8 analogue
+/// of [`packed_macro_items`]; each image row carries its own activation
+/// scale.
+#[allow(clippy::too_many_arguments)]
+fn packed_i8_macro_items(
+    range: Range<usize>,
+    slice: &mut [f32],
+    xq: &[i8],
+    x_scales: &[f32],
+    x_stride: usize,
+    x_len: usize,
+    w_pack: &[i8],
+    w_scale: f32,
+    b_mm: &[f32],
+    g: PackedGeo,
+) {
+    let out_row_len = g.wo * g.u;
+    let mut off = 0usize;
+    for item in range {
+        let (r, t) = (item / g.n_mt, item % g.n_mt);
+        let sc = x_scales[r] * w_scale;
+        let ms0 = t * g.tm;
+        let tm_eff = g.tm.min(g.mb - ms0);
+        let xi = &xq[r * x_stride..][..x_len];
+        let block_len = tm_eff * g.ho * out_row_len;
+        let block = &mut slice[off..off + block_len];
+        let mut oh0 = 0;
+        while oh0 < g.ho {
+            let th_eff = g.th.min(g.ho - oh0);
+            for oh in oh0..oh0 + th_eff {
+                for mi in 0..tm_eff {
+                    let ms = ms0 + mi;
+                    let row = &mut block[(mi * g.ho + oh) * out_row_len..][..out_row_len];
+                    conv_i8_packed_row(xi, w_pack, b_mm, row, ms, oh, sc, g);
+                }
+            }
+            oh0 += th_eff;
+        }
+        off += block_len;
+    }
+}
+
+/// One quantized output row. Integer arithmetic is exact, so backend
+/// choice (SSE2 vs scalar fallback) can never change results — the
+/// dispatch here is purely a speed switch.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn conv_i8_packed_row(
+    x: &[i8],
+    w_pack: &[i8],
+    b_mm: &[f32],
+    row: &mut [f32],
+    ms: usize,
+    oh: usize,
+    sc: f32,
+    g: PackedGeo,
+) {
+    match g.u {
+        4 => {
+            #[cfg(target_arch = "x86_64")]
+            if g.vec {
+                i8_row_u4::<simd::SseI16x8>(x, w_pack, b_mm, row, ms, oh, sc, g);
+                return;
+            }
+            i8_row_u4::<simd::ScalarI16x8>(x, w_pack, b_mm, row, ms, oh, sc, g);
+        }
+        8 => {
+            #[cfg(target_arch = "x86_64")]
+            if g.vec {
+                i8_row_u8::<simd::SseI16x8>(x, w_pack, b_mm, row, ms, oh, sc, g);
+                return;
+            }
+            i8_row_u8::<simd::ScalarI16x8>(x, w_pack, b_mm, row, ms, oh, sc, g);
+        }
+        _ => i8_row_generic(x, w_pack, b_mm, row, ms, oh, sc, g),
+    }
+}
+
+/// `u = 4` quantized row: the 16-byte tap block holds input lanes
+/// {0, 1} in its first 8 bytes and {2, 3} in its second, so two
+/// [`I8Dot::from_i8`] loads plus two [`I8Dot::splat_pair`] broadcasts
+/// cover the whole `4 x 4` tap; the two 4-lane halves of each `i32x8`
+/// accumulator fold together at requantize time.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn i8_row_u4<D: I8Dot>(
+    x: &[i8],
+    w_pack: &[i8],
+    b_mm: &[f32],
+    row: &mut [f32],
+    ms: usize,
+    oh: usize,
+    sc: f32,
+    g: PackedGeo,
+) {
+    const U: usize = 4;
+    let PackedGeo { hp, wp, cb, k, s, wo, relu, .. } = g;
+    let bias = &b_mm[ms * U..(ms + 1) * U];
+    let panel0 = ms * cb * k * k * U * U;
+    let mut ow0 = 0;
+    while ow0 < wo {
+        let tile_len = OW_TILE.min(wo - ow0);
+        let mut acc = [D::acc_zero(); OW_TILE];
+        let mut w_off = panel0;
+        for cs in 0..cb {
+            for kh in 0..k {
+                let ih = oh * s + kh;
+                let x_row = &x[((cs * hp + ih) * wp) * U..((cs * hp + ih) * wp + wp) * U];
+                for kw in 0..k {
+                    let tap = &w_pack[w_off..w_off + U * U];
+                    w_off += U * U;
+                    let w01 = D::from_i8(&tap[0..8]);
+                    let w23 = D::from_i8(&tap[8..16]);
+                    let mut xoff = (ow0 * s + kw) * U;
+                    for a in acc.iter_mut().take(tile_len) {
+                        let xp01 = D::splat_pair(x_row[xoff], x_row[xoff + 1]);
+                        let xp23 = D::splat_pair(x_row[xoff + 2], x_row[xoff + 3]);
+                        *a = D::acc_add(*a, w01.mul(xp01));
+                        *a = D::acc_add(*a, w23.mul(xp23));
+                        xoff += s * U;
+                    }
+                }
+            }
+        }
+        for (i, a) in acc.iter().take(tile_len).enumerate() {
+            let v = D::acc_get(*a);
+            let o = &mut row[(ow0 + i) * U..(ow0 + i + 1) * U];
+            for (ol, ov) in o.iter_mut().enumerate() {
+                let q = v[ol] + v[ol + 4];
+                *ov = q as f32 * sc + bias[ol];
+            }
+        }
+        ow0 += tile_len;
+    }
+    if relu {
+        for a in row.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+}
+
+/// `u = 8` quantized row: one [`I8Dot::from_i8`] load per input lane
+/// (the 8 output-lane weights of that lane), broadcast-multiply, and
+/// the accumulator's 8 lanes map straight onto the 8 output lanes.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn i8_row_u8<D: I8Dot>(
+    x: &[i8],
+    w_pack: &[i8],
+    b_mm: &[f32],
+    row: &mut [f32],
+    ms: usize,
+    oh: usize,
+    sc: f32,
+    g: PackedGeo,
+) {
+    const U: usize = 8;
+    let PackedGeo { hp, wp, cb, k, s, wo, relu, .. } = g;
+    let bias = &b_mm[ms * U..(ms + 1) * U];
+    let panel0 = ms * cb * k * k * U * U;
+    let mut ow0 = 0;
+    while ow0 < wo {
+        let tile_len = OW_TILE.min(wo - ow0);
+        let mut acc = [D::acc_zero(); OW_TILE];
+        let mut w_off = panel0;
+        for cs in 0..cb {
+            for kh in 0..k {
+                let ih = oh * s + kh;
+                let x_row = &x[((cs * hp + ih) * wp) * U..((cs * hp + ih) * wp + wp) * U];
+                for kw in 0..k {
+                    let tap = &w_pack[w_off..w_off + U * U];
+                    w_off += U * U;
+                    let mut cols = [D::splat(0); U];
+                    for (il, c) in cols.iter_mut().enumerate() {
+                        *c = D::from_i8(&tap[il * U..il * U + U]);
+                    }
+                    let mut xoff = (ow0 * s + kw) * U;
+                    for a in acc.iter_mut().take(tile_len) {
+                        for (il, c) in cols.iter().enumerate() {
+                            *a = D::acc_add(*a, c.mul(D::splat(x_row[xoff + il])));
+                        }
+                        xoff += s * U;
+                    }
+                }
+            }
+        }
+        for (i, a) in acc.iter().take(tile_len).enumerate() {
+            let v = D::acc_get(*a);
+            let o = &mut row[(ow0 + i) * U..(ow0 + i + 1) * U];
+            for (ol, ov) in o.iter_mut().enumerate() {
+                *ov = v[ol] as f32 * sc + bias[ol];
+            }
+        }
+        ow0 += tile_len;
+    }
+    if relu {
+        for a in row.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+}
+
+/// Scalar-i32 quantized row for lane widths without a register scheme
+/// (`u` in {1, 2}; any `u <= 16` accepted for tests). Re-streams the
+/// panel per output pixel — acceptable for the narrow-u fallback.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn i8_row_generic(
+    x: &[i8],
+    w_pack: &[i8],
+    b_mm: &[f32],
+    row: &mut [f32],
+    ms: usize,
+    oh: usize,
+    sc: f32,
+    g: PackedGeo,
+) {
+    let PackedGeo { hp, wp, cb, u, k, s, wo, relu, .. } = g;
+    assert!(u <= 16, "i8_row_generic: u must be <= 16");
+    let bias = &b_mm[ms * u..(ms + 1) * u];
+    let panel0 = ms * cb * k * k * u * u;
+    for ow in 0..wo {
+        let mut acc = [0i32; 16];
+        let mut w_off = panel0;
+        for cs in 0..cb {
+            for kh in 0..k {
+                let ih = oh * s + kh;
+                let x_row = &x[((cs * hp + ih) * wp) * u..((cs * hp + ih) * wp + wp) * u];
+                for kw in 0..k {
+                    let tap = &w_pack[w_off..w_off + u * u];
+                    w_off += u * u;
+                    let x0 = (ow * s + kw) * u;
+                    for (il, &xl) in x_row[x0..x0 + u].iter().enumerate() {
+                        let xi = xl as i32;
+                        for (ol, a) in acc[..u].iter_mut().enumerate() {
+                            *a += xi * tap[il * u + ol] as i32;
+                        }
+                    }
+                }
+            }
+        }
+        for (ol, a) in acc[..u].iter().enumerate() {
+            let v = *a as f32 * sc + bias[ol];
+            row[ow * u + ol] = if relu && v < 0.0 { 0.0 } else { v };
         }
     }
 }
@@ -1206,9 +1696,12 @@ mod tests {
 
     #[test]
     fn packed_kernel_bitwise_matches_unpacked() {
-        // Every geometry class x u x threads x tile shape (remainder
-        // tiles, oversized tiles, row-walk, cost model) must be bitwise
-        // identical to the unpacked kernel on the same baked weights.
+        // Every geometry class x u x mode x threads x tile shape
+        // (remainder tiles, oversized tiles, row-walk, cost model) must
+        // be bitwise identical to the unpacked kernel on the same baked
+        // weights. Precise exercises the scalar row kernels, Imprecise
+        // the vectorised ones (lane backends or scalar fallback,
+        // depending on CAPPUCCINO_SIMD) — both must match the oracle.
         let mut rng = Rng::new(6);
         for (i, case) in cases().iter().enumerate() {
             let Case { c, h, w, m, k, s, p } = *case;
@@ -1217,35 +1710,199 @@ mod tests {
                 let weights = rng.normal_vec(m * c * k * k);
                 let bias = rng.normal_vec(m);
                 let mm_in = MapTensor::from_nchw(&input, c, h, w, u);
-                let w_mm = cast_weights(
-                    &layout::weights_to_mapmajor(&weights, m, c, k, u),
-                    ArithMode::Imprecise,
-                );
                 let b_mm = layout::bias_to_mapmajor(&bias, u);
                 let (mb, cb) = (ceil_div(m, u), ceil_div(c, u));
-                let w_pack = layout::pack_conv_panels(&w_mm, mb, cb, k, u);
                 let ho = (h + 2 * p - k) / s + 1;
-                for threads in [1usize, 3] {
-                    let want = conv_mm(
-                        &mm_in, &w_mm, &b_mm, m, k, s, p, true, ArithMode::Imprecise, threads,
-                    );
-                    for tile in [
-                        ConvTiling { tm: 1, th: 1 },
-                        ConvTiling { tm: 2, th: 3 },
-                        ConvTiling { tm: 100, th: 100 },
-                        ConvTiling::choose(cb, w + 2 * p, u, k, s, mb, ho),
-                    ] {
-                        let got = conv_mm_packed(
-                            &mm_in, &w_pack, &b_mm, m, k, s, p, true,
-                            ArithMode::Imprecise, threads, tile,
-                        );
-                        assert_eq!(
-                            got.data, want.data,
-                            "case {i} u={u} threads={threads} tile={tile:?}"
-                        );
+                for mode in [ArithMode::Precise, ArithMode::Imprecise] {
+                    let w_mm =
+                        cast_weights(&layout::weights_to_mapmajor(&weights, m, c, k, u), mode);
+                    let w_pack = layout::pack_conv_panels(&w_mm, mb, cb, k, u);
+                    for threads in [1usize, 3] {
+                        let want =
+                            conv_mm(&mm_in, &w_mm, &b_mm, m, k, s, p, true, mode, threads);
+                        for tile in [
+                            ConvTiling { tm: 1, th: 1 },
+                            ConvTiling { tm: 2, th: 3 },
+                            ConvTiling { tm: 100, th: 100 },
+                            ConvTiling::choose(cb, w + 2 * p, u, k, s, mb, ho),
+                        ] {
+                            let got = conv_mm_packed(
+                                &mm_in, &w_pack, &b_mm, m, k, s, p, true, mode, threads, tile,
+                            );
+                            assert_eq!(
+                                got.data, want.data,
+                                "case {i} u={u} mode={mode} threads={threads} tile={tile:?}"
+                            );
+                        }
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn vector_and_scalar_row_kernels_bitwise_agree() {
+        // Directly flip the `vec` kernel-selection flag on the packed
+        // core: at u = 4 and u = 8 (the widths with lane backends) the
+        // register-tile kernels must be bitwise identical to the scalar
+        // row kernels on the same packed panels.
+        let mut rng = Rng::new(7);
+        for u in [4usize, 8] {
+            let (c, h, w, m, k, s, p) = (6, 10, 9, 12, 3, 1, 1);
+            let input = rng.normal_vec(c * h * w);
+            let weights = rng.normal_vec(m * c * k * k);
+            let bias = rng.normal_vec(m);
+            let mm_in = MapTensor::from_nchw(&input, c, h, w, u).pad_spatial(p);
+            let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+            let b_mm = layout::bias_to_mapmajor(&bias, u);
+            let (mb, cb) = (ceil_div(m, u), ceil_div(c, u));
+            let w_pack = layout::pack_conv_panels(&w_mm, mb, cb, k, u);
+            let (hp, wp) = (mm_in.h, mm_in.w);
+            let (ho, wo) = ((hp - k) / s + 1, (wp - k) / s + 1);
+            let row_len = (u * u).max(OW_TILE * u);
+            let mut runs = [vec![0.0f32; mb * u * ho * wo], vec![0.0f32; mb * u * ho * wo]];
+            for (vec, out) in [false, true].into_iter().zip(runs.iter_mut()) {
+                let mut scratch = row_scratch(2, row_len);
+                conv_mm_packed_core(
+                    &mm_in.data,
+                    cb * hp * wp * u,
+                    hp,
+                    wp,
+                    cb,
+                    u,
+                    &w_pack,
+                    &b_mm,
+                    out,
+                    mb,
+                    k,
+                    s,
+                    ho,
+                    wo,
+                    true,
+                    vec,
+                    2,
+                    1,
+                    ConvTiling { tm: 2, th: 3 },
+                    None,
+                    &mut scratch,
+                );
+            }
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&runs[0]), bits(&runs[1]), "u={u}");
+        }
+    }
+
+    #[test]
+    fn i8_row_backends_agree_and_track_f32() {
+        // Integer kernels are exact, so SSE and the scalar fallback must
+        // agree bitwise; and the requantized output must track the f32
+        // kernel within quantization error.
+        let mut rng = Rng::new(8);
+        for u in [1usize, 2, 4, 8] {
+            let (c, h, w, m, k, s, p) = (5, 9, 8, 10, 3, 1, 1);
+            let input = rng.normal_vec(c * h * w);
+            let weights = rng.normal_vec(m * c * k * k);
+            let bias = rng.normal_vec(m);
+            let mm_in = MapTensor::from_nchw(&input, c, h, w, u).pad_spatial(p);
+            let w_mm = layout::weights_to_mapmajor(&weights, m, c, k, u);
+            let b_mm = layout::bias_to_mapmajor(&bias, u);
+            let (mb, cb) = (ceil_div(m, u), ceil_div(c, u));
+            let (hp, wp) = (mm_in.h, mm_in.w);
+            let (ho, wo) = ((hp - k) / s + 1, (wp - k) / s + 1);
+            let (wq, w_scale) = crate::engine::mode::quantize_symmetric(&w_mm);
+            let w_pack_q = layout::pack_conv_panels_i8(&wq, mb, cb, k, u);
+            let (xq, x_scale) = crate::engine::mode::quantize_symmetric(&mm_in.data);
+            let mut out_q = vec![0.0f32; mb * u * ho * wo];
+            let mut scratch = row_scratch(2, 0);
+            conv_i8_packed_core(
+                &xq,
+                &[x_scale],
+                cb * hp * wp * u,
+                hp,
+                wp,
+                cb,
+                u,
+                &w_pack_q,
+                w_scale,
+                &b_mm,
+                &mut out_q,
+                mb,
+                k,
+                s,
+                ho,
+                wo,
+                true,
+                2,
+                1,
+                ConvTiling { tm: 2, th: 2 },
+                None,
+                &mut scratch,
+            );
+            // Cross-backend: run every row through both I8Dot backends.
+            #[cfg(target_arch = "x86_64")]
+            if u == 4 || u == 8 {
+                let g = PackedGeo {
+                    hp,
+                    wp,
+                    cb,
+                    u,
+                    mb,
+                    k,
+                    s,
+                    ho,
+                    wo,
+                    relu: true,
+                    vec: true,
+                    tm: 1,
+                    th: 1,
+                    n_mt: mb,
+                };
+                let sc = x_scale * w_scale;
+                let mut a = vec![0.0f32; wo * u];
+                let mut b = vec![0.0f32; wo * u];
+                for ms in 0..mb {
+                    for oh in 0..ho {
+                        if u == 4 {
+                            i8_row_u4::<crate::engine::simd::ScalarI16x8>(
+                                &xq, &w_pack_q, &b_mm, &mut a, ms, oh, sc, g,
+                            );
+                            i8_row_u4::<crate::engine::simd::SseI16x8>(
+                                &xq, &w_pack_q, &b_mm, &mut b, ms, oh, sc, g,
+                            );
+                        } else {
+                            i8_row_u8::<crate::engine::simd::ScalarI16x8>(
+                                &xq, &w_pack_q, &b_mm, &mut a, ms, oh, sc, g,
+                            );
+                            i8_row_u8::<crate::engine::simd::SseI16x8>(
+                                &xq, &w_pack_q, &b_mm, &mut b, ms, oh, sc, g,
+                            );
+                        }
+                        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                        assert_eq!(bits(&a), bits(&b), "u={u} ms={ms} oh={oh}");
+                    }
+                }
+            }
+            // Accuracy: requantized output tracks the f32 kernel within
+            // quantization error (coarse bound; property tests gate the
+            // end-to-end accuracy via inexact::evaluate_accuracy).
+            let f32_out = conv_mm(
+                &MapTensor::from_nchw(&input, c, h, w, u),
+                &w_mm,
+                &b_mm,
+                m,
+                k,
+                s,
+                p,
+                true,
+                ArithMode::Precise,
+                1,
+            );
+            let max_d = out_q
+                .iter()
+                .zip(&f32_out.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_d < 0.35, "u={u}: int8 drifted too far from f32: {max_d}");
         }
     }
 

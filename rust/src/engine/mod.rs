@@ -24,8 +24,16 @@
 //! packed conv macro items across clusters — placement moves work
 //! between cores, never changes what is computed.
 //!
+//! Inner loops run on the [`simd`] lane abstraction: explicit-width
+//! `f32x4`/`f32x8` and `i16x8`/`i32x8` registers with intrinsics
+//! backends behind target-feature detection and a bitwise-equivalent
+//! scalar fallback (`CAPPUCCINO_SIMD=0` forces it). The quantized
+//! [`mode::ArithMode::QuantI8`] mode rides the same packed panels with
+//! `i8` weights and widening `i32` accumulation.
+//!
 //! The whole tuning surface — per-layer parallelism, packing, tiling,
-//! arithmetic mode, placement, plus the pool settings — is the
+//! arithmetic mode, placement, vector width, plus the pool settings —
+//! is the
 //! [`schedule::Schedule`] IR: every `PlanBuilder` fluent setter lowers
 //! into one, [`plan::PlanBuilder::schedule`] accepts a heterogeneous
 //! one directly, and schedules serialize to the `schedule.json`
@@ -39,6 +47,7 @@ pub mod ops;
 pub mod parallel;
 pub mod plan;
 pub mod schedule;
+pub mod simd;
 pub mod tensor;
 pub mod topology;
 

@@ -8,9 +8,22 @@
 //!   `-0.0` canonicalised to `+0.0`.
 //! * [`ArithMode::Imprecise`] — operands additionally rounded to
 //!   bfloat16 before multiplication (f32 accumulation) — the TPU-MXU
-//!   analogue of RenderScript's fast vectorised mode. Only this mode
-//!   unlocks the vectorised inner loop, mirroring "vector processing is
-//!   only available under imprecise computing modes".
+//!   analogue of RenderScript's fast vectorised mode.
+//! * [`ArithMode::QuantI8`] — the real quantized mode: per-layer
+//!   symmetric `i8` (scale = `amax/127`, zero-point 0). Weights are
+//!   quantized and baked into the packed panels at plan-compile time,
+//!   activations are quantized dynamically per image, kernels
+//!   accumulate in widening `i32` and requantize back to f32 on store
+//!   (`acc * s_x * s_w + bias`). Packed-plan only: the legacy
+//!   executors and the f32 parity oracles never see it, so it is
+//!   excluded from [`ArithMode::ALL`].
+//!
+//! The non-Precise modes unlock the vectorised inner loops
+//! ([`crate::engine::simd`]), mirroring "vector processing is only
+//! available under imprecise computing modes" — [`ArithMode::Precise`]
+//! always takes the scalar path. For the f32 modes this is purely a
+//! speed choice: the vector kernels are bitwise identical to their
+//! scalar oracles.
 
 use std::fmt;
 use std::str::FromStr;
@@ -24,9 +37,20 @@ pub enum ArithMode {
     Precise,
     Relaxed,
     Imprecise,
+    /// Symmetric per-layer int8: quantized weights baked into the
+    /// packed panels, dynamic activation quantization, widening `i32`
+    /// accumulation. Lowered only by the compiled plan's packed path —
+    /// shapes that cannot be lane-padded are rejected with
+    /// [`crate::Error::Config`] at plan compile.
+    QuantI8,
 }
 
 impl ArithMode {
+    /// The f32 modes — every mode the legacy executors and the bitwise
+    /// parity oracles support. [`ArithMode::QuantI8`] is deliberately
+    /// excluded: it lowers only through the packed compiled plan and is
+    /// accuracy-gated (tolerance-based, not bitwise) via
+    /// `inexact::evaluate_accuracy`.
     pub const ALL: [ArithMode; 3] = [ArithMode::Precise, ArithMode::Relaxed, ArithMode::Imprecise];
 
     pub fn as_str(&self) -> &'static str {
@@ -34,13 +58,21 @@ impl ArithMode {
             ArithMode::Precise => "precise",
             ArithMode::Relaxed => "relaxed",
             ArithMode::Imprecise => "imprecise",
+            ArithMode::QuantI8 => "quant_i8",
         }
     }
 
     /// Does this mode unlock the vectorised inner loop? (Paper: vector
-    /// processing is only available under the non-IEEE modes.)
+    /// processing is only available under the non-IEEE modes.) This is
+    /// not cosmetic: the plan lowerer consults it when selecting the
+    /// kernel, so Precise layers always run the scalar path.
     pub fn vectorized(&self) -> bool {
         !matches!(self, ArithMode::Precise)
+    }
+
+    /// Is this the quantized-int8 mode?
+    pub fn quantized(&self) -> bool {
+        matches!(self, ArithMode::QuantI8)
     }
 }
 
@@ -58,6 +90,7 @@ impl FromStr for ArithMode {
             "precise" => Ok(ArithMode::Precise),
             "relaxed" => Ok(ArithMode::Relaxed),
             "imprecise" => Ok(ArithMode::Imprecise),
+            "quant_i8" => Ok(ArithMode::QuantI8),
             other => Err(crate::Error::Invalid(format!("unknown arithmetic mode {other:?}"))),
         }
     }
@@ -89,7 +122,38 @@ pub fn mode_cast(x: f32, mode: ArithMode) -> f32 {
         ArithMode::Precise => x,
         ArithMode::Relaxed => flush_denormal(x),
         ArithMode::Imprecise => bf16_round(flush_denormal(x)),
+        // Quantization is not an elementwise f32 -> f32 map (it needs
+        // the tensor's amax); the QuantI8 kernels own it. The f32 view
+        // of a QuantI8 operand is the identity.
+        ArithMode::QuantI8 => x,
     }
+}
+
+/// Symmetric per-tensor i8 quantization: scale = `amax/127`,
+/// zero-point 0, round-to-nearest. Returns `(values, scale)`;
+/// an all-zero (or non-finite-free empty) tensor gets scale 1.0.
+pub fn quantize_symmetric(src: &[f32]) -> (Vec<i8>, f32) {
+    let mut q = vec![0i8; src.len()];
+    let scale = quantize_symmetric_into(src, &mut q);
+    (q, scale)
+}
+
+/// In-place variant of [`quantize_symmetric`] — the plan executor's
+/// per-image activation quantization path (arena scratch, zero
+/// allocation). Returns the scale.
+pub(crate) fn quantize_symmetric_into(src: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let amax = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax <= 0.0 || !amax.is_finite() {
+        dst.fill(0);
+        return 1.0;
+    }
+    let inv = 127.0 / amax;
+    for (d, &s) in dst.iter_mut().zip(src) {
+        // `as` saturates, so the max-magnitude element maps to +-127.
+        *d = (s * inv).round() as i8;
+    }
+    amax / 127.0
 }
 
 /// Elementwise `mode_cast` of a whole slice into a caller-owned buffer
@@ -156,10 +220,12 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for m in ArithMode::ALL {
+        for m in ArithMode::ALL.into_iter().chain([ArithMode::QuantI8]) {
             assert_eq!(m.as_str().parse::<ArithMode>().unwrap(), m);
         }
         assert!("fast".parse::<ArithMode>().is_err());
+        // ALL stays the f32 / legacy-oracle set.
+        assert!(!ArithMode::ALL.contains(&ArithMode::QuantI8));
     }
 
     #[test]
@@ -205,5 +271,24 @@ mod tests {
         assert!(!ArithMode::Precise.vectorized());
         assert!(ArithMode::Relaxed.vectorized());
         assert!(ArithMode::Imprecise.vectorized());
+        assert!(ArithMode::QuantI8.vectorized());
+        assert!(ArithMode::QuantI8.quantized());
+        assert!(!ArithMode::Imprecise.quantized());
+    }
+
+    #[test]
+    fn quantize_symmetric_contract() {
+        // amax element maps to +-127, scale reconstructs within 1/254.
+        let (q, s) = quantize_symmetric(&[0.5, -1.0, 0.25, 0.0]);
+        assert_eq!(s, 1.0 / 127.0);
+        assert_eq!(q, vec![64, -127, 32, 0]);
+        for (&qi, &xi) in q.iter().zip(&[0.5f32, -1.0, 0.25, 0.0]) {
+            assert!((qi as f32 * s - xi).abs() <= s / 2.0 + 1e-7);
+        }
+        // Degenerate tensors quantize to zeros with scale 1.
+        let (q, s) = quantize_symmetric(&[0.0, 0.0]);
+        assert_eq!((q, s), (vec![0, 0], 1.0));
+        let (q, s) = quantize_symmetric(&[f32::INFINITY, 1.0]);
+        assert_eq!((q, s), (vec![0, 0], 1.0));
     }
 }

@@ -12,6 +12,7 @@
 //! activations only; weights must already be in the mode's domain.
 
 use crate::engine::mode::{mode_cast, ArithMode};
+use crate::engine::simd::{self, F32Lanes, I8Dot};
 use crate::engine::tensor::MapTensor;
 
 /// Output spatial size. Shape inference validates `k <= size + 2p`
@@ -278,12 +279,16 @@ pub(crate) fn dense_rows_into(
 /// strictly sequential panel reads, instead of one full `x` pass per
 /// neuron. Per-output accumulation order (columns ascending, bias
 /// last) matches [`dense_into`] exactly — bitwise identical output.
+/// `vec` selects the [`F32Lanes`] register kernel (`DENSE_BLOCK` *is*
+/// the `f32x4` width), which performs the identical per-lane op
+/// sequence — still bitwise identical on every backend.
 pub(crate) fn dense_packed_into(
     x: &[f32],
     w_pack: &[f32],
     b: &[f32],
     o: usize,
     relu: bool,
+    vec: bool,
     out: &mut [f32],
 ) {
     use crate::layout::DENSE_BLOCK as BL;
@@ -299,6 +304,15 @@ pub(crate) fn dense_packed_into(
         for (v, &bv) in out.iter_mut().zip(b) {
             *v = if relu && bv < 0.0 { 0.0 } else { bv };
         }
+        return;
+    }
+    if vec {
+        #[cfg(target_arch = "x86_64")]
+        if simd::enabled() {
+            dense_packed_lanes::<simd::SseF32x4>(x, w_pack, b, o, relu, out);
+            return;
+        }
+        dense_packed_lanes::<simd::ScalarF32x4>(x, w_pack, b, o, relu, out);
         return;
     }
     for (blk, panel) in w_pack.chunks_exact(i * BL).enumerate() {
@@ -321,6 +335,40 @@ pub(crate) fn dense_packed_into(
     }
 }
 
+/// [`dense_packed_into`]'s register kernel: one `f32x4` accumulator per
+/// column block (`V::N == DENSE_BLOCK`), broadcast-multiply per column
+/// — the same `(0 + x0*w0) + x1*w1 + ...` per-lane sequence as the
+/// scalar loop, hence bitwise identical.
+fn dense_packed_lanes<V: F32Lanes>(
+    x: &[f32],
+    w_pack: &[f32],
+    b: &[f32],
+    o: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    use crate::layout::DENSE_BLOCK as BL;
+    let i = x.len();
+    debug_assert_eq!(V::N, BL);
+    for (blk, panel) in w_pack.chunks_exact(i * BL).enumerate() {
+        let o0 = blk * BL;
+        let live = BL.min(o - o0);
+        let mut acc_v = V::zero();
+        for (col, &xv) in x.iter().enumerate() {
+            acc_v = acc_v.add(V::splat(xv).mul(V::load(&panel[col * BL..])));
+        }
+        let mut acc = [0.0f32; BL];
+        acc_v.store(&mut acc);
+        for (ol, &a) in acc.iter().enumerate().take(live) {
+            let mut v = a + b[o0 + ol];
+            if relu && v < 0.0 {
+                v = 0.0;
+            }
+            out[o0 + ol] = v;
+        }
+    }
+}
+
 /// Batched [`dense_packed_into`]: drop-in packed analogue of
 /// [`dense_rows_into`] (same chunking, same bitwise-invisible batching).
 #[allow(clippy::too_many_arguments)]
@@ -332,6 +380,7 @@ pub(crate) fn dense_rows_packed_into(
     b: &[f32],
     o: usize,
     relu: bool,
+    vec: bool,
     out: &mut [f32],
     rows: usize,
     threads: usize,
@@ -341,7 +390,7 @@ pub(crate) fn dense_rows_packed_into(
     if threads <= 1 || rows <= 1 {
         for r in 0..rows {
             let x = &xs[r * x_stride..][..i];
-            dense_packed_into(x, w_pack, b, o, relu, &mut out[r * o..(r + 1) * o]);
+            dense_packed_into(x, w_pack, b, o, relu, vec, &mut out[r * o..(r + 1) * o]);
         }
         return;
     }
@@ -353,7 +402,130 @@ pub(crate) fn dense_rows_packed_into(
         &|range: std::ops::Range<usize>, slice: &mut [f32]| {
             for (j, r) in range.enumerate() {
                 let x = &xs[r * x_stride..][..i];
-                dense_packed_into(x, w_pack, b, o, relu, &mut slice[j * o..(j + 1) * o]);
+                dense_packed_into(x, w_pack, b, o, relu, vec, &mut slice[j * o..(j + 1) * o]);
+            }
+        },
+    );
+}
+
+/// Quantized dense over the same column-blocked panel layout
+/// ([`crate::layout::pack_dense_panels_i8`]): columns are consumed in
+/// pairs — one [`I8Dot::from_i8`] load covers two columns' weight
+/// blocks, [`I8Dot::splat_pair`] broadcasts both activations — with a
+/// scalar-i32 tail for an odd final column. Output requantizes as
+/// `acc * sc + bias` (then ReLU). Integer arithmetic is exact, so
+/// backend choice never changes results.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dense_i8_packed_into(
+    xq: &[i8],
+    w_pack: &[i8],
+    b: &[f32],
+    o: usize,
+    relu: bool,
+    sc: f32,
+    out: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd::enabled() {
+        dense_i8_packed_impl::<simd::SseI16x8>(xq, w_pack, b, o, relu, sc, out);
+        return;
+    }
+    dense_i8_packed_impl::<simd::ScalarI16x8>(xq, w_pack, b, o, relu, sc, out);
+}
+
+fn dense_i8_packed_impl<D: I8Dot>(
+    xq: &[i8],
+    w_pack: &[i8],
+    b: &[f32],
+    o: usize,
+    relu: bool,
+    sc: f32,
+    out: &mut [f32],
+) {
+    use crate::layout::DENSE_BLOCK as BL;
+    let i = xq.len();
+    debug_assert_eq!(
+        w_pack.len(),
+        crate::util::ceil_div(o, BL) * i * BL,
+        "dense_i8_packed_into: weight len"
+    );
+    debug_assert_eq!(b.len(), o, "dense_i8_packed_into: bias len");
+    debug_assert_eq!(out.len(), o);
+    if i == 0 {
+        for (v, &bv) in out.iter_mut().zip(b) {
+            *v = if relu && bv < 0.0 { 0.0 } else { bv };
+        }
+        return;
+    }
+    for (blk, panel) in w_pack.chunks_exact(i * BL).enumerate() {
+        let o0 = blk * BL;
+        let live = BL.min(o - o0);
+        let mut acc8 = D::acc_zero();
+        let mut tail = [0i32; BL];
+        let pairs = i / 2;
+        for c in 0..pairs {
+            let xp = D::splat_pair(xq[2 * c], xq[2 * c + 1]);
+            let w = D::from_i8(&panel[2 * c * BL..2 * c * BL + 2 * BL]);
+            acc8 = D::acc_add(acc8, w.mul(xp));
+        }
+        if i % 2 == 1 {
+            let c = i - 1;
+            let xv = xq[c] as i32;
+            for (ol, t) in tail.iter_mut().enumerate() {
+                *t += xv * panel[c * BL + ol] as i32;
+            }
+        }
+        let v = D::acc_get(acc8);
+        for ol in 0..live {
+            let q = v[ol] + v[ol + BL] + tail[ol];
+            let mut val = q as f32 * sc + b[o0 + ol];
+            if relu && val < 0.0 {
+                val = 0.0;
+            }
+            out[o0 + ol] = val;
+        }
+    }
+}
+
+/// Batched [`dense_i8_packed_into`]: the quantized analogue of
+/// [`dense_rows_packed_into`]; each row carries its own activation
+/// scale (`x_scales[r] * w_scale` is the row's requantize factor).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dense_i8_rows_packed_into(
+    xqs: &[i8],
+    x_scales: &[f32],
+    x_stride: usize,
+    i: usize,
+    w_pack: &[i8],
+    w_scale: f32,
+    b: &[f32],
+    o: usize,
+    relu: bool,
+    out: &mut [f32],
+    rows: usize,
+    threads: usize,
+) {
+    debug_assert!(xqs.len() >= (rows.saturating_sub(1)) * x_stride + i);
+    debug_assert!(x_scales.len() >= rows);
+    debug_assert!(out.len() >= rows * o);
+    if threads <= 1 || rows <= 1 {
+        for r in 0..rows {
+            let x = &xqs[r * x_stride..][..i];
+            let sc = x_scales[r] * w_scale;
+            dense_i8_packed_into(x, w_pack, b, o, relu, sc, &mut out[r * o..(r + 1) * o]);
+        }
+        return;
+    }
+    crate::engine::parallel::parallel_for_slices(
+        rows,
+        threads,
+        o,
+        &mut out[..rows * o],
+        &|range: std::ops::Range<usize>, slice: &mut [f32]| {
+            for (j, r) in range.enumerate() {
+                let x = &xqs[r * x_stride..][..i];
+                let sc = x_scales[r] * w_scale;
+                dense_i8_packed_into(x, w_pack, b, o, relu, sc, &mut slice[j * o..(j + 1) * o]);
             }
         },
     );
@@ -564,6 +736,8 @@ mod tests {
     fn dense_packed_bitwise_matches_unpacked() {
         let mut rng = Rng::new(6);
         // Output counts straddling DENSE_BLOCK boundaries, incl. o < B.
+        // Both the scalar and the register kernel (vec) must be bitwise
+        // identical to the unpacked loop.
         for &(i, o) in &[(32usize, 8usize), (17, 5), (9, 1), (4, 3), (5, 4)] {
             let x = rng.normal_vec(i);
             let w = rng.normal_vec(o * i);
@@ -572,17 +746,78 @@ mod tests {
                 let mut want = vec![0.0f32; o];
                 dense_into(&x, &w, &b, o, relu, &mut want);
                 let packed = crate::layout::pack_dense_panels(&w, o, i);
-                let mut got = vec![0.0f32; o];
-                dense_packed_into(&x, &packed, &b, o, relu, &mut got);
-                assert_eq!(got, want, "i={i} o={o} relu={relu}");
-                // Batched packed rows with threads: still bitwise.
-                let rows = 3;
-                let xs: Vec<f32> = (0..rows).flat_map(|_| x.clone()).collect();
-                let mut rows_out = vec![0.0f32; rows * o];
-                dense_rows_packed_into(&xs, i, i, &packed, &b, o, relu, &mut rows_out, rows, 2);
-                for r in 0..rows {
-                    assert_eq!(&rows_out[r * o..(r + 1) * o], want.as_slice(), "row {r}");
+                for vec_k in [false, true] {
+                    let mut got = vec![0.0f32; o];
+                    dense_packed_into(&x, &packed, &b, o, relu, vec_k, &mut got);
+                    assert_eq!(got, want, "i={i} o={o} relu={relu} vec={vec_k}");
+                    // Batched packed rows with threads: still bitwise.
+                    let rows = 3;
+                    let xs: Vec<f32> = (0..rows).flat_map(|_| x.clone()).collect();
+                    let mut rows_out = vec![0.0f32; rows * o];
+                    dense_rows_packed_into(
+                        &xs, i, i, &packed, &b, o, relu, vec_k, &mut rows_out, rows, 2,
+                    );
+                    for r in 0..rows {
+                        assert_eq!(&rows_out[r * o..(r + 1) * o], want.as_slice(), "row {r}");
+                    }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_i8_backends_agree_and_track_f32() {
+        use crate::engine::mode::quantize_symmetric;
+        let mut rng = Rng::new(7);
+        // Odd i exercises the scalar tail column; o straddles blocks.
+        for &(i, o) in &[(32usize, 8usize), (17, 5), (9, 3), (1, 4)] {
+            let x = rng.normal_vec(i);
+            let w = rng.normal_vec(o * i);
+            let b = rng.normal_vec(o);
+            let (xq, xs) = quantize_symmetric(&x);
+            let (wq, ws) = quantize_symmetric(&w);
+            let packed = crate::layout::pack_dense_panels_i8(&wq, o, i);
+            let sc = xs * ws;
+            let mut got = vec![0.0f32; o];
+            dense_i8_packed_into(&xq, &packed, &b, o, false, sc, &mut got);
+            // Cross-backend: integer kernels are exact.
+            let mut scalar = vec![0.0f32; o];
+            dense_i8_packed_impl::<crate::engine::simd::ScalarI16x8>(
+                &xq, &packed, &b, o, false, sc, &mut scalar,
+            );
+            #[cfg(target_arch = "x86_64")]
+            {
+                let mut sse = vec![0.0f32; o];
+                dense_i8_packed_impl::<crate::engine::simd::SseI16x8>(
+                    &xq, &packed, &b, o, false, sc, &mut sse,
+                );
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&scalar), bits(&sse), "i={i} o={o}");
+            }
+            // Exactness vs a plain i32 reference dot product.
+            for oi in 0..o {
+                let mut acc = 0i64;
+                for c in 0..i {
+                    acc += xq[c] as i64 * wq[oi * i + c] as i64;
+                }
+                let want = acc as i32 as f32 * sc + b[oi];
+                assert_eq!(got[oi].to_bits(), want.to_bits(), "i={i} o={o} oi={oi}");
+            }
+            // Tracks the f32 dense within quantization error.
+            let f32_out = dense(&x, &w, &b, o, false, ArithMode::Precise);
+            for (a, bb) in got.iter().zip(&f32_out) {
+                assert!((a - bb).abs() < 0.3, "{a} vs {bb}");
+            }
+            // Batched rows path agrees with single-row calls.
+            let rows = 3;
+            let xqs: Vec<i8> = (0..rows).flat_map(|_| xq.clone()).collect();
+            let scales = vec![xs; rows];
+            let mut rows_out = vec![0.0f32; rows * o];
+            dense_i8_rows_packed_into(
+                &xqs, &scales, i, i, &packed, ws, &b, o, false, &mut rows_out, rows, 2,
+            );
+            for r in 0..rows {
+                assert_eq!(&rows_out[r * o..(r + 1) * o], got.as_slice(), "row {r}");
             }
         }
     }

@@ -43,6 +43,23 @@
 //! row-walk plan for the ablation bench;
 //! [`PlanBuilder::tiling`] overrides the cost model's tile choice.
 //!
+//! ## Vector kernels and the quantized path
+//!
+//! Non-[`ArithMode::Precise`] packed layers additionally select the
+//! SIMD row kernels ([`crate::engine::simd`]) over the same panels —
+//! the packed layout *is* the vector layout, and the f32 vector
+//! kernels are bitwise identical to their scalar fallback, so kernel
+//! selection (including the per-layer
+//! [`LayerSchedule::vector_width`] override) never perturbs output.
+//! [`ArithMode::QuantI8`] layers go further: their panels are baked as
+//! symmetric **int8** at plan compile (`scale = amax/127`, stored
+//! beside the panel), activations are quantized per image into an `i8`
+//! arena scratch, and the kernels accumulate in widening `i32` and
+//! requantize back to f32 on store. QuantI8 lowers only through the
+//! packed map-major path: `packing(false)`, row-major (FLP/KLP)
+//! scheduling, or a width `u` that cannot be lane-padded (not 1, 2, 4
+//! or 8) is rejected at `build` with [`Error::Config`].
+//!
 //! ## Tile cost model
 //!
 //! Per conv layer, [`crate::engine::conv::ConvTiling::choose`] sizes
@@ -178,6 +195,14 @@ fn flat_of(s: SlotShape) -> usize {
     }
 }
 
+/// Symmetric int8 weight panels of one [`ArithMode::QuantI8`] layer:
+/// the quantized panel data plus the per-layer weight scale, both baked
+/// at plan compile (`scale = amax/127`, zero-point 0).
+struct QuantPanels {
+    data: Vec<i8>,
+    scale: f32,
+}
+
 /// One lowered instruction. Weights are baked (mode-cast at compile
 /// time) and shared via `Arc` so cloning a plan — or deriving a sibling
 /// capacity with [`ExecutionPlan::with_capacity`] — does not duplicate
@@ -199,6 +224,12 @@ enum Step {
         relu: bool,
         mode: ArithMode,
         packed: bool,
+        /// Run the SIMD row kernels (packed, vectorised f32 modes with
+        /// no per-layer scalar override). Bitwise invisible.
+        vec: bool,
+        /// Present iff `mode` is [`ArithMode::QuantI8`]: the int8
+        /// panels + weight scale (`w` is then empty).
+        quant: Option<Arc<QuantPanels>>,
         /// Row-tile macro-kernel sizes (ignored by the unpacked core).
         tile: ConvTiling,
         /// Per-tile working-set bytes when cost-weighted cluster
@@ -233,6 +264,12 @@ enum Step {
         relu: bool,
         mode: ArithMode,
         packed: bool,
+        /// Run the SIMD column-block kernel (packed, vectorised f32
+        /// modes with no per-layer scalar override). Bitwise invisible.
+        vec: bool,
+        /// Present iff `mode` is [`ArithMode::QuantI8`]: the int8
+        /// panels + weight scale (`w` is then empty).
+        quant: Option<Arc<QuantPanels>>,
     },
     Softmax { src: usize, dst: usize },
     /// Exact layout change between map-major widths (`u = 1` is
@@ -250,6 +287,11 @@ enum Step {
 struct Arena {
     bufs: Vec<Vec<f32>>,
     scratch: Vec<f32>,
+    /// Per-image quantized activation rows for QuantI8 steps (empty
+    /// when the plan has none).
+    qscratch: Vec<i8>,
+    /// Per-image activation quantization scales (one per batch row).
+    qscales: Vec<f32>,
     reduce: Vec<Vec<f32>>,
     thread_scratch: Vec<Vec<f32>>,
 }
@@ -258,6 +300,7 @@ impl Arena {
     fn sized(
         slots: &[SlotShape],
         scratch_row: usize,
+        qscratch_row: usize,
         reduce_len: usize,
         threads: usize,
         batch: usize,
@@ -265,6 +308,8 @@ impl Arena {
     ) -> Arena {
         let bufs = slots.iter().map(|s| vec![0.0f32; batch * s.len()]).collect();
         let scratch = vec![0.0f32; batch * scratch_row];
+        let qscratch = vec![0i8; batch * qscratch_row];
+        let qscales = vec![1.0f32; if qscratch_row > 0 { batch } else { 0 }];
         let n_reduce = if reduce_len > 0 { threads } else { 0 };
         let reduce = (0..n_reduce).map(|_| vec![0.0f32; reduce_len]).collect();
         // One row per pool chunk; rows are empty (no allocation) when
@@ -272,15 +317,16 @@ impl Arena {
         let thread_scratch = (0..threads)
             .map(|_| vec![0.0f32; thread_scratch_row])
             .collect();
-        Arena { bufs, scratch, reduce, thread_scratch }
+        Arena { bufs, scratch, qscratch, qscales, reduce, thread_scratch }
     }
 
     fn bytes(&self) -> usize {
         let elems: usize = self.bufs.iter().map(|b| b.len()).sum::<usize>()
             + self.scratch.len()
+            + self.qscales.len()
             + self.reduce.iter().map(|b| b.len()).sum::<usize>()
             + self.thread_scratch.iter().map(|b| b.len()).sum::<usize>();
-        4 * elems
+        4 * elems + self.qscratch.len()
     }
 }
 
@@ -513,6 +559,8 @@ pub struct ExecutionPlan {
     arena: Arena,
     /// Per-row pad/cast scratch length (row stride into `arena.scratch`).
     scratch_row: usize,
+    /// Per-row i8 quantization scratch length (0 = no QuantI8 steps).
+    qscratch_row: usize,
     /// Per-thread FLP/KLP reduction buffer length (0 = none needed).
     reduce_len: usize,
     /// Per-thread kernel scratch row length (0 = register fast paths).
@@ -572,6 +620,7 @@ impl ExecutionPlan {
             slots: Vec::new(),
             steps: Vec::new(),
             scratch_len: 0,
+            qscratch_len: 0,
             reduce_len: 0,
             thread_scratch_row: 0,
             baked_param_bytes: 0,
@@ -585,6 +634,7 @@ impl ExecutionPlan {
             slots,
             steps,
             scratch_len,
+            qscratch_len,
             reduce_len,
             thread_scratch_row,
             baked_param_bytes,
@@ -594,6 +644,7 @@ impl ExecutionPlan {
         let arena = Arena::sized(
             &slots,
             scratch_len,
+            qscratch_len,
             reduce_len,
             threads,
             batch,
@@ -610,6 +661,7 @@ impl ExecutionPlan {
             out_slot,
             arena,
             scratch_row: scratch_len,
+            qscratch_row: qscratch_len,
             reduce_len,
             thread_scratch_row,
             baked_param_bytes,
@@ -636,12 +688,14 @@ impl ExecutionPlan {
             arena: Arena::sized(
                 &self.slots,
                 self.scratch_row,
+                self.qscratch_row,
                 self.reduce_len,
                 self.threads,
                 batch,
                 self.thread_scratch_row,
             ),
             scratch_row: self.scratch_row,
+            qscratch_row: self.qscratch_row,
             reduce_len: self.reduce_len,
             thread_scratch_row: self.thread_scratch_row,
             baked_param_bytes: self.baked_param_bytes,
@@ -673,7 +727,15 @@ impl ExecutionPlan {
     /// One walk of the step sequence over `images.len()` live rows.
     fn exec(&mut self, images: &[&[f32]]) {
         for step in &self.steps {
-            exec_step(step, &self.slots, &mut self.arena, images, self.threads, self.scratch_row);
+            exec_step(
+                step,
+                &self.slots,
+                &mut self.arena,
+                images,
+                self.threads,
+                self.scratch_row,
+                self.qscratch_row,
+            );
         }
         self.runs += images.len() as u64;
     }
@@ -865,6 +927,8 @@ struct Lowerer<'a> {
     slots: Vec<SlotShape>,
     steps: Vec<Step>,
     scratch_len: usize,
+    /// Per-row i8 activation scratch (max over QuantI8 layers; 0 = none).
+    qscratch_len: usize,
     reduce_len: usize,
     thread_scratch_row: usize,
     baked_param_bytes: usize,
@@ -943,6 +1007,31 @@ impl Lowerer<'_> {
         Arc::new(packed)
     }
 
+    /// Quantize + repack conv weights into symmetric int8 tap-major
+    /// panels (QuantI8 layers); the per-layer weight scale rides along.
+    fn bake_conv_panels_i8(
+        &mut self,
+        w_mm: &[f32],
+        mb: usize,
+        cb: usize,
+        k: usize,
+        u: usize,
+    ) -> Arc<QuantPanels> {
+        let (q, scale) = mode::quantize_symmetric(w_mm);
+        let data = layout::pack_conv_panels_i8(&q, mb, cb, k, u);
+        self.baked_param_bytes += data.len();
+        Arc::new(QuantPanels { data, scale })
+    }
+
+    /// Quantize + repack dense weights into symmetric int8
+    /// column-blocked panels (QuantI8 layers).
+    fn bake_dense_panels_i8(&mut self, w: &[f32], o: usize, len: usize) -> Arc<QuantPanels> {
+        let (q, scale) = mode::quantize_symmetric(w);
+        let data = layout::pack_dense_panels_i8(&q, o, len);
+        self.baked_param_bytes += data.len();
+        Arc::new(QuantPanels { data, scale })
+    }
+
     fn bias(&mut self, b: &[f32]) -> Arc<Vec<f32>> {
         self.baked_param_bytes += 4 * b.len();
         Arc::new(b.to_vec())
@@ -965,8 +1054,30 @@ impl Lowerer<'_> {
                 // lower row-major. An exact reorder step bridges
                 // heterogeneous boundaries.
                 let rowmajor = self.baseline || ls.parallelism != Parallelism::Olp;
+                let quant = ls.mode.quantized();
+                if quant && rowmajor {
+                    return Err(Error::Config(format!(
+                        "layer {}: quant_i8 lowers only through the packed map-major \
+                         path — schedule it olp, not {}",
+                        layer.name, ls.parallelism
+                    )));
+                }
+                if quant && !ls.packing {
+                    return Err(Error::Config(format!(
+                        "layer {}: quant_i8 requires packing (the int8 panels are \
+                         the packed layout)",
+                        layer.name
+                    )));
+                }
                 let cur = self.ensure_u(cur, layer, if rowmajor { 1 } else { self.mm_u })?;
                 let (c, h, w, u) = self.require_maps(cur, layer)?;
+                if quant && !matches!(u, 1 | 2 | 4 | 8) {
+                    return Err(Error::Config(format!(
+                        "layer {}: quant_i8 needs a lane-paddable width — \
+                         u must be 1, 2, 4 or 8, got {u}",
+                        layer.name
+                    )));
+                }
                 let ho = shapes::conv_out(h, *k, *s, *p).map_err(named)?;
                 let wo = shapes::conv_out(w, *k, *s, *p).map_err(named)?;
                 let lp = self.params.layer_params(&layer.name)?;
@@ -987,6 +1098,11 @@ impl Lowerer<'_> {
                     if *p > 0 || mode != ArithMode::Precise {
                         let padded = cb * (h + 2 * p) * (w + 2 * p) * u;
                         self.scratch_len = self.scratch_len.max(padded);
+                        // QuantI8 quantizes the padded f32 row into a
+                        // parallel i8 scratch row per image.
+                        if quant {
+                            self.qscratch_len = self.qscratch_len.max(padded);
+                        }
                     }
                     // Generic-u kernels keep their tap block /
                     // accumulator tile in per-thread arena scratch
@@ -1012,11 +1128,21 @@ impl Lowerer<'_> {
                     } else {
                         None
                     };
-                    let wgt = if ls.packing {
-                        self.bake_conv_panels(&lp.w_mm, mode, mb, cb, *k, u)
+                    let (wgt, quant_panels) = if quant {
+                        (
+                            Arc::new(Vec::new()),
+                            Some(self.bake_conv_panels_i8(&lp.w_mm, mb, cb, *k, u)),
+                        )
+                    } else if ls.packing {
+                        (self.bake_conv_panels(&lp.w_mm, mode, mb, cb, *k, u), None)
                     } else {
-                        self.bake(&lp.w_mm, mode)
+                        (self.bake(&lp.w_mm, mode), None)
                     };
+                    // SIMD kernel selection: packed panels, a
+                    // vectorised f32 mode, and no per-layer scalar
+                    // override. (QuantI8 picks its own int8 backend.)
+                    let vec =
+                        !quant && mode.vectorized() && ls.packing && ls.vector_width != 1;
                     let b = self.bias(&lp.b_mm);
                     self.steps.push(Step::ConvMm {
                         src: cur,
@@ -1029,6 +1155,8 @@ impl Lowerer<'_> {
                         relu: *relu,
                         mode,
                         packed: ls.packing,
+                        vec,
+                        quant: quant_panels,
                         tile,
                         place,
                     });
@@ -1236,11 +1364,25 @@ impl Lowerer<'_> {
                 if mode != ArithMode::Precise {
                     self.scratch_len = self.scratch_len.max(len);
                 }
-                let wgt = if ls.packing {
-                    self.bake_dense_panels(w_src, mode, *o, len)
+                let quant = mode.quantized();
+                if quant && !ls.packing {
+                    return Err(Error::Config(format!(
+                        "layer {}: quant_i8 requires packing (the int8 panels are \
+                         the packed layout)",
+                        layer.name
+                    )));
+                }
+                if quant {
+                    self.qscratch_len = self.qscratch_len.max(len);
+                }
+                let (wgt, quant_panels) = if quant {
+                    (Arc::new(Vec::new()), Some(self.bake_dense_panels_i8(w_src, *o, len)))
+                } else if ls.packing {
+                    (self.bake_dense_panels(w_src, mode, *o, len), None)
                 } else {
-                    self.bake(w_src, mode)
+                    (self.bake(w_src, mode), None)
                 };
+                let vec = !quant && mode.vectorized() && ls.packing && ls.vector_width != 1;
                 let b = self.bias(b_src);
                 let dst = self.slot(SlotShape::Flat { len: *o });
                 self.steps.push(Step::Dense {
@@ -1251,6 +1393,8 @@ impl Lowerer<'_> {
                     relu: *relu,
                     mode,
                     packed: ls.packing,
+                    vec,
+                    quant: quant_panels,
                 });
                 Ok(dst)
             }
@@ -1311,6 +1455,7 @@ fn exec_step(
     images: &[&[f32]],
     threads: usize,
     scratch_row: usize,
+    qscratch_row: usize,
 ) {
     let live = images.len();
     match step {
@@ -1328,13 +1473,59 @@ fn exec_step(
                 );
             }
         }
-        Step::ConvMm { src, dst, w, b, k, s, p, relu, mode, packed, tile, place } => {
+        Step::ConvMm { src, dst, w, b, k, s, p, relu, mode, packed, vec, quant, tile, place } => {
             let (cin, h, wd, u) = maps_of(slots[*src]);
             let (m, ho, wo, _) = maps_of(slots[*dst]);
             let (cb, mb) = (ceil_div(cin, u), ceil_div(m, u));
             let (hp, wp) = (h + 2 * p, wd + 2 * p);
             let src_len = slots[*src].len();
-            if *p > 0 || *mode != ArithMode::Precise {
+            if let Some(q) = quant {
+                // Quantized path: pad into the f32 scratch (the QuantI8
+                // elementwise cast is the identity), then symmetric
+                // per-image i8 quantization into the i8 scratch rows.
+                let plen = cb * hp * wp * u;
+                for r in 0..live {
+                    tensor::pad_cast_into(
+                        &arena.bufs[*src][r * src_len..(r + 1) * src_len],
+                        cb,
+                        h,
+                        wd,
+                        u,
+                        *p,
+                        0.0,
+                        *mode,
+                        &mut arena.scratch[r * scratch_row..][..plen],
+                    );
+                    arena.qscales[r] = mode::quantize_symmetric_into(
+                        &arena.scratch[r * scratch_row..][..plen],
+                        &mut arena.qscratch[r * qscratch_row..][..plen],
+                    );
+                }
+                conv::conv_i8_packed_core(
+                    &arena.qscratch,
+                    &arena.qscales,
+                    qscratch_row,
+                    hp,
+                    wp,
+                    cb,
+                    u,
+                    &q.data,
+                    q.scale,
+                    b,
+                    &mut arena.bufs[*dst],
+                    mb,
+                    *k,
+                    *s,
+                    ho,
+                    wo,
+                    *relu,
+                    threads,
+                    live,
+                    *tile,
+                    *place,
+                    &mut arena.thread_scratch,
+                );
+            } else if *p > 0 || *mode != ArithMode::Precise {
                 let plen = cb * hp * wp * u;
                 for r in 0..live {
                     tensor::pad_cast_into(
@@ -1368,6 +1559,7 @@ fn exec_step(
                         ho,
                         wo,
                         *relu,
+                        *vec,
                         threads,
                         live,
                         *tile,
@@ -1415,6 +1607,7 @@ fn exec_step(
                         ho,
                         wo,
                         *relu,
+                        *vec,
                         threads,
                         live,
                         *tile,
@@ -1645,10 +1838,33 @@ fn exec_step(
                 off += part_len;
             }
         }
-        Step::Dense { src, dst, w, b, relu, mode, packed } => {
+        Step::Dense { src, dst, w, b, relu, mode, packed, vec, quant } => {
             let o = flat_of(slots[*dst]);
             let len = flat_of(slots[*src]);
-            if *mode != ArithMode::Precise {
+            if let Some(q) = quant {
+                // Quantized path: symmetric per-image quantization of
+                // the flat activation, then the widening-i32 kernel.
+                for r in 0..live {
+                    arena.qscales[r] = mode::quantize_symmetric_into(
+                        &arena.bufs[*src][r * len..(r + 1) * len],
+                        &mut arena.qscratch[r * qscratch_row..][..len],
+                    );
+                }
+                ops::dense_i8_rows_packed_into(
+                    &arena.qscratch,
+                    &arena.qscales,
+                    qscratch_row,
+                    len,
+                    &q.data,
+                    q.scale,
+                    b,
+                    o,
+                    *relu,
+                    &mut arena.bufs[*dst],
+                    live,
+                    threads,
+                );
+            } else if *mode != ArithMode::Precise {
                 for r in 0..live {
                     mode::cast_slice_into(
                         &arena.bufs[*src][r * len..(r + 1) * len],
@@ -1665,6 +1881,7 @@ fn exec_step(
                         b,
                         o,
                         *relu,
+                        *vec,
                         &mut arena.bufs[*dst],
                         live,
                         threads,
@@ -1686,7 +1903,9 @@ fn exec_step(
             } else {
                 let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
                 if *packed {
-                    ops::dense_rows_packed_into(x, len, len, w, b, o, *relu, out, live, threads);
+                    ops::dense_rows_packed_into(
+                        x, len, len, w, b, o, *relu, *vec, out, live, threads,
+                    );
                 } else {
                     ops::dense_rows_into(x, len, len, w, b, o, *relu, out, live, threads);
                 }
@@ -2052,6 +2271,105 @@ mod tests {
         sched.layers.get_mut("conv1").unwrap().packing = false;
         let mut mixed = PlanBuilder::new(&net, &params).schedule(sched).build().unwrap();
         assert_eq!(mixed.run(&input).unwrap(), want, "per-layer packing perturbed output");
+    }
+
+    #[test]
+    fn quant_i8_plan_runs_and_tracks_f32() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 60, 4).unwrap();
+        let input = rand_input(&net, 61);
+        let mut precise = PlanBuilder::new(&net, &params).threads(2).build().unwrap();
+        let want = precise.run(&input).unwrap();
+        let mut sched = Schedule::default_for(&net, 4);
+        sched.pool.threads = 2;
+        for ls in sched.layers.values_mut() {
+            ls.mode = ArithMode::QuantI8;
+        }
+        let mut quant = PlanBuilder::new(&net, &params)
+            .schedule(sched)
+            .batch(3)
+            .build()
+            .unwrap();
+        let a = quant.run(&input).unwrap();
+        assert_eq!(a.len(), want.len());
+        // int8 is approximate (tolerance-gated, not bitwise): logits
+        // stay finite and close to the f32 reference.
+        for (x, y) in want.iter().zip(&a) {
+            assert!(y.is_finite());
+            assert!((x - y).abs() < 0.25 * (1.0 + x.abs()), "{x} vs {y}");
+        }
+        // Per-image quantization makes batches bitwise equal to
+        // singles, and reruns bitwise stable (no arena state leaks).
+        let b = quant.run(&input).unwrap();
+        assert_eq!(a, b);
+        let rows = quant.run_batch(&[&input[..], &input[..]]).unwrap();
+        assert_eq!(rows[0], a);
+        assert_eq!(rows[1], a);
+        assert!(quant.baked_param_bytes() > 0);
+    }
+
+    #[test]
+    fn quant_i8_rejections_are_config_errors() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 62, 4).unwrap();
+        // Unpacked conv under quant.
+        let mut s = Schedule::default_for(&net, 4);
+        let c1 = s.layers.get_mut("conv1").unwrap();
+        c1.mode = ArithMode::QuantI8;
+        c1.packing = false;
+        assert!(matches!(
+            PlanBuilder::new(&net, &params).schedule(s).build(),
+            Err(Error::Config(_))
+        ));
+        // Row-major (FLP) scheduling under quant.
+        let mut s = Schedule::default_for(&net, 4);
+        let c2 = s.layers.get_mut("conv2").unwrap();
+        c2.mode = ArithMode::QuantI8;
+        c2.parallelism = Parallelism::Flp;
+        assert!(matches!(
+            PlanBuilder::new(&net, &params).schedule(s).build(),
+            Err(Error::Config(_))
+        ));
+        // Unpacked dense under quant.
+        let mut s = Schedule::default_for(&net, 4);
+        let fc = s.layers.get_mut("fc4").unwrap();
+        fc.mode = ArithMode::QuantI8;
+        fc.packing = false;
+        assert!(matches!(
+            PlanBuilder::new(&net, &params).schedule(s).build(),
+            Err(Error::Config(_))
+        ));
+        // A width that cannot be lane-padded (u = 3).
+        let params3 = EngineParams::random(&net, 63, 3).unwrap();
+        let mut s = Schedule::default_for(&net, 3);
+        s.layers.get_mut("conv1").unwrap().mode = ArithMode::QuantI8;
+        assert!(matches!(
+            PlanBuilder::new(&net, &params3).schedule(s).build(),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn forced_scalar_vector_width_is_bitwise_invisible() {
+        // vector_width = 1 swaps the SIMD row kernels for their scalar
+        // fallback; the contract is bitwise identity, so the knob must
+        // be invisible in the output.
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 64, 4).unwrap();
+        let input = rand_input(&net, 65);
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let mut auto_w = PlanBuilder::new(&net, &params)
+            .modes(&modes)
+            .threads(2)
+            .build()
+            .unwrap();
+        let want = auto_w.run(&input).unwrap();
+        let mut s = auto_w.schedule().clone();
+        for ls in s.layers.values_mut() {
+            ls.vector_width = 1;
+        }
+        let mut scalar = PlanBuilder::new(&net, &params).schedule(s).build().unwrap();
+        assert_eq!(scalar.run(&input).unwrap(), want, "vector_width=1 diverged");
     }
 
     #[test]

@@ -29,6 +29,18 @@
 //! `schedule.json` artifact that `cappuccino serve --schedule` loads —
 //! the synthesized software travels from tune to serve as a file, like
 //! the paper's emitted programs.
+//!
+//! ## Migration: `vector_width` and quantized mode (PR 6)
+//!
+//! Two knobs were added to the per-layer surface: the kernel-selection
+//! width [`LayerSchedule::vector_width`] (0 = auto, 1 = force the
+//! scalar row kernels, 4/8 = require that lane width) and the
+//! [`ArithMode::QuantI8`] arithmetic mode (serialized as
+//! `"mode": "quant_i8"`). Both are **optional in the JSON artifact**:
+//! pre-PR-6 `schedule.json` files carry neither field and parse as
+//! `vector_width = 0` with their recorded f32 mode, so existing tuned
+//! artifacts (including CI's `tune-smoke` upload) keep loading
+//! unchanged. [`Schedule::to_json`] always emits `vector_width`.
 
 use std::collections::BTreeMap;
 
@@ -63,6 +75,14 @@ pub struct LayerSchedule {
     /// Cost-weighted cluster placement of this layer's macro items
     /// (packed OLP conv only; bitwise invisible).
     pub placement: bool,
+    /// SIMD kernel selection for the packed row kernels: `0` = auto
+    /// (the widest backend available for the layer's `u`), `1` = force
+    /// the scalar row kernels even in vectorised modes, `4`/`8` =
+    /// require that lane width (a no-op unless the layer's `u` matches).
+    /// [`ArithMode::Precise`] layers always run scalar regardless. The
+    /// f32 kernels are bitwise identical at every setting, so this knob
+    /// is pure speed — which is why the autotuner searches it.
+    pub vector_width: usize,
 }
 
 impl Default for LayerSchedule {
@@ -73,6 +93,7 @@ impl Default for LayerSchedule {
             packing: true,
             tiling: None,
             placement: false,
+            vector_width: 0,
         }
     }
 }
@@ -169,6 +190,7 @@ impl Schedule {
                     packing,
                     tiling,
                     placement: pool.affinity,
+                    vector_width: 0,
                 };
                 (n, ls)
             })
@@ -226,6 +248,14 @@ impl Schedule {
                 return Err(Error::Config(format!("schedule is missing an entry for layer {n:?}")));
             }
         }
+        for (n, ls) in &self.layers {
+            if !matches!(ls.vector_width, 0 | 1 | 4 | 8) {
+                return Err(Error::Config(format!(
+                    "layer {n:?}: vector_width must be 0 (auto), 1 (scalar), 4, or 8 — got {}",
+                    ls.vector_width
+                )));
+            }
+        }
         Ok(())
     }
 
@@ -256,6 +286,7 @@ impl Schedule {
                     ("packing", Json::Bool(ls.packing)),
                     ("tiling", tiling),
                     ("placement", Json::Bool(ls.placement)),
+                    ("vector_width", Json::num(ls.vector_width as f64)),
                 ])
             })
             .collect();
@@ -296,12 +327,26 @@ impl Schedule {
                     th: t.get("th")?.as_usize()?,
                 }),
             };
+            // `vector_width` arrived in PR 6; treat it as optional so
+            // pre-PR-6 artifacts keep loading (default 0 = auto). The
+            // mode string likewise simply never says "quant_i8" in old
+            // files.
+            let vector_width = match l.opt("vector_width") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            };
+            if !matches!(vector_width, 0 | 1 | 4 | 8) {
+                return Err(Error::Config(format!(
+                    "schedule artifact: vector_width must be 0, 1, 4, or 8 — got {vector_width}"
+                )));
+            }
             let ls = LayerSchedule {
                 parallelism: l.get("parallelism")?.as_str()?.parse()?,
                 mode: l.get("mode")?.as_str()?.parse()?,
                 packing: l.get("packing")?.as_bool()?,
                 tiling,
                 placement: l.get("placement")?.as_bool()?,
+                vector_width,
             };
             if layers.insert(name.clone(), ls).is_some() {
                 return Err(Error::Config(format!("schedule lists layer {name:?} twice")));
@@ -358,10 +403,59 @@ mod tests {
 
     #[test]
     fn json_roundtrip_is_identity() {
-        let s = sample();
+        let mut s = sample();
+        // Exercise the PR-6 knobs: a forced-scalar layer and a
+        // quantized layer must survive the round trip.
+        let c1 = s.layers.get_mut("conv1").unwrap();
+        c1.vector_width = 1;
+        let c2 = s.layers.get_mut("conv2").unwrap();
+        c2.mode = ArithMode::QuantI8;
+        c2.vector_width = 8;
         let text = s.to_json().to_string();
         let back = Schedule::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, s);
+        assert!(text.contains("quant_i8") && text.contains("vector_width"));
+    }
+
+    #[test]
+    fn pre_pr6_artifact_without_new_fields_loads_with_defaults() {
+        // A fixture in the exact shape `to_json` emitted before the
+        // `vector_width`/quant knobs existed: no vector_width key
+        // anywhere, f32 modes only. It must parse with
+        // `vector_width = 0` and re-serialize losslessly.
+        let old = r#"{"net":"tinynet","u":4,
+            "pool":{"threads":2,"affinity":false,"cores":null},
+            "layers":[
+              {"layer":"conv1","parallelism":"olp","mode":"precise",
+               "packing":true,"tiling":null,"placement":false},
+              {"layer":"conv2","parallelism":"flp","mode":"imprecise",
+               "packing":false,"tiling":{"tm":2,"th":3},"placement":false},
+              {"layer":"conv3","parallelism":"olp","mode":"imprecise",
+               "packing":true,"tiling":null,"placement":true},
+              {"layer":"fc4","parallelism":"olp","mode":"relaxed",
+               "packing":true,"tiling":null,"placement":false},
+              {"layer":"fc5","parallelism":"olp","mode":"precise",
+               "packing":true,"tiling":null,"placement":false}
+            ]}"#;
+        let s = Schedule::from_json(&Json::parse(old).unwrap()).unwrap();
+        assert!(s.layers.values().all(|l| l.vector_width == 0));
+        assert_eq!(s.layers["conv2"].mode, ArithMode::Imprecise);
+        assert!(s.validate_for(&zoo::tinynet(), 4).is_ok());
+        // And the upgraded artifact round-trips through the new format.
+        let back = Schedule::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn bad_vector_width_rejected() {
+        let mut s = sample();
+        s.layers.get_mut("conv1").unwrap().vector_width = 3;
+        assert!(matches!(s.validate_for(&zoo::tinynet(), 4), Err(Error::Config(_))));
+        let text = s.to_json().to_string();
+        assert!(matches!(
+            Schedule::from_json(&Json::parse(&text).unwrap()),
+            Err(Error::Config(_))
+        ));
     }
 
     #[test]

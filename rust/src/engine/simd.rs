@@ -1,0 +1,425 @@
+//! Explicit-width SIMD lanes for the packed-panel kernels (paper
+//! section IV.C: "vector processing is only available under imprecise
+//! computing modes").
+//!
+//! Two lane families, each with an intrinsics backend
+//! (`core::arch::x86_64`, behind target-feature detection) and a
+//! **bitwise-equivalent scalar fallback**:
+//!
+//! * [`F32Lanes`] — `f32x4` (SSE2, baseline on x86_64) and `f32x8`
+//!   (AVX, runtime-detected) elementwise mul/add. Every backend
+//!   performs the *identical per-lane op sequence* — no FMA, no
+//!   horizontal re-association — so per-lane IEEE f32 results are
+//!   bitwise identical whichever backend runs. The packed kernels
+//!   exploit this: the vectorised paths stay bitwise equal to the
+//!   scalar parity oracles.
+//! * [`I8Dot`] — `i16x8` products of sign-extended `i8` operands
+//!   (exact: `|a*b| <= 127^2 < 2^15`) accumulated into widening
+//!   `i32x8` lanes, for the [`crate::engine::mode::ArithMode::QuantI8`]
+//!   kernels. Integer arithmetic is exact, so backend choice can never
+//!   change results.
+//!
+//! Backend selection is runtime-only and process-global:
+//! `CAPPUCCINO_SIMD=0|false|off` forces the scalar fallback everywhere
+//! (read once, like `CAPPUCCINO_PIN`), otherwise the widest backend the
+//! CPU supports is used. Std-only — no new dependencies.
+
+use std::sync::OnceLock;
+
+/// Are the intrinsics backends allowed? `false` on non-x86_64 builds
+/// and under `CAPPUCCINO_SIMD=0|false|off` (read once per process) —
+/// every dispatch site then runs the scalar fallback, which is bitwise
+/// identical by construction.
+pub fn enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        let env_on = !matches!(
+            std::env::var("CAPPUCCINO_SIMD").as_deref(),
+            Ok("0") | Ok("false") | Ok("off")
+        );
+        env_on && cfg!(target_arch = "x86_64")
+    })
+}
+
+/// [`enabled`] **and** AVX detected at runtime — gates the `f32x8`
+/// (`__m256`) backend. The `f32x4` / `i16x8` backends need only SSE2,
+/// which is baseline on x86_64.
+pub fn avx() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            enabled() && std::arch::is_x86_feature_detected!("avx")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// An explicit-width register of `N` f32 lanes. Implementations must
+/// keep every op a per-lane IEEE-754 single op (one mul is one mul, one
+/// add is one add, in call order) so that all backends of the same
+/// width are bitwise interchangeable.
+pub trait F32Lanes: Copy {
+    const N: usize;
+    fn zero() -> Self;
+    fn splat(x: f32) -> Self;
+    /// Load `N` lanes from the front of `src` (`src.len() >= N`).
+    fn load(src: &[f32]) -> Self;
+    /// Store `N` lanes to the front of `dst` (`dst.len() >= N`).
+    fn store(self, dst: &mut [f32]);
+    fn add(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+}
+
+macro_rules! scalar_f32_lanes {
+    ($name:ident, $n:expr) => {
+        /// Scalar fallback backend: a plain array, one scalar op per lane.
+        #[derive(Clone, Copy)]
+        pub struct $name([f32; $n]);
+
+        impl F32Lanes for $name {
+            const N: usize = $n;
+            #[inline(always)]
+            fn zero() -> Self {
+                $name([0.0; $n])
+            }
+            #[inline(always)]
+            fn splat(x: f32) -> Self {
+                $name([x; $n])
+            }
+            #[inline(always)]
+            fn load(src: &[f32]) -> Self {
+                $name(src[..$n].try_into().unwrap())
+            }
+            #[inline(always)]
+            fn store(self, dst: &mut [f32]) {
+                dst[..$n].copy_from_slice(&self.0);
+            }
+            #[inline(always)]
+            fn add(self, o: Self) -> Self {
+                let mut r = [0.0f32; $n];
+                for (v, (a, b)) in r.iter_mut().zip(self.0.iter().zip(&o.0)) {
+                    *v = a + b;
+                }
+                $name(r)
+            }
+            #[inline(always)]
+            fn mul(self, o: Self) -> Self {
+                let mut r = [0.0f32; $n];
+                for (v, (a, b)) in r.iter_mut().zip(self.0.iter().zip(&o.0)) {
+                    *v = a * b;
+                }
+                $name(r)
+            }
+        }
+    };
+}
+
+scalar_f32_lanes!(ScalarF32x4, 4);
+scalar_f32_lanes!(ScalarF32x8, 8);
+
+/// Widening i8 dot-product lanes: `i16x8` operand registers whose
+/// products (exact in 16 bits for i8 operands) accumulate into an
+/// `i32x8` accumulator. Integer ops are exact, so all backends agree
+/// bitwise unconditionally.
+pub trait I8Dot: Copy {
+    /// The `i32x8` accumulator paired with this operand register.
+    type Acc: Copy;
+    fn acc_zero() -> Self::Acc;
+    fn splat(x: i8) -> Self;
+    /// Sign-extend 8 consecutive `i8` values into the 8 i16 lanes.
+    fn from_i8(src: &[i8]) -> Self;
+    /// `[a; 4]` in the low lanes, `[b; 4]` in the high lanes — the
+    /// two-input-lane broadcast of the `u = 4` conv tap and the dense
+    /// column-pair kernels.
+    fn splat_pair(a: i8, b: i8) -> Self;
+    /// Lanewise product, exact (inputs are sign-extended i8).
+    fn mul(self, o: Self) -> Self;
+    /// Sign-extend the 8 i16 product lanes to i32 and add into `acc`.
+    fn acc_add(acc: Self::Acc, p: Self) -> Self::Acc;
+    fn acc_get(acc: Self::Acc) -> [i32; 8];
+}
+
+/// Scalar fallback for [`I8Dot`].
+#[derive(Clone, Copy)]
+pub struct ScalarI16x8([i16; 8]);
+
+impl I8Dot for ScalarI16x8 {
+    type Acc = [i32; 8];
+    #[inline(always)]
+    fn acc_zero() -> Self::Acc {
+        [0; 8]
+    }
+    #[inline(always)]
+    fn splat(x: i8) -> Self {
+        ScalarI16x8([x as i16; 8])
+    }
+    #[inline(always)]
+    fn from_i8(src: &[i8]) -> Self {
+        let mut r = [0i16; 8];
+        for (v, &s) in r.iter_mut().zip(&src[..8]) {
+            *v = s as i16;
+        }
+        ScalarI16x8(r)
+    }
+    #[inline(always)]
+    fn splat_pair(a: i8, b: i8) -> Self {
+        let (a, b) = (a as i16, b as i16);
+        ScalarI16x8([a, a, a, a, b, b, b, b])
+    }
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        let mut r = [0i16; 8];
+        for (v, (a, b)) in r.iter_mut().zip(self.0.iter().zip(&o.0)) {
+            *v = a.wrapping_mul(*b);
+        }
+        ScalarI16x8(r)
+    }
+    #[inline(always)]
+    fn acc_add(mut acc: Self::Acc, p: Self) -> Self::Acc {
+        for (a, &v) in acc.iter_mut().zip(&p.0) {
+            *a += v as i32;
+        }
+        acc
+    }
+    #[inline(always)]
+    fn acc_get(acc: Self::Acc) -> [i32; 8] {
+        acc
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{F32Lanes, I8Dot};
+    use core::arch::x86_64::*;
+
+    /// `f32x4` over one `__m128` — SSE2, baseline on x86_64, no runtime
+    /// detection needed.
+    #[derive(Clone, Copy)]
+    pub struct SseF32x4(__m128);
+
+    impl F32Lanes for SseF32x4 {
+        const N: usize = 4;
+        #[inline(always)]
+        fn zero() -> Self {
+            SseF32x4(unsafe { _mm_setzero_ps() })
+        }
+        #[inline(always)]
+        fn splat(x: f32) -> Self {
+            SseF32x4(unsafe { _mm_set1_ps(x) })
+        }
+        #[inline(always)]
+        fn load(src: &[f32]) -> Self {
+            assert!(src.len() >= 4);
+            SseF32x4(unsafe { _mm_loadu_ps(src.as_ptr()) })
+        }
+        #[inline(always)]
+        fn store(self, dst: &mut [f32]) {
+            assert!(dst.len() >= 4);
+            unsafe { _mm_storeu_ps(dst.as_mut_ptr(), self.0) }
+        }
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            SseF32x4(unsafe { _mm_add_ps(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            SseF32x4(unsafe { _mm_mul_ps(self.0, o.0) })
+        }
+    }
+
+    /// `f32x8` over one `__m256`. Only reachable through
+    /// `#[target_feature(enable = "avx")]` kernel wrappers guarded by
+    /// [`super::avx`] — executing these intrinsics on a CPU without AVX
+    /// is undefined behaviour.
+    #[derive(Clone, Copy)]
+    pub struct AvxF32x8(__m256);
+
+    impl F32Lanes for AvxF32x8 {
+        const N: usize = 8;
+        #[inline(always)]
+        fn zero() -> Self {
+            AvxF32x8(unsafe { _mm256_setzero_ps() })
+        }
+        #[inline(always)]
+        fn splat(x: f32) -> Self {
+            AvxF32x8(unsafe { _mm256_set1_ps(x) })
+        }
+        #[inline(always)]
+        fn load(src: &[f32]) -> Self {
+            assert!(src.len() >= 8);
+            AvxF32x8(unsafe { _mm256_loadu_ps(src.as_ptr()) })
+        }
+        #[inline(always)]
+        fn store(self, dst: &mut [f32]) {
+            assert!(dst.len() >= 8);
+            unsafe { _mm256_storeu_ps(dst.as_mut_ptr(), self.0) }
+        }
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            AvxF32x8(unsafe { _mm256_add_ps(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            AvxF32x8(unsafe { _mm256_mul_ps(self.0, o.0) })
+        }
+    }
+
+    /// `i16x8`/`i32x8` over `__m128i` — SSE2 only.
+    #[derive(Clone, Copy)]
+    pub struct SseI16x8(__m128i);
+
+    impl I8Dot for SseI16x8 {
+        type Acc = (__m128i, __m128i);
+        #[inline(always)]
+        fn acc_zero() -> Self::Acc {
+            unsafe { (_mm_setzero_si128(), _mm_setzero_si128()) }
+        }
+        #[inline(always)]
+        fn splat(x: i8) -> Self {
+            SseI16x8(unsafe { _mm_set1_epi16(x as i16) })
+        }
+        #[inline(always)]
+        fn from_i8(src: &[i8]) -> Self {
+            assert!(src.len() >= 8);
+            // Load 8 bytes, sign-extend to i16 via the classic
+            // duplicate-then-arithmetic-shift (SSE2 has no cvtepi8).
+            SseI16x8(unsafe {
+                let v = _mm_loadl_epi64(src.as_ptr() as *const __m128i);
+                _mm_srai_epi16(_mm_unpacklo_epi8(v, v), 8)
+            })
+        }
+        #[inline(always)]
+        fn splat_pair(a: i8, b: i8) -> Self {
+            let (a, b) = (a as i16, b as i16);
+            SseI16x8(unsafe { _mm_set_epi16(b, b, b, b, a, a, a, a) })
+        }
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            SseI16x8(unsafe { _mm_mullo_epi16(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn acc_add(acc: Self::Acc, p: Self) -> Self::Acc {
+            unsafe {
+                // Sign-extend the 8 i16 lanes to 2 x i32x4 (duplicate +
+                // shift, same trick as `from_i8`) and add.
+                let lo = _mm_srai_epi32(_mm_unpacklo_epi16(p.0, p.0), 16);
+                let hi = _mm_srai_epi32(_mm_unpackhi_epi16(p.0, p.0), 16);
+                (_mm_add_epi32(acc.0, lo), _mm_add_epi32(acc.1, hi))
+            }
+        }
+        #[inline(always)]
+        fn acc_get(acc: Self::Acc) -> [i32; 8] {
+            let mut out = [0i32; 8];
+            unsafe {
+                _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, acc.0);
+                _mm_storeu_si128(out.as_mut_ptr().add(4) as *mut __m128i, acc.1);
+            }
+            out
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use x86::{AvxF32x8, SseF32x4, SseI16x8};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dot4<V: F32Lanes>(x: &[f32; 4], cols: &[f32]) -> [f32; 4] {
+        // The u = 4 conv tap expression: no leading zero, left-assoc.
+        let mut sum = V::splat(x[0]).mul(V::load(&cols[0..4]));
+        for (il, &xv) in x.iter().enumerate().skip(1) {
+            sum = sum.add(V::splat(xv).mul(V::load(&cols[il * 4..il * 4 + 4])));
+        }
+        let mut out = [0.0f32; 4];
+        sum.store(&mut out);
+        out
+    }
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn sse_f32x4_bitwise_matches_scalar_fallback() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let x: [f32; 4] = rng.normal_vec(4).try_into().unwrap();
+            let cols = rng.normal_vec(16);
+            let a = dot4::<ScalarF32x4>(&x, &cols);
+            let b = dot4::<SseF32x4>(&x, &cols);
+            for (va, vb) in a.iter().zip(&b) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn avx_f32x8_bitwise_matches_scalar_fallback() {
+        if !std::arch::is_x86_feature_detected!("avx") {
+            return;
+        }
+        #[target_feature(enable = "avx")]
+        unsafe fn sum8_avx(vals: &[f32], out: &mut [f32]) {
+            sum8::<AvxF32x8>(vals, out);
+        }
+        fn sum8<V: F32Lanes>(vals: &[f32], out: &mut [f32]) {
+            // Leading-zero accumulation, the generic-u conv expression.
+            let mut acc = V::zero();
+            for chunk in vals.chunks_exact(8) {
+                acc = acc.add(V::load(chunk).mul(V::splat(0.37)));
+            }
+            acc.store(out);
+        }
+        let mut rng = Rng::new(12);
+        let vals = rng.normal_vec(64);
+        let mut a = [0.0f32; 8];
+        let mut b = [0.0f32; 8];
+        sum8::<ScalarF32x8>(&vals, &mut a);
+        unsafe { sum8_avx(&vals, &mut b) };
+        for (va, vb) in a.iter().zip(&b) {
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
+    }
+
+    fn i8_dot<D: I8Dot>(x: &[i8], w: &[i8]) -> [i32; 8] {
+        let mut acc = D::acc_zero();
+        for (xc, wc) in x.chunks_exact(2).zip(w.chunks_exact(16)) {
+            let xp = D::splat_pair(xc[0], xc[1]);
+            acc = D::acc_add(acc, D::from_i8(&wc[0..8]).mul(xp));
+            acc = D::acc_add(acc, D::from_i8(&wc[8..16]).mul(D::splat(xc[1])));
+        }
+        D::acc_get(acc)
+    }
+
+    #[test]
+    fn i8_lanes_are_exact() {
+        let x: Vec<i8> = (0..16).map(|i| (i * 17 % 255) as i8).collect();
+        let w: Vec<i8> = (0..128).map(|i| (i * 31 % 251) as i8 ^ 0x55u8 as i8).collect();
+        let a = i8_dot::<ScalarI16x8>(&x, &w);
+        #[cfg(target_arch = "x86_64")]
+        {
+            let b = i8_dot::<SseI16x8>(&x, &w);
+            assert_eq!(a, b);
+        }
+        // Spot-check one lane against a plain i32 reference.
+        let mut want = 0i32;
+        for (pair, wc) in x.chunks_exact(2).zip(w.chunks_exact(16)) {
+            want += pair[0] as i32 * wc[0] as i32 + pair[1] as i32 * wc[8] as i32;
+        }
+        assert_eq!(a[0], want);
+    }
+
+    #[test]
+    fn gates_are_consistent() {
+        // avx() implies enabled(); both are stable across calls.
+        assert_eq!(enabled(), enabled());
+        if avx() {
+            assert!(enabled());
+        }
+    }
+}

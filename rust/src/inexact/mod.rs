@@ -9,14 +9,19 @@
 //! The analyzer measures top-1 classification accuracy (not arithmetic
 //! accuracy — the paper's distinction) on the validation split, then
 //! greedily walks the layers in order, trying the cheapest acceptable
-//! mode for each (imprecise first, then relaxed) while keeping all
-//! previously accepted assignments in place. A layer whose inexact modes
-//! breach the accuracy budget stays precise.
+//! mode for each (quantized int8 first, then imprecise, then relaxed)
+//! while keeping all previously accepted assignments in place. A layer
+//! whose inexact modes breach the accuracy budget stays precise. A mode
+//! the plan compiler rejects for a layer outright —
+//! [`ArithMode::QuantI8`] on a width that cannot be lane-padded — is
+//! skipped (it costs no evaluation), not fatal: this accuracy gate is
+//! exactly the tolerance-based check the quantized path is gated by,
+//! since int8 has no bitwise f32 oracle.
 
 use crate::data::Dataset;
 use crate::engine::{self, ArithMode, EngineParams, ExecConfig, ModeAssignment};
 use crate::model::Network;
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 
 /// Analysis configuration.
 #[derive(Debug, Clone)]
@@ -122,8 +127,9 @@ pub fn analyze(
 ) -> Result<AnalysisReport> {
     let mut evaluations = 0usize;
     let mut eval = |modes: &ModeAssignment| -> Result<f64> {
+        let acc = evaluate_accuracy(net, params, dataset, modes, cfg)?;
         evaluations += 1;
-        evaluate_accuracy(net, params, dataset, modes, cfg)
+        Ok(acc)
     };
 
     let mut assignment = ModeAssignment::uniform(ArithMode::Precise);
@@ -135,11 +141,17 @@ pub fn analyze(
     for layer in net.param_layer_names() {
         let mut rejected = Vec::new();
         let mut chosen = ArithMode::Precise;
-        // Cheapest (fastest) mode first: imprecise, then relaxed.
-        for mode in [ArithMode::Imprecise, ArithMode::Relaxed] {
+        // Cheapest (fastest) mode first: quantized int8, then
+        // imprecise, then relaxed. A candidate the plan compiler
+        // rejects (quant_i8 on a non-lane-paddable width) is skipped.
+        for mode in [ArithMode::QuantI8, ArithMode::Imprecise, ArithMode::Relaxed] {
             let mut candidate = assignment.clone();
             candidate.per_layer.insert(layer.clone(), mode);
-            let acc = eval(&candidate)?;
+            let acc = match eval(&candidate) {
+                Ok(acc) => acc,
+                Err(Error::Config(_)) => continue,
+                Err(e) => return Err(e),
+            };
             if acc >= budget {
                 assignment = candidate;
                 chosen = mode;
@@ -215,8 +227,39 @@ mod tests {
         let report = analyze(&net, &params, &dataset, &cfg).unwrap();
         assert_eq!(report.inexact_layers(), 5, "{:#?}", report.decisions);
         assert!(report.final_accuracy >= report.baseline_accuracy - 0.02);
-        // Greedy should accept imprecise immediately: 1 baseline + 5.
-        assert_eq!(report.evaluations, 6);
+        // Greedy tries quant_i8 -> imprecise -> relaxed per layer: one
+        // baseline evaluation plus 1..=3 per layer, and on a trained
+        // net the first or second rung is accepted.
+        assert!(
+            (6..=16).contains(&report.evaluations),
+            "evaluations {}",
+            report.evaluations
+        );
+    }
+
+    #[test]
+    fn quant_i8_clears_the_tolerance_gate_on_trained_tinynet() {
+        // The quantized path has no bitwise f32 oracle; its gate is
+        // top-1 agreement within tolerance on the validation split.
+        let Some((net, params, dataset)) = trained_setup() else { return };
+        let cfg = AnalysisConfig { max_images: 96, ..Default::default() };
+        let precise = evaluate_accuracy(
+            &net,
+            &params,
+            &dataset,
+            &ModeAssignment::uniform(ArithMode::Precise),
+            &cfg,
+        )
+        .unwrap();
+        let quant = evaluate_accuracy(
+            &net,
+            &params,
+            &dataset,
+            &ModeAssignment::uniform(ArithMode::QuantI8),
+            &cfg,
+        )
+        .unwrap();
+        assert!(quant >= precise - 0.05, "quant_i8 {quant} vs precise {precise}");
     }
 
     #[test]

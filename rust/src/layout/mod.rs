@@ -17,11 +17,15 @@
 //!
 //! * [`pack_conv_panels`] — **tap-major panels**: for each output stack
 //!   `ms`, the taps `(cs, kh, kw)` are laid out in exactly the order the
-//!   kernel walks them, each tap a contiguous `u x u` block. Index
-//!   formula: `packed[((((ms*Cb + cs)*K + kh)*K + kw)*u + ol)*u + il]`
+//!   kernel walks them, each tap a contiguous `u x u` block stored
+//!   **input-lane-major**. Index formula:
+//!   `packed[((((ms*Cb + cs)*K + kh)*K + kw)*u + il)*u + ol]`
 //!   holds the weight of output channel `ms*u + ol` against input
 //!   channel `cs*u + il` at tap `(kh, kw)` — the hot loop streams
-//!   weights strictly sequentially, zero per-tap gathers.
+//!   weights strictly sequentially, zero per-tap gathers, and each
+//!   input lane's `u` output-lane weights are one contiguous
+//!   lane-width register load ([`crate::engine::simd`]): the tap block
+//!   *is* the vector register tile.
 //! * [`pack_dense_panels`] — **column-blocked panels**: output rows are
 //!   grouped in blocks of [`DENSE_BLOCK`] and interleaved by column:
 //!   `packed[(ob*I + col)*B + ol]` = `w[(ob*B + ol)*I + col]`
@@ -135,21 +139,41 @@ pub fn weights_to_mapmajor(src: &[f32], m: usize, c: usize, k: usize, u: usize) 
 }
 
 /// Map-major conv weights `(Mb, u, Cb, K, K, u)` → tap-major packed
-/// panels `(Mb, Cb, K, K, u, u)` (see the module docs for the index
-/// formula). Plan-compile time only: the packed kernels read each tap's
-/// `u_out x u_in` block as one contiguous `u*u` slice and walk taps
-/// sequentially, so the per-tap gather of the unpacked layout vanishes.
+/// panels `(Mb, Cb, K, K, u_in, u_out)` (see the module docs for the
+/// index formula). Plan-compile time only: the packed kernels read each
+/// tap's `u x u` block as one contiguous `u*u` slice and walk taps
+/// sequentially, so the per-tap gather of the unpacked layout vanishes;
+/// within the tap, input lane `il`'s `u` output-lane weights are
+/// contiguous — one lane-width register load per input lane.
 pub fn pack_conv_panels(w_mm: &[f32], mb: usize, cb: usize, k: usize, u: usize) -> Vec<f32> {
+    pack_conv_panels_impl(w_mm, mb, cb, k, u)
+}
+
+/// [`pack_conv_panels`] over quantized `i8` weights — identical
+/// permutation, so the int8 kernels walk the exact same panel order.
+pub fn pack_conv_panels_i8(w_mm: &[i8], mb: usize, cb: usize, k: usize, u: usize) -> Vec<i8> {
+    pack_conv_panels_impl(w_mm, mb, cb, k, u)
+}
+
+fn pack_conv_panels_impl<T: Copy + Default>(
+    w_mm: &[T],
+    mb: usize,
+    cb: usize,
+    k: usize,
+    u: usize,
+) -> Vec<T> {
     assert_eq!(w_mm.len(), mb * u * cb * k * k * u, "pack_conv_panels: src len");
-    let mut out = vec![0.0f32; w_mm.len()];
+    let mut out = vec![T::default(); w_mm.len()];
     for ms in 0..mb {
         for cs in 0..cb {
             for kh in 0..k {
                 for kw in 0..k {
+                    let tap = (((ms * cb + cs) * k + kh) * k + kw) * u * u;
                     for ol in 0..u {
                         let src = ((((ms * u + ol) * cb + cs) * k + kh) * k + kw) * u;
-                        let dst = (((((ms * cb + cs) * k + kh) * k + kw) * u) + ol) * u;
-                        out[dst..dst + u].copy_from_slice(&w_mm[src..src + u]);
+                        for il in 0..u {
+                            out[tap + il * u + ol] = w_mm[src + il];
+                        }
                     }
                 }
             }
@@ -162,9 +186,19 @@ pub fn pack_conv_panels(w_mm: &[f32], mb: usize, cb: usize, k: usize, u: usize) 
 /// `(Ob, I, B)` with `B =` [`DENSE_BLOCK`], `Ob = ceil(O/B)`,
 /// zero-padded past `O` (see the module docs for the index formula).
 pub fn pack_dense_panels(w: &[f32], o: usize, i: usize) -> Vec<f32> {
+    pack_dense_panels_impl(w, o, i)
+}
+
+/// [`pack_dense_panels`] over quantized `i8` weights — identical
+/// permutation.
+pub fn pack_dense_panels_i8(w: &[i8], o: usize, i: usize) -> Vec<i8> {
+    pack_dense_panels_impl(w, o, i)
+}
+
+fn pack_dense_panels_impl<T: Copy + Default>(w: &[T], o: usize, i: usize) -> Vec<T> {
     assert_eq!(w.len(), o * i, "pack_dense_panels: src len");
     let ob = ceil_div(o, DENSE_BLOCK);
-    let mut out = vec![0.0f32; ob * i * DENSE_BLOCK];
+    let mut out = vec![T::default(); ob * i * DENSE_BLOCK];
     for oi in 0..o {
         let (blk, ol) = (oi / DENSE_BLOCK, oi % DENSE_BLOCK);
         for col in 0..i {
@@ -322,16 +356,17 @@ mod tests {
             let packed = pack_conv_panels(&mm, mb, cb, k, u);
             assert_eq!(packed.len(), mm.len());
             // Every (mi, ci, kh, kw) weight lands at the documented
-            // packed index; padding lanes stay zero.
+            // packed index (input-lane-major tap block); padding lanes
+            // stay zero.
             for ms in 0..mb {
                 for cs in 0..cb {
                     for kh in 0..k {
                         for kw in 0..k {
                             for ol in 0..u {
                                 for il in 0..u {
-                                    let dst = ((((ms * cb + cs) * k + kh) * k + kw) * u + ol)
+                                    let dst = ((((ms * cb + cs) * k + kh) * k + kw) * u + il)
                                         * u
-                                        + il;
+                                        + ol;
                                     let (mi, ci) = (ms * u + ol, cs * u + il);
                                     let want = if mi < m && ci < c {
                                         src[((mi * c + ci) * k + kh) * k + kw]
@@ -345,6 +380,17 @@ mod tests {
                     }
                 }
             }
+            // The i8 packer applies the identical permutation.
+            let q: Vec<i8> = (0..mm.len()).map(|v| (v % 251) as i8).collect();
+            let qp = pack_conv_panels_i8(&q, mb, cb, k, u);
+            let fp = pack_conv_panels(
+                &q.iter().map(|&v| v as f32).collect::<Vec<_>>(),
+                mb,
+                cb,
+                k,
+                u,
+            );
+            assert!(qp.iter().zip(&fp).all(|(&a, &b)| a as f32 == b));
         }
     }
 
@@ -369,6 +415,15 @@ mod tests {
                 let (blk, ol) = (oi / DENSE_BLOCK, oi % DENSE_BLOCK);
                 for col in 0..i {
                     assert_eq!(packed[(blk * i + col) * DENSE_BLOCK + ol], 0.0);
+                }
+            }
+            // The i8 packer applies the identical permutation.
+            let q: Vec<i8> = (0..o * i).map(|v| (v % 127) as i8).collect();
+            let qp = pack_dense_panels_i8(&q, o, i);
+            for oi in 0..o {
+                let (blk, ol) = (oi / DENSE_BLOCK, oi % DENSE_BLOCK);
+                for col in 0..i {
+                    assert_eq!(qp[(blk * i + col) * DENSE_BLOCK + ol], q[oi * i + col]);
                 }
             }
         }

@@ -26,7 +26,8 @@
 //! | [`layout`] | map-major reordering, packed tap-major / column-blocked weight panels, the paper's eqs. (3)–(5) |
 //! | [`engine`] | native execution engine (OLP/KLP/FLP, vector modes) |
 //! | [`engine::plan`] | batch-first compiled plans: `PlanBuilder` → `ExecutionPlan::run_batch`, `B x` buffer arena, baked+packed weights, per-layer conv tiles from an L1/L2 cost model, per-thread kernel scratch, flat step sequence |
-//! | [`engine::schedule`] | Schedule IR — the one per-layer tuning surface (parallelism, packing, tiling, mode, placement + pool settings); every `PlanBuilder` setter lowers into it; serializes to the `schedule.json` artifact |
+//! | [`engine::schedule`] | Schedule IR — the one per-layer tuning surface (parallelism, packing, tiling, mode, placement, vector width + pool settings); every `PlanBuilder` setter lowers into it; serializes to the `schedule.json` artifact |
+//! | [`engine::simd`] | explicit-width SIMD lanes (`f32x4`/`f32x8`, widening int8 dot) over `core::arch` intrinsics with a bitwise-identical scalar fallback; `CAPPUCCINO_SIMD=0` forces the fallback |
 //! | [`engine::parallel`] | topology-aware persistent worker pool (per-cluster deques, idle-only stealing, batch-tagged scopes, cost-weighted placement) + thread workload allocation policies |
 //! | [`engine::topology`] | CPU topology probe (sysfs `cpu_capacity`/packages, affinity-mask aware, uniform fallback), `sched_setaffinity` pinning, serve-worker `CoreSet`s |
 //! | [`soc`] | mobile SoC simulator: latency + energy + CNNDroid models |

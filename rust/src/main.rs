@@ -112,11 +112,15 @@ COMMANDS:
   tune       --net tinynet           autotune a per-layer schedule ON THIS MACHINE
              [--batch 8] [--threads 4] [--budget 64] [--reps 5]
              [--warmup 2] [--mode imprecise] [--out schedule.json]
-             greedy search over per-layer parallelism/packing/tiling and
-             pool chunking; every candidate is compiled and timed for
-             real (median of --reps walks), --budget caps measurements
+             greedy search over per-layer parallelism/packing/tiling,
+             vector width (SIMD vs forced-scalar rows), the quantized
+             int8 kernels (mode quant_i8), and pool chunking; every
+             candidate is compiled and timed for real (median of --reps
+             walks), --budget caps measurements
   analyze    --net tinynet           per-layer inexact-computing analysis (sec IV.C)
              [--images 256] [--budget 0.01]
+             tries quant_i8, then imprecise, then relaxed per layer;
+             --mode on tune/serve also accepts quant_i8
   simulate   --net NAME              Table I row for NAME on the device catalog
   serve      --net tinynet           serve a synthetic workload
              [--backend engine|pjrt] [--mode imprecise] [--requests 64]

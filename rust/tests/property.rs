@@ -310,6 +310,76 @@ fn prop_cappnet_shape_inference_total() {
 }
 
 #[test]
+fn prop_quantize_symmetric_roundtrip_bounded() {
+    use cappuccino::engine::mode::quantize_symmetric;
+    check("symmetric i8 quantization error <= scale/2", 80, 0xAC, |g| {
+        let n = g.int(1, 256);
+        let amp = g.f32(1e-3, 1e4);
+        let x: Vec<f32> = g.normal_vec(n).iter().map(|v| v * amp).collect();
+        let (q, scale) = quantize_symmetric(&x);
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if amax == 0.0 {
+            return if scale == 1.0 && q.iter().all(|&v| v == 0) {
+                Ok(())
+            } else {
+                Err("zero tensor must quantize to zeros with scale 1".into())
+            };
+        }
+        // Round-to-nearest: dequantization error is at most half a step
+        // (plus f32 rounding slack).
+        let tol = scale * 0.5 * (1.0 + 1e-5) + 1e-6;
+        for (&qi, &xi) in q.iter().zip(&x) {
+            let err = (qi as f32 * scale - xi).abs();
+            if err > tol {
+                return Err(format!("|{qi}*{scale} - {xi}| = {err} > {tol}"));
+            }
+        }
+        // The max-magnitude element must use the full i8 range.
+        if !q.iter().any(|&v| v.unsigned_abs() == 127) {
+            return Err("amax element did not map to +-127".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_i8_plan_tracks_precise_logits() {
+    // End-to-end property for the quantized path: for random weights,
+    // inputs and vector widths, the int8 plan's logits stay finite and
+    // within a scale-aware tolerance of the precise f32 plan. (Top-1
+    // agreement on the *trained* net is asserted in `src/inexact`.)
+    use cappuccino::engine::{EngineParams, PlanBuilder, Schedule};
+    use cappuccino::model::zoo;
+    check("quant_i8 logits track f32", 8, 0xAD, |g| {
+        let net = zoo::tinynet();
+        let u = g.choose(&[1usize, 2, 4, 8]);
+        let params = EngineParams::random(&net, g.int(1, 1000) as u64, u)
+            .map_err(|e| e.to_string())?;
+        let x = g.normal_vec(net.input.elements());
+        let mut precise = PlanBuilder::new(&net, &params)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let want = precise.run(&x).map_err(|e| e.to_string())?;
+        let mut sched = Schedule::default_for(&net, u);
+        for ls in sched.layers.values_mut() {
+            ls.mode = ArithMode::QuantI8;
+        }
+        let mut quant = PlanBuilder::new(&net, &params)
+            .schedule(sched)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let got = quant.run(&x).map_err(|e| e.to_string())?;
+        let scale = want.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+        for (w, q) in want.iter().zip(&got) {
+            if !q.is_finite() || (w - q).abs() > 0.2 * scale {
+                return Err(format!("u={u}: {w} vs {q} (scale {scale})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_batcher_never_loses_requests() {
     use cappuccino::engine::{EngineParams, ModeAssignment};
     use cappuccino::model::zoo;

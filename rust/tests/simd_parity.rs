@@ -1,0 +1,147 @@
+//! SIMD kernel-selection parity: the f32 vector row kernels must be
+//! **bitwise identical** to their scalar fallback — across vector
+//! widths `u` in {1, 2, 3, 4, 8} (3 exercises the generic scalar path,
+//! 4/8 the SSE/AVX lanes) and thread counts {1, 2, 4}.
+//!
+//! CI runs this suite twice: once with `CAPPUCCINO_SIMD=0` (the
+//! [`cappuccino::engine::simd`] runtime gate forces the scalar lane
+//! backends) and once with `-Ctarget-cpu=native` (real intrinsics
+//! where the host has them). The assertions compare three in-process
+//! kernel selections — SIMD-selected packed, forced-scalar packed
+//! (`vector_width = 1`), and the unpacked row-walk oracle — so a pass
+//! under both CI configs proves intrinsics == fallback == oracle
+//! bitwise.
+//!
+//! The quantized int8 path has no bitwise f32 oracle; here it gets the
+//! determinism half of its contract (batch == singles, thread count
+//! invisible — integer accumulation is exact) plus a scale-aware
+//! tolerance against the precise plan. The accuracy half lives in
+//! `inexact::evaluate_accuracy` (see `src/inexact`).
+
+use cappuccino::engine::{ArithMode, EngineParams, ModeAssignment, PlanBuilder, Schedule};
+use cappuccino::model::zoo;
+use cappuccino::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+const WIDTHS: [usize; 5] = [1, 2, 3, 4, 8];
+
+#[test]
+fn vector_kernels_bitwise_match_scalar_fallback_across_widths_and_threads() {
+    let net = zoo::tinynet();
+    let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+    for &u in &WIDTHS {
+        let params = EngineParams::random(&net, 100 + u as u64, u).unwrap();
+        let x = Rng::new(7 + u as u64).normal_vec(net.input.elements());
+        let mut oracle: Option<Vec<f32>> = None;
+        for &threads in &THREADS {
+            // Packed + SIMD-selected (Imprecise unlocks the vector rows).
+            let mut vec_plan = PlanBuilder::new(&net, &params)
+                .modes(&modes)
+                .threads(threads)
+                .build()
+                .unwrap();
+            let got = vec_plan.run(&x).unwrap();
+            // Forced scalar rows via the per-layer schedule knob.
+            let mut s = vec_plan.schedule().clone();
+            for ls in s.layers.values_mut() {
+                ls.vector_width = 1;
+            }
+            let mut scalar_plan =
+                PlanBuilder::new(&net, &params).schedule(s).build().unwrap();
+            assert_eq!(
+                scalar_plan.run(&x).unwrap(),
+                got,
+                "u={u} threads={threads}: vector_width=1 diverged"
+            );
+            // Unpacked row walk: the pre-packing scalar oracle.
+            let mut unpacked = PlanBuilder::new(&net, &params)
+                .modes(&modes)
+                .threads(threads)
+                .packing(false)
+                .build()
+                .unwrap();
+            assert_eq!(
+                unpacked.run(&x).unwrap(),
+                got,
+                "u={u} threads={threads}: unpacked oracle diverged"
+            );
+            // Thread count must be bitwise invisible too.
+            match &oracle {
+                None => oracle = Some(got),
+                Some(want) => {
+                    assert_eq!(&got, want, "u={u} threads={threads} vs threads=1")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn precise_mode_ignores_vector_width() {
+    // Precise always runs scalar — vector_width is consulted only by
+    // vectorised modes, so every setting is bitwise identical.
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 31, 4).unwrap();
+    let x = Rng::new(32).normal_vec(net.input.elements());
+    let mut base = PlanBuilder::new(&net, &params).threads(2).build().unwrap();
+    let want = base.run(&x).unwrap();
+    for vw in [1usize, 4, 8] {
+        let mut s = base.schedule().clone();
+        for ls in s.layers.values_mut() {
+            ls.vector_width = vw;
+        }
+        let mut plan = PlanBuilder::new(&net, &params).schedule(s).build().unwrap();
+        assert_eq!(plan.run(&x).unwrap(), want, "vector_width={vw} under precise");
+    }
+}
+
+#[test]
+fn quant_i8_is_deterministic_and_tracks_f32_across_widths_and_threads() {
+    let net = zoo::tinynet();
+    for &u in &[1usize, 2, 4, 8] {
+        let params = EngineParams::random(&net, 200 + u as u64, u).unwrap();
+        let inputs: Vec<Vec<f32>> = (0..3)
+            .map(|i| Rng::new(40 + i + u as u64).normal_vec(net.input.elements()))
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut precise = PlanBuilder::new(&net, &params).build().unwrap();
+        let mut quant_sched = Schedule::default_for(&net, u);
+        for ls in quant_sched.layers.values_mut() {
+            ls.mode = ArithMode::QuantI8;
+        }
+        let mut thread_oracle: Option<Vec<Vec<f32>>> = None;
+        for &threads in &THREADS {
+            let mut s = quant_sched.clone();
+            s.pool.threads = threads;
+            let mut plan =
+                PlanBuilder::new(&net, &params).schedule(s).batch(3).build().unwrap();
+            let rows = plan.run_batch(&refs).unwrap();
+            for (i, row) in rows.iter().enumerate() {
+                // Per-image quantization: batches == singles, bitwise.
+                assert_eq!(
+                    row,
+                    &plan.run(&inputs[i]).unwrap(),
+                    "u={u} threads={threads} row {i}: batch != single"
+                );
+                // Scale-aware tolerance against the f32 plan (int8 is
+                // approximate by design, never bitwise).
+                let want = precise.run(&inputs[i]).unwrap();
+                let scale = want.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+                for (x, y) in want.iter().zip(row) {
+                    assert!(
+                        y.is_finite() && (x - y).abs() < 0.15 * scale,
+                        "u={u} threads={threads}: {x} vs {y} (scale {scale})"
+                    );
+                }
+            }
+            // Integer accumulation is exact, so the thread count (and
+            // macro-item chunking) is bitwise invisible.
+            match &thread_oracle {
+                None => thread_oracle = Some(rows),
+                Some(want) => {
+                    assert_eq!(&rows, want, "u={u} threads={threads} vs threads=1")
+                }
+            }
+        }
+    }
+}
