@@ -37,7 +37,10 @@
 //! | [`autotune`] | on-device schedule search: budgeted greedy tuner, warmup + median-of-N timed plan walks per candidate, `cappuccino tune` → `schedule.json` |
 //! | [`inexact`] | per-layer arithmetic-mode analysis |
 //! | [`runtime`] | PJRT artifact loading/execution (`xla` crate) |
-//! | [`serve`] | request router, dynamic batcher (one plan walk per drained batch), worker pool |
+//! | [`serve`] | production serve front-end: admission control, SLO deadlines, continuous batching, multi-model tenancy |
+//! | [`serve::frontend`] | the request pipeline itself — typed rejections, drain-time admission, deadline-aware batch forming, lossless shutdown |
+//! | [`serve::tenancy`] | resident tenants from `schedule.json` artifacts: per-model plans, admission estimates, disjoint core partitions |
+//! | [`serve::workload`] | arrival processes (incl. bounded-Pareto heavy tails) + the open-loop replay driver behind `serve --replay` |
 //! | [`bench`] | in-repo micro-benchmark harness (criterion stand-in) |
 //! | [`testing`] | in-repo property-testing helper (proptest stand-in) |
 

@@ -19,7 +19,10 @@ use cappuccino::data::Dataset;
 use cappuccino::engine::{ArithMode, EngineParams, ModeAssignment, Schedule};
 use cappuccino::inexact::{self, AnalysisConfig};
 use cappuccino::model::zoo;
-use cappuccino::serve::{pjrt_factory, BatchPolicy, Server};
+use cappuccino::serve::{
+    build_engine_tenants, parse_models, pjrt_factory, replay, ArrivalProcess, BatchPolicy,
+    ReplaySpec, Server, SloTable, TenancyConfig, Tenant,
+};
 use cappuccino::soc::{self, ProcessingMode};
 use cappuccino::synth::{finalize, PrimarySynthesizer};
 use cappuccino::util::rng::Rng;
@@ -124,13 +127,26 @@ COMMANDS:
   simulate   --net NAME              Table I row for NAME on the device catalog
   serve      --net tinynet           serve a synthetic workload
              [--backend engine|pjrt] [--mode imprecise] [--requests 64]
-             [--batch 8] [--threads 1] [--cores 0,1]
+             [--batch 8] [--threads 1] [--cores 0,1] [--queue-depth 128]
              [--schedule schedule.json]
+             [--models a=schedule_a.json,b=schedule_b.json]
+             [--slo gold=5,bulk=50] [--device nexus5]
+             [--replay N] [--arrivals burst|uniform:R|poisson:R|
+              bursty:SIZE:GAPMS|pareto:R[:ALPHA[:CAP]]]
+             [--class gold[,bulk]] [--deadline-ms X]
+             [--deadline-factor F] [--seed 9] [--bench-out BENCH_serve.json]
              engine: batch-compiled native plans (one plan walk per
-             drained batch, no artifacts needed); pjrt: AOT artifacts
+             formed batch, no artifacts needed); pjrt: AOT artifacts
              --schedule serves a tuned artifact from `cappuccino tune`
              (engine backend only: modes, threads, per-layer schedule,
              and core set all come from the file)
+             --models hosts N engine tenants at once, one schedule
+             artifact each, with disjoint core sets and per-tenant
+             queues/admission; --slo names deadline classes (ms)
+             --replay drives an open-loop arrival trace through the
+             admission-controlled front-end (deadlines via --deadline-ms,
+             --deadline-factor F = F batch walks, or an --slo class via
+             --class) and writes p50/p99-under-load to --bench-out
              --cores pins the model worker to the given CPUs
              (sched_setaffinity; co-hosted models should use disjoint
              sets so they stop trampling each other's caches)
@@ -359,6 +375,43 @@ fn cmd_simulate(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--arrivals` spec (colon-separated fields).
+fn parse_arrivals(spec: &str) -> Result<ArrivalProcess> {
+    let num = |s: &str, what: &str| -> Result<f64> {
+        s.parse()
+            .map_err(|_| Error::Invalid(format!("--arrivals: bad {what} {s:?}")))
+    };
+    let parts: Vec<&str> = spec.split(':').collect();
+    match parts.as_slice() {
+        ["burst"] => Ok(ArrivalProcess::Burst),
+        ["uniform", r] => Ok(ArrivalProcess::Uniform { rate_per_s: num(r, "rate")? }),
+        ["poisson", r] => Ok(ArrivalProcess::Poisson { rate_per_s: num(r, "rate")? }),
+        ["bursty", size, gap_ms] => Ok(ArrivalProcess::Bursty {
+            size: num(size, "burst size")?.max(1.0) as usize,
+            gap: std::time::Duration::from_secs_f64(num(gap_ms, "gap")? / 1e3),
+        }),
+        ["pareto", r] => Ok(ArrivalProcess::BoundedPareto {
+            rate_per_s: num(r, "rate")?,
+            alpha: 1.5,
+            cap: 1000.0,
+        }),
+        ["pareto", r, a] => Ok(ArrivalProcess::BoundedPareto {
+            rate_per_s: num(r, "rate")?,
+            alpha: num(a, "alpha")?,
+            cap: 1000.0,
+        }),
+        ["pareto", r, a, k] => Ok(ArrivalProcess::BoundedPareto {
+            rate_per_s: num(r, "rate")?,
+            alpha: num(a, "alpha")?,
+            cap: num(k, "cap")?,
+        }),
+        _ => Err(Error::Invalid(format!(
+            "--arrivals {spec:?}: expected burst, uniform:R, poisson:R, bursty:SIZE:GAPMS, \
+             or pareto:R[:ALPHA[:CAP]]"
+        ))),
+    }
+}
+
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let net = flags.get("net", "tinynet");
     let mode = flags.get("mode", "imprecise");
@@ -366,6 +419,16 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let n_requests = flags.get_usize("requests", 64)?;
     let max_batch = flags.get_usize("batch", 8)?;
     let threads = flags.get_usize("threads", 1)?;
+    let queue_depth = flags.get_usize("queue-depth", 128)?;
+    let max_delay = std::time::Duration::from_secs_f64(
+        flags.get_f64("max-delay-ms", 2.0)?.max(0.0) / 1e3,
+    );
+    let slo_flag = flags.get("slo", "");
+    let slo = if slo_flag.is_empty() { SloTable::default() } else { SloTable::parse(&slo_flag)? };
+    let device_name = flags.get("device", "nexus5");
+    let device = soc::devices::by_name(&device_name)
+        .ok_or_else(|| Error::Invalid(format!("unknown device {device_name:?}")))?;
+    let models_flag = flags.get("models", "");
     let cores_flag = flags.get("cores", "");
     let cores = if cores_flag.is_empty() {
         None
@@ -389,105 +452,225 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let schedule_path = flags.get("schedule", "");
     let dir = cappuccino::artifacts_dir();
 
-    // A tuned schedule artifact may carry the worker's core set; an
-    // explicit --cores flag still wins.
-    let mut schedule_cores = None;
-    let (factory, input_len) = match backend.as_str() {
-        "engine" => {
-            // Native engine: batch-capacity plans compiled on the worker
-            // thread; every drained batch is one plan walk. Needs no
-            // artifacts — weights are random (latency/throughput demo).
-            let network = zoo::by_name(&net)
-                .ok_or_else(|| Error::Invalid(format!("unknown net {net:?}")))?;
-            let input_len = network.input.elements();
-            let eb = if !schedule_path.is_empty() {
-                // Serve the measured configuration exactly as tuned:
-                // per-layer schedule, modes, pool threads, and core set
-                // all come from the artifact.
-                let schedule = Schedule::load(&schedule_path)?;
-                if schedule.net != net {
-                    return Err(Error::Invalid(format!(
-                        "schedule {schedule_path:?} was tuned for net {:?}, serving {net:?} \
-                         (pass --net {})",
-                        schedule.net,
-                        schedule.net
-                    )));
-                }
-                schedule_cores = schedule.pool.cores;
-                let params = EngineParams::random(&network, 42, schedule.u)?;
-                eprintln!("compiling {net} batch plans from {schedule_path} (native engine) ...");
-                cappuccino::serve::EngineBackend::with_schedule(
-                    network,
-                    params,
-                    schedule,
-                    max_batch,
-                )
-            } else {
-                let arith: ArithMode = mode.parse()?;
-                let params = EngineParams::random(&network, 42, cappuccino::DEFAULT_U)?;
-                eprintln!("compiling {net}/{mode} batch plans (native engine) ...");
-                cappuccino::serve::EngineBackend::new(
-                    network,
-                    params,
-                    ModeAssignment::uniform(arith),
-                    threads,
-                    max_batch,
-                )
-            };
-            (eb.factory(), input_len)
-        }
-        "pjrt" if !schedule_path.is_empty() => {
+    let server = if !models_flag.is_empty() {
+        // Multi-model tenancy: one engine tenant per schedule artifact,
+        // each with its own queues, admission estimate, and (with more
+        // than one tenant) a disjoint partition of the host cores.
+        if !schedule_path.is_empty() {
             return Err(Error::Invalid(
-                "--schedule applies to the engine backend (PJRT executables are fixed \
-                 artifacts); drop --schedule or use --backend engine"
+                "--models already names one schedule per tenant; drop --schedule".into(),
+            ));
+        }
+        if flags.kv.contains_key("backend") && backend != "engine" {
+            return Err(Error::Invalid(
+                "--models hosts engine tenants (PJRT executables are fixed single-model \
+                 artifacts); drop --backend or use --backend engine"
                     .into(),
-            ))
+            ));
         }
-        "pjrt" => {
-            // tinynet serves its trained weights; other nets get random
-            // weights (latency-only serving demo).
-            let seed = if net == "tinynet" { None } else { Some(42) };
-            eprintln!("loading {net}/{mode} artifacts ...");
-            let manifest = cappuccino::runtime::Manifest::load(&dir)?;
-            let network = manifest
-                .nets
-                .get(&net)
-                .ok_or_else(|| Error::Invalid(format!("no net {net} in manifest")))?;
-            let input_len = network.input.elements();
-            (
-                pjrt_factory(dir.clone(), net.clone(), mode.clone(), seed),
-                input_len,
-            )
+        let specs = parse_models(&models_flag)?;
+        let cfg = TenancyConfig {
+            max_batch,
+            max_delay,
+            queue_depth,
+            partition_cores: cores.is_none(),
+            device,
+            seed: 42,
+        };
+        eprintln!("compiling {} tenants (native engine) ...", specs.len());
+        let mut tenants = build_engine_tenants(&specs, &cfg)?;
+        if cores.is_some() {
+            // An explicit --cores mask applies to every tenant (the user
+            // is overriding partitioning wholesale).
+            for t in &mut tenants {
+                t.policy.cores = cores;
+            }
         }
-        other => {
-            return Err(Error::Invalid(format!(
-                "--backend {other:?}: expected \"engine\" or \"pjrt\""
-            )))
+        for t in &tenants {
+            eprintln!(
+                "  {:<12} image_ms={:.3} max_batch={} cores={:?}",
+                t.name,
+                t.image_ms.unwrap_or(0.0),
+                t.policy.max_batch,
+                t.policy.cores,
+            );
         }
+        Server::start_tenants(tenants, slo)?
+    } else {
+        // Single-model path. A tuned schedule artifact may carry the
+        // worker's core set; an explicit --cores flag still wins.
+        let mut schedule_cores = None;
+        let (factory, input_len, image_ms) = match backend.as_str() {
+            "engine" => {
+                // Native engine: batch-capacity plans compiled on the
+                // worker thread; every formed batch is one plan walk.
+                // Needs no artifacts — weights are random
+                // (latency/throughput demo).
+                let network = zoo::by_name(&net)
+                    .ok_or_else(|| Error::Invalid(format!("unknown net {net:?}")))?;
+                let input_len = network.input.elements();
+                let (eb, image_ms) = if !schedule_path.is_empty() {
+                    // Serve the measured configuration exactly as tuned:
+                    // per-layer schedule, modes, pool threads, and core
+                    // set all come from the artifact.
+                    let schedule = Schedule::load(&schedule_path)?;
+                    if schedule.net != net {
+                        return Err(Error::Invalid(format!(
+                            "schedule {schedule_path:?} was tuned for net {:?}, serving {net:?} \
+                             (pass --net {})",
+                            schedule.net,
+                            schedule.net
+                        )));
+                    }
+                    schedule_cores = schedule.pool.cores;
+                    let image_ms = cappuccino::synth::predict_schedule_latency_ms(
+                        &schedule, &network, &device,
+                    )?;
+                    let params = EngineParams::random(&network, 42, schedule.u)?;
+                    eprintln!(
+                        "compiling {net} batch plans from {schedule_path} (native engine) ..."
+                    );
+                    let eb = cappuccino::serve::EngineBackend::with_schedule(
+                        network,
+                        params,
+                        schedule,
+                        max_batch,
+                    );
+                    (eb, image_ms)
+                } else {
+                    let arith: ArithMode = mode.parse()?;
+                    let modes = ModeAssignment::uniform(arith);
+                    // Same estimate the tenancy path derives from an
+                    // artifact, built from the uniform configuration.
+                    let uniform = Schedule::from_uniform(
+                        &network,
+                        cappuccino::DEFAULT_U,
+                        &modes,
+                        cappuccino::engine::Parallelism::Olp,
+                        true,
+                        None,
+                        cappuccino::engine::PoolSettings {
+                            threads,
+                            affinity: false,
+                            cores: None,
+                        },
+                    )?;
+                    let image_ms = cappuccino::synth::predict_schedule_latency_ms(
+                        &uniform, &network, &device,
+                    )?;
+                    let params = EngineParams::random(&network, 42, cappuccino::DEFAULT_U)?;
+                    eprintln!("compiling {net}/{mode} batch plans (native engine) ...");
+                    let eb = cappuccino::serve::EngineBackend::new(
+                        network,
+                        params,
+                        modes,
+                        threads,
+                        max_batch,
+                    );
+                    (eb, image_ms)
+                };
+                (eb.factory(), input_len, Some(image_ms))
+            }
+            "pjrt" if !schedule_path.is_empty() => {
+                return Err(Error::Invalid(
+                    "--schedule applies to the engine backend (PJRT executables are fixed \
+                     artifacts); drop --schedule or use --backend engine"
+                        .into(),
+                ))
+            }
+            "pjrt" => {
+                // tinynet serves its trained weights; other nets get
+                // random weights (latency-only serving demo). No analytic
+                // estimate for device executables: deadline admission is
+                // disabled (queue backpressure still applies).
+                let seed = if net == "tinynet" { None } else { Some(42) };
+                eprintln!("loading {net}/{mode} artifacts ...");
+                let manifest = cappuccino::runtime::Manifest::load(&dir)?;
+                let network = manifest
+                    .nets
+                    .get(&net)
+                    .ok_or_else(|| Error::Invalid(format!("no net {net} in manifest")))?;
+                let input_len = network.input.elements();
+                (
+                    pjrt_factory(dir.clone(), net.clone(), mode.clone(), seed),
+                    input_len,
+                    None,
+                )
+            }
+            other => {
+                return Err(Error::Invalid(format!(
+                    "--backend {other:?}: expected \"engine\" or \"pjrt\""
+                )))
+            }
+        };
+        let policy = BatchPolicy {
+            max_batch,
+            max_delay,
+            queue_depth,
+            cores: cores.or(schedule_cores),
+        };
+        let tenant = Tenant { name: net.clone(), factory, policy, image_ms, input_len };
+        Server::start_tenants(vec![tenant], slo)?
     };
-    let policy = BatchPolicy {
-        max_batch,
-        max_delay: std::time::Duration::from_millis(2),
-        queue_depth: 128,
-        cores: cores.or(schedule_cores),
-    };
-    let server = Server::start(vec![(net.clone(), factory, policy)])?;
 
-    // Synthetic client: dataset validation images (tinynet with
-    // artifacts) or noise.
-    let images: Vec<Vec<f32>> = if net == "tinynet" && dir.join("dataset.bin").exists() {
+    // Open-loop replay driver: arrival-spaced requests round-robin over
+    // the resident tenants, typed rejection accounting, p50/p99 to JSON.
+    if let Some(replay_n) = flags.kv.get("replay") {
+        let requests: usize = replay_n
+            .parse()
+            .map_err(|_| Error::Invalid(format!("--replay: bad request count {replay_n:?}")))?;
+        let class_flag = flags.get("class", "");
+        let classes: Vec<String> = if class_flag.is_empty() {
+            Vec::new()
+        } else {
+            class_flag.split(',').map(|s| s.trim().to_string()).collect()
+        };
+        let deadline_ms = flags.get_f64("deadline-ms", 0.0)?;
+        let spec = ReplaySpec {
+            requests,
+            arrivals: parse_arrivals(&flags.get("arrivals", "burst"))?,
+            seed: flags.get_usize("seed", 9)? as u64,
+            classes,
+            deadline: if deadline_ms > 0.0 {
+                Some(std::time::Duration::from_secs_f64(deadline_ms / 1e3))
+            } else {
+                None
+            },
+            deadline_factor: match flags.kv.get("deadline-factor") {
+                Some(v) => Some(v.parse().map_err(|_| {
+                    Error::Invalid(format!("--deadline-factor: bad number {v:?}"))
+                })?),
+                None => None,
+            },
+        };
+        eprintln!("replaying {requests} requests ({}) ...", spec.arrivals.label());
+        let outcome = replay(&server, &spec);
+        println!("{}", outcome.summary_line());
+        println!("{}", server.metrics().summary());
+        let out = flags.get("bench-out", "BENCH_serve.json");
+        std::fs::write(&out, outcome.to_json().to_string())?;
+        eprintln!("wrote {out}");
+        server.shutdown();
+        return Ok(());
+    }
+
+    // Closed-loop demo: submit everything up front against the first
+    // tenant, wait for every reply. Synthetic client images: dataset
+    // validation images (tinynet with artifacts) or noise.
+    let first = server.tenants()[0].clone();
+    let images: Vec<Vec<f32>> = if first.name == "tinynet" && dir.join("dataset.bin").exists() {
         let dataset = Dataset::read_from(dir.join("dataset.bin"))?;
         let (val, _) = dataset.validation();
         (0..n_requests).map(|i| val[i % val.len()].clone()).collect()
     } else {
         let mut rng = Rng::new(9);
-        (0..n_requests).map(|_| rng.normal_vec(input_len)).collect()
+        (0..n_requests).map(|_| rng.normal_vec(first.input_len.max(1))).collect()
     };
 
     eprintln!("serving {n_requests} requests ...");
     let mut receivers = Vec::with_capacity(n_requests);
     for img in images {
-        receivers.push(server.router().submit(&net, img)?);
+        receivers.push(server.router().submit(&first.name, img)?);
     }
     let mut ok = 0;
     for rx in receivers {

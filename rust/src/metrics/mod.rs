@@ -210,12 +210,34 @@ impl Clone for AllocCounter {
     }
 }
 
-/// Serving-side counters (requests, batches, rejections).
+/// Serving-side counters (requests, batches, rejections by reason,
+/// deadline outcomes).
+///
+/// `rejected` is always the **total** across the per-reason counters —
+/// the front-end bumps the total and exactly one reason on every
+/// refusal, so `rejected == rejected_queue_full + rejected_deadline +
+/// rejected_unknown_model + rejected_other` holds at any quiescent
+/// point.
 #[derive(Debug, Default)]
 pub struct ServeCounters {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
+    /// Total refusals (sum of the per-reason counters below).
     pub rejected: AtomicU64,
+    /// Bounded-queue backpressure refusals.
+    pub rejected_queue_full: AtomicU64,
+    /// Admission-control load sheds: predicted queue drain time
+    /// exceeded the request's deadline.
+    pub rejected_deadline: AtomicU64,
+    /// Requests naming a model that is not resident.
+    pub rejected_unknown_model: AtomicU64,
+    /// Everything else (unknown SLO class, worker gone).
+    pub rejected_other: AtomicU64,
+    /// Admitted requests whose reply beat their deadline.
+    pub deadline_met: AtomicU64,
+    /// Admitted requests replied to *after* their deadline (still
+    /// replied — admitted work is never silently dropped).
+    pub deadline_missed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
 }
@@ -228,6 +250,74 @@ impl ServeCounters {
         } else {
             self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
         }
+    }
+}
+
+/// Per-SLO-class latency histograms.
+///
+/// Classes are registered **once** at server start, so the record path
+/// is lock-free (a linear scan over a handful of names, then an atomic
+/// histogram update). Requests without a class — and requests naming a
+/// class that was never registered, which the front-end rejects before
+/// they reach here anyway — land in the implicit `"default"` slot.
+#[derive(Debug)]
+pub struct LatencyByClass {
+    classes: Vec<(String, LatencyHistogram)>,
+}
+
+impl Default for LatencyByClass {
+    fn default() -> Self {
+        LatencyByClass::with_classes(&[])
+    }
+}
+
+impl LatencyByClass {
+    /// `"default"` plus the given class names (duplicates folded).
+    pub fn with_classes(names: &[String]) -> Self {
+        let mut classes = vec![("default".to_string(), LatencyHistogram::new())];
+        for n in names {
+            if !classes.iter().any(|(c, _)| c == n) {
+                classes.push((n.clone(), LatencyHistogram::new()));
+            }
+        }
+        LatencyByClass { classes }
+    }
+
+    /// Record a completion latency under `class` (`None` → "default").
+    pub fn record(&self, class: Option<&str>, d: Duration) {
+        let name = class.unwrap_or("default");
+        let slot = self
+            .classes
+            .iter()
+            .find(|(c, _)| c == name)
+            .unwrap_or(&self.classes[0]);
+        slot.1.record(d);
+    }
+
+    pub fn histogram(&self, class: &str) -> Option<&LatencyHistogram> {
+        self.classes.iter().find(|(c, _)| c == class).map(|(_, h)| h)
+    }
+
+    /// Registered class names, "default" first.
+    pub fn class_names(&self) -> Vec<&str> {
+        self.classes.iter().map(|(c, _)| c.as_str()).collect()
+    }
+
+    /// `class[p50/p99]` fragments for every class that saw traffic.
+    pub fn summary(&self) -> String {
+        self.classes
+            .iter()
+            .filter(|(_, h)| h.count() > 0)
+            .map(|(c, h)| {
+                format!(
+                    "{c}[n={} p50={} p99={}]",
+                    h.count(),
+                    crate::util::fmt_duration(h.quantile(0.50)),
+                    crate::util::fmt_duration(h.quantile(0.99)),
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
     }
 }
 
@@ -293,6 +383,23 @@ mod tests {
         c.reset();
         assert_eq!(c.bytes(), 0);
         assert_eq!(d.bytes(), 1536, "clone must snapshot, not share");
+    }
+
+    #[test]
+    fn latency_by_class_routes_and_defaults() {
+        let by = LatencyByClass::with_classes(&["gold".into(), "bulk".into(), "gold".into()]);
+        assert_eq!(by.class_names(), vec!["default", "gold", "bulk"]);
+        by.record(Some("gold"), Duration::from_micros(100));
+        by.record(Some("gold"), Duration::from_micros(200));
+        by.record(None, Duration::from_micros(300));
+        by.record(Some("nope"), Duration::from_micros(400)); // unknown -> default
+        assert_eq!(by.histogram("gold").unwrap().count(), 2);
+        assert_eq!(by.histogram("default").unwrap().count(), 2);
+        assert_eq!(by.histogram("bulk").unwrap().count(), 0);
+        assert!(by.histogram("nope").is_none());
+        let s = by.summary();
+        assert!(s.contains("gold[") && s.contains("default["));
+        assert!(!s.contains("bulk["), "empty classes stay out of the summary: {s}");
     }
 
     #[test]

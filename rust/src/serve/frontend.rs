@@ -1,0 +1,1192 @@
+//! Serve front-end: admission control → batch forming → worker
+//! execution.
+//!
+//! This is the throughput-governed pipeline in front of the execution
+//! backends ([`super::Backend`]):
+//!
+//! 1. **Admission** ([`Router::submit_with`]): a request names a model
+//!    and optionally carries a deadline — explicit, or via a named
+//!    [`SloClass`]. Each tenant's [`AdmissionController`] holds an
+//!    analytic per-image service estimate (from
+//!    [`crate::synth::predict_latency_ms`] via the tenant's loaded
+//!    `Schedule` — see [`crate::serve::tenancy`]) and a count of
+//!    admitted-but-unfinished requests; when the predicted queue drain
+//!    time exceeds the request's deadline, the request is load-shed as
+//!    a typed [`Rejected::DeadlineInfeasible`] *before* it occupies
+//!    queue space. A full bounded queue sheds as
+//!    [`Rejected::QueueFull`] (backpressure). Every refusal bumps the
+//!    total plus exactly one per-reason counter.
+//! 2. **Batch forming** (continuous batching, `worker_loop`): the
+//!    worker admits arriving requests into the currently *forming*
+//!    batch until a size budget (`max_batch`/backend capacity) or time
+//!    budget (`max_delay` from when the batch started forming) — and
+//!    closes **early** when the oldest member's slack is about to
+//!    expire (its deadline minus the estimated batch execution time),
+//!    so a deadline-carrying request is never held open for company it
+//!    cannot afford. There are no fixed drain ticks: a request that
+//!    arrives while a batch is forming rides that batch.
+//! 3. **Execution** (`run_batch`): one backend call per formed batch.
+//!    Replies carry whether the deadline was met; a request whose
+//!    deadline expired while it sat in a forming batch (or in the
+//!    queue) **still executes and still gets a reply** — admitted work
+//!    is never silently dropped, it is only counted `deadline_missed`.
+//!
+//! **Backpressure contract**: admission happens before enqueue, so the
+//! bounded per-tenant queue is the only buffering; a submit either
+//! returns a reply channel (the request *will* be answered, shutdown
+//! included — the PR 4 drain guarantee, kept by
+//! `drain_after_shutdown`) or a typed [`Error::Rejected`]. One
+//! tenant's congestion is invisible to another's: queues, admission
+//! counters, workers, and core sets are all per-tenant.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::serve::{Backend, BackendFactory, BatchPolicy, ServeMetrics};
+use crate::util::error::{Error, Result};
+
+/// An inference request: one image (conventional NCHW layout) plus its
+/// deadline/class tags.
+pub struct ServeRequest {
+    pub image: Vec<f32>,
+    enqueued: Instant,
+    /// Absolute deadline (admission time + the relative deadline).
+    deadline: Option<Instant>,
+    /// SLO class tag (per-class latency accounting).
+    class: Option<String>,
+    reply: mpsc::SyncSender<ServeResponse>,
+}
+
+/// The reply: logits + measured latency + the batch it rode in +
+/// whether the reply beat the request's deadline (`true` when the
+/// request carried none).
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+    pub deadline_met: bool,
+}
+
+/// Why the front-end refused a request at admission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Rejected {
+    /// The model's bounded queue is full (backpressure).
+    QueueFull { model: String, depth: usize },
+    /// Predicted queue drain time exceeds the request's deadline —
+    /// admitting it could only produce a late reply, so it is shed.
+    DeadlineInfeasible { model: String, predicted_ms: f64, deadline_ms: f64 },
+    /// No resident model has that name.
+    UnknownModel { model: String },
+    /// The request names an SLO class the server does not define.
+    UnknownClass { class: String },
+    /// The tenant's worker has exited (server shutting down).
+    WorkerGone { model: String },
+}
+
+impl Rejected {
+    /// Stable reason slug (the per-reason metrics key).
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Rejected::QueueFull { .. } => "queue_full",
+            Rejected::DeadlineInfeasible { .. } => "deadline",
+            Rejected::UnknownModel { .. } => "unknown_model",
+            Rejected::UnknownClass { .. } => "unknown_class",
+            Rejected::WorkerGone { .. } => "worker_gone",
+        }
+    }
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Rejected::QueueFull { model, depth } => {
+                write!(f, "model {model:?}: queue full (backpressure, depth {depth})")
+            }
+            Rejected::DeadlineInfeasible { model, predicted_ms, deadline_ms } => write!(
+                f,
+                "model {model:?}: deadline infeasible (predicted drain \
+                 {predicted_ms:.2} ms > deadline {deadline_ms:.2} ms)"
+            ),
+            Rejected::UnknownModel { model } => write!(f, "unknown model {model:?}"),
+            Rejected::UnknownClass { class } => write!(f, "unknown SLO class {class:?}"),
+            Rejected::WorkerGone { model } => write!(f, "model {model:?}: worker gone"),
+        }
+    }
+}
+
+/// A named latency objective: requests tagged with the class inherit
+/// its relative deadline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloClass {
+    pub name: String,
+    pub deadline: Duration,
+}
+
+/// The server's SLO class table (empty = no named classes).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SloTable {
+    classes: Vec<SloClass>,
+}
+
+impl SloTable {
+    pub fn new(classes: Vec<SloClass>) -> Result<SloTable> {
+        for (i, c) in classes.iter().enumerate() {
+            if c.deadline.is_zero() {
+                return Err(Error::Invalid(format!("SLO class {:?}: zero deadline", c.name)));
+            }
+            if classes[..i].iter().any(|p| p.name == c.name) {
+                return Err(Error::Invalid(format!("SLO class {:?} defined twice", c.name)));
+            }
+        }
+        Ok(SloTable { classes })
+    }
+
+    /// Parse the `--slo` flag format: `name=ms[,name=ms...]`, e.g.
+    /// `gold=5,bulk=50` (fractional milliseconds allowed).
+    pub fn parse(spec: &str) -> Result<SloTable> {
+        let mut classes = Vec::new();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (name, ms) = part
+                .split_once('=')
+                .ok_or_else(|| Error::Invalid(format!("--slo: expected name=ms, got {part:?}")))?;
+            let ms: f64 = ms
+                .trim()
+                .parse()
+                .map_err(|_| Error::Invalid(format!("--slo {name}: bad milliseconds {ms:?}")))?;
+            if !(ms > 0.0) {
+                return Err(Error::Invalid(format!("--slo {name}: deadline must be > 0 ms")));
+            }
+            classes.push(SloClass {
+                name: name.trim().to_string(),
+                deadline: Duration::from_secs_f64(ms / 1e3),
+            });
+        }
+        SloTable::new(classes)
+    }
+
+    pub fn deadline_of(&self, name: &str) -> Option<Duration> {
+        self.classes.iter().find(|c| c.name == name).map(|c| c.deadline)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.classes.iter().map(|c| c.name.clone()).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+}
+
+/// Per-request options for [`Router::submit_with`].
+#[derive(Debug, Clone, Default)]
+pub struct RequestOptions {
+    /// SLO class name: supplies the deadline (unless `deadline` is set)
+    /// and the per-class latency accounting slot.
+    pub class: Option<String>,
+    /// Explicit relative deadline; wins over the class deadline.
+    pub deadline: Option<Duration>,
+}
+
+/// Per-tenant admission state: the analytic service estimate plus the
+/// count of admitted-but-unfinished requests (queued + forming +
+/// executing — decremented only when a request is answered or drained).
+///
+/// The drain-time model is deliberately simple and fully analytic:
+/// serving `pending` requests ahead of a new one takes
+/// `ceil((pending + 1) / max_batch)` full batch walks of
+/// `max_batch × image_ms` each (the per-image estimate comes from the
+/// SoC latency model, [`crate::synth::predict_latency_ms`], via the
+/// tenant's schedule — no measurement, no warm-up dependence). More
+/// than a queue-depth check, deterministic enough to test exactly.
+#[derive(Debug)]
+pub struct AdmissionController {
+    image_ms: Option<f64>,
+    max_batch: usize,
+    pending: AtomicUsize,
+}
+
+impl AdmissionController {
+    /// `image_ms = None` disables deadline-infeasibility shedding (the
+    /// pending count is still maintained for observability).
+    pub fn new(image_ms: Option<f64>, max_batch: usize) -> AdmissionController {
+        AdmissionController { image_ms, max_batch: max_batch.max(1), pending: AtomicUsize::new(0) }
+    }
+
+    /// Admitted-but-unfinished requests right now.
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    /// Estimated wall time of one full batch walk (ms).
+    pub fn batch_ms(&self) -> Option<f64> {
+        self.image_ms.map(|ms| ms * self.max_batch as f64)
+    }
+
+    /// Predicted time until a request admitted behind `pending` others
+    /// would complete: `ceil((pending + 1) / max_batch)` batch walks.
+    pub fn predicted_drain_ms(&self, pending: usize) -> Option<f64> {
+        self.image_ms.map(|ms| {
+            let c = self.max_batch;
+            // pending / c + 1 == ceil((pending + 1) / c) for integers.
+            (pending / c + 1) as f64 * c as f64 * ms
+        })
+    }
+
+    /// Admit (incrementing `pending`) unless the predicted drain time
+    /// exceeds the deadline; on refusal returns `(predicted_ms,
+    /// deadline_ms)`. CAS loop so the check and the increment are one
+    /// step — concurrent submitters cannot both squeeze through the
+    /// last feasible slot.
+    fn try_admit(&self, deadline: Option<Duration>) -> std::result::Result<(), (f64, f64)> {
+        loop {
+            let cur = self.pending.load(Ordering::Acquire);
+            if let (Some(d), Some(predicted)) = (deadline, self.predicted_drain_ms(cur)) {
+                let d_ms = d.as_secs_f64() * 1e3;
+                if predicted > d_ms {
+                    return Err((predicted, d_ms));
+                }
+            }
+            if self
+                .pending
+                .compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Undo an admission that could not be enqueued (queue full).
+    fn retract(&self) {
+        self.pending.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// `n` admitted requests were answered (or drained).
+    fn complete(&self, n: usize) {
+        self.pending.fetch_sub(n, Ordering::AcqRel);
+    }
+}
+
+/// One resident model: execution backend + batching policy + admission
+/// inputs. See [`crate::serve::tenancy`] for building these from
+/// `schedule.json` artifacts.
+pub struct Tenant {
+    pub name: String,
+    pub factory: BackendFactory,
+    pub policy: BatchPolicy,
+    /// Analytic per-image service estimate (ms) for admission control;
+    /// `None` disables deadline shedding for this tenant.
+    pub image_ms: Option<f64>,
+    /// Expected input element count (replay drivers; 0 = unknown).
+    pub input_len: usize,
+}
+
+/// Static per-tenant facts the server exposes (for replay drivers and
+/// diagnostics).
+#[derive(Debug, Clone)]
+pub struct TenantInfo {
+    pub name: String,
+    pub input_len: usize,
+    pub image_ms: Option<f64>,
+    pub max_batch: usize,
+}
+
+pub(super) enum Job {
+    Infer(ServeRequest),
+    Shutdown,
+}
+
+struct TenantHandle {
+    queue: mpsc::SyncSender<Job>,
+    admission: Arc<AdmissionController>,
+    depth: usize,
+}
+
+/// Routes requests to per-tenant bounded queues, applying admission
+/// control first.
+pub struct Router {
+    tenants: HashMap<String, TenantHandle>,
+    slo: SloTable,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Router {
+    /// Submit with default options (no class, no deadline).
+    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<mpsc::Receiver<ServeResponse>> {
+        self.submit_with(model, image, RequestOptions::default())
+    }
+
+    /// Submit an image for inference on `model`; returns the response
+    /// receiver. Refusals are typed [`Error::Rejected`]: full queues
+    /// (backpressure), infeasible deadlines (load shedding), unknown
+    /// models/classes. An `Ok` means the request **will** be answered —
+    /// shutdown drains included.
+    pub fn submit_with(
+        &self,
+        model: &str,
+        image: Vec<f32>,
+        opts: RequestOptions,
+    ) -> Result<mpsc::Receiver<ServeResponse>> {
+        self.metrics.counters.requests.fetch_add(1, Ordering::Relaxed);
+        let handle = match self.tenants.get(model) {
+            Some(h) => h,
+            None => return Err(self.reject(Rejected::UnknownModel { model: model.into() })),
+        };
+        let class_deadline = match &opts.class {
+            Some(c) => match self.slo.deadline_of(c) {
+                Some(d) => Some(d),
+                None => return Err(self.reject(Rejected::UnknownClass { class: c.clone() })),
+            },
+            None => None,
+        };
+        let deadline = opts.deadline.or(class_deadline);
+        if let Err((predicted_ms, deadline_ms)) = handle.admission.try_admit(deadline) {
+            return Err(self.reject(Rejected::DeadlineInfeasible {
+                model: model.into(),
+                predicted_ms,
+                deadline_ms,
+            }));
+        }
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        let now = Instant::now();
+        let req = ServeRequest {
+            image,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            class: opts.class,
+            reply: reply_tx,
+        };
+        match handle.queue.try_send(Job::Infer(req)) {
+            Ok(()) => Ok(reply_rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                handle.admission.retract();
+                Err(self.reject(Rejected::QueueFull { model: model.into(), depth: handle.depth }))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                handle.admission.retract();
+                Err(self.reject(Rejected::WorkerGone { model: model.into() }))
+            }
+        }
+    }
+
+    /// Submit and wait for the response.
+    pub fn infer_blocking(&self, model: &str, image: Vec<f32>) -> Result<ServeResponse> {
+        let rx = self.submit(model, image)?;
+        rx.recv()
+            .map_err(|_| Error::Serve("worker dropped the request".into()))
+    }
+
+    /// The server's SLO class table.
+    pub fn slo(&self) -> &SloTable {
+        &self.slo
+    }
+
+    /// A tenant's admission controller (observability / tests).
+    pub fn admission(&self, model: &str) -> Option<&AdmissionController> {
+        self.tenants.get(model).map(|h| h.admission.as_ref())
+    }
+
+    /// Count the refusal (total + per-reason) and wrap it.
+    fn reject(&self, r: Rejected) -> Error {
+        let c = &self.metrics.counters;
+        c.rejected.fetch_add(1, Ordering::Relaxed);
+        match &r {
+            Rejected::QueueFull { .. } => c.rejected_queue_full.fetch_add(1, Ordering::Relaxed),
+            Rejected::DeadlineInfeasible { .. } => {
+                c.rejected_deadline.fetch_add(1, Ordering::Relaxed)
+            }
+            Rejected::UnknownModel { .. } => {
+                c.rejected_unknown_model.fetch_add(1, Ordering::Relaxed)
+            }
+            Rejected::UnknownClass { .. } | Rejected::WorkerGone { .. } => {
+                c.rejected_other.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+        Error::Rejected(r)
+    }
+}
+
+/// A running server: router + one worker thread per tenant.
+pub struct Server {
+    router: Router,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    shutdown_txs: Vec<mpsc::SyncSender<Job>>,
+    metrics: Arc<ServeMetrics>,
+    tenants: Vec<TenantInfo>,
+}
+
+impl Server {
+    /// Start a server hosting the given `(model name, backend factory,
+    /// policy)` triples — the pre-tenancy surface, kept for callers
+    /// that need neither deadlines nor admission control.
+    pub fn start(models: Vec<(String, BackendFactory, BatchPolicy)>) -> Result<Server> {
+        let tenants = models
+            .into_iter()
+            .map(|(name, factory, policy)| Tenant {
+                name,
+                factory,
+                policy,
+                image_ms: None,
+                input_len: 0,
+            })
+            .collect();
+        Server::start_tenants(tenants, SloTable::default())
+    }
+
+    /// Start a multi-tenant server: one worker thread, bounded queue,
+    /// and admission controller per tenant, plus a shared SLO table.
+    pub fn start_tenants(tenants: Vec<Tenant>, slo: SloTable) -> Result<Server> {
+        let metrics = Arc::new(ServeMetrics::with_classes(&slo.names()));
+        let mut handles_map = HashMap::new();
+        let mut infos = Vec::new();
+        let mut handles = Vec::new();
+        let mut shutdown_txs = Vec::new();
+        for t in tenants {
+            if handles_map.contains_key(&t.name) {
+                return Err(Error::Serve(format!("tenant {:?} defined twice", t.name)));
+            }
+            let (tx, rx) = mpsc::sync_channel::<Job>(t.policy.queue_depth);
+            let admission = Arc::new(AdmissionController::new(t.image_ms, t.policy.max_batch));
+            // Construct the backend on the worker thread and report
+            // failures back through a startup channel.
+            let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+            let m = Arc::clone(&metrics);
+            let adm = Arc::clone(&admission);
+            let policy = t.policy;
+            let factory = t.factory;
+            let handle = std::thread::Builder::new()
+                .name(format!("cappuccino-worker-{}", t.name))
+                .spawn(move || worker_loop(factory, rx, policy, adm, m, ready_tx))
+                .map_err(|e| Error::Serve(format!("spawn worker: {e}")))?;
+            ready_rx
+                .recv()
+                .map_err(|_| Error::Serve(format!("worker {} died during startup", t.name)))??;
+            infos.push(TenantInfo {
+                name: t.name.clone(),
+                input_len: t.input_len,
+                image_ms: t.image_ms,
+                max_batch: t.policy.max_batch,
+            });
+            handles_map.insert(
+                t.name,
+                TenantHandle { queue: tx.clone(), admission, depth: t.policy.queue_depth },
+            );
+            shutdown_txs.push(tx);
+            handles.push(handle);
+        }
+        Ok(Server {
+            router: Router { tenants: handles_map, slo, metrics: Arc::clone(&metrics) },
+            handles,
+            shutdown_txs,
+            metrics,
+            tenants: infos,
+        })
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Static facts about the resident tenants.
+    pub fn tenants(&self) -> &[TenantInfo] {
+        &self.tenants
+    }
+
+    /// Stop workers and join them. Every request admitted before the
+    /// shutdown signal is executed and answered first (lossless drain).
+    pub fn shutdown(mut self) {
+        for tx in &self.shutdown_txs {
+            let _ = tx.send(Job::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Estimated batch execution time as a `Duration` (for slack-aware
+/// batch closing); `None` when the tenant has no service estimate.
+fn exec_estimate(admission: &AdmissionController) -> Option<Duration> {
+    admission.batch_ms().map(|ms| Duration::from_secs_f64(ms / 1e3))
+}
+
+/// When must the forming batch close so `req` can still be answered in
+/// time? `deadline - exec_estimate` (saturating to "now" when already
+/// past); `None` when either half is unknown.
+fn slack_close(req: &ServeRequest, exec: Option<Duration>) -> Option<Instant> {
+    match (req.deadline, exec) {
+        (Some(d), Some(e)) => Some(d.checked_sub(e).unwrap_or_else(Instant::now)),
+        _ => None,
+    }
+}
+
+/// Worker: pin if requested, construct backend, then continuously
+/// batch-and-execute until shutdown — and **drain** on shutdown (see
+/// [`drain_after_shutdown`]).
+pub(super) fn worker_loop(
+    factory: BackendFactory,
+    rx: mpsc::Receiver<Job>,
+    policy: BatchPolicy,
+    admission: Arc<AdmissionController>,
+    metrics: Arc<ServeMetrics>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    if let Some(cores) = policy.cores {
+        // Placement hint only: failure (or a non-Linux host) leaves the
+        // worker unpinned and everything else identical.
+        let _ = crate::engine::topology::pin_current_thread(&cores.cpus());
+    }
+    let mut backend = match factory() {
+        Ok(b) => {
+            let _ = ready.send(Ok(()));
+            b
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let max_capacity = backend
+        .batch_sizes()
+        .last()
+        .copied()
+        .unwrap_or(1)
+        .min(policy.max_batch)
+        .max(1);
+    let exec = exec_estimate(&admission);
+
+    loop {
+        // Block for the first request — it opens a forming batch.
+        let first = match rx.recv() {
+            Ok(Job::Infer(r)) => r,
+            Ok(Job::Shutdown) => {
+                drain_after_shutdown(&mut *backend, &rx, max_capacity, &admission, &metrics);
+                return;
+            }
+            Err(_) => return,
+        };
+        // Continuous batching: the batch stays open — admitting every
+        // arrival — until its size budget (capacity), its time budget
+        // (max_delay from now), or the earliest member's slack expiry,
+        // whichever comes first. The slack term closes a batch *early*
+        // so its execution can still beat the tightest deadline aboard.
+        let mut close = Instant::now() + policy.max_delay;
+        if let Some(s) = slack_close(&first, exec) {
+            close = close.min(s);
+        }
+        let mut batch = vec![first];
+        while batch.len() < max_capacity {
+            let now = Instant::now();
+            if close <= now {
+                break;
+            }
+            match rx.recv_timeout(close.saturating_duration_since(now)) {
+                Ok(Job::Infer(r)) => {
+                    if let Some(s) = slack_close(&r, exec) {
+                        close = close.min(s);
+                    }
+                    batch.push(r);
+                }
+                Ok(Job::Shutdown) => {
+                    run_batch(&mut *backend, &batch, &admission, &metrics);
+                    drain_after_shutdown(&mut *backend, &rx, max_capacity, &admission, &metrics);
+                    return;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    run_batch(&mut *backend, &batch, &admission, &metrics);
+                    return;
+                }
+            }
+        }
+        run_batch(&mut *backend, &batch, &admission, &metrics);
+    }
+}
+
+/// Post-shutdown drain: execute every request already sitting in the
+/// queue, in arrival order, batched at the worker's capacity.
+///
+/// Without this, a worker observing `Job::Shutdown` returned
+/// immediately and dropped every `Infer` job queued behind the signal —
+/// requests the router had *accepted* (clients were already waiting on
+/// a reply channel) surfaced as "worker dropped the request". A
+/// shutdown closes the door to new work but always finishes work it
+/// let in — the front-end's lossless-drain invariant, held per tenant.
+pub(super) fn drain_after_shutdown(
+    backend: &mut dyn Backend,
+    rx: &mpsc::Receiver<Job>,
+    max_capacity: usize,
+    admission: &AdmissionController,
+    metrics: &ServeMetrics,
+) {
+    let mut batch: Vec<ServeRequest> = Vec::new();
+    loop {
+        match rx.try_recv() {
+            Ok(Job::Infer(r)) => {
+                batch.push(r);
+                if batch.len() >= max_capacity {
+                    run_batch(backend, &batch, admission, metrics);
+                    batch.clear();
+                }
+            }
+            // Duplicate shutdown signals fold into the first.
+            Ok(Job::Shutdown) => {}
+            Err(mpsc::TryRecvError::Empty) | Err(mpsc::TryRecvError::Disconnected) => break,
+        }
+    }
+    if !batch.is_empty() {
+        run_batch(backend, &batch, admission, metrics);
+    }
+}
+
+/// Execute one formed batch at the smallest adequate AOT capacity and
+/// answer every member — deadline-expired members included (counted
+/// `deadline_missed`, never dropped).
+pub(super) fn run_batch(
+    backend: &mut dyn Backend,
+    batch: &[ServeRequest],
+    admission: &AdmissionController,
+    metrics: &ServeMetrics,
+) {
+    // Pick the smallest compiled capacity that fits the batch; fall back
+    // to the largest (callers never exceed it by construction).
+    let capacity = backend
+        .batch_sizes()
+        .iter()
+        .copied()
+        .find(|&b| b >= batch.len())
+        .unwrap_or_else(|| backend.batch_sizes().last().copied().unwrap_or(1));
+
+    let images: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
+    let result = backend.infer_batch(&images, capacity);
+    metrics.counters.batches.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .counters
+        .batched_items
+        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+    match result {
+        Ok(rows) => {
+            for (req, logits) in batch.iter().zip(rows) {
+                let now = Instant::now();
+                let latency = now.duration_since(req.enqueued);
+                let deadline_met = req.deadline.map_or(true, |d| now <= d);
+                metrics.latency.record(latency);
+                metrics.by_class.record(req.class.as_deref(), latency);
+                metrics.counters.completed.fetch_add(1, Ordering::Relaxed);
+                if req.deadline.is_some() {
+                    let c = if deadline_met {
+                        &metrics.counters.deadline_met
+                    } else {
+                        &metrics.counters.deadline_missed
+                    };
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+                metrics.throughput.add(1);
+                let _ = req.reply.send(ServeResponse {
+                    logits,
+                    latency,
+                    batch_size: batch.len(),
+                    deadline_met,
+                });
+            }
+        }
+        Err(e) => {
+            // Drop the reply senders: receivers observe RecvError.
+            eprintln!("worker batch failed: {e}");
+        }
+    }
+    // Success or failure, these requests no longer occupy the tenant's
+    // admission window.
+    admission.complete(batch.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ArithMode, EngineParams, ModeAssignment};
+    use crate::model::zoo;
+    use crate::serve::EngineBackend;
+    use crate::util::rng::Rng;
+
+    fn engine_server(max_batch: usize, policy: BatchPolicy) -> Server {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 7, 4).unwrap();
+        let backend = EngineBackend::new(
+            net,
+            params,
+            ModeAssignment::uniform(ArithMode::Imprecise),
+            1,
+            max_batch,
+        );
+        Server::start(vec![("tinynet".into(), backend.factory(), policy)]).unwrap()
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = engine_server(8, BatchPolicy::default());
+        let mut rng = Rng::new(1);
+        let img = rng.normal_vec(3 * 16 * 16);
+        let resp = server.router().infer_blocking("tinynet", img).unwrap();
+        assert_eq!(resp.logits.len(), 8);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        assert!(resp.deadline_met, "no deadline means the deadline is met");
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let server = engine_server(8, BatchPolicy::default());
+        let err = server.router().submit("resnet", vec![0.0; 768]).unwrap_err();
+        assert!(err.to_string().contains("unknown model"));
+        assert!(matches!(err, Error::Rejected(Rejected::UnknownModel { .. })));
+        let c = &server.metrics().counters;
+        assert_eq!(c.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(c.rejected_unknown_model.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn burst_is_batched() {
+        let server = engine_server(
+            8,
+            BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(30),
+                queue_depth: 64,
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(2);
+        let rxs: Vec<_> = (0..12)
+            .map(|_| {
+                server
+                    .router()
+                    .submit("tinynet", rng.normal_vec(3 * 16 * 16))
+                    .unwrap()
+            })
+            .collect();
+        let responses: Vec<ServeResponse> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert_eq!(responses.len(), 12);
+        // At least one response must have ridden a multi-request batch.
+        assert!(
+            responses.iter().any(|r| r.batch_size > 1),
+            "batcher never formed a batch"
+        );
+        let m = server.metrics();
+        assert_eq!(m.counters.completed.load(Ordering::Relaxed), 12);
+        assert!(m.counters.batches.load(Ordering::Relaxed) < 12);
+        server.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Tiny queue + slow drain: flooding must produce rejections,
+        // all typed QueueFull and all counted under that reason.
+        let server = engine_server(
+            1,
+            BatchPolicy {
+                max_batch: 1,
+                max_delay: Duration::ZERO,
+                queue_depth: 2,
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(3);
+        let mut rejected = 0;
+        let mut pending = Vec::new();
+        for _ in 0..200 {
+            match server.router().submit("tinynet", rng.normal_vec(3 * 16 * 16)) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => {
+                    assert!(matches!(e, Error::Rejected(Rejected::QueueFull { .. })), "{e}");
+                    rejected += 1;
+                }
+            }
+        }
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        assert!(rejected > 0, "queue never filled");
+        let c = &server.metrics().counters;
+        assert_eq!(c.rejected.load(Ordering::Relaxed), rejected);
+        assert_eq!(c.rejected_queue_full.load(Ordering::Relaxed), rejected);
+        assert_eq!(c.rejected_deadline.load(Ordering::Relaxed), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn admission_controller_thresholds_are_exact() {
+        // predicted = ceil((pending+1)/4) * 4 * 10ms. The controller
+        // must shed exactly the admissions whose prediction exceeds the
+        // deadline — no off-by-one at the batch boundary.
+        let a = AdmissionController::new(Some(10.0), 4);
+        assert_eq!(a.predicted_drain_ms(0), Some(40.0));
+        assert_eq!(a.predicted_drain_ms(3), Some(40.0));
+        assert_eq!(a.predicted_drain_ms(4), Some(80.0));
+        assert_eq!(a.predicted_drain_ms(7), Some(80.0));
+        assert_eq!(a.predicted_drain_ms(8), Some(120.0));
+        // Deadline 100ms: feasible while pending <= 7 (two walks, 80ms).
+        let d = Some(Duration::from_millis(100));
+        for expect_pending in 0..8 {
+            assert_eq!(a.pending(), expect_pending);
+            a.try_admit(d).unwrap();
+        }
+        let (predicted, deadline) = a.try_admit(d).unwrap_err();
+        assert_eq!(predicted, 120.0);
+        assert_eq!(deadline, 100.0);
+        assert_eq!(a.pending(), 8, "a refused admission must not leak pending");
+        // No deadline -> always admitted; retract/complete rebalance.
+        a.try_admit(None).unwrap();
+        assert_eq!(a.pending(), 9);
+        a.retract();
+        a.complete(8);
+        assert_eq!(a.pending(), 1);
+        // No estimate -> no shedding even with a 0 deadline.
+        let free = AdmissionController::new(None, 4);
+        assert_eq!(free.predicted_drain_ms(1000), None);
+        free.try_admit(Some(Duration::ZERO)).unwrap();
+    }
+
+    #[test]
+    fn slo_table_parse_and_lookup() {
+        let t = SloTable::parse("gold=5,bulk=50.5").unwrap();
+        assert_eq!(t.deadline_of("gold"), Some(Duration::from_millis(5)));
+        assert_eq!(t.deadline_of("bulk"), Some(Duration::from_secs_f64(0.0505)));
+        assert_eq!(t.deadline_of("nope"), None);
+        assert_eq!(t.names(), vec!["gold".to_string(), "bulk".to_string()]);
+        assert!(SloTable::parse("").unwrap().is_empty());
+        assert!(SloTable::parse("gold=5,gold=6").is_err());
+        assert!(SloTable::parse("gold=0").is_err());
+        assert!(SloTable::parse("gold").is_err());
+        assert!(SloTable::parse("gold=abc").is_err());
+    }
+
+    #[test]
+    fn unknown_class_rejected_and_class_deadline_applies() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 41, 4).unwrap();
+        let backend = EngineBackend::new(
+            net,
+            params,
+            ModeAssignment::uniform(ArithMode::Imprecise),
+            1,
+            4,
+        );
+        let tenant = Tenant {
+            name: "m".into(),
+            factory: backend.factory(),
+            policy: BatchPolicy::default(),
+            // Huge estimate: any finite class deadline is infeasible.
+            image_ms: Some(1e6),
+            input_len: 768,
+        };
+        let slo = SloTable::parse("gold=5").unwrap();
+        let server = Server::start_tenants(vec![tenant], slo).unwrap();
+        let mut rng = Rng::new(42);
+        let opts = RequestOptions { class: Some("gold".into()), deadline: None };
+        let err = server
+            .router()
+            .submit_with("m", rng.normal_vec(768), opts)
+            .unwrap_err();
+        assert!(matches!(err, Error::Rejected(Rejected::DeadlineInfeasible { .. })), "{err}");
+        let err = server
+            .router()
+            .submit_with(
+                "m",
+                rng.normal_vec(768),
+                RequestOptions { class: Some("silver".into()), deadline: None },
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Rejected(Rejected::UnknownClass { .. })), "{err}");
+        // No deadline -> admitted despite the huge estimate.
+        let resp = server.router().infer_blocking("m", rng.normal_vec(768)).unwrap();
+        assert_eq!(resp.logits.len(), 8);
+        let c = &server.metrics().counters;
+        assert_eq!(c.rejected_deadline.load(Ordering::Relaxed), 1);
+        assert_eq!(c.rejected_other.load(Ordering::Relaxed), 1);
+        assert_eq!(c.rejected.load(Ordering::Relaxed), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multi_model_routing() {
+        let net = zoo::tinynet();
+        let p1 = EngineParams::random(&net, 1, 4).unwrap();
+        let p2 = EngineParams::random(&net, 2, 4).unwrap();
+        let b1 = EngineBackend::new(
+            net.clone(),
+            p1,
+            ModeAssignment::uniform(ArithMode::Precise),
+            1,
+            4,
+        );
+        let b2 = EngineBackend::new(
+            net,
+            p2,
+            ModeAssignment::uniform(ArithMode::Precise),
+            1,
+            4,
+        );
+        let server = Server::start(vec![
+            ("a".into(), b1.factory(), BatchPolicy::default()),
+            ("b".into(), b2.factory(), BatchPolicy::default()),
+        ])
+        .unwrap();
+        let mut rng = Rng::new(4);
+        let img = rng.normal_vec(768);
+        let ra = server.router().infer_blocking("a", img.clone()).unwrap();
+        let rb = server.router().infer_blocking("b", img).unwrap();
+        // Different weights → different logits.
+        assert_ne!(ra.logits, rb.logits);
+        server.shutdown();
+    }
+
+    #[test]
+    fn duplicate_tenant_names_rejected() {
+        let net = zoo::tinynet();
+        let mk = |seed| {
+            let params = EngineParams::random(&net, seed, 4).unwrap();
+            EngineBackend::new(
+                net.clone(),
+                params,
+                ModeAssignment::uniform(ArithMode::Imprecise),
+                1,
+                4,
+            )
+            .factory()
+        };
+        let err = Server::start(vec![
+            ("m".into(), mk(1), BatchPolicy::default()),
+            ("m".into(), mk(2), BatchPolicy::default()),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("defined twice"), "{err}");
+    }
+
+    /// Drive `worker_loop` directly with pre-filled queues so the
+    /// shutdown interleaving is deterministic — here across **two**
+    /// tenant workers at once: each must drain its own queue past the
+    /// signal, in both positions the loop can observe it.
+    #[test]
+    fn shutdown_drains_requests_queued_behind_the_signal_across_tenants() {
+        let net = zoo::tinynet();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let mut rng = Rng::new(32);
+
+        for shutdown_first in [false, true] {
+            let metrics = Arc::new(ServeMetrics::default());
+            let mut worker_handles = Vec::new();
+            let mut all_reply_rxs = Vec::new();
+            for tenant in 0..2u64 {
+                let params = EngineParams::random(&net, 31 + tenant, 4).unwrap();
+                let backend =
+                    EngineBackend::new(net.clone(), params, modes.clone(), 1, 4);
+                let (tx, rx) = mpsc::sync_channel::<Job>(16);
+                let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+                let admission = Arc::new(AdmissionController::new(None, 4));
+
+                let mut reply_rxs = Vec::new();
+                let mut queue: Vec<Job> = Vec::new();
+                for i in 0..3 {
+                    let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+                    reply_rxs.push(reply_rx);
+                    admission.try_admit(None).unwrap();
+                    let req = ServeRequest {
+                        image: rng.normal_vec(3 * 16 * 16),
+                        enqueued: Instant::now(),
+                        deadline: None,
+                        class: None,
+                        reply: reply_tx,
+                    };
+                    queue.push(Job::Infer(req));
+                    // Mid-batching variant: shutdown lands after the
+                    // first request, with two more accepted behind it.
+                    if !shutdown_first && i == 0 {
+                        queue.push(Job::Shutdown);
+                    }
+                }
+                if shutdown_first {
+                    queue.insert(0, Job::Shutdown);
+                }
+                for job in queue {
+                    tx.try_send(job).unwrap();
+                }
+
+                let policy = BatchPolicy {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(50),
+                    queue_depth: 16,
+                    ..Default::default()
+                };
+                let m = Arc::clone(&metrics);
+                let adm = Arc::clone(&admission);
+                let factory = backend.factory();
+                worker_handles.push((
+                    std::thread::spawn(move || {
+                        worker_loop(factory, rx, policy, adm, m, ready_tx)
+                    }),
+                    ready_rx,
+                    Arc::clone(&admission),
+                ));
+                all_reply_rxs.push(reply_rxs);
+            }
+            for (handle, ready_rx, admission) in worker_handles {
+                ready_rx.recv().unwrap().unwrap();
+                handle.join().unwrap();
+                assert_eq!(
+                    admission.pending(),
+                    0,
+                    "drained requests must release the admission window"
+                );
+            }
+            for (tenant, reply_rxs) in all_reply_rxs.into_iter().enumerate() {
+                for (i, reply_rx) in reply_rxs.into_iter().enumerate() {
+                    let resp = reply_rx.recv().unwrap_or_else(|_| {
+                        panic!(
+                            "shutdown_first={shutdown_first}: tenant {tenant} request {i} \
+                             dropped at shutdown"
+                        )
+                    });
+                    assert!(resp.logits.iter().all(|v| v.is_finite()));
+                }
+            }
+            assert_eq!(
+                metrics.counters.completed.load(Ordering::Relaxed),
+                6,
+                "shutdown_first={shutdown_first}"
+            );
+        }
+    }
+
+    /// A request whose deadline expired while it sat in the forming
+    /// batch (here: pre-expired before the worker even saw it) still
+    /// executes and still gets a reply — flagged late, never dropped.
+    #[test]
+    fn expired_deadline_in_forming_batch_still_replied() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 51, 4).unwrap();
+        let backend = EngineBackend::new(
+            net,
+            params,
+            ModeAssignment::uniform(ArithMode::Imprecise),
+            1,
+            4,
+        );
+        let (tx, rx) = mpsc::sync_channel::<Job>(16);
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let metrics = Arc::new(ServeMetrics::default());
+        let admission = Arc::new(AdmissionController::new(Some(10.0), 4));
+
+        let mut rng = Rng::new(52);
+        let now = Instant::now();
+        let mk_req = |deadline, rng: &mut Rng| {
+            let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+            admission.try_admit(None).unwrap();
+            (
+                ServeRequest {
+                    image: rng.normal_vec(3 * 16 * 16),
+                    enqueued: now,
+                    deadline,
+                    class: None,
+                    reply: reply_tx,
+                },
+                reply_rx,
+            )
+        };
+        // One member already past its deadline, one without a deadline.
+        let (expired, expired_rx) = mk_req(Some(now - Duration::from_millis(5)), &mut rng);
+        let (fresh, fresh_rx) = mk_req(None, &mut rng);
+        tx.try_send(Job::Infer(expired)).unwrap();
+        tx.try_send(Job::Infer(fresh)).unwrap();
+        tx.try_send(Job::Shutdown).unwrap();
+
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(50),
+            queue_depth: 16,
+            ..Default::default()
+        };
+        worker_loop(
+            backend.factory(),
+            rx,
+            policy,
+            Arc::clone(&admission),
+            Arc::clone(&metrics),
+            ready_tx,
+        );
+        ready_rx.recv().unwrap().unwrap();
+
+        let r1 = expired_rx.recv().expect("expired request was dropped");
+        assert!(!r1.deadline_met, "an expired member must be flagged late");
+        let r2 = fresh_rx.recv().expect("fresh request was dropped");
+        assert!(r2.deadline_met);
+        let c = &metrics.counters;
+        assert_eq!(c.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(c.deadline_missed.load(Ordering::Relaxed), 1);
+        assert_eq!(c.deadline_met.load(Ordering::Relaxed), 0, "no-deadline requests don't count");
+        assert_eq!(admission.pending(), 0);
+    }
+
+    #[test]
+    fn pinned_worker_roundtrips_and_partitions_are_disjoint() {
+        // Core-set pinning is a placement hint: whatever the host (no
+        // Linux, taskset mask, bad ids), serving must work identically.
+        let sets = crate::engine::Topology::probe().partition(2);
+        assert_eq!(sets.len(), 2);
+        assert!(sets[0].disjoint(&sets[1]));
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 33, 4).unwrap();
+        let backend = EngineBackend::new(
+            net,
+            params,
+            ModeAssignment::uniform(ArithMode::Imprecise),
+            1,
+            4,
+        );
+        let policy = BatchPolicy { cores: Some(sets[0]), ..Default::default() };
+        let server =
+            Server::start(vec![("pinned".into(), backend.factory(), policy)]).unwrap();
+        let mut rng = Rng::new(34);
+        let resp = server
+            .router()
+            .infer_blocking("pinned", rng.normal_vec(3 * 16 * 16))
+            .unwrap();
+        assert_eq!(resp.logits.len(), 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn failed_backend_startup_propagates() {
+        let factory: BackendFactory =
+            Box::new(|| Err(Error::Serve("no artifacts".into())));
+        let err = match Server::start(vec![("x".into(), factory, BatchPolicy::default())]) {
+            Err(e) => e,
+            Ok(_) => panic!("startup should have failed"),
+        };
+        assert!(err.to_string().contains("no artifacts"));
+    }
+
+    #[test]
+    fn summary_breaks_rejections_out_by_reason() {
+        let m = ServeMetrics::default();
+        m.counters.rejected.store(6, Ordering::Relaxed);
+        m.counters.rejected_queue_full.store(3, Ordering::Relaxed);
+        m.counters.rejected_deadline.store(2, Ordering::Relaxed);
+        m.counters.rejected_unknown_model.store(1, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("rejected=6"), "{s}");
+        assert!(s.contains("queue_full=3"), "{s}");
+        assert!(s.contains("deadline=2"), "{s}");
+        assert!(s.contains("unknown_model=1"), "{s}");
+    }
+}

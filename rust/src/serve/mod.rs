@@ -1,63 +1,63 @@
-//! Serving front-end: request router, dynamic batcher, model workers.
+//! Serving layer: admission control → batch forming → worker execution
+//! over pluggable backends.
 //!
 //! Cappuccino synthesizes *inference software*; this module is the
-//! deployment harness around it — the vLLM-router-shaped L3 that makes
-//! the synthesized program a service:
+//! deployment harness around it — one engine, a thin app-facing
+//! protocol surface, shaped as a three-stage pipeline (the detailed
+//! contract lives in [`frontend`]):
 //!
-//! * [`Router`] — routes requests to per-model bounded queues
-//!   (backpressure: a full queue rejects instead of buffering without
-//!   bound).
-//! * dynamic batcher — each worker drains its queue into the smallest
-//!   adequate AOT-compiled batch capacity within a latency budget
-//!   ([`BatchPolicy`]). A drained batch executes as **one** backend
-//!   call. The native engine backend runs only the `len <= capacity`
-//!   live rows of a partial batch — padded lanes are never computed, so
-//!   stale or duplicated data cannot reach replies. The PJRT backend's
-//!   fixed-shape executables still zero-pad to capacity and truncate
-//!   the reply rows to `len` (device programs have static shapes).
-//! * [`worker`] threads — own the execution backend. PJRT objects are
-//!   not `Send`, so the backend is constructed *on* the worker thread
-//!   from a `Send` factory; weights stay device-resident across
-//!   requests. A worker may request a [`CoreSet`] ([`BatchPolicy`]):
-//!   its thread is then pinned via `sched_setaffinity` (no-op off
-//!   Linux), and co-hosted models given **disjoint** sets
-//!   ([`crate::engine::Topology::partition`]) stop trampling each
-//!   other's caches.
-//! * **shutdown drains**: a worker that observes the shutdown signal
-//!   first executes every request already accepted into its queue —
-//!   the router never admits a request that is then silently dropped.
+//! 1. **Admission** ([`Router`], in [`frontend`]) — requests name a
+//!    model and optionally carry a deadline (explicit or via a named
+//!    SLO class). Each tenant's admission controller predicts queue
+//!    drain time from the model's analytic latency estimate
+//!    ([`crate::synth::predict_latency_ms`] via its loaded `Schedule`)
+//!    and load-sheds infeasible requests as typed
+//!    [`Rejected::DeadlineInfeasible`] before they occupy queue space;
+//!    full bounded queues shed as [`Rejected::QueueFull`].
+//! 2. **Batch forming** (continuous batching) — each worker admits
+//!    arrivals into the currently *forming* batch up to a size/time
+//!    budget ([`BatchPolicy`]), closing early when the oldest member's
+//!    deadline slack is about to expire. A formed batch executes as
+//!    **one** backend call at the smallest adequate AOT capacity; the
+//!    native engine backend runs only live rows of a partial batch,
+//!    the PJRT backend zero-pads to capacity and truncates replies.
+//! 3. **Workers** — one thread per tenant, owning the execution
+//!    backend. PJRT objects are not `Send`, so backends are constructed
+//!    *on* the worker thread from a `Send` factory; weights stay
+//!    resident across requests. Co-hosted tenants get **disjoint**
+//!    [`CoreSet`]s ([`crate::engine::Topology::partition`]) so they
+//!    stop trampling each other's caches — queue, admission window,
+//!    worker, and cores are all per-tenant (one model's congestion
+//!    never delays another's requests).
 //!
-//! Python never appears anywhere on this path.
+//! **Backpressure contract**: a submit either returns a reply channel —
+//! and that request **will** be answered, shutdown included (workers
+//! drain accepted work past the shutdown signal) — or a typed
+//! [`Error::Rejected`](crate::util::error::Error::Rejected) naming the
+//! reason. Nothing buffers without bound; nothing admitted is dropped.
+//!
+//! [`tenancy`] builds multi-model [`Tenant`] sets from `schedule.json`
+//! artifacts; [`workload`] generates arrival traces and replays them
+//! for latency-under-load measurement. Python never appears anywhere on
+//! this path.
 
+pub mod frontend;
+pub mod tenancy;
 pub mod workload;
 
-pub use workload::ArrivalProcess;
+pub use frontend::{
+    Rejected, RequestOptions, Router, Server, ServeRequest, ServeResponse, SloClass, SloTable,
+    Tenant, TenantInfo,
+};
+pub use tenancy::{build_engine_tenants, parse_models, TenancyConfig, TenantSpec};
+pub use workload::{replay, ArrivalProcess, ReplayOutcome, ReplaySpec};
 
 pub use crate::engine::topology::CoreSet;
 
-use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
 
-use crate::metrics::{LatencyHistogram, ServeCounters, Throughput};
+use crate::metrics::{LatencyByClass, LatencyHistogram, ServeCounters, Throughput};
 use crate::util::error::{Error, Result};
-
-/// An inference request: one image (conventional NCHW layout).
-pub struct ServeRequest {
-    pub image: Vec<f32>,
-    enqueued: Instant,
-    reply: mpsc::SyncSender<ServeResponse>,
-}
-
-/// The reply: logits + measured latency + the batch it rode in.
-#[derive(Debug, Clone)]
-pub struct ServeResponse {
-    pub logits: Vec<f32>,
-    pub latency: Duration,
-    pub batch_size: usize,
-}
 
 /// Execution backend run by a worker thread.
 pub trait Backend {
@@ -75,13 +75,15 @@ pub trait Backend {
 /// `Send`).
 pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
 
-/// Dynamic batching policy (plus the worker's placement request).
+/// Batch-forming policy (plus the worker's placement request).
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     /// Upper bound on batch size (further capped by the backend).
     pub max_batch: usize,
-    /// How long to wait for more requests after the first arrives.
-    pub max_delay: Duration,
+    /// Time budget of a forming batch: how long it stays open for more
+    /// requests after the first arrives (deadline slack can close it
+    /// earlier; see [`frontend`]).
+    pub max_delay: std::time::Duration,
     /// Bound of the per-model request queue (backpressure limit).
     pub queue_depth: usize,
     /// Optional core set the model's worker thread is pinned to
@@ -98,7 +100,7 @@ impl Default for BatchPolicy {
     fn default() -> Self {
         BatchPolicy {
             max_batch: 8,
-            max_delay: Duration::from_millis(2),
+            max_delay: std::time::Duration::from_millis(2),
             queue_depth: 64,
             cores: None,
         }
@@ -110,266 +112,44 @@ impl Default for BatchPolicy {
 pub struct ServeMetrics {
     pub counters: ServeCounters,
     pub latency: LatencyHistogram,
+    /// Latency broken out per SLO class ("default" for untagged).
+    pub by_class: LatencyByClass,
     pub throughput: Throughput,
 }
 
 impl ServeMetrics {
+    /// Metrics with per-class latency slots for the given SLO classes.
+    pub fn with_classes(names: &[String]) -> ServeMetrics {
+        ServeMetrics { by_class: LatencyByClass::with_classes(names), ..Default::default() }
+    }
+
     pub fn summary(&self) -> String {
-        format!(
-            "requests={} completed={} rejected={} batches={} mean_batch={:.2} rps={:.1} latency[{}]",
-            self.counters.requests.load(Ordering::Relaxed),
-            self.counters.completed.load(Ordering::Relaxed),
-            self.counters.rejected.load(Ordering::Relaxed),
-            self.counters.batches.load(Ordering::Relaxed),
-            self.counters.mean_batch_size(),
+        let c = &self.counters;
+        let mut s = format!(
+            "requests={} completed={} rejected={} (queue_full={} deadline={} unknown_model={} \
+             other={}) deadline_met={} deadline_missed={} batches={} mean_batch={:.2} rps={:.1} \
+             latency[{}]",
+            c.requests.load(Ordering::Relaxed),
+            c.completed.load(Ordering::Relaxed),
+            c.rejected.load(Ordering::Relaxed),
+            c.rejected_queue_full.load(Ordering::Relaxed),
+            c.rejected_deadline.load(Ordering::Relaxed),
+            c.rejected_unknown_model.load(Ordering::Relaxed),
+            c.rejected_other.load(Ordering::Relaxed),
+            c.deadline_met.load(Ordering::Relaxed),
+            c.deadline_missed.load(Ordering::Relaxed),
+            c.batches.load(Ordering::Relaxed),
+            c.mean_batch_size(),
             self.throughput.per_second(),
             self.latency.summary(),
-        )
-    }
-}
-
-enum Job {
-    Infer(ServeRequest),
-    Shutdown,
-}
-
-/// Routes requests to per-model worker queues.
-pub struct Router {
-    queues: HashMap<String, mpsc::SyncSender<Job>>,
-    metrics: Arc<ServeMetrics>,
-}
-
-impl Router {
-    /// Submit an image for inference on `model`; returns the response
-    /// receiver. Full queues reject immediately (backpressure).
-    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<mpsc::Receiver<ServeResponse>> {
-        let queue = self
-            .queues
-            .get(model)
-            .ok_or_else(|| Error::Serve(format!("unknown model {model:?}")))?;
-        self.metrics.counters.requests.fetch_add(1, Ordering::Relaxed);
-        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        let req = ServeRequest { image, enqueued: Instant::now(), reply: reply_tx };
-        match queue.try_send(Job::Infer(req)) {
-            Ok(()) => Ok(reply_rx),
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.metrics.counters.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(Error::Serve(format!("model {model:?}: queue full (backpressure)")))
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                Err(Error::Serve(format!("model {model:?}: worker gone")))
-            }
+        );
+        let classes = self.by_class.summary();
+        if !classes.is_empty() {
+            s.push_str(" classes[");
+            s.push_str(&classes);
+            s.push(']');
         }
-    }
-
-    /// Submit and wait for the response.
-    pub fn infer_blocking(&self, model: &str, image: Vec<f32>) -> Result<ServeResponse> {
-        let rx = self.submit(model, image)?;
-        rx.recv()
-            .map_err(|_| Error::Serve("worker dropped the request".into()))
-    }
-}
-
-/// A running server: router + worker threads.
-pub struct Server {
-    router: Router,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    shutdown_txs: Vec<mpsc::SyncSender<Job>>,
-    metrics: Arc<ServeMetrics>,
-}
-
-impl Server {
-    /// Start a server hosting the given `(model name, backend factory,
-    /// policy)` triples — one worker thread per model.
-    pub fn start(models: Vec<(String, BackendFactory, BatchPolicy)>) -> Result<Server> {
-        let metrics = Arc::new(ServeMetrics::default());
-        let mut queues = HashMap::new();
-        let mut handles = Vec::new();
-        let mut shutdown_txs = Vec::new();
-        for (name, factory, policy) in models {
-            let (tx, rx) = mpsc::sync_channel::<Job>(policy.queue_depth);
-            // Construct the backend on the worker thread and report
-            // failures back through a startup channel.
-            let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
-            let m = Arc::clone(&metrics);
-            let handle = std::thread::Builder::new()
-                .name(format!("cappuccino-worker-{name}"))
-                .spawn(move || worker_loop(factory, rx, policy, m, ready_tx))
-                .map_err(|e| Error::Serve(format!("spawn worker: {e}")))?;
-            ready_rx
-                .recv()
-                .map_err(|_| Error::Serve(format!("worker {name} died during startup")))??;
-            queues.insert(name, tx.clone());
-            shutdown_txs.push(tx);
-            handles.push(handle);
-        }
-        Ok(Server {
-            router: Router { queues, metrics: Arc::clone(&metrics) },
-            handles,
-            shutdown_txs,
-            metrics,
-        })
-    }
-
-    pub fn router(&self) -> &Router {
-        &self.router
-    }
-
-    pub fn metrics(&self) -> &ServeMetrics {
-        &self.metrics
-    }
-
-    /// Stop workers and join them.
-    pub fn shutdown(mut self) {
-        for tx in &self.shutdown_txs {
-            let _ = tx.send(Job::Shutdown);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-/// Worker: pin if requested, construct backend, then batch-and-execute
-/// until shutdown — and **drain** on shutdown (see
-/// [`drain_after_shutdown`]).
-fn worker_loop(
-    factory: BackendFactory,
-    rx: mpsc::Receiver<Job>,
-    policy: BatchPolicy,
-    metrics: Arc<ServeMetrics>,
-    ready: mpsc::SyncSender<Result<()>>,
-) {
-    if let Some(cores) = policy.cores {
-        // Placement hint only: failure (or a non-Linux host) leaves the
-        // worker unpinned and everything else identical.
-        let _ = crate::engine::topology::pin_current_thread(&cores.cpus());
-    }
-    let mut backend = match factory() {
-        Ok(b) => {
-            let _ = ready.send(Ok(()));
-            b
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-    let max_capacity = backend
-        .batch_sizes()
-        .last()
-        .copied()
-        .unwrap_or(1)
-        .min(policy.max_batch)
-        .max(1);
-
-    loop {
-        // Block for the first request.
-        let first = match rx.recv() {
-            Ok(Job::Infer(r)) => r,
-            Ok(Job::Shutdown) => {
-                drain_after_shutdown(&mut *backend, &rx, max_capacity, &metrics);
-                return;
-            }
-            Err(_) => return,
-        };
-        let mut batch = vec![first];
-        // Dynamic batching: wait up to max_delay for more work.
-        let deadline = Instant::now() + policy.max_delay;
-        while batch.len() < max_capacity {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Job::Infer(r)) => batch.push(r),
-                Ok(Job::Shutdown) => {
-                    run_batch(&mut *backend, &batch, &metrics);
-                    drain_after_shutdown(&mut *backend, &rx, max_capacity, &metrics);
-                    return;
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    run_batch(&mut *backend, &batch, &metrics);
-                    return;
-                }
-            }
-        }
-        run_batch(&mut *backend, &batch, &metrics);
-    }
-}
-
-/// Post-shutdown drain: execute every request already sitting in the
-/// queue, in arrival order, batched at the worker's capacity.
-///
-/// Without this, a worker observing `Job::Shutdown` returned
-/// immediately and dropped every `Infer` job queued behind the signal —
-/// requests the router had *accepted* (clients were already waiting on
-/// a reply channel) surfaced as "worker dropped the request". A
-/// shutdown now closes the door to new work (the router's sender is
-/// dropped by [`Server::shutdown`]) but always finishes work it let in.
-fn drain_after_shutdown(
-    backend: &mut dyn Backend,
-    rx: &mpsc::Receiver<Job>,
-    max_capacity: usize,
-    metrics: &ServeMetrics,
-) {
-    let mut batch: Vec<ServeRequest> = Vec::new();
-    loop {
-        match rx.try_recv() {
-            Ok(Job::Infer(r)) => {
-                batch.push(r);
-                if batch.len() >= max_capacity {
-                    run_batch(backend, &batch, metrics);
-                    batch.clear();
-                }
-            }
-            // Duplicate shutdown signals fold into the first.
-            Ok(Job::Shutdown) => {}
-            Err(mpsc::TryRecvError::Empty) | Err(mpsc::TryRecvError::Disconnected) => break,
-        }
-    }
-    if !batch.is_empty() {
-        run_batch(backend, &batch, metrics);
-    }
-}
-
-/// Execute one formed batch at the smallest adequate AOT capacity.
-fn run_batch(backend: &mut dyn Backend, batch: &[ServeRequest], metrics: &ServeMetrics) {
-    // Pick the smallest compiled capacity that fits the batch; fall back
-    // to the largest (callers never exceed it by construction).
-    let capacity = backend
-        .batch_sizes()
-        .iter()
-        .copied()
-        .find(|&b| b >= batch.len())
-        .unwrap_or_else(|| backend.batch_sizes().last().copied().unwrap_or(1));
-
-    let images: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
-    let result = backend.infer_batch(&images, capacity);
-    metrics.counters.batches.fetch_add(1, Ordering::Relaxed);
-    metrics
-        .counters
-        .batched_items
-        .fetch_add(batch.len() as u64, Ordering::Relaxed);
-    match result {
-        Ok(rows) => {
-            for (req, logits) in batch.iter().zip(rows) {
-                let latency = req.enqueued.elapsed();
-                metrics.latency.record(latency);
-                metrics.counters.completed.fetch_add(1, Ordering::Relaxed);
-                metrics.throughput.add(1);
-                let _ = req.reply.send(ServeResponse {
-                    logits,
-                    latency,
-                    batch_size: batch.len(),
-                });
-            }
-        }
-        Err(e) => {
-            // Drop the reply senders: receivers observe RecvError.
-            eprintln!("worker batch failed: {e}");
-        }
+        s
     }
 }
 
@@ -384,9 +164,9 @@ fn run_batch(backend: &mut dyn Backend, batch: &[ServeRequest], metrics: &ServeM
 /// [`crate::engine::ExecutionPlan::with_capacity`] — parameters are
 /// never duplicated), so weights and the `B x`-sized buffer arenas stay
 /// resident across requests — the native analogue of the PJRT backend's
-/// device-resident executables. A drained dynamic batch executes as
-/// **one** plan walk ([`crate::engine::ExecutionPlan::run_batch`]), not
-/// a per-image loop; partial batches only walk live rows.
+/// device-resident executables. A formed batch executes as **one** plan
+/// walk ([`crate::engine::ExecutionPlan::run_batch`]), not a per-image
+/// loop; partial batches only walk live rows.
 pub struct EngineBackend {
     net: crate::model::Network,
     params: crate::engine::EngineParams,
@@ -501,7 +281,7 @@ impl Backend for CompiledEngineBackend {
             .plans
             .get_mut(idx)
             .ok_or_else(|| Error::Serve("engine backend has no compiled plans".into()))?;
-        // One plan walk for the whole drained batch: only the
+        // One plan walk for the whole formed batch: only the
         // `images.len() <= capacity` live rows are computed, so padded
         // lanes can never surface stale or duplicated data in replies.
         plan.run_batch(images)
@@ -586,104 +366,6 @@ mod tests {
     use crate::model::zoo;
     use crate::util::rng::Rng;
 
-    fn engine_server(max_batch: usize, policy: BatchPolicy) -> Server {
-        let net = zoo::tinynet();
-        let params = EngineParams::random(&net, 7, 4).unwrap();
-        let backend = EngineBackend::new(
-            net,
-            params,
-            ModeAssignment::uniform(ArithMode::Imprecise),
-            1,
-            max_batch,
-        );
-        Server::start(vec![("tinynet".into(), backend.factory(), policy)]).unwrap()
-    }
-
-    #[test]
-    fn single_request_roundtrip() {
-        let server = engine_server(8, BatchPolicy::default());
-        let mut rng = Rng::new(1);
-        let img = rng.normal_vec(3 * 16 * 16);
-        let resp = server.router().infer_blocking("tinynet", img).unwrap();
-        assert_eq!(resp.logits.len(), 8);
-        assert!(resp.logits.iter().all(|v| v.is_finite()));
-        server.shutdown();
-    }
-
-    #[test]
-    fn unknown_model_rejected() {
-        let server = engine_server(8, BatchPolicy::default());
-        let err = server.router().submit("resnet", vec![0.0; 768]).unwrap_err();
-        assert!(err.to_string().contains("unknown model"));
-        server.shutdown();
-    }
-
-    #[test]
-    fn burst_is_batched() {
-        let server = engine_server(
-            8,
-            BatchPolicy {
-                max_batch: 8,
-                max_delay: Duration::from_millis(30),
-                queue_depth: 64,
-                ..Default::default()
-            },
-        );
-        let mut rng = Rng::new(2);
-        let rxs: Vec<_> = (0..12)
-            .map(|_| {
-                server
-                    .router()
-                    .submit("tinynet", rng.normal_vec(3 * 16 * 16))
-                    .unwrap()
-            })
-            .collect();
-        let responses: Vec<ServeResponse> =
-            rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
-        assert_eq!(responses.len(), 12);
-        // At least one response must have ridden a multi-request batch.
-        assert!(
-            responses.iter().any(|r| r.batch_size > 1),
-            "batcher never formed a batch"
-        );
-        let m = server.metrics();
-        assert_eq!(m.counters.completed.load(Ordering::Relaxed), 12);
-        assert!(m.counters.batches.load(Ordering::Relaxed) < 12);
-        server.shutdown();
-    }
-
-    #[test]
-    fn backpressure_rejects_when_full() {
-        // Tiny queue + slow drain: flooding must produce rejections.
-        let server = engine_server(
-            1,
-            BatchPolicy {
-                max_batch: 1,
-                max_delay: Duration::ZERO,
-                queue_depth: 2,
-                ..Default::default()
-            },
-        );
-        let mut rng = Rng::new(3);
-        let mut rejected = 0;
-        let mut pending = Vec::new();
-        for _ in 0..200 {
-            match server.router().submit("tinynet", rng.normal_vec(3 * 16 * 16)) {
-                Ok(rx) => pending.push(rx),
-                Err(_) => rejected += 1,
-            }
-        }
-        for rx in pending {
-            let _ = rx.recv();
-        }
-        assert!(rejected > 0, "queue never filled");
-        assert_eq!(
-            server.metrics().counters.rejected.load(Ordering::Relaxed),
-            rejected
-        );
-        server.shutdown();
-    }
-
     #[test]
     fn partial_batch_at_capacity_matches_single_image_runs() {
         // Regression (batch-first redesign): a 3-request batch executed
@@ -753,142 +435,15 @@ mod tests {
     }
 
     #[test]
-    fn multi_model_routing() {
-        let net = zoo::tinynet();
-        let p1 = EngineParams::random(&net, 1, 4).unwrap();
-        let p2 = EngineParams::random(&net, 2, 4).unwrap();
-        let b1 = EngineBackend::new(
-            net.clone(),
-            p1,
-            ModeAssignment::uniform(ArithMode::Precise),
-            1,
-            4,
-        );
-        let b2 = EngineBackend::new(
-            net,
-            p2,
-            ModeAssignment::uniform(ArithMode::Precise),
-            1,
-            4,
-        );
-        let server = Server::start(vec![
-            ("a".into(), b1.factory(), BatchPolicy::default()),
-            ("b".into(), b2.factory(), BatchPolicy::default()),
-        ])
-        .unwrap();
-        let mut rng = Rng::new(4);
-        let img = rng.normal_vec(768);
-        let ra = server.router().infer_blocking("a", img.clone()).unwrap();
-        let rb = server.router().infer_blocking("b", img).unwrap();
-        // Different weights → different logits.
-        assert_ne!(ra.logits, rb.logits);
-        server.shutdown();
-    }
-
-    #[test]
-    fn shutdown_drains_requests_queued_behind_the_signal() {
-        // Regression: worker_loop used to return the moment it popped
-        // Job::Shutdown, silently dropping every accepted Infer job
-        // still queued behind the signal (clients saw "worker dropped
-        // the request"). Drive the loop directly with a pre-filled
-        // queue so the interleaving is deterministic: requests are
-        // submitted past the shutdown signal in both positions the loop
-        // can observe it (mid-batching and as the first job).
-        let net = zoo::tinynet();
-        let params = EngineParams::random(&net, 31, 4).unwrap();
-        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
-        let mut rng = Rng::new(32);
-
-        for shutdown_first in [false, true] {
-            let backend =
-                EngineBackend::new(net.clone(), params.clone(), modes.clone(), 1, 4);
-            let (tx, rx) = mpsc::sync_channel::<Job>(16);
-            let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
-            let metrics = Arc::new(ServeMetrics::default());
-
-            let mut reply_rxs = Vec::new();
-            let mut queue: Vec<Job> = Vec::new();
-            for i in 0..3 {
-                let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-                reply_rxs.push(reply_rx);
-                let req = ServeRequest {
-                    image: rng.normal_vec(3 * 16 * 16),
-                    enqueued: Instant::now(),
-                    reply: reply_tx,
-                };
-                queue.push(Job::Infer(req));
-                // Mid-batching variant: shutdown lands after the first
-                // request, with two more accepted behind it.
-                if !shutdown_first && i == 0 {
-                    queue.push(Job::Shutdown);
-                }
-            }
-            if shutdown_first {
-                queue.insert(0, Job::Shutdown);
-            }
-            for job in queue {
-                tx.try_send(job).unwrap();
-            }
-
-            let policy = BatchPolicy {
-                max_batch: 4,
-                max_delay: Duration::from_millis(50),
-                queue_depth: 16,
-                ..Default::default()
-            };
-            worker_loop(backend.factory(), rx, policy, Arc::clone(&metrics), ready_tx);
-            ready_rx.recv().unwrap().unwrap();
-
-            for (i, reply_rx) in reply_rxs.into_iter().enumerate() {
-                let resp = reply_rx.recv().unwrap_or_else(|_| {
-                    panic!("shutdown_first={shutdown_first}: request {i} dropped at shutdown")
-                });
-                assert!(resp.logits.iter().all(|v| v.is_finite()));
-            }
-            assert_eq!(
-                metrics.counters.completed.load(Ordering::Relaxed),
-                3,
-                "shutdown_first={shutdown_first}"
-            );
-        }
-    }
-
-    #[test]
-    fn pinned_worker_roundtrips_and_partitions_are_disjoint() {
-        // Core-set pinning is a placement hint: whatever the host (no
-        // Linux, taskset mask, bad ids), serving must work identically.
-        let sets = crate::engine::Topology::probe().partition(2);
-        assert_eq!(sets.len(), 2);
-        assert!(sets[0].disjoint(&sets[1]));
-        let net = zoo::tinynet();
-        let params = EngineParams::random(&net, 33, 4).unwrap();
-        let backend = EngineBackend::new(
-            net,
-            params,
-            ModeAssignment::uniform(ArithMode::Imprecise),
-            1,
-            4,
-        );
-        let policy = BatchPolicy { cores: Some(sets[0]), ..Default::default() };
-        let server =
-            Server::start(vec![("pinned".into(), backend.factory(), policy)]).unwrap();
-        let mut rng = Rng::new(34);
-        let resp = server
-            .router()
-            .infer_blocking("pinned", rng.normal_vec(3 * 16 * 16))
-            .unwrap();
-        assert_eq!(resp.logits.len(), 8);
-        server.shutdown();
-    }
-
-    #[test]
-    fn failed_backend_startup_propagates() {
-        let factory: BackendFactory =
-            Box::new(|| Err(Error::Serve("no artifacts".into())));
-        let err = match Server::start(vec![("x".into(), factory, BatchPolicy::default())]) {
-            Err(e) => e,
-            Ok(_) => panic!("startup should have failed"),
-        };
-        assert!(err.to_string().contains("no artifacts"));
+    fn summary_includes_class_breakdown_when_present() {
+        let m = ServeMetrics::with_classes(&["gold".to_string()]);
+        m.by_class
+            .record(Some("gold"), std::time::Duration::from_millis(3));
+        let s = m.summary();
+        assert!(s.contains("classes["), "{s}");
+        assert!(s.contains("gold"), "{s}");
+        // Untagged metrics keep the bare format.
+        let bare = ServeMetrics::default().summary();
+        assert!(!bare.contains("classes["), "{bare}");
     }
 }

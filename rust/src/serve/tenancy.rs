@@ -1,0 +1,208 @@
+//! Multi-model tenancy: build resident [`Tenant`]s from `schedule.json`
+//! artifacts.
+//!
+//! The `serve --models a=schedule_a.json,b=schedule_b.json` path: each
+//! tenant loads its own tuned schedule, compiles its own per-capacity
+//! plan set (weights shared across capacities, never across tenants),
+//! gets its own bounded queue and worker thread, and — when core
+//! partitioning is on — a **disjoint** [`CoreSet`] carved from the host
+//! topology so co-resident models stop trampling each other's caches.
+//! The schedule also feeds [`crate::synth::predict_schedule_latency_ms`]
+//! to give the tenant's admission controller its analytic per-image
+//! service estimate — tenancy is what turns deadline admission from a
+//! queue-depth check into a model-specific drain-time prediction.
+
+use std::time::Duration;
+
+use crate::engine::topology::{CoreSet, Topology};
+use crate::engine::{EngineParams, Schedule};
+use crate::model::zoo;
+use crate::serve::frontend::Tenant;
+use crate::serve::{BatchPolicy, EngineBackend};
+use crate::soc::DeviceModel;
+use crate::util::error::{Error, Result};
+
+/// One `name=schedule.json` entry from the `--models` flag.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    pub schedule_path: String,
+}
+
+/// Parse the `--models` flag: `name=path[,name=path...]`. Names must be
+/// unique; both halves must be non-empty.
+pub fn parse_models(spec: &str) -> Result<Vec<TenantSpec>> {
+    let mut out: Vec<TenantSpec> = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (name, path) = part.split_once('=').ok_or_else(|| {
+            Error::Invalid(format!("--models: expected name=schedule.json, got {part:?}"))
+        })?;
+        let (name, path) = (name.trim(), path.trim());
+        if name.is_empty() || path.is_empty() {
+            return Err(Error::Invalid(format!("--models: empty name or path in {part:?}")));
+        }
+        if out.iter().any(|t| t.name == name) {
+            return Err(Error::Invalid(format!("--models: tenant {name:?} given twice")));
+        }
+        out.push(TenantSpec { name: name.into(), schedule_path: path.into() });
+    }
+    if out.is_empty() {
+        return Err(Error::Invalid("--models: no tenants specified".into()));
+    }
+    Ok(out)
+}
+
+/// Shared settings for building engine tenants.
+#[derive(Debug, Clone)]
+pub struct TenancyConfig {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    pub queue_depth: usize,
+    /// Partition the host topology into one disjoint [`CoreSet`] per
+    /// tenant (overrides any core set carried in a schedule). Off, each
+    /// tenant uses its schedule's own `pool.cores` (possibly none).
+    pub partition_cores: bool,
+    /// Reference device for the admission controller's analytic
+    /// per-image latency estimate.
+    pub device: DeviceModel,
+    /// Weight seed base (tenant `i` uses `seed + i` — demo weights;
+    /// real deployments would load parameter files).
+    pub seed: u64,
+}
+
+impl TenancyConfig {
+    pub fn new(device: DeviceModel) -> TenancyConfig {
+        let d = BatchPolicy::default();
+        TenancyConfig {
+            max_batch: d.max_batch,
+            max_delay: d.max_delay,
+            queue_depth: d.queue_depth,
+            partition_cores: true,
+            device,
+            seed: 7,
+        }
+    }
+}
+
+/// Build one engine [`Tenant`] per spec: load its schedule, resolve its
+/// network, derive its admission estimate, and assign disjoint cores.
+pub fn build_engine_tenants(specs: &[TenantSpec], cfg: &TenancyConfig) -> Result<Vec<Tenant>> {
+    let partitions: Vec<Option<CoreSet>> = if cfg.partition_cores && specs.len() > 1 {
+        Topology::probe().partition(specs.len()).into_iter().map(Some).collect()
+    } else {
+        vec![None; specs.len()]
+    };
+    specs
+        .iter()
+        .zip(partitions)
+        .enumerate()
+        .map(|(i, (spec, partition))| {
+            let schedule = Schedule::load(&spec.schedule_path)?;
+            let net = zoo::by_name(&schedule.net).ok_or_else(|| {
+                Error::Invalid(format!(
+                    "tenant {:?}: schedule names unknown net {:?}",
+                    spec.name, schedule.net
+                ))
+            })?;
+            let image_ms =
+                crate::synth::predict_schedule_latency_ms(&schedule, &net, &cfg.device)?;
+            let params = EngineParams::random(&net, cfg.seed + i as u64, schedule.u)?;
+            let cores = partition.or(schedule.pool.cores);
+            let input_len = net.input.elements();
+            let backend = EngineBackend::with_schedule(net, params, schedule, cfg.max_batch);
+            Ok(Tenant {
+                name: spec.name.clone(),
+                factory: backend.factory(),
+                policy: BatchPolicy {
+                    max_batch: cfg.max_batch,
+                    max_delay: cfg.max_delay,
+                    queue_depth: cfg.queue_depth,
+                    cores,
+                },
+                image_ms: Some(image_ms),
+                input_len,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::serve::{Server, SloTable};
+    use crate::soc::devices;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parse_models_accepts_pairs_and_rejects_garbage() {
+        let specs = parse_models("a=schedule_a.json, b=schedule_b.json").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0], TenantSpec {
+            name: "a".into(),
+            schedule_path: "schedule_a.json".into()
+        });
+        assert_eq!(specs[1].name, "b");
+        assert!(parse_models("").is_err());
+        assert!(parse_models("a").is_err());
+        assert!(parse_models("a=").is_err());
+        assert!(parse_models("=x.json").is_err());
+        assert!(parse_models("a=x.json,a=y.json").is_err());
+    }
+
+    #[test]
+    fn tenants_from_schedules_serve_with_estimates_and_disjoint_cores() {
+        // Write two distinct tinynet schedules, build tenants, and run a
+        // request through each: the tune → serve artifact path end to
+        // end, with per-tenant admission estimates attached.
+        let dir = std::env::temp_dir().join(format!("capp-tenancy-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let net = zoo::tinynet();
+        let s1 = Schedule::default_for(&net, 4);
+        let mut s2 = Schedule::default_for(&net, 4);
+        s2.pool.threads = 2;
+        let p1 = dir.join("schedule_a.json");
+        let p2 = dir.join("schedule_b.json");
+        s1.save(&p1).unwrap();
+        s2.save(&p2).unwrap();
+
+        let specs = parse_models(&format!(
+            "a={},b={}",
+            p1.to_string_lossy(),
+            p2.to_string_lossy()
+        ))
+        .unwrap();
+        let cfg = TenancyConfig::new(devices::nexus5());
+        let tenants = build_engine_tenants(&specs, &cfg).unwrap();
+        assert_eq!(tenants.len(), 2);
+        let cores: Vec<_> = tenants.iter().map(|t| t.policy.cores.unwrap()).collect();
+        assert!(cores[0].disjoint(&cores[1]), "tenant core sets overlap");
+        for t in &tenants {
+            assert!(t.image_ms.unwrap() > 0.0);
+            assert_eq!(t.input_len, 3 * 16 * 16);
+        }
+
+        let server = Server::start_tenants(tenants, SloTable::default()).unwrap();
+        assert_eq!(server.tenants().len(), 2);
+        let mut rng = Rng::new(9);
+        for name in ["a", "b"] {
+            let resp = server
+                .router()
+                .infer_blocking(name, rng.normal_vec(3 * 16 * 16))
+                .unwrap();
+            assert_eq!(resp.logits.len(), 8);
+        }
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_schedule_and_unknown_net_are_typed_errors() {
+        let cfg = TenancyConfig::new(devices::nexus5());
+        let specs = vec![TenantSpec {
+            name: "a".into(),
+            schedule_path: "/nonexistent/schedule.json".into(),
+        }];
+        assert!(build_engine_tenants(&specs, &cfg).is_err());
+    }
+}

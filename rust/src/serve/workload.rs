@@ -1,12 +1,22 @@
-//! Serving workload generation: arrival processes for driving the
-//! router/batcher in benches and examples.
+//! Serving workload generation and replay: arrival processes for
+//! driving the router/batcher, and an open-loop replay driver that
+//! measures latency-under-load (p50/p99) against a running
+//! [`Server`](super::Server).
 //!
 //! The paper evaluates single-inference latency; the serving layer this
 //! repo adds needs load *patterns* to characterise the dynamic batcher.
-//! Three standard processes are provided, all deterministic per seed.
+//! All processes are deterministic per seed. The heavy-tailed
+//! bounded-Pareto process is the interesting one for a front-end with
+//! admission control: most gaps are short (bursts that pile the queue
+//! up) with occasional long gaps (idle valleys), which is what makes
+//! deadline-based load shedding earn its keep.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::metrics::LatencyHistogram;
+use crate::serve::{Rejected, RequestOptions, Server};
+use crate::util::error::Error;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Request arrival process.
@@ -20,6 +30,13 @@ pub enum ArrivalProcess {
     Poisson { rate_per_s: f64 },
     /// Bursts of `size` back-to-back requests separated by `gap`.
     Bursty { size: usize, gap: Duration },
+    /// Heavy-tailed inter-arrival times: bounded Pareto with shape
+    /// `alpha` (smaller = heavier tail; > 1 for a finite mean) and an
+    /// upper bound of `cap ×` the minimum gap. The minimum gap is
+    /// scaled so the process's *mean* rate is `rate_per_s` — directly
+    /// comparable to `Poisson` at the same rate, but with gap bursts
+    /// and valleys instead of memoryless spacing.
+    BoundedPareto { rate_per_s: f64, alpha: f64, cap: f64 },
 }
 
 impl ArrivalProcess {
@@ -49,6 +66,11 @@ impl ArrivalProcess {
                             Duration::ZERO
                         }
                     }
+                    ArrivalProcess::BoundedPareto { rate_per_s, alpha, cap } => {
+                        Duration::from_secs_f64(bounded_pareto_gap(
+                            &mut rng, rate_per_s, alpha, cap,
+                        ))
+                    }
                 }
             })
             .collect()
@@ -62,8 +84,259 @@ impl ArrivalProcess {
             ArrivalProcess::Bursty { size, gap } => {
                 format!("bursty-{size}x{}ms", gap.as_millis())
             }
+            ArrivalProcess::BoundedPareto { rate_per_s, alpha, cap } => {
+                format!("pareto-{rate_per_s:.0}rps-a{alpha}-k{cap:.0}")
+            }
         }
     }
+}
+
+/// One bounded-Pareto gap (seconds) with mean `1 / rate_per_s`.
+///
+/// Bounded Pareto on `[L, H]` with `H = cap × L` via the inverse CDF
+/// `x = L / (1 − U·(1 − cap^−α))^(1/α)`; the mean of the *unit*
+/// (`L = 1`) distribution is `α/(α−1) · (1 − cap^(1−α))/(1 − cap^(−α))`
+/// (for `α ≠ 1`), so dividing the requested mean gap by it yields the
+/// `L` that hits the target rate exactly.
+fn bounded_pareto_gap(rng: &mut Rng, rate_per_s: f64, alpha: f64, cap: f64) -> f64 {
+    let a = alpha.max(1.0 + 1e-6);
+    let k = cap.max(1.0 + 1e-9);
+    let mean_unit = a / (a - 1.0) * (1.0 - k.powf(1.0 - a)) / (1.0 - k.powf(-a));
+    let l = (1.0 / rate_per_s.max(1e-9)) / mean_unit;
+    let u = rng.f64().min(1.0 - 1e-12);
+    l / (1.0 - u * (1.0 - k.powf(-a))).powf(1.0 / a)
+}
+
+/// Replay configuration: how many requests, spaced how, tagged how.
+#[derive(Debug, Clone)]
+pub struct ReplaySpec {
+    pub requests: usize,
+    pub arrivals: ArrivalProcess,
+    pub seed: u64,
+    /// SLO class tags cycled round-robin over requests (empty = none).
+    pub classes: Vec<String>,
+    /// Explicit relative deadline applied to every request.
+    pub deadline: Option<Duration>,
+    /// When no explicit deadline: per-tenant deadline of
+    /// `factor × image_ms × max_batch` ms (i.e. `factor` batch walks) —
+    /// scale-free across devices, so a factor tightens/loosens load
+    /// shedding identically on any host. Ignored for tenants without a
+    /// service estimate.
+    pub deadline_factor: Option<f64>,
+}
+
+impl ReplaySpec {
+    pub fn new(requests: usize, arrivals: ArrivalProcess, seed: u64) -> ReplaySpec {
+        ReplaySpec {
+            requests,
+            arrivals,
+            seed,
+            classes: Vec::new(),
+            deadline: None,
+            deadline_factor: None,
+        }
+    }
+}
+
+/// What a replay run observed, ready for `BENCH_serve.json`.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    pub label: String,
+    pub submitted: usize,
+    pub completed: usize,
+    pub shed_deadline: usize,
+    pub rejected_queue_full: usize,
+    pub rejected_other: usize,
+    /// Admitted requests whose reply channel closed without a reply —
+    /// the front-end's contract says this must be zero.
+    pub dropped: usize,
+    pub deadline_missed: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// `(class, completed, p50_ms, p99_ms)` per SLO class used.
+    pub per_class: Vec<(String, usize, f64, f64)>,
+}
+
+impl ReplayOutcome {
+    /// One-line result summary (stable `key=value` format — CI greps it).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "replay: submitted={} completed={} shed_deadline={} rejected_queue_full={} \
+             rejected_other={} dropped={} deadline_missed={} throughput_rps={:.1} \
+             mean_batch={:.2} p50_ms={:.3} p99_ms={:.3}",
+            self.submitted,
+            self.completed,
+            self.shed_deadline,
+            self.rejected_queue_full,
+            self.rejected_other,
+            self.dropped,
+            self.deadline_missed,
+            self.throughput_rps,
+            self.mean_batch,
+            self.p50_ms,
+            self.p99_ms,
+        )
+    }
+
+    /// The `BENCH_serve.json` payload.
+    pub fn to_json(&self) -> Json {
+        let per_class = self
+            .per_class
+            .iter()
+            .map(|(name, n, p50, p99)| {
+                Json::obj(vec![
+                    ("class", Json::str(name.clone())),
+                    ("completed", Json::num(*n as f64)),
+                    ("p50_ms", Json::num(*p50)),
+                    ("p99_ms", Json::num(*p99)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("bench", Json::str("serve_replay")),
+            ("arrivals", Json::str(self.label.clone())),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("shed_deadline", Json::num(self.shed_deadline as f64)),
+            ("rejected_queue_full", Json::num(self.rejected_queue_full as f64)),
+            ("rejected_other", Json::num(self.rejected_other as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("deadline_missed", Json::num(self.deadline_missed as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("mean_batch", Json::num(self.mean_batch)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("per_class", Json::Arr(per_class)),
+        ])
+    }
+}
+
+fn quantile_ms(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Open-loop replay against a running server: requests round-robin over
+/// the resident tenants at the spec's arrival spacing, then the driver
+/// waits for every admitted reply. Typed rejections are counted by
+/// reason; an admitted request whose reply never arrives counts as
+/// `dropped` (contract violation).
+pub fn replay(server: &Server, spec: &ReplaySpec) -> ReplayOutcome {
+    let tenants = server.tenants();
+    assert!(!tenants.is_empty(), "replay needs at least one tenant");
+    let delays = spec.arrivals.delays(spec.requests, spec.seed);
+    let mut rng = Rng::new(spec.seed ^ 0x9e37_79b9_7f4a_7c15);
+
+    // Pre-resolve per-tenant deadlines (explicit wins over factor).
+    let deadlines: Vec<Option<Duration>> = tenants
+        .iter()
+        .map(|t| {
+            spec.deadline.or_else(|| {
+                let f = spec.deadline_factor?;
+                let image_ms = t.image_ms?;
+                Some(Duration::from_secs_f64(f * image_ms * t.max_batch as f64 / 1e3))
+            })
+        })
+        .collect();
+
+    let mut inflight: Vec<(usize, std::sync::mpsc::Receiver<super::ServeResponse>)> = Vec::new();
+    let (mut shed_deadline, mut rejected_queue_full, mut rejected_other) = (0, 0, 0);
+    let start = Instant::now();
+    for (i, delay) in delays.iter().enumerate() {
+        if !delay.is_zero() {
+            std::thread::sleep(*delay);
+        }
+        let t = i % tenants.len();
+        let image = rng.normal_vec(tenants[t].input_len.max(1));
+        let (slot, class) = if spec.classes.is_empty() {
+            (0, None)
+        } else {
+            let slot = i % spec.classes.len();
+            (slot, Some(spec.classes[slot].clone()))
+        };
+        let opts = RequestOptions { class, deadline: deadlines[t] };
+        match server.router().submit_with(&tenants[t].name, image, opts) {
+            Ok(rx) => inflight.push((slot, rx)),
+            Err(Error::Rejected(Rejected::DeadlineInfeasible { .. })) => shed_deadline += 1,
+            Err(Error::Rejected(Rejected::QueueFull { .. })) => rejected_queue_full += 1,
+            Err(_) => rejected_other += 1,
+        }
+    }
+
+    // Collect every admitted reply; per-class latency via one histogram
+    // per class slot (slot 0 doubles as "untagged" when classless).
+    let n_classes = spec.classes.len().max(1);
+    let mut class_lat: Vec<Vec<f64>> = vec![Vec::new(); n_classes];
+    let mut all_lat: Vec<f64> = Vec::new();
+    let mut completed = 0;
+    let mut dropped = 0;
+    let mut deadline_missed = 0;
+    for (slot, rx) in inflight {
+        match rx.recv() {
+            Ok(resp) => {
+                completed += 1;
+                if !resp.deadline_met {
+                    deadline_missed += 1;
+                }
+                let ms = resp.latency.as_secs_f64() * 1e3;
+                all_lat.push(ms);
+                class_lat[slot].push(ms);
+            }
+            Err(_) => dropped += 1,
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+
+    all_lat.sort_by(|a, b| a.total_cmp(b));
+    let per_class = spec
+        .classes
+        .iter()
+        .enumerate()
+        .map(|(slot, name)| {
+            let lat = &mut class_lat[slot];
+            lat.sort_by(|a, b| a.total_cmp(b));
+            (name.clone(), lat.len(), quantile_ms(lat, 0.5), quantile_ms(lat, 0.99))
+        })
+        .collect();
+
+    ReplayOutcome {
+        label: spec.arrivals.label(),
+        submitted: spec.requests,
+        completed,
+        shed_deadline,
+        rejected_queue_full,
+        rejected_other,
+        dropped,
+        deadline_missed,
+        wall_s,
+        throughput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        mean_batch: server.metrics().counters.mean_batch_size(),
+        p50_ms: quantile_ms(&all_lat, 0.5),
+        p99_ms: quantile_ms(&all_lat, 0.99),
+        per_class,
+    }
+}
+
+/// Shared helper for latency summaries over raw millisecond samples
+/// (bench drivers that don't go through [`LatencyHistogram`]).
+pub fn percentiles_ms(samples: &mut Vec<f64>) -> (f64, f64) {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    (quantile_ms(samples, 0.5), quantile_ms(samples, 0.99))
+}
+
+/// Bucketed histogram variant (metrics-path parity check in tests).
+pub fn histogram_percentiles_ms(h: &LatencyHistogram) -> (f64, f64) {
+    (
+        h.quantile(0.5).as_secs_f64() * 1e3,
+        h.quantile(0.99).as_secs_f64() * 1e3,
+    )
 }
 
 #[cfg(test)]
@@ -111,11 +384,98 @@ mod tests {
     }
 
     #[test]
+    fn pareto_mean_matches_requested_rate() {
+        // The L normalisation must land the empirical mean on 1/rate.
+        // n=20000 keeps the sample error of a heavy-tailed (but
+        // bounded) mean a couple of percent; assert within 10%.
+        let rate = 500.0;
+        let n = 20_000;
+        let d = ArrivalProcess::BoundedPareto { rate_per_s: rate, alpha: 1.5, cap: 1000.0 }
+            .delays(n, 11);
+        let mean = d.iter().map(|x| x.as_secs_f64()).sum::<f64>() / (n - 1) as f64;
+        assert!(
+            (mean * rate - 1.0).abs() < 0.1,
+            "mean gap {mean} vs requested {}",
+            1.0 / rate
+        );
+        assert!(d.iter().skip(1).all(|x| x.as_secs_f64() > 0.0));
+    }
+
+    #[test]
+    fn pareto_is_heavy_tailed_and_bounded() {
+        let d = ArrivalProcess::BoundedPareto { rate_per_s: 100.0, alpha: 1.5, cap: 1000.0 }
+            .delays(5000, 13);
+        let gaps: Vec<f64> = d.iter().skip(1).map(|x| x.as_secs_f64()).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let max = gaps.iter().cloned().fold(0.0, f64::max);
+        // Heavy tail: the max gap dwarfs the mean (Poisson at this n
+        // gives max/mean ≈ ln n ≈ 8.5; the tail index here pushes far
+        // beyond — but never past the bound).
+        assert!(max / mean > 10.0, "max {max} mean {mean}: tail not heavy");
+        let min = gaps.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min <= 1000.0 + 1e-6, "bound violated: {max} / {min}");
+    }
+
+    #[test]
+    fn pareto_deterministic_per_seed() {
+        let p = ArrivalProcess::BoundedPareto { rate_per_s: 50.0, alpha: 1.2, cap: 100.0 };
+        assert_eq!(p.delays(50, 3), p.delays(50, 3));
+        assert_ne!(p.delays(50, 3), p.delays(50, 4));
+    }
+
+    #[test]
     fn labels() {
         assert_eq!(ArrivalProcess::Burst.label(), "burst");
         assert_eq!(
             ArrivalProcess::Bursty { size: 4, gap: Duration::from_millis(5) }.label(),
             "bursty-4x5ms"
         );
+        assert_eq!(
+            ArrivalProcess::BoundedPareto { rate_per_s: 100.0, alpha: 1.5, cap: 1000.0 }.label(),
+            "pareto-100rps-a1.5-k1000"
+        );
+    }
+
+    #[test]
+    fn quantiles_over_samples() {
+        let mut s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        // Shuffle-free check: percentiles_ms sorts internally.
+        s.reverse();
+        let (p50, p99) = percentiles_ms(&mut s);
+        assert_eq!(p50, 51.0);
+        assert_eq!(p99, 99.0);
+        let (p50, p99) = percentiles_ms(&mut Vec::new());
+        assert_eq!((p50, p99), (0.0, 0.0));
+    }
+
+    #[test]
+    fn outcome_json_and_summary_shape() {
+        let o = ReplayOutcome {
+            label: "burst".into(),
+            submitted: 10,
+            completed: 7,
+            shed_deadline: 2,
+            rejected_queue_full: 1,
+            rejected_other: 0,
+            dropped: 0,
+            deadline_missed: 1,
+            wall_s: 0.5,
+            throughput_rps: 14.0,
+            mean_batch: 3.5,
+            p50_ms: 1.25,
+            p99_ms: 9.75,
+            per_class: vec![("gold".into(), 4, 1.0, 2.0)],
+        };
+        let line = o.summary_line();
+        assert!(line.contains("completed=7"), "{line}");
+        assert!(line.contains("shed_deadline=2"), "{line}");
+        assert!(line.contains("dropped=0"), "{line}");
+        let j = o.to_json().to_string();
+        assert!(j.contains("\"bench\":\"serve_replay\""), "{j}");
+        assert!(j.contains("\"p99_ms\":9.75"), "{j}");
+        assert!(j.contains("\"class\":\"gold\""), "{j}");
+        // Round-trips through the parser.
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("completed").unwrap().as_f64().unwrap(), 7.0);
     }
 }

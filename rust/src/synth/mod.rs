@@ -303,6 +303,20 @@ pub fn predict_latency_ms(plan: &SynthesisPlan, net: &Network, device: &DeviceMo
         .sum()
 }
 
+/// Predict a tuned schedule's per-image latency on a simulated device —
+/// the serve front-end's admission-control bridge. A `schedule.json`
+/// artifact lowers into a [`SynthesisPlan`] (validating it against the
+/// net) and runs through [`predict_latency_ms`], giving the admission
+/// controller an analytic service estimate with no on-device warm-up.
+pub fn predict_schedule_latency_ms(
+    schedule: &Schedule,
+    net: &Network,
+    device: &DeviceModel,
+) -> Result<f64> {
+    let plan = SynthesisPlan::from_schedule(schedule, net)?;
+    Ok(predict_latency_ms(&plan, net, device))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -478,5 +492,24 @@ mod tests {
         let sim_par =
             crate::soc::simulate(&net, &device, ProcessingMode::Parallel).total_ms();
         assert!((t_precise / sim_par - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_latency_bridge_validates_and_predicts() {
+        // The admission-control bridge: schedule in, milliseconds out.
+        let net = zoo::tinynet();
+        let precise = Schedule::default_for(&net, 4);
+        let t_precise = predict_schedule_latency_ms(&precise, &net, &devices::nexus5()).unwrap();
+        assert!(t_precise.is_finite() && t_precise > 0.0, "{t_precise}");
+        let mut imprecise = precise.clone();
+        for ls in imprecise.layers.values_mut() {
+            ls.mode = ArithMode::Imprecise;
+        }
+        let t_imprecise =
+            predict_schedule_latency_ms(&imprecise, &net, &devices::nexus5()).unwrap();
+        assert!(t_imprecise < t_precise, "{t_imprecise} vs {t_precise}");
+        // A schedule for a different net is rejected, not mispredicted.
+        let other = zoo::alexnet();
+        assert!(predict_schedule_latency_ms(&precise, &other, &devices::nexus5()).is_err());
     }
 }

@@ -25,8 +25,13 @@ pub enum Error {
     Io(std::io::Error),
     /// PJRT / XLA runtime failure.
     Xla(String),
-    /// A serving-side failure (queue closed, backpressure, …).
+    /// A serving-side failure (queue closed, worker spawn, …).
     Serve(String),
+    /// A request the serve front-end refused at admission — typed so
+    /// clients and the replay driver can tell load-shedding reasons
+    /// apart (queue backpressure vs deadline-infeasible vs unknown
+    /// model) without string matching.
+    Rejected(crate::serve::Rejected),
 }
 
 impl fmt::Display for Error {
@@ -39,6 +44,7 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(msg) => write!(f, "xla error: {msg}"),
             Error::Serve(msg) => write!(f, "serve error: {msg}"),
+            Error::Rejected(r) => write!(f, "rejected: {r}"),
         }
     }
 }

@@ -1,0 +1,276 @@
+//! Serve front-end integration tests over the public API: deterministic
+//! deadline admission, per-tenant isolation with lossless shutdown, the
+//! replay driver, and SLO classes.
+//!
+//! The backends here are synthetic and *gated*: `infer_batch` blocks on
+//! a condvar until the test opens the gate, so the admission
+//! controller's pending count is pinned exactly where the test put it —
+//! no timing assumptions, the shed/admit split is arithmetic.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use cappuccino::serve::{
+    replay, ArrivalProcess, Backend, BackendFactory, BatchPolicy, Rejected, ReplaySpec,
+    RequestOptions, Server, SloTable, Tenant,
+};
+use cappuccino::Error;
+
+type Gate = Arc<(Mutex<bool>, Condvar)>;
+
+fn gate() -> Gate {
+    Arc::new((Mutex::new(false), Condvar::new()))
+}
+
+fn open(gate: &Gate) {
+    let (lock, cvar) = &**gate;
+    *lock.lock().unwrap() = true;
+    cvar.notify_all();
+}
+
+/// Blocks every `infer_batch` until the gate opens, then answers each
+/// image with its element sum.
+struct GatedBackend {
+    gate: Gate,
+    batches: Vec<usize>,
+    delay: Duration,
+}
+
+impl Backend for GatedBackend {
+    fn input_len(&self) -> usize {
+        4
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn infer_batch(
+        &mut self,
+        images: &[&[f32]],
+        _capacity: usize,
+    ) -> cappuccino::Result<Vec<Vec<f32>>> {
+        let (lock, cvar) = &*self.gate;
+        let mut is_open = lock.lock().unwrap();
+        while !*is_open {
+            is_open = cvar.wait(is_open).unwrap();
+        }
+        drop(is_open);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(images.iter().map(|img| vec![img.iter().sum()]).collect())
+    }
+}
+
+fn gated_factory(gate: Gate, max_batch: usize, delay: Duration) -> BackendFactory {
+    Box::new(move || {
+        Ok(Box::new(GatedBackend { gate, batches: vec![max_batch], delay }) as Box<dyn Backend>)
+    })
+}
+
+/// An always-open gate: the backend answers immediately (plus `delay`).
+fn instant_factory(max_batch: usize, delay: Duration) -> BackendFactory {
+    let g = gate();
+    open(&g);
+    gated_factory(g, max_batch, delay)
+}
+
+fn tenant(
+    name: &str,
+    factory: BackendFactory,
+    policy: BatchPolicy,
+    image_ms: Option<f64>,
+) -> Tenant {
+    Tenant { name: name.into(), factory, policy, image_ms, input_len: 4 }
+}
+
+#[test]
+fn admission_sheds_exactly_the_requests_whose_drain_exceeds_the_deadline() {
+    // image_ms = 10, max_batch = 4: predicted drain with `p` pending is
+    // (p/4 + 1) * 40 ms. A 100 ms deadline therefore admits while
+    // p <= 7. The gate is closed, so pending only moves when *we*
+    // submit: one no-deadline warm-up pins pending at 1, then exactly 7
+    // of 20 deadline-tagged requests fit (pending 1..=7) and 13 shed.
+    let g = gate();
+    let policy = BatchPolicy { max_batch: 4, queue_depth: 64, ..BatchPolicy::default() };
+    let t = tenant("m", gated_factory(g.clone(), 4, Duration::ZERO), policy, Some(10.0));
+    let server = Server::start_tenants(vec![t], SloTable::default()).unwrap();
+
+    let warmup = server.router().submit("m", vec![1.0; 4]).unwrap();
+
+    let opts = RequestOptions {
+        deadline: Some(Duration::from_millis(100)),
+        ..RequestOptions::default()
+    };
+    let mut admitted = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..20 {
+        match server.router().submit_with("m", vec![1.0; 4], opts.clone()) {
+            Ok(rx) => admitted.push(rx),
+            Err(Error::Rejected(Rejected::DeadlineInfeasible {
+                predicted_ms,
+                deadline_ms,
+                ..
+            })) => {
+                // Every refusal sees the same saturated queue: 8 pending
+                // -> ceil(9/4) = 3 batch walks of 40 ms.
+                assert_eq!(predicted_ms, 120.0);
+                assert!((deadline_ms - 100.0).abs() < 1e-9);
+                shed += 1;
+            }
+            Err(e) => panic!("expected DeadlineInfeasible, got {e}"),
+        }
+    }
+    assert_eq!(admitted.len(), 7, "deadline admits pending 1..=7 exactly");
+    assert_eq!(shed, 13);
+    assert_eq!(server.router().admission("m").unwrap().pending(), 8);
+
+    // Open the gate: every admitted request — and nothing else — is
+    // answered.
+    open(&g);
+    assert_eq!(warmup.recv().unwrap().logits, vec![4.0]);
+    for rx in admitted {
+        assert_eq!(rx.recv().unwrap().logits, vec![4.0]);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn tenants_are_isolated_and_shutdown_is_lossless_on_both() {
+    // Tenant "a" is gated shut with a tiny queue: it backpressures.
+    // Tenant "b" keeps serving at full rate regardless — then shutdown
+    // answers every admitted "a" request before the workers exit.
+    let g = gate();
+    let a_policy = BatchPolicy { max_batch: 1, queue_depth: 4, ..BatchPolicy::default() };
+    let tenants = vec![
+        tenant("a", gated_factory(g.clone(), 1, Duration::ZERO), a_policy, None),
+        tenant("b", instant_factory(8, Duration::ZERO), BatchPolicy::default(), None),
+    ];
+    let server = Server::start_tenants(tenants, SloTable::default()).unwrap();
+
+    let mut a_admitted = Vec::new();
+    let mut a_full = 0usize;
+    for _ in 0..12 {
+        match server.router().submit("a", vec![2.0; 4]) {
+            Ok(rx) => a_admitted.push(rx),
+            Err(Error::Rejected(Rejected::QueueFull { model, depth })) => {
+                assert_eq!(model, "a");
+                assert_eq!(depth, 4);
+                a_full += 1;
+            }
+            Err(e) => panic!("expected QueueFull, got {e}"),
+        }
+    }
+    assert!(a_full > 0, "tiny queue behind a closed gate must backpressure");
+    assert_eq!(a_admitted.len() + a_full, 12);
+
+    // "a" being saturated must not affect "b" at all.
+    for _ in 0..16 {
+        let resp = server.router().infer_blocking("b", vec![0.5; 4]).unwrap();
+        assert_eq!(resp.logits, vec![2.0]);
+    }
+
+    // Lossless shutdown: open the gate and stop the server; every
+    // admitted "a" request still gets its reply.
+    open(&g);
+    let m = server.metrics();
+    let counters_rejected = m.counters.rejected.load(std::sync::atomic::Ordering::Relaxed);
+    let counters_full = m.counters.rejected_queue_full.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(counters_rejected, a_full as u64);
+    assert_eq!(counters_full, a_full as u64);
+    server.shutdown();
+    for rx in a_admitted {
+        assert_eq!(rx.recv().unwrap().logits, vec![8.0], "admitted request dropped at shutdown");
+    }
+}
+
+#[test]
+fn replay_accounts_for_every_request_and_sheds_under_tight_deadlines() {
+    // Two slow tenants (1 ms per batch walk), burst arrivals, and a
+    // deadline of 2 batch walks: the burst saturates both admission
+    // windows, so some requests shed while every accepted one is
+    // answered. The outcome must account for all 64 exactly.
+    let tenants = vec![
+        tenant(
+            "a",
+            instant_factory(4, Duration::from_millis(1)),
+            BatchPolicy { max_batch: 4, queue_depth: 256, ..BatchPolicy::default() },
+            Some(5.0),
+        ),
+        tenant(
+            "b",
+            instant_factory(4, Duration::from_millis(1)),
+            BatchPolicy { max_batch: 4, queue_depth: 256, ..BatchPolicy::default() },
+            Some(5.0),
+        ),
+    ];
+    let server = Server::start_tenants(tenants, SloTable::default()).unwrap();
+    let spec = ReplaySpec {
+        requests: 64,
+        arrivals: ArrivalProcess::Burst,
+        seed: 3,
+        classes: Vec::new(),
+        deadline: None,
+        deadline_factor: Some(2.0),
+    };
+    let outcome = replay(&server, &spec);
+    assert_eq!(outcome.submitted, 64);
+    assert_eq!(
+        outcome.completed
+            + outcome.shed_deadline
+            + outcome.rejected_queue_full
+            + outcome.rejected_other,
+        64,
+        "unaccounted requests: {}",
+        outcome.summary_line()
+    );
+    assert_eq!(outcome.dropped, 0, "replay must never lose an accepted request");
+    assert!(outcome.completed > 0, "nothing completed: {}", outcome.summary_line());
+    assert!(
+        outcome.shed_deadline > 0,
+        "a burst against a 2-batch deadline must shed: {}",
+        outcome.summary_line()
+    );
+    let json = outcome.to_json().to_string();
+    assert!(json.contains("\"bench\":"), "bench json missing tag: {json}");
+    server.shutdown();
+}
+
+#[test]
+fn slo_classes_gate_admission_and_route_latency_accounting() {
+    // gold=5ms is infeasible even on an idle tenant (one batch walk is
+    // 40 ms); bulk=10s always fits. Unknown classes are typed errors.
+    let g = gate();
+    let policy = BatchPolicy { max_batch: 4, ..BatchPolicy::default() };
+    let t = tenant("m", gated_factory(g.clone(), 4, Duration::ZERO), policy, Some(10.0));
+    let slo = SloTable::parse("gold=5,bulk=10000").unwrap();
+    let server = Server::start_tenants(vec![t], slo).unwrap();
+
+    let bulk = RequestOptions { class: Some("bulk".into()), ..RequestOptions::default() };
+    let rx = server.router().submit_with("m", vec![1.0; 4], bulk).unwrap();
+
+    let gold = RequestOptions { class: Some("gold".into()), ..RequestOptions::default() };
+    match server.router().submit_with("m", vec![1.0; 4], gold) {
+        Err(Error::Rejected(Rejected::DeadlineInfeasible { deadline_ms, .. })) => {
+            assert!((deadline_ms - 5.0).abs() < 1e-9);
+        }
+        other => panic!("gold must shed on an idle-but-slow tenant, got {:?}", other.is_ok()),
+    }
+
+    let silver = RequestOptions { class: Some("silver".into()), ..RequestOptions::default() };
+    match server.router().submit_with("m", vec![1.0; 4], silver) {
+        Err(Error::Rejected(Rejected::UnknownClass { class })) => assert_eq!(class, "silver"),
+        other => panic!("unknown class must be typed, got {:?}", other.is_ok()),
+    }
+
+    open(&g);
+    let resp = rx.recv().unwrap();
+    assert!(resp.deadline_met, "a 10 s bulk deadline should be met");
+    let m = server.metrics();
+    assert_eq!(m.by_class.histogram("bulk").unwrap().count(), 1);
+    assert_eq!(m.by_class.histogram("gold").unwrap().count(), 0);
+    let summary = m.summary();
+    assert!(summary.contains("deadline=1"), "per-reason breakdown missing: {summary}");
+    server.shutdown();
+}
