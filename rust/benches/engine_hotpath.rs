@@ -585,7 +585,7 @@ fn main() {
                 ("int8_vs_f32_b8", Json::num(int8_vs_f32_b8)),
                 ("rows", Json::Arr(json_rows)),
             ]);
-            std::fs::write("BENCH_engine_hotpath.json", doc.to_string())
+            cappuccino::util::write_atomic("BENCH_engine_hotpath.json", doc.to_string())
                 .expect("write BENCH_engine_hotpath.json");
             println!("wrote BENCH_engine_hotpath.json");
         }

@@ -45,7 +45,7 @@ fn run_scenario(
         rxs.push(server.router().submit("m", img).unwrap());
     }
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = server.metrics();

@@ -12,7 +12,7 @@
 //!     data     f32 * prod(dims), little-endian
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use crate::util::error::{Error, Result};
@@ -119,11 +119,33 @@ impl ModelFile {
             if dtype != DTYPE_F32 {
                 return Err(Error::parse("capp", format!("tensor {name}: dtype {dtype}")));
             }
-            let n: usize = dims.iter().product();
-            let raw = c.take(4 * n)?;
+            // A corrupt dim entry can claim 2^32-1 elements per axis;
+            // the product (and the *4 byte count) must be overflow
+            // checked or a crafted header wraps to a tiny read and the
+            // parse "succeeds" with garbage shapes.
+            let n = dims
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| {
+                    Error::parse("capp", format!("tensor {name}: dims {dims:?} overflow"))
+                })?;
+            let nbytes = n.checked_mul(4).ok_or_else(|| {
+                Error::parse("capp", format!("tensor {name}: dims {dims:?} overflow"))
+            })?;
+            let raw = c.take(nbytes)?;
             let mut data = Vec::with_capacity(n);
-            for chunk in raw.chunks_exact(4) {
-                data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            for (i, chunk) in raw.chunks_exact(4).enumerate() {
+                let v = f32::from_le_bytes(chunk.try_into().unwrap());
+                // Weights are finite by construction; NaN/inf here means
+                // a corrupt file, and letting it through poisons every
+                // activation downstream instead of failing at the door.
+                if !v.is_finite() {
+                    return Err(Error::parse(
+                        "capp",
+                        format!("tensor {name}: non-finite value at element {i}"),
+                    ));
+                }
+                data.push(v);
             }
             out.insert(name, NamedTensor { dims, data });
         }
@@ -131,9 +153,7 @@ impl ModelFile {
     }
 
     pub fn write_to(&self, path: impl AsRef<Path>) -> Result<()> {
-        let bytes = self.serialize();
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(&bytes)?;
+        crate::util::write_atomic(path, self.serialize())?;
         Ok(())
     }
 
@@ -166,7 +186,9 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+        // `pos + n` can overflow for a crafted length claim; compare
+        // against the remaining bytes instead.
+        if n > self.buf.len().saturating_sub(self.pos) {
             return Err(Error::parse("capp", format!("truncated at byte {}", self.pos)));
         }
         let s = &self.buf[self.pos..self.pos + n];
@@ -230,6 +252,42 @@ mod tests {
     fn truncation_rejected() {
         let bytes = sample().serialize();
         assert!(ModelFile::parse(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn overflowing_dim_claims_rejected() {
+        // Craft a header whose dims product (or byte count) wraps
+        // usize: magic, version 1, count 1, name "w", ndim 4, each dim
+        // u32::MAX, dtype f32, no data. Must be a typed parse error,
+        // not a wrapped-to-tiny read that "succeeds".
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.push(b'w');
+        bytes.push(4); // ndim
+        for _ in 0..4 {
+            bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        bytes.push(DTYPE_F32);
+        let err = ModelFile::parse(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("overflow"), "got: {err}");
+    }
+
+    #[test]
+    fn non_finite_weights_rejected() {
+        let mut mf = ModelFile::new();
+        mf.insert("w", NamedTensor::new(vec![2], vec![1.0, 2.0]));
+        let mut bytes = mf.serialize();
+        // Overwrite the last f32 (little-endian) with NaN.
+        let at = bytes.len() - 4;
+        bytes[at..].copy_from_slice(&f32::NAN.to_le_bytes());
+        let err = ModelFile::parse(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("non-finite"), "got: {err}");
+        // Infinity is rejected the same way.
+        bytes[at..].copy_from_slice(&f32::INFINITY.to_le_bytes());
+        assert!(ModelFile::parse(&bytes).is_err());
     }
 
     #[test]

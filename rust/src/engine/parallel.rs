@@ -68,6 +68,23 @@
 //! spanning the whole `B x alpha` item space, so the enqueue + wakeup
 //! cost above is paid once per layer per *batch*, not per image.
 //!
+//! ## Panic containment
+//!
+//! Every queued task runs under `catch_unwind`; a panicking task marks
+//! its scope's latch instead of unwinding through a worker (workers
+//! never die) and [`ThreadPool::scope`] / [`ThreadPool::scope_placed`]
+//! **return** the panic status instead of re-panicking in the
+//! submitting thread. All queue/latch locks ignore poisoning (no
+//! guarded state is ever mid-update at a panic boundary — the
+//! catch_unwind wrapper is panic-free), so the pool stays fully usable
+//! after a contained fault. The `parallel_*` helpers record a contained
+//! panic in a submitting-thread-local flag
+//! ([`take_scope_panic`](self::take_scope_panic)) that the plan
+//! executor converts into a typed
+//! [`Error::TaskPanicked`](crate::Error::TaskPanicked) per step; the
+//! non-fault path is untouched, so every bitwise parity oracle is
+//! unaffected.
+//!
 //! ## Pool size vs `ExecConfig::threads`
 //!
 //! [`global_pool`] is sized **once**, at first use, to the probed
@@ -222,6 +239,29 @@ static NEXT_BATCH: AtomicU64 = AtomicU64::new(1);
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Lock a mutex ignoring poisoning. Pool tasks run under
+/// `catch_unwind` and the wrapper itself is panic-free, so guarded
+/// queue/latch state is never left mid-update; honoring poison here
+/// would turn one contained fault elsewhere in the process into a
+/// permanent pool outage.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+thread_local! {
+    /// Set on the submitting thread when a pool scope it ran contained
+    /// a task panic; drained per plan step via [`take_scope_panic`].
+    static SCOPE_PANICKED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Drain this thread's contained-panic flag: `true` iff some pool
+/// scope submitted from this thread since the previous call contained
+/// a task panic. The plan executor calls this after every step to
+/// surface contained panics as typed errors.
+pub(crate) fn take_scope_panic() -> bool {
+    SCOPE_PANICKED.with(|c| c.replace(false))
+}
+
 /// One queued job, tagged with the scope batch it belongs to.
 struct Tagged {
     batch: u64,
@@ -263,7 +303,7 @@ impl Latch {
     }
 
     fn done(&self, ok: bool) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_ignore_poison(&self.state);
         st.0 -= 1;
         if !ok {
             st.1 = true;
@@ -274,17 +314,18 @@ impl Latch {
     }
 
     fn is_done(&self) -> bool {
-        self.state.lock().unwrap().0 == 0
+        lock_ignore_poison(&self.state).0 == 0
     }
 
-    fn wait(&self) {
-        let mut st = self.state.lock().unwrap();
+    /// Block until every task in the scope has completed. Returns
+    /// whether any task panicked — the panic itself was already
+    /// contained at the task boundary, never re-raised here.
+    fn wait(&self) -> bool {
+        let mut st = lock_ignore_poison(&self.state);
         while st.0 > 0 {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
         }
-        if st.1 {
-            panic!("thread-pool task panicked");
-        }
+        st.1
     }
 }
 
@@ -409,10 +450,17 @@ impl ThreadPool {
     /// deadlock). The batch tag keeps the helper off other scopes' jobs
     /// — a concurrent scope's long-running tasks can no longer inflate
     /// this call's latency (head-of-line blocking).
-    pub fn scope<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+    ///
+    /// Returns `true` iff every task completed without panicking. A
+    /// panicking task is **contained** at the task boundary: the scope
+    /// still runs to completion (every sibling executes), the pool and
+    /// its locks stay fully usable, and the failure is reported through
+    /// the return value and the submitting thread's
+    /// [`take_scope_panic`] flag instead of a re-panic.
+    pub fn scope<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) -> bool {
         let n = tasks.len();
         if n == 0 {
-            return;
+            return true;
         }
         let weights: Vec<f64> = self.clusters.iter().map(|c| c.workers as f64).collect();
         let spans = chunk_ranges_weighted(n, &weights);
@@ -422,7 +470,7 @@ impl ThreadPool {
                 *h = c;
             }
         }
-        self.scope_placed(hints.into_iter().zip(tasks).collect());
+        self.scope_placed(hints.into_iter().zip(tasks).collect())
     }
 
     /// [`ThreadPool::scope`] with an explicit target cluster per task
@@ -430,10 +478,11 @@ impl ThreadPool {
     /// placement entry point. Placement only chooses which cluster's
     /// deque — and therefore which cores' caches — a task lands on;
     /// idle workers may still steal it, and execution order within the
-    /// batch is unspecified either way.
-    pub fn scope_placed<'a>(&self, tasks: Vec<(usize, Box<dyn FnOnce() + Send + 'a>)>) {
+    /// batch is unspecified either way. Same panic-containment contract
+    /// (and return value) as [`ThreadPool::scope`].
+    pub fn scope_placed<'a>(&self, tasks: Vec<(usize, Box<dyn FnOnce() + Send + 'a>)>) -> bool {
         if tasks.is_empty() {
-            return;
+            return true;
         }
         let batch = NEXT_BATCH.fetch_add(1, Ordering::Relaxed);
         let latch = Arc::new(Latch::new(tasks.len()));
@@ -446,20 +495,22 @@ impl ThreadPool {
             // every queue and the helper drains this batch's leftovers,
             // so no tagged job can outlive the scope — hence the `'a`
             // borrows each task captures strictly outlive its
-            // execution. The wrapper job cannot panic (the user task
-            // runs under `catch_unwind`), so an unwinding worker or
-            // helper never abandons a queued sibling mid-borrow.
+            // execution. The wrapper job cannot panic (the user task —
+            // and the fault-injection probe — run under
+            // `catch_unwind`), so an unwinding worker or helper never
+            // abandons a queued sibling mid-borrow.
             let task: Job =
                 unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(task) };
             let latch_c = Arc::clone(&latch);
             let job: Job = Box::new(move || {
-                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_ok();
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    crate::faults::maybe_panic("pool");
+                    task();
+                }))
+                .is_ok();
                 latch_c.done(ok);
             });
-            self.shared.clusters[cluster]
-                .queue
-                .lock()
-                .unwrap()
+            lock_ignore_poison(&self.shared.clusters[cluster].queue)
                 .push_back(Tagged { batch, job });
             touched[cluster] = true;
         }
@@ -480,7 +531,7 @@ impl ThreadPool {
             }
             let mut found: Option<Tagged> = None;
             for cl in &self.shared.clusters {
-                let mut q = cl.queue.lock().unwrap();
+                let mut q = lock_ignore_poison(&cl.queue);
                 if let Some(pos) = q.iter().position(|t| t.batch == batch) {
                     found = q.remove(pos);
                     break;
@@ -491,7 +542,11 @@ impl ThreadPool {
                 None => break,
             }
         }
-        latch.wait();
+        let panicked = latch.wait();
+        if panicked {
+            SCOPE_PANICKED.with(|c| c.set(true));
+        }
+        !panicked
     }
 }
 
@@ -501,7 +556,7 @@ impl Drop for ThreadPool {
         for cl in &self.shared.clusters {
             // Acquire each queue lock so no worker is between its empty
             // check and its wait when the wakeup lands.
-            let _guard = cl.queue.lock().unwrap();
+            let _guard = lock_ignore_poison(&cl.queue);
             cl.cv.notify_all();
         }
         for h in self.workers.drain(..) {
@@ -525,17 +580,17 @@ fn worker_loop(sh: Arc<PoolShared>, me: usize) {
 fn next_job(sh: &PoolShared, me: usize) -> Option<Tagged> {
     let n = sh.clusters.len();
     loop {
-        if let Some(t) = sh.clusters[me].queue.lock().unwrap().pop_front() {
+        if let Some(t) = lock_ignore_poison(&sh.clusters[me].queue).pop_front() {
             return Some(t);
         }
         for k in 1..n {
             let c = (me + k) % n;
-            if let Some(t) = sh.clusters[c].queue.lock().unwrap().pop_front() {
+            if let Some(t) = lock_ignore_poison(&sh.clusters[c].queue).pop_front() {
                 return Some(t);
             }
         }
         let cl = &sh.clusters[me];
-        let q = cl.queue.lock().unwrap();
+        let q = lock_ignore_poison(&cl.queue);
         if !q.is_empty() {
             continue;
         }
@@ -544,7 +599,7 @@ fn next_job(sh: &PoolShared, me: usize) -> Option<Tagged> {
         }
         // Woken by own-cluster work, a steal nudge, or shutdown; every
         // path rescans from the top.
-        let _q = cl.cv.wait(q).unwrap();
+        let _q = cl.cv.wait(q).unwrap_or_else(|p| p.into_inner());
     }
 }
 
@@ -1106,8 +1161,34 @@ mod tests {
                 }) as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
-        pool.scope(tasks);
+        assert!(pool.scope(tasks), "fault-free scope reports ok");
         assert_eq!(hits.load(Ordering::Relaxed), 16);
+
+        // Contained panic: the scope reports it (no re-panic), every
+        // sibling task still runs, the submitting thread's flag is set
+        // exactly once, and the same pool keeps executing work.
+        let ran = AtomicUsize::new(0);
+        let mut faulty: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| panic!("injected test panic"))];
+        for _ in 0..7 {
+            faulty.push(Box::new(|| {
+                ran.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        assert!(!pool.scope(faulty), "panicking scope must report the fault");
+        assert!(take_scope_panic(), "submitting thread records the contained panic");
+        assert!(!take_scope_panic(), "the flag drains on read");
+        assert_eq!(ran.load(Ordering::Relaxed), 7, "siblings ran despite the panic");
+        let after = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..16)
+            .map(|_| {
+                Box::new(|| {
+                    after.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        assert!(pool.scope(tasks), "pool fully usable after a contained panic");
+        assert_eq!(after.load(Ordering::Relaxed), 16);
         drop(pool);
 
         // Warm the global pool, then check no further threads are

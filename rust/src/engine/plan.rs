@@ -278,6 +278,33 @@ enum Step {
     Reorder { src: usize, dst: usize },
 }
 
+impl Step {
+    /// Stable step-kind name — the fault-injection site this step
+    /// checks on the chaos path (`CAPPUCCINO_FAULTS=panic:conv:0.01`
+    /// addresses every conv step) and the label fallback in
+    /// [`crate::Error::TaskPanicked`].
+    fn kind(&self) -> &'static str {
+        match self {
+            Step::Input { .. } => "input",
+            Step::ConvMm { .. } | Step::ConvNchw { .. } => "conv",
+            Step::PoolMm { is_max, .. } | Step::PoolNchw { is_max, .. } => {
+                if *is_max {
+                    "maxpool"
+                } else {
+                    "avgpool"
+                }
+            }
+            Step::Lrn { .. } => "lrn",
+            Step::Gap { .. } => "gap",
+            Step::Copy { .. } => "copy",
+            Step::Concat { .. } => "concat",
+            Step::Dense { .. } => "dense",
+            Step::Softmax { .. } => "softmax",
+            Step::Reorder { .. } => "reorder",
+        }
+    }
+}
+
 /// The preallocated buffer arena: activation registers and pad/cast
 /// scratch sized `B x` one row, per-thread FLP/KLP reduction buffers,
 /// and per-thread kernel scratch rows (the generic-`u` conv kernels'
@@ -555,6 +582,10 @@ pub struct ExecutionPlan {
     input_shape: (usize, usize, usize),
     slots: Vec<SlotShape>,
     steps: Vec<Step>,
+    /// One label per step (`layer name` for lowered layers, the step
+    /// kind for structural steps) — the `layer` field of
+    /// [`Error::TaskPanicked`] when a contained panic is surfaced.
+    labels: Vec<String>,
     out_slot: usize,
     arena: Arena,
     /// Per-row pad/cast scratch length (row stride into `arena.scratch`).
@@ -619,6 +650,7 @@ impl ExecutionPlan {
             flat_mm: false,
             slots: Vec::new(),
             steps: Vec::new(),
+            labels: Vec::new(),
             scratch_len: 0,
             qscratch_len: 0,
             reduce_len: 0,
@@ -626,13 +658,14 @@ impl ExecutionPlan {
             baked_param_bytes: 0,
         };
         let in_slot = lw.slot(SlotShape::Maps { c, h, w, u });
-        lw.steps.push(Step::Input { dst: in_slot });
+        lw.push(None, Step::Input { dst: in_slot });
         let out_slot = lw.lower(&net.layers, in_slot)?;
         // End the lowerer's borrow of the schedule before moving it
         // into the plan.
         let Lowerer {
             slots,
             steps,
+            labels,
             scratch_len,
             qscratch_len,
             reduce_len,
@@ -658,6 +691,7 @@ impl ExecutionPlan {
             input_shape: (c, h, w),
             slots,
             steps,
+            labels,
             out_slot,
             arena,
             scratch_row: scratch_len,
@@ -684,6 +718,7 @@ impl ExecutionPlan {
             input_shape: self.input_shape,
             slots: self.slots.clone(),
             steps: self.steps.clone(),
+            labels: self.labels.clone(),
             out_slot: self.out_slot,
             arena: Arena::sized(
                 &self.slots,
@@ -725,19 +760,45 @@ impl ExecutionPlan {
     }
 
     /// One walk of the step sequence over `images.len()` live rows.
-    fn exec(&mut self, images: &[&[f32]]) {
-        for step in &self.steps {
-            exec_step(
-                step,
-                &self.slots,
-                &mut self.arena,
-                images,
-                self.threads,
-                self.scratch_row,
-                self.qscratch_row,
-            );
+    ///
+    /// Every step runs under `catch_unwind`, and the pool's contained
+    /// -panic flag is drained after each step, so a panic anywhere in a
+    /// step — inline in this thread or inside any pool task — surfaces
+    /// as a typed [`Error::TaskPanicked`] naming the step and layer
+    /// instead of unwinding through the caller. The arena is left with
+    /// partial data on the fault path, which is safe: the next walk
+    /// rewrites every register from the input prologue on. The
+    /// non-fault path is byte-for-byte the old walk (the injection
+    /// check is one relaxed atomic load when chaos is off).
+    fn exec(&mut self, images: &[&[f32]]) -> Result<()> {
+        // Drain any stale flag so step `i` is never blamed for an
+        // earlier walk's contained panic.
+        parallel::take_scope_panic();
+        let slots = &self.slots;
+        let arena = &mut self.arena;
+        let (threads, scratch_row, qscratch_row) =
+            (self.threads, self.scratch_row, self.qscratch_row);
+        for (i, step) in self.steps.iter().enumerate() {
+            let injected = crate::faults::check(step.kind());
+            if injected == Some(crate::faults::FaultKind::Err) {
+                return Err(Error::Serve(format!(
+                    "injected error at plan step {i} ({})",
+                    self.labels[i]
+                )));
+            }
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if injected == Some(crate::faults::FaultKind::Panic) {
+                    panic!("injected fault at plan step {i}");
+                }
+                exec_step(step, slots, &mut *arena, images, threads, scratch_row, qscratch_row);
+            }))
+            .is_err();
+            if caught || parallel::take_scope_panic() {
+                return Err(Error::TaskPanicked { step: i, layer: self.labels[i].clone() });
+            }
         }
         self.runs += images.len() as u64;
+        Ok(())
     }
 
     /// Copy live row `row` of the output register into `out`
@@ -766,7 +827,7 @@ impl ExecutionPlan {
         if images.is_empty() {
             return Ok(Vec::new());
         }
-        self.exec(images);
+        self.exec(images)?;
         let out_len = self.output_len();
         let mut rows = Vec::with_capacity(images.len());
         for r in 0..images.len() {
@@ -795,7 +856,7 @@ impl ExecutionPlan {
         if images.is_empty() {
             return Ok(());
         }
-        self.exec(images);
+        self.exec(images)?;
         for r in 0..images.len() {
             self.extract_row_into(r, &mut out[r * out_len..(r + 1) * out_len]);
         }
@@ -926,6 +987,9 @@ struct Lowerer<'a> {
     flat_mm: bool,
     slots: Vec<SlotShape>,
     steps: Vec<Step>,
+    /// Parallel to `steps`: the layer name each step lowered from
+    /// (step kind for structural steps) — fault-report labels.
+    labels: Vec<String>,
     scratch_len: usize,
     /// Per-row i8 activation scratch (max over QuantI8 layers; 0 = none).
     qscratch_len: usize,
@@ -938,6 +1002,16 @@ impl Lowerer<'_> {
     fn slot(&mut self, shape: SlotShape) -> usize {
         self.slots.push(shape);
         self.slots.len() - 1
+    }
+
+    /// Append a step with its label (the lowered layer's name, or the
+    /// step kind when no layer is in scope — input prologue, reorders).
+    fn push(&mut self, layer: Option<&str>, step: Step) {
+        self.labels.push(match layer {
+            Some(name) => name.to_string(),
+            None => step.kind().to_string(),
+        });
+        self.steps.push(step);
     }
 
     /// The schedule entry for a parameterised layer (guaranteed present
@@ -963,11 +1037,11 @@ impl Lowerer<'_> {
         let mut src = cur;
         if u != 1 && target != 1 {
             let mid = self.slot(SlotShape::Maps { c, h, w, u: 1 });
-            self.steps.push(Step::Reorder { src, dst: mid });
+            self.push(Some(&layer.name), Step::Reorder { src, dst: mid });
             src = mid;
         }
         let dst = self.slot(SlotShape::Maps { c, h, w, u: target });
-        self.steps.push(Step::Reorder { src, dst });
+        self.push(Some(&layer.name), Step::Reorder { src, dst });
         Ok(dst)
     }
 
@@ -1144,7 +1218,7 @@ impl Lowerer<'_> {
                     let vec =
                         !quant && mode.vectorized() && ls.packing && ls.vector_width != 1;
                     let b = self.bias(&lp.b_mm);
-                    self.steps.push(Step::ConvMm {
+                    self.push(Some(&layer.name), Step::ConvMm {
                         src: cur,
                         dst,
                         w: wgt,
@@ -1188,7 +1262,7 @@ impl Lowerer<'_> {
                         self.reduce_len = self.reduce_len.max(m * ho * wo);
                     }
                     let (wgt, b) = (self.bake(&lp.w_conv, mode), self.bias(&lp.b_conv));
-                    self.steps.push(Step::ConvNchw {
+                    self.push(Some(&layer.name), Step::ConvNchw {
                         src: cur,
                         dst,
                         w: wgt,
@@ -1217,7 +1291,7 @@ impl Lowerer<'_> {
                         let padded = ceil_div(c, u) * (h + 2 * p) * (w + 2 * p) * u;
                         self.scratch_len = self.scratch_len.max(padded);
                     }
-                    self.steps.push(Step::PoolMm {
+                    self.push(Some(&layer.name), Step::PoolMm {
                         src: cur,
                         dst,
                         k: *k,
@@ -1226,7 +1300,7 @@ impl Lowerer<'_> {
                         is_max,
                     });
                 } else {
-                    self.steps.push(Step::PoolNchw {
+                    self.push(Some(&layer.name), Step::PoolNchw {
                         src: cur,
                         dst,
                         k: *k,
@@ -1240,7 +1314,7 @@ impl Lowerer<'_> {
             LayerOp::Lrn { size, alpha, beta } => {
                 let (c, h, w, u) = self.require_maps(cur, layer)?;
                 let dst = self.slot(SlotShape::Maps { c, h, w, u });
-                self.steps.push(Step::Lrn {
+                self.push(Some(&layer.name), Step::Lrn {
                     src: cur,
                     dst,
                     size: *size,
@@ -1311,21 +1385,21 @@ impl Lowerer<'_> {
                 let u = join_u.expect("hw implies at least one branch");
                 self.nchw_ctx = ctx_after;
                 let dst = self.slot(SlotShape::Maps { c: total_c, h, w, u });
-                self.steps.push(Step::Concat { srcs: outs, dst });
+                self.push(Some(&layer.name), Step::Concat { srcs: outs, dst });
                 Ok(dst)
             }
             LayerOp::Flatten => {
                 self.flat_mm = !self.nchw_ctx;
                 let len = self.slots[cur].len();
                 let dst = self.slot(SlotShape::Flat { len });
-                self.steps.push(Step::Copy { src: cur, dst });
+                self.push(Some(&layer.name), Step::Copy { src: cur, dst });
                 Ok(dst)
             }
             LayerOp::Gap => {
                 self.flat_mm = !self.nchw_ctx;
                 let (c, ..) = self.require_maps(cur, layer)?;
                 let dst = self.slot(SlotShape::Flat { len: c });
-                self.steps.push(Step::Gap { src: cur, dst });
+                self.push(Some(&layer.name), Step::Gap { src: cur, dst });
                 Ok(dst)
             }
             LayerOp::Dense { o, relu } => {
@@ -1385,7 +1459,7 @@ impl Lowerer<'_> {
                 let vec = !quant && mode.vectorized() && ls.packing && ls.vector_width != 1;
                 let b = self.bias(b_src);
                 let dst = self.slot(SlotShape::Flat { len: *o });
-                self.steps.push(Step::Dense {
+                self.push(Some(&layer.name), Step::Dense {
                     src: cur,
                     dst,
                     w: wgt,
@@ -1409,7 +1483,7 @@ impl Lowerer<'_> {
                     }
                 };
                 let dst = self.slot(SlotShape::Flat { len });
-                self.steps.push(Step::Softmax { src: cur, dst });
+                self.push(Some(&layer.name), Step::Softmax { src: cur, dst });
                 Ok(dst)
             }
         }

@@ -53,6 +53,15 @@ use crate::model::Network;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
+/// Bounds a parsed artifact must respect — [`Schedule::from_json`]'s
+/// guard against corrupt or hand-edited files. `as_usize` accepts any
+/// non-negative integral double, so without these a 2^50 in the JSON
+/// reaches plan compilation as a real allocation size. All three sit
+/// far above anything the tuner can emit.
+const MAX_U: usize = 64;
+const MAX_POOL_THREADS: usize = 1024;
+const MAX_TILE: usize = 1 << 20;
+
 /// The tuning surface of one parameterised (conv/dense) layer.
 ///
 /// Dense layers honour `packing` and `mode`; `parallelism`, `tiling`
@@ -305,15 +314,38 @@ impl Schedule {
         ])
     }
 
-    /// Parse a `schedule.json` document.
+    /// Parse a `schedule.json` document. Beyond shape errors, every
+    /// numeric field is bounds-checked here: `as_usize` accepts any
+    /// non-negative integral double, so a corrupt or hand-edited
+    /// artifact could otherwise smuggle a 2^50 thread count or tile
+    /// size straight into plan compilation and die as an allocation
+    /// abort instead of a typed [`Error::Config`].
     pub fn from_json(json: &Json) -> Result<Schedule> {
         let pool_json = json.get("pool")?;
         let cores = match pool_json.get("cores")? {
             Json::Null => None,
-            v => Some(CoreSet::of(&v.usize_vec()?)),
+            v => {
+                let cpus = v.usize_vec()?;
+                // CoreSet::of silently drops ids >= 64; for an artifact
+                // that silence would turn "pin to cpu 91" into "run
+                // unpinned", so reject instead.
+                if let Some(bad) = cpus.iter().find(|&&c| c >= 64) {
+                    return Err(Error::Config(format!(
+                        "schedule artifact: core id {bad} out of range (core sets cover \
+                         cpus 0-63)"
+                    )));
+                }
+                Some(CoreSet::of(&cpus))
+            }
         };
+        let threads = pool_json.get("threads")?.as_usize()?;
+        if threads > MAX_POOL_THREADS {
+            return Err(Error::Config(format!(
+                "schedule artifact: pool.threads={threads} is absurd (limit {MAX_POOL_THREADS})"
+            )));
+        }
         let pool = PoolSettings {
-            threads: pool_json.get("threads")?.as_usize()?,
+            threads,
             affinity: pool_json.get("affinity")?.as_bool()?,
             cores,
         };
@@ -322,10 +354,16 @@ impl Schedule {
             let name = l.get("layer")?.as_str()?.to_string();
             let tiling = match l.get("tiling")? {
                 Json::Null => None,
-                t => Some(ConvTiling {
-                    tm: t.get("tm")?.as_usize()?,
-                    th: t.get("th")?.as_usize()?,
-                }),
+                t => {
+                    let (tm, th) = (t.get("tm")?.as_usize()?, t.get("th")?.as_usize()?);
+                    if tm == 0 || th == 0 || tm > MAX_TILE || th > MAX_TILE {
+                        return Err(Error::Config(format!(
+                            "schedule artifact: layer {name:?} tiling {tm}x{th} out of range \
+                             (1..={MAX_TILE})"
+                        )));
+                    }
+                    Some(ConvTiling { tm, th })
+                }
             };
             // `vector_width` arrived in PR 6; treat it as optional so
             // pre-PR-6 artifacts keep loading (default 0 = auto). The
@@ -355,11 +393,17 @@ impl Schedule {
         let u = json.get("u")?.as_usize()?;
         // A zero width or chunk count can never describe a runnable
         // plan; reject the artifact at parse time rather than letting
-        // it panic inside parameter layout later.
+        // it panic inside parameter layout later. The upper bound on u
+        // guards the same way against allocation-sized widths.
         if u == 0 || pool.threads == 0 {
             return Err(Error::Config(format!(
                 "schedule artifact has u={u}, pool.threads={}: both must be >= 1",
                 pool.threads
+            )));
+        }
+        if u > MAX_U {
+            return Err(Error::Config(format!(
+                "schedule artifact: u={u} is absurd (limit {MAX_U})"
             )));
         }
         Ok(Schedule {
@@ -370,9 +414,11 @@ impl Schedule {
         })
     }
 
-    /// Write the artifact to disk (pretty enough to diff: one document).
+    /// Write the artifact to disk atomically (tmp + rename): a tuning
+    /// run killed mid-write must never leave a truncated artifact where
+    /// the next serve run expects a schedule.
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string())?;
+        crate::util::write_atomic(path, self.to_json().to_string())?;
         Ok(())
     }
 
@@ -516,6 +562,48 @@ mod tests {
         let parsed = Json::parse(&text).unwrap();
         assert!(matches!(Schedule::from_json(&parsed), Err(Error::Config(_))));
         assert!(matches!(zero_u.validate_for(&zoo::tinynet(), 0), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn absurd_numeric_fields_rejected() {
+        // Corrupted-artifact fixtures: `as_usize` happily returns huge
+        // integral doubles, so each bound must be enforced explicitly.
+        let ok = sample().to_json().to_string();
+        let cases = [
+            // u far beyond any vector width.
+            (r#""u":4"#, r#""u":1125899906842624"#),
+            // Allocation-sized pool chunk count.
+            (r#""threads":4"#, r#""threads":1125899906842624"#),
+            // Tile dims: zero and huge are both unrunnable (serialized
+            // key order is alphabetical: th before tm).
+            (r#""tiling":{"th":3,"tm":2}"#, r#""tiling":{"th":3,"tm":0}"#),
+            (r#""tiling":{"th":3,"tm":2}"#, r#""tiling":{"th":4194304,"tm":2}"#),
+            // Core ids outside the 64-bit mask must not silently unpin.
+            (r#""cores":[0,2]"#, r#""cores":[0,91]"#),
+        ];
+        for (from, to) in cases {
+            assert!(ok.contains(from), "fixture drifted: {from:?} not in artifact");
+            let corrupt = ok.replacen(from, to, 1);
+            let parsed = Json::parse(&corrupt).unwrap();
+            assert!(
+                matches!(Schedule::from_json(&parsed), Err(Error::Config(_))),
+                "corruption {to:?} must be a typed rejection"
+            );
+        }
+        // The uncorrupted fixture still parses.
+        assert!(Schedule::from_json(&Json::parse(&ok).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join(format!("capp-sched-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("schedule.json");
+        let s = sample();
+        s.save(&path).unwrap();
+        assert_eq!(Schedule::load(&path).unwrap(), s);
+        assert!(!dir.join("schedule.json.tmp").exists(), "tmp sibling left behind");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! Deterministic fault injection (std-only) — the chaos layer the
+//! fault-tolerance machinery is proved against.
+//!
+//! Production serving code cannot be trusted to survive faults that
+//! never happen in tests, so this module threads seeded, addressable
+//! **injection points** through the hot path: the plan step loop
+//! (`site` = the step kind: `conv`, `dense`, `pool`, …), the thread
+//! pool (`pool`), the serve backend boundary (`backend`), and the
+//! frontend queue/worker boundaries (`enqueue`, `worker`). Each point
+//! calls [`check`] with its site name; when injection is disabled —
+//! the production default — that is one relaxed atomic load and
+//! nothing else.
+//!
+//! ## Spec grammar
+//!
+//! A config is a comma-separated list of `kind:site:prob` triples with
+//! an optional `seed=N` element:
+//!
+//! ```text
+//! CAPPUCCINO_FAULTS="seed=42,panic:conv:0.01,err:backend:0.05"
+//! ```
+//!
+//! * `kind` — `panic` (the injection point panics, exercising
+//!   containment) or `err` (the injection point surfaces a typed
+//!   error, exercising fault replies and supervision).
+//! * `site` — an injection-point name, or `*` to match every site.
+//! * `prob` — injection probability in `[0, 1]`.
+//!
+//! The config comes from the `CAPPUCCINO_FAULTS` environment variable
+//! (read once, at first use) or programmatically via [`install`]
+//! (`serve --faults`, chaos tests). [`install`] always wins over the
+//! environment.
+//!
+//! ## Determinism
+//!
+//! Every spec owns a monotone counter; the n-th check against a spec
+//! hashes `(seed, site, n)` through splitmix64 and injects when the
+//! hash falls below `prob * 2^64`. Same seed + same sequence of checks
+//! → the same faults, so single-worker chaos runs are reproducible
+//! bit-for-bit and multi-worker runs have a seed-stable fault *rate*
+//! (threads interleave counter increments, so only the aggregate is
+//! pinned). No wall clock, no OS entropy.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once};
+
+use crate::util::error::{Error, Result};
+
+/// What an injection point should do when its spec fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic at the injection point (containment path).
+    Panic,
+    /// Surface a typed error from the injection point (fault-reply path).
+    Err,
+}
+
+/// One parsed `kind:site:prob` injection rule.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Injection-point name this rule matches (`*` matches all).
+    pub site: String,
+    /// Injection probability in `[0, 1]`.
+    pub prob: f64,
+}
+
+/// A full injection config: seed + rules. Parsed from the spec grammar
+/// above; installed process-wide with [`install`].
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    pub seed: u64,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultConfig {
+    /// Parse `"seed=42,panic:conv:0.01,err:backend:0.05"`. Unknown
+    /// kinds, probabilities outside `[0, 1]`, and malformed elements
+    /// are rejected with [`Error::Config`] — a typo'd chaos spec must
+    /// not silently run fault-free.
+    pub fn parse(spec: &str) -> Result<FaultConfig> {
+        let mut seed = 0u64;
+        let mut specs = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(s) = part.strip_prefix("seed=").or_else(|| part.strip_prefix("seed:")) {
+                seed = s.trim().parse::<u64>().map_err(|_| {
+                    Error::Config(format!("faults: bad seed {s:?} in {part:?}"))
+                })?;
+                continue;
+            }
+            let mut it = part.splitn(3, ':');
+            let (kind, site, prob) = match (it.next(), it.next(), it.next()) {
+                (Some(k), Some(s), Some(p)) => (k, s, p),
+                _ => {
+                    return Err(Error::Config(format!(
+                        "faults: expected kind:site:prob, got {part:?}"
+                    )))
+                }
+            };
+            let kind = match kind {
+                "panic" => FaultKind::Panic,
+                "err" => FaultKind::Err,
+                other => {
+                    return Err(Error::Config(format!(
+                        "faults: unknown kind {other:?} (want panic|err) in {part:?}"
+                    )))
+                }
+            };
+            let prob = prob.parse::<f64>().map_err(|_| {
+                Error::Config(format!("faults: bad probability {prob:?} in {part:?}"))
+            })?;
+            if !prob.is_finite() || !(0.0..=1.0).contains(&prob) {
+                return Err(Error::Config(format!(
+                    "faults: probability {prob} outside [0, 1] in {part:?}"
+                )));
+            }
+            if site.is_empty() {
+                return Err(Error::Config(format!("faults: empty site in {part:?}")));
+            }
+            specs.push(FaultSpec { kind, site: site.to_string(), prob });
+        }
+        Ok(FaultConfig { seed, specs })
+    }
+}
+
+/// One installed rule + its deterministic draw counter.
+struct ActiveSpec {
+    kind: FaultKind,
+    site: String,
+    /// `prob` scaled to the u64 hash range (`prob * 2^64`, saturating).
+    threshold: u64,
+    site_hash: u64,
+    count: AtomicU64,
+}
+
+struct Active {
+    seed: u64,
+    specs: Vec<ActiveSpec>,
+}
+
+impl Active {
+    fn check(&self, site: &str) -> Option<FaultKind> {
+        for spec in &self.specs {
+            if spec.site != "*" && spec.site != site {
+                continue;
+            }
+            if spec.threshold == 0 {
+                continue;
+            }
+            let n = spec.count.fetch_add(1, Ordering::Relaxed);
+            let draw = splitmix64(
+                self.seed
+                    .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                    .wrapping_add(spec.site_hash)
+                    .wrapping_add(n),
+            );
+            if draw < spec.threshold {
+                return Some(spec.kind);
+            }
+        }
+        None
+    }
+}
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a — stable site addressing independent of the std hasher.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fast-path gate: disabled means [`check`] is one relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ACTIVE: Mutex<Option<Arc<Active>>> = Mutex::new(None);
+static ENV_INIT: Once = Once::new();
+
+fn activate(cfg: Option<&FaultConfig>) {
+    let active = cfg.filter(|c| !c.specs.is_empty()).map(|c| {
+        Arc::new(Active {
+            seed: c.seed,
+            specs: c
+                .specs
+                .iter()
+                .map(|s| ActiveSpec {
+                    kind: s.kind,
+                    site: s.site.clone(),
+                    threshold: if s.prob >= 1.0 {
+                        u64::MAX
+                    } else {
+                        (s.prob * (u64::MAX as f64)) as u64
+                    },
+                    site_hash: fnv1a(&s.site),
+                    count: AtomicU64::new(0),
+                })
+                .collect(),
+        })
+    });
+    let mut guard = ACTIVE.lock().unwrap_or_else(|p| p.into_inner());
+    ENABLED.store(active.is_some(), Ordering::Relaxed);
+    *guard = active;
+}
+
+fn ensure_env() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("CAPPUCCINO_FAULTS") {
+            match FaultConfig::parse(&spec) {
+                Ok(cfg) => activate(Some(&cfg)),
+                Err(e) => eprintln!("CAPPUCCINO_FAULTS ignored: {e}"),
+            }
+        }
+    });
+}
+
+/// Install (or with `None`, clear) the process-wide injection config.
+/// Overrides any `CAPPUCCINO_FAULTS` environment config. Chaos tests
+/// that install different configs must serialize themselves (the
+/// config is process-global).
+pub fn install(cfg: Option<FaultConfig>) {
+    ENV_INIT.call_once(|| {});
+    activate(cfg.as_ref());
+}
+
+/// Is any injection config active?
+pub fn enabled() -> bool {
+    ensure_env();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Should the injection point named `site` fault on this call — and if
+/// so, how? `None` on the (default) disabled path costs one relaxed
+/// atomic load.
+pub fn check(site: &str) -> Option<FaultKind> {
+    ensure_env();
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let active = ACTIVE.lock().unwrap_or_else(|p| p.into_inner()).clone()?;
+    active.check(site)
+}
+
+/// Panic here when a `panic:` spec fires for `site`. The standard
+/// injection call for sites whose containment path is under test.
+pub fn maybe_panic(site: &str) {
+    if check(site) == Some(FaultKind::Panic) {
+        panic!("injected fault at {site}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let cfg = FaultConfig::parse("seed=42, panic:conv:0.01, err:backend:1").unwrap();
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.specs.len(), 2);
+        assert_eq!(cfg.specs[0].kind, FaultKind::Panic);
+        assert_eq!(cfg.specs[0].site, "conv");
+        assert!((cfg.specs[0].prob - 0.01).abs() < 1e-12);
+        assert_eq!(cfg.specs[1].kind, FaultKind::Err);
+        assert!((cfg.specs[1].prob - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(FaultConfig::parse("panic:conv").is_err());
+        assert!(FaultConfig::parse("boom:conv:0.1").is_err());
+        assert!(FaultConfig::parse("panic:conv:1.5").is_err());
+        assert!(FaultConfig::parse("panic:conv:NaN").is_err());
+        assert!(FaultConfig::parse("panic::0.1").is_err());
+        assert!(FaultConfig::parse("seed=xyz,panic:conv:0.1").is_err());
+        assert!(FaultConfig::parse("").unwrap().specs.is_empty());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        // Directly on `Active` (not the global install) so this test
+        // cannot race other tests over process state.
+        let mk = |seed| {
+            let cfg = FaultConfig::parse("panic:conv:0.25").unwrap();
+            Active {
+                seed,
+                specs: cfg
+                    .specs
+                    .iter()
+                    .map(|s| ActiveSpec {
+                        kind: s.kind,
+                        site: s.site.clone(),
+                        threshold: (s.prob * (u64::MAX as f64)) as u64,
+                        site_hash: fnv1a(&s.site),
+                        count: AtomicU64::new(0),
+                    })
+                    .collect(),
+            }
+        };
+        let draws = |a: &Active| (0..256).map(|_| a.check("conv").is_some()).collect::<Vec<_>>();
+        let (a, b, c) = (mk(7), mk(7), mk(8));
+        let (da, db, dc) = (draws(&a), draws(&b), draws(&c));
+        assert_eq!(da, db, "same seed must reproduce the same fault sequence");
+        assert_ne!(da, dc, "different seeds should differ");
+        let hits = da.iter().filter(|&&h| h).count();
+        assert!((20..=110).contains(&hits), "p=0.25 over 256 draws hit {hits} times");
+        // Sites that no spec names never fault.
+        assert!(a.check("dense").is_none());
+    }
+
+    #[test]
+    fn wildcard_matches_every_site() {
+        let cfg = FaultConfig::parse("err:*:1").unwrap();
+        let a = Active {
+            seed: 1,
+            specs: cfg
+                .specs
+                .iter()
+                .map(|s| ActiveSpec {
+                    kind: s.kind,
+                    site: s.site.clone(),
+                    threshold: u64::MAX,
+                    site_hash: fnv1a(&s.site),
+                    count: AtomicU64::new(0),
+                })
+                .collect(),
+        };
+        assert_eq!(a.check("conv"), Some(FaultKind::Err));
+        assert_eq!(a.check("anything"), Some(FaultKind::Err));
+    }
+}

@@ -30,6 +30,7 @@
 //! | [`engine::simd`] | explicit-width SIMD lanes (`f32x4`/`f32x8`, widening int8 dot) over `core::arch` intrinsics with a bitwise-identical scalar fallback; `CAPPUCCINO_SIMD=0` forces the fallback |
 //! | [`engine::parallel`] | topology-aware persistent worker pool (per-cluster deques, idle-only stealing, batch-tagged scopes, cost-weighted placement) + thread workload allocation policies |
 //! | [`engine::topology`] | CPU topology probe (sysfs `cpu_capacity`/packages, affinity-mask aware, uniform fallback), `sched_setaffinity` pinning, serve-worker `CoreSet`s |
+//! | [`faults`] | deterministic fault injection: seeded, plan-addressable panic/error injection points (`CAPPUCCINO_FAULTS` / `serve --faults`), compiled to one atomic load when disabled |
 //! | [`soc`] | mobile SoC simulator: latency + energy + CNNDroid models |
 //! | [`data`] | synthetic validation dataset IO |
 //! | [`metrics`] | latency histograms, throughput, energy accounting |
@@ -38,7 +39,7 @@
 //! | [`inexact`] | per-layer arithmetic-mode analysis |
 //! | [`runtime`] | PJRT artifact loading/execution (`xla` crate) |
 //! | [`serve`] | production serve front-end: admission control, SLO deadlines, continuous batching, multi-model tenancy |
-//! | [`serve::frontend`] | the request pipeline itself — typed rejections, drain-time admission, deadline-aware batch forming, lossless shutdown |
+//! | [`serve::frontend`] | the request pipeline itself — typed rejections, drain-time admission, deadline-aware batch forming, lossless shutdown, and the per-tenant supervisor: contained-fault replies, capped-backoff worker respawn, poison-pill quarantine, fallback-schedule degradation |
 //! | [`serve::tenancy`] | resident tenants from `schedule.json` artifacts: per-model plans, admission estimates, disjoint core partitions |
 //! | [`serve::workload`] | arrival processes (incl. bounded-Pareto heavy tails) + the open-loop replay driver behind `serve --replay` |
 //! | [`bench`] | in-repo micro-benchmark harness (criterion stand-in) |
@@ -49,6 +50,7 @@ pub mod bench;
 pub mod config;
 pub mod data;
 pub mod engine;
+pub mod faults;
 pub mod inexact;
 pub mod layout;
 pub mod metrics;

@@ -20,8 +20,8 @@ use cappuccino::engine::{ArithMode, EngineParams, ModeAssignment, Schedule};
 use cappuccino::inexact::{self, AnalysisConfig};
 use cappuccino::model::zoo;
 use cappuccino::serve::{
-    build_engine_tenants, parse_models, pjrt_factory, replay, ArrivalProcess, BatchPolicy,
-    ReplaySpec, Server, SloTable, TenancyConfig, Tenant,
+    build_engine_tenants, parse_models, pjrt_factory, replay, ArrivalProcess, BackendFactory,
+    BatchPolicy, ReplaySpec, Server, SloTable, SupervisorPolicy, TenancyConfig, Tenant,
 };
 use cappuccino::soc::{self, ProcessingMode};
 use cappuccino::synth::{finalize, PrimarySynthesizer};
@@ -135,6 +135,7 @@ COMMANDS:
               bursty:SIZE:GAPMS|pareto:R[:ALPHA[:CAP]]]
              [--class gold[,bulk]] [--deadline-ms X]
              [--deadline-factor F] [--seed 9] [--bench-out BENCH_serve.json]
+             [--fallback-schedule fb.json] [--faults SPEC]
              engine: batch-compiled native plans (one plan walk per
              formed batch, no artifacts needed); pjrt: AOT artifacts
              --schedule serves a tuned artifact from `cappuccino tune`
@@ -150,6 +151,12 @@ COMMANDS:
              --cores pins the model worker to the given CPUs
              (sched_setaffinity; co-hosted models should use disjoint
              sets so they stop trampling each other's caches)
+             --fallback-schedule names a known-good schedule the
+             supervisor degrades to after repeated worker faults
+             (engine backend; must be tuned for the same net)
+             --faults installs deterministic fault injection for chaos
+             runs, e.g. \"seed=42,panic:conv:0.01,err:backend:0.05\"
+             (also readable from CAPPUCCINO_FAULTS; see src/faults)
 ";
 
 fn cmd_info() -> Result<()> {
@@ -231,7 +238,7 @@ fn cmd_synthesize(flags: &Flags) -> Result<()> {
     if out == "-" {
         println!("{json}");
     } else {
-        std::fs::write(&out, &json)?;
+        cappuccino::util::write_atomic(&out, &json)?;
         eprintln!("wrote plan to {out}");
     }
     for d in soc::catalog() {
@@ -412,6 +419,38 @@ fn parse_arrivals(spec: &str) -> Result<ArrivalProcess> {
     }
 }
 
+/// Build the single-model `--fallback-schedule` degraded-mode factory:
+/// the fallback artifact with the primary's own weights (the same pairing
+/// the tenancy path makes). The nets must match — a fallback for a
+/// different model is a configuration error, not a silent no-op.
+fn engine_fallback(
+    path: &str,
+    net: &str,
+    network: &cappuccino::model::Network,
+    params: &EngineParams,
+    max_batch: usize,
+) -> Result<Option<BackendFactory>> {
+    if path.is_empty() {
+        return Ok(None);
+    }
+    let fb = Schedule::load(path)?;
+    if fb.net != net {
+        return Err(Error::Invalid(format!(
+            "fallback schedule {path:?} was tuned for net {:?}, serving {net:?}",
+            fb.net
+        )));
+    }
+    Ok(Some(
+        cappuccino::serve::EngineBackend::with_schedule(
+            network.clone(),
+            params.clone(),
+            fb,
+            max_batch,
+        )
+        .factory(),
+    ))
+}
+
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let net = flags.get("net", "tinynet");
     let mode = flags.get("mode", "imprecise");
@@ -450,6 +489,15 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         Some(cappuccino::engine::CoreSet::of(&cpus))
     };
     let schedule_path = flags.get("schedule", "");
+    let fallback_path = flags.get("fallback-schedule", "");
+    let faults_flag = flags.get("faults", "");
+    if !faults_flag.is_empty() {
+        // Installed before any worker spawns so the whole run — including
+        // backend construction — is under the injection config.
+        let cfg = cappuccino::faults::FaultConfig::parse(&faults_flag)?;
+        cappuccino::faults::install(Some(cfg));
+        eprintln!("fault injection armed: {faults_flag}");
+    }
     let dir = cappuccino::artifacts_dir();
 
     let server = if !models_flag.is_empty() {
@@ -476,6 +524,12 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             partition_cores: cores.is_none(),
             device,
             seed: 42,
+            fallback_schedule: if fallback_path.is_empty() {
+                None
+            } else {
+                Some(fallback_path.clone())
+            },
+            supervision: SupervisorPolicy::default(),
         };
         eprintln!("compiling {} tenants (native engine) ...", specs.len());
         let mut tenants = build_engine_tenants(&specs, &cfg)?;
@@ -500,7 +554,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         // Single-model path. A tuned schedule artifact may carry the
         // worker's core set; an explicit --cores flag still wins.
         let mut schedule_cores = None;
-        let (factory, input_len, image_ms) = match backend.as_str() {
+        let (factory, fallback, input_len, image_ms) = match backend.as_str() {
             "engine" => {
                 // Native engine: batch-capacity plans compiled on the
                 // worker thread; every formed batch is one plan walk.
@@ -509,7 +563,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                 let network = zoo::by_name(&net)
                     .ok_or_else(|| Error::Invalid(format!("unknown net {net:?}")))?;
                 let input_len = network.input.elements();
-                let (eb, image_ms) = if !schedule_path.is_empty() {
+                let (eb, fb, image_ms) = if !schedule_path.is_empty() {
                     // Serve the measured configuration exactly as tuned:
                     // per-layer schedule, modes, pool threads, and core
                     // set all come from the artifact.
@@ -527,6 +581,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                         &schedule, &network, &device,
                     )?;
                     let params = EngineParams::random(&network, 42, schedule.u)?;
+                    let fb = engine_fallback(&fallback_path, &net, &network, &params, max_batch)?;
                     eprintln!(
                         "compiling {net} batch plans from {schedule_path} (native engine) ..."
                     );
@@ -536,7 +591,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                         schedule,
                         max_batch,
                     );
-                    (eb, image_ms)
+                    (eb, fb, image_ms)
                 } else {
                     let arith: ArithMode = mode.parse()?;
                     let modes = ModeAssignment::uniform(arith);
@@ -559,6 +614,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                         &uniform, &network, &device,
                     )?;
                     let params = EngineParams::random(&network, 42, cappuccino::DEFAULT_U)?;
+                    let fb = engine_fallback(&fallback_path, &net, &network, &params, max_batch)?;
                     eprintln!("compiling {net}/{mode} batch plans (native engine) ...");
                     let eb = cappuccino::serve::EngineBackend::new(
                         network,
@@ -567,14 +623,21 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                         threads,
                         max_batch,
                     );
-                    (eb, image_ms)
+                    (eb, fb, image_ms)
                 };
-                (eb.factory(), input_len, Some(image_ms))
+                (eb.factory(), fb, input_len, Some(image_ms))
             }
             "pjrt" if !schedule_path.is_empty() => {
                 return Err(Error::Invalid(
                     "--schedule applies to the engine backend (PJRT executables are fixed \
                      artifacts); drop --schedule or use --backend engine"
+                        .into(),
+                ))
+            }
+            "pjrt" if !fallback_path.is_empty() => {
+                return Err(Error::Invalid(
+                    "--fallback-schedule applies to the engine backend (PJRT executables are \
+                     fixed artifacts); drop it or use --backend engine"
                         .into(),
                 ))
             }
@@ -593,6 +656,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                 let input_len = network.input.elements();
                 (
                     pjrt_factory(dir.clone(), net.clone(), mode.clone(), seed),
+                    None,
                     input_len,
                     None,
                 )
@@ -609,7 +673,15 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             queue_depth,
             cores: cores.or(schedule_cores),
         };
-        let tenant = Tenant { name: net.clone(), factory, policy, image_ms, input_len };
+        let tenant = Tenant {
+            name: net.clone(),
+            factory,
+            policy,
+            image_ms,
+            input_len,
+            fallback,
+            supervision: SupervisorPolicy::default(),
+        };
         Server::start_tenants(vec![tenant], slo)?
     };
 
@@ -648,7 +720,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         println!("{}", outcome.summary_line());
         println!("{}", server.metrics().summary());
         let out = flags.get("bench-out", "BENCH_serve.json");
-        std::fs::write(&out, outcome.to_json().to_string())?;
+        cappuccino::util::write_atomic(&out, outcome.to_json().to_string())?;
         eprintln!("wrote {out}");
         server.shutdown();
         return Ok(());
@@ -674,7 +746,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
     let mut ok = 0;
     for rx in receivers {
-        if rx.recv().is_ok() {
+        // The reply itself is a Result: a contained worker fault answers
+        // with a typed error instead of completing.
+        if matches!(rx.recv(), Ok(Ok(_))) {
             ok += 1;
         }
     }

@@ -7,6 +7,7 @@
 //! exactly that protocol and every bench reports through it.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// The paper's measurement protocol: drop min and max, average the rest.
@@ -253,6 +254,87 @@ impl ServeCounters {
     }
 }
 
+/// Per-tenant fault-tolerance counters, fed by the serve supervisor.
+///
+/// These are the observable surface of the failure model: every
+/// contained backend fault, every backend rebuild, every quarantined
+/// request, and the total time a tenant spent degraded to its fallback
+/// schedule. A chaos run is judged by these numbers (faults > 0,
+/// respawns > 0, drops = 0), so they are counted at the supervision
+/// points themselves, not reconstructed from logs.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    /// Backend faults (contained panics or typed errors) the supervisor
+    /// absorbed without losing a request.
+    pub faults_contained: AtomicU64,
+    /// Times the worker rebuilt its backend after a fault.
+    pub worker_respawns: AtomicU64,
+    /// Requests answered with `Rejected::Fault` after exhausting their
+    /// retry budget (poison-pill isolation).
+    pub requests_quarantined: AtomicU64,
+    /// Total milliseconds spent serving from the fallback schedule.
+    pub degraded_ms: AtomicU64,
+}
+
+impl FaultStats {
+    /// Did any fault-path counter move?
+    pub fn any(&self) -> bool {
+        self.faults_contained.load(Ordering::Relaxed) != 0
+            || self.worker_respawns.load(Ordering::Relaxed) != 0
+            || self.requests_quarantined.load(Ordering::Relaxed) != 0
+            || self.degraded_ms.load(Ordering::Relaxed) != 0
+    }
+
+    /// `contained=N respawns=N quarantined=N degraded_ms=N`.
+    pub fn summary_fragment(&self) -> String {
+        format!(
+            "contained={} respawns={} quarantined={} degraded_ms={}",
+            self.faults_contained.load(Ordering::Relaxed),
+            self.worker_respawns.load(Ordering::Relaxed),
+            self.requests_quarantined.load(Ordering::Relaxed),
+            self.degraded_ms.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Per-tenant [`FaultStats`] registry. Tenants register once at worker
+/// start; the stats handle is an `Arc` so the supervisor counts without
+/// holding the registry lock.
+#[derive(Debug, Default)]
+pub struct FaultRegistry {
+    tenants: Mutex<Vec<(String, Arc<FaultStats>)>>,
+}
+
+impl FaultRegistry {
+    /// Stats handle for `name`, created on first use.
+    pub fn register(&self, name: &str) -> Arc<FaultStats> {
+        let mut g = self.tenants.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some((_, s)) = g.iter().find(|(n, _)| n == name) {
+            return Arc::clone(s);
+        }
+        let s = Arc::new(FaultStats::default());
+        g.push((name.to_string(), Arc::clone(&s)));
+        s
+    }
+
+    /// Stats for `name`, if that tenant ever registered.
+    pub fn stats(&self, name: &str) -> Option<Arc<FaultStats>> {
+        let g = self.tenants.lock().unwrap_or_else(|p| p.into_inner());
+        g.iter().find(|(n, _)| n == name).map(|(_, s)| Arc::clone(s))
+    }
+
+    /// `tenant[contained=.. respawns=.. ...]` fragments for tenants
+    /// whose counters moved; empty on the fault-free path.
+    pub fn summary(&self) -> String {
+        let g = self.tenants.lock().unwrap_or_else(|p| p.into_inner());
+        g.iter()
+            .filter(|(_, s)| s.any())
+            .map(|(n, s)| format!("{n}[{}]", s.summary_fragment()))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
 /// Per-SLO-class latency histograms.
 ///
 /// Classes are registered **once** at server start, so the record path
@@ -400,6 +482,23 @@ mod tests {
         let s = by.summary();
         assert!(s.contains("gold[") && s.contains("default["));
         assert!(!s.contains("bulk["), "empty classes stay out of the summary: {s}");
+    }
+
+    #[test]
+    fn fault_registry_registers_once_and_summarizes_movers_only() {
+        let reg = FaultRegistry::default();
+        let a = reg.register("a");
+        let a2 = reg.register("a");
+        let _b = reg.register("b");
+        assert!(Arc::ptr_eq(&a, &a2), "re-registering must return the same handle");
+        assert!(reg.summary().is_empty(), "fault-free tenants stay out of the summary");
+        a.faults_contained.fetch_add(2, Ordering::Relaxed);
+        a.worker_respawns.fetch_add(1, Ordering::Relaxed);
+        let s = reg.summary();
+        assert!(s.contains("a[contained=2 respawns=1 quarantined=0 degraded_ms=0]"), "{s}");
+        assert!(!s.contains("b["), "{s}");
+        assert!(reg.stats("a").unwrap().any());
+        assert!(reg.stats("missing").is_none());
     }
 
     #[test]

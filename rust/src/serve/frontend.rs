@@ -31,13 +31,30 @@
 //!    queue) **still executes and still gets a reply** — admitted work
 //!    is never silently dropped, it is only counted `deadline_missed`.
 //!
+//! 4. **Supervision** (the worker *is* the supervisor): every backend
+//!    call runs under `catch_unwind`, so a panic that escapes the
+//!    engine's own containment — or an injected [`crate::faults`]
+//!    fault — surfaces as a contained batch fault, never a dead worker
+//!    with silently dropped reply channels. On a fault the supervisor
+//!    rebuilds the backend from the tenant's factory (capped
+//!    exponential backoff), retries each batch member as a **singleton**
+//!    batch within its per-request retry budget, and answers exhausted
+//!    members with a typed [`Rejected::Fault`] — quarantine, so one
+//!    poison-pill request cannot take fresh neighbours down on every
+//!    retry. Repeated faults inside a window degrade the tenant to its
+//!    optional fallback factory; a fault-free window restores the
+//!    primary ([`SupervisorPolicy`]). A factory that never recovers
+//!    drains the queue with `Rejected::Fault` replies before the worker
+//!    exits.
+//!
 //! **Backpressure contract**: admission happens before enqueue, so the
 //! bounded per-tenant queue is the only buffering; a submit either
-//! returns a reply channel (the request *will* be answered, shutdown
-//! included — the PR 4 drain guarantee, kept by
-//! `drain_after_shutdown`) or a typed [`Error::Rejected`]. One
-//! tenant's congestion is invisible to another's: queues, admission
-//! counters, workers, and core sets are all per-tenant.
+//! returns a reply channel (the request *will* be answered — shutdown
+//! drains and backend faults included; replies are `Result`-typed so a
+//! fault is an *answer*, kept by `drain_after_shutdown` and the
+//! supervisor) or a typed [`Error::Rejected`]. One tenant's congestion
+//! is invisible to another's: queues, admission counters, workers,
+//! supervision state, and core sets are all per-tenant.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -46,6 +63,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::metrics::FaultStats;
 use crate::serve::{Backend, BackendFactory, BatchPolicy, ServeMetrics};
 use crate::util::error::{Error, Result};
 
@@ -58,7 +76,12 @@ pub struct ServeRequest {
     deadline: Option<Instant>,
     /// SLO class tag (per-class latency accounting).
     class: Option<String>,
-    reply: mpsc::SyncSender<ServeResponse>,
+    /// Times this request has already ridden a faulted batch (the
+    /// supervisor's per-request retry budget).
+    retries: u32,
+    /// `Err` carries the typed fault the supervisor answered with
+    /// instead of a response (`Error::Rejected(Rejected::Fault)`).
+    reply: mpsc::SyncSender<Result<ServeResponse>>,
 }
 
 /// The reply: logits + measured latency + the batch it rode in +
@@ -86,6 +109,10 @@ pub enum Rejected {
     UnknownClass { class: String },
     /// The tenant's worker has exited (server shutting down).
     WorkerGone { model: String },
+    /// The request faulted its batch past its retry budget (quarantine)
+    /// or the tenant's backend could not be respawned — answered by the
+    /// supervisor, never silently dropped.
+    Fault { model: String, error: String },
 }
 
 impl Rejected {
@@ -97,6 +124,7 @@ impl Rejected {
             Rejected::UnknownModel { .. } => "unknown_model",
             Rejected::UnknownClass { .. } => "unknown_class",
             Rejected::WorkerGone { .. } => "worker_gone",
+            Rejected::Fault { .. } => "fault",
         }
     }
 }
@@ -115,6 +143,9 @@ impl fmt::Display for Rejected {
             Rejected::UnknownModel { model } => write!(f, "unknown model {model:?}"),
             Rejected::UnknownClass { class } => write!(f, "unknown SLO class {class:?}"),
             Rejected::WorkerGone { model } => write!(f, "model {model:?}: worker gone"),
+            Rejected::Fault { model, error } => {
+                write!(f, "model {model:?}: request quarantined after fault ({error})")
+            }
         }
     }
 }
@@ -272,6 +303,39 @@ impl AdmissionController {
     }
 }
 
+/// Knobs of the per-tenant supervisor (fault containment, respawn,
+/// quarantine, degradation). The defaults are deliberately production
+/// shaped: one retry per request, fast first respawn, degradation only
+/// under a genuine fault burst.
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorPolicy {
+    /// Times a member of a faulted batch is retried (as a singleton
+    /// batch) before being quarantined with [`Rejected::Fault`].
+    pub max_retries: u32,
+    /// Contained faults within `fault_window` that degrade the tenant
+    /// to its fallback factory (no-op without a fallback).
+    pub degrade_after: u32,
+    /// Sliding window for `degrade_after`; also the fault-free interval
+    /// required before a degraded tenant recovers to its primary.
+    pub fault_window: Duration,
+    /// First respawn backoff after a factory failure; doubles per
+    /// consecutive failure up to `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        SupervisorPolicy {
+            max_retries: 1,
+            degrade_after: 3,
+            fault_window: Duration::from_secs(5),
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_secs(1),
+        }
+    }
+}
+
 /// One resident model: execution backend + batching policy + admission
 /// inputs. See [`crate::serve::tenancy`] for building these from
 /// `schedule.json` artifacts.
@@ -284,6 +348,11 @@ pub struct Tenant {
     pub image_ms: Option<f64>,
     /// Expected input element count (replay drivers; 0 = unknown).
     pub input_len: usize,
+    /// Optional degraded-mode factory (e.g. a known-good fallback
+    /// schedule, `serve --fallback-schedule`): the supervisor switches
+    /// to it after `supervision.degrade_after` faults in a window.
+    pub fallback: Option<BackendFactory>,
+    pub supervision: SupervisorPolicy,
 }
 
 /// Static per-tenant facts the server exposes (for replay drivers and
@@ -317,7 +386,11 @@ pub struct Router {
 
 impl Router {
     /// Submit with default options (no class, no deadline).
-    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<mpsc::Receiver<ServeResponse>> {
+    pub fn submit(
+        &self,
+        model: &str,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<ServeResponse>>> {
         self.submit_with(model, image, RequestOptions::default())
     }
 
@@ -325,13 +398,14 @@ impl Router {
     /// receiver. Refusals are typed [`Error::Rejected`]: full queues
     /// (backpressure), infeasible deadlines (load shedding), unknown
     /// models/classes. An `Ok` means the request **will** be answered —
-    /// shutdown drains included.
+    /// shutdown drains and backend faults included; a fault answer is
+    /// `Err(Error::Rejected(Rejected::Fault))` on the reply channel.
     pub fn submit_with(
         &self,
         model: &str,
         image: Vec<f32>,
         opts: RequestOptions,
-    ) -> Result<mpsc::Receiver<ServeResponse>> {
+    ) -> Result<mpsc::Receiver<Result<ServeResponse>>> {
         self.metrics.counters.requests.fetch_add(1, Ordering::Relaxed);
         let handle = match self.tenants.get(model) {
             Some(h) => h,
@@ -352,6 +426,17 @@ impl Router {
                 deadline_ms,
             }));
         }
+        // Injection point at the queue boundary: a faulted enqueue
+        // behaves as a failed push — admission retracted, typed
+        // rejection. Both fault kinds surface as the rejection; there
+        // is no containment story for a panic on the *caller's* thread.
+        if crate::faults::enabled() && crate::faults::check("enqueue").is_some() {
+            handle.admission.retract();
+            return Err(self.reject(Rejected::Fault {
+                model: model.into(),
+                error: "injected enqueue fault".into(),
+            }));
+        }
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         let now = Instant::now();
         let req = ServeRequest {
@@ -359,6 +444,7 @@ impl Router {
             enqueued: now,
             deadline: deadline.map(|d| now + d),
             class: opts.class,
+            retries: 0,
             reply: reply_tx,
         };
         match handle.queue.try_send(Job::Infer(req)) {
@@ -374,11 +460,12 @@ impl Router {
         }
     }
 
-    /// Submit and wait for the response.
+    /// Submit and wait for the response (fault answers flatten into the
+    /// returned `Result`).
     pub fn infer_blocking(&self, model: &str, image: Vec<f32>) -> Result<ServeResponse> {
         let rx = self.submit(model, image)?;
         rx.recv()
-            .map_err(|_| Error::Serve("worker dropped the request".into()))
+            .map_err(|_| Error::Serve("worker dropped the request".into()))?
     }
 
     /// The server's SLO class table.
@@ -403,9 +490,9 @@ impl Router {
             Rejected::UnknownModel { .. } => {
                 c.rejected_unknown_model.fetch_add(1, Ordering::Relaxed)
             }
-            Rejected::UnknownClass { .. } | Rejected::WorkerGone { .. } => {
-                c.rejected_other.fetch_add(1, Ordering::Relaxed)
-            }
+            Rejected::UnknownClass { .. }
+            | Rejected::WorkerGone { .. }
+            | Rejected::Fault { .. } => c.rejected_other.fetch_add(1, Ordering::Relaxed),
         };
         Error::Rejected(r)
     }
@@ -433,6 +520,8 @@ impl Server {
                 policy,
                 image_ms: None,
                 input_len: 0,
+                fallback: None,
+                supervision: SupervisorPolicy::default(),
             })
             .collect();
         Server::start_tenants(tenants, SloTable::default())
@@ -459,9 +548,26 @@ impl Server {
             let adm = Arc::clone(&admission);
             let policy = t.policy;
             let factory = t.factory;
+            let fallback = t.fallback;
+            let supervision = t.supervision;
+            let faults = metrics.faults.register(&t.name);
+            let name = t.name.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("cappuccino-worker-{}", t.name))
-                .spawn(move || worker_loop(factory, rx, policy, adm, m, ready_tx))
+                .spawn(move || {
+                    worker_loop(
+                        name,
+                        factory,
+                        fallback,
+                        supervision,
+                        rx,
+                        policy,
+                        adm,
+                        m,
+                        faults,
+                        ready_tx,
+                    )
+                })
                 .map_err(|e| Error::Serve(format!("spawn worker: {e}")))?;
             ready_rx
                 .recv()
@@ -529,15 +635,324 @@ fn slack_close(req: &ServeRequest, exec: Option<Duration>) -> Option<Instant> {
     }
 }
 
-/// Worker: pin if requested, construct backend, then continuously
-/// batch-and-execute until shutdown — and **drain** on shutdown (see
-/// [`drain_after_shutdown`]).
-pub(super) fn worker_loop(
+/// Give up on a tenant whose factory fails this many consecutive times
+/// during one respawn (each attempt backs off exponentially): the
+/// worker then answers everything with [`Rejected::Fault`] and exits.
+const MAX_RESPAWN_ATTEMPTS: u32 = 8;
+
+/// The per-tenant supervisor: the worker-resident backend plus all
+/// fault-handling state. Every batch executes through
+/// [`Supervisor::run_batch`], which contains panics, retries members,
+/// quarantines poison pills, respawns the backend, and manages
+/// degradation — the worker thread itself can only exit through
+/// shutdown or a permanently failed factory, never through a backend
+/// fault.
+struct Supervisor {
+    model: String,
     factory: BackendFactory,
+    fallback: Option<BackendFactory>,
+    policy: SupervisorPolicy,
+    backend: Box<dyn Backend>,
+    /// Largest usable batch (backend capacity ∩ batch policy).
+    max_capacity: usize,
+    /// The batch policy's size cap (capacity recomputation input).
+    batch_cap: usize,
+    /// Serving from `fallback` right now?
+    on_fallback: bool,
+    degraded_since: Option<Instant>,
+    /// Contained-fault instants inside the sliding `fault_window`.
+    recent_faults: Vec<Instant>,
+    last_fault: Option<Instant>,
+    /// False once the factory permanently failed: the queue is drained
+    /// with fault replies and the worker exits.
+    alive: bool,
+    admission: Arc<AdmissionController>,
+    metrics: Arc<ServeMetrics>,
+    faults: Arc<FaultStats>,
+    /// Cached `worker@<model>` injection-site name (per-tenant chaos
+    /// addressing without a per-batch allocation).
+    worker_site: String,
+}
+
+impl Supervisor {
+    /// One backend call under containment: a panic unwinding out of
+    /// `infer_batch` (or an injected `worker`/`worker@<model>` fault)
+    /// becomes an `Err`, with the batch safely *outside* the closure.
+    fn try_infer(&mut self, images: &[&[f32]], capacity: usize) -> Result<Vec<Vec<f32>>> {
+        let backend = &mut self.backend;
+        let site = &self.worker_site;
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if crate::faults::enabled() {
+                for s in ["worker", site.as_str()] {
+                    match crate::faults::check(s) {
+                        Some(crate::faults::FaultKind::Panic) => {
+                            panic!("injected fault at {s}")
+                        }
+                        Some(crate::faults::FaultKind::Err) => {
+                            return Err(Error::Serve(format!("injected error at {s}")));
+                        }
+                        None => {}
+                    }
+                }
+            }
+            backend.infer_batch(images, capacity)
+        }))
+        .unwrap_or_else(|_| Err(Error::Serve("backend panicked (contained)".into())))
+    }
+
+    /// Execute one formed batch at the smallest adequate capacity and
+    /// answer every member — deadline-expired members included (counted
+    /// `deadline_missed`), faulted members via [`Supervisor::handle_fault`].
+    /// Never drops a reply.
+    fn run_batch(&mut self, batch: Vec<ServeRequest>) {
+        if batch.is_empty() {
+            return;
+        }
+        if !self.alive {
+            let err = Error::Serve("worker exhausted respawn attempts".into());
+            for req in batch {
+                self.reply_fault(req, &err);
+            }
+            return;
+        }
+        // Pick the smallest compiled capacity that fits the batch; fall
+        // back to the largest (callers never exceed it by construction).
+        let capacity = self
+            .backend
+            .batch_sizes()
+            .iter()
+            .copied()
+            .find(|&b| b >= batch.len())
+            .unwrap_or_else(|| self.backend.batch_sizes().last().copied().unwrap_or(1));
+        self.metrics.counters.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .counters
+            .batched_items
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        let result = {
+            let images: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
+            self.try_infer(&images, capacity)
+        };
+        match result {
+            Ok(rows) => {
+                for (req, logits) in batch.iter().zip(rows) {
+                    let now = Instant::now();
+                    let latency = now.duration_since(req.enqueued);
+                    let deadline_met = req.deadline.map_or(true, |d| now <= d);
+                    self.metrics.latency.record(latency);
+                    self.metrics.by_class.record(req.class.as_deref(), latency);
+                    self.metrics.counters.completed.fetch_add(1, Ordering::Relaxed);
+                    if req.deadline.is_some() {
+                        let c = if deadline_met {
+                            &self.metrics.counters.deadline_met
+                        } else {
+                            &self.metrics.counters.deadline_missed
+                        };
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.metrics.throughput.add(1);
+                    let _ = req.reply.send(Ok(ServeResponse {
+                        logits,
+                        latency,
+                        batch_size: batch.len(),
+                        deadline_met,
+                    }));
+                }
+                self.admission.complete(batch.len());
+                self.maybe_recover();
+            }
+            Err(e) => self.handle_fault(batch, e),
+        }
+    }
+
+    /// A batch faulted (contained panic or typed error): count it,
+    /// update degradation state, respawn the backend, then retry each
+    /// member as a **singleton** batch within its retry budget and
+    /// quarantine the rest. Recursion depth is bounded by
+    /// `max_retries + 1`.
+    fn handle_fault(&mut self, batch: Vec<ServeRequest>, e: Error) {
+        eprintln!("worker {}: contained batch fault: {e}", self.model);
+        self.faults.faults_contained.fetch_add(1, Ordering::Relaxed);
+        self.note_fault();
+        if !self.respawn() {
+            for req in batch {
+                self.reply_fault(req, &e);
+            }
+            self.alive = false;
+            return;
+        }
+        for mut req in batch {
+            if req.retries >= self.policy.max_retries {
+                self.reply_fault(req, &e);
+            } else {
+                req.retries += 1;
+                self.run_batch(vec![req]);
+            }
+        }
+    }
+
+    /// Quarantine answer: a typed [`Rejected::Fault`] on the reply
+    /// channel (never a silent drop) releasing the admission slot.
+    fn reply_fault(&self, req: ServeRequest, error: &Error) {
+        self.faults.requests_quarantined.fetch_add(1, Ordering::Relaxed);
+        let _ = req.reply.send(Err(Error::Rejected(Rejected::Fault {
+            model: self.model.clone(),
+            error: error.to_string(),
+        })));
+        self.admission.complete(1);
+    }
+
+    /// Record a contained fault and degrade to the fallback factory
+    /// once `degrade_after` faults land inside the sliding window.
+    fn note_fault(&mut self) {
+        let now = Instant::now();
+        self.last_fault = Some(now);
+        self.recent_faults.push(now);
+        let window = self.policy.fault_window;
+        self.recent_faults.retain(|t| now.duration_since(*t) <= window);
+        if !self.on_fallback
+            && self.fallback.is_some()
+            && self.recent_faults.len() as u32 >= self.policy.degrade_after
+        {
+            eprintln!("worker {}: degrading to fallback schedule", self.model);
+            self.on_fallback = true;
+            self.degraded_since = Some(now);
+        }
+    }
+
+    /// Rebuild the backend from the active factory (fallback when
+    /// degraded) with capped exponential backoff between failed
+    /// attempts. `false` after `MAX_RESPAWN_ATTEMPTS` failures.
+    fn respawn(&mut self) -> bool {
+        let mut backoff = self.policy.backoff_base;
+        for _ in 0..MAX_RESPAWN_ATTEMPTS {
+            let factory = if self.on_fallback {
+                self.fallback.as_ref().unwrap_or(&self.factory)
+            } else {
+                &self.factory
+            };
+            match factory() {
+                Ok(b) => {
+                    self.backend = b;
+                    self.recompute_capacity();
+                    self.faults.worker_respawns.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+                Err(e) => {
+                    eprintln!("worker {}: respawn failed: {e}", self.model);
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(self.policy.backoff_cap);
+                }
+            }
+        }
+        false
+    }
+
+    /// After a clean batch on the fallback: once a full fault-free
+    /// window has passed, rebuild the primary and record the degraded
+    /// interval (at least 1 ms — a degradation that happened must be
+    /// visible in `degraded_ms`). A failed primary rebuild stays on the
+    /// fallback and tries again after the next clean batch.
+    fn maybe_recover(&mut self) {
+        if !self.on_fallback {
+            return;
+        }
+        let quiet = self
+            .last_fault
+            .map_or(true, |t| t.elapsed() >= self.policy.fault_window);
+        if !quiet {
+            return;
+        }
+        match (self.factory)() {
+            Ok(b) => {
+                self.backend = b;
+                self.recompute_capacity();
+                self.on_fallback = false;
+                self.recent_faults.clear();
+                self.finish_degraded();
+                eprintln!("worker {}: recovered to primary schedule", self.model);
+            }
+            Err(e) => {
+                eprintln!("worker {}: recovery failed, staying on fallback: {e}", self.model)
+            }
+        }
+    }
+
+    /// Close out a degraded interval (recovery or worker exit).
+    fn finish_degraded(&mut self) {
+        if let Some(since) = self.degraded_since.take() {
+            let ms = since.elapsed().as_millis().max(1) as u64;
+            self.faults.degraded_ms.fetch_add(ms, Ordering::Relaxed);
+        }
+    }
+
+    fn recompute_capacity(&mut self) {
+        self.max_capacity = self
+            .backend
+            .batch_sizes()
+            .last()
+            .copied()
+            .unwrap_or(1)
+            .min(self.batch_cap)
+            .max(1);
+    }
+
+    /// Post-shutdown drain: execute every request already sitting in
+    /// the queue, in arrival order, batched at the worker's capacity.
+    ///
+    /// A shutdown closes the door to new work but always finishes work
+    /// it let in — the front-end's lossless-drain invariant, held per
+    /// tenant (and held *through faults*: drained batches run under the
+    /// same supervision as live ones).
+    fn drain_after_shutdown(&mut self, rx: &mpsc::Receiver<Job>) {
+        let mut batch: Vec<ServeRequest> = Vec::new();
+        loop {
+            match rx.try_recv() {
+                Ok(Job::Infer(r)) => {
+                    batch.push(r);
+                    if batch.len() >= self.max_capacity {
+                        self.run_batch(std::mem::take(&mut batch));
+                    }
+                }
+                // Duplicate shutdown signals fold into the first.
+                Ok(Job::Shutdown) => {}
+                Err(mpsc::TryRecvError::Empty) | Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        }
+        self.run_batch(batch);
+        self.finish_degraded();
+    }
+
+    /// The factory permanently failed mid-serve: answer (not drop)
+    /// everything the router already accepted, then let the channel
+    /// disconnect so new submits reject as [`Rejected::WorkerGone`].
+    fn drain_dead(&mut self, rx: &mpsc::Receiver<Job>) {
+        let err = Error::Serve("worker exhausted respawn attempts".into());
+        loop {
+            match rx.try_recv() {
+                Ok(Job::Infer(r)) => self.reply_fault(r, &err),
+                Ok(Job::Shutdown) => {}
+                Err(mpsc::TryRecvError::Empty) | Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        }
+        self.finish_degraded();
+    }
+}
+
+/// Worker: pin if requested, construct backend, then continuously
+/// batch-and-execute under supervision until shutdown — and **drain**
+/// on shutdown ([`Supervisor::drain_after_shutdown`]).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn worker_loop(
+    name: String,
+    factory: BackendFactory,
+    fallback: Option<BackendFactory>,
+    supervision: SupervisorPolicy,
     rx: mpsc::Receiver<Job>,
     policy: BatchPolicy,
     admission: Arc<AdmissionController>,
     metrics: Arc<ServeMetrics>,
+    faults: Arc<FaultStats>,
     ready: mpsc::SyncSender<Result<()>>,
 ) {
     if let Some(cores) = policy.cores {
@@ -545,7 +960,7 @@ pub(super) fn worker_loop(
         // worker unpinned and everything else identical.
         let _ = crate::engine::topology::pin_current_thread(&cores.cpus());
     }
-    let mut backend = match factory() {
+    let backend = match factory() {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b
@@ -555,24 +970,44 @@ pub(super) fn worker_loop(
             return;
         }
     };
-    let max_capacity = backend
-        .batch_sizes()
-        .last()
-        .copied()
-        .unwrap_or(1)
-        .min(policy.max_batch)
-        .max(1);
-    let exec = exec_estimate(&admission);
+    let worker_site = format!("worker@{name}");
+    let mut sup = Supervisor {
+        model: name,
+        factory,
+        fallback,
+        policy: supervision,
+        backend,
+        max_capacity: 1,
+        batch_cap: policy.max_batch.max(1),
+        on_fallback: false,
+        degraded_since: None,
+        recent_faults: Vec::new(),
+        last_fault: None,
+        alive: true,
+        admission,
+        metrics,
+        faults,
+        worker_site,
+    };
+    sup.recompute_capacity();
+    let exec = exec_estimate(&sup.admission);
 
     loop {
+        if !sup.alive {
+            sup.drain_dead(&rx);
+            return;
+        }
         // Block for the first request — it opens a forming batch.
         let first = match rx.recv() {
             Ok(Job::Infer(r)) => r,
             Ok(Job::Shutdown) => {
-                drain_after_shutdown(&mut *backend, &rx, max_capacity, &admission, &metrics);
+                sup.drain_after_shutdown(&rx);
                 return;
             }
-            Err(_) => return,
+            Err(_) => {
+                sup.finish_degraded();
+                return;
+            }
         };
         // Continuous batching: the batch stays open — admitting every
         // arrival — until its size budget (capacity), its time budget
@@ -584,7 +1019,7 @@ pub(super) fn worker_loop(
             close = close.min(s);
         }
         let mut batch = vec![first];
-        while batch.len() < max_capacity {
+        while batch.len() < sup.max_capacity {
             let now = Instant::now();
             if close <= now {
                 break;
@@ -597,116 +1032,20 @@ pub(super) fn worker_loop(
                     batch.push(r);
                 }
                 Ok(Job::Shutdown) => {
-                    run_batch(&mut *backend, &batch, &admission, &metrics);
-                    drain_after_shutdown(&mut *backend, &rx, max_capacity, &admission, &metrics);
+                    sup.run_batch(batch);
+                    sup.drain_after_shutdown(&rx);
                     return;
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    run_batch(&mut *backend, &batch, &admission, &metrics);
+                    sup.run_batch(batch);
+                    sup.finish_degraded();
                     return;
                 }
             }
         }
-        run_batch(&mut *backend, &batch, &admission, &metrics);
+        sup.run_batch(batch);
     }
-}
-
-/// Post-shutdown drain: execute every request already sitting in the
-/// queue, in arrival order, batched at the worker's capacity.
-///
-/// Without this, a worker observing `Job::Shutdown` returned
-/// immediately and dropped every `Infer` job queued behind the signal —
-/// requests the router had *accepted* (clients were already waiting on
-/// a reply channel) surfaced as "worker dropped the request". A
-/// shutdown closes the door to new work but always finishes work it
-/// let in — the front-end's lossless-drain invariant, held per tenant.
-pub(super) fn drain_after_shutdown(
-    backend: &mut dyn Backend,
-    rx: &mpsc::Receiver<Job>,
-    max_capacity: usize,
-    admission: &AdmissionController,
-    metrics: &ServeMetrics,
-) {
-    let mut batch: Vec<ServeRequest> = Vec::new();
-    loop {
-        match rx.try_recv() {
-            Ok(Job::Infer(r)) => {
-                batch.push(r);
-                if batch.len() >= max_capacity {
-                    run_batch(backend, &batch, admission, metrics);
-                    batch.clear();
-                }
-            }
-            // Duplicate shutdown signals fold into the first.
-            Ok(Job::Shutdown) => {}
-            Err(mpsc::TryRecvError::Empty) | Err(mpsc::TryRecvError::Disconnected) => break,
-        }
-    }
-    if !batch.is_empty() {
-        run_batch(backend, &batch, admission, metrics);
-    }
-}
-
-/// Execute one formed batch at the smallest adequate AOT capacity and
-/// answer every member — deadline-expired members included (counted
-/// `deadline_missed`, never dropped).
-pub(super) fn run_batch(
-    backend: &mut dyn Backend,
-    batch: &[ServeRequest],
-    admission: &AdmissionController,
-    metrics: &ServeMetrics,
-) {
-    // Pick the smallest compiled capacity that fits the batch; fall back
-    // to the largest (callers never exceed it by construction).
-    let capacity = backend
-        .batch_sizes()
-        .iter()
-        .copied()
-        .find(|&b| b >= batch.len())
-        .unwrap_or_else(|| backend.batch_sizes().last().copied().unwrap_or(1));
-
-    let images: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
-    let result = backend.infer_batch(&images, capacity);
-    metrics.counters.batches.fetch_add(1, Ordering::Relaxed);
-    metrics
-        .counters
-        .batched_items
-        .fetch_add(batch.len() as u64, Ordering::Relaxed);
-    match result {
-        Ok(rows) => {
-            for (req, logits) in batch.iter().zip(rows) {
-                let now = Instant::now();
-                let latency = now.duration_since(req.enqueued);
-                let deadline_met = req.deadline.map_or(true, |d| now <= d);
-                metrics.latency.record(latency);
-                metrics.by_class.record(req.class.as_deref(), latency);
-                metrics.counters.completed.fetch_add(1, Ordering::Relaxed);
-                if req.deadline.is_some() {
-                    let c = if deadline_met {
-                        &metrics.counters.deadline_met
-                    } else {
-                        &metrics.counters.deadline_missed
-                    };
-                    c.fetch_add(1, Ordering::Relaxed);
-                }
-                metrics.throughput.add(1);
-                let _ = req.reply.send(ServeResponse {
-                    logits,
-                    latency,
-                    batch_size: batch.len(),
-                    deadline_met,
-                });
-            }
-        }
-        Err(e) => {
-            // Drop the reply senders: receivers observe RecvError.
-            eprintln!("worker batch failed: {e}");
-        }
-    }
-    // Success or failure, these requests no longer occupy the tenant's
-    // admission window.
-    admission.complete(batch.len());
 }
 
 #[cfg(test)]
@@ -775,7 +1114,7 @@ mod tests {
             })
             .collect();
         let responses: Vec<ServeResponse> =
-            rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
         assert_eq!(responses.len(), 12);
         // At least one response must have ridden a multi-request batch.
         assert!(
@@ -889,6 +1228,8 @@ mod tests {
             // Huge estimate: any finite class deadline is infeasible.
             image_ms: Some(1e6),
             input_len: 768,
+            fallback: None,
+            supervision: SupervisorPolicy::default(),
         };
         let slo = SloTable::parse("gold=5").unwrap();
         let server = Server::start_tenants(vec![tenant], slo).unwrap();
@@ -1006,6 +1347,7 @@ mod tests {
                         enqueued: Instant::now(),
                         deadline: None,
                         class: None,
+                        retries: 0,
                         reply: reply_tx,
                     };
                     queue.push(Job::Infer(req));
@@ -1031,9 +1373,21 @@ mod tests {
                 let m = Arc::clone(&metrics);
                 let adm = Arc::clone(&admission);
                 let factory = backend.factory();
+                let faults = m.faults.register(&format!("t{tenant}"));
                 worker_handles.push((
                     std::thread::spawn(move || {
-                        worker_loop(factory, rx, policy, adm, m, ready_tx)
+                        worker_loop(
+                            format!("t{tenant}"),
+                            factory,
+                            None,
+                            SupervisorPolicy::default(),
+                            rx,
+                            policy,
+                            adm,
+                            m,
+                            faults,
+                            ready_tx,
+                        )
                     }),
                     ready_rx,
                     Arc::clone(&admission),
@@ -1051,12 +1405,15 @@ mod tests {
             }
             for (tenant, reply_rxs) in all_reply_rxs.into_iter().enumerate() {
                 for (i, reply_rx) in reply_rxs.into_iter().enumerate() {
-                    let resp = reply_rx.recv().unwrap_or_else(|_| {
-                        panic!(
-                            "shutdown_first={shutdown_first}: tenant {tenant} request {i} \
-                             dropped at shutdown"
-                        )
-                    });
+                    let resp = reply_rx
+                        .recv()
+                        .unwrap_or_else(|_| {
+                            panic!(
+                                "shutdown_first={shutdown_first}: tenant {tenant} request {i} \
+                                 dropped at shutdown"
+                            )
+                        })
+                        .unwrap();
                     assert!(resp.logits.iter().all(|v| v.is_finite()));
                 }
             }
@@ -1098,6 +1455,7 @@ mod tests {
                     enqueued: now,
                     deadline,
                     class: None,
+                    retries: 0,
                     reply: reply_tx,
                 },
                 reply_rx,
@@ -1116,19 +1474,24 @@ mod tests {
             queue_depth: 16,
             ..Default::default()
         };
+        let faults = metrics.faults.register("m");
         worker_loop(
+            "m".into(),
             backend.factory(),
+            None,
+            SupervisorPolicy::default(),
             rx,
             policy,
             Arc::clone(&admission),
             Arc::clone(&metrics),
+            faults,
             ready_tx,
         );
         ready_rx.recv().unwrap().unwrap();
 
-        let r1 = expired_rx.recv().expect("expired request was dropped");
+        let r1 = expired_rx.recv().expect("expired request was dropped").unwrap();
         assert!(!r1.deadline_met, "an expired member must be flagged late");
-        let r2 = fresh_rx.recv().expect("fresh request was dropped");
+        let r2 = fresh_rx.recv().expect("fresh request was dropped").unwrap();
         assert!(r2.deadline_met);
         let c = &metrics.counters;
         assert_eq!(c.completed.load(Ordering::Relaxed), 2);

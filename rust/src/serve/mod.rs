@@ -36,6 +36,40 @@
 //! [`Error::Rejected`](crate::util::error::Error::Rejected) naming the
 //! reason. Nothing buffers without bound; nothing admitted is dropped.
 //!
+//! ## Failure model
+//!
+//! A production tenant must survive its own backend. The failure model
+//! assumes any `infer_batch` call can fail — a contained panic
+//! surfacing as [`Error::TaskPanicked`](crate::util::error::Error),
+//! a typed error, or an injected fault from [`crate::faults`] — and
+//! guarantees, via the per-tenant **supervisor** in [`frontend`]:
+//!
+//! * **No silent drops, ever.** Every member of a faulted batch gets a
+//!   reply: a retried success, or a typed
+//!   [`Rejected::Fault`] quarantine answer. The admission window is
+//!   released exactly once per request either way, so pending counts
+//!   stay exact across faults.
+//! * **Poison-pill isolation.** Members of a faulted batch are retried
+//!   as singleton batches (budgeted per request); a request that faults
+//!   alone is quarantined instead of taking fresh neighbours down with
+//!   it on every retry.
+//! * **Respawn with capped backoff.** After a fault the worker rebuilds
+//!   its backend from the tenant's factory (factories are `Fn`, not
+//!   `FnOnce`, exactly so they can be re-invoked); factory failures
+//!   back off exponentially up to a cap, and a factory that never
+//!   recovers drains the queue with `Rejected::Fault` replies before
+//!   the worker exits — still no silent drops.
+//! * **Degradation and recovery.** Repeated faults inside a window
+//!   degrade the tenant to its optional fallback schedule
+//!   (`serve --fallback-schedule`); a fault-free window restores the
+//!   primary and records the degraded interval in
+//!   [`crate::metrics::FaultStats`].
+//!
+//! Tenants fail independently: supervision state, backend, queue, and
+//! fault counters are all per-tenant, so one model's chaos never
+//! perturbs another's replies (the shared engine pool contains worker
+//! panics without poisoning itself — see [`crate::engine::parallel`]).
+//!
 //! [`tenancy`] builds multi-model [`Tenant`] sets from `schedule.json`
 //! artifacts; [`workload`] generates arrival traces and replays them
 //! for latency-under-load measurement. Python never appears anywhere on
@@ -47,7 +81,7 @@ pub mod workload;
 
 pub use frontend::{
     Rejected, RequestOptions, Router, Server, ServeRequest, ServeResponse, SloClass, SloTable,
-    Tenant, TenantInfo,
+    SupervisorPolicy, Tenant, TenantInfo,
 };
 pub use tenancy::{build_engine_tenants, parse_models, TenancyConfig, TenantSpec};
 pub use workload::{replay, ArrivalProcess, ReplayOutcome, ReplaySpec};
@@ -72,8 +106,9 @@ pub trait Backend {
 }
 
 /// Factory constructing a backend *on* the worker thread (PJRT is not
-/// `Send`).
-pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+/// `Send`). `Fn`, not `FnOnce`: the supervisor re-invokes it to respawn
+/// a backend after a contained fault.
+pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn Backend>> + Send>;
 
 /// Batch-forming policy (plus the worker's placement request).
 #[derive(Debug, Clone, Copy)]
@@ -115,6 +150,8 @@ pub struct ServeMetrics {
     /// Latency broken out per SLO class ("default" for untagged).
     pub by_class: LatencyByClass,
     pub throughput: Throughput,
+    /// Per-tenant fault-tolerance counters (supervisor-fed).
+    pub faults: crate::metrics::FaultRegistry,
 }
 
 impl ServeMetrics {
@@ -147,6 +184,12 @@ impl ServeMetrics {
         if !classes.is_empty() {
             s.push_str(" classes[");
             s.push_str(&classes);
+            s.push(']');
+        }
+        let faults = self.faults.summary();
+        if !faults.is_empty() {
+            s.push_str(" faults[");
+            s.push_str(&faults);
             s.push(']');
         }
         s
@@ -224,6 +267,8 @@ impl EngineBackend {
     /// propagate through the server's startup channel. The network is
     /// compiled **once** at the largest capacity; every other capacity
     /// is derived with `with_capacity`, sharing the baked weights.
+    /// Re-invocable: a supervisor respawn recompiles from the same
+    /// retained configuration.
     pub fn factory(self) -> BackendFactory {
         Box::new(move || {
             let max_capacity = self.batches.last().copied().unwrap_or(1);
@@ -248,7 +293,7 @@ impl EngineBackend {
             plans.push(base);
             Ok(Box::new(CompiledEngineBackend {
                 plans,
-                batches: self.batches,
+                batches: self.batches.clone(),
                 input_len: self.input_len,
             }) as Box<dyn Backend>)
         })
@@ -281,6 +326,17 @@ impl Backend for CompiledEngineBackend {
             .plans
             .get_mut(idx)
             .ok_or_else(|| Error::Serve("engine backend has no compiled plans".into()))?;
+        // Injection point at the serve/engine boundary: an `err:backend`
+        // spec exercises the supervisor's fault-reply path without going
+        // through plan-step containment; `panic:backend` exercises the
+        // worker-side catch_unwind.
+        match crate::faults::check("backend") {
+            Some(crate::faults::FaultKind::Err) => {
+                return Err(Error::Serve("injected error at serve backend".into()));
+            }
+            Some(crate::faults::FaultKind::Panic) => panic!("injected fault at backend"),
+            None => {}
+        }
         // One plan walk for the whole formed batch: only the
         // `images.len() <= capacity` live rows are computed, so padded
         // lanes can never surface stale or duplicated data in replies.

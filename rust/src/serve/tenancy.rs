@@ -68,6 +68,14 @@ pub struct TenancyConfig {
     /// Weight seed base (tenant `i` uses `seed + i` — demo weights;
     /// real deployments would load parameter files).
     pub seed: u64,
+    /// Optional known-good fallback schedule artifact
+    /// (`--fallback-schedule`): applied to every tenant whose net
+    /// matches the artifact's, as the supervisor's degraded-mode
+    /// factory (same weights, fallback configuration). Tenants for a
+    /// different net serve without a fallback.
+    pub fallback_schedule: Option<String>,
+    /// Supervisor knobs shared by every tenant built here.
+    pub supervision: crate::serve::SupervisorPolicy,
 }
 
 impl TenancyConfig {
@@ -80,6 +88,8 @@ impl TenancyConfig {
             partition_cores: true,
             device,
             seed: 7,
+            fallback_schedule: None,
+            supervision: crate::serve::SupervisorPolicy::default(),
         }
     }
 }
@@ -91,6 +101,10 @@ pub fn build_engine_tenants(specs: &[TenantSpec], cfg: &TenancyConfig) -> Result
         Topology::probe().partition(specs.len()).into_iter().map(Some).collect()
     } else {
         vec![None; specs.len()]
+    };
+    let fallback_schedule = match &cfg.fallback_schedule {
+        Some(path) => Some(Schedule::load(path)?),
+        None => None,
     };
     specs
         .iter()
@@ -109,6 +123,20 @@ pub fn build_engine_tenants(specs: &[TenantSpec], cfg: &TenancyConfig) -> Result
             let params = EngineParams::random(&net, cfg.seed + i as u64, schedule.u)?;
             let cores = partition.or(schedule.pool.cores);
             let input_len = net.input.elements();
+            // Degraded-mode factory: the fallback artifact with this
+            // tenant's own weights, when the nets match.
+            let fallback = fallback_schedule
+                .as_ref()
+                .filter(|f| f.net == schedule.net)
+                .map(|f| {
+                    EngineBackend::with_schedule(
+                        net.clone(),
+                        params.clone(),
+                        f.clone(),
+                        cfg.max_batch,
+                    )
+                    .factory()
+                });
             let backend = EngineBackend::with_schedule(net, params, schedule, cfg.max_batch);
             Ok(Tenant {
                 name: spec.name.clone(),
@@ -121,6 +149,8 @@ pub fn build_engine_tenants(specs: &[TenantSpec], cfg: &TenancyConfig) -> Result
                 },
                 image_ms: Some(image_ms),
                 input_len,
+                fallback,
+                supervision: cfg.supervision,
             })
         })
         .collect()
@@ -193,6 +223,34 @@ mod tests {
             assert_eq!(resp.logits.len(), 8);
         }
         server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fallback_schedule_attaches_to_matching_tenants_and_builds() {
+        use crate::serve::Backend as _;
+        let dir = std::env::temp_dir().join(format!("capp-fallback-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let net = zoo::tinynet();
+        let primary = Schedule::default_for(&net, 4);
+        let mut fb = Schedule::default_for(&net, 4);
+        fb.pool.threads = 1;
+        let p = dir.join("primary.json");
+        let f = dir.join("fallback.json");
+        primary.save(&p).unwrap();
+        fb.save(&f).unwrap();
+
+        let specs = parse_models(&format!("a={}", p.to_string_lossy())).unwrap();
+        let mut cfg = TenancyConfig::new(devices::nexus5());
+        cfg.fallback_schedule = Some(f.to_string_lossy().into_owned());
+        let tenants = build_engine_tenants(&specs, &cfg).unwrap();
+        let fallback = tenants[0].fallback.as_ref().expect("matching net must get a fallback");
+        // The degraded-mode factory must build a working backend (and
+        // stay re-invocable — call it twice).
+        for _ in 0..2 {
+            let b = fallback().unwrap();
+            assert_eq!(b.input_len(), 3 * 16 * 16);
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -147,6 +147,11 @@ pub struct ReplayOutcome {
     pub shed_deadline: usize,
     pub rejected_queue_full: usize,
     pub rejected_other: usize,
+    /// Admitted requests answered with a typed fault
+    /// ([`Rejected::Fault`]) by the supervisor — quarantined poison
+    /// pills and respawn exhaustion. Chaos runs expect these; they are
+    /// *answers*, not drops.
+    pub faulted: usize,
     /// Admitted requests whose reply channel closed without a reply —
     /// the front-end's contract says this must be zero.
     pub dropped: usize,
@@ -165,13 +170,14 @@ impl ReplayOutcome {
     pub fn summary_line(&self) -> String {
         format!(
             "replay: submitted={} completed={} shed_deadline={} rejected_queue_full={} \
-             rejected_other={} dropped={} deadline_missed={} throughput_rps={:.1} \
+             rejected_other={} faulted={} dropped={} deadline_missed={} throughput_rps={:.1} \
              mean_batch={:.2} p50_ms={:.3} p99_ms={:.3}",
             self.submitted,
             self.completed,
             self.shed_deadline,
             self.rejected_queue_full,
             self.rejected_other,
+            self.faulted,
             self.dropped,
             self.deadline_missed,
             self.throughput_rps,
@@ -203,6 +209,7 @@ impl ReplayOutcome {
             ("shed_deadline", Json::num(self.shed_deadline as f64)),
             ("rejected_queue_full", Json::num(self.rejected_queue_full as f64)),
             ("rejected_other", Json::num(self.rejected_other as f64)),
+            ("faulted", Json::num(self.faulted as f64)),
             ("dropped", Json::num(self.dropped as f64)),
             ("deadline_missed", Json::num(self.deadline_missed as f64)),
             ("wall_s", Json::num(self.wall_s)),
@@ -246,7 +253,10 @@ pub fn replay(server: &Server, spec: &ReplaySpec) -> ReplayOutcome {
         })
         .collect();
 
-    let mut inflight: Vec<(usize, std::sync::mpsc::Receiver<super::ServeResponse>)> = Vec::new();
+    let mut inflight: Vec<(
+        usize,
+        std::sync::mpsc::Receiver<crate::util::error::Result<super::ServeResponse>>,
+    )> = Vec::new();
     let (mut shed_deadline, mut rejected_queue_full, mut rejected_other) = (0, 0, 0);
     let start = Instant::now();
     for (i, delay) in delays.iter().enumerate() {
@@ -276,11 +286,12 @@ pub fn replay(server: &Server, spec: &ReplaySpec) -> ReplayOutcome {
     let mut class_lat: Vec<Vec<f64>> = vec![Vec::new(); n_classes];
     let mut all_lat: Vec<f64> = Vec::new();
     let mut completed = 0;
+    let mut faulted = 0;
     let mut dropped = 0;
     let mut deadline_missed = 0;
     for (slot, rx) in inflight {
         match rx.recv() {
-            Ok(resp) => {
+            Ok(Ok(resp)) => {
                 completed += 1;
                 if !resp.deadline_met {
                     deadline_missed += 1;
@@ -289,6 +300,9 @@ pub fn replay(server: &Server, spec: &ReplaySpec) -> ReplayOutcome {
                 all_lat.push(ms);
                 class_lat[slot].push(ms);
             }
+            // A typed fault answer (quarantine / respawn exhaustion):
+            // the contract held — the request was answered.
+            Ok(Err(_)) => faulted += 1,
             Err(_) => dropped += 1,
         }
     }
@@ -313,6 +327,7 @@ pub fn replay(server: &Server, spec: &ReplaySpec) -> ReplayOutcome {
         shed_deadline,
         rejected_queue_full,
         rejected_other,
+        faulted,
         dropped,
         deadline_missed,
         wall_s,
@@ -457,6 +472,7 @@ mod tests {
             shed_deadline: 2,
             rejected_queue_full: 1,
             rejected_other: 0,
+            faulted: 1,
             dropped: 0,
             deadline_missed: 1,
             wall_s: 0.5,
@@ -469,6 +485,7 @@ mod tests {
         let line = o.summary_line();
         assert!(line.contains("completed=7"), "{line}");
         assert!(line.contains("shed_deadline=2"), "{line}");
+        assert!(line.contains("faulted=1"), "{line}");
         assert!(line.contains("dropped=0"), "{line}");
         let j = o.to_json().to_string();
         assert!(j.contains("\"bench\":\"serve_replay\""), "{j}");

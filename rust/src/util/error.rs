@@ -32,6 +32,12 @@ pub enum Error {
     /// apart (queue backpressure vs deadline-infeasible vs unknown
     /// model) without string matching.
     Rejected(crate::serve::Rejected),
+    /// A pool task panicked during a plan walk. The panic was contained
+    /// (caught at the task boundary; the pool and its locks stay fully
+    /// usable) and surfaced as this typed error instead of unwinding
+    /// through `run_batch`. `step` is the plan step index, `layer` the
+    /// lowered step's label (layer name or step kind).
+    TaskPanicked { step: usize, layer: String },
 }
 
 impl fmt::Display for Error {
@@ -45,6 +51,9 @@ impl fmt::Display for Error {
             Error::Xla(msg) => write!(f, "xla error: {msg}"),
             Error::Serve(msg) => write!(f, "serve error: {msg}"),
             Error::Rejected(r) => write!(f, "rejected: {r}"),
+            Error::TaskPanicked { step, layer } => {
+                write!(f, "task panicked at plan step {step} ({layer}); panic contained")
+            }
         }
     }
 }

@@ -22,6 +22,31 @@ pub fn round_up(a: usize, b: usize) -> usize {
     ceil_div(a, b) * b
 }
 
+/// Write `contents` to `path` atomically: write a `.tmp` sibling, then
+/// `rename` it into place. A crash or kill mid-write can leave a stale
+/// temp file behind but never a truncated/corrupt artifact at `path` —
+/// every artifact writer (schedules, bench JSON, replay output) goes
+/// through here so the next run always parses either the old file or
+/// the complete new one.
+pub fn write_atomic(
+    path: impl AsRef<std::path::Path>,
+    contents: impl AsRef<[u8]>,
+) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, contents)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            // Don't leave the temp file behind on a failed rename.
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
 /// Format a float with engineering-style units (1.23 k / 4.56 M / ...).
 pub fn eng(value: f64) -> String {
     let (v, suffix) = if value.abs() >= 1e9 {
@@ -75,6 +100,22 @@ mod tests {
         assert_eq!(eng(12.0), "12.00");
         assert_eq!(eng(2.5e7), "25.00M");
         assert_eq!(eng(3.1e9), "3.10G");
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_cleans_temp() {
+        let dir = std::env::temp_dir().join(format!("capp-atomic-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("artifact.json");
+        write_atomic(&path, b"{\"v\":1}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"v\":1}");
+        write_atomic(&path, b"{\"v\":2}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"v\":2}");
+        assert!(
+            !dir.join("artifact.json.tmp").exists(),
+            "temp file left behind after rename"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Chaos suite: deterministic fault injection end to end.
+//!
+//! One `#[test]` with sequential phases — `cappuccino::faults` installs
+//! a **process-global** config, so the phases must not run concurrently
+//! with each other (or with any other test in this binary; keep it the
+//! only one).
+//!
+//! Phase 1 proves engine-level containment: an injected panic inside a
+//! plan step surfaces as a typed [`Error::TaskPanicked`] naming the
+//! step, and the shared thread pool stays fully usable (bitwise parity)
+//! afterwards. Phase 2 proves serve-level supervision: two tenants,
+//! injection addressed at one (`panic:worker@a`), every request
+//! answered (Ok or typed fault, zero drops), the faulted tenant
+//! respawns, the healthy tenant untouched — and the whole run is
+//! reproducible bit-for-bit from the seed. Phase 3 re-checks engine
+//! parity after all the contained chaos.
+
+use cappuccino::engine::{EngineParams, PlanBuilder};
+use cappuccino::faults::{self, FaultConfig};
+use cappuccino::model::zoo;
+use cappuccino::serve::{
+    Backend, BackendFactory, BatchPolicy, Rejected, Server, SloTable, SupervisorPolicy, Tenant,
+};
+use cappuccino::util::rng::Rng;
+use cappuccino::Error;
+
+/// Answers each image with its element sum. All faults in this suite
+/// come from the injection layer, never the backend itself.
+struct SumBackend;
+
+impl Backend for SumBackend {
+    fn input_len(&self) -> usize {
+        4
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &[4]
+    }
+
+    fn infer_batch(
+        &mut self,
+        images: &[&[f32]],
+        _capacity: usize,
+    ) -> cappuccino::Result<Vec<Vec<f32>>> {
+        Ok(images.iter().map(|img| vec![img.iter().sum()]).collect())
+    }
+}
+
+fn sum_factory() -> BackendFactory {
+    Box::new(|| Ok(Box::new(SumBackend) as Box<dyn Backend>))
+}
+
+fn tenant(name: &str) -> Tenant {
+    Tenant {
+        name: name.into(),
+        factory: sum_factory(),
+        policy: BatchPolicy::default(),
+        image_ms: None,
+        input_len: 4,
+        fallback: None,
+        supervision: SupervisorPolicy::default(),
+    }
+}
+
+/// One seeded serve-chaos run: two tenants, panics injected only at
+/// tenant "a"'s worker, `n` sequential blocking requests per tenant.
+/// Returns `(a_ok, a_faulted, a_contained, a_respawns)`.
+fn serve_chaos_run(spec: &str, n: usize) -> (usize, usize, u64, u64) {
+    faults::install(Some(FaultConfig::parse(spec).unwrap()));
+    let server =
+        Server::start_tenants(vec![tenant("a"), tenant("b")], SloTable::default()).unwrap();
+
+    let (mut a_ok, mut a_faulted) = (0usize, 0usize);
+    for _ in 0..n {
+        // Sequential singleton batches keep the per-spec draw counter on
+        // a single deterministic sequence.
+        match server.router().infer_blocking("a", vec![1.0; 4]) {
+            Ok(resp) => {
+                assert_eq!(resp.logits, vec![4.0]);
+                a_ok += 1;
+            }
+            Err(Error::Rejected(Rejected::Fault { model, .. })) => {
+                assert_eq!(model, "a");
+                a_faulted += 1;
+            }
+            Err(e) => panic!("tenant a: expected Ok or typed fault, got {e}"),
+        }
+    }
+    // The healthy tenant must be completely unaffected.
+    for _ in 0..n {
+        let resp = server.router().infer_blocking("b", vec![2.0; 4]).unwrap();
+        assert_eq!(resp.logits, vec![8.0]);
+    }
+
+    use std::sync::atomic::Ordering;
+    let a_stats = server.metrics().faults.stats("a").expect("tenant a registered");
+    let contained = a_stats.faults_contained.load(Ordering::Relaxed);
+    let respawns = a_stats.worker_respawns.load(Ordering::Relaxed);
+    let b_stats = server.metrics().faults.stats("b").expect("tenant b registered");
+    assert_eq!(
+        b_stats.faults_contained.load(Ordering::Relaxed),
+        0,
+        "injection addressed at a must never touch b"
+    );
+    assert_eq!(b_stats.worker_respawns.load(Ordering::Relaxed), 0);
+    assert_eq!(server.router().admission("a").unwrap().pending(), 0);
+    assert_eq!(server.router().admission("b").unwrap().pending(), 0);
+    server.shutdown();
+    faults::install(None);
+    (a_ok, a_faulted, contained, respawns)
+}
+
+#[test]
+fn chaos_injection_is_contained_supervised_and_deterministic() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 42, 4).unwrap();
+    let mut rng = Rng::new(5);
+    let input = rng.normal_vec(net.input.elements());
+
+    // ---- Phase 1: engine-level containment ---------------------------
+    // Every conv step panics; the walk must surface a typed
+    // TaskPanicked naming a conv step — not poison the pool, not abort
+    // the process.
+    faults::install(Some(FaultConfig::parse("seed=1,panic:conv:1").unwrap()));
+    let mut plan = PlanBuilder::new(&net, &params).threads(2).build().unwrap();
+    match plan.run(&input) {
+        Err(Error::TaskPanicked { layer, .. }) => {
+            assert!(layer.contains("conv"), "panicked step should be a conv, got {layer:?}");
+        }
+        other => panic!("expected TaskPanicked, got ok={}", other.is_ok()),
+    }
+    faults::install(None);
+    // The same plan object (and the shared pool) is fully usable after
+    // the contained panic, and stays bitwise deterministic.
+    let clean = plan.run(&input).unwrap();
+    assert_eq!(plan.run(&input).unwrap(), clean, "pool lost parity after contained panic");
+
+    // ---- Phase 2: serve-level supervision under seeded chaos ---------
+    let spec = "seed=3,panic:worker@a:0.4";
+    let n = 30;
+    let (a_ok, a_faulted, contained, respawns) = serve_chaos_run(spec, n);
+    assert_eq!(a_ok + a_faulted, n, "a reply went missing: ok={a_ok} faulted={a_faulted}");
+    assert!(a_ok > 0, "p=0.4 with one retry should complete most requests");
+    assert!(contained >= 1, "no faults landed at p=0.4 over {n} requests");
+    assert!(respawns >= 1, "contained faults must respawn the backend");
+    assert!(respawns >= contained, "every contained fault respawns (factory never fails)");
+
+    // Same seed, same sequence: the whole chaos run is reproducible.
+    let rerun = serve_chaos_run(spec, n);
+    assert_eq!(
+        rerun,
+        (a_ok, a_faulted, contained, respawns),
+        "seeded chaos run is not deterministic"
+    );
+    // ---- Phase 3: engine parity after all the chaos ------------------
+    // A freshly compiled plan on the shared pool still reproduces the
+    // pre-chaos output bit for bit.
+    let mut fresh = PlanBuilder::new(&net, &params).threads(2).build().unwrap();
+    assert_eq!(fresh.run(&input).unwrap(), clean, "engine lost parity after chaos runs");
+
+    // Injected errors (not panics) surface as typed faults too: err at
+    // the backend site quarantines without ever panicking a thread.
+    faults::install(Some(FaultConfig::parse("seed=9,err:worker@a:1").unwrap()));
+    let server = Server::start_tenants(vec![tenant("a")], SloTable::default()).unwrap();
+    match server.router().infer_blocking("a", vec![1.0; 4]) {
+        Err(Error::Rejected(Rejected::Fault { error, .. })) => {
+            assert!(error.contains("injected"), "fault detail lost: {error}");
+        }
+        other => panic!("err:worker@a:1 must quarantine, got ok={}", other.is_ok()),
+    }
+    server.shutdown();
+    faults::install(None);
+}

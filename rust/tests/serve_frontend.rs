@@ -7,12 +7,13 @@
 //! controller's pending count is pinned exactly where the test put it —
 //! no timing assumptions, the shed/admit split is arithmetic.
 
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use cappuccino::serve::{
     replay, ArrivalProcess, Backend, BackendFactory, BatchPolicy, Rejected, ReplaySpec,
-    RequestOptions, Server, SloTable, Tenant,
+    RequestOptions, Server, SloTable, SupervisorPolicy, Tenant,
 };
 use cappuccino::Error;
 
@@ -64,8 +65,11 @@ impl Backend for GatedBackend {
 }
 
 fn gated_factory(gate: Gate, max_batch: usize, delay: Duration) -> BackendFactory {
+    // Factories are `Fn` now (the supervisor re-invokes them to
+    // respawn), so the gate is cloned per instance.
     Box::new(move || {
-        Ok(Box::new(GatedBackend { gate, batches: vec![max_batch], delay }) as Box<dyn Backend>)
+        Ok(Box::new(GatedBackend { gate: gate.clone(), batches: vec![max_batch], delay })
+            as Box<dyn Backend>)
     })
 }
 
@@ -82,7 +86,15 @@ fn tenant(
     policy: BatchPolicy,
     image_ms: Option<f64>,
 ) -> Tenant {
-    Tenant { name: name.into(), factory, policy, image_ms, input_len: 4 }
+    Tenant {
+        name: name.into(),
+        factory,
+        policy,
+        image_ms,
+        input_len: 4,
+        fallback: None,
+        supervision: SupervisorPolicy::default(),
+    }
 }
 
 #[test]
@@ -129,9 +141,9 @@ fn admission_sheds_exactly_the_requests_whose_drain_exceeds_the_deadline() {
     // Open the gate: every admitted request — and nothing else — is
     // answered.
     open(&g);
-    assert_eq!(warmup.recv().unwrap().logits, vec![4.0]);
+    assert_eq!(warmup.recv().unwrap().unwrap().logits, vec![4.0]);
     for rx in admitted {
-        assert_eq!(rx.recv().unwrap().logits, vec![4.0]);
+        assert_eq!(rx.recv().unwrap().unwrap().logits, vec![4.0]);
     }
     server.shutdown();
 }
@@ -181,7 +193,11 @@ fn tenants_are_isolated_and_shutdown_is_lossless_on_both() {
     assert_eq!(counters_full, a_full as u64);
     server.shutdown();
     for rx in a_admitted {
-        assert_eq!(rx.recv().unwrap().logits, vec![8.0], "admitted request dropped at shutdown");
+        assert_eq!(
+            rx.recv().unwrap().unwrap().logits,
+            vec![8.0],
+            "admitted request dropped at shutdown"
+        );
     }
 }
 
@@ -237,6 +253,244 @@ fn replay_accounts_for_every_request_and_sheds_under_tight_deadlines() {
     server.shutdown();
 }
 
+/// Sums each image and adds `bias` (so tests can tell primary and
+/// fallback apart); panics or errs per the shared knobs.
+struct FaultyBackend {
+    bias: f32,
+    /// Err on any call while set.
+    bad: Option<Arc<AtomicBool>>,
+    /// Panic on infer-call numbers in this set (shared across respawned
+    /// instances, so "first call ever panics" is expressible).
+    panic_calls: Option<(Arc<AtomicU32>, Vec<u32>)>,
+    /// Err on any batch containing an image whose first element is 666.
+    poison: bool,
+}
+
+impl Backend for FaultyBackend {
+    fn input_len(&self) -> usize {
+        4
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &[4]
+    }
+
+    fn infer_batch(
+        &mut self,
+        images: &[&[f32]],
+        _capacity: usize,
+    ) -> cappuccino::Result<Vec<Vec<f32>>> {
+        if let Some(bad) = &self.bad {
+            if bad.load(Ordering::SeqCst) {
+                return Err(Error::Serve("primary is bad".into()));
+            }
+        }
+        if let Some((counter, at)) = &self.panic_calls {
+            let n = counter.fetch_add(1, Ordering::SeqCst);
+            if at.contains(&n) {
+                panic!("flaky backend panicked on call {n}");
+            }
+        }
+        if self.poison && images.iter().any(|img| img[0] == 666.0) {
+            return Err(Error::Serve("poison pill".into()));
+        }
+        let bias = self.bias;
+        Ok(images.iter().map(|img| vec![img.iter().sum::<f32>() + bias]).collect())
+    }
+}
+
+#[test]
+fn worker_respawns_after_contained_panic_and_answers_everything() {
+    // The backend panics on its very first infer call (a startup poison
+    // typical of real crash bugs). The supervisor must contain it,
+    // respawn, retry the batch members, and answer all six requests —
+    // zero drops, zero Err replies.
+    let calls = Arc::new(AtomicU32::new(0));
+    let calls2 = calls.clone();
+    let factory: BackendFactory = Box::new(move || {
+        Ok(Box::new(FaultyBackend {
+            bias: 0.0,
+            bad: None,
+            panic_calls: Some((calls2.clone(), vec![0])),
+            poison: false,
+        }) as Box<dyn Backend>)
+    });
+    let t = tenant("m", factory, BatchPolicy::default(), None);
+    let server = Server::start_tenants(vec![t], SloTable::default()).unwrap();
+
+    let rxs: Vec<_> = (0..6)
+        .map(|_| server.router().submit("m", vec![1.0; 4]).unwrap())
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().expect("reply dropped").expect("retry should succeed");
+        assert_eq!(resp.logits, vec![4.0]);
+    }
+    let stats = server.metrics().faults.stats("m").expect("tenant registered");
+    assert!(stats.faults_contained.load(Ordering::Relaxed) >= 1, "panic was not counted");
+    assert!(stats.worker_respawns.load(Ordering::Relaxed) >= 1, "no respawn recorded");
+    assert_eq!(stats.requests_quarantined.load(Ordering::Relaxed), 0);
+    assert_eq!(server.router().admission("m").unwrap().pending(), 0);
+    let summary = server.metrics().summary();
+    assert!(summary.contains("faults["), "fault breakout missing: {summary}");
+    assert!(summary.contains("m[contained="), "per-tenant fragment missing: {summary}");
+    server.shutdown();
+}
+
+#[test]
+fn poison_pill_is_quarantined_without_harming_the_batch() {
+    // One request deterministically faults the backend every time it is
+    // in a batch. Its batch-mates must still complete; the pill itself
+    // must be answered with a typed Rejected::Fault after its retry
+    // budget (never a hang, never a drop).
+    let factory: BackendFactory = Box::new(|| {
+        Ok(Box::new(FaultyBackend { bias: 0.0, bad: None, panic_calls: None, poison: true })
+            as Box<dyn Backend>)
+    });
+    let t = tenant("m", factory, BatchPolicy::default(), None);
+    let server = Server::start_tenants(vec![t], SloTable::default()).unwrap();
+
+    let good: Vec<_> = (0..5)
+        .map(|_| server.router().submit("m", vec![1.0; 4]).unwrap())
+        .collect();
+    let pill = server.router().submit("m", vec![666.0, 0.0, 0.0, 0.0]).unwrap();
+
+    for rx in good {
+        let resp = rx.recv().expect("reply dropped").expect("batch-mates must survive");
+        assert_eq!(resp.logits, vec![4.0]);
+    }
+    match pill.recv().expect("pill reply dropped") {
+        Err(Error::Rejected(Rejected::Fault { model, error })) => {
+            assert_eq!(model, "m");
+            assert!(error.contains("poison"), "unexpected fault detail: {error}");
+        }
+        other => panic!("pill must be a typed fault, got ok={}", other.is_ok()),
+    }
+    let stats = server.metrics().faults.stats("m").unwrap();
+    assert_eq!(stats.requests_quarantined.load(Ordering::Relaxed), 1);
+    assert!(stats.faults_contained.load(Ordering::Relaxed) >= 2, "batch + retry faults");
+    assert_eq!(server.router().admission("m").unwrap().pending(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn burst_degrades_to_fallback_and_recovers_when_quiet() {
+    // Primary errs while `bad` is set; the fallback (bias +100) always
+    // works. degrade_after=1 + a short window make the sequence
+    // deterministic: fault -> degrade -> serve on fallback -> flip the
+    // primary healthy -> quiet window -> clean fallback batch triggers
+    // recovery -> next reply comes from the primary again.
+    let bad = Arc::new(AtomicBool::new(true));
+    let bad2 = bad.clone();
+    let factory: BackendFactory = Box::new(move || {
+        Ok(Box::new(FaultyBackend {
+            bias: 0.0,
+            bad: Some(bad2.clone()),
+            panic_calls: None,
+            poison: false,
+        }) as Box<dyn Backend>)
+    });
+    let fallback: BackendFactory = Box::new(|| {
+        Ok(Box::new(FaultyBackend { bias: 100.0, bad: None, panic_calls: None, poison: false })
+            as Box<dyn Backend>)
+    });
+    let mut t = tenant("m", factory, BatchPolicy::default(), None);
+    t.fallback = Some(fallback);
+    t.supervision = SupervisorPolicy {
+        degrade_after: 1,
+        fault_window: Duration::from_millis(50),
+        ..SupervisorPolicy::default()
+    };
+    let server = Server::start_tenants(vec![t], SloTable::default()).unwrap();
+
+    // Faults on the primary, retried to completion on the fallback.
+    let r1 = server.router().infer_blocking("m", vec![1.0; 4]).unwrap();
+    assert_eq!(r1.logits, vec![104.0], "first reply must come from the fallback");
+
+    // Primary healthy again; wait out the fault window.
+    bad.store(false, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(60));
+
+    // Still degraded for this batch (recovery happens after it)...
+    let r2 = server.router().infer_blocking("m", vec![1.0; 4]).unwrap();
+    assert_eq!(r2.logits, vec![104.0], "clean batch before recovery is on the fallback");
+    // ...and the one after runs on the rebuilt primary.
+    let r3 = server.router().infer_blocking("m", vec![1.0; 4]).unwrap();
+    assert_eq!(r3.logits, vec![4.0], "post-recovery reply must come from the primary");
+
+    let stats = server.metrics().faults.stats("m").unwrap();
+    assert!(stats.degraded_ms.load(Ordering::Relaxed) >= 1, "degraded interval not recorded");
+    assert!(stats.faults_contained.load(Ordering::Relaxed) >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_flood_with_faults_keeps_admission_accounting_exact() {
+    // Four submitter threads flood a flaky tenant (panics on two infer
+    // calls mid-stream) through a small queue. Invariants under fire:
+    // every admitted request gets exactly one reply (Ok or typed
+    // fault), rejections are all QueueFull, and the pending gauge
+    // returns to zero — no leaked admission slots across respawns.
+    let calls = Arc::new(AtomicU32::new(0));
+    let calls2 = calls.clone();
+    let factory: BackendFactory = Box::new(move || {
+        Ok(Box::new(FaultyBackend {
+            bias: 0.0,
+            bad: None,
+            panic_calls: Some((calls2.clone(), vec![2, 7])),
+            poison: false,
+        }) as Box<dyn Backend>)
+    });
+    let policy = BatchPolicy { max_batch: 4, queue_depth: 8, ..BatchPolicy::default() };
+    let t = tenant("m", factory, policy, None);
+    let server = Server::start_tenants(vec![t], SloTable::default()).unwrap();
+
+    let (mut ok, mut faulted, mut queue_full) = (0usize, 0usize, 0usize);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let server = &server;
+            handles.push(scope.spawn(move || {
+                let (mut ok, mut faulted, mut queue_full) = (0usize, 0usize, 0usize);
+                for _ in 0..25 {
+                    match server.router().submit("m", vec![1.0; 4]) {
+                        Ok(rx) => match rx.recv().expect("admitted request dropped") {
+                            Ok(resp) => {
+                                assert_eq!(resp.logits, vec![4.0]);
+                                ok += 1;
+                            }
+                            Err(Error::Rejected(Rejected::Fault { .. })) => faulted += 1,
+                            Err(e) => panic!("unexpected reply error: {e}"),
+                        },
+                        Err(Error::Rejected(Rejected::QueueFull { .. })) => queue_full += 1,
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                    }
+                }
+                (ok, faulted, queue_full)
+            }));
+        }
+        for h in handles {
+            let (o, f, q) = h.join().unwrap();
+            ok += o;
+            faulted += f;
+            queue_full += q;
+        }
+    });
+    assert_eq!(ok + faulted + queue_full, 100, "every request accounted for");
+    assert!(ok > 0, "flood must mostly succeed");
+    assert_eq!(server.router().admission("m").unwrap().pending(), 0, "leaked admission slots");
+
+    let m = server.metrics();
+    let rejected = m.counters.rejected.load(Ordering::Relaxed);
+    let rejected_full = m.counters.rejected_queue_full.load(Ordering::Relaxed);
+    assert_eq!(rejected, queue_full as u64);
+    assert_eq!(rejected_full, queue_full as u64);
+    assert_eq!(m.counters.completed.load(Ordering::Relaxed), ok as u64);
+    let stats = m.faults.stats("m").unwrap();
+    assert!(stats.faults_contained.load(Ordering::Relaxed) >= 2, "both panics contained");
+    assert!(stats.worker_respawns.load(Ordering::Relaxed) >= 2);
+    server.shutdown();
+}
+
 #[test]
 fn slo_classes_gate_admission_and_route_latency_accounting() {
     // gold=5ms is infeasible even on an idle tenant (one batch walk is
@@ -265,7 +519,7 @@ fn slo_classes_gate_admission_and_route_latency_accounting() {
     }
 
     open(&g);
-    let resp = rx.recv().unwrap();
+    let resp = rx.recv().unwrap().unwrap();
     assert!(resp.deadline_met, "a 10 s bulk deadline should be met");
     let m = server.metrics();
     assert_eq!(m.by_class.histogram("bulk").unwrap().count(), 1);
