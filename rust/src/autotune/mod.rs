@@ -122,6 +122,12 @@ pub struct TuneReport {
     /// device (via the [`SynthesisPlan`] bridge), for comparison against
     /// the measured numbers.
     pub predicted_ms: Option<f64>,
+    /// Candidates the plan compiler or the static verifier
+    /// ([`crate::engine::verify`]) rejected before any timing —
+    /// `"layer candidate: error"` lines. A rejection costs no budget
+    /// and is evidence, not a failure: the tuner must never time (let
+    /// alone emit) a schedule that does not verify.
+    pub rejected: Vec<String>,
 }
 
 impl TuneReport {
@@ -270,6 +276,11 @@ fn measure(
         .schedule(schedule.clone())
         .batch(batch)
         .build()?;
+    // Every candidate is statically verified before it is timed — in
+    // release builds too, where `build` alone would skip the pass. A
+    // schedule that races or under-sizes its arena must lose here, not
+    // in production.
+    plan.verify()?;
     for _ in 0..warmup {
         plan.run_batch(inputs)?;
     }
@@ -316,6 +327,7 @@ pub fn tune(net: &Network, params: &EngineParams, cfg: &TuneConfig) -> Result<Tu
 
     let mut used = 0usize;
     let mut trials = Vec::new();
+    let mut rejected = Vec::new();
 
     // Seed: the analytic defaults at one pool chunk.
     let default_ms = time(&sched)?;
@@ -357,11 +369,15 @@ pub fn tune(net: &Network, params: &EngineParams, cfg: &TuneConfig) -> Result<Tu
             let mut cand = sched.clone();
             cand.layers.insert(geom.name.clone(), cand_ls);
             // A candidate the plan compiler rejects (e.g. packing=off
-            // or FLP under a quant_i8 layer) is skipped, not fatal —
-            // and costs no budget, since nothing was measured.
+            // or FLP under a quant_i8 layer) or the static verifier
+            // refuses to certify is skipped, not fatal — logged in the
+            // report, and costs no budget, since nothing was measured.
             let ms = match time(&cand) {
                 Ok(ms) => ms,
-                Err(Error::Config(_)) => continue,
+                Err(e @ (Error::Config(_) | Error::Verify { .. })) => {
+                    rejected.push(format!("{} {label}: {e}", geom.name));
+                    continue;
+                }
                 Err(e) => return Err(e),
             };
             used += 1;
@@ -404,6 +420,7 @@ pub fn tune(net: &Network, params: &EngineParams, cfg: &TuneConfig) -> Result<Tu
         measurements: used,
         trials,
         predicted_ms,
+        rejected,
     })
 }
 

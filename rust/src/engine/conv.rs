@@ -151,6 +151,27 @@ impl ConvTiling {
         let band_rows = (self.th.saturating_sub(1)) * s + k;
         4 * (self.tm * cb * k * k * u * u + cb * band_rows * wp * u)
     }
+
+    /// The tile a packed conv dispatch actually runs with for `rows`
+    /// live images on `threads` pool chunks: clamp to the layer grid,
+    /// then shrink the stack tile until the macro-item count
+    /// `rows * ceil(mb/tm)` can feed every thread (small batches of
+    /// wide-tile layers would otherwise serialise). Tiling is
+    /// bitwise-invariant, so shrinking only moves work boundaries,
+    /// never numerics.
+    ///
+    /// This is the **single source of dispatch-time tile arithmetic**:
+    /// [`conv_mm_packed_core`] / [`conv_i8_packed_core`] execute with
+    /// it, and [`crate::engine::verify`] derives each macro item's
+    /// write range from the same values — the verifier's effect model
+    /// cannot drift from the kernels.
+    pub(crate) fn dispatched(self, mb: usize, ho: usize, rows: usize, threads: usize) -> Self {
+        let ConvTiling { mut tm, th } = self.clamped(mb, ho);
+        while tm > 1 && rows * ceil_div(mb, tm) < threads {
+            tm = ceil_div(tm, 2);
+        }
+        ConvTiling { tm, th }
+    }
 }
 
 /// Output spatial size. Shape inference ([`crate::model::shapes::infer`])
@@ -715,14 +736,7 @@ pub(crate) fn conv_mm_packed_core(
 ) {
     let out_row_len = wo * u;
     let x_len = cb * hp * wp * u;
-    let ConvTiling { mut tm, th } = tile.clamped(mb, ho);
-    // Load balance: shrink the stack tile until the macro-item count
-    // can feed every thread (small batches of wide-tile layers would
-    // otherwise serialise). Tiling is bitwise-invariant, so this only
-    // moves work boundaries, never numerics.
-    while tm > 1 && rows * ceil_div(mb, tm) < threads {
-        tm = ceil_div(tm, 2);
-    }
+    let ConvTiling { tm, th } = tile.dispatched(mb, ho, rows, threads);
     let n_mt = ceil_div(mb, tm);
     let items = rows * n_mt;
     let total = rows * mb * ho * out_row_len;
@@ -987,6 +1001,12 @@ fn packed_row_lanes<V: F32Lanes, const ZS: bool>(
 /// [`simd::avx`] reported support — the `#[target_feature]` wrapper is
 /// what lets the compiler actually emit 256-bit ops for the generic
 /// body.
+///
+/// # Safety
+///
+/// The caller must have verified AVX support at runtime
+/// ([`simd::avx`]); the body itself is safe code — the only
+/// unsafety is executing it on a CPU without the feature.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx")]
 #[allow(clippy::too_many_arguments)]
@@ -1122,10 +1142,7 @@ pub(crate) fn conv_i8_packed_core(
 ) {
     let out_row_len = wo * u;
     let x_len = cb * hp * wp * u;
-    let ConvTiling { mut tm, th } = tile.clamped(mb, ho);
-    while tm > 1 && rows * ceil_div(mb, tm) < threads {
-        tm = ceil_div(tm, 2);
-    }
+    let ConvTiling { tm, th } = tile.dispatched(mb, ho, rows, threads);
     let n_mt = ceil_div(mb, tm);
     let items = rows * n_mt;
     let total = rows * mb * ho * out_row_len;

@@ -50,6 +50,7 @@ pub mod schedule;
 pub mod simd;
 pub mod tensor;
 pub mod topology;
+pub mod verify;
 
 pub use conv::{
     cast_weights, conv_mm, conv_mm_packed, conv_nchw_flp, conv_nchw_klp, conv_nchw_scalar,
@@ -64,7 +65,8 @@ pub use parallel::{
     chunk_ranges_weighted, global_pool, pool_threads_spawned, with_pool, ClusterInfo,
     Parallelism, ThreadPool,
 };
-pub use plan::{ExecutionPlan, PlanBuilder};
+pub use plan::{ExecutionPlan, PlanBuilder, StepKind};
 pub use schedule::{LayerSchedule, PoolSettings, Schedule};
+pub use verify::{verify_schedule, VerifyRule};
 pub use tensor::{MapTensor, Tensor};
 pub use topology::{pin_current_thread, CoreCluster, CoreSet, Topology};

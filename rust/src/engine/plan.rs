@@ -138,6 +138,39 @@
 //! schedule entries naming layers the network does not have, or a
 //! schedule whose layer set / `u` does not match — are rejected at
 //! `build` with [`Error::Config`] instead of panicking in compile.
+//!
+//! ## Static guarantees
+//!
+//! Every compiled plan is additionally proved sound by the static plan
+//! verifier ([`crate::engine::verify`]) — at `build` time in debug
+//! builds (and release builds with `CAPPUCCINO_VERIFY=1`), on every
+//! autotuner candidate before it is timed, and on demand via
+//! `cappuccino check`. Four rule classes:
+//!
+//! 1. **Race-freedom** — within each parallel region, the write ranges
+//!    of distinct macro items (derived from the *same* tiling
+//!    arithmetic the kernels dispatch with,
+//!    [`crate::engine::conv::ConvTiling::dispatched`]) are pairwise
+//!    disjoint, no item reads a register another item writes, and the
+//!    per-thread `reduce` / `thread_scratch` row counts cover the
+//!    pool's chunk count ([`crate::engine::parallel::chunk_ranges`]).
+//! 2. **Def-before-use + layout consistency** — every register is
+//!    written before it is read, and a symbolic layout state (map-major
+//!    width `u` vs NCHW, tracked the way the lowerer's `nchw_ctx` is)
+//!    matches every consumer, with `Reorder` the only legal transition.
+//! 3. **Arena safety** — register extents and scratch / `qscratch` /
+//!    `reduce` / `thread_scratch` rows fit the preallocated arena at
+//!    the plan's capacity, so [`ExecutionPlan::with_capacity`]
+//!    derivation can never silently under-size a sibling.
+//! 4. **Mode/tile preconditions** — QuantI8 implies packed panels, a
+//!    lane-paddable `u`, and baked `i8` panels present; tiles are the
+//!    clamped shapes the kernels expect; placement working-set costs
+//!    are present when affinity-weighted dispatch is on.
+//!
+//! What stays dynamic-only: **bitwise parity** (the numeric oracle
+//! suites) — the verifier proves memory/layout safety, not numerics.
+//! Violations surface as typed [`Error::Verify`] naming the step,
+//! layer, and rule.
 
 use std::ops::Range;
 use std::sync::Arc;
@@ -157,23 +190,72 @@ use crate::util::error::{Error, Result};
 
 /// Row-major conv implementation a non-OLP layer lowers to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum NchwConv {
+pub(crate) enum NchwConv {
     Scalar,
     Flp,
     Klp,
 }
 
+/// The stable step-kind vocabulary — **one** name per step kind, shared
+/// by every subsystem that addresses steps: fault-injection sites
+/// (`CAPPUCCINO_FAULTS=panic:conv:0.01` addresses every conv step, see
+/// [`crate::faults`]), the label fallback in
+/// [`crate::Error::TaskPanicked`], and the step names in
+/// [`crate::Error::Verify`] diagnostics. Panic reports, chaos specs,
+/// and verifier findings therefore always agree on what a step is
+/// called.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    Input,
+    Conv,
+    MaxPool,
+    AvgPool,
+    Lrn,
+    Gap,
+    Copy,
+    Concat,
+    Dense,
+    Softmax,
+    Reorder,
+}
+
+impl StepKind {
+    /// The wire name — what fault specs match on and error messages
+    /// print.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StepKind::Input => "input",
+            StepKind::Conv => "conv",
+            StepKind::MaxPool => "maxpool",
+            StepKind::AvgPool => "avgpool",
+            StepKind::Lrn => "lrn",
+            StepKind::Gap => "gap",
+            StepKind::Copy => "copy",
+            StepKind::Concat => "concat",
+            StepKind::Dense => "dense",
+            StepKind::Softmax => "softmax",
+            StepKind::Reorder => "reorder",
+        }
+    }
+}
+
+impl std::fmt::Display for StepKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Static shape of one activation register (one batch row; the arena
 /// allocates `B` rows per register).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum SlotShape {
+pub(crate) enum SlotShape {
     /// Map-major `(ceil(c/u), h, w, u)` data; `u = 1` is row-major NCHW.
     Maps { c: usize, h: usize, w: usize, u: usize },
     Flat { len: usize },
 }
 
 impl SlotShape {
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         match *self {
             SlotShape::Maps { c, h, w, u } => ceil_div(c, u) * h * w * u,
             SlotShape::Flat { len } => len,
@@ -198,9 +280,9 @@ fn flat_of(s: SlotShape) -> usize {
 /// Symmetric int8 weight panels of one [`ArithMode::QuantI8`] layer:
 /// the quantized panel data plus the per-layer weight scale, both baked
 /// at plan compile (`scale = amax/127`, zero-point 0).
-struct QuantPanels {
-    data: Vec<i8>,
-    scale: f32,
+pub(crate) struct QuantPanels {
+    pub(crate) data: Vec<i8>,
+    pub(crate) scale: f32,
 }
 
 /// One lowered instruction. Weights are baked (mode-cast at compile
@@ -208,7 +290,7 @@ struct QuantPanels {
 /// capacity with [`ExecutionPlan::with_capacity`] — does not duplicate
 /// parameters.
 #[derive(Clone)]
-enum Step {
+pub(crate) enum Step {
     /// Prologue: conventional NCHW request rows into the input register.
     Input { dst: usize },
     ConvMm {
@@ -279,28 +361,28 @@ enum Step {
 }
 
 impl Step {
-    /// Stable step-kind name — the fault-injection site this step
-    /// checks on the chaos path (`CAPPUCCINO_FAULTS=panic:conv:0.01`
-    /// addresses every conv step) and the label fallback in
-    /// [`crate::Error::TaskPanicked`].
-    fn kind(&self) -> &'static str {
+    /// This step's [`StepKind`] — the fault-injection site it checks on
+    /// the chaos path, the label fallback in
+    /// [`crate::Error::TaskPanicked`], and the name
+    /// [`crate::Error::Verify`] diagnostics print.
+    pub(crate) fn kind(&self) -> StepKind {
         match self {
-            Step::Input { .. } => "input",
-            Step::ConvMm { .. } | Step::ConvNchw { .. } => "conv",
+            Step::Input { .. } => StepKind::Input,
+            Step::ConvMm { .. } | Step::ConvNchw { .. } => StepKind::Conv,
             Step::PoolMm { is_max, .. } | Step::PoolNchw { is_max, .. } => {
                 if *is_max {
-                    "maxpool"
+                    StepKind::MaxPool
                 } else {
-                    "avgpool"
+                    StepKind::AvgPool
                 }
             }
-            Step::Lrn { .. } => "lrn",
-            Step::Gap { .. } => "gap",
-            Step::Copy { .. } => "copy",
-            Step::Concat { .. } => "concat",
-            Step::Dense { .. } => "dense",
-            Step::Softmax { .. } => "softmax",
-            Step::Reorder { .. } => "reorder",
+            Step::Lrn { .. } => StepKind::Lrn,
+            Step::Gap { .. } => StepKind::Gap,
+            Step::Copy { .. } => StepKind::Copy,
+            Step::Concat { .. } => StepKind::Concat,
+            Step::Dense { .. } => StepKind::Dense,
+            Step::Softmax { .. } => StepKind::Softmax,
+            Step::Reorder { .. } => StepKind::Reorder,
         }
     }
 }
@@ -311,16 +393,16 @@ impl Step {
 /// tap block / accumulator tile — zero allocations per inference at any
 /// `u`). Compile-time sized, reused across every batch.
 #[derive(Clone)]
-struct Arena {
-    bufs: Vec<Vec<f32>>,
-    scratch: Vec<f32>,
+pub(crate) struct Arena {
+    pub(crate) bufs: Vec<Vec<f32>>,
+    pub(crate) scratch: Vec<f32>,
     /// Per-image quantized activation rows for QuantI8 steps (empty
     /// when the plan has none).
-    qscratch: Vec<i8>,
+    pub(crate) qscratch: Vec<i8>,
     /// Per-image activation quantization scales (one per batch row).
-    qscales: Vec<f32>,
-    reduce: Vec<Vec<f32>>,
-    thread_scratch: Vec<Vec<f32>>,
+    pub(crate) qscales: Vec<f32>,
+    pub(crate) reduce: Vec<Vec<f32>>,
+    pub(crate) thread_scratch: Vec<Vec<f32>>,
 }
 
 impl Arena {
@@ -573,29 +655,29 @@ impl<'a> PlanBuilder<'a> {
 /// walk, allocation-free apart from the returned logits rows.
 #[derive(Clone)]
 pub struct ExecutionPlan {
-    u: usize,
-    threads: usize,
-    batch: usize,
+    pub(crate) u: usize,
+    pub(crate) threads: usize,
+    pub(crate) batch: usize,
     /// The (normalized) schedule this plan was compiled from — the
     /// exportable tuning surface ([`ExecutionPlan::schedule`]).
-    sched: Schedule,
-    input_shape: (usize, usize, usize),
-    slots: Vec<SlotShape>,
-    steps: Vec<Step>,
+    pub(crate) sched: Schedule,
+    pub(crate) input_shape: (usize, usize, usize),
+    pub(crate) slots: Vec<SlotShape>,
+    pub(crate) steps: Vec<Step>,
     /// One label per step (`layer name` for lowered layers, the step
     /// kind for structural steps) — the `layer` field of
     /// [`Error::TaskPanicked`] when a contained panic is surfaced.
-    labels: Vec<String>,
-    out_slot: usize,
-    arena: Arena,
+    pub(crate) labels: Vec<String>,
+    pub(crate) out_slot: usize,
+    pub(crate) arena: Arena,
     /// Per-row pad/cast scratch length (row stride into `arena.scratch`).
-    scratch_row: usize,
+    pub(crate) scratch_row: usize,
     /// Per-row i8 quantization scratch length (0 = no QuantI8 steps).
-    qscratch_row: usize,
+    pub(crate) qscratch_row: usize,
     /// Per-thread FLP/KLP reduction buffer length (0 = none needed).
-    reduce_len: usize,
+    pub(crate) reduce_len: usize,
     /// Per-thread kernel scratch row length (0 = register fast paths).
-    thread_scratch_row: usize,
+    pub(crate) thread_scratch_row: usize,
     baked_param_bytes: usize,
     runs: u64,
     alloc: AllocCounter,
@@ -683,7 +765,7 @@ impl ExecutionPlan {
             batch,
             thread_scratch_row,
         );
-        Ok(ExecutionPlan {
+        let plan = ExecutionPlan {
             u,
             threads,
             batch,
@@ -701,7 +783,35 @@ impl ExecutionPlan {
             baked_param_bytes,
             runs: 0,
             alloc: AllocCounter::new(),
-        })
+        };
+        // Static verification at build time: always in debug builds
+        // (so every plan the test suite compiles is proved race-free,
+        // layout-sound, and arena-safe), opt-in for release builds via
+        // CAPPUCCINO_VERIFY=1 (the `check` subcommand and the autotuner
+        // call `verify()` explicitly instead).
+        if cfg!(debug_assertions) || std::env::var_os("CAPPUCCINO_VERIFY").is_some_and(|v| v == "1")
+        {
+            plan.verify()?;
+        }
+        Ok(plan)
+    }
+
+    /// Run the static plan verifier ([`crate::engine::verify`]) over
+    /// this plan: race-freedom of every parallel region, def-before-use
+    /// and layout consistency of the register file, arena extents at
+    /// this capacity, and mode/tile preconditions. `Ok(())` means the
+    /// plan is proved safe to execute at any live batch `1..=B`.
+    pub fn verify(&self) -> Result<()> {
+        crate::engine::verify::verify_plan(self)
+    }
+
+    /// Test-only corruption hook for the verifier mutation suite: apply
+    /// `m` to this plan in place, returning `false` when the plan has
+    /// no site the mutation applies to. Never used on a plan that is
+    /// subsequently executed.
+    #[doc(hidden)]
+    pub fn apply_mutation(&mut self, m: crate::engine::verify::PlanMutation) -> bool {
+        crate::engine::verify::apply_mutation(self, m)
     }
 
     /// Derive a sibling plan with a different batch capacity. The step
@@ -710,7 +820,7 @@ impl ExecutionPlan {
     /// Run counters start fresh on the derived plan.
     pub fn with_capacity(&self, batch: usize) -> ExecutionPlan {
         let batch = batch.max(1);
-        ExecutionPlan {
+        let plan = ExecutionPlan {
             u: self.u,
             threads: self.threads,
             batch,
@@ -736,7 +846,15 @@ impl ExecutionPlan {
             baked_param_bytes: self.baked_param_bytes,
             runs: 0,
             alloc: AllocCounter::new(),
+        };
+        // Re-prove the derived plan in debug builds: capacity
+        // derivation re-sizes the arena, and the verifier's arena rule
+        // is exactly the guard against a silently under-sized sibling.
+        #[cfg(debug_assertions)]
+        if let Err(e) = plan.verify() {
+            panic!("with_capacity({batch}) produced an unsound sibling plan: {e}");
         }
+        plan
     }
 
     fn validate_batch(&self, images: &[&[f32]]) -> Result<()> {
@@ -779,7 +897,7 @@ impl ExecutionPlan {
         let (threads, scratch_row, qscratch_row) =
             (self.threads, self.scratch_row, self.qscratch_row);
         for (i, step) in self.steps.iter().enumerate() {
-            let injected = crate::faults::check(step.kind());
+            let injected = crate::faults::check(step.kind().as_str());
             if injected == Some(crate::faults::FaultKind::Err) {
                 return Err(Error::Serve(format!(
                     "injected error at plan step {i} ({})",

@@ -205,28 +205,36 @@ mod x86 {
         const N: usize = 4;
         #[inline(always)]
         fn zero() -> Self {
+            // SAFETY: SSE2 is baseline on x86_64; register-only intrinsic.
             SseF32x4(unsafe { _mm_setzero_ps() })
         }
         #[inline(always)]
         fn splat(x: f32) -> Self {
+            // SAFETY: SSE2 is baseline on x86_64; register-only intrinsic.
             SseF32x4(unsafe { _mm_set1_ps(x) })
         }
         #[inline(always)]
         fn load(src: &[f32]) -> Self {
             assert!(src.len() >= 4);
+            // SAFETY: SSE2 baseline; unaligned load of 4 f32 from a
+            // slice asserted to hold >= 4 elements.
             SseF32x4(unsafe { _mm_loadu_ps(src.as_ptr()) })
         }
         #[inline(always)]
         fn store(self, dst: &mut [f32]) {
             assert!(dst.len() >= 4);
+            // SAFETY: SSE2 baseline; unaligned store of 4 f32 into a
+            // slice asserted to hold >= 4 elements.
             unsafe { _mm_storeu_ps(dst.as_mut_ptr(), self.0) }
         }
         #[inline(always)]
         fn add(self, o: Self) -> Self {
+            // SAFETY: SSE2 is baseline on x86_64; register-only intrinsic.
             SseF32x4(unsafe { _mm_add_ps(self.0, o.0) })
         }
         #[inline(always)]
         fn mul(self, o: Self) -> Self {
+            // SAFETY: SSE2 is baseline on x86_64; register-only intrinsic.
             SseF32x4(unsafe { _mm_mul_ps(self.0, o.0) })
         }
     }
@@ -242,28 +250,38 @@ mod x86 {
         const N: usize = 8;
         #[inline(always)]
         fn zero() -> Self {
+            // SAFETY: only reachable through `#[target_feature(enable =
+            // "avx")]` wrappers gated on runtime AVX detection (see the
+            // type doc); register-only intrinsic.
             AvxF32x8(unsafe { _mm256_setzero_ps() })
         }
         #[inline(always)]
         fn splat(x: f32) -> Self {
+            // SAFETY: AVX guaranteed by the gated callers; register-only.
             AvxF32x8(unsafe { _mm256_set1_ps(x) })
         }
         #[inline(always)]
         fn load(src: &[f32]) -> Self {
             assert!(src.len() >= 8);
+            // SAFETY: AVX guaranteed by the gated callers; unaligned
+            // load of 8 f32 from a slice asserted to hold >= 8.
             AvxF32x8(unsafe { _mm256_loadu_ps(src.as_ptr()) })
         }
         #[inline(always)]
         fn store(self, dst: &mut [f32]) {
             assert!(dst.len() >= 8);
+            // SAFETY: AVX guaranteed by the gated callers; unaligned
+            // store of 8 f32 into a slice asserted to hold >= 8.
             unsafe { _mm256_storeu_ps(dst.as_mut_ptr(), self.0) }
         }
         #[inline(always)]
         fn add(self, o: Self) -> Self {
+            // SAFETY: AVX guaranteed by the gated callers; register-only.
             AvxF32x8(unsafe { _mm256_add_ps(self.0, o.0) })
         }
         #[inline(always)]
         fn mul(self, o: Self) -> Self {
+            // SAFETY: AVX guaranteed by the gated callers; register-only.
             AvxF32x8(unsafe { _mm256_mul_ps(self.0, o.0) })
         }
     }
@@ -276,10 +294,12 @@ mod x86 {
         type Acc = (__m128i, __m128i);
         #[inline(always)]
         fn acc_zero() -> Self::Acc {
+            // SAFETY: SSE2 is baseline on x86_64; register-only intrinsic.
             unsafe { (_mm_setzero_si128(), _mm_setzero_si128()) }
         }
         #[inline(always)]
         fn splat(x: i8) -> Self {
+            // SAFETY: SSE2 is baseline on x86_64; register-only intrinsic.
             SseI16x8(unsafe { _mm_set1_epi16(x as i16) })
         }
         #[inline(always)]
@@ -287,6 +307,8 @@ mod x86 {
             assert!(src.len() >= 8);
             // Load 8 bytes, sign-extend to i16 via the classic
             // duplicate-then-arithmetic-shift (SSE2 has no cvtepi8).
+            // SAFETY: SSE2 baseline; `_mm_loadl_epi64` reads exactly 8
+            // bytes from a slice asserted to hold >= 8.
             SseI16x8(unsafe {
                 let v = _mm_loadl_epi64(src.as_ptr() as *const __m128i);
                 _mm_srai_epi16(_mm_unpacklo_epi8(v, v), 8)
@@ -295,14 +317,17 @@ mod x86 {
         #[inline(always)]
         fn splat_pair(a: i8, b: i8) -> Self {
             let (a, b) = (a as i16, b as i16);
+            // SAFETY: SSE2 is baseline on x86_64; register-only intrinsic.
             SseI16x8(unsafe { _mm_set_epi16(b, b, b, b, a, a, a, a) })
         }
         #[inline(always)]
         fn mul(self, o: Self) -> Self {
+            // SAFETY: SSE2 is baseline on x86_64; register-only intrinsic.
             SseI16x8(unsafe { _mm_mullo_epi16(self.0, o.0) })
         }
         #[inline(always)]
         fn acc_add(acc: Self::Acc, p: Self) -> Self::Acc {
+            // SAFETY: SSE2 baseline; register-only unpack/shift/add.
             unsafe {
                 // Sign-extend the 8 i16 lanes to 2 x i32x4 (duplicate +
                 // shift, same trick as `from_i8`) and add.
@@ -314,6 +339,8 @@ mod x86 {
         #[inline(always)]
         fn acc_get(acc: Self::Acc) -> [i32; 8] {
             let mut out = [0i32; 8];
+            // SAFETY: SSE2 baseline; two unaligned 16-byte stores into
+            // a stack array of exactly 8 i32 (= 32 bytes).
             unsafe {
                 _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, acc.0);
                 _mm_storeu_si128(out.as_mut_ptr().add(4) as *mut __m128i, acc.1);
@@ -363,6 +390,9 @@ mod tests {
         if !std::arch::is_x86_feature_detected!("avx") {
             return;
         }
+        /// # Safety
+        /// Caller must have verified AVX support (the test returns early
+        /// otherwise).
         #[target_feature(enable = "avx")]
         unsafe fn sum8_avx(vals: &[f32], out: &mut [f32]) {
             sum8::<AvxF32x8>(vals, out);
@@ -380,6 +410,7 @@ mod tests {
         let mut a = [0.0f32; 8];
         let mut b = [0.0f32; 8];
         sum8::<ScalarF32x8>(&vals, &mut a);
+        // SAFETY: AVX availability checked at the top of the test.
         unsafe { sum8_avx(&vals, &mut b) };
         for (va, vb) in a.iter().zip(&b) {
             assert_eq!(va.to_bits(), vb.to_bits());

@@ -181,7 +181,11 @@ pub fn pin_current_thread(cpus: &[usize]) -> bool {
         for &c in cpus {
             set.set(c);
         }
-        // pid 0 = the calling thread.
+        // SAFETY: plain FFI into glibc's `sched_setaffinity`; pid 0 =
+        // the calling thread, and the mask pointer/size describe a
+        // fully-initialised `CpuSet` matching the kernel's `cpu_set_t`
+        // ABI (`#[repr(C)]`, 1024 bits). The call reads the mask and
+        // touches no other memory.
         unsafe {
             sys::sched_setaffinity(0, std::mem::size_of::<sys::CpuSet>(), &set) == 0
         }
@@ -234,6 +238,10 @@ mod sys {
 #[cfg(target_os = "linux")]
 fn allowed_cpus() -> Option<Vec<usize>> {
     let mut set = sys::CpuSet::zero();
+    // SAFETY: plain FFI into glibc's `sched_getaffinity`; pid 0 = the
+    // calling thread, and the out-pointer/size describe an exclusively
+    // borrowed `CpuSet` matching the kernel's `cpu_set_t` ABI. The call
+    // writes only into that mask.
     let rc = unsafe {
         sys::sched_getaffinity(0, std::mem::size_of::<sys::CpuSet>(), &mut set)
     };

@@ -1,0 +1,1090 @@
+//! Static plan verifier — an effect system over the lowered Step IR.
+//!
+//! Cappuccino's premise is that the *compiler* decides parallelization,
+//! layout, and arithmetic mode — so the compiler should also prove the
+//! decisions sound before a plan ever runs. This module walks a
+//! compiled [`ExecutionPlan`] and derives, per step, the **effect** it
+//! has on the register file and arena: which registers it reads and
+//! writes, which element ranges each parallel macro item owns, and
+//! which scratch rows the dispatch consumes. The derivation reuses the
+//! *same* arithmetic the kernels dispatch with
+//! ([`ConvTiling::dispatched`], [`parallel::chunk_ranges`], the slot
+//! shapes), so a passing verdict is a statement about the code that
+//! will actually execute, not a parallel model of it.
+//!
+//! Four rule classes (see the "Static guarantees" section of
+//! [`crate::engine::plan`]):
+//!
+//! 1. **Race-freedom** ([`VerifyRule::RaceFreedom`]) — no step reads a
+//!    register it writes, concat never writes into one of its sources,
+//!    macro-item write ranges within one parallel region are pairwise
+//!    disjoint and cover the output exactly (checked at every live
+//!    batch size `1..=B`), and the per-chunk `reduce` /
+//!    `thread_scratch` rows cover the pool's chunk count — the static
+//!    form of the runtime asserts in [`crate::engine::parallel`].
+//! 2. **Def-before-use + layout consistency**
+//!    ([`VerifyRule::DefBeforeUse`], [`VerifyRule::LayoutConsistency`])
+//!    — every register is written before it is read, and the symbolic
+//!    layout (map-major width `u` vs row-major NCHW, flat) of each
+//!    register matches what its consumers expect, with `Reorder` the
+//!    only legal layout transition.
+//! 3. **Arena safety** ([`VerifyRule::ArenaSafety`]) — register,
+//!    scratch, `qscratch`, `reduce`, and `thread_scratch` extents fit
+//!    the preallocated arena at the plan's capacity, and baked weight
+//!    panels have the extents the kernels stream.
+//! 4. **Mode/tile preconditions** ([`VerifyRule::ModePrecondition`],
+//!    [`VerifyRule::TilePrecondition`]) — QuantI8 implies packed int8
+//!    panels and a lane-paddable `u`, vector kernel selection implies a
+//!    vectorised packed f32 layer, placement implies working-set costs,
+//!    and tiles are exactly the clamped shapes the dispatch arithmetic
+//!    assumes.
+//!
+//! Violations surface as typed [`Error::Verify`] naming the step index,
+//! its layer label, and the rule. The verifier runs at `build()` time
+//! in debug builds (and with `CAPPUCCINO_VERIFY=1` in release), on
+//! every autotuner candidate before it is timed, and on demand via
+//! `cappuccino check`. [`verify_schedule`] additionally lints a
+//! [`Schedule`] *before* lowering for knob combinations that would
+//! silently do nothing.
+//!
+//! The mutation hook ([`apply_mutation`], re-exported on
+//! [`ExecutionPlan::apply_mutation`]) exists for the verifier's own
+//! test suite (`rust/tests/verify.rs`): it seeds a known corruption
+//! into a known-good plan so the suite can assert the exact rule fires.
+
+use crate::engine::conv::{self, ConvTiling};
+use crate::engine::parallel;
+use crate::engine::plan::{ExecutionPlan, NchwConv, SlotShape, Step};
+use crate::engine::schedule::Schedule;
+use crate::layout::DENSE_BLOCK;
+use crate::model::shapes;
+use crate::util::ceil_div;
+use crate::util::error::{Error, Result};
+
+/// The individual rule a [`Error::Verify`] violation names. Rules group
+/// into the four documented classes via [`VerifyRule::class`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VerifyRule {
+    /// Distinct parallel macro items write overlapping ranges, a step
+    /// reads what the same region writes, or per-chunk scratch rows
+    /// would be shared between chunks.
+    RaceFreedom,
+    /// A register is read before any step writes it.
+    DefBeforeUse,
+    /// A consumer's expected layout (map-major width / NCHW / flat
+    /// shape) does not match what the producing step left behind.
+    LayoutConsistency,
+    /// A register, scratch row, or weight panel does not fit its
+    /// preallocated extent at this plan's batch capacity.
+    ArenaSafety,
+    /// An arithmetic-mode precondition is broken (quant panels missing,
+    /// vector kernel on a non-vectorised layer, placement without
+    /// working-set costs, …).
+    ModePrecondition,
+    /// A conv tile is not the clamped shape the dispatch arithmetic
+    /// assumes.
+    TilePrecondition,
+}
+
+impl VerifyRule {
+    /// Stable kebab-case rule name — printed by [`Error::Verify`] and
+    /// greppable from the CLI's stderr.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            VerifyRule::RaceFreedom => "race-freedom",
+            VerifyRule::DefBeforeUse => "def-before-use",
+            VerifyRule::LayoutConsistency => "layout-consistency",
+            VerifyRule::ArenaSafety => "arena-safety",
+            VerifyRule::ModePrecondition => "mode-precondition",
+            VerifyRule::TilePrecondition => "tile-precondition",
+        }
+    }
+
+    /// The documented rule class this rule belongs to.
+    pub fn class(self) -> &'static str {
+        match self {
+            VerifyRule::RaceFreedom => "race-freedom",
+            VerifyRule::DefBeforeUse | VerifyRule::LayoutConsistency => "def/layout",
+            VerifyRule::ArenaSafety => "arena",
+            VerifyRule::ModePrecondition | VerifyRule::TilePrecondition => "mode/tile",
+        }
+    }
+}
+
+impl std::fmt::Display for VerifyRule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+fn violation(
+    plan: &ExecutionPlan,
+    step: usize,
+    rule: VerifyRule,
+    detail: impl Into<String>,
+) -> Error {
+    Error::Verify {
+        step,
+        layer: plan
+            .labels
+            .get(step)
+            .cloned()
+            .unwrap_or_else(|| "<unlabeled>".to_string()),
+        rule,
+        detail: detail.into(),
+    }
+}
+
+/// Registers a step reads (concat reads many, input reads none).
+fn step_srcs(step: &Step) -> Vec<usize> {
+    match step {
+        Step::Input { .. } => Vec::new(),
+        Step::ConvMm { src, .. }
+        | Step::ConvNchw { src, .. }
+        | Step::PoolMm { src, .. }
+        | Step::PoolNchw { src, .. }
+        | Step::Lrn { src, .. }
+        | Step::Gap { src, .. }
+        | Step::Copy { src, .. }
+        | Step::Dense { src, .. }
+        | Step::Softmax { src, .. }
+        | Step::Reorder { src, .. } => vec![*src],
+        Step::Concat { srcs, .. } => srcs.clone(),
+    }
+}
+
+/// The single register a step writes.
+fn step_dst(step: &Step) -> usize {
+    match step {
+        Step::Input { dst }
+        | Step::ConvMm { dst, .. }
+        | Step::ConvNchw { dst, .. }
+        | Step::PoolMm { dst, .. }
+        | Step::PoolNchw { dst, .. }
+        | Step::Lrn { dst, .. }
+        | Step::Gap { dst, .. }
+        | Step::Copy { dst, .. }
+        | Step::Concat { dst, .. }
+        | Step::Dense { dst, .. }
+        | Step::Softmax { dst, .. }
+        | Step::Reorder { dst, .. } => *dst,
+    }
+}
+
+fn maps(plan: &ExecutionPlan, i: usize, slot: usize) -> Result<(usize, usize, usize, usize)> {
+    match plan.slots[slot] {
+        SlotShape::Maps { c, h, w, u } => Ok((c, h, w, u)),
+        SlotShape::Flat { .. } => Err(violation(
+            plan,
+            i,
+            VerifyRule::LayoutConsistency,
+            format!("register r{slot} is flat where the step expects a maps layout"),
+        )),
+    }
+}
+
+fn flat(plan: &ExecutionPlan, i: usize, slot: usize) -> Result<usize> {
+    match plan.slots[slot] {
+        SlotShape::Flat { len } => Ok(len),
+        SlotShape::Maps { .. } => Err(violation(
+            plan,
+            i,
+            VerifyRule::LayoutConsistency,
+            format!("register r{slot} is a maps layout where the step expects flat"),
+        )),
+    }
+}
+
+/// Prove a compiled plan race-free, layout-sound, arena-safe, and
+/// mode/tile-consistent. `Ok(())` means every walk of the step sequence
+/// at any live batch `1..=B` stays inside the arena, every parallel
+/// region's writes are disjoint, and every register is consumed in the
+/// layout its producer left it in.
+pub fn verify_plan(plan: &ExecutionPlan) -> Result<()> {
+    let n_slots = plan.slots.len();
+    let mut defined = vec![false; n_slots];
+    for (i, step) in plan.steps.iter().enumerate() {
+        // Structural bounds first: everything after indexes freely.
+        let dst = step_dst(step);
+        let srcs = step_srcs(step);
+        for &r in srcs.iter().chain(std::iter::once(&dst)) {
+            if r >= n_slots {
+                return Err(violation(
+                    plan,
+                    i,
+                    VerifyRule::ArenaSafety,
+                    format!("register r{r} out of range (plan has {n_slots} registers)"),
+                ));
+            }
+        }
+        check_alias(plan, i, &srcs, dst)?;
+        check_def_use(plan, i, &srcs, &mut defined, dst)?;
+        check_layout(plan, i, step)?;
+        check_mode_tile(plan, i, step)?;
+        check_arena(plan, i, step, &srcs, dst)?;
+        check_region(plan, i, step)?;
+    }
+    if plan.out_slot >= n_slots || !defined[plan.out_slot] {
+        let last = plan.steps.len().saturating_sub(1);
+        return Err(violation(
+            plan,
+            last,
+            VerifyRule::DefBeforeUse,
+            format!("output register r{} is never written by any step", plan.out_slot),
+        ));
+    }
+    Ok(())
+}
+
+/// Rule 1a — register aliasing. The executor reads `src` while its
+/// (possibly parallel) items write `dst`; `src == dst` means every item
+/// races with its own input, and a concat that writes into one of its
+/// sources overwrites data later parts still read.
+fn check_alias(plan: &ExecutionPlan, i: usize, srcs: &[usize], dst: usize) -> Result<()> {
+    for &s in srcs {
+        if s == dst {
+            return Err(violation(
+                plan,
+                i,
+                VerifyRule::RaceFreedom,
+                format!(
+                    "step reads and writes register r{dst}: its kernel items would race \
+                     with their own input"
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Rule 2a — def-before-use over the register file in step order.
+fn check_def_use(
+    plan: &ExecutionPlan,
+    i: usize,
+    srcs: &[usize],
+    defined: &mut [bool],
+    dst: usize,
+) -> Result<()> {
+    for &s in srcs {
+        if !defined[s] {
+            return Err(violation(
+                plan,
+                i,
+                VerifyRule::DefBeforeUse,
+                format!("register r{s} is read before any step writes it"),
+            ));
+        }
+    }
+    defined[dst] = true;
+    Ok(())
+}
+
+/// Rule 2b — symbolic layout consistency. Layouts live in the slot
+/// shapes; each step kind has exactly one legal src/dst shape relation,
+/// and `Reorder` is the only step allowed to change a register's
+/// map-major width.
+fn check_layout(plan: &ExecutionPlan, i: usize, step: &Step) -> Result<()> {
+    let fail = |detail: String| Err(violation(plan, i, VerifyRule::LayoutConsistency, detail));
+    let win = |plan: &ExecutionPlan, i: usize, h: usize, k: usize, s: usize, p: usize| {
+        shapes::conv_out(h, k, s, p)
+            .map_err(|e| violation(plan, i, VerifyRule::LayoutConsistency, e.to_string()))
+    };
+    match step {
+        Step::Input { dst } => {
+            let (c, h, w, u) = maps(plan, i, *dst)?;
+            if (c, h, w) != plan.input_shape || u != plan.u {
+                return fail(format!(
+                    "input register is {c}x{h}x{w} (u={u}) but the plan expects \
+                     {:?} at u={}",
+                    plan.input_shape, plan.u
+                ));
+            }
+        }
+        Step::ConvMm { src, dst, k, s, p, .. } => {
+            let (_, h, w, su) = maps(plan, i, *src)?;
+            let (_, ho, wo, du) = maps(plan, i, *dst)?;
+            if su != du {
+                return fail(format!(
+                    "conv_mm cannot change map-major width (src u={su}, dst u={du}); \
+                     only reorder may"
+                ));
+            }
+            let (eh, ew) = (win(plan, i, h, *k, *s, *p)?, win(plan, i, w, *k, *s, *p)?);
+            if (ho, wo) != (eh, ew) {
+                return fail(format!(
+                    "conv_mm output register is {ho}x{wo} but k={k} s={s} p={p} over \
+                     {h}x{w} produces {eh}x{ew}"
+                ));
+            }
+        }
+        Step::ConvNchw { src, dst, k, s, p, .. } => {
+            let (_, h, w, su) = maps(plan, i, *src)?;
+            let (_, ho, wo, du) = maps(plan, i, *dst)?;
+            if su != 1 || du != 1 {
+                return fail(format!(
+                    "row-major conv requires u=1 registers (src u={su}, dst u={du})"
+                ));
+            }
+            let (eh, ew) = (win(plan, i, h, *k, *s, *p)?, win(plan, i, w, *k, *s, *p)?);
+            if (ho, wo) != (eh, ew) {
+                return fail(format!(
+                    "conv output register is {ho}x{wo} but k={k} s={s} p={p} over \
+                     {h}x{w} produces {eh}x{ew}"
+                ));
+            }
+        }
+        Step::PoolMm { src, dst, k, s, p, .. } | Step::PoolNchw { src, dst, k, s, p, .. } => {
+            let (c, h, w, su) = maps(plan, i, *src)?;
+            let (dc, ho, wo, du) = maps(plan, i, *dst)?;
+            if su != du || c != dc {
+                return fail(format!(
+                    "pool preserves channels and width (src {c}ch u={su}, \
+                     dst {dc}ch u={du})"
+                ));
+            }
+            if matches!(step, Step::PoolNchw { .. }) && su != 1 {
+                return fail(format!("row-major pool requires u=1 registers (u={su})"));
+            }
+            let (eh, ew) = (win(plan, i, h, *k, *s, *p)?, win(plan, i, w, *k, *s, *p)?);
+            if (ho, wo) != (eh, ew) {
+                return fail(format!(
+                    "pool output register is {ho}x{wo} but k={k} s={s} p={p} over \
+                     {h}x{w} produces {eh}x{ew}"
+                ));
+            }
+        }
+        Step::Lrn { src, dst, .. } => {
+            if plan.slots[*src] != plan.slots[*dst] {
+                return fail(format!(
+                    "lrn is shape-preserving but src {:?} != dst {:?}",
+                    plan.slots[*src], plan.slots[*dst]
+                ));
+            }
+        }
+        Step::Gap { src, dst } => {
+            let (c, ..) = maps(plan, i, *src)?;
+            let len = flat(plan, i, *dst)?;
+            if len != c {
+                return fail(format!("gap over {c} channels writes a flat({len}) register"));
+            }
+        }
+        Step::Copy { src, dst } => {
+            // Flatten lowers to a maps -> flat copy of equal length; a
+            // copy is never allowed to change map-major width (that
+            // would silently reinterpret lane padding).
+            match (plan.slots[*src], plan.slots[*dst]) {
+                (SlotShape::Maps { .. }, SlotShape::Maps { .. }) => {
+                    if plan.slots[*src] != plan.slots[*dst] {
+                        return fail(format!(
+                            "copy between maps registers must preserve the layout \
+                             exactly (src {:?}, dst {:?}); only reorder may change u",
+                            plan.slots[*src], plan.slots[*dst]
+                        ));
+                    }
+                }
+                (a, b) => {
+                    if a.len() != b.len() {
+                        return fail(format!("copy length mismatch: src {:?} vs dst {:?}", a, b));
+                    }
+                }
+            }
+        }
+        Step::Concat { srcs, dst } => {
+            let (c, h, w, u) = maps(plan, i, *dst)?;
+            let mut total = 0usize;
+            for &sidx in srcs {
+                let (bc, bh, bw, bu) = maps(plan, i, sidx)?;
+                if (bh, bw, bu) != (h, w, u) {
+                    return fail(format!(
+                        "concat part r{sidx} is {bc}x{bh}x{bw} (u={bu}) but the join \
+                         register is ..x{h}x{w} (u={u})"
+                    ));
+                }
+                if bc % u != 0 {
+                    return fail(format!(
+                        "concat part r{sidx} has {bc} channels, not aligned to u={u} — \
+                         the contiguous stack copy would interleave lane padding"
+                    ));
+                }
+                total += bc;
+            }
+            if total != c {
+                return fail(format!(
+                    "concat parts sum to {total} channels but the join register has {c}"
+                ));
+            }
+        }
+        Step::Dense { src, dst, .. } => {
+            flat(plan, i, *src)?;
+            flat(plan, i, *dst)?;
+        }
+        Step::Softmax { src, dst } => {
+            let (a, b) = (flat(plan, i, *src)?, flat(plan, i, *dst)?);
+            if a != b {
+                return fail(format!("softmax is shape-preserving but flat({a}) != flat({b})"));
+            }
+        }
+        Step::Reorder { src, dst } => {
+            let (c, h, w, su) = maps(plan, i, *src)?;
+            let (dc, dh, dw, du) = maps(plan, i, *dst)?;
+            if su == du {
+                return fail(format!(
+                    "reorder between identical widths (u={su}) is not a layout \
+                     transition — lowering never emits it, and the executor's \
+                     single-sided permutation cannot express it"
+                ));
+            }
+            if su != 1 && du != 1 {
+                return fail(format!(
+                    "reorder must cross row-major (u=1) on one side, got u={su} -> u={du}"
+                ));
+            }
+            if (c, h, w) != (dc, dh, dw) {
+                return fail(format!(
+                    "reorder is a pure permutation but src is {c}x{h}x{w} and dst \
+                     {dc}x{dh}x{dw}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Rule 4 — arithmetic-mode and tile preconditions.
+fn check_mode_tile(plan: &ExecutionPlan, i: usize, step: &Step) -> Result<()> {
+    let mode_fail = |detail: String| Err(violation(plan, i, VerifyRule::ModePrecondition, detail));
+    match step {
+        Step::ConvMm { src, dst, mode, packed, vec, quant, tile, place, .. } => {
+            let (_, _, _, u) = maps(plan, i, *src)?;
+            let (m, ho, ..) = maps(plan, i, *dst)?;
+            if mode.quantized() && quant.is_none() {
+                return mode_fail(
+                    "quant_i8 conv has no baked int8 panels — the f32 kernels would \
+                     stream an empty weight buffer"
+                        .to_string(),
+                );
+            }
+            if quant.is_some() && !mode.quantized() {
+                return mode_fail(format!("int8 panels are baked but the step's mode is {mode:?}"));
+            }
+            if quant.is_some() && !*packed {
+                return mode_fail(
+                    "quant_i8 requires packing: the int8 panels *are* the packed \
+                     layout, there is no unpacked int8 kernel"
+                        .to_string(),
+                );
+            }
+            if quant.is_some() && !matches!(u, 1 | 2 | 4 | 8) {
+                return mode_fail(format!(
+                    "quant_i8 needs a lane-paddable width (u in {{1, 2, 4, 8}}), got u={u}"
+                ));
+            }
+            if *vec && (!*packed || !mode.vectorized() || quant.is_some()) {
+                return mode_fail(
+                    "vector f32 kernel selected on a layer that is not a packed \
+                     vectorised f32 layer"
+                        .to_string(),
+                );
+            }
+            if place.is_some() && !*packed {
+                return mode_fail(
+                    "cost-weighted placement carries working-set bytes but the step is \
+                     unpacked (placement applies to the packed dispatch only)"
+                        .to_string(),
+                );
+            }
+            if let Some(ls) = plan.sched.layers.get(&plan.labels[i]) {
+                if ls.placement && ls.packing && *packed && place.is_none() {
+                    return mode_fail(
+                        "schedule asks for cost-weighted placement but the step \
+                         carries no working-set cost — dispatch would silently fall \
+                         back to unweighted chunking"
+                            .to_string(),
+                    );
+                }
+            }
+            let mb = ceil_div(m, u);
+            let tile_fail =
+                |detail: String| Err(violation(plan, i, VerifyRule::TilePrecondition, detail));
+            if tile.tm < 1 || tile.th < 1 {
+                return tile_fail(format!(
+                    "degenerate tile tm={} th={} (both must be >= 1)",
+                    tile.tm, tile.th
+                ));
+            }
+            if *tile != tile.clamped(mb, ho) {
+                let cl = tile.clamped(mb, ho);
+                return tile_fail(format!(
+                    "tile tm={} th={} is not clamped to the {mb}x{ho} macro grid \
+                     (expected tm={} th={}) — dispatch geometry assumes clamped tiles",
+                    tile.tm, tile.th, cl.tm, cl.th
+                ));
+            }
+        }
+        Step::Dense { mode, packed, vec, quant, .. } => {
+            if mode.quantized() && quant.is_none() {
+                return mode_fail("quant_i8 dense has no baked int8 panels".to_string());
+            }
+            if quant.is_some() && !mode.quantized() {
+                return mode_fail(format!("int8 panels are baked but the step's mode is {mode:?}"));
+            }
+            if quant.is_some() && !*packed {
+                return mode_fail(
+                    "quant_i8 requires packing: the int8 panels *are* the packed \
+                     layout"
+                        .to_string(),
+                );
+            }
+            if *vec && (!*packed || !mode.vectorized() || quant.is_some()) {
+                return mode_fail(
+                    "vector f32 kernel selected on a layer that is not a packed \
+                     vectorised f32 layer"
+                        .to_string(),
+                );
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Rule 3 — arena extents. Registers, scratch rows, and weight panels
+/// must fit their preallocated buffers at the plan's full capacity
+/// (`with_capacity` siblings re-run this on their re-sized arena). Row
+/// *counts* of the per-chunk buffers are deliberately left to
+/// [`check_region`]: too few rows is a sharing (race) problem, not a
+/// sizing one.
+fn check_arena(
+    plan: &ExecutionPlan,
+    i: usize,
+    step: &Step,
+    srcs: &[usize],
+    dst: usize,
+) -> Result<()> {
+    let fail = |detail: String| Err(violation(plan, i, VerifyRule::ArenaSafety, detail));
+    let batch = plan.batch;
+    for &r in srcs.iter().chain(std::iter::once(&dst)) {
+        let need = batch * plan.slots[r].len();
+        let have = plan.arena.bufs[r].len();
+        if have < need {
+            return fail(format!(
+                "register r{r} needs {need} elements at capacity {batch} but its \
+                 arena buffer holds {have}"
+            ));
+        }
+    }
+    let need_scratch = |plan: &ExecutionPlan, i: usize, row: usize| -> Result<()> {
+        if row > plan.scratch_row {
+            return Err(violation(
+                plan,
+                i,
+                VerifyRule::ArenaSafety,
+                format!(
+                    "step needs a {row}-element scratch row but rows are {} apart — \
+                     adjacent batch rows would overlap",
+                    plan.scratch_row
+                ),
+            ));
+        }
+        if plan.arena.scratch.len() < batch * plan.scratch_row {
+            return Err(violation(
+                plan,
+                i,
+                VerifyRule::ArenaSafety,
+                format!(
+                    "scratch holds {} elements but capacity {batch} x row {} needs {}",
+                    plan.arena.scratch.len(),
+                    plan.scratch_row,
+                    batch * plan.scratch_row
+                ),
+            ));
+        }
+        Ok(())
+    };
+    let need_qscratch = |plan: &ExecutionPlan, i: usize, row: usize| -> Result<()> {
+        if row > plan.qscratch_row {
+            return Err(violation(
+                plan,
+                i,
+                VerifyRule::ArenaSafety,
+                format!(
+                    "step needs a {row}-element i8 scratch row but rows are {} apart",
+                    plan.qscratch_row
+                ),
+            ));
+        }
+        if plan.arena.qscratch.len() < batch * plan.qscratch_row
+            || plan.arena.qscales.len() < batch
+        {
+            return Err(violation(
+                plan,
+                i,
+                VerifyRule::ArenaSafety,
+                format!(
+                    "i8 scratch holds {} elements / {} scales but capacity {batch} \
+                     x row {} needs {} / {batch}",
+                    plan.arena.qscratch.len(),
+                    plan.arena.qscales.len(),
+                    plan.qscratch_row,
+                    batch * plan.qscratch_row
+                ),
+            ));
+        }
+        Ok(())
+    };
+    match step {
+        Step::ConvMm { src, dst, w, b, k, p, mode, quant, .. } => {
+            let (cin, h, wd, u) = maps(plan, i, *src)?;
+            let (m, ..) = maps(plan, i, *dst)?;
+            let (cb, mb) = (ceil_div(cin, u), ceil_div(m, u));
+            let panel = mb * u * cb * k * k * u;
+            let wlen = quant.as_ref().map(|q| q.data.len()).unwrap_or_else(|| w.len());
+            if wlen != panel {
+                return fail(format!(
+                    "conv weight panels hold {wlen} taps but {mb}x{cb} stacks at \
+                     k={k} u={u} stream {panel}"
+                ));
+            }
+            if b.len() != mb * u {
+                return fail(format!(
+                    "conv bias holds {} lanes but the kernel reads {}",
+                    b.len(),
+                    mb * u
+                ));
+            }
+            if quant.is_some() || *p > 0 || mode.vectorized() {
+                let plen = cb * (h + 2 * p) * (wd + 2 * p) * u;
+                need_scratch(plan, i, plen)?;
+                if quant.is_some() {
+                    need_qscratch(plan, i, plen)?;
+                }
+            }
+            if u != 4 {
+                let row = (u * u).max(conv::OW_TILE * u);
+                if row > plan.thread_scratch_row {
+                    return fail(format!(
+                        "generic-u conv kernel needs {row}-element per-thread scratch \
+                         rows, plan allocates {}",
+                        plan.thread_scratch_row
+                    ));
+                }
+            }
+            for (t, sc) in plan.arena.thread_scratch.iter().enumerate() {
+                if sc.len() < plan.thread_scratch_row {
+                    return fail(format!(
+                        "per-thread scratch row {t} holds {} elements, plan requires {}",
+                        sc.len(),
+                        plan.thread_scratch_row
+                    ));
+                }
+            }
+        }
+        Step::ConvNchw { src, dst, w, b, k, mode, policy, .. } => {
+            let (cin, h, wd, _) = maps(plan, i, *src)?;
+            let (m, ho, wo, _) = maps(plan, i, *dst)?;
+            if w.len() != m * cin * k * k || b.len() != m {
+                return fail(format!(
+                    "row-major conv weights {}x{} vs expected {}x{m}",
+                    w.len(),
+                    b.len(),
+                    m * cin * k * k
+                ));
+            }
+            if mode.vectorized() {
+                need_scratch(plan, i, cin * h * wd)?;
+            }
+            if !matches!(policy, NchwConv::Scalar) {
+                let buf_len = m * ho * wo;
+                if buf_len > plan.reduce_len {
+                    return fail(format!(
+                        "reduction needs {buf_len}-element partial buffers, plan \
+                         allocates {}",
+                        plan.reduce_len
+                    ));
+                }
+                for (t, row) in plan.arena.reduce.iter().enumerate() {
+                    if row.len() < buf_len {
+                        return fail(format!(
+                            "reduction row {t} holds {} elements, step needs {buf_len}",
+                            row.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Step::PoolMm { src, p, .. } if *p > 0 => {
+            let (c, h, wd, u) = maps(plan, i, *src)?;
+            let plen = ceil_div(c, u) * (h + 2 * p) * (wd + 2 * p) * u;
+            need_scratch(plan, i, plen)?;
+        }
+        Step::Dense { src, dst, w, b, mode, packed, quant, .. } => {
+            let len = flat(plan, i, *src)?;
+            let o = flat(plan, i, *dst)?;
+            let expect = if quant.is_some() || *packed {
+                ceil_div(o, DENSE_BLOCK) * len * DENSE_BLOCK
+            } else {
+                o * len
+            };
+            let wlen = quant.as_ref().map(|q| q.data.len()).unwrap_or_else(|| w.len());
+            if wlen != expect {
+                return fail(format!(
+                    "dense weight panels hold {wlen} elements but {o}x{len} expects \
+                     {expect}"
+                ));
+            }
+            if b.len() != o {
+                return fail(format!("dense bias holds {} lanes, kernel reads {o}", b.len()));
+            }
+            if quant.is_some() {
+                need_qscratch(plan, i, len)?;
+            } else if mode.vectorized() {
+                need_scratch(plan, i, len)?;
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Rule 1b — the parallel-region race model. For every step that
+/// dispatches a parallel region, re-derive the macro-item geometry the
+/// dispatch will use at every live batch size `1..=B` and prove the
+/// write ranges tile the output exactly, then prove the arena holds one
+/// `thread_scratch` / `reduce` row per pool chunk (the static form of
+/// the asserts in [`parallel::parallel_for_macro_slices`] and
+/// [`parallel::parallel_reduce_with`] — one row shared by two chunks is
+/// a data race).
+fn check_region(plan: &ExecutionPlan, i: usize, step: &Step) -> Result<()> {
+    let race = |detail: String| Err(violation(plan, i, VerifyRule::RaceFreedom, detail));
+    let threads = plan.threads;
+    match step {
+        Step::ConvMm { src, dst, packed, tile, .. } => {
+            let (_, _, _, u) = maps(plan, i, *src)?;
+            let (m, ho, wo, _) = maps(plan, i, *dst)?;
+            let mb = ceil_div(m, u);
+            let out_row_len = wo * u;
+            let mut seen_tm: Vec<usize> = Vec::new();
+            for live in 1..=plan.batch {
+                let items = if *packed {
+                    let ConvTiling { tm, .. } = tile.dispatched(mb, ho, live, threads);
+                    let n_mt = ceil_div(mb, tm);
+                    if !seen_tm.contains(&tm) {
+                        seen_tm.push(tm);
+                        // The stack blocks of one batch row must tile
+                        // [0, mb) exactly — rows then stack at a fixed
+                        // mb*ho*wo*u stride, so per-row disjointness
+                        // extends to the whole region.
+                        let mut covered = 0usize;
+                        for t in 0..n_mt {
+                            let start = t * tm;
+                            let tm_eff = tm.min(mb - start);
+                            if start != covered || tm_eff == 0 {
+                                return race(format!(
+                                    "macro-item stack blocks at tm={tm} leave a \
+                                     gap/overlap at stack {covered} of {mb}"
+                                ));
+                            }
+                            covered += tm_eff;
+                        }
+                        if covered != mb {
+                            return race(format!(
+                                "macro-item stack blocks at tm={tm} cover {covered} \
+                                 of {mb} stacks"
+                            ));
+                        }
+                        // And the flat offsets the dispatch slices by
+                        // must be monotone over the whole item space.
+                        let offset_of =
+                            |it: usize| (it / n_mt * mb + (it % n_mt) * tm) * ho * out_row_len;
+                        for it in 1..live * n_mt {
+                            if offset_of(it) <= offset_of(it - 1) {
+                                return race(format!(
+                                    "macro-item offsets are not monotone at item {it} \
+                                     (tm={tm}): chunk slicing would overlap"
+                                ));
+                            }
+                        }
+                    }
+                    live * n_mt
+                } else {
+                    live * mb * ho
+                };
+                if threads > 1 && items > 1 {
+                    let chunks = parallel::chunk_ranges(items, threads).len();
+                    if plan.arena.thread_scratch.len() < chunks {
+                        return race(format!(
+                            "conv region dispatches {chunks} chunks at live={live} but \
+                             the arena holds {} per-thread scratch rows — chunks would \
+                             share a row",
+                            plan.arena.thread_scratch.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Step::ConvNchw { src, dst, k, policy, .. } => {
+            if matches!(policy, NchwConv::Scalar) {
+                return Ok(());
+            }
+            let (cin, ..) = maps(plan, i, *src)?;
+            let (m, ..) = maps(plan, i, *dst)?;
+            let items = if matches!(policy, NchwConv::Flp) { m * cin } else { cin * k };
+            let chunks = parallel::chunk_ranges(items, threads.max(1)).len().max(1);
+            if plan.arena.reduce.len() < chunks {
+                return race(format!(
+                    "reduction dispatches {chunks} chunks but the arena holds {} \
+                     partial buffers — chunks would share one",
+                    plan.arena.reduce.len()
+                ));
+            }
+        }
+        // Dense rows chunk uniformly over per-image slices
+        // (parallel_for_slices): disjoint by construction, no shared
+        // scratch. The remaining step kinds run per-row sequential
+        // kernels — no parallel region at all.
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Pre-lowering schedule lints: knob combinations [`Schedule`] accepts
+/// and lowering silently ignores. These run from `cappuccino check`
+/// (and the verifier test suite), not at `build` — existing artifacts
+/// keep compiling; the lint is how a human finds out the knob did
+/// nothing.
+pub fn verify_schedule(sched: &Schedule) -> Result<()> {
+    for (name, ls) in &sched.layers {
+        if ls.placement && !ls.packing {
+            return Err(Error::Verify {
+                step: 0,
+                layer: name.clone(),
+                rule: VerifyRule::ModePrecondition,
+                detail: "schedule asks for cost-weighted placement with packing off — \
+                         placement only applies to the packed map-major dispatch, so \
+                         this knob silently does nothing"
+                    .to_string(),
+            });
+        }
+        if ls.vector_width > 1 && !ls.packing {
+            return Err(Error::Verify {
+                step: 0,
+                layer: name.clone(),
+                rule: VerifyRule::ModePrecondition,
+                detail: format!(
+                    "schedule forces vector_width={} with packing off — the vector \
+                     kernels only exist over packed panels, so this knob silently \
+                     does nothing",
+                    ls.vector_width
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// A seeded corruption for the verifier's mutation-testing suite. Each
+/// variant locates its own site in the plan; [`apply_mutation`] returns
+/// `false` when the plan has no such site (e.g. no quantized layer).
+/// The doc on each variant names the rule it must trip.
+#[doc(hidden)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanMutation {
+    /// Point the first map-major conv's src at its dst → `race-freedom`.
+    AliasConvSrcDst,
+    /// Point a concat source at the join register → `race-freedom`.
+    AliasConcat,
+    /// Drop all but one FLP/KLP partial buffer → `race-freedom`.
+    TruncateReduce,
+    /// Drop all but one per-thread conv scratch row → `race-freedom`.
+    TruncateThreadScratch,
+    /// Read the output register before it is written → `def-before-use`.
+    UseBeforeDef,
+    /// Replace a layout reorder with a raw copy → `layout-consistency`.
+    ReorderToCopy,
+    /// Retarget a reorder at a same-width register → `layout-consistency`.
+    ReorderSameWidth,
+    /// Shrink one activation register below capacity → `arena-safety`.
+    UndersizeArena,
+    /// Shrink the pad/cast scratch below capacity → `arena-safety`.
+    UndersizeScratch,
+    /// Drop a quantized layer's int8 panels → `mode-precondition`.
+    QuantDropPanels,
+    /// Mark a quantized layer unpacked → `mode-precondition`.
+    QuantUnpack,
+    /// Zero a conv tile's stack count → `tile-precondition`.
+    TileZero,
+    /// Blow a conv tile past its macro grid → `tile-precondition`.
+    TileUnclamped,
+}
+
+/// Apply a [`PlanMutation`] to `plan` in place; `false` means the plan
+/// has no site the mutation applies to. Test-only (the public surface
+/// is the `#[doc(hidden)]` [`ExecutionPlan::apply_mutation`]); a
+/// mutated plan must never be executed.
+pub fn apply_mutation(plan: &mut ExecutionPlan, m: PlanMutation) -> bool {
+    let out_slot = plan.out_slot;
+    match m {
+        PlanMutation::AliasConvSrcDst => {
+            for step in &mut plan.steps {
+                if let Step::ConvMm { src, dst, .. } = step {
+                    *src = *dst;
+                    return true;
+                }
+            }
+            false
+        }
+        PlanMutation::AliasConcat => {
+            for step in &mut plan.steps {
+                if let Step::Concat { srcs, dst } = step {
+                    if let Some(first) = srcs.first_mut() {
+                        *first = *dst;
+                        return true;
+                    }
+                }
+            }
+            false
+        }
+        PlanMutation::TruncateReduce => {
+            if plan.arena.reduce.len() > 1 {
+                plan.arena.reduce.truncate(1);
+                true
+            } else {
+                false
+            }
+        }
+        PlanMutation::TruncateThreadScratch => {
+            if plan.arena.thread_scratch.len() > 1 {
+                plan.arena.thread_scratch.truncate(1);
+                true
+            } else {
+                false
+            }
+        }
+        PlanMutation::UseBeforeDef => {
+            for step in plan.steps.iter_mut().skip(1) {
+                if step_dst(step) == out_slot {
+                    continue; // would alias src == dst instead
+                }
+                match step {
+                    Step::ConvMm { src, .. }
+                    | Step::ConvNchw { src, .. }
+                    | Step::PoolMm { src, .. }
+                    | Step::PoolNchw { src, .. }
+                    | Step::Lrn { src, .. }
+                    | Step::Gap { src, .. }
+                    | Step::Copy { src, .. }
+                    | Step::Dense { src, .. }
+                    | Step::Softmax { src, .. }
+                    | Step::Reorder { src, .. } => {
+                        *src = out_slot;
+                        return true;
+                    }
+                    Step::Input { .. } | Step::Concat { .. } => continue,
+                }
+            }
+            false
+        }
+        PlanMutation::ReorderToCopy => {
+            for step in &mut plan.steps {
+                if let Step::Reorder { src, dst } = *step {
+                    *step = Step::Copy { src, dst };
+                    return true;
+                }
+            }
+            false
+        }
+        PlanMutation::ReorderSameWidth => {
+            let mut site: Option<(usize, usize)> = None;
+            for (i, step) in plan.steps.iter().enumerate() {
+                if let Step::Reorder { src, .. } = step {
+                    let su = match plan.slots[*src] {
+                        SlotShape::Maps { u, .. } => u,
+                        SlotShape::Flat { .. } => continue,
+                    };
+                    let j = plan
+                        .slots
+                        .iter()
+                        .enumerate()
+                        .find(|(idx, s)| {
+                            *idx != *src && matches!(s, SlotShape::Maps { u, .. } if *u == su)
+                        })
+                        .map(|(idx, _)| idx);
+                    if let Some(j) = j {
+                        site = Some((i, j));
+                        break;
+                    }
+                }
+            }
+            if let Some((i, j)) = site {
+                if let Step::Reorder { dst, .. } = &mut plan.steps[i] {
+                    *dst = j;
+                    return true;
+                }
+            }
+            false
+        }
+        PlanMutation::UndersizeArena => {
+            if let Some(step) = plan.steps.get(1) {
+                let d = step_dst(step);
+                let buf = &mut plan.arena.bufs[d];
+                if !buf.is_empty() {
+                    buf.pop();
+                    return true;
+                }
+            }
+            false
+        }
+        PlanMutation::UndersizeScratch => {
+            if plan.scratch_row > 0 && !plan.arena.scratch.is_empty() {
+                plan.arena.scratch.pop();
+                true
+            } else {
+                false
+            }
+        }
+        PlanMutation::QuantDropPanels => {
+            for step in &mut plan.steps {
+                match step {
+                    Step::ConvMm { quant, .. } | Step::Dense { quant, .. } if quant.is_some() => {
+                        *quant = None;
+                        return true;
+                    }
+                    _ => {}
+                }
+            }
+            false
+        }
+        PlanMutation::QuantUnpack => {
+            for step in &mut plan.steps {
+                match step {
+                    Step::ConvMm { packed, quant, .. } | Step::Dense { packed, quant, .. }
+                        if quant.is_some() =>
+                    {
+                        *packed = false;
+                        return true;
+                    }
+                    _ => {}
+                }
+            }
+            false
+        }
+        PlanMutation::TileZero => {
+            for step in &mut plan.steps {
+                if let Step::ConvMm { tile, .. } = step {
+                    tile.tm = 0;
+                    return true;
+                }
+            }
+            false
+        }
+        PlanMutation::TileUnclamped => {
+            for step in &mut plan.steps {
+                if let Step::ConvMm { tile, .. } = step {
+                    tile.tm += 1_000_000;
+                    return true;
+                }
+            }
+            false
+        }
+    }
+}

@@ -28,6 +28,7 @@
 //! | [`engine::plan`] | batch-first compiled plans: `PlanBuilder` → `ExecutionPlan::run_batch`, `B x` buffer arena, baked+packed weights, per-layer conv tiles from an L1/L2 cost model, per-thread kernel scratch, flat step sequence |
 //! | [`engine::schedule`] | Schedule IR — the one per-layer tuning surface (parallelism, packing, tiling, mode, placement, vector width + pool settings); every `PlanBuilder` setter lowers into it; serializes to the `schedule.json` artifact |
 //! | [`engine::simd`] | explicit-width SIMD lanes (`f32x4`/`f32x8`, widening int8 dot) over `core::arch` intrinsics with a bitwise-identical scalar fallback; `CAPPUCCINO_SIMD=0` forces the fallback |
+//! | [`engine::verify`] | static plan verifier — an effect system over the Step IR proving race-freedom, def-before-use + layout consistency, arena safety, and mode/tile preconditions before a plan ever runs; `cappuccino check`, typed `Error::Verify` |
 //! | [`engine::parallel`] | topology-aware persistent worker pool (per-cluster deques, idle-only stealing, batch-tagged scopes, cost-weighted placement) + thread workload allocation policies |
 //! | [`engine::topology`] | CPU topology probe (sysfs `cpu_capacity`/packages, affinity-mask aware, uniform fallback), `sched_setaffinity` pinning, serve-worker `CoreSet`s |
 //! | [`faults`] | deterministic fault injection: seeded, plan-addressable panic/error injection points (`CAPPUCCINO_FAULTS` / `serve --faults`), compiled to one atomic load when disabled |
@@ -44,6 +45,8 @@
 //! | [`serve::workload`] | arrival processes (incl. bounded-Pareto heavy tails) + the open-loop replay driver behind `serve --replay` |
 //! | [`bench`] | in-repo micro-benchmark harness (criterion stand-in) |
 //! | [`testing`] | in-repo property-testing helper (proptest stand-in) |
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod autotune;
 pub mod bench;

@@ -91,6 +91,7 @@ fn run(args: &[String]) -> Result<()> {
     match flags.cmd.as_str() {
         "info" => cmd_info(),
         "synthesize" => cmd_synthesize(&flags),
+        "check" => cmd_check(&flags),
         "tune" => cmd_tune(&flags),
         "analyze" => cmd_analyze(&flags),
         "simulate" => cmd_simulate(&flags),
@@ -112,6 +113,15 @@ COMMANDS:
   info                               list networks, devices, artifacts
   synthesize --net NAME              run the Fig. 3 synthesis flow; emits plan JSON
              [--u 4] [--threads 4] [--budget 0.01] [--out plan.json]
+  check      [--net NAME|all]        statically verify compiled plans: race-freedom,
+             [--schedule s.json] [--batch 8]
+             def-before-use + layout consistency, arena safety, and
+             mode/tile preconditions over the lowered Step IR
+             (engine::verify), across a representative schedule matrix
+             per net and at sibling capacities {1, --batch}; with
+             --schedule, lints the artifact pre-lowering and verifies
+             the exact plan it compiles to. Exits nonzero with the rule
+             name on stderr at the first violation.
   tune       --net tinynet           autotune a per-layer schedule ON THIS MACHINE
              [--batch 8] [--threads 4] [--budget 64] [--reps 5]
              [--warmup 2] [--mode imprecise] [--out schedule.json]
@@ -246,6 +256,78 @@ fn cmd_synthesize(flags: &Flags) -> Result<()> {
             "      predicted on {:<10} {:>9.2} ms",
             d.name,
             cappuccino::synth::predict_latency_ms(&plan, &net, &d)
+        );
+    }
+    Ok(())
+}
+
+/// `cappuccino check` — run the static plan verifier
+/// ([`cappuccino::engine::verify`]) over every plan a net's schedule
+/// surface produces, or over one tuned schedule artifact.
+fn cmd_check(flags: &Flags) -> Result<()> {
+    use cappuccino::engine::{Parallelism, PlanBuilder};
+
+    let batch = flags.get_usize("batch", 8)?;
+    if batch == 0 {
+        return Err(Error::Invalid("--batch 0: need at least one image of capacity".into()));
+    }
+    let schedule_path = flags.get("schedule", "");
+    if !schedule_path.is_empty() {
+        // One artifact: lint the schedule before lowering, then verify
+        // the exact plan it compiles to, at full and unit capacity.
+        let schedule = Schedule::load(&schedule_path)?;
+        cappuccino::engine::verify_schedule(&schedule)?;
+        let network = zoo::by_name(&schedule.net)
+            .ok_or_else(|| Error::Invalid(format!("unknown net {:?} in schedule", schedule.net)))?;
+        let params = EngineParams::random(&network, 42, schedule.u)?;
+        let plan = PlanBuilder::new(&network, &params).schedule(schedule).batch(batch).build()?;
+        plan.verify()?;
+        plan.with_capacity(1).verify()?;
+        println!(
+            "{schedule_path}: schedule lints clean, plan verifies at capacities {{1, {batch}}}"
+        );
+        return Ok(());
+    }
+
+    let net_name = flags.get("net", "all");
+    let nets = if net_name == "all" {
+        zoo::all()
+    } else {
+        let net = zoo::by_name(&net_name)
+            .ok_or_else(|| Error::Invalid(format!("unknown net {net_name:?}")))?;
+        vec![net]
+    };
+    // The representative schedule surface: every lowering family the
+    // engine has (packed/unpacked OLP, row-major FLP/KLP, the vector
+    // and quantized kernels, placement) at one and several pool chunks.
+    let combos: &[(&str, ArithMode, Parallelism, bool, usize, bool)] = &[
+        ("olp packed precise t1", ArithMode::Precise, Parallelism::Olp, true, 1, false),
+        ("olp packed imprecise t4", ArithMode::Imprecise, Parallelism::Olp, true, 4, false),
+        ("olp packed quant_i8 t4", ArithMode::QuantI8, Parallelism::Olp, true, 4, false),
+        ("olp unpacked imprecise t4", ArithMode::Imprecise, Parallelism::Olp, false, 4, false),
+        ("flp rowmajor imprecise t4", ArithMode::Imprecise, Parallelism::Flp, true, 4, false),
+        ("klp rowmajor imprecise t4", ArithMode::Imprecise, Parallelism::Klp, true, 4, false),
+        ("olp packed imprecise t4 +aff", ArithMode::Imprecise, Parallelism::Olp, true, 4, true),
+    ];
+    for network in &nets {
+        let params = EngineParams::random(network, 42, cappuccino::DEFAULT_U)?;
+        let mut checked = 0usize;
+        for &(_label, mode, policy, packing, threads, affinity) in combos {
+            let plan = PlanBuilder::new(network, &params)
+                .modes(&ModeAssignment::uniform(mode))
+                .policy(policy)
+                .packing(packing)
+                .threads(threads)
+                .affinity(affinity)
+                .batch(batch)
+                .build()?;
+            plan.verify()?;
+            plan.with_capacity(1).verify()?;
+            checked += 1;
+        }
+        println!(
+            "{:<11} {checked} schedule families verify clean at capacities {{1, {batch}}}",
+            network.name
         );
     }
     Ok(())

@@ -38,6 +38,18 @@ pub enum Error {
     /// through `run_batch`. `step` is the plan step index, `layer` the
     /// lowered step's label (layer name or step kind).
     TaskPanicked { step: usize, layer: String },
+    /// The static plan verifier ([`crate::engine::verify`]) rejected a
+    /// compiled plan or a schedule before it could run: a race, a
+    /// layout/def-use inconsistency, an under-sized arena, or a broken
+    /// mode/tile precondition. `step` is the offending plan step index
+    /// (0 for pre-lowering schedule lints), `layer` its label, and
+    /// `rule` the rule class that fired.
+    Verify {
+        step: usize,
+        layer: String,
+        rule: crate::engine::verify::VerifyRule,
+        detail: String,
+    },
 }
 
 impl fmt::Display for Error {
@@ -53,6 +65,9 @@ impl fmt::Display for Error {
             Error::Rejected(r) => write!(f, "rejected: {r}"),
             Error::TaskPanicked { step, layer } => {
                 write!(f, "task panicked at plan step {step} ({layer}); panic contained")
+            }
+            Error::Verify { step, layer, rule, detail } => {
+                write!(f, "verify: {} at plan step {step} ({layer}): {detail}", rule.as_str())
             }
         }
     }

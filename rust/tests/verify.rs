@@ -1,0 +1,294 @@
+//! Mutation-testing suite for the static plan verifier
+//! (`engine::verify`), plus the clean sweep.
+//!
+//! The verifier is only worth trusting if it demonstrably *rejects*
+//! broken plans — so each test here takes a known-good compiled plan,
+//! seeds one corruption through the test-only
+//! `ExecutionPlan::apply_mutation` hook, and asserts the exact
+//! `Error::Verify` rule fires. Each of the four documented rule classes
+//! (race-freedom, def/layout, arena, mode/tile) is covered by at least
+//! two distinct corruptions. The sweep at the bottom asserts the
+//! converse: every zoo model x every autotuner candidate family
+//! verifies clean at capacities {1, 4, 8}.
+
+use cappuccino::engine::verify::{PlanMutation, VerifyRule};
+use cappuccino::engine::{
+    verify_schedule, ArithMode, EngineParams, ExecutionPlan, ModeAssignment, Parallelism,
+    PlanBuilder, PoolSettings, Schedule,
+};
+use cappuccino::model::{zoo, Network};
+use cappuccino::Error;
+
+const U: usize = cappuccino::DEFAULT_U;
+
+fn uniform_plan(
+    net: &Network,
+    mode: ArithMode,
+    policy: Parallelism,
+    packing: bool,
+    threads: usize,
+    batch: usize,
+) -> ExecutionPlan {
+    let params = EngineParams::random(net, 7, U).unwrap();
+    PlanBuilder::new(net, &params)
+        .modes(&ModeAssignment::uniform(mode))
+        .policy(policy)
+        .packing(packing)
+        .threads(threads)
+        .batch(batch)
+        .build()
+        .unwrap()
+}
+
+/// A packed OLP tinynet plan — the default lowering family.
+fn base_plan() -> ExecutionPlan {
+    uniform_plan(&zoo::tinynet(), ArithMode::Imprecise, Parallelism::Olp, true, 2, 2)
+}
+
+/// tinynet with `conv2` forced row-major (FLP) inside an otherwise
+/// packed OLP schedule: the lowering emits `Reorder` steps at both
+/// layout boundaries and an FLP reduction region.
+fn mixed_plan() -> ExecutionPlan {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 7, U).unwrap();
+    let mut sched = Schedule::from_uniform(
+        &net,
+        U,
+        &ModeAssignment::uniform(ArithMode::Imprecise),
+        Parallelism::Olp,
+        true,
+        None,
+        PoolSettings { threads: 2, affinity: false, cores: None },
+    )
+    .unwrap();
+    sched.layers.get_mut("conv2").unwrap().parallelism = Parallelism::Flp;
+    PlanBuilder::new(&net, &params).schedule(sched).batch(2).build().unwrap()
+}
+
+/// Seed `m` into `plan` and assert the verifier rejects it with exactly
+/// `want` — a typed `Error::Verify` naming a step and a layer.
+fn assert_rejects(mut plan: ExecutionPlan, m: PlanMutation, want: VerifyRule) {
+    assert!(plan.apply_mutation(m), "plan has no site for mutation {m:?}");
+    match plan.verify() {
+        Err(Error::Verify { step, layer, rule, detail }) => {
+            assert_eq!(
+                rule, want,
+                "mutation {m:?} fired {rule:?} at step {step} ({layer}): {detail}; \
+                 expected {want:?}"
+            );
+            assert!(!layer.is_empty(), "violation must name the step's layer");
+            assert!(!detail.is_empty(), "violation must carry a detail message");
+        }
+        Err(other) => panic!("mutation {m:?} surfaced a non-verify error: {other}"),
+        Ok(()) => panic!("mutation {m:?} was NOT rejected by the verifier"),
+    }
+}
+
+// --- rule class 1: race-freedom ---------------------------------------------
+
+#[test]
+fn race_alias_conv_src_dst_is_rejected() {
+    assert_rejects(base_plan(), PlanMutation::AliasConvSrcDst, VerifyRule::RaceFreedom);
+}
+
+#[test]
+fn race_alias_concat_is_rejected() {
+    // Needs a fork/join net: googlenet's inception concats.
+    let plan = uniform_plan(&zoo::googlenet(), ArithMode::Imprecise, Parallelism::Olp, true, 2, 1);
+    assert_rejects(plan, PlanMutation::AliasConcat, VerifyRule::RaceFreedom);
+}
+
+#[test]
+fn race_truncated_reduce_rows_are_rejected() {
+    // FLP reduction region with a 2-thread pool: dropping partial
+    // buffers makes two chunks share one — a write/write race.
+    assert_rejects(mixed_plan(), PlanMutation::TruncateReduce, VerifyRule::RaceFreedom);
+}
+
+#[test]
+fn race_truncated_thread_scratch_rows_are_rejected() {
+    assert_rejects(base_plan(), PlanMutation::TruncateThreadScratch, VerifyRule::RaceFreedom);
+}
+
+// --- rule class 2: def-before-use + layout consistency ----------------------
+
+#[test]
+fn def_use_before_def_is_rejected() {
+    assert_rejects(base_plan(), PlanMutation::UseBeforeDef, VerifyRule::DefBeforeUse);
+}
+
+#[test]
+fn layout_dropped_reorder_is_rejected() {
+    // Replacing the boundary reorder with a raw copy silently
+    // reinterprets map-major lanes as row-major — the exact bug class
+    // the multi-backend placement work makes easy to introduce.
+    assert_rejects(mixed_plan(), PlanMutation::ReorderToCopy, VerifyRule::LayoutConsistency);
+}
+
+#[test]
+fn layout_same_width_reorder_is_rejected() {
+    assert_rejects(mixed_plan(), PlanMutation::ReorderSameWidth, VerifyRule::LayoutConsistency);
+}
+
+// --- rule class 3: arena safety ---------------------------------------------
+
+#[test]
+fn arena_undersized_register_is_rejected() {
+    assert_rejects(base_plan(), PlanMutation::UndersizeArena, VerifyRule::ArenaSafety);
+}
+
+#[test]
+fn arena_undersized_scratch_is_rejected() {
+    assert_rejects(base_plan(), PlanMutation::UndersizeScratch, VerifyRule::ArenaSafety);
+}
+
+// --- rule class 4: mode/tile preconditions ----------------------------------
+
+fn quant_plan() -> ExecutionPlan {
+    uniform_plan(&zoo::tinynet(), ArithMode::QuantI8, Parallelism::Olp, true, 2, 2)
+}
+
+#[test]
+fn mode_dropped_quant_panels_are_rejected() {
+    assert_rejects(quant_plan(), PlanMutation::QuantDropPanels, VerifyRule::ModePrecondition);
+}
+
+#[test]
+fn mode_unpacked_quant_is_rejected() {
+    assert_rejects(quant_plan(), PlanMutation::QuantUnpack, VerifyRule::ModePrecondition);
+}
+
+#[test]
+fn tile_zero_is_rejected() {
+    assert_rejects(base_plan(), PlanMutation::TileZero, VerifyRule::TilePrecondition);
+}
+
+#[test]
+fn tile_unclamped_is_rejected() {
+    assert_rejects(base_plan(), PlanMutation::TileUnclamped, VerifyRule::TilePrecondition);
+}
+
+// --- diagnostics ------------------------------------------------------------
+
+#[test]
+fn verify_error_display_names_the_rule_and_step() {
+    let mut plan = base_plan();
+    assert!(plan.apply_mutation(PlanMutation::TileZero));
+    let e = plan.verify().unwrap_err();
+    let msg = e.to_string();
+    assert!(msg.contains("tile-precondition"), "missing rule name: {msg}");
+    assert!(msg.contains("plan step"), "missing step index: {msg}");
+}
+
+// --- pre-lowering schedule lints --------------------------------------------
+
+#[test]
+fn schedule_lint_placement_without_packing() {
+    let net = zoo::tinynet();
+    let mut sched = Schedule::from_uniform(
+        &net,
+        U,
+        &ModeAssignment::uniform(ArithMode::Imprecise),
+        Parallelism::Olp,
+        true,
+        None,
+        PoolSettings { threads: 2, affinity: true, cores: None },
+    )
+    .unwrap();
+    verify_schedule(&sched).unwrap();
+    let ls = sched.layers.get_mut("conv1").unwrap();
+    ls.placement = true;
+    ls.packing = false;
+    match verify_schedule(&sched) {
+        Err(Error::Verify { rule: VerifyRule::ModePrecondition, layer, .. }) => {
+            assert_eq!(layer, "conv1");
+        }
+        other => panic!("placement-without-packing not linted: {other:?}"),
+    }
+}
+
+#[test]
+fn schedule_lint_vector_width_without_packing() {
+    let net = zoo::tinynet();
+    let mut sched = Schedule::from_uniform(
+        &net,
+        U,
+        &ModeAssignment::uniform(ArithMode::Imprecise),
+        Parallelism::Olp,
+        true,
+        None,
+        PoolSettings { threads: 1, affinity: false, cores: None },
+    )
+    .unwrap();
+    let ls = sched.layers.get_mut("conv1").unwrap();
+    ls.vector_width = 4;
+    ls.packing = false;
+    assert!(matches!(
+        verify_schedule(&sched),
+        Err(Error::Verify { rule: VerifyRule::ModePrecondition, .. })
+    ));
+}
+
+// --- the clean sweep --------------------------------------------------------
+
+/// Every zoo model x every autotuner candidate family verifies clean at
+/// capacities {1, 4, 8}. The families mirror what `autotune` explores:
+/// packed/unpacked OLP, row-major FLP/KLP, forced-scalar rows
+/// (`vector_width = 1`), the quantized int8 kernels, and placement.
+#[test]
+fn zoo_x_candidate_families_verify_clean_at_all_capacities() {
+    let combos: &[(ArithMode, Parallelism, bool, usize, bool)] = &[
+        (ArithMode::Precise, Parallelism::Olp, true, 1, false),
+        (ArithMode::Imprecise, Parallelism::Olp, true, 4, false),
+        (ArithMode::QuantI8, Parallelism::Olp, true, 4, false),
+        (ArithMode::Imprecise, Parallelism::Olp, false, 4, false),
+        (ArithMode::Imprecise, Parallelism::Flp, true, 4, false),
+        (ArithMode::Imprecise, Parallelism::Klp, true, 4, false),
+        (ArithMode::Imprecise, Parallelism::Olp, true, 4, true),
+    ];
+    for net in zoo::all() {
+        let params = EngineParams::random(&net, 7, U).unwrap();
+        for &(mode, policy, packing, threads, affinity) in combos {
+            let plan = PlanBuilder::new(&net, &params)
+                .modes(&ModeAssignment::uniform(mode))
+                .policy(policy)
+                .packing(packing)
+                .threads(threads)
+                .affinity(affinity)
+                .batch(4)
+                .build()
+                .unwrap_or_else(|e| {
+                    panic!("{} {mode:?}/{policy:?} packing={packing}: {e}", net.name)
+                });
+            for cap in [1usize, 4, 8] {
+                let sibling = plan.with_capacity(cap);
+                sibling.verify().unwrap_or_else(|e| {
+                    panic!(
+                        "{} {mode:?}/{policy:?} packing={packing} affinity={affinity}: \
+                         capacity {cap} failed verify: {e}",
+                        net.name
+                    )
+                });
+            }
+        }
+        // The forced-scalar candidate family (vector_width = 1).
+        let mut sched = Schedule::from_uniform(
+            &net,
+            U,
+            &ModeAssignment::uniform(ArithMode::Imprecise),
+            Parallelism::Olp,
+            true,
+            None,
+            PoolSettings { threads: 4, affinity: false, cores: None },
+        )
+        .unwrap();
+        for ls in sched.layers.values_mut() {
+            ls.vector_width = 1;
+        }
+        verify_schedule(&sched).unwrap();
+        let plan = PlanBuilder::new(&net, &params).schedule(sched).batch(4).build().unwrap();
+        for cap in [1usize, 4, 8] {
+            plan.with_capacity(cap).verify().unwrap();
+        }
+    }
+}
