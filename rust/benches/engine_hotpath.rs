@@ -17,7 +17,11 @@
 //! machine-readable CI artifact from this PR onward (no threshold
 //! gate). The PR 6 section adds SIMD rows vs forced-scalar rows and
 //! int8 panels vs f32 at B=8 (`simd_vs_scalar_b8` / `int8_vs_f32_b8`
-//! summary keys, plus `simd_enabled` recording the runtime gate).
+//! summary keys, plus `simd_enabled` recording the runtime gate). The
+//! staged section splits the net Native+Mock (mock latency calibrated
+//! to the native stage) and reports overlapped pipeline execution vs
+//! back-to-back staged walks at B=8 (`pipelined_vs_single_b8`,
+//! `stage_count` summary keys).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -409,6 +413,7 @@ fn main() {
                 budget: if fast { 16 } else { 48 },
                 modes: modes.clone(),
                 seed: 0x7E57,
+                backends: Vec::new(),
             };
             let report = cappuccino::autotune::tune(&net, &params, &tune_cfg).unwrap();
             tuned_threads = report.schedule.pool.threads;
@@ -567,6 +572,107 @@ fn main() {
             );
             (simd_vs_scalar, int8_vs_f32)
         };
+        // -- Pipelined staged execution vs sequential staged walks ----
+        //
+        // A Native+Mock split of the same network at B=8. The mock
+        // stage's injected latency is calibrated against the measured
+        // native stage time so the stages are roughly balanced — the
+        // regime pipelining exists for. "single" pushes each batch
+        // through all stages back to back (`run_batch_seq`);
+        // "pipelined" keeps the per-stage workers fed so consecutive
+        // batches overlap. The ratio lands in
+        // BENCH_engine_hotpath.json as `pipelined_vs_single_b8`,
+        // alongside `stage_count`.
+        let (pipelined_vs_single_b8, staged_stage_count) = {
+            use cappuccino::engine::{BackendTarget, Pipeline, StagedPlan};
+            use cappuccino::runtime::backends::{BackendRegistry, MockLatency};
+
+            let b = 8usize;
+            let inputs: Vec<Vec<f32>> =
+                (0..b).map(|_| rng.normal_vec(net.input.elements())).collect();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+            let base_plan = PlanBuilder::new(&net, &params)
+                .modes(&modes)
+                .threads(4)
+                .batch(b)
+                .build()
+                .unwrap();
+            let mut sched = base_plan.schedule().clone();
+            let names = net.param_layer_names();
+            let cut = names.len() / 2;
+            for name in &names[cut..] {
+                sched.layers.get_mut(name.as_str()).unwrap().backend = BackendTarget::Mock;
+            }
+            let split_plan =
+                PlanBuilder::new(&net, &params).schedule(sched).batch(b).build().unwrap();
+            let mut staged = StagedPlan::from_plan(&split_plan).unwrap();
+            let stage_count = staged.stage_count();
+
+            // Calibrate: time each stage with zero injected latency,
+            // then give every mock-stage layer an equal share of the
+            // native stage's surplus so both stages take about as long.
+            let zero = BackendRegistry::default();
+            let t = staged.stage_times_ms(&refs, &zero).unwrap();
+            let (native_ms, mock_math_ms) = (t[0], t[1..].iter().sum::<f64>());
+            let mock_layers = (names.len() - cut).max(1);
+            let per_layer_us =
+                (((native_ms - mock_math_ms).max(0.05) * 1e3) / mock_layers as f64).max(1.0)
+                    as u64;
+            let reg =
+                BackendRegistry::new(MockLatency::parse(&format!("*:{per_layer_us}")).unwrap());
+
+            let n_batches = 6usize;
+            let seq = bench("staged-single-b8", cfg, || {
+                for _ in 0..n_batches {
+                    std::hint::black_box(staged.run_batch_seq(&refs, &reg).unwrap());
+                }
+            });
+            let mut pipe = Pipeline::new(&staged, &reg, 2).unwrap();
+            let piped = bench("staged-pipelined-b8", cfg, || {
+                for _ in 0..n_batches {
+                    pipe.submit(inputs.clone()).unwrap();
+                }
+                for _ in 0..n_batches {
+                    std::hint::black_box(pipe.recv().unwrap());
+                }
+            });
+            let ratio = seq.mean_ms / piped.mean_ms;
+
+            let mut staged_table =
+                Table::new(&["path", "B", "batches", "time/batch(ms)", "vs single"]);
+            let cells: [(&str, f64); 2] =
+                [("staged-single", seq.mean_ms), ("staged-pipelined", piped.mean_ms)];
+            for (path, mean_ms) in cells {
+                staged_table.row(&[
+                    path.into(),
+                    b.to_string(),
+                    n_batches.to_string(),
+                    ms(mean_ms / n_batches as f64),
+                    format!("{:.2}x", seq.mean_ms / mean_ms),
+                ]);
+                json_rows.push(Json::obj(vec![
+                    ("path", Json::str(path)),
+                    ("batch", Json::num(b as f64)),
+                    ("batches", Json::num(n_batches as f64)),
+                    ("time_ms_per_batch", Json::num(mean_ms / n_batches as f64)),
+                    ("speedup_vs_single", Json::num(seq.mean_ms / mean_ms)),
+                ]));
+            }
+            println!(
+                "\n# Pipelined staged execution — {} stages, mock latency {per_layer_us} us/layer\n",
+                stage_count
+            );
+            staged_table.print();
+            println!("\npipelined vs single-staged at B=8: {ratio:.2}x");
+            if ratio < 1.3 {
+                eprintln!(
+                    "WARNING: pipelined staged execution below 1.3x over sequential \
+                     ({ratio:.2}x) — expected >= 1.3x with balanced stages on an idle machine"
+                );
+            }
+            (ratio, stage_count)
+        };
         if json_mode {
             // Record the pool shape next to the numbers: imgs/s at a
             // given (B, threads) is only comparable across runs with
@@ -583,6 +689,8 @@ fn main() {
                 ("simd_enabled", Json::Bool(cappuccino::engine::simd::enabled())),
                 ("simd_vs_scalar_b8", Json::num(simd_vs_scalar_b8)),
                 ("int8_vs_f32_b8", Json::num(int8_vs_f32_b8)),
+                ("pipelined_vs_single_b8", Json::num(pipelined_vs_single_b8)),
+                ("stage_count", Json::num(staged_stage_count as f64)),
                 ("rows", Json::Arr(json_rows)),
             ]);
             cappuccino::util::write_atomic("BENCH_engine_hotpath.json", doc.to_string())

@@ -27,6 +27,18 @@
 //!    candidate must beat the incumbent by >1% to be adopted (hysteresis
 //!    against timer noise).
 //!
+//! 4. **Backend-split stage** (opt-in via [`TuneConfig::backends`]) —
+//!    with two backend targets given (e.g. `native,mock`), every
+//!    net-order cut point is tried: the first *k* layers on the first
+//!    backend, the rest on the second. Each candidate is compiled,
+//!    partitioned into a staged plan
+//!    ([`crate::engine::hetero::StagedPlan`]), statically verified
+//!    (stage-cut rules included), and its stages timed for real on
+//!    their resolved executors. The score is the **bottleneck stage's**
+//!    time — the pipeline throughput model: with stages overlapping,
+//!    steady-state cost per batch is `max` over stages, not the sum —
+//!    and a split only wins if its bottleneck beats the flat walk.
+//!
 //! The **f32** arithmetic modes are **not** searched: they change
 //! numerics, and belong to the accuracy-gated analysis in
 //! [`crate::inexact`]. Pass the chosen assignment in
@@ -50,8 +62,10 @@ use std::time::Instant;
 use crate::engine::conv::ConvTiling;
 use crate::engine::network::ModeAssignment;
 use crate::engine::parallel::Parallelism;
-use crate::engine::schedule::{LayerSchedule, PoolSettings, Schedule};
+use crate::engine::hetero::StagedPlan;
+use crate::engine::schedule::{BackendTarget, LayerSchedule, PoolSettings, Schedule};
 use crate::engine::{ArithMode, EngineParams, PlanBuilder};
+use crate::runtime::backends::BackendRegistry;
 use crate::model::{shapes, LayerOp, Network};
 use crate::synth::{predict_latency_ms, SynthesisPlan};
 use crate::util::ceil_div;
@@ -79,6 +93,11 @@ pub struct TuneConfig {
     pub modes: ModeAssignment,
     /// Seed for the synthetic timing inputs.
     pub seed: u64,
+    /// Backend targets for the opt-in split search (stage 4): empty
+    /// disables it; with two entries every net-order cut between them
+    /// is tried (`cappuccino tune --backends native,mock`). The mock
+    /// executor's latency model comes from `CAPPUCCINO_MOCK_LATENCY`.
+    pub backends: Vec<BackendTarget>,
 }
 
 impl Default for TuneConfig {
@@ -91,6 +110,7 @@ impl Default for TuneConfig {
             budget: 64,
             modes: ModeAssignment::uniform(ArithMode::Imprecise),
             seed: 0xCAFE,
+            backends: Vec::new(),
         }
     }
 }
@@ -406,6 +426,72 @@ pub fn tune(net: &Network, params: &EngineParams, cfg: &TuneConfig) -> Result<Tu
         }
     }
 
+    // Backend-split stage (opt-in): try every net-order cut between
+    // the two given backends on the tuned schedule. The score is the
+    // bottleneck stage's measured time (pipeline throughput model); a
+    // split is only adopted when that bottleneck beats the flat walk —
+    // otherwise the transfer + imbalance overhead loses to no split.
+    if cfg.backends.len() >= 2 && used < cfg.budget {
+        let names = net.param_layer_names();
+        let registry = BackendRegistry::from_env()?;
+        let (front, back) = (cfg.backends[0], cfg.backends[1]);
+        let mut split_best: Option<(Schedule, f64)> = None;
+        for cut in 1..names.len() {
+            if used >= cfg.budget {
+                break;
+            }
+            let mut cand = sched.clone();
+            for (i, name) in names.iter().enumerate() {
+                let b = if i < cut { front } else { back };
+                if let Some(ls) = cand.layers.get_mut(name) {
+                    ls.backend = b;
+                }
+            }
+            // Compile, partition, and statically verify the real staged
+            // plan (stage-cut rules included), then time each stage on
+            // its resolved executor — the same substrate serve runs.
+            let timed = (|| -> Result<f64> {
+                let plan =
+                    PlanBuilder::new(net, params).schedule(cand.clone()).batch(cfg.batch).build()?;
+                let mut staged = StagedPlan::from_plan(&plan)?;
+                staged.verify()?;
+                for _ in 0..cfg.warmup {
+                    staged.run_batch_seq(&refs, &registry)?;
+                }
+                let mut samples = Vec::with_capacity(cfg.reps);
+                for _ in 0..cfg.reps {
+                    let stage_ms = staged.stage_times_ms(&refs, &registry)?;
+                    samples.push(stage_ms.iter().copied().fold(0.0f64, f64::max));
+                }
+                Ok(median(samples))
+            })();
+            let ms = match timed {
+                Ok(ms) => ms,
+                Err(e @ (Error::Config(_) | Error::Verify { .. } | Error::Xla(_))) => {
+                    rejected.push(format!("(split) cut={cut}: {e}"));
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            used += 1;
+            let accepted = ms < best_ms * ACCEPT_RATIO
+                && split_best.as_ref().map_or(true, |&(_, b)| ms < b);
+            trials.push(Trial {
+                layer: "(split)".into(),
+                candidate: format!("{front}|{back} cut={cut} (bottleneck)"),
+                median_ms: ms,
+                accepted,
+            });
+            if accepted {
+                split_best = Some((cand, ms));
+            }
+        }
+        if let Some((s, ms)) = split_best {
+            sched = s;
+            best_ms = ms;
+        }
+    }
+
     // SoC-model cross-check via the synthesis bridge.
     let predicted_ms = crate::soc::catalog().into_iter().next().and_then(|device| {
         SynthesisPlan::from_schedule(&sched, net)
@@ -439,6 +525,7 @@ mod tests {
             budget: 6,
             modes: ModeAssignment::uniform(ArithMode::Imprecise),
             seed: 9,
+            backends: Vec::new(),
         }
     }
 
@@ -549,6 +636,40 @@ mod tests {
         let mut plan = PlanBuilder::new(&net, &params).schedule(loaded).build().unwrap();
         let x = Rng::new(8).normal_vec(net.input.elements());
         assert!(plan.run(&x).unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn backend_split_stage_searches_cuts_and_emits_staged_or_flat() {
+        // With --backends native,mock the tuner must try net-order cut
+        // points as real verified staged plans, record them as (split)
+        // trials, and — whichever way the timings fall — emit a schedule
+        // that still compiles and partitions cleanly.
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 5, 4).unwrap();
+        let cfg = TuneConfig {
+            budget: 12,
+            backends: vec![BackendTarget::Native, BackendTarget::Mock],
+            ..quick_cfg()
+        };
+        let report = tune(&net, &params, &cfg).unwrap();
+        assert!(
+            report.trials.iter().any(|t| t.layer == "(split)"),
+            "split stage must record trials: {:?}",
+            report.trials
+        );
+        report.schedule.validate_for(&net, 4).unwrap();
+        let plan = PlanBuilder::new(&net, &params)
+            .schedule(report.schedule.clone())
+            .batch(2)
+            .build()
+            .unwrap();
+        let staged = StagedPlan::from_plan(&plan).unwrap();
+        staged.verify().unwrap();
+        if report.schedule.is_staged() {
+            assert!(staged.stage_count() >= 2);
+        } else {
+            assert_eq!(staged.stage_count(), 1);
+        }
     }
 
     #[test]

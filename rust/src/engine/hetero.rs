@@ -1,0 +1,832 @@
+//! Heterogeneous staged execution: per-backend plan partitioning and
+//! the pipelined multi-stage executor.
+//!
+//! A schedule whose layers name more than one
+//! [`BackendTarget`] cannot run as one flat step walk: the steps
+//! destined for the mock accelerator must execute on *its* executor,
+//! and data crossing the boundary needs an explicit handoff. This
+//! module turns a compiled [`ExecutionPlan`] into a [`StagedPlan`]:
+//!
+//! * the **partitioner** ([`StagedPlan::from_plan`]) cuts the flat step
+//!   sequence into contiguous per-backend *stages* at backend
+//!   boundaries. Every register defined in one stage and read in a
+//!   later one is routed through a fresh *wire* register written by an
+//!   explicit [`Step::Transfer`] appended at the end of the producing
+//!   stage; downstream reads are remapped to the wire. An all-`native`
+//!   schedule degenerates to a single stage whose step sequence is
+//!   exactly the unstaged plan.
+//! * the **verifier hook** ([`StagedPlan::verify`]) first proves the
+//!   stage cuts sound (`stage-cut` rule: every cross-stage def crosses
+//!   through exactly one transfer, no stage reads another stage's
+//!   registers directly — see [`crate::engine::verify`]), then runs the
+//!   full plan verifier over the rewritten step sequence.
+//! * the **pipelined executor** ([`Pipeline`]) gives each stage a
+//!   worker thread owning its backend executor
+//!   ([`crate::runtime::backends::StageExecutor`]) and a clone of the
+//!   plan's arena, connected by bounded queues. Consecutive batches
+//!   overlap — batch *i* runs stage 2 while batch *i + 1* runs
+//!   stage 1 — so steady-state throughput approaches the bottleneck
+//!   stage's rate instead of the stage-time sum. Backpressure is the
+//!   queue bound: `submit` blocks when the pipeline is full. Shutdown
+//!   is lossless: dropping the pipeline completes every accepted batch
+//!   before the queues close.
+//!
+//! Numerics: transfers are pure copies and the mock backend runs the
+//! identical native kernels, so a staged plan — run via
+//! [`StagedPlan::run_batch`], [`StagedPlan::run_batch_seq`] or the
+//! [`Pipeline`] — is **bitwise identical** to the uniform single-backend
+//! plan. The tests in `rust/tests/hetero.rs` hold that oracle across
+//! splits, thread counts, capacities and partial batches.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use crate::engine::plan::{ExecutionPlan, Step, StepKind};
+use crate::engine::schedule::BackendTarget;
+use crate::engine::verify::{step_dst, step_srcs};
+use crate::runtime::backends::{BackendRegistry, StageExecutor};
+use crate::util::error::{Error, Result};
+
+/// One contiguous per-backend slice of a staged plan's step sequence.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// The backend every step in this stage runs on.
+    pub(crate) backend: BackendTarget,
+    /// Absolute step range in the staged plan (transfers included, at
+    /// the end of the producing stage).
+    pub(crate) range: Range<usize>,
+    /// Wire registers this stage reads that earlier stages wrote.
+    pub(crate) imports: Vec<usize>,
+    /// Wire registers this stage's transfers write for later stages.
+    pub(crate) exports: Vec<usize>,
+}
+
+impl StageSpec {
+    /// The backend this stage runs on.
+    pub fn backend(&self) -> BackendTarget {
+        self.backend
+    }
+
+    /// Number of steps in this stage (transfers included).
+    pub fn step_count(&self) -> usize {
+        self.range.len()
+    }
+}
+
+/// A plan partitioned into per-backend stages with explicit transfer
+/// wires — see the module header. Holds one rewritten
+/// [`ExecutionPlan`] (single arena: the sequential paths walk it
+/// stage by stage) plus the stage table; the [`Pipeline`] clones the
+/// plan per worker so stages can run concurrently.
+pub struct StagedPlan {
+    plan: ExecutionPlan,
+    stages: Vec<StageSpec>,
+}
+
+impl StagedPlan {
+    /// Partition a compiled plan at its schedule's backend boundaries.
+    ///
+    /// Each parameterised layer's steps take the backend its schedule
+    /// entry names; structural steps (reorders, pools, the input
+    /// prologue) inherit the surrounding stage's backend, the prologue
+    /// that of the first layer. Contiguous same-backend runs become
+    /// stages; every cross-stage (def stage < read stage) register is
+    /// rewired through a [`Step::Transfer`]. In debug builds (or under
+    /// `CAPPUCCINO_VERIFY=1`) the result is immediately re-proved:
+    /// stage-cut soundness first, then the full plan verifier.
+    pub fn from_plan(plan: &ExecutionPlan) -> Result<StagedPlan> {
+        let n = plan.steps.len();
+        // Per-step backend: a parameterised layer's label names its
+        // schedule entry, structural steps ride the stage in progress.
+        let first_backend = plan
+            .labels
+            .iter()
+            .find_map(|l| plan.sched.layers.get(l).map(|s| s.backend))
+            .unwrap_or(BackendTarget::Native);
+        let mut cur = first_backend;
+        let mut step_backend = Vec::with_capacity(n);
+        for label in &plan.labels {
+            if let Some(ls) = plan.sched.layers.get(label) {
+                cur = ls.backend;
+            }
+            step_backend.push(cur);
+        }
+        // Contiguous same-backend runs become stages.
+        let mut seams: Vec<(BackendTarget, Range<usize>)> = Vec::new();
+        for (i, &b) in step_backend.iter().enumerate() {
+            match seams.last_mut() {
+                Some((rb, r)) if *rb == b => r.end = i + 1,
+                _ => seams.push((b, i..i + 1)),
+            }
+        }
+        let n_stages = seams.len();
+        let mut stage_of = vec![0usize; n];
+        for (t, (_, r)) in seams.iter().enumerate() {
+            for i in r.clone() {
+                stage_of[i] = t;
+            }
+        }
+        // The IR is SSA: one defining step per register.
+        let mut def_stage = vec![0usize; plan.slots.len()];
+        for (i, step) in plan.steps.iter().enumerate() {
+            def_stage[step_dst(step)] = stage_of[i];
+        }
+        // Allocate one wire register per cross-stage def.
+        let mut slots = plan.slots.clone();
+        let mut wire_of: BTreeMap<usize, usize> = BTreeMap::new();
+        for (i, step) in plan.steps.iter().enumerate() {
+            for s in step_srcs(step) {
+                if def_stage[s] < stage_of[i] && !wire_of.contains_key(&s) {
+                    slots.push(plan.slots[s]);
+                    wire_of.insert(s, slots.len() - 1);
+                }
+            }
+        }
+        debug_assert_eq!(
+            def_stage[plan.out_slot],
+            n_stages - 1,
+            "the output register is defined by the final step, hence in the last stage"
+        );
+        // Rebuild the step sequence stage by stage: the stage's own
+        // steps with cross-stage reads remapped onto wires, then the
+        // transfers producing this stage's exports.
+        let mut steps = Vec::with_capacity(n + wire_of.len());
+        let mut labels = Vec::with_capacity(n + wire_of.len());
+        let mut stages = Vec::with_capacity(n_stages);
+        for (t, (backend, seam)) in seams.into_iter().enumerate() {
+            let start = steps.len();
+            let mut imports: Vec<usize> = Vec::new();
+            for i in seam {
+                let mut step = plan.steps[i].clone();
+                remap_srcs(&mut step, |s| {
+                    if def_stage[s] < t {
+                        let w = wire_of[&s];
+                        if !imports.contains(&w) {
+                            imports.push(w);
+                        }
+                        w
+                    } else {
+                        s
+                    }
+                });
+                steps.push(step);
+                labels.push(plan.labels[i].clone());
+            }
+            let mut exports: Vec<usize> = Vec::new();
+            for (&s, &w) in &wire_of {
+                if def_stage[s] == t {
+                    steps.push(Step::Transfer { src: s, dst: w });
+                    labels.push(StepKind::Transfer.to_string());
+                    exports.push(w);
+                }
+            }
+            stages.push(StageSpec { backend, range: start..steps.len(), imports, exports });
+        }
+        let staged = StagedPlan {
+            plan: plan.with_steps(slots, steps, labels, plan.out_slot),
+            stages,
+        };
+        if cfg!(debug_assertions) || std::env::var_os("CAPPUCCINO_VERIFY").is_some_and(|v| v == "1")
+        {
+            staged.verify()?;
+        }
+        Ok(staged)
+    }
+
+    /// Number of stages (1 for a uniform schedule).
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The per-stage backends, in execution order.
+    pub fn stage_backends(&self) -> Vec<BackendTarget> {
+        self.stages.iter().map(|s| s.backend).collect()
+    }
+
+    /// The stage table (ranges, imports, exports).
+    pub fn stages(&self) -> &[StageSpec] {
+        &self.stages
+    }
+
+    /// Prove this staged plan sound: stage-cut rules first (every
+    /// cross-stage def crosses through exactly one transfer, no direct
+    /// cross-stage reads, output in the final stage), then the full
+    /// plan verifier over the rewritten step sequence.
+    pub fn verify(&self) -> Result<()> {
+        let ranges: Vec<Range<usize>> = self.stages.iter().map(|s| s.range.clone()).collect();
+        crate::engine::verify::verify_stage_cuts(&self.plan, &ranges)?;
+        self.plan.verify()
+    }
+
+    /// One flat walk of the staged step sequence — transfers included —
+    /// on the native engine. This is the bitwise reference path: no
+    /// backend dispatch, no sleeps, single arena.
+    pub fn run_batch(&mut self, images: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.plan.run_batch(images)
+    }
+
+    /// Run one batch stage-by-stage **sequentially**, each stage on its
+    /// resolved backend executor (mock latency applies). Bitwise
+    /// identical to [`StagedPlan::run_batch`]; this is the baseline the
+    /// pipelined executor's overlap win is measured against.
+    pub fn run_batch_seq(
+        &mut self,
+        images: &[&[f32]],
+        registry: &BackendRegistry,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.plan.validate_batch(images)?;
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        let live = images.len();
+        let stages = &self.stages;
+        let plan = &mut self.plan;
+        for (t, spec) in stages.iter().enumerate() {
+            let ex = registry.executor(spec.backend)?;
+            let imgs: &[&[f32]] = if t == 0 { images } else { &[] };
+            ex.run_stage(plan, spec.range.clone(), imgs, live)?;
+        }
+        let out_len = plan.output_len();
+        let mut rows = Vec::with_capacity(live);
+        for r in 0..live {
+            let mut row = vec![0.0f32; out_len];
+            plan.extract_row_into(r, &mut row);
+            rows.push(row);
+        }
+        Ok(rows)
+    }
+
+    /// Wall-clock milliseconds per stage for one sequential walk of
+    /// `images` — the autotuner's probe: predicted pipeline time is the
+    /// **max** (bottleneck stage), sequential time the sum.
+    pub fn stage_times_ms(
+        &mut self,
+        images: &[&[f32]],
+        registry: &BackendRegistry,
+    ) -> Result<Vec<f64>> {
+        self.plan.validate_batch(images)?;
+        let live = images.len();
+        let stages = &self.stages;
+        let plan = &mut self.plan;
+        let mut times = Vec::with_capacity(stages.len());
+        for (t, spec) in stages.iter().enumerate() {
+            let ex = registry.executor(spec.backend)?;
+            let imgs: &[&[f32]] = if t == 0 { images } else { &[] };
+            let t0 = std::time::Instant::now();
+            ex.run_stage(plan, spec.range.clone(), imgs, live)?;
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        Ok(times)
+    }
+
+    /// Derive a sibling staged plan with a different batch capacity
+    /// (steps and baked weights shared, arena re-sized — exactly
+    /// [`ExecutionPlan::with_capacity`]).
+    pub fn with_capacity(&self, batch: usize) -> StagedPlan {
+        StagedPlan { plan: self.plan.with_capacity(batch), stages: self.stages.clone() }
+    }
+
+    /// Batch capacity of the underlying plan.
+    pub fn capacity(&self) -> usize {
+        self.plan.capacity()
+    }
+
+    /// Expected per-image input length.
+    pub fn input_len(&self) -> usize {
+        self.plan.input_len()
+    }
+
+    /// Logits length per image.
+    pub fn output_len(&self) -> usize {
+        self.plan.output_len()
+    }
+
+    /// Step kinds of the staged sequence, in order — the degenerate
+    /// all-native case must equal the unstaged plan's kinds exactly.
+    pub fn step_kinds(&self) -> Vec<StepKind> {
+        self.plan.step_kinds()
+    }
+
+    /// Test-only corruption hook for the stage-cut mutation suite:
+    /// apply `m` in place, returning `false` when the plan has no site
+    /// it applies to (e.g. a single-stage plan has no transfers).
+    /// Every [`StagedMutation`] leaves the *base* plan rules intact —
+    /// only the `stage-cut` rule may reject it.
+    #[doc(hidden)]
+    pub fn apply_staged_mutation(&mut self, m: StagedMutation) -> bool {
+        let first_transfer =
+            self.plan.steps.iter().position(|s| matches!(s, Step::Transfer { .. }));
+        match m {
+            StagedMutation::DropTransfer => {
+                // A copy is layout-legal between the identically-shaped
+                // pair, but the wire is no longer transfer-written: its
+                // cross-stage readers now read a plain register.
+                let Some(i) = first_transfer else { return false };
+                let Step::Transfer { src, dst } = self.plan.steps[i] else { unreachable!() };
+                self.plan.steps[i] = Step::Copy { src, dst };
+                self.plan.labels[i] = StepKind::Copy.to_string();
+                true
+            }
+            StagedMutation::DoubleTransfer => {
+                // Duplicate the transfer inside its own stage: the wire
+                // is now defined twice, breaking exactly-one-transfer.
+                let Some(i) = first_transfer else { return false };
+                let step = self.plan.steps[i].clone();
+                let label = self.plan.labels[i].clone();
+                self.plan.steps.insert(i + 1, step);
+                self.plan.labels.insert(i + 1, label);
+                for spec in &mut self.stages {
+                    if spec.range.contains(&i) {
+                        spec.range.end += 1;
+                    } else if spec.range.start > i {
+                        spec.range.start += 1;
+                        spec.range.end += 1;
+                    }
+                }
+                true
+            }
+            StagedMutation::LeakCrossStageRead => {
+                // Retarget one consumer's wire read back onto the
+                // original register — a direct cross-stage read, which
+                // def-before-use alone cannot catch.
+                let mut orig_of: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+                for (t, spec) in self.stages.iter().enumerate() {
+                    for i in spec.range.clone() {
+                        if let Step::Transfer { src, dst } = self.plan.steps[i] {
+                            orig_of.insert(dst, (src, t));
+                        }
+                    }
+                }
+                for (t, spec) in self.stages.iter().enumerate() {
+                    for i in spec.range.clone() {
+                        let step = &mut self.plan.steps[i];
+                        let leak = step_srcs(step).into_iter().find_map(|s| {
+                            orig_of
+                                .get(&s)
+                                .filter(|&&(_, pt)| pt < t)
+                                .map(|&(orig, _)| (s, orig))
+                        });
+                        if let Some((w, orig)) = leak {
+                            remap_srcs(step, |s| if s == w { orig } else { s });
+                            return true;
+                        }
+                    }
+                }
+                false
+            }
+        }
+    }
+}
+
+/// Stage-cut-specific plan corruptions — each keeps the base plan
+/// verifier green so the suite proves the `stage-cut` rule itself does
+/// the rejecting. See [`StagedPlan::apply_staged_mutation`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StagedMutation {
+    /// Replace a transfer with a plain copy: the wire loses its
+    /// transfer definition, so its cross-stage readers leak.
+    DropTransfer,
+    /// Duplicate a transfer: the wire is defined by two steps.
+    DoubleTransfer,
+    /// Retarget a consumer's wire read back onto the producing stage's
+    /// original register.
+    LeakCrossStageRead,
+}
+
+impl StagedMutation {
+    /// Every staged mutation, for exhaustive suites.
+    pub const ALL: [StagedMutation; 3] = [
+        StagedMutation::DropTransfer,
+        StagedMutation::DoubleTransfer,
+        StagedMutation::LeakCrossStageRead,
+    ];
+
+    /// Stable name for diagnostics.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StagedMutation::DropTransfer => "drop-transfer",
+            StagedMutation::DoubleTransfer => "double-transfer",
+            StagedMutation::LeakCrossStageRead => "leak-cross-stage-read",
+        }
+    }
+}
+
+/// Remap every register a step reads through `f` (writes untouched).
+fn remap_srcs(step: &mut Step, mut f: impl FnMut(usize) -> usize) {
+    match step {
+        Step::Input { .. } => {}
+        Step::ConvMm { src, .. }
+        | Step::ConvNchw { src, .. }
+        | Step::PoolMm { src, .. }
+        | Step::PoolNchw { src, .. }
+        | Step::Lrn { src, .. }
+        | Step::Gap { src, .. }
+        | Step::Copy { src, .. }
+        | Step::Dense { src, .. }
+        | Step::Softmax { src, .. }
+        | Step::Reorder { src, .. }
+        | Step::Transfer { src, .. } => *src = f(*src),
+        Step::Concat { srcs, .. } => {
+            for s in srcs {
+                *s = f(*s);
+            }
+        }
+    }
+}
+
+/// One batch in flight through the pipeline.
+struct Packet {
+    live: usize,
+    /// Request rows — consumed by the first stage's input prologue.
+    images: Vec<Vec<f32>>,
+    /// Wire payloads riding with the batch: `(wire register, live rows)`.
+    wires: Vec<(usize, Vec<f32>)>,
+    /// Filled by the final stage: one logits row per live image.
+    rows: Vec<Vec<f32>>,
+    /// First stage failure, if any — later stages skip, the error
+    /// surfaces from [`Pipeline::recv`].
+    err: Option<Error>,
+}
+
+/// The pipelined staged executor: one worker thread per stage, bounded
+/// queues between them, batches overlapping across stages. See the
+/// module header for semantics (FIFO results, backpressure on
+/// [`Pipeline::submit`], lossless drop).
+pub struct Pipeline {
+    feed: Option<SyncSender<Packet>>,
+    done: Receiver<Packet>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: usize,
+    input_len: usize,
+    capacity: usize,
+    stage_count: usize,
+}
+
+impl Pipeline {
+    /// Spin up one worker per stage of `staged`, each owning a clone of
+    /// the plan (weights stay `Arc`-shared) and its backend's executor
+    /// from `registry`; inter-stage queues hold at most `queue_depth`
+    /// batches (min 1). Fails fast if any stage's backend has no
+    /// executor (`pjrt`).
+    pub fn new(
+        staged: &StagedPlan,
+        registry: &BackendRegistry,
+        queue_depth: usize,
+    ) -> Result<Pipeline> {
+        let depth = queue_depth.max(1);
+        let n = staged.stages.len();
+        let mut execs = Vec::with_capacity(n);
+        for spec in &staged.stages {
+            execs.push(registry.executor(spec.backend)?);
+        }
+        // Producing stage of each wire, then the carry set per queue:
+        // wires produced at or before stage k and imported after it
+        // must ride the packet leaving stage k.
+        let mut prod: BTreeMap<usize, usize> = BTreeMap::new();
+        for (t, spec) in staged.stages.iter().enumerate() {
+            for &w in &spec.exports {
+                prod.insert(w, t);
+            }
+        }
+        let mut carry: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (k, c) in carry.iter_mut().enumerate() {
+            for spec in &staged.stages[k + 1..] {
+                for &w in &spec.imports {
+                    if prod.get(&w).is_some_and(|&p| p <= k) && !c.contains(&w) {
+                        c.push(w);
+                    }
+                }
+            }
+        }
+        let out_len = staged.plan.output_len();
+        let (feed_tx, mut prev_rx) = mpsc::sync_channel::<Packet>(depth);
+        let mut workers = Vec::with_capacity(n);
+        for (k, ex) in execs.into_iter().enumerate() {
+            let (tx, rx) = mpsc::sync_channel::<Packet>(depth);
+            let rx_in = std::mem::replace(&mut prev_rx, rx);
+            let mut plan = staged.plan.clone();
+            let spec = staged.stages[k].clone();
+            let carry_out = carry[k].clone();
+            let first = k == 0;
+            let last = k + 1 == n;
+            let worker = std::thread::Builder::new()
+                .name(format!("pipe-stage-{k}"))
+                .spawn(move || {
+                    stage_worker(rx_in, tx, &mut plan, &ex, &spec, &carry_out, first, last, out_len)
+                })
+                .map_err(|e| Error::Serve(format!("failed to spawn pipeline stage {k}: {e}")))?;
+            workers.push(worker);
+        }
+        Ok(Pipeline {
+            feed: Some(feed_tx),
+            done: prev_rx,
+            workers,
+            in_flight: 0,
+            input_len: staged.plan.input_len(),
+            capacity: staged.plan.capacity(),
+            stage_count: n,
+        })
+    }
+
+    /// Feed one batch into the pipeline. Blocks when the first queue is
+    /// full (backpressure); results come back in submission order from
+    /// [`Pipeline::recv`].
+    pub fn submit(&mut self, images: Vec<Vec<f32>>) -> Result<()> {
+        if images.is_empty() {
+            return Err(Error::Invalid("cannot submit an empty batch to the pipeline".into()));
+        }
+        if images.len() > self.capacity {
+            return Err(Error::Invalid(format!(
+                "batch of {} exceeds pipeline capacity {}",
+                images.len(),
+                self.capacity
+            )));
+        }
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != self.input_len {
+                return Err(Error::Shape(format!(
+                    "batch row {i}: input len {} vs expected {}",
+                    img.len(),
+                    self.input_len
+                )));
+            }
+        }
+        let pkt = Packet {
+            live: images.len(),
+            images,
+            wires: Vec::new(),
+            rows: Vec::new(),
+            err: None,
+        };
+        let feed = self.feed.as_ref().expect("pipeline feed open until drop");
+        feed.send(pkt).map_err(|_| Error::Serve("pipeline stage workers exited".into()))?;
+        self.in_flight += 1;
+        Ok(())
+    }
+
+    /// Receive the oldest in-flight batch's logits rows (FIFO — stages
+    /// are single workers over order-preserving queues). A stage
+    /// failure for that batch surfaces here; later batches are
+    /// unaffected.
+    pub fn recv(&mut self) -> Result<Vec<Vec<f32>>> {
+        if self.in_flight == 0 {
+            return Err(Error::Invalid("pipeline has no in-flight batch to receive".into()));
+        }
+        let pkt = self
+            .done
+            .recv()
+            .map_err(|_| Error::Serve("pipeline stage workers exited".into()))?;
+        self.in_flight -= 1;
+        match pkt.err {
+            Some(e) => Err(e),
+            None => Ok(pkt.rows),
+        }
+    }
+
+    /// Synchronous convenience: submit one batch and wait for its rows.
+    /// No overlap — callers wanting pipelining keep several batches in
+    /// flight via [`Pipeline::submit`]/[`Pipeline::recv`].
+    pub fn infer_batch(&mut self, images: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.submit(images.iter().map(|r| r.to_vec()).collect())?;
+        self.recv()
+    }
+
+    /// Batches currently inside the pipeline.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Number of pipeline stages.
+    pub fn stage_count(&self) -> usize {
+        self.stage_count
+    }
+
+    /// Batch capacity per submitted batch.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        // Lossless shutdown: complete every accepted batch, then close
+        // the feed so the workers drain their queues and exit.
+        while self.in_flight > 0 {
+            if self.done.recv().is_err() {
+                break;
+            }
+            self.in_flight -= 1;
+        }
+        self.feed.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One stage's worker loop: receive a batch, load its imported wires
+/// into the arena, run the stage range on this stage's executor, then
+/// forward the packet — export wires copied out for downstream stages,
+/// or logits rows extracted if this is the final stage. A failed batch
+/// is passed through untouched so the error reaches [`Pipeline::recv`]
+/// in order.
+#[allow(clippy::too_many_arguments)]
+fn stage_worker(
+    rx: Receiver<Packet>,
+    tx: SyncSender<Packet>,
+    plan: &mut ExecutionPlan,
+    ex: &StageExecutor,
+    spec: &StageSpec,
+    carry_out: &[usize],
+    first: bool,
+    last: bool,
+    out_len: usize,
+) {
+    while let Ok(mut pkt) = rx.recv() {
+        if pkt.err.is_none() {
+            for (slot, buf) in &pkt.wires {
+                if spec.imports.contains(slot) {
+                    plan.arena.bufs[*slot][..buf.len()].copy_from_slice(buf);
+                }
+            }
+            let result = {
+                let img_refs: Vec<&[f32]> = if first {
+                    pkt.images.iter().map(|v| v.as_slice()).collect()
+                } else {
+                    Vec::new()
+                };
+                ex.run_stage(plan, spec.range.clone(), &img_refs, pkt.live)
+            };
+            match result {
+                Ok(()) => {
+                    pkt.images.clear();
+                    if last {
+                        let mut rows = Vec::with_capacity(pkt.live);
+                        for r in 0..pkt.live {
+                            let mut row = vec![0.0f32; out_len];
+                            plan.extract_row_into(r, &mut row);
+                            rows.push(row);
+                        }
+                        pkt.rows = rows;
+                        pkt.wires.clear();
+                    } else {
+                        let mut fwd = Vec::with_capacity(carry_out.len());
+                        for &w in carry_out {
+                            if spec.exports.contains(&w) {
+                                let len = pkt.live * plan.slots[w].len();
+                                fwd.push((w, plan.arena.bufs[w][..len].to_vec()));
+                            } else if let Some(pos) =
+                                pkt.wires.iter().position(|&(s, _)| s == w)
+                            {
+                                fwd.push(pkt.wires.swap_remove(pos));
+                            }
+                        }
+                        pkt.wires = fwd;
+                    }
+                }
+                Err(e) => pkt.err = Some(e),
+            }
+        }
+        if tx.send(pkt).is_err() {
+            break;
+        }
+    }
+    // tx drops here: the downstream worker drains its queue, then exits.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::verify::VerifyRule;
+    use crate::engine::{
+        ArithMode, EngineParams, ModeAssignment, Parallelism, PlanBuilder, PoolSettings, Schedule,
+    };
+    use crate::model::zoo;
+    use crate::util::rng::Rng;
+
+    fn staged_schedule(net: &crate::model::Network, mock_layers: &[&str]) -> Schedule {
+        let mut sched = Schedule::from_uniform(
+            net,
+            4,
+            &ModeAssignment::uniform(ArithMode::Imprecise),
+            Parallelism::Olp,
+            true,
+            None,
+            PoolSettings { threads: 2, affinity: false, cores: None },
+        )
+        .unwrap();
+        for (name, ls) in sched.layers.iter_mut() {
+            if mock_layers.contains(&name.as_str()) {
+                ls.backend = BackendTarget::Mock;
+            }
+        }
+        sched
+    }
+
+    #[test]
+    fn uniform_schedule_is_single_stage_with_identical_steps() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 3, 4).unwrap();
+        let plan = PlanBuilder::new(&net, &params).build().unwrap();
+        let staged = StagedPlan::from_plan(&plan).unwrap();
+        assert_eq!(staged.stage_count(), 1);
+        assert_eq!(staged.step_kinds(), plan.step_kinds());
+        assert!(staged.stages()[0].imports.is_empty());
+        assert!(staged.stages()[0].exports.is_empty());
+    }
+
+    #[test]
+    fn split_plan_inserts_transfers_and_stays_bitwise() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 3, 4).unwrap();
+        let sched = staged_schedule(&net, &["conv2"]);
+        let mut uniform = PlanBuilder::new(&net, &params).build().unwrap();
+        let plan = PlanBuilder::new(&net, &params).schedule(sched).build().unwrap();
+        let mut staged = StagedPlan::from_plan(&plan).unwrap();
+        assert!(staged.stage_count() >= 2, "conv2 on mock must cut the plan");
+        assert!(staged.step_kinds().contains(&StepKind::Transfer));
+        staged.verify().unwrap();
+        let img = Rng::new(11).normal_vec(uniform.input_len());
+        let want = uniform.run(&img).unwrap();
+        let got = staged.run_batch(&[&img[..]]).unwrap();
+        assert_eq!(got[0], want, "staged flat walk must be bitwise identical");
+        let reg = BackendRegistry::default();
+        let got_seq = staged.run_batch_seq(&[&img[..]], &reg).unwrap();
+        assert_eq!(got_seq[0], want, "sequential staged walk must be bitwise identical");
+        let mut pipe = Pipeline::new(&staged, &reg, 2).unwrap();
+        let got_pipe = pipe.infer_batch(&[&img[..]]).unwrap();
+        assert_eq!(got_pipe[0], want, "pipelined walk must be bitwise identical");
+    }
+
+    #[test]
+    fn staged_mutations_reject_on_stage_cut_rule_only() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 3, 4).unwrap();
+        let sched = staged_schedule(&net, &["conv2"]);
+        let plan = PlanBuilder::new(&net, &params).schedule(sched).build().unwrap();
+        for m in StagedMutation::ALL {
+            let mut staged = StagedPlan::from_plan(&plan).unwrap();
+            assert!(staged.apply_staged_mutation(m), "mutation {} must apply", m.as_str());
+            let err = staged.verify().expect_err("mutated staged plan must be rejected");
+            match err {
+                Error::Verify { rule, .. } => assert_eq!(
+                    rule,
+                    VerifyRule::StageCut,
+                    "mutation {} must trip the stage-cut rule",
+                    m.as_str()
+                ),
+                other => panic!("expected a verify error, got {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_overlaps_and_preserves_fifo_order() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 3, 4).unwrap();
+        let sched = staged_schedule(&net, &["conv2"]);
+        let plan =
+            PlanBuilder::new(&net, &params).schedule(sched).batch(2).build().unwrap();
+        let mut staged = StagedPlan::from_plan(&plan).unwrap();
+        let reg = BackendRegistry::default();
+        let imgs: Vec<Vec<f32>> =
+            (0..4).map(|i| Rng::new(100 + i).normal_vec(staged.input_len())).collect();
+        let mut want = Vec::new();
+        for img in &imgs {
+            want.push(staged.run_batch(&[&img[..]]).unwrap().remove(0));
+        }
+        let mut pipe = Pipeline::new(&staged, &reg, 2).unwrap();
+        for img in &imgs {
+            pipe.submit(vec![img.clone()]).unwrap();
+        }
+        assert_eq!(pipe.in_flight(), 4);
+        for w in &want {
+            let rows = pipe.recv().unwrap();
+            assert_eq!(&rows[0], w, "pipeline must return batches in submission order");
+        }
+        assert_eq!(pipe.in_flight(), 0);
+    }
+
+    #[test]
+    fn pipeline_rejects_bad_batches_and_drains_on_drop() {
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 3, 4).unwrap();
+        let sched = staged_schedule(&net, &["conv2"]);
+        let plan = PlanBuilder::new(&net, &params).schedule(sched).build().unwrap();
+        let staged = StagedPlan::from_plan(&plan).unwrap();
+        let reg = BackendRegistry::default();
+        let mut pipe = Pipeline::new(&staged, &reg, 1).unwrap();
+        assert!(matches!(pipe.submit(Vec::new()), Err(Error::Invalid(_))));
+        assert!(matches!(pipe.submit(vec![vec![0.0; 3]]), Err(Error::Shape(_))));
+        assert!(matches!(pipe.recv(), Err(Error::Invalid(_))));
+        // Leave a batch in flight: drop must complete it, not lose it.
+        let img = Rng::new(5).normal_vec(staged.input_len());
+        pipe.submit(vec![img]).unwrap();
+        drop(pipe);
+    }
+}

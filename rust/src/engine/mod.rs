@@ -38,9 +38,13 @@
 //! into one, [`plan::PlanBuilder::schedule`] accepts a heterogeneous
 //! one directly, and schedules serialize to the `schedule.json`
 //! artifact that [`crate::autotune`] emits and `serve --schedule`
-//! consumes.
+//! consumes. A schedule may also place layers on different *backends*
+//! ([`schedule::BackendTarget`]): [`hetero`] partitions such a plan
+//! into per-backend stages with explicit transfer wires and runs the
+//! stages as an overlapping pipeline.
 
 pub mod conv;
+pub mod hetero;
 pub mod mode;
 pub mod network;
 pub mod ops;
@@ -65,8 +69,9 @@ pub use parallel::{
     chunk_ranges_weighted, global_pool, pool_threads_spawned, with_pool, ClusterInfo,
     Parallelism, ThreadPool,
 };
+pub use hetero::{Pipeline, StagedMutation, StagedPlan};
 pub use plan::{ExecutionPlan, PlanBuilder, StepKind};
-pub use schedule::{LayerSchedule, PoolSettings, Schedule};
+pub use schedule::{BackendTarget, LayerSchedule, PoolSettings, Schedule};
 pub use verify::{verify_schedule, VerifyRule};
 pub use tensor::{MapTensor, Tensor};
 pub use topology::{pin_current_thread, CoreCluster, CoreSet, Topology};

@@ -171,6 +171,44 @@
 //! suites) — the verifier proves memory/layout safety, not numerics.
 //! Violations surface as typed [`Error::Verify`] naming the step,
 //! layer, and rule.
+//!
+//! ## Staged execution
+//!
+//! A schedule that places layers on more than one backend
+//! ([`crate::engine::schedule::Schedule::is_staged`]) still compiles to
+//! **one** flat plan here — staging is a view over it, built by
+//! [`crate::engine::hetero::StagedPlan::from_plan`]:
+//!
+//! * **Stages** are contiguous step ranges cut at backend boundaries.
+//!   Each stage runs end to end on one backend's executor
+//!   ([`crate::runtime::backends::StageExecutor`]); structural steps
+//!   (input prologue, reorders, pools) inherit the stage of the
+//!   parameterised layer they follow.
+//! * **Transfers** ([`Step::Transfer`]) are the only cross-stage data
+//!   path: at each cut, every register a later stage reads is copied
+//!   into a fresh *wire* register by a `Transfer` appended to the
+//!   producing stage, and all downstream reads are remapped to the
+//!   wire. Layout changes at a cut are ordinary [`Step::Reorder`] steps
+//!   lowered *before* the transfer, so a `Transfer` is always a
+//!   same-shape row copy — bitwise invisible. The stage-cut rules are
+//!   proved statically by
+//!   [`crate::engine::verify::verify_stage_cuts`]: every cross-stage
+//!   def crosses through exactly one Transfer, and no stage reads
+//!   another stage's arena registers directly.
+//! * **Queues**: the pipelined executor
+//!   ([`crate::engine::hetero::Pipeline`]) gives each stage a worker
+//!   thread with its own arena clone, linked by bounded channels that
+//!   carry only the wire registers' live rows. Submitting past the
+//!   queue bound **backpressures** (blocks the producer); consecutive
+//!   batches overlap across stages (batch *i* on stage 2 while batch
+//!   *i + 1* runs stage 1) while results return strictly in submission
+//!   order. Shutdown is **lossless**: dropping the pipeline closes the
+//!   feed, drains every in-flight batch through all stages, then joins
+//!   the workers — an accepted batch is never discarded.
+//!
+//! Per-row numerics are stage-count independent — a staged walk of the
+//! same plan is bitwise identical to the single-backend walk
+//! (`rust/tests/hetero.rs` holds that parity to the oracles).
 
 use std::ops::Range;
 use std::sync::Arc;
@@ -217,6 +255,7 @@ pub enum StepKind {
     Dense,
     Softmax,
     Reorder,
+    Transfer,
 }
 
 impl StepKind {
@@ -235,6 +274,7 @@ impl StepKind {
             StepKind::Dense => "dense",
             StepKind::Softmax => "softmax",
             StepKind::Reorder => "reorder",
+            StepKind::Transfer => "transfer",
         }
     }
 }
@@ -358,6 +398,13 @@ pub(crate) enum Step {
     /// row-major NCHW) at a heterogeneous-parallelism boundary. A pure
     /// permutation: bitwise invisible to every surrounding kernel.
     Reorder { src: usize, dst: usize },
+    /// Cross-stage buffer handoff at a backend boundary (staged plans
+    /// only — see the *Staged execution* section above): copies the
+    /// live rows of `src` into the wire register `dst`, which is the
+    /// only register a later stage may read. Shapes are identical by
+    /// construction (layout changes at a cut are separate [`Step::Reorder`]
+    /// steps), so a transfer is bitwise invisible.
+    Transfer { src: usize, dst: usize },
 }
 
 impl Step {
@@ -383,6 +430,7 @@ impl Step {
             Step::Dense { .. } => StepKind::Dense,
             Step::Softmax { .. } => StepKind::Softmax,
             Step::Reorder { .. } => StepKind::Reorder,
+            Step::Transfer { .. } => StepKind::Transfer,
         }
     }
 }
@@ -406,7 +454,7 @@ pub(crate) struct Arena {
 }
 
 impl Arena {
-    fn sized(
+    pub(crate) fn sized(
         slots: &[SlotShape],
         scratch_row: usize,
         qscratch_row: usize,
@@ -857,7 +905,52 @@ impl ExecutionPlan {
         plan
     }
 
-    fn validate_batch(&self, images: &[&[f32]]) -> Result<()> {
+    /// Derive a sibling plan with a **rewritten step sequence** — the
+    /// staged-plan partitioner's constructor
+    /// ([`crate::engine::hetero::StagedPlan::from_plan`] appends
+    /// [`Step::Transfer`] wires and remaps reads). Baked weights stay
+    /// shared (the steps carry their `Arc`s); the arena is re-sized for
+    /// the (possibly grown) register file; counters start fresh. The
+    /// caller is responsible for re-verifying — the partitioner does.
+    pub(crate) fn with_steps(
+        &self,
+        slots: Vec<SlotShape>,
+        steps: Vec<Step>,
+        labels: Vec<String>,
+        out_slot: usize,
+    ) -> ExecutionPlan {
+        debug_assert_eq!(steps.len(), labels.len(), "one label per step");
+        let arena = Arena::sized(
+            &slots,
+            self.scratch_row,
+            self.qscratch_row,
+            self.reduce_len,
+            self.threads,
+            self.batch,
+            self.thread_scratch_row,
+        );
+        ExecutionPlan {
+            u: self.u,
+            threads: self.threads,
+            batch: self.batch,
+            sched: self.sched.clone(),
+            input_shape: self.input_shape,
+            slots,
+            steps,
+            labels,
+            out_slot,
+            arena,
+            scratch_row: self.scratch_row,
+            qscratch_row: self.qscratch_row,
+            reduce_len: self.reduce_len,
+            thread_scratch_row: self.thread_scratch_row,
+            baked_param_bytes: self.baked_param_bytes,
+            runs: 0,
+            alloc: AllocCounter::new(),
+        }
+    }
+
+    pub(crate) fn validate_batch(&self, images: &[&[f32]]) -> Result<()> {
         if images.len() > self.batch {
             return Err(Error::Invalid(format!(
                 "batch of {} exceeds plan capacity {}",
@@ -889,6 +982,25 @@ impl ExecutionPlan {
     /// non-fault path is byte-for-byte the old walk (the injection
     /// check is one relaxed atomic load when chaos is off).
     fn exec(&mut self, images: &[&[f32]]) -> Result<()> {
+        self.exec_range(images, images.len(), 0..self.steps.len())?;
+        self.runs += images.len() as u64;
+        Ok(())
+    }
+
+    /// Execute the steps in `range` (absolute indices) over `live` batch
+    /// rows — the stage-granular walk staged execution is built from
+    /// ([`crate::engine::hetero`]). `images` feeds [`Step::Input`]
+    /// prologue steps only; a later stage's range has none and passes
+    /// `&[]` with the batch's live count. Fault-injection and
+    /// panic-containment semantics are per step, exactly as in a full
+    /// walk; the run counter is **not** advanced (a batch counts once,
+    /// in [`ExecutionPlan::run_batch`], however many stages walk it).
+    pub(crate) fn exec_range(
+        &mut self,
+        images: &[&[f32]],
+        live: usize,
+        range: Range<usize>,
+    ) -> Result<()> {
         // Drain any stale flag so step `i` is never blamed for an
         // earlier walk's contained panic.
         parallel::take_scope_panic();
@@ -896,7 +1008,8 @@ impl ExecutionPlan {
         let arena = &mut self.arena;
         let (threads, scratch_row, qscratch_row) =
             (self.threads, self.scratch_row, self.qscratch_row);
-        for (i, step) in self.steps.iter().enumerate() {
+        for i in range {
+            let step = &self.steps[i];
             let injected = crate::faults::check(step.kind().as_str());
             if injected == Some(crate::faults::FaultKind::Err) {
                 return Err(Error::Serve(format!(
@@ -908,20 +1021,21 @@ impl ExecutionPlan {
                 if injected == Some(crate::faults::FaultKind::Panic) {
                     panic!("injected fault at plan step {i}");
                 }
-                exec_step(step, slots, &mut *arena, images, threads, scratch_row, qscratch_row);
+                exec_step(
+                    step, slots, &mut *arena, images, live, threads, scratch_row, qscratch_row,
+                );
             }))
             .is_err();
             if caught || parallel::take_scope_panic() {
                 return Err(Error::TaskPanicked { step: i, layer: self.labels[i].clone() });
             }
         }
-        self.runs += images.len() as u64;
         Ok(())
     }
 
     /// Copy live row `row` of the output register into `out`
     /// (conventional NCHW order, padding lanes dropped).
-    fn extract_row_into(&self, row: usize, out: &mut [f32]) {
+    pub(crate) fn extract_row_into(&self, row: usize, out: &mut [f32]) {
         let slot_len = self.slots[self.out_slot].len();
         let data = &self.arena.bufs[self.out_slot][row * slot_len..(row + 1) * slot_len];
         match self.slots[self.out_slot] {
@@ -1030,6 +1144,16 @@ impl ExecutionPlan {
     /// Lowered step count (prologue included).
     pub fn step_count(&self) -> usize {
         self.steps.len()
+    }
+
+    /// The lowered step-kind sequence, in walk order — the observable
+    /// shape of the compiled program, exposed so tests can assert
+    /// step-sequence equality (e.g. a degenerate single-stage plan is
+    /// exactly the non-staged lowering). Kinds, not steps: weights and
+    /// register indices stay internal.
+    #[doc(hidden)]
+    pub fn step_kinds(&self) -> Vec<StepKind> {
+        self.steps.iter().map(|s| s.kind()).collect()
     }
 
     /// Resident arena bytes (activation registers + scratch + reduction
@@ -1634,22 +1758,25 @@ fn pair_mut(bufs: &mut [Vec<f32>], read: usize, write: usize) -> (&[f32], &mut [
     }
 }
 
-/// Execute one step over `images.len()` live batch rows. Registers hold
-/// `B` rows at a fixed per-row stride (`slots[i].len()`); scratch rows
-/// are `scratch_row` apart. Conv (map-major) and dense lower the batch
-/// loop into a single parallel region; the remaining (memory-bound)
-/// steps walk rows sequentially with per-row kernels, so numerics never
-/// depend on the batch size.
+/// Execute one step over `live` batch rows. Registers hold `B` rows at
+/// a fixed per-row stride (`slots[i].len()`); scratch rows are
+/// `scratch_row` apart. Conv (map-major) and dense lower the batch loop
+/// into a single parallel region; the remaining (memory-bound) steps
+/// walk rows sequentially with per-row kernels, so numerics never
+/// depend on the batch size. `images` feeds [`Step::Input`] only — a
+/// staged walk's later stages pass `&[]` (their ranges hold no input
+/// prologue) with the batch's live count.
+#[allow(clippy::too_many_arguments)]
 fn exec_step(
     step: &Step,
     slots: &[SlotShape],
     arena: &mut Arena,
     images: &[&[f32]],
+    live: usize,
     threads: usize,
     scratch_row: usize,
     qscratch_row: usize,
 ) {
-    let live = images.len();
     match step {
         Step::Input { dst } => {
             let (c, h, w, u) = maps_of(slots[*dst]);
@@ -2128,6 +2255,14 @@ fn exec_step(
                     layout::mapmajor_to_nchw_into(s_row, c, h, wd, su, d_row);
                 }
             }
+        }
+        Step::Transfer { src, dst } => {
+            // Same-shape handoff into a wire register (layout changes
+            // at a cut are separate Reorder steps). Only live rows
+            // cross: a partial batch never forwards padded lanes.
+            let len = slots[*src].len();
+            let (x, out) = pair_mut(&mut arena.bufs, *src, *dst);
+            out[..live * len].copy_from_slice(&x[..live * len]);
         }
     }
 }

@@ -41,6 +41,29 @@
 //! `vector_width = 0` with their recorded f32 mode, so existing tuned
 //! artifacts (including CI's `tune-smoke` upload) keep loading
 //! unchanged. [`Schedule::to_json`] always emits `vector_width`.
+//!
+//! ## Migration: per-layer backends (PR 10)
+//!
+//! Placement now extends past "which core cluster" to **which
+//! backend**: [`LayerSchedule::backend`] names the execution substrate
+//! ([`BackendTarget::Native`], [`BackendTarget::Pjrt`],
+//! [`BackendTarget::Mock`]) each layer runs on. A schedule whose layers
+//! span more than one backend ([`Schedule::is_staged`]) compiles into a
+//! staged pipeline ([`crate::engine::hetero`]): the flat step sequence
+//! is cut at backend boundaries and explicit `Transfer` steps hand
+//! buffers across each cut. The field serializes as `"backend"` and is
+//! optional in the artifact — pre-PR-10 files parse as all-`Native`
+//! and compile to exactly the non-staged plan.
+//!
+//! ## Strict parsing
+//!
+//! Historically [`Schedule::from_json`] silently ignored unknown keys,
+//! so a typo'd field (say `"backned"` for `"backend"`) parsed cleanly
+//! and quietly did nothing. Unknown keys at the top level, in `pool`,
+//! in `tiling`, and per layer entry are now *warned about* on the
+//! lenient path (`from_json`, stderr) and **rejected** with
+//! [`Error::Config`] on the strict path ([`Schedule::from_json_strict`]
+//! / [`Schedule::load_strict`], used by `cappuccino check --strict`).
 
 use std::collections::BTreeMap;
 
@@ -61,6 +84,57 @@ use crate::util::json::Json;
 const MAX_U: usize = 64;
 const MAX_POOL_THREADS: usize = 1024;
 const MAX_TILE: usize = 1 << 20;
+
+/// Execution substrate a layer is placed on — the backend dimension of
+/// per-layer placement. A schedule mixing targets compiles into a
+/// staged pipeline ([`crate::engine::hetero`]); a uniform schedule
+/// compiles to exactly the single-backend plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BackendTarget {
+    /// The in-process native CPU engine (the default).
+    Native,
+    /// The PJRT/XLA runtime ([`crate::runtime`]); a typed
+    /// [`Error::Xla`](crate::util::error::Error::Xla) unless the `pjrt`
+    /// feature is enabled with the vendored `xla` crate patched in.
+    Pjrt,
+    /// Deterministic in-process mock accelerator: bitwise-identical
+    /// math via the native plan executor plus configurable per-layer
+    /// latency ([`crate::runtime::backends::MockLatency`]) — the
+    /// hardware-free test substrate for partitioning and pipelining.
+    Mock,
+}
+
+impl BackendTarget {
+    /// Stable wire name — the `"backend"` value in `schedule.json`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendTarget::Native => "native",
+            BackendTarget::Pjrt => "pjrt",
+            BackendTarget::Mock => "mock",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendTarget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for BackendTarget {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<BackendTarget> {
+        match s {
+            "native" => Ok(BackendTarget::Native),
+            "pjrt" => Ok(BackendTarget::Pjrt),
+            "mock" => Ok(BackendTarget::Mock),
+            other => Err(Error::parse(
+                "backend",
+                format!("unknown backend {other:?} (want native|pjrt|mock)"),
+            )),
+        }
+    }
+}
 
 /// The tuning surface of one parameterised (conv/dense) layer.
 ///
@@ -92,6 +166,13 @@ pub struct LayerSchedule {
     /// f32 kernels are bitwise identical at every setting, so this knob
     /// is pure speed — which is why the autotuner searches it.
     pub vector_width: usize,
+    /// Execution substrate this layer is placed on. Mixing targets
+    /// makes the schedule *staged* ([`Schedule::is_staged`]): the plan
+    /// partitioner cuts the step sequence at backend boundaries and the
+    /// staged pipeline runs each cut on its backend's worker
+    /// ([`crate::engine::hetero`]). Bitwise invisible for `Native` and
+    /// `Mock` (the mock runs the native kernels plus injected latency).
+    pub backend: BackendTarget,
 }
 
 impl Default for LayerSchedule {
@@ -103,6 +184,7 @@ impl Default for LayerSchedule {
             tiling: None,
             placement: false,
             vector_width: 0,
+            backend: BackendTarget::Native,
         }
     }
 }
@@ -200,6 +282,7 @@ impl Schedule {
                     tiling,
                     placement: pool.affinity,
                     vector_width: 0,
+                    backend: BackendTarget::Native,
                 };
                 (n, ls)
             })
@@ -221,6 +304,25 @@ impl Schedule {
     pub(crate) fn all_rowmajor(&self) -> bool {
         !self.layers.is_empty()
             && self.layers.values().all(|l| l.parallelism != Parallelism::Olp)
+    }
+
+    /// Does this schedule place layers on more than one backend? Staged
+    /// schedules compile into a partitioned pipeline
+    /// ([`crate::engine::hetero::StagedPlan`]); uniform ones compile to
+    /// exactly the single-backend plan.
+    pub fn is_staged(&self) -> bool {
+        let mut targets = self.layers.values().map(|l| l.backend);
+        match targets.next() {
+            Some(first) => targets.any(|b| b != first),
+            None => false,
+        }
+    }
+
+    /// The backend a layer is placed on (`Native` for layers the
+    /// schedule does not name — structural steps inherit their
+    /// surrounding stage).
+    pub fn backend_of(&self, layer: &str) -> BackendTarget {
+        self.layers.get(layer).map(|l| l.backend).unwrap_or(BackendTarget::Native)
     }
 
     /// Validate the schedule against the network and parameter width it
@@ -296,6 +398,7 @@ impl Schedule {
                     ("tiling", tiling),
                     ("placement", Json::Bool(ls.placement)),
                     ("vector_width", Json::num(ls.vector_width as f64)),
+                    ("backend", Json::str(ls.backend.as_str())),
                 ])
             })
             .collect();
@@ -314,14 +417,49 @@ impl Schedule {
         ])
     }
 
-    /// Parse a `schedule.json` document. Beyond shape errors, every
-    /// numeric field is bounds-checked here: `as_usize` accepts any
-    /// non-negative integral double, so a corrupt or hand-edited
-    /// artifact could otherwise smuggle a 2^50 thread count or tile
-    /// size straight into plan compilation and die as an allocation
-    /// abort instead of a typed [`Error::Config`].
+    /// Parse a `schedule.json` document (lenient: unknown keys warn on
+    /// stderr). Beyond shape errors, every numeric field is
+    /// bounds-checked here: `as_usize` accepts any non-negative
+    /// integral double, so a corrupt or hand-edited artifact could
+    /// otherwise smuggle a 2^50 thread count or tile size straight into
+    /// plan compilation and die as an allocation abort instead of a
+    /// typed [`Error::Config`].
     pub fn from_json(json: &Json) -> Result<Schedule> {
+        Schedule::from_json_with(json, false)
+    }
+
+    /// Strict-parse a `schedule.json` document: any unknown key — at
+    /// the top level, in `pool`, in `tiling`, or in a layer entry — is
+    /// rejected with [`Error::Config`] instead of warned about, so a
+    /// typo'd field (`"backned"` for `"backend"`) can never silently
+    /// no-op.
+    pub fn from_json_strict(json: &Json) -> Result<Schedule> {
+        Schedule::from_json_with(json, true)
+    }
+
+    /// Unknown-key sweep shared by the lenient and strict parse paths.
+    /// Lenient = warn once per key on stderr (existing artifacts keep
+    /// loading); strict = typed rejection.
+    fn check_keys(json: &Json, known: &[&str], ctx: &str, strict: bool) -> Result<()> {
+        for key in json.as_obj()?.keys() {
+            if !known.contains(&key.as_str()) {
+                let hint = format!(
+                    "schedule artifact: unknown key {key:?} in {ctx} (known keys: {})",
+                    known.join(", ")
+                );
+                if strict {
+                    return Err(Error::Config(format!("{hint} — strict parse rejects it")));
+                }
+                eprintln!("WARNING: {hint} — ignored (use strict parsing to reject)");
+            }
+        }
+        Ok(())
+    }
+
+    fn from_json_with(json: &Json, strict: bool) -> Result<Schedule> {
+        Schedule::check_keys(json, &["net", "u", "pool", "layers"], "the top level", strict)?;
         let pool_json = json.get("pool")?;
+        Schedule::check_keys(pool_json, &["threads", "affinity", "cores"], "pool", strict)?;
         let cores = match pool_json.get("cores")? {
             Json::Null => None,
             v => {
@@ -351,10 +489,26 @@ impl Schedule {
         };
         let mut layers = BTreeMap::new();
         for l in json.get("layers")?.as_arr()? {
+            Schedule::check_keys(
+                l,
+                &[
+                    "layer",
+                    "parallelism",
+                    "mode",
+                    "packing",
+                    "tiling",
+                    "placement",
+                    "vector_width",
+                    "backend",
+                ],
+                "a layer entry",
+                strict,
+            )?;
             let name = l.get("layer")?.as_str()?.to_string();
             let tiling = match l.get("tiling")? {
                 Json::Null => None,
                 t => {
+                    Schedule::check_keys(t, &["tm", "th"], "tiling", strict)?;
                     let (tm, th) = (t.get("tm")?.as_usize()?, t.get("th")?.as_usize()?);
                     if tm == 0 || th == 0 || tm > MAX_TILE || th > MAX_TILE {
                         return Err(Error::Config(format!(
@@ -378,6 +532,12 @@ impl Schedule {
                     "schedule artifact: vector_width must be 0, 1, 4, or 8 — got {vector_width}"
                 )));
             }
+            // `backend` arrived in PR 10; optional so pre-PR-10
+            // artifacts keep loading as all-Native (non-staged).
+            let backend = match l.opt("backend") {
+                Some(v) => v.as_str()?.parse()?,
+                None => BackendTarget::Native,
+            };
             let ls = LayerSchedule {
                 parallelism: l.get("parallelism")?.as_str()?.parse()?,
                 mode: l.get("mode")?.as_str()?.parse()?,
@@ -385,6 +545,7 @@ impl Schedule {
                 tiling,
                 placement: l.get("placement")?.as_bool()?,
                 vector_width,
+                backend,
             };
             if layers.insert(name.clone(), ls).is_some() {
                 return Err(Error::Config(format!("schedule lists layer {name:?} twice")));
@@ -426,6 +587,14 @@ impl Schedule {
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Schedule> {
         let text = std::fs::read_to_string(path)?;
         Schedule::from_json(&Json::parse(&text)?)
+    }
+
+    /// Load an artifact with strict parsing ([`Schedule::from_json_strict`]):
+    /// unknown keys are a typed [`Error::Config`]. Used by
+    /// `cappuccino check --strict`.
+    pub fn load_strict(path: impl AsRef<std::path::Path>) -> Result<Schedule> {
+        let text = std::fs::read_to_string(path)?;
+        Schedule::from_json_strict(&Json::parse(&text)?)
     }
 }
 
@@ -486,10 +655,69 @@ mod tests {
         let s = Schedule::from_json(&Json::parse(old).unwrap()).unwrap();
         assert!(s.layers.values().all(|l| l.vector_width == 0));
         assert_eq!(s.layers["conv2"].mode, ArithMode::Imprecise);
+        // Pre-PR-10 artifacts carry no `backend` key: all-Native,
+        // non-staged.
+        assert!(s.layers.values().all(|l| l.backend == BackendTarget::Native));
+        assert!(!s.is_staged());
         assert!(s.validate_for(&zoo::tinynet(), 4).is_ok());
         // And the upgraded artifact round-trips through the new format.
         let back = Schedule::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back, s);
+        // Strict parsing accepts it too — old artifacts have no unknown
+        // keys, only missing optional ones.
+        assert!(Schedule::from_json_strict(&Json::parse(old).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn backend_field_round_trips_and_staging_detected() {
+        let mut s = sample();
+        assert!(!s.is_staged(), "uniform-backend sample must not be staged");
+        s.layers.get_mut("conv2").unwrap().backend = BackendTarget::Mock;
+        assert!(s.is_staged());
+        assert_eq!(s.backend_of("conv2"), BackendTarget::Mock);
+        assert_eq!(s.backend_of("conv1"), BackendTarget::Native);
+        assert_eq!(s.backend_of("not_a_layer"), BackendTarget::Native);
+        let text = s.to_json().to_string();
+        assert!(text.contains(r#""backend":"mock""#));
+        let back = Schedule::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        assert!(back.is_staged());
+        // Unknown backend names are a typed rejection, not a default.
+        let corrupt = text.replacen(r#""backend":"mock""#, r#""backend":"npu""#, 1);
+        assert!(Schedule::from_json(&Json::parse(&corrupt).unwrap()).is_err());
+    }
+
+    #[test]
+    fn strict_parse_rejects_misspelled_keys_lenient_warns() {
+        // The regression the strict flag exists for: a typo'd
+        // `"backend"` key must not silently no-op. Lenient parse loads
+        // the artifact (with the backend defaulted), strict rejects.
+        let ok = sample().to_json().to_string();
+        let typo = ok.replacen(r#""backend":"native""#, r#""backned":"mock""#, 1);
+        let parsed = Json::parse(&typo).unwrap();
+        let lenient = Schedule::from_json(&parsed).unwrap();
+        assert_eq!(lenient.layers["conv1"].backend, BackendTarget::Native);
+        assert!(matches!(Schedule::from_json_strict(&parsed), Err(Error::Config(_))));
+        // Unknown keys at the other nesting levels are caught too.
+        for (from, to) in [
+            (r#""net":"tinynet""#, r#""net":"tinynet","flavor":"dark""#),
+            (r#""affinity":true"#, r#""affinity":true,"afinity":true"#),
+            (r#""tiling":{"th":3,"tm":2}"#, r#""tiling":{"th":3,"tm":2,"tk":9}"#),
+        ] {
+            assert!(ok.contains(from), "fixture drifted: {from:?} not in artifact");
+            let corrupt = ok.replacen(from, to, 1);
+            let parsed = Json::parse(&corrupt).unwrap();
+            assert!(
+                Schedule::from_json(&parsed).is_ok(),
+                "lenient parse must keep loading {to:?}"
+            );
+            assert!(
+                matches!(Schedule::from_json_strict(&parsed), Err(Error::Config(_))),
+                "strict parse must reject {to:?}"
+            );
+        }
+        // The clean artifact passes strict parsing.
+        assert!(Schedule::from_json_strict(&Json::parse(&ok).unwrap()).is_ok());
     }
 
     #[test]

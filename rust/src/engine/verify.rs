@@ -52,6 +52,8 @@
 //! test suite (`rust/tests/verify.rs`): it seeds a known corruption
 //! into a known-good plan so the suite can assert the exact rule fires.
 
+use std::ops::Range;
+
 use crate::engine::conv::{self, ConvTiling};
 use crate::engine::parallel;
 use crate::engine::plan::{ExecutionPlan, NchwConv, SlotShape, Step};
@@ -84,6 +86,12 @@ pub enum VerifyRule {
     /// A conv tile is not the clamped shape the dispatch arithmetic
     /// assumes.
     TilePrecondition,
+    /// A staged plan's cut structure is unsound: a step reads a register
+    /// defined in an earlier stage without crossing a `Transfer` wire,
+    /// a wire is written by something other than exactly one `Transfer`,
+    /// or the stage ranges do not tile the step sequence
+    /// ([`verify_stage_cuts`]).
+    StageCut,
 }
 
 impl VerifyRule {
@@ -97,6 +105,7 @@ impl VerifyRule {
             VerifyRule::ArenaSafety => "arena-safety",
             VerifyRule::ModePrecondition => "mode-precondition",
             VerifyRule::TilePrecondition => "tile-precondition",
+            VerifyRule::StageCut => "stage-cut",
         }
     }
 
@@ -107,6 +116,7 @@ impl VerifyRule {
             VerifyRule::DefBeforeUse | VerifyRule::LayoutConsistency => "def/layout",
             VerifyRule::ArenaSafety => "arena",
             VerifyRule::ModePrecondition | VerifyRule::TilePrecondition => "mode/tile",
+            VerifyRule::StageCut => "stage-cut",
         }
     }
 }
@@ -136,7 +146,7 @@ fn violation(
 }
 
 /// Registers a step reads (concat reads many, input reads none).
-fn step_srcs(step: &Step) -> Vec<usize> {
+pub(crate) fn step_srcs(step: &Step) -> Vec<usize> {
     match step {
         Step::Input { .. } => Vec::new(),
         Step::ConvMm { src, .. }
@@ -148,13 +158,14 @@ fn step_srcs(step: &Step) -> Vec<usize> {
         | Step::Copy { src, .. }
         | Step::Dense { src, .. }
         | Step::Softmax { src, .. }
-        | Step::Reorder { src, .. } => vec![*src],
+        | Step::Reorder { src, .. }
+        | Step::Transfer { src, .. } => vec![*src],
         Step::Concat { srcs, .. } => srcs.clone(),
     }
 }
 
 /// The single register a step writes.
-fn step_dst(step: &Step) -> usize {
+pub(crate) fn step_dst(step: &Step) -> usize {
     match step {
         Step::Input { dst }
         | Step::ConvMm { dst, .. }
@@ -167,7 +178,8 @@ fn step_dst(step: &Step) -> usize {
         | Step::Concat { dst, .. }
         | Step::Dense { dst, .. }
         | Step::Softmax { dst, .. }
-        | Step::Reorder { dst, .. } => *dst,
+        | Step::Reorder { dst, .. }
+        | Step::Transfer { dst, .. } => *dst,
     }
 }
 
@@ -231,6 +243,130 @@ pub fn verify_plan(plan: &ExecutionPlan) -> Result<()> {
             last,
             VerifyRule::DefBeforeUse,
             format!("output register r{} is never written by any step", plan.out_slot),
+        ));
+    }
+    Ok(())
+}
+
+/// Prove a staged plan's cut structure sound ([`VerifyRule::StageCut`];
+/// see the *Staged execution* section of [`crate::engine::plan`]).
+/// `ranges` are the per-stage step ranges in walk order. The rules:
+///
+/// 1. the ranges are non-empty, contiguous, and tile `0..steps.len()`
+///    exactly;
+/// 2. **wires** — registers written by [`Step::Transfer`] — are each
+///    defined by exactly one step, and that step is the Transfer (no
+///    compute step may write a wire);
+/// 3. a Transfer's `src` is defined in the Transfer's own stage (a
+///    handoff forwards the producing stage's result, it never relays);
+/// 4. every register a step reads that was defined in an **earlier**
+///    stage is a wire — no stage reads another stage's arena registers
+///    directly; and
+/// 5. the output register is defined in the last stage or is itself a
+///    wire (so the last stage's arena holds it after the walk).
+///
+/// Together with [`verify_plan`] (which proves the flat sequence sound)
+/// this is what makes the pipelined executor's per-stage arena clones
+/// safe: a stage's worker only ever needs the wire registers its
+/// imports name.
+pub(crate) fn verify_stage_cuts(plan: &ExecutionPlan, ranges: &[Range<usize>]) -> Result<()> {
+    let n_steps = plan.steps.len();
+    let cut = |step: usize, detail: String| -> Error {
+        violation(plan, step.min(n_steps.saturating_sub(1)), VerifyRule::StageCut, detail)
+    };
+    // Rule 1: the ranges tile the step sequence.
+    let mut expect = 0usize;
+    for (t, r) in ranges.iter().enumerate() {
+        if r.start != expect || r.end <= r.start {
+            return Err(cut(
+                r.start,
+                format!(
+                    "stage {t} covers steps {}..{} but the previous stage ended at \
+                     {expect} — stages must be non-empty and contiguous",
+                    r.start, r.end
+                ),
+            ));
+        }
+        expect = r.end;
+    }
+    if expect != n_steps {
+        return Err(cut(
+            n_steps,
+            format!("stages cover {expect} of {n_steps} steps — every step needs a stage"),
+        ));
+    }
+    let stage_of = |step: usize| ranges.iter().position(|r| r.contains(&step)).expect("tiled");
+    // Def sites per register (the plan IR is SSA: one def each; more
+    // than one is itself a cut violation when a wire is involved).
+    let n_slots = plan.slots.len();
+    let mut defs: Vec<Vec<usize>> = vec![Vec::new(); n_slots];
+    let mut is_wire = vec![false; n_slots];
+    for (i, step) in plan.steps.iter().enumerate() {
+        defs[step_dst(step)].push(i);
+        if matches!(step, Step::Transfer { .. }) {
+            is_wire[step_dst(step)] = true;
+        }
+    }
+    // Rules 2 + 3: wires are written by exactly one step — the Transfer
+    // itself — and a Transfer forwards a register of its own stage.
+    for (i, step) in plan.steps.iter().enumerate() {
+        if let Step::Transfer { src, dst } = step {
+            if defs[*dst].len() != 1 {
+                return Err(cut(
+                    i,
+                    format!(
+                        "wire register r{dst} is written by {} steps — a wire must be \
+                         defined by exactly one transfer",
+                        defs[*dst].len()
+                    ),
+                ));
+            }
+            let src_def = match defs[*src].first() {
+                Some(&d) => d,
+                None => continue, // undefined src is verify_plan's finding
+            };
+            if stage_of(src_def) != stage_of(i) {
+                return Err(cut(
+                    i,
+                    format!(
+                        "transfer in stage {} forwards r{src}, defined in stage {} — \
+                         a handoff belongs to the producing stage",
+                        stage_of(i),
+                        stage_of(src_def)
+                    ),
+                ));
+            }
+        }
+    }
+    // Rule 4: cross-stage reads only through wires.
+    for (i, step) in plan.steps.iter().enumerate() {
+        let t = stage_of(i);
+        for s in step_srcs(step) {
+            let Some(&d) = defs[s].first() else { continue };
+            if stage_of(d) < t && !is_wire[s] {
+                return Err(cut(
+                    i,
+                    format!(
+                        "step in stage {t} reads r{s} straight out of stage {}'s \
+                         arena — cross-stage data must cross through a transfer wire",
+                        stage_of(d)
+                    ),
+                ));
+            }
+        }
+    }
+    // Rule 5: the output register survives to the last stage.
+    let last = ranges.len() - 1;
+    let out_ok = is_wire[plan.out_slot]
+        || defs[plan.out_slot].first().is_some_and(|&d| stage_of(d) == last);
+    if !out_ok {
+        return Err(cut(
+            n_steps,
+            format!(
+                "output register r{} is defined before the last stage and is not a \
+                 wire — the final stage's arena would never hold it",
+                plan.out_slot
+            ),
         ));
     }
     Ok(())
@@ -443,6 +579,19 @@ fn check_layout(plan: &ExecutionPlan, i: usize, step: &Step) -> Result<()> {
                 return fail(format!(
                     "reorder is a pure permutation but src is {c}x{h}x{w} and dst \
                      {dc}x{dh}x{dw}"
+                ));
+            }
+        }
+        Step::Transfer { src, dst } => {
+            // A cross-stage handoff is a same-shape row copy by
+            // construction: layout changes at a cut lower to Reorder
+            // steps *before* the transfer.
+            if plan.slots[*src] != plan.slots[*dst] {
+                return fail(format!(
+                    "transfer must preserve the register shape exactly (src {:?}, \
+                     dst {:?}); layout changes at a stage cut are separate reorder \
+                     steps",
+                    plan.slots[*src], plan.slots[*dst]
                 ));
             }
         }
@@ -975,7 +1124,8 @@ pub fn apply_mutation(plan: &mut ExecutionPlan, m: PlanMutation) -> bool {
                     | Step::Copy { src, .. }
                     | Step::Dense { src, .. }
                     | Step::Softmax { src, .. }
-                    | Step::Reorder { src, .. } => {
+                    | Step::Reorder { src, .. }
+                    | Step::Transfer { src, .. } => {
                         *src = out_slot;
                         return true;
                     }

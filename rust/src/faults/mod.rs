@@ -4,9 +4,10 @@
 //! Production serving code cannot be trusted to survive faults that
 //! never happen in tests, so this module threads seeded, addressable
 //! **injection points** through the hot path: the plan step loop
-//! (`site` = the step kind: `conv`, `dense`, `pool`, …), the thread
-//! pool (`pool`), the serve backend boundary (`backend`), and the
-//! frontend queue/worker boundaries (`enqueue`, `worker`). Each point
+//! (`site` = the step kind: `conv`, `dense`, `pool`, `transfer` —
+//! the last hitting the cross-backend copies of staged plans), the
+//! thread pool (`pool`), the serve backend boundary (`backend`), and
+//! the frontend queue/worker boundaries (`enqueue`, `worker`). Each point
 //! calls [`check`] with its site name; when injection is disabled —
 //! the production default — that is one relaxed atomic load and
 //! nothing else.

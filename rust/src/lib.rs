@@ -28,7 +28,8 @@
 //! | [`engine::plan`] | batch-first compiled plans: `PlanBuilder` → `ExecutionPlan::run_batch`, `B x` buffer arena, baked+packed weights, per-layer conv tiles from an L1/L2 cost model, per-thread kernel scratch, flat step sequence |
 //! | [`engine::schedule`] | Schedule IR — the one per-layer tuning surface (parallelism, packing, tiling, mode, placement, vector width + pool settings); every `PlanBuilder` setter lowers into it; serializes to the `schedule.json` artifact |
 //! | [`engine::simd`] | explicit-width SIMD lanes (`f32x4`/`f32x8`, widening int8 dot) over `core::arch` intrinsics with a bitwise-identical scalar fallback; `CAPPUCCINO_SIMD=0` forces the fallback |
-//! | [`engine::verify`] | static plan verifier — an effect system over the Step IR proving race-freedom, def-before-use + layout consistency, arena safety, and mode/tile preconditions before a plan ever runs; `cappuccino check`, typed `Error::Verify` |
+//! | [`engine::verify`] | static plan verifier — an effect system over the Step IR proving race-freedom, def-before-use + layout consistency, arena safety, mode/tile preconditions, and stage-cut soundness of staged plans before a plan ever runs; `cappuccino check`, typed `Error::Verify` |
+//! | [`engine::hetero`] | heterogeneous staged execution: partitions a plan at schedule backend boundaries into per-backend stages joined by explicit `Transfer` wires, and runs them as an overlapping pipeline (one worker + bounded queue per stage) — bitwise identical to the uniform plan |
 //! | [`engine::parallel`] | topology-aware persistent worker pool (per-cluster deques, idle-only stealing, batch-tagged scopes, cost-weighted placement) + thread workload allocation policies |
 //! | [`engine::topology`] | CPU topology probe (sysfs `cpu_capacity`/packages, affinity-mask aware, uniform fallback), `sched_setaffinity` pinning, serve-worker `CoreSet`s |
 //! | [`faults`] | deterministic fault injection: seeded, plan-addressable panic/error injection points (`CAPPUCCINO_FAULTS` / `serve --faults`), compiled to one atomic load when disabled |
@@ -38,7 +39,8 @@
 //! | [`synth`] | primary-program + software synthesizers (plans) |
 //! | [`autotune`] | on-device schedule search: budgeted greedy tuner, warmup + median-of-N timed plan walks per candidate, `cappuccino tune` → `schedule.json` |
 //! | [`inexact`] | per-layer arithmetic-mode analysis |
-//! | [`runtime`] | PJRT artifact loading/execution (`xla` crate) |
+//! | [`runtime`] | PJRT artifact loading/execution (`xla` crate, vendoring patch in the module header) |
+//! | [`runtime::backends`] | staged-execution backend registry: resolves a schedule's `BackendTarget` to a stage executor, incl. the deterministic mock accelerator (`CAPPUCCINO_MOCK_LATENCY`) |
 //! | [`serve`] | production serve front-end: admission control, SLO deadlines, continuous batching, multi-model tenancy |
 //! | [`serve::frontend`] | the request pipeline itself — typed rejections, drain-time admission, deadline-aware batch forming, lossless shutdown, and the per-tenant supervisor: contained-fault replies, capped-backoff worker respawn, poison-pill quarantine, fallback-schedule degradation |
 //! | [`serve::tenancy`] | resident tenants from `schedule.json` artifacts: per-model plans, admission estimates, disjoint core partitions |

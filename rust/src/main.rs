@@ -114,22 +114,34 @@ COMMANDS:
   synthesize --net NAME              run the Fig. 3 synthesis flow; emits plan JSON
              [--u 4] [--threads 4] [--budget 0.01] [--out plan.json]
   check      [--net NAME|all]        statically verify compiled plans: race-freedom,
-             [--schedule s.json] [--batch 8]
+             [--schedule s.json] [--batch 8] [--strict 1]
              def-before-use + layout consistency, arena safety, and
              mode/tile preconditions over the lowered Step IR
              (engine::verify), across a representative schedule matrix
              per net and at sibling capacities {1, --batch}; with
              --schedule, lints the artifact pre-lowering and verifies
-             the exact plan it compiles to. Exits nonzero with the rule
-             name on stderr at the first violation.
+             the exact plan it compiles to (--strict 1 rejects unknown
+             JSON keys instead of warning). A schedule placing layers
+             on several backends additionally has its staged partition
+             proved: stage-cut soundness of the real staged plan, plus
+             a corruption sweep (dropped/doubled transfers, leaked
+             cross-stage reads) that must be rejected. Exits nonzero
+             with the rule name on stderr at the first violation.
   tune       --net tinynet           autotune a per-layer schedule ON THIS MACHINE
              [--batch 8] [--threads 4] [--budget 64] [--reps 5]
              [--warmup 2] [--mode imprecise] [--out schedule.json]
+             [--backends native,mock]
              greedy search over per-layer parallelism/packing/tiling,
              vector width (SIMD vs forced-scalar rows), the quantized
              int8 kernels (mode quant_i8), and pool chunking; every
              candidate is compiled and timed for real (median of --reps
              walks), --budget caps measurements
+             --backends adds the heterogeneous split search: every
+             net-order cut between the two backends is partitioned,
+             verified, and timed as a real staged plan, scored by its
+             bottleneck stage (pipeline throughput model); the mock
+             backend's per-layer latency comes from
+             CAPPUCCINO_MOCK_LATENCY (e.g. \"conv2:300,*:50\", us)
   analyze    --net tinynet           per-layer inexact-computing analysis (sec IV.C)
              [--images 256] [--budget 0.01]
              tries quant_i8, then imprecise, then relaxed per layer;
@@ -150,7 +162,12 @@ COMMANDS:
              formed batch, no artifacts needed); pjrt: AOT artifacts
              --schedule serves a tuned artifact from `cappuccino tune`
              (engine backend only: modes, threads, per-layer schedule,
-             and core set all come from the file)
+             and core set all come from the file); an artifact whose
+             layers name several backends transparently serves through
+             the staged pipeline (per-stage workers, bounded queues,
+             batches overlapping across stages — engine::hetero), with
+             admission estimated from the bottleneck stage and the mock
+             backend's latency from CAPPUCCINO_MOCK_LATENCY
              --models hosts N engine tenants at once, one schedule
              artifact each, with disjoint core sets and per-tenant
              queues/admission; --slo names deadline classes (ms)
@@ -265,7 +282,7 @@ fn cmd_synthesize(flags: &Flags) -> Result<()> {
 /// ([`cappuccino::engine::verify`]) over every plan a net's schedule
 /// surface produces, or over one tuned schedule artifact.
 fn cmd_check(flags: &Flags) -> Result<()> {
-    use cappuccino::engine::{Parallelism, PlanBuilder};
+    use cappuccino::engine::{Parallelism, PlanBuilder, StagedMutation, StagedPlan};
 
     let batch = flags.get_usize("batch", 8)?;
     if batch == 0 {
@@ -275,14 +292,62 @@ fn cmd_check(flags: &Flags) -> Result<()> {
     if !schedule_path.is_empty() {
         // One artifact: lint the schedule before lowering, then verify
         // the exact plan it compiles to, at full and unit capacity.
-        let schedule = Schedule::load(&schedule_path)?;
+        let strict = matches!(flags.get("strict", "").as_str(), "1" | "true");
+        let schedule = if strict {
+            Schedule::load_strict(&schedule_path)?
+        } else {
+            Schedule::load(&schedule_path)?
+        };
         cappuccino::engine::verify_schedule(&schedule)?;
         let network = zoo::by_name(&schedule.net)
             .ok_or_else(|| Error::Invalid(format!("unknown net {:?} in schedule", schedule.net)))?;
         let params = EngineParams::random(&network, 42, schedule.u)?;
+        let staged_schedule = schedule.is_staged();
         let plan = PlanBuilder::new(&network, &params).schedule(schedule).batch(batch).build()?;
         plan.verify()?;
         plan.with_capacity(1).verify()?;
+        if staged_schedule {
+            // Prove stage-cut soundness of the real staged partition,
+            // then show the verifier has teeth: every transfer-level
+            // corruption of the staged plan must be rejected.
+            let staged = StagedPlan::from_plan(&plan)?;
+            staged.verify()?;
+            let mut rejected = 0usize;
+            for m in StagedMutation::ALL {
+                let mut corrupt = StagedPlan::from_plan(&plan)?;
+                if !corrupt.apply_staged_mutation(m) {
+                    return Err(Error::Invalid(format!(
+                        "staged plan has no site for corruption {:?}",
+                        m.as_str()
+                    )));
+                }
+                match corrupt.verify() {
+                    Err(Error::Verify { rule, .. }) => {
+                        eprintln!("  corruption {:<22} rejected ({rule})", m.as_str());
+                        rejected += 1;
+                    }
+                    Err(e) => return Err(e),
+                    Ok(()) => {
+                        return Err(Error::Invalid(format!(
+                            "staged-plan corruption {:?} was NOT rejected by the verifier",
+                            m.as_str()
+                        )))
+                    }
+                }
+            }
+            println!(
+                "{schedule_path}: staged schedule over {} stages ({}); stage-cut soundness \
+                 proven, {rejected}/{} corruptions rejected",
+                staged.stage_count(),
+                staged
+                    .stage_backends()
+                    .iter()
+                    .map(|b| b.to_string())
+                    .collect::<Vec<_>>()
+                    .join("|"),
+                StagedMutation::ALL.len()
+            );
+        }
         println!(
             "{schedule_path}: schedule lints clean, plan verifies at capacities {{1, {batch}}}"
         );
@@ -342,6 +407,15 @@ fn cmd_tune(flags: &Flags) -> Result<()> {
         return Err(Error::Invalid("--u 0: the vector width must be at least 1".into()));
     }
     let mode: ArithMode = flags.get("mode", "imprecise").parse()?;
+    let backends_flag = flags.get("backends", "");
+    let backends = if backends_flag.is_empty() {
+        Vec::new()
+    } else {
+        backends_flag
+            .split(',')
+            .map(|s| s.trim().parse::<cappuccino::engine::BackendTarget>())
+            .collect::<Result<Vec<_>>>()?
+    };
     let cfg = TuneConfig {
         batch: flags.get_usize("batch", 8)?,
         max_threads: flags.get_usize("threads", 4)?,
@@ -349,6 +423,7 @@ fn cmd_tune(flags: &Flags) -> Result<()> {
         reps: flags.get_usize("reps", 5)?,
         budget: flags.get_usize("budget", 64)?,
         modes: ModeAssignment::uniform(mode),
+        backends,
         ..Default::default()
     };
     // Weight values do not affect latency; random parameters make every
@@ -378,6 +453,9 @@ fn cmd_tune(flags: &Flags) -> Result<()> {
     );
     if let Some(p) = report.predicted_ms {
         eprintln!("SoC-model prediction for the tuned schedule: {p:.2} ms/image");
+    }
+    if report.schedule.is_staged() {
+        eprintln!("tuned schedule is staged: a heterogeneous backend split was adopted");
     }
     let out = flags.get("out", "schedule.json");
     if out == "-" {
@@ -659,9 +737,18 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                         )));
                     }
                     schedule_cores = schedule.pool.cores;
-                    let image_ms = cappuccino::synth::predict_schedule_latency_ms(
-                        &schedule, &network, &device,
-                    )?;
+                    // A staged schedule pipelines batches across its
+                    // stages, so admission tracks the bottleneck stage
+                    // rather than the end-to-end sum.
+                    let image_ms = if schedule.is_staged() {
+                        cappuccino::synth::predict_schedule_throughput_ms(
+                            &schedule, &network, &device,
+                        )?
+                    } else {
+                        cappuccino::synth::predict_schedule_latency_ms(
+                            &schedule, &network, &device,
+                        )?
+                    };
                     let params = EngineParams::random(&network, 42, schedule.u)?;
                     let fb = engine_fallback(&fallback_path, &net, &network, &params, max_batch)?;
                     eprintln!(

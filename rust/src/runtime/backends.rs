@@ -1,0 +1,231 @@
+//! Backend registry for staged execution — resolving a
+//! [`BackendTarget`] to the executor a pipeline stage runs on.
+//!
+//! A staged plan ([`crate::engine::hetero::StagedPlan`]) cuts the step
+//! sequence at backend boundaries; each stage then needs something to
+//! *run* its step range. That something is a [`StageExecutor`]:
+//!
+//! * [`StageExecutor::Native`] — the in-process CPU engine: the stage's
+//!   range walks through [`crate::engine::ExecutionPlan`]'s normal
+//!   step executor. The default, and what every layer runs on unless a
+//!   schedule says otherwise.
+//! * [`StageExecutor::Mock`] — the deterministic mock accelerator: the
+//!   **same** native walk (bitwise-identical math, so partitioning and
+//!   transfer correctness are testable against the single-backend
+//!   oracles) plus a configurable per-layer latency ([`MockLatency`])
+//!   slept after the walk — the knob that makes pipeline-overlap wins
+//!   measurable without accelerator hardware.
+//! * [`BackendTarget::Pjrt`] has **no** stage executor yet: the PJRT
+//!   runtime ([`crate::runtime`]) executes whole lowered artifacts, not
+//!   step ranges, so resolving it reports a typed
+//!   [`Error::Xla`] pointing at the vendoring patch
+//!   (see the [`crate::runtime`] module header). Schedules may still
+//!   *name* it — verification and `cappuccino check` work — but
+//!   execution requires `Native`/`Mock` stages.
+//!
+//! The [`BackendRegistry`] is the lookup table serve and the autotuner
+//! share; [`BackendRegistry::from_env`] reads the mock latency model
+//! from `CAPPUCCINO_MOCK_LATENCY` (e.g. `conv2:300,*:50`, microseconds)
+//! so CI's `pipeline-smoke` job can shape a bottleneck without
+//! recompiling.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::time::Duration;
+
+use crate::engine::plan::ExecutionPlan;
+use crate::engine::schedule::BackendTarget;
+use crate::util::error::{Error, Result};
+
+/// Deterministic per-layer latency model of the mock accelerator,
+/// in microseconds. Parameterised layers a stage executes look up
+/// their own entry, falling back to the `*` default (0 when unset);
+/// structural steps (reorders, pools, transfers) add nothing.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MockLatency {
+    per_layer: BTreeMap<String, u64>,
+    default_us: u64,
+}
+
+impl MockLatency {
+    /// Parse a latency spec: comma-separated `layer:micros` entries,
+    /// with `*` naming the default for unlisted layers. Example:
+    /// `conv2:300,*:50` — conv2 costs 300 µs, every other
+    /// parameterised layer 50 µs. Malformed entries are a typed
+    /// [`Error::Config`]; the empty string is the all-zero model.
+    pub fn parse(spec: &str) -> Result<MockLatency> {
+        let mut lat = MockLatency::default();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (name, us) = entry.split_once(':').ok_or_else(|| {
+                Error::Config(format!(
+                    "mock latency entry {entry:?} is not `layer:micros` (spec {spec:?})"
+                ))
+            })?;
+            let us: u64 = us.trim().parse().map_err(|_| {
+                Error::Config(format!(
+                    "mock latency entry {entry:?}: {us:?} is not a microsecond count"
+                ))
+            })?;
+            match name.trim() {
+                "*" => lat.default_us = us,
+                layer => {
+                    lat.per_layer.insert(layer.to_string(), us);
+                }
+            }
+        }
+        Ok(lat)
+    }
+
+    /// The modelled latency of one layer, in microseconds.
+    pub fn latency_us(&self, layer: &str) -> u64 {
+        self.per_layer.get(layer).copied().unwrap_or(self.default_us)
+    }
+
+    /// Does this model ever sleep at all?
+    pub fn is_zero(&self) -> bool {
+        self.default_us == 0 && self.per_layer.values().all(|&us| us == 0)
+    }
+}
+
+/// The lookup table from [`BackendTarget`] to [`StageExecutor`] —
+/// shared by the pipelined serve backend and the autotuner's
+/// split search, so both run candidate stages on the same substrates.
+#[derive(Debug, Clone, Default)]
+pub struct BackendRegistry {
+    mock: MockLatency,
+}
+
+impl BackendRegistry {
+    /// A registry with an explicit mock latency model.
+    pub fn new(mock: MockLatency) -> BackendRegistry {
+        BackendRegistry { mock }
+    }
+
+    /// Read the mock latency model from `CAPPUCCINO_MOCK_LATENCY`
+    /// (unset = the all-zero model). A malformed spec is a typed
+    /// [`Error::Config`] — never silently zero.
+    pub fn from_env() -> Result<BackendRegistry> {
+        let mock = match std::env::var("CAPPUCCINO_MOCK_LATENCY") {
+            Ok(spec) => MockLatency::parse(&spec)?,
+            Err(_) => MockLatency::default(),
+        };
+        Ok(BackendRegistry { mock })
+    }
+
+    /// The mock latency model this registry resolves `Mock` stages
+    /// with.
+    pub fn mock_latency(&self) -> &MockLatency {
+        &self.mock
+    }
+
+    /// Resolve a backend target to its stage executor. `Pjrt` reports
+    /// [`Error::Xla`]: the PJRT runtime executes whole artifacts, not
+    /// plan step ranges (see the module header for the vendoring
+    /// patch).
+    pub fn executor(&self, target: BackendTarget) -> Result<StageExecutor> {
+        match target {
+            BackendTarget::Native => Ok(StageExecutor::Native),
+            BackendTarget::Mock => Ok(StageExecutor::Mock(self.mock.clone())),
+            BackendTarget::Pjrt => Err(Error::Xla(
+                "backend `pjrt` has no stage executor: the PJRT runtime runs whole \
+                 lowered artifacts, not plan step ranges — vendor the `xla` crate \
+                 (see rust/src/runtime/mod.rs) or place these layers on `native`/`mock`"
+                    .into(),
+            )),
+        }
+    }
+}
+
+/// What actually runs one stage's step range. Cheap to clone (the mock
+/// model is a small map); each pipeline worker owns one.
+#[derive(Debug, Clone)]
+pub enum StageExecutor {
+    /// The in-process CPU engine.
+    Native,
+    /// The native walk plus the modelled per-layer sleep.
+    Mock(MockLatency),
+}
+
+impl StageExecutor {
+    /// Execute `range` of `plan`'s steps over `live` batch rows
+    /// ([`ExecutionPlan::exec_range`] — fault-injection and
+    /// panic-containment semantics are the plan's own). The mock
+    /// executor runs the identical walk, then sleeps the summed
+    /// modelled latency of the parameterised layers in the range —
+    /// after the math, so injected latency can never reorder or
+    /// perturb it.
+    pub(crate) fn run_stage(
+        &self,
+        plan: &mut ExecutionPlan,
+        range: Range<usize>,
+        images: &[&[f32]],
+        live: usize,
+    ) -> Result<()> {
+        match self {
+            StageExecutor::Native => plan.exec_range(images, live, range),
+            StageExecutor::Mock(lat) => {
+                plan.exec_range(images, live, range.clone())?;
+                let mut us = 0u64;
+                let mut seen: Option<&str> = None;
+                for i in range {
+                    let label = plan.labels[i].as_str();
+                    // One charge per layer, not per step: a layer's
+                    // reorder/pad steps share its label.
+                    if plan.sched.layers.contains_key(label) && seen != Some(label) {
+                        us += lat.latency_us(label);
+                        seen = Some(label);
+                    }
+                }
+                if us > 0 {
+                    std::thread::sleep(Duration::from_micros(us));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineParams, PlanBuilder};
+    use crate::model::zoo;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn latency_spec_parses_and_defaults() {
+        let lat = MockLatency::parse("conv2:300, *:50").unwrap();
+        assert_eq!(lat.latency_us("conv2"), 300);
+        assert_eq!(lat.latency_us("conv1"), 50);
+        assert!(!lat.is_zero());
+        assert!(MockLatency::parse("").unwrap().is_zero());
+        assert!(matches!(MockLatency::parse("conv2"), Err(Error::Config(_))));
+        assert!(matches!(MockLatency::parse("conv2:fast"), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn registry_resolves_targets() {
+        let reg = BackendRegistry::new(MockLatency::parse("*:1").unwrap());
+        assert!(matches!(reg.executor(BackendTarget::Native), Ok(StageExecutor::Native)));
+        assert!(matches!(reg.executor(BackendTarget::Mock), Ok(StageExecutor::Mock(_))));
+        assert!(matches!(reg.executor(BackendTarget::Pjrt), Err(Error::Xla(_))));
+    }
+
+    #[test]
+    fn mock_executor_is_bitwise_native() {
+        // The mock accelerator is the native walk plus a sleep: output
+        // must be bitwise identical to the plain plan.
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 3, 4).unwrap();
+        let mut native = PlanBuilder::new(&net, &params).build().unwrap();
+        let mut mocked = PlanBuilder::new(&net, &params).build().unwrap();
+        let img = Rng::new(7).normal_vec(native.input_len());
+        let want = native.run(&img).unwrap();
+        let ex = StageExecutor::Mock(MockLatency::parse("conv1:1").unwrap());
+        mocked.validate_batch(&[&img[..]]).unwrap();
+        ex.run_stage(&mut mocked, 0..mocked.step_count(), &[&img[..]], 1).unwrap();
+        let mut got = vec![0.0f32; mocked.output_len()];
+        mocked.extract_row_into(0, &mut got);
+        assert_eq!(got, want);
+    }
+}

@@ -269,6 +269,16 @@ impl EngineBackend {
     /// is derived with `with_capacity`, sharing the baked weights.
     /// Re-invocable: a supervisor respawn recompiles from the same
     /// retained configuration.
+    ///
+    /// A schedule placing layers on more than one backend
+    /// ([`crate::engine::Schedule::is_staged`]) transparently serves
+    /// through the staged pipeline instead: the plan is partitioned at
+    /// its backend boundaries ([`crate::engine::StagedPlan`]) and a
+    /// [`crate::engine::Pipeline`] worker set is spun up, with the
+    /// mock backend's latency model taken from `CAPPUCCINO_MOCK_LATENCY`
+    /// ([`crate::runtime::backends::BackendRegistry::from_env`]). The
+    /// replies stay bitwise identical to the uniform single-backend
+    /// plan.
     pub fn factory(self) -> BackendFactory {
         Box::new(move || {
             let max_capacity = self.batches.last().copied().unwrap_or(1);
@@ -283,6 +293,16 @@ impl EngineBackend {
                 builder = builder.schedule(s);
             }
             let base = builder.build()?;
+            if self.schedule.as_ref().is_some_and(|s| s.is_staged()) {
+                let staged = crate::engine::StagedPlan::from_plan(&base)?;
+                let registry = crate::runtime::backends::BackendRegistry::from_env()?;
+                let pipeline = crate::engine::Pipeline::new(&staged, &registry, 2)?;
+                return Ok(Box::new(PipelinedEngineBackend {
+                    pipeline,
+                    batches: vec![max_capacity],
+                    input_len: self.input_len,
+                }) as Box<dyn Backend>);
+            }
             // Derive the smaller capacities, then reuse `base` as the
             // largest — no throwaway duplicate of the biggest arena.
             let smaller = self.batches.len().saturating_sub(1);
@@ -341,6 +361,43 @@ impl Backend for CompiledEngineBackend {
         // `images.len() <= capacity` live rows are computed, so padded
         // lanes can never surface stale or duplicated data in replies.
         plan.run_batch(images)
+    }
+}
+
+/// The worker-resident form of a **staged** [`EngineBackend`]: a
+/// multi-backend schedule served through the overlapping stage pipeline
+/// ([`crate::engine::Pipeline`]). One capacity — partial batches run
+/// live rows only, like the flat engine backend. The worker's
+/// synchronous `infer_batch` submits and waits, so cross-*batch*
+/// overlap comes from the continuous batcher keeping the worker fed;
+/// the pipeline's lossless drop doubles as the drain path on respawn.
+struct PipelinedEngineBackend {
+    pipeline: crate::engine::Pipeline,
+    batches: Vec<usize>,
+    input_len: usize,
+}
+
+impl Backend for PipelinedEngineBackend {
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn infer_batch(&mut self, images: &[&[f32]], _capacity: usize) -> Result<Vec<Vec<f32>>> {
+        // Same serve/engine-boundary injection point as the flat
+        // backend, so `err:backend` / `panic:backend` chaos specs
+        // exercise staged tenants identically.
+        match crate::faults::check("backend") {
+            Some(crate::faults::FaultKind::Err) => {
+                return Err(Error::Serve("injected error at serve backend".into()));
+            }
+            Some(crate::faults::FaultKind::Panic) => panic!("injected fault at backend"),
+            None => {}
+        }
+        self.pipeline.infer_batch(images)
     }
 }
 
@@ -487,6 +544,45 @@ mod tests {
         assert_eq!(
             uniform.infer_batch(&refs, 4).unwrap(),
             scheduled.infer_batch(&refs, 4).unwrap()
+        );
+    }
+
+    #[test]
+    fn staged_schedule_backend_matches_uniform_backend() {
+        // A schedule splitting layers across backends must serve
+        // through the pipelined backend — and still reply bitwise the
+        // uniform backend's logits, partial batches included.
+        let net = zoo::tinynet();
+        let params = EngineParams::random(&net, 31, 4).unwrap();
+        let modes = ModeAssignment::uniform(ArithMode::Imprecise);
+        let uniform = EngineBackend::new(net.clone(), params.clone(), modes.clone(), 2, 4);
+        let mut uniform = (uniform.factory())().unwrap();
+        let mut sched = crate::engine::Schedule::from_uniform(
+            &net,
+            4,
+            &modes,
+            crate::engine::Parallelism::Olp,
+            true,
+            None,
+            crate::engine::PoolSettings { threads: 2, affinity: false, cores: None },
+        )
+        .unwrap();
+        sched.layers.get_mut("conv2").unwrap().backend = crate::engine::BackendTarget::Mock;
+        assert!(sched.is_staged());
+        let staged = EngineBackend::with_schedule(net, params, sched, 4);
+        let mut staged = (staged.factory())().unwrap();
+        assert_eq!(staged.batch_sizes(), &[4], "pipelined backend serves one capacity");
+        let mut rng = Rng::new(32);
+        let imgs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(3 * 16 * 16)).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(
+            uniform.infer_batch(&refs, 4).unwrap(),
+            staged.infer_batch(&refs, 4).unwrap()
+        );
+        // Partial batch through the pipeline: live rows only.
+        assert_eq!(
+            uniform.infer_batch(&refs[..3], 4).unwrap(),
+            staged.infer_batch(&refs[..3], 4).unwrap()
         );
     }
 

@@ -317,6 +317,48 @@ pub fn predict_schedule_latency_ms(
     Ok(predict_latency_ms(&plan, net, device))
 }
 
+/// Predict a schedule's **steady-state** per-batch cost on a simulated
+/// device under staged pipelined execution
+/// ([`crate::engine::hetero`]): layers are grouped into contiguous
+/// per-backend stages in net order (unscheduled layers — pools, LRN —
+/// ride the stage in progress, exactly like the plan partitioner) and
+/// the result is the **bottleneck** stage's latency sum. With stages
+/// overlapping across consecutive batches the slowest stage sets the
+/// service rate, not the stage-time sum — so a uniform schedule
+/// degenerates to [`predict_schedule_latency_ms`].
+pub fn predict_schedule_throughput_ms(
+    schedule: &Schedule,
+    net: &Network,
+    device: &DeviceModel,
+) -> Result<f64> {
+    use crate::engine::schedule::BackendTarget;
+    let plan = SynthesisPlan::from_schedule(schedule, net)?;
+    let modes: BTreeMap<&str, ArithMode> =
+        plan.layers.iter().map(|l| (l.layer.as_str(), l.mode)).collect();
+    let parallel = crate::soc::simulate(net, device, ProcessingMode::Parallel);
+    let imprecise = crate::soc::simulate(net, device, ProcessingMode::Imprecise);
+    let mut cur = parallel
+        .layers
+        .iter()
+        .find_map(|p| schedule.layers.get(p.name.as_str()).map(|ls| ls.backend))
+        .unwrap_or(BackendTarget::Native);
+    let mut stages: Vec<(BackendTarget, f64)> = Vec::new();
+    for (p, i) in parallel.layers.iter().zip(&imprecise.layers) {
+        let ms = match modes.get(p.name.as_str()) {
+            Some(ArithMode::Precise) | None => p.total_ms(),
+            Some(_) => i.total_ms(),
+        };
+        if let Some(ls) = schedule.layers.get(p.name.as_str()) {
+            cur = ls.backend;
+        }
+        match stages.last_mut() {
+            Some((b, acc)) if *b == cur => *acc += ms,
+            _ => stages.push((cur, ms)),
+        }
+    }
+    Ok(stages.into_iter().map(|(_, ms)| ms).fold(0.0, f64::max))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -511,5 +553,24 @@ mod tests {
         // A schedule for a different net is rejected, not mispredicted.
         let other = zoo::alexnet();
         assert!(predict_schedule_latency_ms(&precise, &other, &devices::nexus5()).is_err());
+    }
+
+    #[test]
+    fn throughput_model_is_bottleneck_not_sum() {
+        use crate::engine::schedule::BackendTarget;
+        let net = zoo::tinynet();
+        let device = devices::nexus5();
+        let uniform = Schedule::default_for(&net, 4);
+        let flat = predict_schedule_latency_ms(&uniform, &net, &device).unwrap();
+        // Uniform: one stage, bottleneck == the full sum.
+        let t_uniform = predict_schedule_throughput_ms(&uniform, &net, &device).unwrap();
+        assert!((t_uniform / flat - 1.0).abs() < 1e-9, "{t_uniform} vs {flat}");
+        // Staged: the bottleneck stage is a strict subset of the layers,
+        // so predicted steady-state cost drops below the flat sum.
+        let mut staged = uniform.clone();
+        staged.layers.get_mut("conv2").unwrap().backend = BackendTarget::Mock;
+        let t_staged = predict_schedule_throughput_ms(&staged, &net, &device).unwrap();
+        assert!(t_staged < flat, "{t_staged} vs {flat}");
+        assert!(t_staged > 0.0);
     }
 }

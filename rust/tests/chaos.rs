@@ -170,4 +170,69 @@ fn chaos_injection_is_contained_supervised_and_deterministic() {
     }
     server.shutdown();
     faults::install(None);
+
+    // ---- Phase 4: staged-plan chaos at the transfer site -------------
+    // A heterogeneous backend split lowers explicit Transfer steps at
+    // every stage cut; the `transfer` fault site addresses exactly
+    // those cross-backend copies. Both injection kinds surface as
+    // typed errors from the staged walk, and a clean rerun is bitwise
+    // the uniform plan's output.
+    {
+        use cappuccino::engine::{
+            ArithMode, BackendTarget, ModeAssignment, Parallelism, PoolSettings, Schedule,
+            StagedPlan,
+        };
+        use cappuccino::runtime::backends::BackendRegistry;
+
+        let mut sched = Schedule::from_uniform(
+            &net,
+            4,
+            &ModeAssignment::uniform(ArithMode::Imprecise),
+            Parallelism::Olp,
+            true,
+            None,
+            PoolSettings { threads: 2, affinity: false, cores: None },
+        )
+        .unwrap();
+        let names = net.param_layer_names();
+        assert!(names.len() >= 2, "need two param layers to split");
+        for name in &names[names.len() / 2..] {
+            sched.layers.get_mut(name.as_str()).unwrap().backend = BackendTarget::Mock;
+        }
+        let plan = PlanBuilder::new(&net, &params).schedule(sched).batch(2).build().unwrap();
+        let mut staged = StagedPlan::from_plan(&plan).unwrap();
+        assert!(staged.stage_count() >= 2, "split schedule must stage");
+        let registry = BackendRegistry::default();
+        let imgs: Vec<Vec<f32>> = (0..2)
+            .map(|i| Rng::new(100 + i as u64).normal_vec(net.input.elements()))
+            .collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+
+        faults::install(Some(FaultConfig::parse("seed=2,panic:transfer:1").unwrap()));
+        match staged.run_batch_seq(&refs, &registry) {
+            Err(Error::TaskPanicked { layer, .. }) => {
+                assert_eq!(layer, "transfer", "panicked step should be a stage-cut transfer");
+            }
+            other => {
+                panic!("panic:transfer:1 must surface TaskPanicked, got ok={}", other.is_ok())
+            }
+        }
+        faults::install(Some(FaultConfig::parse("seed=2,err:transfer:1").unwrap()));
+        match staged.run_batch_seq(&refs, &registry) {
+            Err(Error::Serve(detail)) => {
+                assert!(detail.contains("injected"), "fault detail lost: {detail}");
+            }
+            other => {
+                panic!("err:transfer:1 must surface a typed error, got ok={}", other.is_ok())
+            }
+        }
+        faults::install(None);
+        let clean_staged = staged.run_batch_seq(&refs, &registry).unwrap();
+        let mut uniform = PlanBuilder::new(&net, &params).threads(2).batch(2).build().unwrap();
+        assert_eq!(
+            clean_staged,
+            uniform.run_batch(&refs).unwrap(),
+            "staged walk lost parity after transfer chaos"
+        );
+    }
 }

@@ -1,0 +1,196 @@
+//! Heterogeneous staged-execution suite (`engine::hetero` +
+//! `runtime::backends`): the three load-bearing guarantees of the
+//! subsystem, checked from outside the crate.
+//!
+//! 1. **Degenerate soundness** — an all-Native schedule partitions to
+//!    exactly one stage whose step sequence *is* the flat plan's, and
+//!    stays bitwise identical across thread counts and capacities.
+//! 2. **Split parity** — a Native→Mock→Native split (cut at a
+//!    map-major/row-major kernel-family boundary) is bitwise identical
+//!    to the uniform plan through every execution path: the fused
+//!    walk, the sequential staged walk, and the overlapping pipeline —
+//!    including partial batches. The same holds for a Native+Mock
+//!    split on every zoo net (the acceptance bar).
+//! 3. **Verifier teeth** — every transfer-level corruption of a staged
+//!    plan is rejected by `verify()` with the stage-cut rule.
+//!
+//! Plus the strict-parse regression: the misspelled-key fixture loads
+//! leniently (typo ignored, backend stays Native) and is rejected by
+//! the strict path.
+
+use cappuccino::engine::{
+    ArithMode, BackendTarget, EngineParams, ModeAssignment, Parallelism, Pipeline, PlanBuilder,
+    PoolSettings, Schedule, StagedMutation, StagedPlan, VerifyRule,
+};
+use cappuccino::model::{zoo, Network};
+use cappuccino::runtime::backends::BackendRegistry;
+use cappuccino::util::rng::Rng;
+use cappuccino::Error;
+
+/// Uniform (all-Native) schedule over `net` at vector width 4.
+fn uniform_sched(net: &Network, threads: usize) -> Schedule {
+    Schedule::from_uniform(
+        net,
+        4,
+        &ModeAssignment::uniform(ArithMode::Imprecise),
+        Parallelism::Olp,
+        true,
+        None,
+        PoolSettings { threads, affinity: false, cores: None },
+    )
+    .unwrap()
+}
+
+fn images(net: &Network, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n).map(|i| Rng::new(seed + i as u64).normal_vec(net.input.elements())).collect()
+}
+
+#[test]
+fn all_native_schedule_is_the_flat_plan_at_every_shape() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 7, 4).unwrap();
+    let registry = BackendRegistry::default();
+    let imgs = images(&net, 3, 40);
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+
+    // Reference: the plain single-threaded flat plan.
+    let mut reference_plan =
+        PlanBuilder::new(&net, &params).schedule(uniform_sched(&net, 1)).batch(3).build().unwrap();
+    let reference = reference_plan.run_batch(&refs).unwrap();
+
+    for &threads in &[1usize, 2, 4] {
+        for &cap in &[1usize, 4, 8] {
+            let plan = PlanBuilder::new(&net, &params)
+                .schedule(uniform_sched(&net, threads))
+                .batch(cap)
+                .build()
+                .unwrap();
+            let mut staged = StagedPlan::from_plan(&plan).unwrap();
+            // One stage, and its step sequence is exactly the flat
+            // plan's — no transfers, no reordering (satellite c).
+            assert_eq!(staged.stage_count(), 1, "t={threads} cap={cap}");
+            assert_eq!(staged.stage_backends(), vec![BackendTarget::Native]);
+            assert_eq!(staged.step_kinds(), plan.step_kinds(), "t={threads} cap={cap}");
+            staged.verify().unwrap();
+            let live = cap.min(3);
+            let got = staged.run_batch_seq(&refs[..live], &registry).unwrap();
+            assert_eq!(got, reference[..live].to_vec(), "t={threads} cap={cap} live={live}");
+        }
+    }
+}
+
+#[test]
+fn native_mock_native_split_is_bitwise_through_every_path() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 11, 4).unwrap();
+    let registry = BackendRegistry::default();
+    let imgs = images(&net, 4, 90);
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+
+    // conv2 runs row-major FLP while its neighbours run packed
+    // map-major OLP, so both stage cuts sit on a kernel-family (and
+    // layout) boundary — the hardest seam to get bitwise right.
+    let mk = || {
+        let mut s = uniform_sched(&net, 2);
+        s.layers.get_mut("conv2").unwrap().parallelism = Parallelism::Flp;
+        s
+    };
+    let mut uniform_plan =
+        PlanBuilder::new(&net, &params).schedule(mk()).batch(4).build().unwrap();
+    let mut split = mk();
+    split.layers.get_mut("conv2").unwrap().backend = BackendTarget::Mock;
+    let split_plan = PlanBuilder::new(&net, &params).schedule(split).batch(4).build().unwrap();
+
+    let mut staged = StagedPlan::from_plan(&split_plan).unwrap();
+    assert_eq!(
+        staged.stage_backends(),
+        vec![BackendTarget::Native, BackendTarget::Mock, BackendTarget::Native],
+        "conv2-on-mock must partition Native -> Mock -> Native"
+    );
+    staged.verify().unwrap();
+
+    // Full and partial batches, through all three execution paths.
+    for &live in &[1usize, 3, 4] {
+        let want = uniform_plan.run_batch(&refs[..live]).unwrap();
+        assert_eq!(staged.run_batch(&refs[..live]).unwrap(), want, "fused walk, live={live}");
+        assert_eq!(
+            staged.run_batch_seq(&refs[..live], &registry).unwrap(),
+            want,
+            "sequential staged walk, live={live}"
+        );
+        let mut pipe = Pipeline::new(&staged, &registry, 2).unwrap();
+        assert_eq!(pipe.infer_batch(&refs[..live]).unwrap(), want, "pipeline, live={live}");
+    }
+}
+
+#[test]
+fn every_zoo_net_native_mock_split_is_bitwise_identical() {
+    let registry = BackendRegistry::default();
+    for net in zoo::all() {
+        let params = EngineParams::random(&net, 17, 4).unwrap();
+        let names = net.param_layer_names();
+        assert!(names.len() >= 2, "{}: need two param layers to split", net.name);
+        let mut split = uniform_sched(&net, 2);
+        for name in &names[names.len() / 2..] {
+            split.layers.get_mut(name.as_str()).unwrap().backend = BackendTarget::Mock;
+        }
+        let mut uniform_plan = PlanBuilder::new(&net, &params)
+            .schedule(uniform_sched(&net, 2))
+            .batch(1)
+            .build()
+            .unwrap();
+        let split_plan =
+            PlanBuilder::new(&net, &params).schedule(split).batch(1).build().unwrap();
+        let mut staged = StagedPlan::from_plan(&split_plan).unwrap();
+        assert!(staged.stage_count() >= 2, "{}: split schedule must stage", net.name);
+        staged.verify().unwrap();
+
+        let imgs = images(&net, 1, 170);
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let want = uniform_plan.run_batch(&refs).unwrap();
+        assert_eq!(
+            staged.run_batch_seq(&refs, &registry).unwrap(),
+            want,
+            "{}: staged walk diverged from the uniform plan",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn staged_corruptions_are_rejected_with_the_stage_cut_rule() {
+    let net = zoo::tinynet();
+    let params = EngineParams::random(&net, 23, 4).unwrap();
+    let mut split = uniform_sched(&net, 2);
+    split.layers.get_mut("conv2").unwrap().backend = BackendTarget::Mock;
+    let plan = PlanBuilder::new(&net, &params).schedule(split).batch(2).build().unwrap();
+
+    for m in StagedMutation::ALL {
+        let mut corrupt = StagedPlan::from_plan(&plan).unwrap();
+        assert!(corrupt.apply_staged_mutation(m), "staged plan has no site for {}", m.as_str());
+        match corrupt.verify() {
+            Err(Error::Verify { rule, .. }) => {
+                assert_eq!(rule, VerifyRule::StageCut, "corruption {}", m.as_str());
+            }
+            Err(e) => panic!("corruption {} surfaced the wrong error: {e}", m.as_str()),
+            Ok(()) => panic!("corruption {} was not rejected", m.as_str()),
+        }
+    }
+}
+
+#[test]
+fn misspelled_key_fixture_loads_lenient_rejects_strict() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/fixtures/misspelled_schedule.json");
+    // Lenient path: the typo'd "backned" key warns and is ignored — in
+    // particular it must NOT assign a backend.
+    let lenient = Schedule::load(path).unwrap();
+    assert_eq!(lenient.layers["conv2"].backend, BackendTarget::Native);
+    assert!(!lenient.is_staged());
+    // Strict path: typed rejection naming the offending key.
+    match Schedule::load_strict(path) {
+        Err(Error::Config(msg)) => {
+            assert!(msg.contains("backned"), "rejection must name the key: {msg}")
+        }
+        other => panic!("strict parse must reject the fixture, got ok={}", other.is_ok()),
+    }
+}
